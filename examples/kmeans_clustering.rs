@@ -1,0 +1,61 @@
+//! K-means on Gaussian blobs through the full stack: ds-array blocks →
+//! task runtime → fused Pallas `kmeans_assign` artifact via PJRT.
+//!
+//!     make artifacts && cargo run --release --example kmeans_clustering
+
+use anyhow::Result;
+use rustdslib::bench::workloads::blobs;
+use rustdslib::dsarray::creation;
+use rustdslib::estimators::kmeans::{KMeans, KMeansConfig};
+use rustdslib::estimators::Estimator;
+use rustdslib::tasking::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::local(2);
+    let (n, f, k) = (4096, 64, 6);
+    let (data, truth) = blobs(n, f, k, 0.8, 3);
+    let x = creation::from_matrix(&rt, &data, (64, 64))?;
+    println!("data: {n} samples x {f} features, {k} blobs, blocks 64x64 ({} blocks)", x.n_blocks());
+    println!(
+        "pjrt: {}",
+        if rustdslib::runtime::global().is_some() {
+            "fused kmeans artifact active"
+        } else {
+            "artifacts missing -> native fallback (run `make artifacts`)"
+        }
+    );
+
+    let mut km = KMeans::new(KMeansConfig {
+        k,
+        max_iter: 25,
+        tol: 1e-5,
+        seed: 11,
+    });
+    let t0 = std::time::Instant::now();
+    km.fit(&x, None)?;
+    println!(
+        "\nfit: {} iterations, inertia {:.1}, {:.2}s",
+        km.n_iter,
+        km.inertia,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // Cluster-label agreement with ground truth (best-match purity).
+    let pred = km.predict(&x)?.collect()?;
+    let mut table = vec![vec![0usize; k]; k];
+    for (i, &t) in truth.iter().enumerate() {
+        table[t][pred.get(i, 0) as usize] += 1;
+    }
+    let purity: usize = table.iter().map(|row| row.iter().max().unwrap()).sum();
+    println!("cluster purity: {:.1}% (majority-match)", 100.0 * purity as f64 / n as f64);
+
+    let m = rt.metrics();
+    println!(
+        "tasks: {} total — {} kmeans.partial, {} kmeans.reduce, {} kmeans.update",
+        m.total_tasks(),
+        m.tasks_for("kmeans.partial"),
+        m.tasks_for("kmeans.reduce"),
+        m.tasks_for("kmeans.update"),
+    );
+    Ok(())
+}

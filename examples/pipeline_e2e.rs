@@ -1,0 +1,138 @@
+//! END-TO-END DRIVER (DESIGN.md §7): the full stack on a real small
+//! workload, proving all layers compose —
+//!
+//!   L3 rust coordinator (task graphs, scheduling, metrics)
+//!     → L2 jax block graphs → L1 Pallas kernels, AOT via PJRT
+//!
+//! Pipeline: generate a labeled dataset → load as ds-array → StandardScaler
+//! (col_stats + standardize artifacts) → K-means (fused kmeans artifact) →
+//! predict + purity; then reproduce the paper's headline data-ops
+//! comparison (transpose / shuffle, ds-array vs Dataset) on the same data,
+//! measured for real on the local executor, and a mini ALS for the column
+//! access story. Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//!     make artifacts && cargo run --release --example pipeline_e2e
+
+use std::time::Instant;
+
+use anyhow::Result;
+use rustdslib::bench::workloads::blobs;
+use rustdslib::dataset::Dataset;
+use rustdslib::dsarray::creation;
+use rustdslib::estimators::kmeans::{KMeans, KMeansConfig};
+use rustdslib::estimators::{Estimator, StandardScaler};
+use rustdslib::tasking::Runtime;
+
+fn main() -> Result<()> {
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+    let rt = Runtime::local(workers);
+    println!("=== pipeline_e2e: full-stack driver ({workers} workers) ===");
+    let pjrt = rustdslib::runtime::global().is_some();
+    println!(
+        "PJRT artifacts: {}",
+        if pjrt { "ACTIVE (L1/L2 on the hot path)" } else { "missing — run `make artifacts`" }
+    );
+
+    // ---- 1. Real small workload: 4096 x 512, 16 Gaussian blobs ----
+    let (n, f, k) = (4096, 512, 16);
+    let (data, truth) = blobs(n, f, k, 1.0, 42);
+    let t0 = Instant::now();
+    let x = creation::from_matrix(&rt, &data, (64, 64))?;
+    println!(
+        "\n[load]   {n}x{f} as {:?} grid of 64x64 blocks   ({:.2}s)",
+        x.grid(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- 2. StandardScaler through the fused artifacts ----
+    let t0 = Instant::now();
+    let mut scaler = StandardScaler::default();
+    let xs = scaler.fit_transform(&x)?;
+    xs.runtime().barrier()?;
+    println!("[scale]  fit+transform                         ({:.2}s)", t0.elapsed().as_secs_f64());
+
+    // ---- 3. K-means through the fused Pallas kernel ----
+    let t0 = Instant::now();
+    let mut km = KMeans::new(KMeansConfig {
+        k,
+        max_iter: 30,
+        tol: 1e-5,
+        seed: 7,
+    });
+    km.fit(&xs, None)?;
+    let fit_s = t0.elapsed().as_secs_f64();
+    let pred = km.predict(&xs)?.collect()?;
+    let mut table = vec![vec![0usize; k]; k];
+    for (i, &t) in truth.iter().enumerate() {
+        table[t][pred.get(i, 0) as usize] += 1;
+    }
+    let purity: usize = table.iter().map(|r| r.iter().max().unwrap()).sum();
+    println!(
+        "[kmeans] {} iters, inertia {:.0}, purity {:.1}%   ({fit_s:.2}s)",
+        km.n_iter,
+        km.inertia,
+        100.0 * purity as f64 / n as f64
+    );
+
+    // ---- 4. Headline data-ops comparison on the SAME data ----
+    println!("\n--- paper headline: data ops, ds-array vs Dataset (real, local) ---");
+    let n_parts = 64;
+    let ds = Dataset::from_matrix(&rt, &data, None, n_parts)?;
+    let xa = creation::from_matrix(&rt, &data, (n / n_parts, f))?; // 64x1 grid
+
+    let snap = rt.metrics();
+    let t0 = Instant::now();
+    let td = ds.transpose()?;
+    td.collect_samples()?; // force completion
+    let t_ds = t0.elapsed().as_secs_f64();
+    let tasks_ds = rt.metrics().since(&snap).total_tasks();
+
+    let snap = rt.metrics();
+    let t0 = Instant::now();
+    let ta = xa.transpose()?;
+    ta.runtime().barrier()?;
+    let t_da = t0.elapsed().as_secs_f64();
+    let tasks_da = rt.metrics().since(&snap).total_tasks();
+    println!(
+        "transpose: Dataset {t_ds:.3}s / {tasks_ds} tasks   ds-array {t_da:.3}s / {tasks_da} tasks   ({:.1}x, {:.0}x fewer tasks)",
+        t_ds / t_da,
+        tasks_ds as f64 / tasks_da as f64
+    );
+
+    let snap = rt.metrics();
+    let t0 = Instant::now();
+    ds.shuffle(5)?.collect_samples()?;
+    let s_ds = t0.elapsed().as_secs_f64();
+    let stasks_ds = rt.metrics().since(&snap).total_tasks();
+
+    let snap = rt.metrics();
+    let t0 = Instant::now();
+    let sh = xa.shuffle_rows(5)?;
+    sh.runtime().barrier()?;
+    let s_da = t0.elapsed().as_secs_f64();
+    let stasks_da = rt.metrics().since(&snap).total_tasks();
+    println!(
+        "shuffle  : Dataset {s_ds:.3}s / {stasks_ds} tasks   ds-array {s_da:.3}s / {stasks_da} tasks   ({:.1}x, {:.0}x fewer tasks)",
+        s_ds / s_da,
+        stasks_ds as f64 / stasks_da as f64
+    );
+
+    // ---- 5. Column access story (mini ALS gram) ----
+    let t0 = Instant::now();
+    let g = xs.slice_cols(0, 128)?.gram()?;
+    g.runtime().barrier()?;
+    println!(
+        "gram     : XᵀX on 128 columns with ZERO transpose tasks ({:.3}s)",
+        t0.elapsed().as_secs_f64()
+    );
+
+    let m = rt.metrics();
+    println!(
+        "\ntotal: {} tasks across {} distinct ops; {:.1} MB declared I/O",
+        m.total_tasks(),
+        m.tasks_by_op.len(),
+        (m.read_bytes + m.write_bytes) / 1e6
+    );
+    println!("=== pipeline_e2e OK ===");
+    Ok(())
+}

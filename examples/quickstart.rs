@@ -1,0 +1,53 @@
+//! Quickstart: the ds-array NumPy-like API in two minutes.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Creates distributed arrays, chains operations exactly like the paper's
+//! §4.2.3 example (`sqrt(||wᵀ||²)`), slices, reduces, multiplies, and
+//! collects — all automatically parallelized by the task runtime.
+
+use anyhow::Result;
+use rustdslib::dsarray::creation;
+use rustdslib::tasking::Runtime;
+
+fn main() -> Result<()> {
+    // A local runtime with one worker thread per core.
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+    let rt = Runtime::local(workers);
+    println!("runtime: {workers} worker threads\n");
+
+    // -- Creation: one task per block, data born distributed ------------
+    let w = creation::random(&rt, (600, 400), (100, 100), 42)?;
+    println!("w        : {:?} in {:?} blocks of {:?}", w.shape(), w.grid(), w.block_shape());
+
+    // -- The paper's chained expression: sqrt(||wᵀ||₂²) ------------------
+    let expr = w.transpose()?.norm_axis(1)?.pow(2.0)?.sqrt()?;
+    println!("expr     : {:?} = sqrt(||w^T||²) per column", expr.shape());
+    let vals = expr.collect()?;
+    println!("first 4  : {:?}", &vals.data()[..4]);
+
+    // -- Indexing --------------------------------------------------------
+    let rows = w.slice_rows(10, 20)?; // A[10:20]
+    let cols = w.slice_cols(350, 400)?; // A[:, 350:400] — cheap on ds-arrays!
+    println!("A[10:20] : {:?}   A[:,350:400]: {:?}", rows.shape(), cols.shape());
+    println!("A[5,7]   : {:.4}", w.get(5, 7)?);
+
+    // -- Math ------------------------------------------------------------
+    let b = creation::random(&rt, (400, 300), (100, 100), 7)?;
+    let c = w.matmul(&b)?;
+    println!("w @ b    : {:?} (blocked matmul, one task per output block)", c.shape());
+    let mean = c.mean_axis(0)?.collect()?;
+    println!("col means: {:.3} {:.3} {:.3} ...", mean.get(0, 0), mean.get(0, 1), mean.get(0, 2));
+
+    // -- Shuffle + reductions --------------------------------------------
+    let s = w.shuffle_rows(1)?;
+    println!("shuffle  : preserves sums? {} vs {}", s.sum()? as i64, w.sum()? as i64);
+
+    // -- What did the runtime do? ----------------------------------------
+    let m = rt.metrics();
+    println!("\ntasks executed: {} across {} ops", m.total_tasks(), m.tasks_by_op.len());
+    for (op, n) in m.tasks_by_op.iter().take(6) {
+        println!("  {op:<32} {n}");
+    }
+    Ok(())
+}

@@ -1,0 +1,72 @@
+"""AOT bridge: lower every L2 entry point to HLO *text* + a manifest.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs one `<name>.hlo.txt` per entry point plus `manifest.json` recording
+input/output shapes so the Rust loader can validate its buffers.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """Lower a jitted function to XLA HLO text via StableHLO."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def describe(fn, example_args):
+    """Input/output shape+dtype signature for the manifest."""
+    out = jax.eval_shape(fn, *example_args)
+    flat, _ = jax.tree.flatten(out)
+    return {
+        "inputs": [[list(a.shape), str(a.dtype)] for a in example_args],
+        "outputs": [[list(o.shape), str(o.dtype)] for o in flat],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--sizes",
+        default="64,128",
+        help="comma-separated canonical block edges to compile",
+    )
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, fn, example_args in model.entry_points(sizes):
+        text = to_hlo_text(fn, example_args)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = describe(fn, example_args)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')} "
+          f"({len(manifest)} entry points)")
+
+
+if __name__ == "__main__":
+    main()

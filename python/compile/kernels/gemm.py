@@ -1,0 +1,96 @@
+"""L1 Pallas kernels: tiled matmul-accumulate (NN and TN variants).
+
+These are the FLOP hot spots of the block operations (`dsarray.matmul`,
+`dsarray.gram`, the ALS normal-equation accumulation). The tiling is
+TPU-idiomatic (DESIGN.md §Hardware-Adaptation):
+
+* the grid is (M/bm, N/bn, K/bk); each step keeps one (bm, bk) A-tile, one
+  (bk, bn) B-tile and the (bm, bn) accumulator in VMEM — the `BlockSpec`s
+  express the HBM↔VMEM schedule a CUDA version would write with
+  threadblocks;
+* the inner `jnp.dot` maps onto the MXU; `preferred_element_type=f32`
+  requests full-precision accumulation;
+* `interpret=True` at call time because the CPU PJRT plugin cannot execute
+  Mosaic custom-calls (the AOT artifacts embed the interpreted lowering).
+
+VMEM budget per step at the default (bm, bn, bk) = (64, 64, 64), f32:
+3 tiles × 16 KiB = 48 KiB of live data (≪ 16 MiB VMEM), leaving room for
+double-buffering; the 128³ variant uses 192 KiB and fills the 128×128 MXU
+exactly (see DESIGN.md §Perf for the utilization estimates).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, c_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] (+)= a[i,k] @ b[k,j], seeded with c."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _gemm_tn_kernel(a_ref, b_ref, c_ref, o_ref):
+    """TN variant: o[i,j] (+)= a[k,i]^T @ b[k,j] (Gram accumulate)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].T, b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm_acc(a, b, c, *, bm=64, bn=64, bk=64):
+    """C + A @ B with (bm, bn, bk) VMEM tiles. Shapes must divide evenly."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and c.shape == (m, n), (a.shape, b.shape, c.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(a, b, c)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm_tn_acc(a, b, c, *, bm=64, bn=64, bk=64):
+    """C + A^T @ B with A (k, m), B (k, n), C (m, n)."""
+    k, m = a.shape
+    k2, n = b.shape
+    assert k == k2 and c.shape == (m, n), (a.shape, b.shape, c.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    return pl.pallas_call(
+        _gemm_tn_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(a, b, c)

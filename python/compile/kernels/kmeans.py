@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: fused K-means assignment step.
+
+The per-block K-means work — pairwise squared distances, argmin assignment,
+per-center partial sums/counts, and the inertia contribution — is fused into
+ONE kernel so a sample block is read from HBM exactly once (the unfused
+pipeline reads it three times: distances, one-hot matmul, reduction).
+
+The grid tiles the sample axis; centers stay resident in VMEM across steps
+(their BlockSpec index map is constant) while each step streams one
+(bm, f) sample tile. Outputs are accumulated across grid steps in VMEM.
+Padding rows are masked so edge blocks of a ds-array can be padded to the
+canonical AOT shape without corrupting sums or counts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kmeans_kernel(x_ref, c_ref, m_ref, psum_ref, pcount_ref, pssd_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        psum_ref[...] = jnp.zeros_like(psum_ref)
+        pcount_ref[...] = jnp.zeros_like(pcount_ref)
+        pssd_ref[...] = jnp.zeros_like(pssd_ref)
+
+    x = x_ref[...]  # (bm, f)
+    c = c_ref[...]  # (k, f)
+    mask = m_ref[...]  # (bm, 1)
+
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (bm, 1)
+    c2 = jnp.sum(c * c, axis=1)  # (k,)
+    d2 = x2 - 2.0 * jnp.dot(x, c.T, preferred_element_type=x.dtype) + c2[None, :]
+    d2 = jnp.maximum(d2, 0.0)  # clamp fp cancellation
+    assign = jnp.argmin(d2, axis=1)  # (bm,)
+    k = c.shape[0]
+    onehot = (assign[:, None] == jax.lax.iota(jnp.int32, k)[None, :]).astype(
+        x.dtype
+    ) * mask  # (bm, k)
+
+    psum_ref[...] += jnp.dot(onehot.T, x, preferred_element_type=x.dtype)
+    pcount_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)
+    pssd_ref[...] += jnp.sum(jnp.min(d2, axis=1, keepdims=True) * mask).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def kmeans_assign(x, centers, mask, *, bm=64):
+    """Fused assignment step; see `ref.kmeans_assign` for the math.
+
+    Args:
+      x: (m, f) sample block (rows may be padding).
+      centers: (k, f) centers.
+      mask: (m, 1) row validity (1.0 valid / 0.0 padding).
+      bm: sample-axis tile size.
+
+    Returns:
+      (psum (k, f), pcount (1, k), pssd (1, 1)).
+    """
+    m, f = x.shape
+    k = centers.shape[0]
+    assert centers.shape == (k, f) and mask.shape == (m, 1)
+    bm = min(bm, m)
+    assert m % bm == 0, (m, bm)
+    return pl.pallas_call(
+        _kmeans_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+            pl.BlockSpec((k, f), lambda i: (0, 0)),  # resident
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, f), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, f), x.dtype),
+            jax.ShapeDtypeStruct((1, k), x.dtype),
+            jax.ShapeDtypeStruct((1, 1), x.dtype),
+        ],
+        interpret=True,
+    )(x, centers, mask)

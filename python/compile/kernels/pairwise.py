@@ -1,0 +1,43 @@
+"""L1 Pallas kernel: pairwise squared Euclidean distances.
+
+Feeds the k-NN estimator: one (bm, f) query tile vs a VMEM-resident
+reference set (k, f) per grid step, emitting the (bm, k) distance tile —
+the expansion ||x||² − 2x·yᵀ + ||y||² computed in one pass so queries
+stream through HBM exactly once.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pairwise_kernel(x_ref, y_ref, o_ref):
+    x = x_ref[...]  # (bm, f)
+    y = y_ref[...]  # (k, f)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (bm, 1)
+    y2 = jnp.sum(y * y, axis=1)  # (k,)
+    d2 = x2 - 2.0 * jnp.dot(x, y.T, preferred_element_type=x.dtype) + y2[None, :]
+    o_ref[...] = jnp.maximum(d2, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def pairwise_dist2(x, y, *, bm=64):
+    """Squared distances between rows of x (m, f) and rows of y (k, f)."""
+    m, f = x.shape
+    k, f2 = y.shape
+    assert f == f2, (x.shape, y.shape)
+    bm = min(bm, m)
+    assert m % bm == 0, (m, bm)
+    return pl.pallas_call(
+        _pairwise_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+            pl.BlockSpec((k, f), lambda i: (0, 0)),  # resident
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), x.dtype),
+        interpret=True,
+    )(x, y)

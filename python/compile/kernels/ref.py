@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the L1 correctness contract).
+
+Each function here is the mathematical specification the corresponding
+kernel in this package must match under ``assert_allclose``; pytest +
+hypothesis sweep shapes/dtypes against these (python/tests/test_kernel.py).
+"""
+
+import jax.numpy as jnp
+
+
+def gemm_acc(a, b, c):
+    """C + A @ B (matmul-accumulate)."""
+    return c + jnp.matmul(a, b, preferred_element_type=c.dtype)
+
+
+def gemm_tn_acc(a, b, c):
+    """C + A^T @ B — the Gram-style accumulate used by ALS."""
+    return c + jnp.matmul(a.T, b, preferred_element_type=c.dtype)
+
+
+def kmeans_assign(x, centers, mask):
+    """One K-means assignment step over a block of samples.
+
+    Args:
+      x: (m, f) samples (padding rows allowed).
+      centers: (k, f) current centers.
+      mask: (m, 1) 1.0 for valid rows, 0.0 for padding.
+
+    Returns:
+      psum: (k, f) per-center partial sums of assigned valid samples.
+      pcount: (1, k) per-center assigned-sample counts.
+      pssd: (1, 1) summed squared distance of valid samples (inertia part).
+    """
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (m, 1)
+    c2 = jnp.sum(centers * centers, axis=1)  # (k,)
+    d2 = x2 - 2.0 * x @ centers.T + c2[None, :]  # (m, k)
+    d2 = jnp.maximum(d2, 0.0)
+    assign = jnp.argmin(d2, axis=1)  # (m,)
+    onehot = (assign[:, None] == jnp.arange(centers.shape[0])[None, :]).astype(
+        x.dtype
+    ) * mask  # (m, k)
+    psum = onehot.T @ x  # (k, f)
+    pcount = jnp.sum(onehot, axis=0, keepdims=True)  # (1, k)
+    pssd = jnp.sum(jnp.min(d2, axis=1, keepdims=True) * mask).reshape(1, 1)
+    return psum, pcount, pssd
+
+
+def standardize(x, mean, inv_std):
+    """(x - mean) * inv_std with row broadcast; mean/inv_std are (1, f)."""
+    return (x - mean) * inv_std
+
+
+def col_stats(x, mask):
+    """Masked per-column sums and sums of squares.
+
+    Returns (1, f) sums and (1, f) sums of squares over valid rows.
+    """
+    xm = x * mask
+    return jnp.sum(xm, axis=0, keepdims=True), jnp.sum(xm * x, axis=0, keepdims=True)
+
+
+def pairwise_dist2(x, y):
+    """Squared Euclidean distances between rows of x (m,f) and y (k,f)."""
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    y2 = jnp.sum(y * y, axis=1)
+    return jnp.maximum(x2 - 2.0 * x @ y.T + y2[None, :], 0.0)

@@ -1,0 +1,115 @@
+"""L2: the block-compute graphs the Rust coordinator executes via PJRT.
+
+Each entry point is a jax function composing the L1 Pallas kernels; aot.py
+lowers every (entry point, canonical shape) pair to an HLO-text artifact
+that `rust/src/runtime/` loads and runs on the request path. Shapes are
+static under AOT, so the Rust side pads edge blocks to the canonical block
+size and masks where padding would corrupt results.
+
+Entry points (canonical block edge S ∈ {64, 128}, f32):
+  gemm_<S>:           C + A @ B                         (S,S)³ → (S,S)
+  gemm_tn_<S>:        C + Aᵀ @ B                        (S,S)³ → (S,S)
+  kmeans_<S>_k8:      fused assignment step             (S,S),(8,S),(S,1)
+  standardize_<S>:    (X - μ) σ⁻¹                       (S,S),(1,S),(1,S)
+  col_stats_<S>:      masked column sums / sumsq        (S,S),(S,1)
+  scaler_fit_<S>:     composed: stats → (μ, σ⁻¹)        (S,S),(S,1),(1,1)
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import elementwise, gemm, kmeans, pairwise
+
+#: Number of K-means centers baked into the AOT kmeans artifacts. Rust pads
+#: unused center rows to +inf so no sample ever selects them.
+KMEANS_K = 8
+
+
+def gemm_acc(a, b, c):
+    """C + A @ B (delegates to the tiled Pallas kernel)."""
+    return (gemm.gemm_acc(a, b, c),)
+
+
+def gemm_tn_acc(a, b, c):
+    """C + Aᵀ @ B — ALS/Gram accumulate."""
+    return (gemm.gemm_tn_acc(a, b, c),)
+
+
+def kmeans_step(x, centers, mask):
+    """Fused K-means assignment over one block: (psum, pcount, pssd)."""
+    return kmeans.kmeans_assign(x, centers, mask)
+
+
+def standardize(x, mean, inv_std):
+    """Scaler transform for one block."""
+    return (elementwise.standardize(x, mean, inv_std),)
+
+
+def col_stats(x, mask):
+    """Masked column statistics for one block: (sums, sumsq)."""
+    return elementwise.col_stats(x, mask)
+
+
+def scaler_fit(x, mask, n_valid):
+    """Composed L2 graph: block stats → (mean, inv_std) for this block alone.
+
+    Demonstrates a multi-kernel L2 graph (stats kernel + jnp epilogue) and is
+    used by the single-block fast path of the StandardScaler. `n_valid` is a
+    (1, 1) float carrying the valid-row count.
+    """
+    sums, sumsq = elementwise.col_stats(x, mask)
+    n = jnp.maximum(n_valid, 1.0)
+    mean = sums / n
+    var = jnp.maximum(sumsq / n - mean * mean, 0.0)
+    inv_std = 1.0 / jnp.sqrt(var + 1e-8)
+    return mean, inv_std
+
+
+def pairwise_dist2(x, y):
+    """Pairwise squared distances for one query block vs a reference set."""
+    return (pairwise.pairwise_dist2(x, y),)
+
+
+def _shape(*dims):
+    import jax
+
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def entry_points(sizes=(64, 128)):
+    """(name, fn, example_args) for every artifact aot.py must produce."""
+    eps = []
+    for s in sizes:
+        eps.append((f"gemm_{s}", gemm_acc, (_shape(s, s), _shape(s, s), _shape(s, s))))
+        eps.append(
+            (f"gemm_tn_{s}", gemm_tn_acc, (_shape(s, s), _shape(s, s), _shape(s, s)))
+        )
+        eps.append(
+            (
+                f"kmeans_{s}_k{KMEANS_K}",
+                kmeans_step,
+                (_shape(s, s), _shape(KMEANS_K, s), _shape(s, 1)),
+            )
+        )
+        eps.append(
+            (
+                f"standardize_{s}",
+                standardize,
+                (_shape(s, s), _shape(1, s), _shape(1, s)),
+            )
+        )
+        eps.append((f"col_stats_{s}", col_stats, (_shape(s, s), _shape(s, 1))))
+        eps.append(
+            (
+                f"scaler_fit_{s}",
+                scaler_fit,
+                (_shape(s, s), _shape(s, 1), _shape(1, 1)),
+            )
+        )
+        eps.append(
+            (
+                f"pairwise_{s}",
+                pairwise_dist2,
+                (_shape(s, s), _shape(s, s)),
+            )
+        )
+    return eps

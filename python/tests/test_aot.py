@@ -1,0 +1,60 @@
+"""AOT artifact checks: HLO text generation and manifest consistency."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_produces_hlo_module():
+    name, fn, args = model.entry_points((64,))[0]
+    text = aot.to_hlo_text(fn, args)
+    assert "HloModule" in text
+    assert "f32[64,64]" in text
+    # Interpret-mode pallas must lower to plain HLO — no Mosaic custom calls.
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()
+
+
+def test_describe_signature():
+    name, fn, args = next(
+        (n, f, a) for n, f, a in model.entry_points((64,)) if n.startswith("kmeans")
+    )
+    sig = aot.describe(fn, args)
+    assert sig["inputs"][0] == [[64, 64], "float32"]
+    assert len(sig["outputs"]) == 3  # psum, pcount, pssd
+
+
+@pytest.mark.slow
+def test_cli_writes_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--sizes", "64"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert len(manifest) == 7  # entry points per size (model.entry_points)
+    for name in manifest:
+        text = (out / f"{name}.hlo.txt").read_text()
+        assert "HloModule" in text, name
+
+
+def test_prebuilt_artifacts_match_manifest():
+    """If `make artifacts` has run, the directory must be self-consistent."""
+    root = os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    art = os.path.join(root, "artifacts")
+    mpath = os.path.join(art, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built yet")
+    manifest = json.load(open(mpath))
+    for name, sig in manifest.items():
+        path = os.path.join(art, f"{name}.hlo.txt")
+        assert os.path.exists(path), name
+        assert sig["inputs"] and sig["outputs"], name

@@ -1,0 +1,169 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in kernels/ref.py.
+
+Hypothesis sweeps shapes, tile sizes and value distributions; every kernel
+must match its oracle under assert_allclose. This is the CORE correctness
+signal for the compute layer (the Rust side loads exactly these kernels'
+AOT lowerings).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elementwise, gemm, kmeans, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Tile-friendly dimension strategy: multiples of small tiles up to 128.
+def dims(max_tiles=4, tile=16):
+    return st.integers(1, max_tiles).map(lambda t: t * tile)
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=dims(), n=dims(), k=dims(),
+    bm=st.sampled_from([16, 32, 64]),
+    bn=st.sampled_from([16, 32, 64]),
+    bk=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_acc_matches_ref(m, n, k, bm, bn, bk, seed):
+    if m % min(bm, m) or n % min(bn, n) or k % min(bk, k):
+        pytest.skip("tile does not divide shape")
+    rng = np.random.default_rng(seed)
+    a, b, c = rand(rng, m, k), rand(rng, k, n), rand(rng, m, n)
+    got = gemm.gemm_acc(a, b, c, bm=bm, bn=bn, bk=bk)
+    want = ref.gemm_acc(a, b, c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=dims(), n=dims(), k=dims(),
+    bk=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_tn_acc_matches_ref(m, n, k, bk, seed):
+    if k % min(bk, k):
+        pytest.skip("tile does not divide shape")
+    rng = np.random.default_rng(seed)
+    a, b, c = rand(rng, k, m), rand(rng, k, n), rand(rng, m, n)
+    got = gemm.gemm_tn_acc(a, b, c, bk=bk)
+    want = ref.gemm_tn_acc(a, b, c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=dims(), f=dims(),
+    kc=st.sampled_from([2, 3, 8]),
+    bm=st.sampled_from([16, 32, 64]),
+    pad=st.integers(0, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kmeans_assign_matches_ref(m, f, kc, bm, pad, seed):
+    if m % min(bm, m):
+        pytest.skip("tile does not divide shape")
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, f, scale=2.0)
+    centers = rand(rng, kc, f, scale=2.0)
+    # Mask out the last `pad` rows as padding.
+    pad = min(pad, m - 1)
+    mask = jnp.asarray(
+        (np.arange(m) < m - pad).astype(np.float32).reshape(m, 1)
+    )
+    got = kmeans.kmeans_assign(x, centers, mask, bm=bm)
+    want = ref.kmeans_assign(x, centers, mask)
+    for g, w, name in zip(got, want, ["psum", "pcount", "pssd"]):
+        np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-3, err_msg=name)
+    # Counts are integral and sum to the number of valid rows.
+    np.testing.assert_allclose(np.sum(got[1]), m - pad, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims(), f=dims(), bm=st.sampled_from([16, 64]), seed=st.integers(0, 2**31 - 1))
+def test_standardize_matches_ref(m, f, bm, seed):
+    if m % min(bm, m):
+        pytest.skip("tile does not divide shape")
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, f, scale=5.0)
+    mu = rand(rng, 1, f)
+    inv = jnp.abs(rand(rng, 1, f)) + 0.1
+    got = elementwise.standardize(x, mu, inv, bm=bm)
+    np.testing.assert_allclose(got, ref.standardize(x, mu, inv), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=dims(), f=dims(),
+    bm=st.sampled_from([16, 64]),
+    pad=st.integers(0, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_col_stats_matches_ref(m, f, bm, pad, seed):
+    if m % min(bm, m):
+        pytest.skip("tile does not divide shape")
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, f, scale=3.0)
+    pad = min(pad, m - 1)
+    mask = jnp.asarray((np.arange(m) < m - pad).astype(np.float32).reshape(m, 1))
+    gs, gq = elementwise.col_stats(x, mask, bm=bm)
+    ws, wq = ref.col_stats(x, mask)
+    np.testing.assert_allclose(gs, ws, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gq, wq, rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_padding_centers_never_selected():
+    """Rust pads unused center rows with +inf-ish values; verify they get
+    zero counts so K < KMEANS_K works through the fixed-shape artifact."""
+    rng = np.random.default_rng(0)
+    x = rand(rng, 64, 16)
+    real = rand(rng, 3, 16)
+    padded = jnp.concatenate([real, jnp.full((5, 16), 1e30, jnp.float32)])
+    mask = jnp.ones((64, 1), jnp.float32)
+    _, pcount, _ = kmeans.kmeans_assign(x, padded, mask)
+    assert float(jnp.sum(pcount[0, 3:])) == 0.0
+    assert float(jnp.sum(pcount)) == 64.0
+
+
+def test_gemm_zero_c_is_plain_matmul():
+    rng = np.random.default_rng(1)
+    a, b = rand(rng, 32, 48), rand(rng, 48, 16)
+    got = gemm.gemm_acc(a, b, jnp.zeros((32, 16), jnp.float32), bm=16, bn=16, bk=16)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=dims(), f=dims(),
+    kc=st.sampled_from([16, 48, 64]),
+    bm=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_dist2_matches_ref(m, f, kc, bm, seed):
+    from compile.kernels import pairwise
+
+    if m % min(bm, m):
+        pytest.skip("tile does not divide shape")
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, f, scale=2.0)
+    y = rand(rng, kc, f, scale=2.0)
+    got = pairwise.pairwise_dist2(x, y, bm=bm)
+    want = ref.pairwise_dist2(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+    assert float(jnp.min(got)) >= 0.0
+
+
+def test_pairwise_self_distance_zero_diagonal():
+    from compile.kernels import pairwise
+
+    rng = np.random.default_rng(2)
+    x = rand(rng, 32, 16)
+    d2 = pairwise.pairwise_dist2(x, x, bm=16)
+    np.testing.assert_allclose(jnp.diagonal(d2), 0.0, atol=1e-3)

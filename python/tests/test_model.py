@@ -1,0 +1,85 @@
+"""L2 entry-point checks: shapes, composition, and numeric sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_entry_points_cover_both_sizes():
+    eps = model.entry_points((64, 128))
+    names = [n for n, _, _ in eps]
+    for s in (64, 128):
+        for prefix in ("gemm", "gemm_tn", "kmeans", "standardize", "col_stats", "scaler_fit"):
+            assert any(n.startswith(f"{prefix}_{s}") for n in names), (prefix, s)
+    assert len(names) == len(set(names)), "duplicate entry point names"
+
+
+def test_entry_point_shapes_evaluate():
+    for name, fn, args in model.entry_points((64,)):
+        out = jax.eval_shape(fn, *args)
+        flat, _ = jax.tree.flatten(out)
+        assert flat, name
+        for o in flat:
+            assert o.dtype == jnp.float32, name
+
+
+def test_scaler_fit_recovers_moments():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((64, 64), dtype=np.float32) * 2.0 + 1.5)
+    mask = jnp.ones((64, 1), jnp.float32)
+    n = jnp.full((1, 1), 64.0, jnp.float32)
+    mean, inv_std = model.scaler_fit(x, mask, n)
+    np.testing.assert_allclose(mean, np.mean(np.asarray(x), axis=0, keepdims=True),
+                               rtol=1e-3, atol=1e-3)
+    want_inv = 1.0 / np.sqrt(np.var(np.asarray(x), axis=0, keepdims=True) + 1e-8)
+    np.testing.assert_allclose(inv_std, want_inv, rtol=1e-2, atol=1e-3)
+
+
+def test_scaler_fit_respects_mask():
+    rng = np.random.default_rng(4)
+    x_np = rng.standard_normal((64, 16), dtype=np.float32)
+    x_np[50:] = 1e6  # padding garbage that the mask must exclude
+    x = jnp.asarray(x_np)
+    mask = jnp.asarray((np.arange(64) < 50).astype(np.float32).reshape(64, 1))
+    n = jnp.full((1, 1), 50.0, jnp.float32)
+    mean, _ = model.scaler_fit(x, mask, n)
+    np.testing.assert_allclose(
+        mean, np.mean(x_np[:50], axis=0, keepdims=True), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_kmeans_step_composes_with_center_update():
+    """A full mini K-means loop through the L2 entry point converges on
+    two well-separated blobs."""
+    rng = np.random.default_rng(5)
+    a = rng.standard_normal((32, 8), dtype=np.float32) * 0.1 + 5.0
+    b = rng.standard_normal((32, 8), dtype=np.float32) * 0.1 - 5.0
+    x = jnp.asarray(np.vstack([a, b]))
+    mask = jnp.ones((64, 1), jnp.float32)
+    k = model.KMEANS_K
+    centers = jnp.asarray(rng.standard_normal((k, 8), dtype=np.float32))
+    last = np.inf
+    for _ in range(8):
+        psum, pcount, pssd = model.kmeans_step(x, centers, mask)
+        counts = jnp.maximum(pcount.T, 1e-9)  # (k, 1)
+        centers = jnp.where(pcount.T > 0, psum / counts, centers)
+        assert float(pssd[0, 0]) <= last + 1e-3
+        last = float(pssd[0, 0])
+    # Converged inertia is tiny relative to the blob separation.
+    assert last < 64 * 8 * 0.1
+
+
+def test_l2_matches_ref_oracles():
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((64, 64), dtype=np.float32))
+    c = jnp.asarray(rng.standard_normal((model.KMEANS_K, 64), dtype=np.float32))
+    mask = jnp.ones((64, 1), jnp.float32)
+    got = model.kmeans_step(x, c, mask)
+    want = ref.kmeans_assign(x, c, mask)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,30 @@
+//! ABL-BLK (paper §5.3 discussion): ALS block-grid ablation. Finer grids
+//! buy direct column access but multiply partitions (192×192 = 36 864
+//! blocks), whose handling "can add up to minutes over the whole
+//! execution" — this sweep quantifies that trade-off.
+//!
+//! Usage: cargo bench --bench ablation_blocks [-- --grids 48,96,192 --iters 3]
+
+use anyhow::Result;
+use rustdslib::bench::experiments;
+use rustdslib::config::Config;
+use rustdslib::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cfg = Config::resolve(&args)?;
+    let grids = args.get_usize_list("grids", &[24, 48, 96, 192]);
+    let iters = args.get_usize("iters", 3);
+    let rows = experiments::ablation_blocks(&cfg, &grids, iters)?;
+    let cores = *cfg.sim_cores.last().unwrap_or(&768);
+    println!(
+        "ALS (Netflix shape, {iters} iters) at {cores} simulated cores:\n\
+         {:>6} | {:>10} | {:>12} | {:>10}",
+        "grid", "blocks", "time (s)", "tasks"
+    );
+    println!("{}", "-".repeat(48));
+    for (g, t, tasks) in rows {
+        println!("{g:>6} | {:>10} | {t:>12.2} | {tasks:>10}", g * g);
+    }
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! ABL-COLL (paper §4.3): what the COLLECTION_IN/OUT runtime feature is
+//! worth — ds-array shuffle with collections (2N tasks) vs the same
+//! operation restricted to bounded-arity outputs (N²+N tasks).
+//!
+//! Usage: cargo bench --bench ablation_collections [-- --cores 48,...]
+
+use anyhow::Result;
+use rustdslib::bench::experiments;
+use rustdslib::config::Config;
+use rustdslib::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let mut cfg = Config::resolve(&args)?;
+    if args.get("cores").is_none() {
+        cfg.sim_cores = vec![48, 96, 192, 384, 768];
+    }
+    let rows = experiments::ablation_collections(&cfg)?;
+    println!(
+        "{:>6} | {:>14} {:>10} | {:>16} {:>10} | {:>8}",
+        "cores", "with coll (s)", "tasks", "without coll (s)", "tasks", "speedup"
+    );
+    println!("{}", "-".repeat(78));
+    for (cores, with_t, wo_t, with_tasks, wo_tasks) in rows {
+        println!(
+            "{cores:>6} | {with_t:>14.2} {with_tasks:>10} | {wo_t:>16.2} {wo_tasks:>10} | {:>8.2}",
+            wo_t / with_t
+        );
+    }
+    println!("\ncollections turn N²+N shuffle tasks into 2N (paper §4.3)");
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! EXP-SH (paper Fig 8): weak-scaling pseudo-shuffle, 300 rows × 2 cols per
+//! core; Dataset (N·min(N,S)+N tasks) vs ds-array (2N via collections).
+//!
+//! Usage: cargo bench --bench fig8_shuffle [-- --cores 48,...,1536]
+
+use anyhow::Result;
+use rustdslib::bench::experiments;
+use rustdslib::config::Config;
+use rustdslib::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let mut cfg = Config::resolve(&args)?;
+    if args.get("cores").is_none() {
+        cfg.sim_cores = vec![48, 96, 192, 384, 768, 1536];
+    }
+    let s = experiments::fig8_shuffle(&cfg)?;
+    print!("{}", s.render());
+    if let Some(p) = s.points.last() {
+        if let Some(d) = p.dataset_s {
+            println!(
+                "improvement at {} cores: {:.1}% (paper: ~60%)",
+                p.cores,
+                100.0 * (1.0 - p.dsarray_s / d)
+            );
+        }
+    }
+    Ok(())
+}

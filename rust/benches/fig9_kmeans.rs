@@ -1,0 +1,31 @@
+//! EXP-KM (paper Fig 9): strong-scaling K-means, ~50M × 1000, 1536
+//! partitions — the control experiment: Dataset and ds-array curves must
+//! overlap (the algorithm gains nothing from two-axis blocking).
+//!
+//! Usage: cargo bench --bench fig9_kmeans [-- --cores ... --iters 5]
+
+use anyhow::Result;
+use rustdslib::bench::experiments;
+use rustdslib::config::Config;
+use rustdslib::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let mut cfg = Config::resolve(&args)?;
+    if args.get("cores").is_none() {
+        cfg.sim_cores = vec![48, 96, 192, 384, 768, 1536];
+    }
+    let iters = args.get_usize("iters", 5);
+    let s = experiments::fig9_kmeans(&cfg, iters)?;
+    print!("{}", s.render());
+    // Control check: max relative difference across points.
+    let mut worst: f64 = 0.0;
+    for p in &s.points {
+        if let Some(d) = p.dataset_s {
+            worst = worst.max((d - p.dsarray_s).abs() / d);
+        }
+    }
+    println!("max |Dataset - ds-array| / Dataset = {:.1}% (paper: 'no significant difference')",
+             100.0 * worst);
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Hot-path microbenchmarks on the REAL (local) executor + PJRT runtime —
+//! the measurement harness for the §Perf optimization pass (EXPERIMENTS.md).
+//!
+//! Measures wall-clock for: block transpose / shuffle / matmul through the
+//! task runtime, raw PJRT artifact dispatch (gemm / kmeans / standardize),
+//! native block math, and runtime overheads (submit, graph, channels).
+//!
+//! Usage: cargo bench --bench hotpath [-- --reps 5]
+
+use std::time::Instant;
+
+use anyhow::Result;
+use rustdslib::dsarray::creation;
+use rustdslib::runtime::{exec, global};
+use rustdslib::storage::DenseMatrix;
+use rustdslib::tasking::Runtime;
+use rustdslib::util::rng::Xoshiro256;
+
+fn time<F: FnMut() -> Result<()>>(reps: usize, mut f: F) -> Result<f64> {
+    // Warmup once (JIT compiles artifacts on first use).
+    f()?;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f()?;
+    }
+    Ok(t0.elapsed().as_secs_f64() / reps as f64)
+}
+
+fn main() -> Result<()> {
+    let args = rustdslib::util::cli::Args::from_env();
+    let reps = args.get_usize("reps", 5);
+    let workers = args.get_usize("workers", 2);
+    let mut rows: Vec<(String, f64, String)> = Vec::new();
+    let mut rng = Xoshiro256::seed_from_u64(1);
+
+    // ---- L3: runtime op latencies on real data ----
+    let rt = Runtime::local(workers);
+    let m = DenseMatrix::from_fn(1024, 1024, |_, _| rng.next_normal());
+    let a = creation::from_matrix(&rt, &m, (128, 128))?;
+
+    let t = time(reps, || {
+        let t = a.transpose()?;
+        t.runtime().barrier()
+    })?;
+    rows.push(("dsarray.transpose 1024² (64 blocks)".into(), t, format!("{:.1} MB/s", 8.0 / t)));
+
+    let t = time(reps, || {
+        let s = a.shuffle_rows(3)?;
+        s.runtime().barrier()
+    })?;
+    rows.push(("dsarray.shuffle 1024²".into(), t, format!("{:.1} MB/s", 8.0 / t)));
+
+    let b = creation::from_matrix(&rt, &m, (128, 128))?;
+    let t = time(reps, || {
+        let c = a.matmul(&b)?;
+        c.runtime().barrier()
+    })?;
+    let gflops = 2.0 * 1024f64.powi(3) / 1e9;
+    rows.push(("dsarray.matmul 1024³".into(), t, format!("{:.2} GFLOP/s", gflops / t)));
+
+    let t = time(reps, || {
+        let s = a.sum_axis(0)?;
+        s.runtime().barrier()
+    })?;
+    rows.push(("dsarray.sum_axis(0) 1024²".into(), t, String::new()));
+
+    // ---- Task-runtime overhead: empty tasks ----
+    let t = time(reps, || {
+        let rt2 = Runtime::local(workers);
+        let src = rt2.put_block(rustdslib::storage::Block::Dense(DenseMatrix::zeros(1, 1)));
+        for _ in 0..1000 {
+            rt2.submit(
+                "noop",
+                &[src],
+                vec![rustdslib::storage::BlockMeta::dense(1, 1)],
+                rustdslib::tasking::CostHint::default(),
+                std::sync::Arc::new(|ins: &[std::sync::Arc<rustdslib::storage::Block>]| {
+                    Ok(vec![(*ins[0]).clone()])
+                }),
+            );
+        }
+        rt2.barrier()
+    })?;
+    rows.push((
+        "task submit+run x1000 (1x1)".into(),
+        t,
+        format!("{:.1} µs/task", t * 1e3),
+    ));
+
+    // ---- L1/L2 via PJRT vs native ----
+    if let Some(svc) = global() {
+        let x = DenseMatrix::from_fn(64, 64, |_, _| rng.next_normal());
+        let y = DenseMatrix::from_fn(64, 64, |_, _| rng.next_normal());
+        let z = DenseMatrix::zeros(64, 64);
+        let t = time(reps * 10, || exec::gemm_acc(svc, &x, &y, &z).map(|_| ()))?;
+        let fl = 2.0 * 64f64.powi(3) / 1e9;
+        rows.push(("pjrt gemm_64".into(), t, format!("{:.2} GFLOP/s", fl / t)));
+
+        let x128 = DenseMatrix::from_fn(128, 128, |_, _| rng.next_normal());
+        let y128 = DenseMatrix::from_fn(128, 128, |_, _| rng.next_normal());
+        let z128 = DenseMatrix::zeros(128, 128);
+        let t = time(reps * 10, || exec::gemm_acc(svc, &x128, &y128, &z128).map(|_| ()))?;
+        let fl = 2.0 * 128f64.powi(3) / 1e9;
+        rows.push(("pjrt gemm_128".into(), t, format!("{:.2} GFLOP/s", fl / t)));
+
+        let t = time(reps * 10, || {
+            x.matmul(&y).map(|_| ())
+        })?;
+        let fl = 2.0 * 64f64.powi(3) / 1e9;
+        rows.push(("native matmul 64³".into(), t, format!("{:.2} GFLOP/s", fl / t)));
+
+        let centers = DenseMatrix::from_fn(8, 64, |_, _| rng.next_normal());
+        let t = time(reps * 10, || {
+            exec::kmeans_assign(svc, &x, &centers).map(|_| ())
+        })?;
+        rows.push(("pjrt kmeans_64 (fused)".into(), t, format!("{:.0} µs", t * 1e6)));
+
+        let mu = DenseMatrix::zeros(1, 64);
+        let is = DenseMatrix::full(1, 64, 1.0);
+        let t = time(reps * 10, || exec::standardize(svc, &x, &mu, &is).map(|_| ()))?;
+        rows.push(("pjrt standardize_64".into(), t, format!("{:.0} µs", t * 1e6)));
+    } else {
+        rows.push(("pjrt".into(), f64::NAN, "artifacts not built".into()));
+    }
+
+    println!("{:<40} {:>12} {:>18}", "op", "secs/iter", "rate");
+    println!("{}", "-".repeat(72));
+    for (name, secs, rate) in rows {
+        println!("{name:<40} {secs:>12.6} {rate:>18}");
+    }
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! EXP-TASKS (paper §4.3/§5 task-complexity claims): measured task counts
+//! vs partition count N, asserted against the paper's formulas:
+//!
+//!   transpose:  Dataset N²+N      vs ds-array N
+//!   shuffle:    Dataset N·min(N,S)+N  vs ds-array 2N  (N²+N w/o collections)
+
+use anyhow::Result;
+use rustdslib::bench::experiments;
+use rustdslib::config::Config;
+use rustdslib::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cfg = Config::resolve(&args)?;
+    let ns = args.get_usize_list("n", &[8, 16, 32, 64, 128, 256]);
+    let rows = experiments::task_count_table(&cfg, &ns)?;
+    println!(
+        "{:>5} | {:>12} {:>10} | {:>14} {:>10} {:>12}",
+        "N", "D transpose", "A transpose", "D shuffle", "A shuffle", "A sh(nocoll)"
+    );
+    println!("{}", "-".repeat(74));
+    let s = 4; // rows per subset in this workload
+    for (n, d_tr, a_tr, d_sh, a_sh, a_shn) in rows {
+        println!(
+            "{n:>5} | {d_tr:>12} {a_tr:>10} | {d_sh:>14} {a_sh:>10} {a_shn:>12}"
+        );
+        assert_eq!(d_tr, (n * n + n) as u64);
+        assert_eq!(a_tr, n as u64);
+        assert_eq!(d_sh, (n * n.min(s) + n) as u64);
+        assert_eq!(a_sh, 2 * n as u64);
+        assert_eq!(a_shn, (n * n + n) as u64);
+    }
+    println!("\nall counts match the paper's formulas (N²+N vs N; N·min(N,S)+N vs 2N)");
+    Ok(())
+}

@@ -1,0 +1,322 @@
+//! Per-figure experiment drivers (DESIGN.md §6): each reproduces one table
+//! or figure of the paper's §5 by building the *real* task graphs at
+//! MareNostrum scale against the sim-mode runtime and replaying them under
+//! the calibrated cluster model.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::dsarray::creation;
+use crate::estimators::als::{Als, AlsConfig};
+use crate::estimators::kmeans::{KMeans, KMeansConfig};
+use crate::tasking::Runtime;
+
+use super::report::{Point, Series};
+use super::workloads::{
+    netflix_phantom_dataset, netflix_phantom_dsarray, KMeansStrong, ShuffleWeak, TransposeStrong,
+    TransposeWeak,
+};
+
+/// Run one simulated operation: build the workload + op graph with `build`,
+/// replay, return (makespan, task count).
+fn simulate(cfg: &Config, cores: usize, build: impl FnOnce(&Runtime) -> Result<()>) -> Result<(f64, u64)> {
+    let rt = Runtime::sim(cfg.sim_at(cores));
+    build(&rt)?;
+    let tasks = rt.metrics().total_tasks();
+    let report = rt.run_sim()?;
+    Ok((report.makespan_s, tasks))
+}
+
+/// Fig 6 (left): strong-scaling transpose, 46 080² with 1 536 partitions.
+/// `dataset_core_cap`: beyond this core count the Dataset run is reported
+/// as n.a. (the paper's missing points are real OOMs at the master; the
+/// simulated graph is identical at every core count, so we mirror the
+/// paper's reporting rather than pretend the run succeeded).
+pub fn fig6_strong(cfg: &Config, dataset_core_cap: usize) -> Result<Series> {
+    let mut series = Series::new(
+        "Fig 6 (strong): transpose 46080x46080, 1536 partitions — Datasets vs ds-arrays",
+    );
+    for &cores in &cfg.sim_cores {
+        let dataset_s = if cores <= dataset_core_cap {
+            let (t, _) = simulate(cfg, cores, |rt| {
+                let ds = TransposeStrong::dataset(rt)?;
+                ds.transpose()?;
+                Ok(())
+            })?;
+            Some(t)
+        } else {
+            None
+        };
+        let (a_t, a_tasks) = simulate(cfg, cores, |rt| {
+            let a = TransposeStrong::dsarray(rt)?;
+            a.transpose()?;
+            Ok(())
+        })?;
+        let d_tasks = if dataset_s.is_some() {
+            (TransposeStrong::PARTITIONS * TransposeStrong::PARTITIONS
+                + TransposeStrong::PARTITIONS) as u64
+        } else {
+            0
+        };
+        series.push(Point {
+            cores,
+            dataset_s,
+            dsarray_s: a_t,
+            tasks: (d_tasks, a_tasks),
+        });
+    }
+    Ok(series)
+}
+
+/// Fig 6 (right): weak-scaling transpose, 500 rows/core × 100 000 features.
+pub fn fig6_weak(cfg: &Config) -> Result<Series> {
+    let mut series =
+        Series::new("Fig 6 (weak): transpose 500 rows/core x 100k cols — Datasets vs ds-arrays");
+    for &cores in &cfg.sim_cores {
+        let (d_t, d_tasks) = simulate(cfg, cores, |rt| {
+            let ds = TransposeWeak::dataset(rt, cores)?;
+            ds.transpose()?;
+            Ok(())
+        })?;
+        let (a_t, a_tasks) = simulate(cfg, cores, |rt| {
+            let a = TransposeWeak::dsarray(rt, cores)?;
+            a.transpose()?;
+            Ok(())
+        })?;
+        series.push(Point {
+            cores,
+            dataset_s: Some(d_t),
+            dsarray_s: a_t,
+            tasks: (d_tasks, a_tasks),
+        });
+    }
+    Ok(series)
+}
+
+/// Fig 7: ALS on Netflix-shape data; Dataset (192 Subsets, transposed copy
+/// inside fit) vs ds-array (192×192 blocks, direct column access).
+pub fn fig7_als(cfg: &Config, grid: usize, iters: usize) -> Result<Series> {
+    let mut series = Series::new(format!(
+        "Fig 7: ALS, Netflix 17770x480189 (~100.5M nnz), {grid} partitions, {iters} iters"
+    ));
+    for &cores in &cfg.sim_cores {
+        let (d_t, d_tasks) = simulate(cfg, cores, |rt| {
+            let ds = netflix_phantom_dataset(rt, grid)?;
+            let mut als = Als::new(AlsConfig {
+                d: 32,
+                lambda: 0.1,
+                max_iter: iters,
+                seed: 1,
+            });
+            als.fit_dataset(&ds)
+        })?;
+        let (a_t, a_tasks) = simulate(cfg, cores, |rt| {
+            let a = netflix_phantom_dsarray(rt, grid)?;
+            let mut als = Als::new(AlsConfig {
+                d: 32,
+                lambda: 0.1,
+                max_iter: iters,
+                seed: 1,
+            });
+            als.fit_dsarray(&a)
+        })?;
+        series.push(Point {
+            cores,
+            dataset_s: Some(d_t),
+            dsarray_s: a_t,
+            tasks: (d_tasks, a_tasks),
+        });
+    }
+    Ok(series)
+}
+
+/// Fig 8: weak-scaling pseudo-shuffle, 300 rows × 2 features per core.
+pub fn fig8_shuffle(cfg: &Config) -> Result<Series> {
+    let mut series =
+        Series::new("Fig 8 (weak): shuffle 300 rows x 2 cols per core — Datasets vs ds-arrays");
+    for &cores in &cfg.sim_cores {
+        let (d_t, d_tasks) = simulate(cfg, cores, |rt| {
+            let ds = ShuffleWeak::dataset(rt, cores)?;
+            ds.shuffle(7)?;
+            Ok(())
+        })?;
+        let (a_t, a_tasks) = simulate(cfg, cores, |rt| {
+            let a = ShuffleWeak::dsarray(rt, cores)?;
+            a.shuffle_rows(7)?;
+            Ok(())
+        })?;
+        series.push(Point {
+            cores,
+            dataset_s: Some(d_t),
+            dsarray_s: a_t,
+            tasks: (d_tasks, a_tasks),
+        });
+    }
+    Ok(series)
+}
+
+/// Fig 9: strong-scaling K-means, ~50M × 1000, 1536 partitions — the
+/// control experiment (curves should overlap).
+pub fn fig9_kmeans(cfg: &Config, iters: usize) -> Result<Series> {
+    let mut series = Series::new(format!(
+        "Fig 9 (strong): K-means 50M x 1000, k={}, 1536 partitions, {iters} iters",
+        KMeansStrong::K
+    ));
+    for &cores in &cfg.sim_cores {
+        let kcfg = KMeansConfig {
+            k: KMeansStrong::K,
+            max_iter: iters,
+            tol: 0.0,
+            seed: 5,
+        };
+        let (d_t, d_tasks) = simulate(cfg, cores, |rt| {
+            let ds = KMeansStrong::dataset(rt)?;
+            KMeans::new(kcfg.clone()).fit_dataset(&ds)
+        })?;
+        let (a_t, a_tasks) = simulate(cfg, cores, |rt| {
+            let a = KMeansStrong::dsarray(rt)?;
+            KMeans::new(kcfg.clone()).fit_dsarray(&a)
+        })?;
+        series.push(Point {
+            cores,
+            dataset_s: Some(d_t),
+            dsarray_s: a_t,
+            tasks: (d_tasks, a_tasks),
+        });
+    }
+    Ok(series)
+}
+
+/// EXP-TASKS: task-count formulas vs partition count N (paper §4.3/§5).
+/// Returns rows of (N, dataset transpose, dsarray transpose, dataset
+/// shuffle, dsarray shuffle, dsarray shuffle w/o collections).
+pub fn task_count_table(cfg: &Config, ns: &[usize]) -> Result<Vec<(usize, u64, u64, u64, u64, u64)>> {
+    let mut rows = Vec::new();
+    for &n in ns {
+        let rt = Runtime::sim(cfg.sim_at(48));
+        // Transpose needs features >= N for the Dataset split.
+        let ds = crate::dataset::Dataset::phantom(&rt, n * 4, n * 2, n, None)?;
+        let before = rt.metrics();
+        ds.transpose()?;
+        let d_tr = rt.metrics().since(&before).total_tasks();
+
+        let a = creation::phantom(&rt, (n * 4, n * 2), (4, n * 2), None)?;
+        let before = rt.metrics();
+        a.transpose()?;
+        let a_tr = rt.metrics().since(&before).total_tasks();
+
+        // Shuffle: S = 4 rows per subset (S < N once n > 4).
+        let before = rt.metrics();
+        ds.shuffle(1)?;
+        let d_sh = rt.metrics().since(&before).total_tasks();
+
+        let before = rt.metrics();
+        a.shuffle_rows(1)?;
+        let a_sh = rt.metrics().since(&before).total_tasks();
+
+        let before = rt.metrics();
+        a.shuffle_rows_no_collections(1)?;
+        let a_shn = rt.metrics().since(&before).total_tasks();
+
+        rows.push((n, d_tr, a_tr, d_sh, a_sh, a_shn));
+    }
+    Ok(rows)
+}
+
+/// ABL-BLK: ALS block-grid ablation at fixed core counts — the §5.3
+/// partition-count overhead discussion.
+pub fn ablation_blocks(cfg: &Config, grids: &[usize], iters: usize) -> Result<Vec<(usize, f64, u64)>> {
+    let cores = *cfg.sim_cores.last().unwrap_or(&768);
+    let mut rows = Vec::new();
+    for &g in grids {
+        let (t, tasks) = simulate(cfg, cores, |rt| {
+            let a = netflix_phantom_dsarray(rt, g)?;
+            let mut als = Als::new(AlsConfig {
+                d: 32,
+                lambda: 0.1,
+                max_iter: iters,
+                seed: 1,
+            });
+            als.fit_dsarray(&a)
+        })?;
+        rows.push((g, t, tasks));
+    }
+    Ok(rows)
+}
+
+/// ABL-COLL: shuffle with vs without collection parameters across cores.
+pub fn ablation_collections(cfg: &Config) -> Result<Vec<(usize, f64, f64, u64, u64)>> {
+    let mut rows = Vec::new();
+    for &cores in &cfg.sim_cores {
+        let (with_t, with_tasks) = simulate(cfg, cores, |rt| {
+            let a = ShuffleWeak::dsarray(rt, cores)?;
+            a.shuffle_rows(3)?;
+            Ok(())
+        })?;
+        let (wo_t, wo_tasks) = simulate(cfg, cores, |rt| {
+            let a = ShuffleWeak::dsarray(rt, cores)?;
+            a.shuffle_rows_no_collections(3)?;
+            Ok(())
+        })?;
+        rows.push((cores, with_t, wo_t, with_tasks, wo_tasks));
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> Config {
+        Config {
+            sim_cores: vec![48, 96],
+            ..Config::default()
+        }
+    }
+
+    #[test]
+    fn fig6_weak_dsarray_wins_big() {
+        let cfg = small_cfg();
+        let s = fig6_weak(&cfg).unwrap();
+        assert_eq!(s.points.len(), 2);
+        for p in &s.points {
+            let d = p.dataset_s.unwrap();
+            assert!(
+                d > 20.0 * p.dsarray_s,
+                "expected >95% reduction at {} cores: {d} vs {}",
+                p.cores,
+                p.dsarray_s
+            );
+            // Task counts: N²+N vs N.
+            assert_eq!(p.tasks.0, (p.cores * p.cores + p.cores) as u64);
+            assert_eq!(p.tasks.1, p.cores as u64);
+        }
+    }
+
+    #[test]
+    fn fig8_dsarray_wins_and_gap_grows() {
+        let cfg = Config {
+            sim_cores: vec![48, 192],
+            ..Config::default()
+        };
+        let s = fig8_shuffle(&cfg).unwrap();
+        let r0 = s.points[0].dataset_s.unwrap() / s.points[0].dsarray_s;
+        let r1 = s.points[1].dataset_s.unwrap() / s.points[1].dsarray_s;
+        assert!(r0 > 1.0, "ds-array should win at 48 cores ({r0})");
+        assert!(r1 >= r0 * 0.8, "gap should not collapse ({r0} -> {r1})");
+    }
+
+    #[test]
+    fn task_count_formulas_hold() {
+        let cfg = small_cfg();
+        let rows = task_count_table(&cfg, &[6, 10]).unwrap();
+        for (n, d_tr, a_tr, d_sh, a_sh, a_shn) in rows {
+            assert_eq!(d_tr, (n * n + n) as u64, "dataset transpose N²+N");
+            assert_eq!(a_tr, n as u64, "dsarray transpose N");
+            let s = 4; // rows per subset
+            assert_eq!(d_sh, (n * n.min(s) + n) as u64, "dataset shuffle");
+            assert_eq!(a_sh, 2 * n as u64, "dsarray shuffle 2N");
+            assert_eq!(a_shn, (n * n + n) as u64, "no-collections N²+N");
+        }
+    }
+}

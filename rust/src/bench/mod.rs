@@ -1,0 +1,7 @@
+//! Benchmark harness: workload generators, paper-figure experiment drivers,
+//! and table/series reporting. Every table and figure of the paper's §5 has
+//! a driver here and a bench binary under `rust/benches/` (DESIGN.md §6).
+
+pub mod experiments;
+pub mod report;
+pub mod workloads;

@@ -1,0 +1,150 @@
+//! Table/series reporting in the paper's format: execution time and
+//! speedup per core count, Datasets vs ds-arrays.
+
+use std::fmt::Write as _;
+
+/// One core-count measurement for one structure.
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub cores: usize,
+    pub dataset_s: Option<f64>,
+    pub dsarray_s: f64,
+    /// Tasks executed (dataset, dsarray).
+    pub tasks: (u64, u64),
+}
+
+/// A figure reproduction: a series of points plus metadata.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub title: String,
+    pub points: Vec<Point>,
+    /// Baseline (first Dataset time) for speedup, per the paper's
+    /// "Dataset execution with 48 cores as baseline".
+    pub baseline_s: Option<f64>,
+}
+
+impl Series {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self {
+            title: title.into(),
+            points: Vec::new(),
+            baseline_s: None,
+        }
+    }
+
+    pub fn push(&mut self, p: Point) {
+        if self.baseline_s.is_none() {
+            self.baseline_s = p.dataset_s;
+        }
+        self.points.push(p);
+    }
+
+    /// Largest time reduction across points (the paper's "up to X %").
+    pub fn max_reduction_pct(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .filter_map(|p| p.dataset_s.map(|d| 100.0 * (1.0 - self.fin(p.dsarray_s) / d)))
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    fn fin(&self, v: f64) -> f64 {
+        if v.is_finite() {
+            v
+        } else {
+            f64::MAX
+        }
+    }
+
+    /// Render the paper-style table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let _ = writeln!(
+            out,
+            "{:>6} | {:>14} | {:>14} | {:>9} | {:>10} | {:>10}",
+            "cores", "Dataset (s)", "ds-array (s)", "reduction", "D tasks", "A tasks"
+        );
+        let _ = writeln!(out, "{}", "-".repeat(78));
+        for p in &self.points {
+            let ds = p
+                .dataset_s
+                .map(|v| format!("{v:14.2}"))
+                .unwrap_or_else(|| format!("{:>14}", "OOM/n.a."));
+            let red = p
+                .dataset_s
+                .map(|d| format!("{:8.1}%", 100.0 * (1.0 - p.dsarray_s / d)))
+                .unwrap_or_else(|| format!("{:>9}", "-"));
+            let _ = writeln!(
+                out,
+                "{:>6} | {} | {:14.2} | {} | {:>10} | {:>10}",
+                p.cores, ds, p.dsarray_s, red, p.tasks.0, p.tasks.1
+            );
+        }
+        if let (Some(base), true) = (self.baseline_s, !self.points.is_empty()) {
+            let _ = writeln!(out, "speedup vs Dataset@{} cores baseline:", self.points[0].cores);
+            let _ = write!(out, "  Dataset : ");
+            for p in &self.points {
+                match p.dataset_s {
+                    Some(d) => {
+                        let _ = write!(out, "{:>8.2}", base / d);
+                    }
+                    None => {
+                        let _ = write!(out, "{:>8}", "-");
+                    }
+                }
+            }
+            let _ = writeln!(out);
+            let _ = write!(out, "  ds-array: ");
+            for p in &self.points {
+                let _ = write!(out, "{:>8.2}", base / p.dsarray_s);
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+}
+
+/// Simple named-value table for ablations / single-run reports.
+pub fn kv_table(title: &str, rows: &[(String, String)]) -> String {
+    let w = rows.iter().map(|(k, _)| k.len()).max().unwrap_or(8).max(8);
+    let mut out = String::new();
+    let _ = writeln!(out, "\n== {title} ==");
+    for (k, v) in rows {
+        let _ = writeln!(out, "{k:>w$} : {v}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_renders_and_computes_reduction() {
+        let mut s = Series::new("fig X");
+        s.push(Point {
+            cores: 48,
+            dataset_s: Some(1000.0),
+            dsarray_s: 10.0,
+            tasks: (100, 10),
+        });
+        s.push(Point {
+            cores: 96,
+            dataset_s: None,
+            dsarray_s: 5.0,
+            tasks: (0, 10),
+        });
+        let r = s.render();
+        assert!(r.contains("fig X"));
+        assert!(r.contains("OOM/n.a."));
+        assert!(r.contains("99.0%"));
+        assert_eq!(s.baseline_s, Some(1000.0));
+        assert!((s.max_reduction_pct().unwrap() - 99.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_table_aligns() {
+        let t = kv_table("t", &[("a".into(), "1".into()), ("long_key".into(), "2".into())]);
+        assert!(t.contains("long_key : 2"));
+    }
+}

@@ -1,0 +1,223 @@
+//! Paper workload generators (§5) — both the real (materialized) variants
+//! used by examples/local benches and the phantom variants the cluster
+//! simulator schedules at MareNostrum scale.
+
+use anyhow::Result;
+
+use crate::dataset::Dataset;
+use crate::dsarray::{creation, DsArray};
+use crate::storage::{CsrMatrix, DenseMatrix};
+use crate::tasking::Runtime;
+use crate::util::rng::Xoshiro256;
+
+/// Netflix Prize dimensions (paper §5.3).
+pub const NETFLIX_ROWS: usize = 17_770;
+pub const NETFLIX_COLS: usize = 480_189;
+pub const NETFLIX_NNZ: usize = 100_480_507;
+
+/// Netflix density ≈ 1.18 %.
+pub fn netflix_density() -> f64 {
+    NETFLIX_NNZ as f64 / (NETFLIX_ROWS as f64 * NETFLIX_COLS as f64)
+}
+
+/// Phantom Netflix-shape ratings as a ds-array with an n×n block grid
+/// (the paper uses 192×192 blocks).
+pub fn netflix_phantom_dsarray(rt: &Runtime, grid: usize) -> Result<DsArray> {
+    let bs = (
+        NETFLIX_ROWS.div_ceil(grid),
+        NETFLIX_COLS.div_ceil(grid),
+    );
+    creation::phantom(rt, (NETFLIX_ROWS, NETFLIX_COLS), bs, Some(netflix_density()))
+}
+
+/// Phantom Netflix-shape ratings as a Dataset with `n_subsets` row panels.
+pub fn netflix_phantom_dataset(rt: &Runtime, n_subsets: usize) -> Result<Dataset> {
+    Dataset::phantom(
+        rt,
+        NETFLIX_ROWS,
+        NETFLIX_COLS,
+        n_subsets,
+        Some(netflix_density()),
+    )
+}
+
+/// Materialized scaled-down Netflix-like ratings with a power-law column
+/// (user) popularity profile: rank r gets weight ∝ 1/(r+1)^0.8.
+pub fn netflix_like_csr(rows: usize, cols: usize, nnz: usize, seed: u64) -> Result<CsrMatrix> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    // Zipf-ish column sampler via inverse CDF over precomputed weights.
+    let weights: Vec<f64> = (0..cols).map(|r| 1.0 / ((r + 1) as f64).powf(0.8)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut cdf = Vec::with_capacity(cols);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cdf.push(acc);
+    }
+    let mut trips = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        let u = rng.next_f64();
+        let col = cdf.partition_point(|&c| c < u).min(cols - 1);
+        let row = rng.next_below(rows as u64) as usize;
+        let rating = 1.0 + rng.next_below(5) as f32; // 1..=5 stars
+        trips.push((row, col, rating));
+    }
+    CsrMatrix::from_triplets(rows, cols, &trips)
+}
+
+/// Gaussian blobs with ground-truth labels: `k` well-separated clusters.
+pub fn blobs(
+    n: usize,
+    f: usize,
+    k: usize,
+    spread: f32,
+    seed: u64,
+) -> (DenseMatrix, Vec<usize>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    // Cluster centers on a scaled hypercube lattice.
+    let centers: Vec<Vec<f32>> = (0..k)
+        .map(|c| {
+            (0..f)
+                .map(|j| if (c >> (j % 16)) & 1 == 1 { 6.0 } else { -6.0 } + (c as f32) * 0.5)
+                .collect()
+        })
+        .collect();
+    let mut data = DenseMatrix::zeros(n, f);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k;
+        labels.push(c);
+        for j in 0..f {
+            data.set(i, j, centers[c][j] + rng.next_normal() * spread);
+        }
+    }
+    (data, labels)
+}
+
+/// Fig 6 strong-scaling transpose workload parameters (paper §5.2).
+pub struct TransposeStrong;
+impl TransposeStrong {
+    pub const ROWS: usize = 46_080;
+    pub const COLS: usize = 46_080;
+    pub const PARTITIONS: usize = 1_536;
+
+    pub fn dsarray(rt: &Runtime) -> Result<DsArray> {
+        // 1536×1 blocks: full-width row panels of 30 rows.
+        let bs = (Self::ROWS / Self::PARTITIONS, Self::COLS);
+        creation::phantom(rt, (Self::ROWS, Self::COLS), bs, None)
+    }
+
+    pub fn dataset(rt: &Runtime) -> Result<Dataset> {
+        Dataset::phantom(rt, Self::ROWS, Self::COLS, Self::PARTITIONS, None)
+    }
+}
+
+/// Fig 6 weak-scaling transpose workload: 500 rows/core × 100 000 features.
+pub struct TransposeWeak;
+impl TransposeWeak {
+    pub const ROWS_PER_CORE: usize = 500;
+    pub const COLS: usize = 100_000;
+
+    pub fn dsarray(rt: &Runtime, cores: usize) -> Result<DsArray> {
+        let rows = Self::ROWS_PER_CORE * cores;
+        creation::phantom(rt, (rows, Self::COLS), (Self::ROWS_PER_CORE, Self::COLS), None)
+    }
+
+    pub fn dataset(rt: &Runtime, cores: usize) -> Result<Dataset> {
+        Dataset::phantom(rt, Self::ROWS_PER_CORE * cores, Self::COLS, cores, None)
+    }
+}
+
+/// Fig 8 weak-scaling shuffle workload: 300 rows × 2 features per core.
+pub struct ShuffleWeak;
+impl ShuffleWeak {
+    pub const ROWS_PER_CORE: usize = 300;
+    pub const COLS: usize = 2;
+
+    pub fn dsarray(rt: &Runtime, cores: usize) -> Result<DsArray> {
+        let rows = Self::ROWS_PER_CORE * cores;
+        creation::phantom(rt, (rows, Self::COLS), (Self::ROWS_PER_CORE, Self::COLS), None)
+    }
+
+    pub fn dataset(rt: &Runtime, cores: usize) -> Result<Dataset> {
+        Dataset::phantom(rt, Self::ROWS_PER_CORE * cores, Self::COLS, cores, None)
+    }
+}
+
+/// Fig 9 K-means workload: ~50M samples × 1000 features, 1536 partitions.
+pub struct KMeansStrong;
+impl KMeansStrong {
+    pub const ROWS: usize = 50_000_000;
+    pub const COLS: usize = 1_000;
+    pub const PARTITIONS: usize = 1_536;
+    /// The paper does not state k; 50 is dislib's benchmark default.
+    pub const K: usize = 50;
+    pub const ITERS: usize = 5;
+
+    pub fn dsarray(rt: &Runtime) -> Result<DsArray> {
+        let bs = (Self::ROWS.div_ceil(Self::PARTITIONS), Self::COLS);
+        creation::phantom(rt, (Self::ROWS, Self::COLS), bs, None)
+    }
+
+    pub fn dataset(rt: &Runtime) -> Result<Dataset> {
+        Dataset::phantom(rt, Self::ROWS, Self::COLS, Self::PARTITIONS, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasking::SimConfig;
+
+    #[test]
+    fn netflix_density_matches_paper() {
+        let d = netflix_density();
+        assert!((0.0117..0.0119).contains(&d), "density {d}");
+    }
+
+    #[test]
+    fn netflix_like_has_power_law_columns() {
+        let m = netflix_like_csr(200, 1000, 20_000, 1).unwrap();
+        assert_eq!(m.nnz() <= 20_000, true); // duplicates merged
+        let dense = m.to_dense();
+        // First 10 columns should hold far more mass than columns 500..510.
+        let head: f32 = (0..10)
+            .map(|j| (0..200).map(|i| dense.get(i, j).min(1.0)).sum::<f32>())
+            .sum();
+        let tail: f32 = (500..510)
+            .map(|j| (0..200).map(|i| dense.get(i, j).min(1.0)).sum::<f32>())
+            .sum();
+        assert!(head > 4.0 * tail, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn blobs_are_separable() {
+        let (data, labels) = blobs(60, 8, 3, 0.3, 2);
+        // Same-label rows are close; cross-label rows are far.
+        let dist = |a: usize, b: usize| -> f32 {
+            (0..8)
+                .map(|j| (data.get(a, j) - data.get(b, j)).powi(2))
+                .sum::<f32>()
+                .sqrt()
+        };
+        assert_eq!(labels[0], labels[3]);
+        assert_ne!(labels[0], labels[1]);
+        assert!(dist(0, 3) < dist(0, 1), "intra < inter");
+    }
+
+    #[test]
+    fn phantom_workloads_have_paper_geometry() {
+        let sim = Runtime::sim(SimConfig::with_workers(4));
+        let a = TransposeStrong::dsarray(&sim).unwrap();
+        assert_eq!(a.grid(), (1536, 1));
+        let d = TransposeStrong::dataset(&sim).unwrap();
+        assert_eq!(d.n_subsets(), 1536);
+        let n = netflix_phantom_dsarray(&sim, 192).unwrap();
+        assert_eq!(n.grid(), (192, 192));
+        assert!(n.is_sparse());
+        let k = KMeansStrong::dsarray(&sim).unwrap();
+        assert_eq!(k.grid(), (1536, 1));
+        // No tasks were submitted for any of this.
+        assert_eq!(sim.metrics().total_tasks(), 0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Layered configuration: built-in defaults ← TOML file ← CLI overrides.
+//!
+//! The config governs the simulator's cluster cost model and the benchmark
+//! sweeps; `configs/marenostrum.toml` holds the calibration used for the
+//! paper-figure reproductions.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::tasking::SimConfig;
+use crate::util::cli::Args;
+use crate::util::toml;
+
+/// Top-level runtime configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Worker threads for real (local) execution.
+    pub local_workers: usize,
+    /// Simulated core counts for scaling sweeps.
+    pub sim_cores: Vec<usize>,
+    /// Cost model template (worker count is substituted per sweep point).
+    pub sim: SimConfig,
+    /// Directory with compiled HLO artifacts.
+    pub artifacts_dir: String,
+    /// RNG seed for workload generation.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            local_workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            sim_cores: vec![48, 96, 192, 384, 768],
+            sim: SimConfig::marenostrum(48),
+            artifacts_dir: "artifacts".to_string(),
+            seed: 42,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML file over the defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let map = toml::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cfg = Config::default();
+
+        if let Some(v) = map.get("local_workers").and_then(|v| v.as_i64()) {
+            cfg.local_workers = v as usize;
+        }
+        if let Some(v) = map.get("seed").and_then(|v| v.as_i64()) {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = map.get("artifacts_dir").and_then(|v| v.as_str()) {
+            cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(arr) = map.get("sim_cores").and_then(|v| v.as_array()) {
+            cfg.sim_cores = arr
+                .iter()
+                .filter_map(|v| v.as_i64())
+                .map(|v| v as usize)
+                .collect();
+        }
+        let s = &mut cfg.sim;
+        for (key, field) in [
+            ("sim.sched_task_s", &mut s.sched_task_s as *mut f64),
+            ("sim.core_scale", &mut s.core_scale as *mut f64),
+            ("sim.sched_edge_s", &mut s.sched_edge_s as *mut f64),
+            ("sim.task_overhead_s", &mut s.task_overhead_s as *mut f64),
+            ("sim.per_input_s", &mut s.per_input_s as *mut f64),
+            ("sim.transfer_latency_s", &mut s.transfer_latency_s as *mut f64),
+            ("sim.bandwidth_bps", &mut s.bandwidth_bps as *mut f64),
+            ("sim.flops_per_s", &mut s.flops_per_s as *mut f64),
+            ("sim.mem_bps", &mut s.mem_bps as *mut f64),
+        ] {
+            if let Some(v) = map.get(key).and_then(|v| v.as_f64()) {
+                // Safety: `field` points into `cfg.sim`, alive for the loop.
+                unsafe { *field = v };
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Apply CLI overrides on top (flags mirror the TOML keys).
+    pub fn apply_args(&mut self, args: &Args) {
+        if let Some(v) = args.get("workers") {
+            if let Ok(n) = v.parse() {
+                self.local_workers = n;
+            }
+        }
+        if let Some(v) = args.get("seed") {
+            if let Ok(n) = v.parse() {
+                self.seed = n;
+            }
+        }
+        if let Some(v) = args.get("artifacts-dir") {
+            self.artifacts_dir = v.to_string();
+        }
+        if args.get("cores").is_some() {
+            self.sim_cores = args.get_usize_list("cores", &self.sim_cores);
+        }
+        self.sim.sched_task_s = args.get_f64("sched-task-s", self.sim.sched_task_s);
+        self.sim.per_input_s = args.get_f64("per-input-s", self.sim.per_input_s);
+        self.sim.flops_per_s = args.get_f64("flops-per-s", self.sim.flops_per_s);
+    }
+
+    /// Cost model at a specific simulated core count.
+    pub fn sim_at(&self, cores: usize) -> SimConfig {
+        let mut s = self.sim.clone();
+        s.workers = cores;
+        s
+    }
+
+    /// Defaults + optional `--config <file>` + CLI overrides.
+    pub fn resolve(args: &Args) -> Result<Self> {
+        let mut cfg = match args.get("config") {
+            Some(path) => Config::from_file(Path::new(path))?,
+            None => Config::default(),
+        };
+        cfg.apply_args(args);
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = Config::default();
+        assert!(c.local_workers >= 1);
+        assert!(!c.sim_cores.is_empty());
+        assert!(c.sim.sched_task_s > 0.0);
+    }
+
+    #[test]
+    fn file_overrides_and_cli_overrides() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("rustdslib_cfg_{}.toml", std::process::id()));
+        std::fs::write(
+            &p,
+            "seed = 7\nsim_cores = [8, 16]\n[sim]\nsched_task_s = 0.001\nflops_per_s = 1e9\n",
+        )
+        .unwrap();
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.sim_cores, vec![8, 16]);
+        assert_eq!(cfg.sim.sched_task_s, 0.001);
+        assert_eq!(cfg.sim.flops_per_s, 1e9);
+
+        let args = Args::parse(
+            ["--seed", "9", "--cores", "4", "--sched-task-s", "0.002"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut cfg2 = cfg.clone();
+        cfg2.apply_args(&args);
+        assert_eq!(cfg2.seed, 9);
+        assert_eq!(cfg2.sim_cores, vec![4]);
+        assert_eq!(cfg2.sim.sched_task_s, 0.002);
+
+        let sim16 = cfg2.sim_at(16);
+        assert_eq!(sim16.workers, 16);
+        std::fs::remove_file(&p).ok();
+    }
+}

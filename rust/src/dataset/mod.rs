@@ -1,0 +1,289 @@
+//! The legacy `Dataset`/`Subset` structure (paper §3.2.1) — the baseline
+//! every experiment compares against.
+//!
+//! A Dataset is a collection of samples and labels divided in Subsets; each
+//! Subset stores a row panel of samples (N×M) and optionally labels (N×1).
+//! Partitioning is along the sample axis **only** — the root cause of the
+//! limitations §4.1 catalogues: no cheap column access, `N²+N`-task
+//! transpose, pre-collections shuffle, labels welded to samples.
+
+pub mod ops;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::storage::{Block, BlockMeta, DenseMatrix};
+use crate::tasking::{CostHint, Future, Runtime};
+use crate::util::rng::Xoshiro256;
+
+/// One partition: a block of samples and (optionally) a block of labels.
+#[derive(Clone, Copy, Debug)]
+pub struct Subset {
+    pub samples: Future,
+    pub labels: Option<Future>,
+}
+
+impl Subset {
+    pub fn n_samples(&self) -> usize {
+        self.samples.meta.rows
+    }
+}
+
+/// The paper's baseline distributed structure (Fig 2).
+#[derive(Clone)]
+pub struct Dataset {
+    pub(crate) rt: Runtime,
+    pub(crate) subsets: Vec<Subset>,
+    pub(crate) n_features: usize,
+    pub(crate) sparse: bool,
+}
+
+impl Dataset {
+    pub fn n_subsets(&self) -> usize {
+        self.subsets.len()
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.subsets.iter().map(|s| s.n_samples()).sum()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn has_labels(&self) -> bool {
+        self.subsets.iter().all(|s| s.labels.is_some())
+    }
+
+    pub fn subset(&self, i: usize) -> &Subset {
+        &self.subsets[i]
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Subset size of partition `i` (the paper's `subset_size`).
+    pub fn subset_size(&self, i: usize) -> usize {
+        self.subsets[i].n_samples()
+    }
+
+    /// Append another Subset (the paper's `append`).
+    pub fn append(&mut self, s: Subset) -> Result<()> {
+        if s.samples.meta.cols != self.n_features {
+            bail!(
+                "appended subset has {} features, dataset has {}",
+                s.samples.meta.cols,
+                self.n_features
+            );
+        }
+        self.subsets.push(s);
+        Ok(())
+    }
+
+    /// Build from an in-memory matrix (+ optional labels), split into
+    /// `n_subsets` row panels as evenly as possible.
+    pub fn from_matrix(
+        rt: &Runtime,
+        samples: &DenseMatrix,
+        labels: Option<&DenseMatrix>,
+        n_subsets: usize,
+    ) -> Result<Self> {
+        if n_subsets == 0 || n_subsets > samples.rows() {
+            bail!(
+                "n_subsets {n_subsets} invalid for {} samples",
+                samples.rows()
+            );
+        }
+        if let Some(l) = labels {
+            if l.rows() != samples.rows() || l.cols() != 1 {
+                bail!("labels must be {}x1", samples.rows());
+            }
+        }
+        let mut subsets = Vec::with_capacity(n_subsets);
+        let base = samples.rows() / n_subsets;
+        let extra = samples.rows() % n_subsets;
+        let mut r0 = 0;
+        for i in 0..n_subsets {
+            let r = base + usize::from(i < extra);
+            let s = rt.put_block(Block::Dense(samples.slice(r0, 0, r, samples.cols())?));
+            let l = match labels {
+                Some(l) => Some(rt.put_block(Block::Dense(l.slice(r0, 0, r, 1)?))),
+                None => None,
+            };
+            subsets.push(Subset {
+                samples: s,
+                labels: l,
+            });
+            r0 += r;
+        }
+        Ok(Self {
+            rt: rt.clone(),
+            subsets,
+            n_features: samples.cols(),
+            sparse: false,
+        })
+    }
+
+    /// Random dataset: one creation task per Subset (mirrors dislib's
+    /// parallel loaders, works in sim mode through phantom blocks).
+    pub fn random(
+        rt: &Runtime,
+        n_samples: usize,
+        n_features: usize,
+        n_subsets: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        if n_subsets == 0 || n_subsets > n_samples {
+            bail!("n_subsets {n_subsets} invalid for {n_samples} samples");
+        }
+        let base = n_samples / n_subsets;
+        let extra = n_samples % n_subsets;
+        let mut subsets = Vec::with_capacity(n_subsets);
+        for i in 0..n_subsets {
+            let r = base + usize::from(i < extra);
+            let meta = BlockMeta::dense(r, n_features);
+            let sseed = seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let out = rt.submit(
+                "dataset.create.random",
+                &[],
+                vec![meta],
+                CostHint::default().with_bytes(meta.bytes() as f64),
+                Arc::new(move |_| {
+                    let mut rng = Xoshiro256::seed_from_u64(sseed);
+                    let data: Vec<f32> = (0..r * n_features).map(|_| rng.next_f32()).collect();
+                    Ok(vec![Block::Dense(DenseMatrix::from_vec(r, n_features, data)?)])
+                }),
+            );
+            subsets.push(Subset {
+                samples: out[0],
+                labels: None,
+            });
+        }
+        Ok(Self {
+            rt: rt.clone(),
+            subsets,
+            n_features,
+            sparse: false,
+        })
+    }
+
+    /// Metadata-only Dataset for simulation (pre-loaded phantom Subsets,
+    /// no creation tasks) — see `dsarray::creation::phantom`.
+    pub fn phantom(
+        rt: &Runtime,
+        n_samples: usize,
+        n_features: usize,
+        n_subsets: usize,
+        density: Option<f64>,
+    ) -> Result<Self> {
+        if n_subsets == 0 || n_subsets > n_samples {
+            bail!("n_subsets {n_subsets} invalid for {n_samples} samples");
+        }
+        let base = n_samples / n_subsets;
+        let extra = n_samples % n_subsets;
+        let mut subsets = Vec::with_capacity(n_subsets);
+        for i in 0..n_subsets {
+            let r = base + usize::from(i < extra);
+            let meta = match density {
+                Some(d) => {
+                    BlockMeta::sparse(r, n_features, ((r * n_features) as f64 * d).round() as usize)
+                }
+                None => BlockMeta::dense(r, n_features),
+            };
+            subsets.push(Subset {
+                samples: rt.put_block(Block::Phantom(meta)),
+                labels: None,
+            });
+        }
+        Ok(Self {
+            rt: rt.clone(),
+            subsets,
+            n_features,
+            sparse: density.is_some(),
+        })
+    }
+
+    /// Synchronize and stack all samples (the paper's `.samples` accessor —
+    /// a full synchronization point).
+    pub fn collect_samples(&self) -> Result<DenseMatrix> {
+        let mut parts = Vec::with_capacity(self.subsets.len());
+        for s in &self.subsets {
+            parts.push(self.rt.wait(s.samples)?.to_dense()?);
+        }
+        let refs: Vec<&DenseMatrix> = parts.iter().collect();
+        DenseMatrix::vstack(&refs)
+    }
+
+    /// Synchronize and stack all labels.
+    pub fn collect_labels(&self) -> Result<DenseMatrix> {
+        let mut parts = Vec::with_capacity(self.subsets.len());
+        for s in &self.subsets {
+            let l = s.labels.ok_or_else(|| anyhow::anyhow!("dataset has no labels"))?;
+            parts.push(self.rt.wait(l)?.to_dense()?);
+        }
+        let refs: Vec<&DenseMatrix> = parts.iter().collect();
+        DenseMatrix::vstack(&refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_matrix_round_trip_with_labels() {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(10, 4, |i, j| (i * 4 + j) as f32);
+        let l = DenseMatrix::from_fn(10, 1, |i, _| (i % 3) as f32);
+        let ds = Dataset::from_matrix(&rt, &m, Some(&l), 3).unwrap();
+        assert_eq!(ds.n_subsets(), 3);
+        assert_eq!(ds.n_samples(), 10);
+        // 10 = 4 + 3 + 3.
+        assert_eq!(ds.subset_size(0), 4);
+        assert_eq!(ds.subset_size(2), 3);
+        assert!(ds.has_labels());
+        assert_eq!(ds.collect_samples().unwrap(), m);
+        assert_eq!(ds.collect_labels().unwrap(), l);
+    }
+
+    #[test]
+    fn append_checks_features() {
+        let rt = Runtime::local(1);
+        let m = DenseMatrix::zeros(4, 3);
+        let mut ds = Dataset::from_matrix(&rt, &m, None, 2).unwrap();
+        let good = rt.put_block(Block::Dense(DenseMatrix::zeros(2, 3)));
+        ds.append(Subset {
+            samples: good,
+            labels: None,
+        })
+        .unwrap();
+        assert_eq!(ds.n_subsets(), 3);
+        let bad = rt.put_block(Block::Dense(DenseMatrix::zeros(2, 4)));
+        assert!(ds
+            .append(Subset {
+                samples: bad,
+                labels: None
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn random_one_task_per_subset() {
+        let rt = Runtime::local(2);
+        let ds = Dataset::random(&rt, 100, 8, 5, 1).unwrap();
+        assert_eq!(rt.metrics().tasks_for("dataset.create.random"), 5);
+        let m = ds.collect_samples().unwrap();
+        assert_eq!((m.rows(), m.cols()), (100, 8));
+        assert!(m.data().iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn collect_labels_fails_without_labels() {
+        let rt = Runtime::local(1);
+        let ds = Dataset::random(&rt, 10, 2, 2, 0).unwrap();
+        assert!(!ds.has_labels());
+        assert!(ds.collect_labels().is_err());
+    }
+}

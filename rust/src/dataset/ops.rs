@@ -1,0 +1,307 @@
+//! Dataset operations with their paper-documented (inefficient) task
+//! topologies:
+//!
+//! * **transpose** (§5.2): `N²` split tasks + `N` merge tasks. Each split
+//!   task extracts and transposes one column chunk of one Subset; each
+//!   merge hstacks the N chunks of a new Subset. The complexity "is caused
+//!   by the need of maintaining data divided in Subsets".
+//! * **shuffle** (§5.4): pseudo-shuffle with `N·min(N,S) + N` tasks — the
+//!   pre-collections topology (bounded task arity forces per-pair splits).
+//! * **max/min features** (§3.2.1): per-Subset partials + a reduction.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::storage::{Block, BlockMeta, DenseMatrix};
+use crate::tasking::{CostHint, Future};
+use crate::util::rng::Xoshiro256;
+
+use super::{Dataset, Subset};
+
+impl Dataset {
+    /// Transpose the samples (labels are dropped — the Dataset API cannot
+    /// express what transposed labels mean, §4.1). `N² + N` tasks.
+    pub fn transpose(&self) -> Result<Dataset> {
+        let n = self.subsets.len();
+        let m = self.n_features;
+        if m < n {
+            bail!("transpose needs at least {n} features to split into {n} chunks");
+        }
+        // Column-chunk boundaries of the transposed Subsets.
+        let base = m / n;
+        let extra = m % n;
+        let mut chunk_cols = Vec::with_capacity(n);
+        let mut c0 = 0;
+        for j in 0..n {
+            let c = base + usize::from(j < extra);
+            chunk_cols.push((c0, c));
+            c0 += c;
+        }
+
+        // Phase 1: N² split tasks. part[j][i] = transposed chunk j of
+        // subset i: (c_j x rows_i).
+        let mut parts: Vec<Vec<Future>> = vec![Vec::with_capacity(n); n];
+        for (_i, s) in self.subsets.iter().enumerate() {
+            let rows = s.n_samples();
+            for (j, &(c0, c)) in chunk_cols.iter().enumerate() {
+                let meta = BlockMeta::dense(c, rows);
+                let out = self.rt.submit(
+                    "dataset.transpose.split",
+                    &[s.samples],
+                    vec![meta],
+                    CostHint::default().with_bytes(2.0 * meta.bytes() as f64),
+                    Arc::new(move |ins: &[Arc<Block>]| {
+                        let d = ins[0].to_dense()?;
+                        Ok(vec![Block::Dense(d.slice(0, c0, d.rows(), c)?.transpose())])
+                    }),
+                );
+                parts[j].push(out[0]);
+            }
+        }
+
+        // Phase 2: N merge tasks (hstack row-aligned chunks).
+        let total_rows = self.n_samples();
+        let mut subsets = Vec::with_capacity(n);
+        for (j, &(_, c)) in chunk_cols.iter().enumerate() {
+            let futs = parts[j].clone();
+            let meta = BlockMeta::dense(c, total_rows);
+            let out = self.rt.submit(
+                "dataset.transpose.merge",
+                &futs,
+                vec![meta],
+                CostHint::default().with_bytes(2.0 * meta.bytes() as f64),
+                crate::tasking::ops::hstack_op(),
+            );
+            subsets.push(Subset {
+                samples: out[0],
+                labels: None,
+            });
+        }
+        Ok(Dataset {
+            rt: self.rt.clone(),
+            subsets,
+            n_features: total_rows,
+            sparse: self.sparse,
+        })
+    }
+
+    /// Pseudo-shuffle (paper §5.4): each Subset is split into
+    /// `min(N, S)` random parts (one task per part — bounded arity, no
+    /// collection outputs), and each new Subset merges the parts routed to
+    /// it. Total tasks: `N·min(N,S) + N`.
+    pub fn shuffle(&self, seed: u64) -> Result<Dataset> {
+        let n = self.subsets.len();
+        if n < 2 {
+            bail!("shuffle needs at least 2 subsets");
+        }
+        let m = self.n_features;
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+
+        // Master-side routing: subset i emits k_i = min(N, S_i) parts.
+        // Destinations go round-robin over the global part sequence so every
+        // new Subset receives at least one part (the paper's "in a way that
+        // the final shuffled N Subsets are also of size S"); randomness
+        // lives in the row-to-part assignment below.
+        let mut incoming: Vec<Vec<(Future, usize)>> = vec![Vec::new(); n]; // dest -> (part, rows)
+        let mut part_counter = 0usize;
+        for (i, s) in self.subsets.iter().enumerate() {
+            let rows = s.n_samples();
+            let k = n.min(rows);
+            let dests: Vec<usize> = (0..k).map(|g| (part_counter + g) % n).collect();
+            part_counter += k;
+            let _ = i;
+            // Random local row assignment to the k parts.
+            let mut local: Vec<usize> = (0..rows).collect();
+            rng.shuffle(&mut local);
+            let base = rows / k;
+            let extra = rows % k;
+            let mut off = 0;
+            for (g, &d) in dests.iter().enumerate() {
+                let take = base + usize::from(g < extra);
+                let rows_g: Vec<usize> = local[off..off + take].to_vec();
+                off += take;
+                let meta = BlockMeta::dense(rows_g.len(), m);
+                let out = self.rt.submit(
+                    "dataset.shuffle.split",
+                    &[s.samples],
+                    vec![meta],
+                    CostHint::default().with_bytes(2.0 * meta.bytes() as f64),
+                    Arc::new(move |ins: &[Arc<Block>]| {
+                        let d = ins[0].to_dense()?;
+                        let mut part = DenseMatrix::zeros(rows_g.len(), d.cols());
+                        for (t, &r) in rows_g.iter().enumerate() {
+                            part.row_mut(t).copy_from_slice(d.row(r));
+                        }
+                        Ok(vec![Block::Dense(part)])
+                    }),
+                );
+                incoming[d].push((out[0], take));
+            }
+        }
+
+        // Merge phase: one task per new Subset.
+        let mut subsets = Vec::with_capacity(n);
+        for inc in incoming {
+            let futs: Vec<Future> = inc.iter().map(|&(f, _)| f).collect();
+            let rows: usize = inc.iter().map(|&(_, r)| r).sum();
+            if futs.is_empty() {
+                bail!("shuffle produced an empty subset (degenerate sizes)");
+            }
+            let meta = BlockMeta::dense(rows, m);
+            let out = self.rt.submit(
+                "dataset.shuffle.merge",
+                &futs,
+                vec![meta],
+                CostHint::default().with_bytes(2.0 * meta.bytes() as f64),
+                crate::tasking::ops::vstack_op(),
+            );
+            subsets.push(Subset {
+                samples: out[0],
+                labels: None,
+            });
+        }
+        Ok(Dataset {
+            rt: self.rt.clone(),
+            subsets,
+            n_features: m,
+            sparse: self.sparse,
+        })
+    }
+
+    /// Per-feature maximum (paper's `max_features`): one partial task per
+    /// Subset + one reduction task.
+    pub fn max_features(&self) -> Result<Future> {
+        self.feature_fold("dataset.max_features", f32::NEG_INFINITY, |a, b| a.max(b))
+    }
+
+    /// Per-feature minimum (`min_features`).
+    pub fn min_features(&self) -> Result<Future> {
+        self.feature_fold("dataset.min_features", f32::INFINITY, |a, b| a.min(b))
+    }
+
+    fn feature_fold(
+        &self,
+        name: &'static str,
+        init: f32,
+        f: impl Fn(f32, f32) -> f32 + Send + Sync + Clone + 'static,
+    ) -> Result<Future> {
+        let m = self.n_features;
+        let mut partials = Vec::with_capacity(self.subsets.len());
+        for s in &self.subsets {
+            let meta = BlockMeta::dense(1, m);
+            let f = f.clone();
+            let out = self.rt.submit(
+                name,
+                &[s.samples],
+                vec![meta],
+                CostHint::flops((s.n_samples() * m) as f64)
+                    .with_bytes(s.samples.meta.bytes() as f64),
+                Arc::new(move |ins: &[Arc<Block>]| {
+                    let d = ins[0].to_dense()?;
+                    Ok(vec![Block::Dense(d.fold_axis(0, init, &f))])
+                }),
+            );
+            partials.push(out[0]);
+        }
+        let f2 = f;
+        let out = self.rt.submit(
+            "dataset.feature_reduce",
+            &partials,
+            vec![BlockMeta::dense(1, m)],
+            CostHint::flops((self.subsets.len() * m) as f64),
+            Arc::new(move |ins: &[Arc<Block>]| {
+                let mut acc = DenseMatrix::full(1, m, init);
+                for b in ins {
+                    let d = b.to_dense()?;
+                    for (a, &v) in acc.data_mut().iter_mut().zip(d.data()) {
+                        *a = f2(*a, v);
+                    }
+                }
+                Ok(vec![Block::Dense(acc)])
+            }),
+        );
+        Ok(out[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasking::Runtime;
+
+    fn setup(rows: usize, cols: usize, n: usize) -> (Runtime, DenseMatrix, Dataset) {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(rows, cols, |i, j| (i * cols + j) as f32);
+        let ds = Dataset::from_matrix(&rt, &m, None, n).unwrap();
+        (rt, m, ds)
+    }
+
+    #[test]
+    fn transpose_matches_reference() {
+        let (_rt, m, ds) = setup(8, 10, 4);
+        let t = ds.transpose().unwrap();
+        assert_eq!(t.n_samples(), 10);
+        assert_eq!(t.n_features(), 8);
+        assert_eq!(t.collect_samples().unwrap(), m.transpose());
+    }
+
+    #[test]
+    fn transpose_task_count_is_n_squared_plus_n() {
+        let (rt, _m, ds) = setup(12, 12, 4);
+        let before = rt.metrics();
+        ds.transpose().unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.tasks_for("dataset.transpose.split"), 16); // N²
+        assert_eq!(d.tasks_for("dataset.transpose.merge"), 4); // N
+        assert_eq!(d.total_tasks(), 20);
+    }
+
+    #[test]
+    fn shuffle_preserves_row_multiset_and_task_count() {
+        let (rt, m, ds) = setup(20, 3, 4); // S=5 per subset, N=4, min=4
+        let before = rt.metrics();
+        let sh = ds.shuffle(11).unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.tasks_for("dataset.shuffle.split"), 16); // N*min(N,S)
+        assert_eq!(d.tasks_for("dataset.shuffle.merge"), 4); // N
+        let got = sh.collect_samples().unwrap();
+        let mut a: Vec<Vec<u32>> = (0..got.rows())
+            .map(|i| got.row(i).iter().map(|x| x.to_bits()).collect())
+            .collect();
+        let mut b: Vec<Vec<u32>> = (0..m.rows())
+            .map(|i| m.row(i).iter().map(|x| x.to_bits()).collect())
+            .collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn shuffle_small_subsets_uses_min_n_s() {
+        // N=5 subsets of S=2 rows: min(N,S)=2 parts each -> 10 split tasks.
+        let (rt, _m, ds) = setup(10, 2, 5);
+        let before = rt.metrics();
+        ds.shuffle(3).unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.tasks_for("dataset.shuffle.split"), 10);
+        assert_eq!(d.tasks_for("dataset.shuffle.merge"), 5);
+    }
+
+    #[test]
+    fn min_max_features() {
+        let (rt, m, ds) = setup(9, 4, 3);
+        let mx = ds.max_features().unwrap();
+        let mx = rt.wait(mx).unwrap().to_dense().unwrap();
+        assert_eq!(mx.data(), m.fold_axis(0, f32::NEG_INFINITY, f32::max).data());
+        let mn = ds.min_features().unwrap();
+        let mn = rt.wait(mn).unwrap().to_dense().unwrap();
+        assert_eq!(mn.data(), m.fold_axis(0, f32::INFINITY, f32::min).data());
+    }
+
+    #[test]
+    fn transpose_rejects_too_few_features() {
+        let (_rt, _m, ds) = setup(8, 3, 4);
+        assert!(ds.transpose().is_err());
+    }
+}

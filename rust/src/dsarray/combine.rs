@@ -1,0 +1,227 @@
+//! Combining ds-arrays: vertical/horizontal concatenation and saving to
+//! disk — the remaining data-management surface of the NumPy-like API.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::storage::{Block, DenseMatrix};
+use crate::tasking::Future;
+
+use super::DsArray;
+
+/// Stack ds-arrays vertically (same cols + block shape). Block grids are
+/// concatenated directly when every non-final array's rows divide the
+/// block height; otherwise the data is re-blocked through `rechunk`.
+pub fn vstack(parts: &[&DsArray]) -> Result<DsArray> {
+    if parts.is_empty() {
+        bail!("vstack of zero arrays");
+    }
+    let first = parts[0];
+    let bs = first.block_shape;
+    for p in parts {
+        if p.cols() != first.cols() {
+            bail!("vstack col mismatch: {} vs {}", p.cols(), first.cols());
+        }
+        if p.block_shape != bs {
+            bail!("vstack block-shape mismatch (rechunk first)");
+        }
+    }
+    let rows: usize = parts.iter().map(|p| p.rows()).sum();
+    // Fast path: block grids concatenate exactly.
+    let aligned = parts[..parts.len() - 1]
+        .iter()
+        .all(|p| p.rows() % bs.0 == 0);
+    if aligned {
+        let mut blocks: Vec<Future> = Vec::new();
+        for p in parts {
+            blocks.extend(p.blocks.iter().copied());
+        }
+        return DsArray::from_parts(
+            first.rt.clone(),
+            (rows, first.cols()),
+            bs,
+            blocks,
+            parts.iter().all(|p| p.sparse),
+        );
+    }
+    // Misaligned: go through a gather-based re-block of the concatenation.
+    // (One task per output block; same pattern as rechunk.)
+    let stacked = concat_rows_unaligned(parts, rows)?;
+    Ok(stacked)
+}
+
+fn concat_rows_unaligned(parts: &[&DsArray], rows: usize) -> Result<DsArray> {
+    let first = parts[0];
+    let bs = first.block_shape;
+    let cols = first.cols();
+    let rt = first.rt.clone();
+    // Row offset of each part.
+    let mut offsets = Vec::with_capacity(parts.len());
+    let mut acc = 0;
+    for p in parts {
+        offsets.push(acc);
+        acc += p.rows();
+    }
+    let out_grid0 = DsArray::grid_dim(rows, bs.0);
+    let mut blocks = Vec::new();
+    for oi in 0..out_grid0 {
+        let or0 = oi * bs.0;
+        let orn = (rows - or0).min(bs.0);
+        for oj in 0..DsArray::grid_dim(cols, bs.1) {
+            let oc0 = oj * bs.1;
+            let ocn = (cols - oc0).min(bs.1);
+            // Collect contributing (part, block, placement) tuples.
+            let mut futs = Vec::new();
+            let mut places: Vec<(usize, usize, usize, usize, usize)> = Vec::new();
+            for (pi, p) in parts.iter().enumerate() {
+                let p0 = offsets[pi];
+                let p1 = p0 + p.rows();
+                let lo = or0.max(p0);
+                let hi = (or0 + orn).min(p1);
+                if lo >= hi {
+                    continue;
+                }
+                // Blocks of p overlapping local rows [lo-p0, hi-p0).
+                let bi0 = (lo - p0) / p.block_shape.0;
+                let bi1 = (hi - 1 - p0) / p.block_shape.0;
+                for bi in bi0..=bi1 {
+                    let br0 = p0 + bi * p.block_shape.0;
+                    let brn = p.block_rows_at(bi);
+                    let s_lo = lo.max(br0);
+                    let s_hi = hi.min(br0 + brn);
+                    futs.push(p.block(bi, oj));
+                    // (src row offset in block, rows, dst row offset, …)
+                    places.push((s_lo - br0, s_hi - s_lo, s_lo - or0, 0, ocn));
+                }
+            }
+            let meta = crate::storage::BlockMeta::dense(orn, ocn);
+            let places_c = places.clone();
+            let out = rt.submit(
+                "dsarray.vstack.gather",
+                &futs,
+                vec![meta],
+                crate::tasking::CostHint::default().with_bytes(2.0 * meta.bytes() as f64),
+                Arc::new(move |ins: &[Arc<Block>]| {
+                    let mut out = DenseMatrix::zeros(orn, ocn);
+                    for (b, &(sr, nr, dr, sc, nc)) in ins.iter().zip(&places_c) {
+                        let d = b.to_dense()?;
+                        let part = d.slice(sr, sc, nr, nc)?;
+                        out.paste(dr, 0, &part)?;
+                    }
+                    Ok(vec![Block::Dense(out)])
+                }),
+            );
+            blocks.push(out[0]);
+        }
+    }
+    DsArray::from_parts(rt, (rows, cols), bs, blocks, false)
+}
+
+/// Stack ds-arrays horizontally (same rows + block shape, aligned widths).
+pub fn hstack(parts: &[&DsArray]) -> Result<DsArray> {
+    if parts.is_empty() {
+        bail!("hstack of zero arrays");
+    }
+    let first = parts[0];
+    let bs = first.block_shape;
+    for p in parts {
+        if p.rows() != first.rows() {
+            bail!("hstack row mismatch: {} vs {}", p.rows(), first.rows());
+        }
+        if p.block_shape != bs {
+            bail!("hstack block-shape mismatch (rechunk first)");
+        }
+    }
+    for p in &parts[..parts.len() - 1] {
+        if p.cols() % bs.1 != 0 {
+            bail!("hstack needs non-final arrays' cols divisible by the block width");
+        }
+    }
+    let cols: usize = parts.iter().map(|p| p.cols()).sum();
+    let gr = first.grid.0;
+    let mut blocks = Vec::new();
+    for i in 0..gr {
+        for p in parts {
+            blocks.extend(p.block_row(i));
+        }
+    }
+    DsArray::from_parts(
+        first.rt.clone(),
+        (first.rows(), cols),
+        bs,
+        blocks,
+        parts.iter().all(|p| p.sparse),
+    )
+}
+
+impl DsArray {
+    /// Synchronize and write the array as CSV (collect-based; local mode).
+    pub fn save_csv(&self, path: &Path, delimiter: char) -> Result<()> {
+        let m = self.collect()?;
+        crate::storage::io::write_csv(path, &m, delimiter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsarray::creation;
+    use crate::tasking::Runtime;
+
+    #[test]
+    fn vstack_aligned_fast_path() {
+        let rt = Runtime::local(2);
+        let a = DenseMatrix::from_fn(6, 4, |i, j| (i * 4 + j) as f32);
+        let b = DenseMatrix::from_fn(4, 4, |i, j| 100.0 + (i * 4 + j) as f32);
+        let da = creation::from_matrix(&rt, &a, (2, 2)).unwrap();
+        let db = creation::from_matrix(&rt, &b, (2, 2)).unwrap();
+        let before = rt.metrics().total_tasks();
+        let v = vstack(&[&da, &db]).unwrap();
+        assert_eq!(rt.metrics().total_tasks(), before, "fast path: no tasks");
+        assert_eq!(v.shape(), (10, 4));
+        assert_eq!(v.collect().unwrap(), DenseMatrix::vstack(&[&a, &b]).unwrap());
+    }
+
+    #[test]
+    fn vstack_unaligned_reblocks() {
+        let rt = Runtime::local(2);
+        let a = DenseMatrix::from_fn(5, 4, |i, j| (i * 4 + j) as f32);
+        let b = DenseMatrix::from_fn(4, 4, |i, j| 100.0 + (i * 4 + j) as f32);
+        let da = creation::from_matrix(&rt, &a, (2, 2)).unwrap(); // 5 % 2 != 0
+        let db = creation::from_matrix(&rt, &b, (2, 2)).unwrap();
+        let v = vstack(&[&da, &db]).unwrap();
+        assert_eq!(v.shape(), (9, 4));
+        assert_eq!(v.collect().unwrap(), DenseMatrix::vstack(&[&a, &b]).unwrap());
+    }
+
+    #[test]
+    fn hstack_and_mismatches() {
+        let rt = Runtime::local(2);
+        let a = DenseMatrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let b = DenseMatrix::from_fn(4, 2, |i, j| -((i * 2 + j) as f32));
+        let da = creation::from_matrix(&rt, &a, (2, 2)).unwrap();
+        let db = creation::from_matrix(&rt, &b, (2, 2)).unwrap();
+        let h = hstack(&[&da, &db]).unwrap();
+        assert_eq!(h.shape(), (4, 6));
+        assert_eq!(h.collect().unwrap(), DenseMatrix::hstack(&[&a, &b]).unwrap());
+        // Row mismatch.
+        let dc = creation::zeros(&rt, (6, 2), (2, 2)).unwrap();
+        assert!(hstack(&[&da, &dc]).is_err());
+        // Block mismatch for vstack.
+        let dd = creation::zeros(&rt, (4, 4), (4, 4)).unwrap();
+        assert!(vstack(&[&da, &dd]).is_err());
+    }
+
+    #[test]
+    fn save_csv_round_trip() {
+        let rt = Runtime::local(1);
+        let a = creation::random(&rt, (6, 3), (2, 2), 5).unwrap();
+        let p = std::env::temp_dir().join(format!("dsarr_save_{}.csv", std::process::id()));
+        a.save_csv(&p, ',').unwrap();
+        let back = creation::load_csv(&rt, &p, (6, 3), (2, 2), ',').unwrap();
+        assert_eq!(back.collect().unwrap(), a.collect().unwrap());
+        std::fs::remove_file(&p).ok();
+    }
+}

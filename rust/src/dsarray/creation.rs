@@ -1,0 +1,389 @@
+//! Array creation routines (paper §4.2.2).
+//!
+//! `random_array`-style routines spawn **one task per block**; file loaders
+//! spawn **one task per row of blocks** (files are parsed line by line).
+//! Block size is caller-chosen — the flexibility Datasets lack.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::storage::{Block, BlockMeta, CsrMatrix, DenseMatrix};
+use crate::tasking::{CostHint, Runtime};
+use crate::util::rng::Xoshiro256;
+
+use super::DsArray;
+
+fn validate(shape: (usize, usize), block_shape: (usize, usize)) -> Result<()> {
+    if shape.0 == 0 || shape.1 == 0 {
+        bail!("empty shape {shape:?}");
+    }
+    if block_shape.0 == 0 || block_shape.1 == 0 {
+        bail!("empty block shape {block_shape:?}");
+    }
+    Ok(())
+}
+
+/// Shared scaffold: one task per block, each generating its block.
+fn per_block(
+    rt: &Runtime,
+    shape: (usize, usize),
+    block_shape: (usize, usize),
+    name: &'static str,
+    sparse_nnz: Option<f64>, // density for sparse, None for dense
+    make: impl Fn(usize, usize, usize, usize) -> crate::tasking::TaskFn,
+) -> Result<DsArray> {
+    validate(shape, block_shape)?;
+    let grid = (
+        DsArray::grid_dim(shape.0, block_shape.0),
+        DsArray::grid_dim(shape.1, block_shape.1),
+    );
+    let mut blocks = Vec::with_capacity(grid.0 * grid.1);
+    for i in 0..grid.0 {
+        let r = (shape.0 - i * block_shape.0).min(block_shape.0);
+        for j in 0..grid.1 {
+            let c = (shape.1 - j * block_shape.1).min(block_shape.1);
+            let meta = match sparse_nnz {
+                Some(d) => BlockMeta::sparse(r, c, ((r * c) as f64 * d).round() as usize),
+                None => BlockMeta::dense(r, c),
+            };
+            let hint = CostHint::default().with_bytes(meta.bytes() as f64);
+            let out = rt.submit(name, &[], vec![meta], hint, make(i, j, r, c));
+            blocks.push(out[0]);
+        }
+    }
+    DsArray::from_parts(
+        rt.clone(),
+        shape,
+        block_shape,
+        blocks,
+        sparse_nnz.is_some(),
+    )
+}
+
+/// Uniform [0,1) random ds-array (dense). One task per block.
+pub fn random(
+    rt: &Runtime,
+    shape: (usize, usize),
+    block_shape: (usize, usize),
+    seed: u64,
+) -> Result<DsArray> {
+    per_block(rt, shape, block_shape, "dsarray.create.random", None, |i, j, r, c| {
+        let block_seed = seed ^ ((i as u64) << 32) ^ j as u64;
+        Arc::new(move |_| {
+            let mut rng = Xoshiro256::seed_from_u64(block_seed);
+            let data: Vec<f32> = (0..r * c).map(|_| rng.next_f32()).collect();
+            Ok(vec![Block::Dense(DenseMatrix::from_vec(r, c, data)?)])
+        })
+    })
+}
+
+/// Standard-normal random ds-array (dense). One task per block.
+pub fn random_normal(
+    rt: &Runtime,
+    shape: (usize, usize),
+    block_shape: (usize, usize),
+    seed: u64,
+) -> Result<DsArray> {
+    per_block(rt, shape, block_shape, "dsarray.create.randn", None, |i, j, r, c| {
+        let block_seed = seed ^ ((i as u64) << 32) ^ j as u64;
+        Arc::new(move |_| {
+            let mut rng = Xoshiro256::seed_from_u64(block_seed);
+            let data: Vec<f32> = (0..r * c).map(|_| rng.next_normal()).collect();
+            Ok(vec![Block::Dense(DenseMatrix::from_vec(r, c, data)?)])
+        })
+    })
+}
+
+/// Random sparse ds-array with the given density (CSR blocks).
+pub fn random_sparse(
+    rt: &Runtime,
+    shape: (usize, usize),
+    block_shape: (usize, usize),
+    density: f64,
+    seed: u64,
+) -> Result<DsArray> {
+    if !(0.0..=1.0).contains(&density) {
+        bail!("density {density} outside [0,1]");
+    }
+    per_block(
+        rt,
+        shape,
+        block_shape,
+        "dsarray.create.sparse",
+        Some(density),
+        |i, j, r, c| {
+            let block_seed = seed ^ ((i as u64) << 32) ^ j as u64;
+            Arc::new(move |_| {
+                let mut rng = Xoshiro256::seed_from_u64(block_seed);
+                let nnz = ((r * c) as f64 * density).round() as usize;
+                let trips: Vec<(usize, usize, f32)> = (0..nnz)
+                    .map(|_| {
+                        (
+                            rng.next_below(r as u64) as usize,
+                            rng.next_below(c as u64) as usize,
+                            rng.next_f32(),
+                        )
+                    })
+                    .collect();
+                Ok(vec![Block::Csr(CsrMatrix::from_triplets(r, c, &trips)?)])
+            })
+        },
+    )
+}
+
+pub fn full(
+    rt: &Runtime,
+    shape: (usize, usize),
+    block_shape: (usize, usize),
+    value: f32,
+) -> Result<DsArray> {
+    per_block(rt, shape, block_shape, "dsarray.create.full", None, |_, _, r, c| {
+        Arc::new(move |_| Ok(vec![Block::Dense(DenseMatrix::full(r, c, value))]))
+    })
+}
+
+pub fn zeros(rt: &Runtime, shape: (usize, usize), block_shape: (usize, usize)) -> Result<DsArray> {
+    full(rt, shape, block_shape, 0.0)
+}
+
+pub fn ones(rt: &Runtime, shape: (usize, usize), block_shape: (usize, usize)) -> Result<DsArray> {
+    full(rt, shape, block_shape, 1.0)
+}
+
+/// Identity matrix of size n (dense blocks).
+pub fn identity(rt: &Runtime, n: usize, block_shape: (usize, usize)) -> Result<DsArray> {
+    per_block(rt, (n, n), block_shape, "dsarray.create.identity", None, |i, j, r, c| {
+        let (r0, c0) = (i * block_shape.0, j * block_shape.1);
+        Arc::new(move |_| {
+            let m = DenseMatrix::from_fn(r, c, |bi, bj| {
+                if r0 + bi == c0 + bj {
+                    1.0
+                } else {
+                    0.0
+                }
+            });
+            Ok(vec![Block::Dense(m)])
+        })
+    })
+}
+
+/// Metadata-only ds-array for simulation: blocks are registered as
+/// pre-existing phantom data (no creation tasks), mirroring the paper's
+/// benchmarks, which measure operations on already-loaded data. `density`
+/// of `Some(d)` makes CSR-metadata blocks.
+pub fn phantom(
+    rt: &Runtime,
+    shape: (usize, usize),
+    block_shape: (usize, usize),
+    density: Option<f64>,
+) -> Result<DsArray> {
+    validate(shape, block_shape)?;
+    let grid = (
+        DsArray::grid_dim(shape.0, block_shape.0),
+        DsArray::grid_dim(shape.1, block_shape.1),
+    );
+    let mut blocks = Vec::with_capacity(grid.0 * grid.1);
+    for i in 0..grid.0 {
+        let r = (shape.0 - i * block_shape.0).min(block_shape.0);
+        for j in 0..grid.1 {
+            let c = (shape.1 - j * block_shape.1).min(block_shape.1);
+            let meta = match density {
+                Some(d) => BlockMeta::sparse(r, c, ((r * c) as f64 * d).round() as usize),
+                None => BlockMeta::dense(r, c),
+            };
+            blocks.push(rt.put_block(Block::Phantom(meta)));
+        }
+    }
+    DsArray::from_parts(rt.clone(), shape, block_shape, blocks, density.is_some())
+}
+
+/// Distribute an in-memory matrix (local mode; the test/example entry).
+pub fn from_matrix(rt: &Runtime, m: &DenseMatrix, block_shape: (usize, usize)) -> Result<DsArray> {
+    let shape = (m.rows(), m.cols());
+    validate(shape, block_shape)?;
+    let grid = (
+        DsArray::grid_dim(shape.0, block_shape.0),
+        DsArray::grid_dim(shape.1, block_shape.1),
+    );
+    let mut blocks = Vec::with_capacity(grid.0 * grid.1);
+    for i in 0..grid.0 {
+        let r0 = i * block_shape.0;
+        let r = (shape.0 - r0).min(block_shape.0);
+        for j in 0..grid.1 {
+            let c0 = j * block_shape.1;
+            let c = (shape.1 - c0).min(block_shape.1);
+            blocks.push(rt.put_block(Block::Dense(m.slice(r0, c0, r, c)?)));
+        }
+    }
+    DsArray::from_parts(rt.clone(), shape, block_shape, blocks, false)
+}
+
+/// Distribute an in-memory CSR matrix as a sparse ds-array.
+pub fn from_csr(rt: &Runtime, m: &CsrMatrix, block_shape: (usize, usize)) -> Result<DsArray> {
+    let shape = (m.rows(), m.cols());
+    validate(shape, block_shape)?;
+    let grid = (
+        DsArray::grid_dim(shape.0, block_shape.0),
+        DsArray::grid_dim(shape.1, block_shape.1),
+    );
+    let mut blocks = Vec::with_capacity(grid.0 * grid.1);
+    for i in 0..grid.0 {
+        let r0 = i * block_shape.0;
+        let r = (shape.0 - r0).min(block_shape.0);
+        for j in 0..grid.1 {
+            let c0 = j * block_shape.1;
+            let c = (shape.1 - c0).min(block_shape.1);
+            blocks.push(rt.put_block(Block::Csr(m.slice(r0, c0, r, c)?)));
+        }
+    }
+    DsArray::from_parts(rt.clone(), shape, block_shape, blocks, true)
+}
+
+/// Load a CSV file into a ds-array: one parse task per **row of blocks**
+/// (files are parsed line by line — paper §4.2.2). Shape must be known.
+pub fn load_csv(
+    rt: &Runtime,
+    path: &Path,
+    shape: (usize, usize),
+    block_shape: (usize, usize),
+    delimiter: char,
+) -> Result<DsArray> {
+    validate(shape, block_shape)?;
+    let grid = (
+        DsArray::grid_dim(shape.0, block_shape.0),
+        DsArray::grid_dim(shape.1, block_shape.1),
+    );
+    let mut blocks = Vec::with_capacity(grid.0 * grid.1);
+    for i in 0..grid.0 {
+        let r0 = i * block_shape.0;
+        let r = (shape.0 - r0).min(block_shape.0);
+        let metas: Vec<BlockMeta> = (0..grid.1)
+            .map(|j| {
+                let c = (shape.1 - j * block_shape.1).min(block_shape.1);
+                BlockMeta::dense(r, c)
+            })
+            .collect();
+        let row_bytes: f64 = metas.iter().map(|m| m.bytes() as f64).sum();
+        let path: PathBuf = path.to_path_buf();
+        let bs1 = block_shape.1;
+        let cols = shape.1;
+        let out = rt.submit(
+            "dsarray.create.load_csv_rowblock",
+            &[],
+            metas,
+            CostHint::default().with_bytes(row_bytes * 2.0), // read + parse
+            Arc::new(move |_| {
+                // Parse only this block-row's line range.
+                let full = crate::storage::io::read_csv(&path, delimiter)?;
+                if full.cols() != cols {
+                    bail!("csv has {} cols, expected {cols}", full.cols());
+                }
+                let panel = full.slice(r0, 0, r, cols)?;
+                let mut outs = Vec::new();
+                let mut c0 = 0;
+                while c0 < cols {
+                    let c = (cols - c0).min(bs1);
+                    outs.push(Block::Dense(panel.slice(0, c0, r, c)?));
+                    c0 += c;
+                }
+                Ok(outs)
+            }),
+        );
+        blocks.extend(out);
+    }
+    DsArray::from_parts(rt.clone(), shape, block_shape, blocks, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasking::SimConfig;
+
+    #[test]
+    fn random_is_deterministic_and_uniform() {
+        let rt = Runtime::local(2);
+        let a = random(&rt, (8, 8), (4, 4), 7).unwrap();
+        let b = random(&rt, (8, 8), (4, 4), 7).unwrap();
+        let c = random(&rt, (8, 8), (4, 4), 8).unwrap();
+        let (ma, mb, mc) = (a.collect().unwrap(), b.collect().unwrap(), c.collect().unwrap());
+        assert_eq!(ma, mb);
+        assert_ne!(ma, mc);
+        assert!(ma.data().iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn creation_task_counts_match_paper() {
+        // random: one task per block; load: one task per row of blocks.
+        let rt = Runtime::local(1);
+        random(&rt, (8, 8), (2, 2), 0).unwrap();
+        assert_eq!(rt.metrics().tasks_for("dsarray.create.random"), 16);
+    }
+
+    #[test]
+    fn identity_collects_to_eye() {
+        let rt = Runtime::local(2);
+        let a = identity(&rt, 5, (2, 2)).unwrap();
+        let m = a.collect().unwrap();
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(m.get(i, j), if i == j { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_round_trip() {
+        let rt = Runtime::local(2);
+        let csr = CsrMatrix::from_triplets(
+            6,
+            5,
+            &[(0, 0, 1.0), (2, 3, 2.0), (5, 4, 3.0), (3, 1, -1.0)],
+        )
+        .unwrap();
+        let a = from_csr(&rt, &csr, (2, 2)).unwrap();
+        assert!(a.is_sparse());
+        assert_eq!(a.collect_csr().unwrap().to_dense(), csr.to_dense());
+        assert_eq!(a.collect().unwrap(), csr.to_dense());
+    }
+
+    #[test]
+    fn random_sparse_density() {
+        let rt = Runtime::local(2);
+        let a = random_sparse(&rt, (40, 40), (10, 10), 0.1, 3).unwrap();
+        let csr = a.collect_csr().unwrap();
+        // Duplicate positions collapse, so nnz <= target.
+        assert!(csr.nnz() <= 160 && csr.nnz() > 100, "nnz {}", csr.nnz());
+    }
+
+    #[test]
+    fn load_csv_round_trip() {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(7, 5, |i, j| (i * 5 + j) as f32);
+        let mut p = std::env::temp_dir();
+        p.push(format!("rustdslib_dsarr_{}.csv", std::process::id()));
+        crate::storage::io::write_csv(&p, &m, ',').unwrap();
+        let a = load_csv(&rt, &p, (7, 5), (3, 2), ',').unwrap();
+        assert_eq!(a.collect().unwrap(), m);
+        assert_eq!(rt.metrics().tasks_for("dsarray.create.load_csv_rowblock"), 3);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn sim_mode_builds_same_graph_shape() {
+        let sim = Runtime::sim(SimConfig::with_workers(4));
+        let a = random(&sim, (100, 100), (10, 10), 0).unwrap();
+        assert_eq!(a.n_blocks(), 100);
+        assert_eq!(sim.metrics().tasks_for("dsarray.create.random"), 100);
+        let report = sim.run_sim().unwrap();
+        assert_eq!(report.tasks_executed, 100);
+    }
+
+    #[test]
+    fn rejects_empty_shapes() {
+        let rt = Runtime::local(1);
+        assert!(zeros(&rt, (0, 5), (1, 1)).is_err());
+        assert!(zeros(&rt, (5, 5), (0, 1)).is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Distributed matrix decomposition: TSQR (tall-skinny QR).
+//!
+//! The paper's §6 positions ds-arrays as the substrate for "common
+//! mathematical operations, such as matrix multiplication and
+//! decomposition". TSQR is the canonical blocked decomposition for
+//! row-partitioned tall matrices (dislib ships one): factor each block-row
+//! locally, reduce the R factors pairwise up a tree, then push Q
+//! corrections back down. All stages are tasks; the reduction tree is
+//! `2N-1` QR tasks for N block-rows, fully parallel within each level.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::storage::{Block, BlockMeta, DenseMatrix};
+use crate::tasking::{CostHint, Future};
+
+use super::DsArray;
+
+impl DsArray {
+    /// Thin QR of a tall-skinny ds-array (cols ≤ every block-row height,
+    /// single block-column): returns `(Q, R)` with `Q` a ds-array with the
+    /// same blocking and `R` an n×n future (synchronize with
+    /// `runtime().wait`).
+    pub fn tsqr(&self) -> Result<(DsArray, Future)> {
+        if self.grid.1 != 1 {
+            bail!(
+                "tsqr needs a single block column, got {} (rechunk to (bs, {}))",
+                self.grid.1,
+                self.shape.1
+            );
+        }
+        let n = self.shape.1;
+        for i in 0..self.grid.0 {
+            if self.block_rows_at(i) < n {
+                bail!(
+                    "tsqr needs every block-row height >= {} cols (block {} has {})",
+                    n,
+                    i,
+                    self.block_rows_at(i)
+                );
+            }
+        }
+        let rt = &self.rt;
+
+        // ---- Stage 1: local QR per block-row. ----
+        let mut qs: Vec<Future> = Vec::with_capacity(self.grid.0); // local Q factors
+        let mut rs: Vec<Future> = Vec::with_capacity(self.grid.0); // local Rs
+        for i in 0..self.grid.0 {
+            let b = self.block(i, 0);
+            let rows = b.meta.rows;
+            let out = rt.submit(
+                "dsarray.tsqr.local",
+                &[b],
+                vec![BlockMeta::dense(rows, n), BlockMeta::dense(n, n)],
+                CostHint::flops(2.0 * rows as f64 * (n * n) as f64)
+                    .with_bytes(b.meta.bytes() as f64),
+                Arc::new(move |ins: &[Arc<Block>]| {
+                    let (q, r) = ins[0].to_dense()?.qr_thin()?;
+                    Ok(vec![Block::Dense(q), Block::Dense(r)])
+                }),
+            );
+            qs.push(out[0]);
+            rs.push(out[1]);
+        }
+
+        // ---- Stage 2: pairwise R reduction tree. Each merge stacks two
+        // R factors (2n×n), QRs them, and emits the merged R plus the two
+        // n×n correction blocks applied to the children's Qs. ----
+        // We track, per live R, the list of (leaf index, correction chain
+        // future) — corrections compose by matmul on the way down; to keep
+        // the graph simple we accumulate the composed correction per leaf
+        // eagerly at every merge level.
+        struct Node {
+            r: Future,
+            /// (leaf, composed correction future) pairs under this node.
+            leaves: Vec<(usize, Option<Future>)>,
+        }
+        let mut level: Vec<Node> = rs
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| Node {
+                r,
+                leaves: vec![(i, None)],
+            })
+            .collect();
+
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity(level.len().div_ceil(2));
+            let mut iter = level.into_iter();
+            while let Some(a) = iter.next() {
+                match iter.next() {
+                    None => next.push(a),
+                    Some(b) => {
+                        let out = rt.submit(
+                            "dsarray.tsqr.merge",
+                            &[a.r, b.r],
+                            vec![
+                                BlockMeta::dense(n, n), // merged R
+                                BlockMeta::dense(n, n), // correction for a
+                                BlockMeta::dense(n, n), // correction for b
+                            ],
+                            CostHint::flops(4.0 * (n * n * n) as f64),
+                            Arc::new(move |ins: &[Arc<Block>]| {
+                                let ra = ins[0].to_dense()?;
+                                let rb = ins[1].to_dense()?;
+                                let stacked = DenseMatrix::vstack(&[&ra, &rb])?;
+                                let (q, r) = stacked.qr_thin()?;
+                                let ca = q.slice(0, 0, ra.rows(), r.cols())?;
+                                let cb = q.slice(ra.rows(), 0, rb.rows(), r.cols())?;
+                                Ok(vec![Block::Dense(r), Block::Dense(ca), Block::Dense(cb)])
+                            }),
+                        );
+                        let (merged_r, corr_a, corr_b) = (out[0], out[1], out[2]);
+                        // Compose corrections into every leaf under a and b.
+                        let mut leaves = Vec::with_capacity(a.leaves.len() + b.leaves.len());
+                        for (side, corr) in [(a.leaves, corr_a), (b.leaves, corr_b)] {
+                            for (leaf, prev) in side {
+                                let composed = match prev {
+                                    None => corr,
+                                    Some(p) => {
+                                        // new = prev @ corr (n×n each)
+                                        rt.submit(
+                                            "dsarray.tsqr.compose",
+                                            &[p, corr],
+                                            vec![BlockMeta::dense(n, n)],
+                                            CostHint::flops(2.0 * (n * n * n) as f64),
+                                            crate::tasking::ops::matmul_op(),
+                                        )[0]
+                                    }
+                                };
+                                leaves.push((leaf, Some(composed)));
+                            }
+                        }
+                        next.push(Node {
+                            r: merged_r,
+                            leaves,
+                        });
+                    }
+                }
+            }
+            level = next;
+        }
+        let root = level.pop().expect("non-empty");
+
+        // ---- Stage 3: apply composed corrections to the local Qs. ----
+        let mut q_blocks: Vec<Option<Future>> = vec![None; self.grid.0];
+        for (leaf, corr) in root.leaves {
+            let q_local = qs[leaf];
+            let rows = q_local.meta.rows;
+            let fut = match corr {
+                None => q_local, // single-block array: Q is already global
+                Some(c) => rt.submit(
+                    "dsarray.tsqr.apply",
+                    &[q_local, c],
+                    vec![BlockMeta::dense(rows, n)],
+                    CostHint::flops(2.0 * rows as f64 * (n * n) as f64),
+                    crate::tasking::ops::matmul_op(),
+                )[0],
+            };
+            q_blocks[leaf] = Some(fut);
+        }
+        let blocks: Vec<Future> = q_blocks.into_iter().map(|b| b.expect("filled")).collect();
+        let q = DsArray::from_parts(
+            rt.clone(),
+            self.shape,
+            self.block_shape,
+            blocks,
+            false,
+        )?;
+        Ok((q, root.r))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::creation;
+    use crate::storage::DenseMatrix;
+    use crate::tasking::{Runtime, SimConfig};
+    use crate::util::rng::Xoshiro256;
+
+    fn tall(rt: &Runtime, m: usize, n: usize, bs: usize, seed: u64) -> (DenseMatrix, super::DsArray) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let a = DenseMatrix::from_fn(m, n, |_, _| rng.next_normal());
+        let d = creation::from_matrix(rt, &a, (bs, n)).unwrap();
+        (a, d)
+    }
+
+    #[test]
+    fn tsqr_reconstructs_and_q_orthonormal() {
+        let rt = Runtime::local(2);
+        let (a, d) = tall(&rt, 40, 5, 8, 1); // 5 block rows
+        let (q, r) = d.tsqr().unwrap();
+        let qm = q.collect().unwrap();
+        let rm = rt.wait(r).unwrap().to_dense().unwrap();
+        // QR = A.
+        let qr = qm.matmul(&rm).unwrap();
+        assert!(qr.max_abs_diff(&a) < 1e-3, "diff {}", qr.max_abs_diff(&a));
+        // Global QᵀQ = I.
+        let qtq = qm.transpose().matmul(&qm).unwrap();
+        assert!(
+            qtq.max_abs_diff(&DenseMatrix::identity(5)) < 1e-3,
+            "QᵀQ diff {}",
+            qtq.max_abs_diff(&DenseMatrix::identity(5))
+        );
+        // R matches a direct QR up to column signs: |R| equal.
+        let (_, r_ref) = a.qr_thin().unwrap();
+        let abs_diff = (0..5)
+            .flat_map(|i| (0..5).map(move |j| (i, j)))
+            .map(|(i, j)| (rm.get(i, j).abs() - r_ref.get(i, j).abs()).abs())
+            .fold(0.0f32, f32::max);
+        assert!(abs_diff < 1e-3, "|R| mismatch {abs_diff}");
+    }
+
+    #[test]
+    fn tsqr_odd_block_count_and_single_block() {
+        let rt = Runtime::local(2);
+        for (m, bs) in [(21, 7), (12, 12)] {
+            let (a, d) = tall(&rt, m, 3, bs, 2);
+            let (q, r) = d.tsqr().unwrap();
+            let qm = q.collect().unwrap();
+            let rm = rt.wait(r).unwrap().to_dense().unwrap();
+            assert!(qm.matmul(&rm).unwrap().max_abs_diff(&a) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn tsqr_rejects_bad_shapes() {
+        let rt = Runtime::local(1);
+        // Multi-column grid.
+        let d = creation::zeros(&rt, (20, 6), (5, 3)).unwrap();
+        assert!(d.tsqr().is_err());
+        // Block shorter than n.
+        let d = creation::zeros(&rt, (20, 6), (4, 6)).unwrap();
+        assert!(d.tsqr().is_err());
+    }
+
+    #[test]
+    fn tsqr_task_count_in_sim() {
+        // N local QRs + N-1 merges (+ compose/apply) — structure check.
+        let sim = Runtime::sim(SimConfig::with_workers(4));
+        let d = creation::phantom(&sim, (64, 4), (8, 4), None).unwrap();
+        d.tsqr().unwrap();
+        let m = sim.metrics();
+        assert_eq!(m.tasks_for("dsarray.tsqr.local"), 8);
+        assert_eq!(m.tasks_for("dsarray.tsqr.merge"), 7);
+        assert_eq!(m.tasks_for("dsarray.tsqr.apply"), 8);
+        sim.run_sim().unwrap();
+    }
+}

@@ -1,0 +1,307 @@
+//! Element-wise operators (paper §4.2.3): scalar ops (`A ** 2`, `A + 1`),
+//! array∘array ops, and math maps (`sqrt`, `abs`, `exp`). One task per
+//! block; all return new ds-arrays so expressions chain like NumPy:
+//! `(w.transpose().norm(1) ** 2).sqrt()`.
+
+use anyhow::{bail, Result};
+
+use crate::storage::BlockMeta;
+use crate::tasking::{ops, CostHint};
+
+use super::DsArray;
+
+impl DsArray {
+    /// Generic unary elementwise map (one task per block).
+    fn map_blocks(&self, name: &'static str, f: impl Fn(f32) -> f32 + Send + Sync + Clone + 'static) -> Result<DsArray> {
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for i in 0..self.grid.0 {
+            for j in 0..self.grid.1 {
+                let fut = self.block(i, j);
+                let meta = fut.meta;
+                let hint = CostHint::flops((meta.rows * meta.cols) as f64)
+                    .with_bytes(meta.bytes() as f64);
+                let out = self
+                    .rt
+                    .submit(name, &[fut], vec![meta], hint, ops::map_op(f.clone()));
+                blocks.push(out[0]);
+            }
+        }
+        DsArray::from_parts(self.rt.clone(), self.shape, self.block_shape, blocks, self.sparse)
+    }
+
+    /// Generic binary elementwise op; shapes and block shapes must match.
+    fn zip_blocks(
+        &self,
+        other: &DsArray,
+        name: &'static str,
+        f: impl Fn(f32, f32) -> f32 + Send + Sync + Clone + 'static,
+    ) -> Result<DsArray> {
+        if self.shape != other.shape {
+            bail!("shape mismatch: {:?} vs {:?}", self.shape, other.shape);
+        }
+        if self.block_shape != other.block_shape {
+            bail!(
+                "block shape mismatch: {:?} vs {:?} (rechunk first)",
+                self.block_shape,
+                other.block_shape
+            );
+        }
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for i in 0..self.grid.0 {
+            for j in 0..self.grid.1 {
+                let a = self.block(i, j);
+                let b = other.block(i, j);
+                let meta = BlockMeta::dense(a.meta.rows, a.meta.cols);
+                let hint = CostHint::flops((meta.rows * meta.cols) as f64)
+                    .with_bytes(2.0 * meta.bytes() as f64);
+                let out = self
+                    .rt
+                    .submit(name, &[a, b], vec![meta], hint, ops::zip_op(f.clone()));
+                blocks.push(out[0]);
+            }
+        }
+        // zip densifies (mixed backends fold to dense).
+        DsArray::from_parts(self.rt.clone(), self.shape, self.block_shape, blocks, false)
+    }
+
+    pub fn add_scalar(&self, s: f32) -> Result<DsArray> {
+        self.map_blocks("dsarray.ew.add_scalar", move |x| x + s)
+    }
+
+    pub fn mul_scalar(&self, s: f32) -> Result<DsArray> {
+        self.map_blocks("dsarray.ew.mul_scalar", move |x| x * s)
+    }
+
+    /// Element-wise power — the paper's `A ** 2`.
+    pub fn pow(&self, e: f32) -> Result<DsArray> {
+        self.map_blocks("dsarray.ew.pow", move |x| x.powf(e))
+    }
+
+    pub fn sqrt(&self) -> Result<DsArray> {
+        self.map_blocks("dsarray.ew.sqrt", |x| x.sqrt())
+    }
+
+    pub fn abs(&self) -> Result<DsArray> {
+        self.map_blocks("dsarray.ew.abs", |x| x.abs())
+    }
+
+    pub fn exp(&self) -> Result<DsArray> {
+        self.map_blocks("dsarray.ew.exp", |x| x.exp())
+    }
+
+    pub fn neg(&self) -> Result<DsArray> {
+        self.map_blocks("dsarray.ew.neg", |x| -x)
+    }
+
+    pub fn add(&self, other: &DsArray) -> Result<DsArray> {
+        self.zip_blocks(other, "dsarray.ew.add", |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &DsArray) -> Result<DsArray> {
+        self.zip_blocks(other, "dsarray.ew.sub", |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &DsArray) -> Result<DsArray> {
+        self.zip_blocks(other, "dsarray.ew.mul", |a, b| a * b)
+    }
+
+    pub fn div(&self, other: &DsArray) -> Result<DsArray> {
+        self.zip_blocks(other, "dsarray.ew.div", |a, b| a / b)
+    }
+
+    /// dislib's `apply_along_axis` over axis 1: run an arbitrary
+    /// row→scalar function (one task per block-row, full-width panels)
+    /// producing a rows×1 ds-array. The closure must be pure — it runs on
+    /// worker threads.
+    pub fn apply_along_rows(
+        &self,
+        f: impl Fn(&[f32]) -> f32 + Send + Sync + Clone + 'static,
+    ) -> Result<DsArray> {
+        let mut blocks = Vec::with_capacity(self.grid.0);
+        for i in 0..self.grid.0 {
+            let reads = self.block_row(i);
+            let rows = self.block_rows_at(i);
+            let bytes: f64 = reads.iter().map(|r| r.meta.bytes() as f64).sum();
+            let f = f.clone();
+            let out = self.rt.submit(
+                "dsarray.apply_along_rows",
+                &reads,
+                vec![BlockMeta::dense(rows, 1)],
+                CostHint::flops((rows * self.shape.1) as f64).with_bytes(bytes),
+                std::sync::Arc::new(move |ins: &[std::sync::Arc<crate::storage::Block>]| {
+                    let dense: Vec<crate::storage::DenseMatrix> =
+                        ins.iter().map(|b| b.to_dense()).collect::<Result<_>>()?;
+                    let refs: Vec<&crate::storage::DenseMatrix> = dense.iter().collect();
+                    let panel = crate::storage::DenseMatrix::hstack(&refs)?;
+                    let mut out = crate::storage::DenseMatrix::zeros(panel.rows(), 1);
+                    for r in 0..panel.rows() {
+                        out.set(r, 0, f(panel.row(r)));
+                    }
+                    Ok(vec![crate::storage::Block::Dense(out)])
+                }),
+            );
+            blocks.push(out[0]);
+        }
+        DsArray::from_parts(
+            self.rt.clone(),
+            (self.shape.0, 1),
+            (self.block_shape.0, 1),
+            blocks,
+            false,
+        )
+    }
+
+    /// Broadcast a 1×cols row array across all rows: `self - row` (used by
+    /// the scaler / normalization pipelines).
+    pub fn sub_row_broadcast(&self, row: &DsArray) -> Result<DsArray> {
+        self.row_broadcast(row, "dsarray.ew.sub_bcast", |a, b| a - b)
+    }
+
+    /// Broadcast divide by a 1×cols row array.
+    pub fn div_row_broadcast(&self, row: &DsArray) -> Result<DsArray> {
+        self.row_broadcast(row, "dsarray.ew.div_bcast", |a, b| if b != 0.0 { a / b } else { 0.0 })
+    }
+
+    fn row_broadcast(
+        &self,
+        row: &DsArray,
+        name: &'static str,
+        f: impl Fn(f32, f32) -> f32 + Send + Sync + Clone + 'static,
+    ) -> Result<DsArray> {
+        if row.shape.0 != 1 || row.shape.1 != self.shape.1 {
+            bail!(
+                "broadcast row must be 1x{}, got {:?}",
+                self.shape.1,
+                row.shape
+            );
+        }
+        if row.block_shape.1 != self.block_shape.1 {
+            bail!("broadcast row block width mismatch");
+        }
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for i in 0..self.grid.0 {
+            for j in 0..self.grid.1 {
+                let a = self.block(i, j);
+                let r = row.block(0, j);
+                let meta = BlockMeta::dense(a.meta.rows, a.meta.cols);
+                let hint = CostHint::flops((meta.rows * meta.cols) as f64)
+                    .with_bytes(meta.bytes() as f64);
+                let f = f.clone();
+                let out = self.rt.submit(
+                    name,
+                    &[a, r],
+                    vec![meta],
+                    hint,
+                    std::sync::Arc::new(move |ins: &[std::sync::Arc<crate::storage::Block>]| {
+                        let m = ins[0].to_dense()?;
+                        let row = ins[1].to_dense()?;
+                        let out = crate::storage::DenseMatrix::from_fn(
+                            m.rows(),
+                            m.cols(),
+                            |bi, bj| f(m.get(bi, bj), row.get(0, bj)),
+                        );
+                        Ok(vec![crate::storage::Block::Dense(out)])
+                    }),
+                );
+                blocks.push(out[0]);
+            }
+        }
+        DsArray::from_parts(self.rt.clone(), self.shape, self.block_shape, blocks, false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::creation;
+    use crate::storage::DenseMatrix;
+    use crate::tasking::Runtime;
+
+    fn setup() -> (Runtime, DenseMatrix, super::DsArray) {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(5, 7, |i, j| (i as f32 - 2.0) * 0.5 + j as f32);
+        let a = creation::from_matrix(&rt, &m, (2, 3)).unwrap();
+        (rt, m, a)
+    }
+
+    #[test]
+    fn scalar_ops_match_reference() {
+        let (_rt, m, a) = setup();
+        assert_eq!(a.add_scalar(2.5).unwrap().collect().unwrap(), m.map(|x| x + 2.5));
+        assert_eq!(a.mul_scalar(-2.0).unwrap().collect().unwrap(), m.map(|x| x * -2.0));
+        assert_eq!(a.pow(2.0).unwrap().collect().unwrap(), m.map(|x| x * x));
+        assert_eq!(a.abs().unwrap().collect().unwrap(), m.map(|x| x.abs()));
+        assert_eq!(a.neg().unwrap().collect().unwrap(), m.map(|x| -x));
+    }
+
+    #[test]
+    fn chained_expression_like_paper() {
+        // sqrt(A**2) == |A| — exercising NumPy-style chaining.
+        let (_rt, m, a) = setup();
+        let got = a.pow(2.0).unwrap().sqrt().unwrap().collect().unwrap();
+        assert!(got.max_abs_diff(&m.map(|x| x.abs())) < 1e-5);
+    }
+
+    #[test]
+    fn array_array_ops() {
+        let (rt, m, a) = setup();
+        let n = DenseMatrix::from_fn(5, 7, |i, j| (i + j) as f32 + 1.0);
+        let b = creation::from_matrix(&rt, &n, (2, 3)).unwrap();
+        assert_eq!(
+            a.add(&b).unwrap().collect().unwrap(),
+            m.zip_map(&n, |x, y| x + y).unwrap()
+        );
+        assert_eq!(
+            a.mul(&b).unwrap().collect().unwrap(),
+            m.zip_map(&n, |x, y| x * y).unwrap()
+        );
+        assert_eq!(
+            a.sub(&b).unwrap().collect().unwrap(),
+            m.zip_map(&n, |x, y| x - y).unwrap()
+        );
+        // Mismatched shapes rejected.
+        let c = creation::zeros(&rt, (5, 6), (2, 3)).unwrap();
+        assert!(a.add(&c).is_err());
+        // Mismatched block shapes rejected.
+        let d = creation::zeros(&rt, (5, 7), (3, 3)).unwrap();
+        assert!(a.add(&d).is_err());
+    }
+
+    #[test]
+    fn row_broadcast() {
+        let (rt, m, a) = setup();
+        let row = DenseMatrix::from_fn(1, 7, |_, j| j as f32);
+        let r = creation::from_matrix(&rt, &row, (1, 3)).unwrap();
+        let got = a.sub_row_broadcast(&r).unwrap().collect().unwrap();
+        let want = DenseMatrix::from_fn(5, 7, |i, j| m.get(i, j) - row.get(0, j));
+        assert_eq!(got, want);
+        assert!(a.sub_row_broadcast(&a).is_err());
+    }
+
+    #[test]
+    fn apply_along_rows_matches_reference() {
+        let (rt, m, a) = setup();
+        let norms = a
+            .apply_along_rows(|row| row.iter().map(|&x| x * x).sum::<f32>().sqrt())
+            .unwrap();
+        assert_eq!(norms.shape(), (5, 1));
+        let got = norms.collect().unwrap();
+        for i in 0..5 {
+            let want = m.row(i).iter().map(|&x| x * x).sum::<f32>().sqrt();
+            assert!((got.get(i, 0) - want).abs() < 1e-4, "row {i}");
+        }
+        // One task per block-row.
+        let before = rt.metrics();
+        a.apply_along_rows(|row| row[0]).unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.tasks_for("dsarray.apply_along_rows"), a.grid().0 as u64);
+    }
+
+    #[test]
+    fn one_task_per_block() {
+        let (rt, _m, a) = setup();
+        let before = rt.metrics();
+        a.add_scalar(1.0).unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.total_tasks(), a.n_blocks() as u64);
+    }
+}

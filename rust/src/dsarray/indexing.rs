@@ -1,0 +1,286 @@
+//! Indexing (paper §4.2.3): `A[10:100]`-style row slices, 2-D region
+//! slices, single-element access, and row selection by index list — the
+//! "filtering" operation that was slow on Datasets.
+
+use anyhow::{bail, Result};
+
+use crate::storage::BlockMeta;
+use crate::tasking::{ops, CostHint};
+
+use super::DsArray;
+
+impl DsArray {
+    /// Rows `[r0, r1)` — `A[r0:r1]`.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Result<DsArray> {
+        self.slice(r0, r1, 0, self.shape.1)
+    }
+
+    /// Columns `[c0, c1)` — `A[:, c0:c1]` (efficient on ds-arrays; the whole
+    /// point of two-axis blocking).
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Result<DsArray> {
+        self.slice(0, self.shape.0, c0, c1)
+    }
+
+    /// Rectangular region `[r0, r1) x [c0, c1)`. One task per overlapped
+    /// output block.
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Result<DsArray> {
+        if r0 >= r1 || c0 >= c1 || r1 > self.shape.0 || c1 > self.shape.1 {
+            bail!(
+                "slice [{r0}:{r1}, {c0}:{c1}] invalid for shape {:?}",
+                self.shape
+            );
+        }
+        let (nr, nc) = (r1 - r0, c1 - c0);
+        let (bs0, bs1) = self.block_shape;
+        let grid = (
+            DsArray::grid_dim(nr, bs0),
+            DsArray::grid_dim(nc, bs1),
+        );
+        let mut blocks = Vec::with_capacity(grid.0 * grid.1);
+        for oi in 0..grid.0 {
+            // Output block-row oi covers logical rows [or0, or0+orn).
+            let or0 = r0 + oi * bs0;
+            let orn = (r1 - or0).min(bs0);
+            for oj in 0..grid.1 {
+                let oc0 = c0 + oj * bs1;
+                let ocn = (c1 - oc0).min(bs1);
+                // Input blocks overlapping the output region.
+                let bi0 = or0 / bs0;
+                let bi1 = (or0 + orn - 1) / bs0;
+                let bj0 = oc0 / bs1;
+                let bj1 = (oc0 + ocn - 1) / bs1;
+                let out_meta = if self.sparse {
+                    self.expect_sparse_meta(orn, ocn)
+                } else {
+                    BlockMeta::dense(orn, ocn)
+                };
+                // Common fast path: the output block lives inside ONE input
+                // block — a plain slice task. Otherwise assemble from up to
+                // four neighbors with a gather task.
+                if bi0 == bi1 && bj0 == bj1 {
+                    let fut = self.block(bi0, bj0);
+                    let lr = or0 - bi0 * bs0;
+                    let lc = oc0 - bj0 * bs1;
+                    let out = self.rt.submit(
+                        "dsarray.index.slice",
+                        &[fut],
+                        vec![out_meta],
+                        CostHint::default().with_bytes(out_meta.bytes() as f64),
+                        ops::slice_op(lr, lc, orn, ocn),
+                    );
+                    blocks.push(out[0]);
+                } else {
+                    let mut futs = Vec::new();
+                    let mut coords = Vec::new();
+                    for bi in bi0..=bi1 {
+                        for bj in bj0..=bj1 {
+                            futs.push(self.block(bi, bj));
+                            coords.push((bi, bj));
+                        }
+                    }
+                    let (gbs0, gbs1) = (bs0, bs1);
+                    let (gor0, goc0) = (or0, oc0);
+                    let out = self.rt.submit(
+                        "dsarray.index.gather",
+                        &futs,
+                        vec![out_meta],
+                        CostHint::default().with_bytes(2.0 * out_meta.bytes() as f64),
+                        std::sync::Arc::new(move |ins: &[std::sync::Arc<crate::storage::Block>]| {
+                            let mut out =
+                                crate::storage::DenseMatrix::zeros(orn, ocn);
+                            for (b, &(bi, bj)) in ins.iter().zip(&coords) {
+                                let d = b.to_dense()?;
+                                // Intersection of this input block with the
+                                // output region, in local coordinates.
+                                let br0 = bi * gbs0;
+                                let bc0 = bj * gbs1;
+                                let ir0 = gor0.max(br0);
+                                let ic0 = goc0.max(bc0);
+                                let ir1 = (gor0 + orn).min(br0 + d.rows());
+                                let ic1 = (goc0 + ocn).min(bc0 + d.cols());
+                                if ir0 >= ir1 || ic0 >= ic1 {
+                                    continue;
+                                }
+                                let part =
+                                    d.slice(ir0 - br0, ic0 - bc0, ir1 - ir0, ic1 - ic0)?;
+                                out.paste(ir0 - gor0, ic0 - goc0, &part)?;
+                            }
+                            Ok(vec![crate::storage::Block::Dense(out)])
+                        }),
+                    );
+                    blocks.push(out[0]);
+                }
+            }
+        }
+        // Gather path densifies sparse inputs; keep the sparse flag only on
+        // the aligned fast path.
+        let aligned = r0 % bs0 == 0 && c0 % bs1 == 0;
+        DsArray::from_parts(
+            self.rt.clone(),
+            (nr, nc),
+            self.block_shape,
+            blocks,
+            self.sparse && aligned,
+        )
+    }
+
+    fn expect_sparse_meta(&self, r: usize, c: usize) -> BlockMeta {
+        let total_nnz: usize = self.blocks.iter().map(|b| b.meta.nnz).sum();
+        let frac = (r * c) as f64 / (self.shape.0 * self.shape.1).max(1) as f64;
+        BlockMeta::sparse(r, c, (total_nnz as f64 * frac).round() as usize)
+    }
+
+    /// Single element — synchronizes one block.
+    pub fn get(&self, i: usize, j: usize) -> Result<f32> {
+        if i >= self.shape.0 || j >= self.shape.1 {
+            bail!("index ({i},{j}) out of bounds for {:?}", self.shape);
+        }
+        let (bi, bj) = (i / self.block_shape.0, j / self.block_shape.1);
+        let b = self.rt.wait(self.block(bi, bj))?;
+        Ok(b.to_dense()?
+            .get(i - bi * self.block_shape.0, j - bj * self.block_shape.1))
+    }
+
+    /// Select arbitrary rows by index (fancy indexing). One task per output
+    /// block-row, reading every input block-row it draws from.
+    pub fn take_rows(&self, idx: &[usize]) -> Result<DsArray> {
+        for &i in idx {
+            if i >= self.shape.0 {
+                bail!("row index {i} out of bounds for {} rows", self.shape.0);
+            }
+        }
+        if idx.is_empty() {
+            bail!("take_rows with empty index");
+        }
+        let bs0 = self.block_shape.0;
+        let out_grid0 = DsArray::grid_dim(idx.len(), bs0);
+        let mut blocks = Vec::new();
+        for oi in 0..out_grid0 {
+            let lo = oi * bs0;
+            let hi = ((oi + 1) * bs0).min(idx.len());
+            let rows: Vec<usize> = idx[lo..hi].to_vec();
+            // Input block-rows feeding this output block-row.
+            let mut needed: Vec<usize> = rows.iter().map(|&r| r / bs0).collect();
+            needed.sort_unstable();
+            needed.dedup();
+            for oj in 0..self.grid.1 {
+                let ocn = self.block_cols_at(oj);
+                let futs: Vec<_> = needed.iter().map(|&bi| self.block(bi, oj)).collect();
+                let needed_c = needed.clone();
+                let rows_c = rows.clone();
+                let meta = BlockMeta::dense(rows.len(), ocn);
+                let out = self.rt.submit(
+                    "dsarray.index.take_rows",
+                    &futs,
+                    vec![meta],
+                    CostHint::default().with_bytes(meta.bytes() as f64 * 2.0),
+                    std::sync::Arc::new(move |ins: &[std::sync::Arc<crate::storage::Block>]| {
+                        let mut out =
+                            crate::storage::DenseMatrix::zeros(rows_c.len(), ocn);
+                        for (k, &gr) in rows_c.iter().enumerate() {
+                            let bi = gr / bs0;
+                            let pos = needed_c.binary_search(&bi).unwrap();
+                            let d = ins[pos].to_dense()?;
+                            let local = gr - bi * bs0;
+                            out.row_mut(k).copy_from_slice(d.row(local));
+                        }
+                        Ok(vec![crate::storage::Block::Dense(out)])
+                    }),
+                );
+                blocks.push(out[0]);
+            }
+        }
+        DsArray::from_parts(
+            self.rt.clone(),
+            (idx.len(), self.shape.1),
+            self.block_shape,
+            blocks,
+            false,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::creation;
+    use crate::storage::DenseMatrix;
+    use crate::tasking::Runtime;
+
+    fn setup() -> (Runtime, DenseMatrix, super::DsArray) {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(9, 8, |i, j| (i * 8 + j) as f32);
+        let a = creation::from_matrix(&rt, &m, (3, 3)).unwrap();
+        (rt, m, a)
+    }
+
+    #[test]
+    fn aligned_and_unaligned_slices_match_reference() {
+        let (_rt, m, a) = setup();
+        // Aligned (single-block fast path).
+        let s = a.slice(3, 6, 3, 6).unwrap();
+        assert_eq!(s.collect().unwrap(), m.slice(3, 3, 3, 3).unwrap());
+        // Unaligned (gather path across block boundaries).
+        let s = a.slice(1, 8, 2, 7).unwrap();
+        assert_eq!(s.collect().unwrap(), m.slice(1, 2, 7, 5).unwrap());
+        // Full-width row slice.
+        let s = a.slice_rows(2, 9).unwrap();
+        assert_eq!(s.collect().unwrap(), m.slice(2, 0, 7, 8).unwrap());
+        // Column slice.
+        let s = a.slice_cols(1, 4).unwrap();
+        assert_eq!(s.collect().unwrap(), m.slice(0, 1, 9, 3).unwrap());
+    }
+
+    #[test]
+    fn invalid_slices_rejected() {
+        let (_rt, _m, a) = setup();
+        assert!(a.slice(5, 5, 0, 1).is_err());
+        assert!(a.slice(0, 10, 0, 1).is_err());
+        assert!(a.slice(0, 1, 7, 9).is_err());
+    }
+
+    #[test]
+    fn get_single_elements() {
+        let (_rt, m, a) = setup();
+        assert_eq!(a.get(0, 0).unwrap(), m.get(0, 0));
+        assert_eq!(a.get(8, 7).unwrap(), m.get(8, 7));
+        assert_eq!(a.get(4, 5).unwrap(), m.get(4, 5));
+        assert!(a.get(9, 0).is_err());
+    }
+
+    #[test]
+    fn take_rows_matches_reference() {
+        let (_rt, m, a) = setup();
+        let idx = vec![8, 0, 3, 3, 5, 1, 7];
+        let t = a.take_rows(&idx).unwrap();
+        let got = t.collect().unwrap();
+        for (k, &r) in idx.iter().enumerate() {
+            assert_eq!(got.row(k), m.row(r), "row {k} (source {r})");
+        }
+        assert!(a.take_rows(&[9]).is_err());
+        assert!(a.take_rows(&[]).is_err());
+    }
+
+    #[test]
+    fn sparse_aligned_slice_stays_sparse() {
+        let rt = Runtime::local(2);
+        let csr = crate::storage::CsrMatrix::from_triplets(
+            6,
+            6,
+            &[(0, 0, 1.0), (3, 3, 2.0), (5, 5, 3.0)],
+        )
+        .unwrap();
+        let a = creation::from_csr(&rt, &csr, (3, 3)).unwrap();
+        let s = a.slice(3, 6, 3, 6).unwrap();
+        assert!(s.is_sparse());
+        assert_eq!(
+            s.collect().unwrap(),
+            csr.to_dense().slice(3, 3, 3, 3).unwrap()
+        );
+        let u = a.slice(1, 5, 1, 5).unwrap();
+        assert!(!u.is_sparse());
+        assert_eq!(
+            u.collect().unwrap(),
+            csr.to_dense().slice(1, 1, 4, 4).unwrap()
+        );
+    }
+}

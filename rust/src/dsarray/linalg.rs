@@ -1,0 +1,388 @@
+//! Linear algebra: transpose (paper §5.2 — N tasks, one per row of blocks),
+//! blocked matmul, and the Gram matrix `AᵀA` (computed without an explicit
+//! transposed copy — the ALS enabler, §5.3).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::storage::{Block, BlockMeta, DenseMatrix};
+use crate::tasking::{CostHint, Future};
+
+use super::DsArray;
+
+impl DsArray {
+    /// Transpose: one task per **row of blocks** (collection-in /
+    /// collection-out), then a master-side rearrangement of the grid so
+    /// block (i,j) becomes block (j,i). For an N×M grid this is N tasks —
+    /// versus N²+N for the Dataset baseline (paper §5.2).
+    pub fn transpose(&self) -> Result<DsArray> {
+        let (gr, gc) = self.grid;
+        // Collected outputs: task i yields the transposed blocks of row i.
+        let mut row_outputs: Vec<Vec<Future>> = Vec::with_capacity(gr);
+        for i in 0..gr {
+            let futs = self.block_row(i);
+            let metas: Vec<BlockMeta> = futs.iter().map(|f| f.meta.transposed()).collect();
+            let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
+            let out = self.rt.submit(
+                "dsarray.transpose.rowblocks",
+                &futs,
+                metas,
+                CostHint::default().with_bytes(2.0 * bytes),
+                Arc::new(|ins: &[Arc<Block>]| Ok(ins.iter().map(|b| b.transpose()).collect())),
+            );
+            row_outputs.push(out);
+        }
+        // Grid rearrangement happens on the master: no tasks.
+        let mut blocks = Vec::with_capacity(gr * gc);
+        for j in 0..gc {
+            for i in 0..gr {
+                blocks.push(row_outputs[i][j]);
+            }
+        }
+        DsArray::from_parts(
+            self.rt.clone(),
+            (self.shape.1, self.shape.0),
+            (self.block_shape.1, self.block_shape.0),
+            blocks,
+            self.sparse,
+        )
+    }
+
+    /// Blocked matrix multiply: one task per output block, reading a row of
+    /// blocks of `self` and a column of blocks of `other` (collections).
+    pub fn matmul(&self, other: &DsArray) -> Result<DsArray> {
+        if self.shape.1 != other.shape.0 {
+            bail!(
+                "matmul shape mismatch: {:?} @ {:?}",
+                self.shape,
+                other.shape
+            );
+        }
+        if self.block_shape.1 != other.block_shape.0 {
+            bail!(
+                "matmul block mismatch: inner block {} vs {} (rechunk first)",
+                self.block_shape.1,
+                other.block_shape.0
+            );
+        }
+        let (gr, _) = self.grid;
+        let gc = other.grid.1;
+        let kb = self.grid.1;
+        let mut blocks = Vec::with_capacity(gr * gc);
+        for i in 0..gr {
+            let m = self.block_rows_at(i);
+            let a_row = self.block_row(i);
+            for j in 0..gc {
+                let n = other.block_cols_at(j);
+                let b_col = other.block_col(j);
+                let mut futs = a_row.clone();
+                futs.extend_from_slice(&b_col);
+                let meta = BlockMeta::dense(m, n);
+                let flops = 2.0 * m as f64 * self.shape.1 as f64 * n as f64;
+                let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
+                let out = self.rt.submit(
+                    "dsarray.matmul.block",
+                    &futs,
+                    vec![meta],
+                    CostHint::flops(flops).with_bytes(bytes),
+                    Arc::new(move |ins: &[Arc<Block>]| {
+                        let (a_blocks, b_blocks) = ins.split_at(kb);
+                        let mut acc: Option<DenseMatrix> = None;
+                        for (a, b) in a_blocks.iter().zip(b_blocks) {
+                            let prod = match (&**a, &**b) {
+                                (Block::Csr(s), Block::Dense(d)) => s.matmul_dense(d)?,
+                                (x, y) => x.to_dense()?.matmul(&y.to_dense()?)?,
+                            };
+                            match &mut acc {
+                                None => acc = Some(prod),
+                                Some(c) => c.axpy(1.0, &prod)?,
+                            }
+                        }
+                        Ok(vec![Block::Dense(acc.expect("kb >= 1"))])
+                    }),
+                );
+                blocks.push(out[0]);
+            }
+        }
+        DsArray::from_parts(
+            self.rt.clone(),
+            (self.shape.0, other.shape.1),
+            (self.block_shape.0, other.block_shape.1),
+            blocks,
+            false,
+        )
+    }
+
+    /// Kronecker product `self ⊗ other` (part of dislib's ds-array API):
+    /// one task per block of self (each reading all of other's blocks);
+    /// the result grid mirrors self's grid. Output block size is
+    /// `(bs_a.0 * other.rows, bs_a.1 * other.cols)` so the grid layout
+    /// follows self's grid directly.
+    pub fn kron(&self, other: &DsArray) -> Result<DsArray> {
+        let (ar, ac) = self.shape;
+        let (br, bc) = other.shape;
+        // Each output "super-block" is (a_block ⊗ other) — computed as one
+        // task reading one block of self + every block of other.
+        let other_blocks: Vec<Future> = other.blocks.clone();
+        let (obs0, obs1) = other.block_shape;
+        let (ogr, ogc) = other.grid;
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for i in 0..self.grid.0 {
+            let rows_a = self.block_rows_at(i);
+            for j in 0..self.grid.1 {
+                let cols_a = self.block_cols_at(j);
+                let mut reads = vec![self.block(i, j)];
+                reads.extend_from_slice(&other_blocks);
+                let meta = BlockMeta::dense(rows_a * br, cols_a * bc);
+                let flops = (rows_a * cols_a * br * bc) as f64;
+                let out = self.rt.submit(
+                    "dsarray.kron.block",
+                    &reads,
+                    vec![meta],
+                    CostHint::flops(flops).with_bytes(meta.bytes() as f64),
+                    Arc::new(move |ins: &[Arc<Block>]| {
+                        let a = ins[0].to_dense()?;
+                        // Assemble other from its blocks.
+                        let mut b = DenseMatrix::zeros(br, bc);
+                        for (t, blk) in ins[1..].iter().enumerate() {
+                            let (bi, bj) = (t / ogc, t % ogc);
+                            let _ = ogr;
+                            b.paste(bi * obs0, bj * obs1, &blk.to_dense()?)?;
+                        }
+                        let mut out = DenseMatrix::zeros(a.rows() * br, a.cols() * bc);
+                        for r in 0..a.rows() {
+                            for c in 0..a.cols() {
+                                let scale = a.get(r, c);
+                                if scale == 0.0 {
+                                    continue;
+                                }
+                                let scaled = b.map(|x| x * scale);
+                                out.paste(r * br, c * bc, &scaled)?;
+                            }
+                        }
+                        Ok(vec![Block::Dense(out)])
+                    }),
+                );
+                blocks.push(out[0]);
+            }
+        }
+        DsArray::from_parts(
+            self.rt.clone(),
+            (ar * br, ac * bc),
+            (self.block_shape.0 * br, self.block_shape.1 * bc),
+            blocks,
+            false,
+        )
+    }
+
+    /// Gram matrix `AᵀA` computed directly from block columns — no
+    /// transposed copy of `A` is ever materialized (ds-arrays give cheap
+    /// column access; this is what the Dataset-based ALS could not do).
+    pub fn gram(&self) -> Result<DsArray> {
+        self.tn_matmul(self)
+    }
+
+    /// `selfᵀ @ other` without materializing the transpose: one task per
+    /// output block, reading a block-column of each operand. Operands must
+    /// share the row blocking.
+    pub fn tn_matmul(&self, other: &DsArray) -> Result<DsArray> {
+        if self.shape.0 != other.shape.0 || self.block_shape.0 != other.block_shape.0 {
+            bail!(
+                "tn_matmul row structure mismatch: {:?}/{:?} vs {:?}/{:?}",
+                self.shape,
+                self.block_shape,
+                other.shape,
+                other.block_shape
+            );
+        }
+        let gc = self.grid.1;
+        let ogc = other.grid.1;
+        let mut blocks = Vec::with_capacity(gc * ogc);
+        for i in 0..gc {
+            let ci = self.block_cols_at(i);
+            let col_i = self.block_col(i);
+            for j in 0..ogc {
+                let cj = other.block_cols_at(j);
+                let col_j = other.block_col(j);
+                let mut futs = col_i.clone();
+                futs.extend_from_slice(&col_j);
+                let meta = BlockMeta::dense(ci, cj);
+                let flops = 2.0 * ci as f64 * self.shape.0 as f64 * cj as f64;
+                let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
+                let kb = self.grid.0;
+                let out = self.rt.submit(
+                    "dsarray.tn_matmul.block",
+                    &futs,
+                    vec![meta],
+                    CostHint::flops(flops).with_bytes(bytes),
+                    Arc::new(move |ins: &[Arc<Block>]| {
+                        let (a_blocks, b_blocks) = ins.split_at(kb);
+                        let mut acc: Option<DenseMatrix> = None;
+                        for (a, b) in a_blocks.iter().zip(b_blocks) {
+                            let at = a.to_dense()?.transpose();
+                            let prod = match &**b {
+                                Block::Csr(s) => at.matmul(&s.to_dense())?,
+                                y => at.matmul(&y.to_dense()?)?,
+                            };
+                            match &mut acc {
+                                None => acc = Some(prod),
+                                Some(c) => c.axpy(1.0, &prod)?,
+                            }
+                        }
+                        Ok(vec![Block::Dense(acc.expect("grid.0 >= 1"))])
+                    }),
+                );
+                blocks.push(out[0]);
+            }
+        }
+        DsArray::from_parts(
+            self.rt.clone(),
+            (self.shape.1, other.shape.1),
+            (self.block_shape.1, other.block_shape.1),
+            blocks,
+            false,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::creation;
+    use crate::storage::DenseMatrix;
+    use crate::tasking::Runtime;
+
+    #[test]
+    fn transpose_matches_reference_and_task_count() {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(6, 9, |i, j| (i * 9 + j) as f32);
+        let a = creation::from_matrix(&rt, &m, (2, 3)).unwrap();
+        let before = rt.metrics();
+        let t = a.transpose().unwrap();
+        let d = rt.metrics().since(&before);
+        // Paper: N tasks for an N×M grid (N = 3 block rows here).
+        assert_eq!(d.tasks_for("dsarray.transpose.rowblocks"), 3);
+        assert_eq!(t.shape(), (9, 6));
+        assert_eq!(t.block_shape(), (3, 2));
+        assert_eq!(t.collect().unwrap(), m.transpose());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(5, 4, |i, j| (i + 2 * j) as f32);
+        let a = creation::from_matrix(&rt, &m, (2, 3)).unwrap();
+        let tt = a.transpose().unwrap().transpose().unwrap();
+        assert_eq!(tt.collect().unwrap(), m);
+    }
+
+    #[test]
+    fn sparse_transpose_stays_sparse() {
+        let rt = Runtime::local(2);
+        let csr =
+            crate::storage::CsrMatrix::from_triplets(4, 6, &[(0, 5, 1.0), (3, 2, 2.0)]).unwrap();
+        let a = creation::from_csr(&rt, &csr, (2, 3)).unwrap();
+        let t = a.transpose().unwrap();
+        assert!(t.is_sparse());
+        assert_eq!(t.collect_csr().unwrap().to_dense(), csr.to_dense().transpose());
+    }
+
+    #[test]
+    fn matmul_matches_reference() {
+        let rt = Runtime::local(2);
+        let a = DenseMatrix::from_fn(5, 6, |i, j| ((i * 6 + j) % 7) as f32 - 3.0);
+        let b = DenseMatrix::from_fn(6, 4, |i, j| ((i * 4 + j) % 5) as f32 * 0.5);
+        let da = creation::from_matrix(&rt, &a, (2, 3)).unwrap();
+        let db = creation::from_matrix(&rt, &b, (3, 2)).unwrap();
+        let before = rt.metrics();
+        let dc = da.matmul(&db).unwrap();
+        let d = rt.metrics().since(&before);
+        // One task per output block: ceil(5/2) x ceil(4/2) = 3x2 = 6.
+        assert_eq!(d.tasks_for("dsarray.matmul.block"), 6);
+        let got = dc.collect().unwrap();
+        let want = a.matmul(&b).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_shape_checks() {
+        let rt = Runtime::local(1);
+        let a = creation::zeros(&rt, (4, 4), (2, 2)).unwrap();
+        let b = creation::zeros(&rt, (5, 4), (2, 2)).unwrap();
+        assert!(a.matmul(&b).is_err());
+        let c = creation::zeros(&rt, (4, 4), (3, 3)).unwrap();
+        assert!(a.matmul(&c).is_err());
+    }
+
+    #[test]
+    fn gram_without_transpose_copy() {
+        let rt = Runtime::local(2);
+        let a = DenseMatrix::from_fn(7, 5, |i, j| ((i * 5 + j) % 4) as f32 - 1.5);
+        let da = creation::from_matrix(&rt, &a, (3, 2)).unwrap();
+        let g = da.gram().unwrap();
+        assert_eq!(g.shape(), (5, 5));
+        let want = a.transpose().matmul(&a).unwrap();
+        assert!(g.collect().unwrap().max_abs_diff(&want) < 1e-4);
+        // No transpose tasks were needed.
+        assert_eq!(rt.metrics().tasks_for("dsarray.transpose.rowblocks"), 0);
+        assert_eq!(rt.metrics().tasks_for("dsarray.tn_matmul.block"), 9);
+    }
+
+    #[test]
+    fn tn_matmul_rectangular() {
+        let rt = Runtime::local(2);
+        let a = DenseMatrix::from_fn(6, 4, |i, j| (i * 4 + j) as f32 * 0.25);
+        let b = DenseMatrix::from_fn(6, 3, |i, j| ((i + j) % 3) as f32 - 1.0);
+        let da = creation::from_matrix(&rt, &a, (2, 2)).unwrap();
+        let db = creation::from_matrix(&rt, &b, (2, 2)).unwrap();
+        let got = da.tn_matmul(&db).unwrap();
+        assert_eq!(got.shape(), (4, 3));
+        let want = a.transpose().matmul(&b).unwrap();
+        assert!(got.collect().unwrap().max_abs_diff(&want) < 1e-4);
+        // Row-structure mismatch rejected.
+        let dc = creation::from_matrix(&rt, &b, (3, 2)).unwrap();
+        assert!(da.tn_matmul(&dc).is_err());
+    }
+
+    #[test]
+    fn kron_matches_reference() {
+        let rt = Runtime::local(2);
+        let a = DenseMatrix::from_fn(3, 2, |i, j| (i * 2 + j) as f32 - 2.0);
+        let b = DenseMatrix::from_fn(2, 3, |i, j| (i + j) as f32 * 0.5 + 1.0);
+        let da = creation::from_matrix(&rt, &a, (2, 1)).unwrap();
+        let db = creation::from_matrix(&rt, &b, (1, 2)).unwrap();
+        let k = da.kron(&db).unwrap();
+        assert_eq!(k.shape(), (6, 6));
+        let got = k.collect().unwrap();
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = a.get(i / 2, j / 3) * b.get(i % 2, j % 3);
+                assert!((got.get(i, j) - want).abs() < 1e-6, "({i},{j})");
+            }
+        }
+        // kron with identity reproduces a block-diagonal embedding.
+        let eye = creation::identity(&rt, 2, (2, 2)).unwrap();
+        let ke = db.kron(&eye).unwrap();
+        let got = ke.collect().unwrap();
+        assert_eq!(got.get(0, 0), b.get(0, 0));
+        assert_eq!(got.get(1, 1), b.get(0, 0));
+        assert_eq!(got.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn sparse_dense_matmul() {
+        let rt = Runtime::local(2);
+        let csr = crate::storage::CsrMatrix::from_triplets(
+            4,
+            6,
+            &[(0, 0, 2.0), (1, 3, 1.0), (3, 5, -1.0)],
+        )
+        .unwrap();
+        let a = creation::from_csr(&rt, &csr, (2, 3)).unwrap();
+        let b = DenseMatrix::from_fn(6, 3, |i, j| (i + j) as f32);
+        let db = creation::from_matrix(&rt, &b, (3, 2)).unwrap();
+        let got = a.matmul(&db).unwrap().collect().unwrap();
+        let want = csr.to_dense().matmul(&b).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+}

@@ -1,0 +1,222 @@
+//! The distributed array (`ds-array`) — the paper's contribution (§4).
+//!
+//! A 2-D array divided in `P×Q` blocks stored behind runtime futures. The
+//! grid is a row-major list of block handles (the paper's "list of lists of
+//! blocks"); blocks are dense or CSR depending on the data. All operations
+//! submit tasks and return new ds-arrays immediately (asynchronous
+//! scheduling); `collect` synchronizes.
+//!
+//! Submodules implement the NumPy-like API surface:
+//! [`creation`], [`indexing`], [`elementwise`], [`reductions`], [`linalg`]
+//! (transpose/matmul), [`shuffle`], [`rechunk`].
+
+pub mod combine;
+pub mod creation;
+pub mod decomposition;
+pub mod elementwise;
+pub mod indexing;
+pub mod linalg;
+pub mod rechunk;
+pub mod reductions;
+pub mod shuffle;
+
+use anyhow::{bail, Result};
+
+use crate::storage::{CsrMatrix, DenseMatrix};
+use crate::tasking::{Future, Runtime};
+
+/// Distributed 2-D array divided in blocks (paper Fig 4).
+#[derive(Clone)]
+pub struct DsArray {
+    pub(crate) rt: Runtime,
+    /// Logical shape (rows, cols).
+    pub(crate) shape: (usize, usize),
+    /// Regular block shape; edge blocks are smaller when the shape does not
+    /// divide evenly (paper §4.2.2).
+    pub(crate) block_shape: (usize, usize),
+    /// Grid dimensions (block rows, block cols).
+    pub(crate) grid: (usize, usize),
+    /// Row-major grid of block futures.
+    pub(crate) blocks: Vec<Future>,
+    /// Whether blocks are CSR.
+    pub(crate) sparse: bool,
+}
+
+impl DsArray {
+    pub fn shape(&self) -> (usize, usize) {
+        self.shape
+    }
+    pub fn rows(&self) -> usize {
+        self.shape.0
+    }
+    pub fn cols(&self) -> usize {
+        self.shape.1
+    }
+    pub fn block_shape(&self) -> (usize, usize) {
+        self.block_shape
+    }
+    /// (block rows, block cols) of the grid.
+    pub fn grid(&self) -> (usize, usize) {
+        self.grid
+    }
+    pub fn n_blocks(&self) -> usize {
+        self.grid.0 * self.grid.1
+    }
+    pub fn is_sparse(&self) -> bool {
+        self.sparse
+    }
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Grid size for a logical size and block size.
+    pub(crate) fn grid_dim(total: usize, block: usize) -> usize {
+        total.div_ceil(block)
+    }
+
+    /// Logical row count of block-row `i` (edge rows are smaller).
+    pub fn block_rows_at(&self, i: usize) -> usize {
+        debug_assert!(i < self.grid.0);
+        (self.shape.0 - i * self.block_shape.0).min(self.block_shape.0)
+    }
+
+    /// Logical col count of block-col `j`.
+    pub fn block_cols_at(&self, j: usize) -> usize {
+        debug_assert!(j < self.grid.1);
+        (self.shape.1 - j * self.block_shape.1).min(self.block_shape.1)
+    }
+
+    /// Future of the block at grid position (i, j).
+    pub fn block(&self, i: usize, j: usize) -> Future {
+        debug_assert!(i < self.grid.0 && j < self.grid.1);
+        self.blocks[i * self.grid.1 + j]
+    }
+
+    /// All futures of block-row `i`, left to right.
+    pub fn block_row(&self, i: usize) -> Vec<Future> {
+        (0..self.grid.1).map(|j| self.block(i, j)).collect()
+    }
+
+    /// All futures of block-col `j`, top to bottom.
+    pub fn block_col(&self, j: usize) -> Vec<Future> {
+        (0..self.grid.0).map(|i| self.block(i, j)).collect()
+    }
+
+    /// Assemble a ds-array from an explicit grid of futures. Validates that
+    /// every block's metadata matches its grid slot.
+    pub(crate) fn from_parts(
+        rt: Runtime,
+        shape: (usize, usize),
+        block_shape: (usize, usize),
+        blocks: Vec<Future>,
+        sparse: bool,
+    ) -> Result<Self> {
+        let grid = (
+            Self::grid_dim(shape.0, block_shape.0),
+            Self::grid_dim(shape.1, block_shape.1),
+        );
+        if blocks.len() != grid.0 * grid.1 {
+            bail!(
+                "block count {} != grid {}x{}",
+                blocks.len(),
+                grid.0,
+                grid.1
+            );
+        }
+        let arr = Self {
+            rt,
+            shape,
+            block_shape,
+            grid,
+            blocks,
+            sparse,
+        };
+        for i in 0..grid.0 {
+            for j in 0..grid.1 {
+                let m = arr.block(i, j).meta;
+                let (er, ec) = (arr.block_rows_at(i), arr.block_cols_at(j));
+                if (m.rows, m.cols) != (er, ec) {
+                    bail!(
+                        "block ({i},{j}) meta {}x{} != expected {er}x{ec}",
+                        m.rows,
+                        m.cols
+                    );
+                }
+            }
+        }
+        Ok(arr)
+    }
+
+    /// Synchronize every block and assemble the full dense matrix — the
+    /// paper's `collect` (local mode only).
+    pub fn collect(&self) -> Result<DenseMatrix> {
+        let mut out = DenseMatrix::zeros(self.shape.0, self.shape.1);
+        for i in 0..self.grid.0 {
+            for j in 0..self.grid.1 {
+                let b = self.rt.wait(self.block(i, j))?;
+                let d = b.to_dense()?;
+                out.paste(i * self.block_shape.0, j * self.block_shape.1, &d)?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Synchronize and assemble as CSR (errors if the array is dense-backed).
+    pub fn collect_csr(&self) -> Result<CsrMatrix> {
+        if !self.sparse {
+            bail!("collect_csr on a dense-backed ds-array");
+        }
+        let mut row_panels: Vec<CsrMatrix> = Vec::with_capacity(self.grid.0);
+        for i in 0..self.grid.0 {
+            let mut row_parts: Vec<CsrMatrix> = Vec::with_capacity(self.grid.1);
+            for j in 0..self.grid.1 {
+                let b = self.rt.wait(self.block(i, j))?;
+                row_parts.push(b.as_csr()?.clone());
+            }
+            let refs: Vec<&CsrMatrix> = row_parts.iter().collect();
+            row_panels.push(CsrMatrix::hstack(&refs)?);
+        }
+        let refs: Vec<&CsrMatrix> = row_panels.iter().collect();
+        CsrMatrix::vstack(&refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::BlockMeta;
+    use crate::tasking::Runtime;
+
+    #[test]
+    fn grid_geometry_with_edge_blocks() {
+        let rt = Runtime::local(2);
+        let a = creation::zeros(&rt, (10, 7), (4, 3)).unwrap();
+        assert_eq!(a.grid(), (3, 3));
+        assert_eq!(a.block_rows_at(0), 4);
+        assert_eq!(a.block_rows_at(2), 2); // 10 = 4+4+2
+        assert_eq!(a.block_cols_at(2), 1); // 7 = 3+3+1
+        assert_eq!(a.block(2, 2).meta, BlockMeta::dense(2, 1));
+    }
+
+    #[test]
+    fn collect_assembles_blocks_in_order() {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(5, 6, |i, j| (i * 6 + j) as f32);
+        let a = creation::from_matrix(&rt, &m, (2, 4)).unwrap();
+        assert_eq!(a.grid(), (3, 2));
+        assert_eq!(a.collect().unwrap(), m);
+    }
+
+    #[test]
+    fn from_parts_validates_geometry() {
+        let rt = Runtime::local(1);
+        let a = creation::zeros(&rt, (4, 4), (2, 2)).unwrap();
+        // Wrong number of blocks.
+        let r = DsArray::from_parts(rt.clone(), (4, 4), (2, 2), a.blocks[..3].to_vec(), false);
+        assert!(r.is_err());
+        // Blocks in the wrong slots (transposed grid of a non-square array).
+        let b = creation::zeros(&rt, (4, 2), (2, 1)).unwrap();
+        let r = DsArray::from_parts(rt, (2, 4), (1, 2), b.blocks.clone(), false);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Re-blocking: change an array's block size (one gather task per output
+//! block). Datasets fix the partitioning at load time; ds-arrays can adapt
+//! it to the access pattern (paper §4.2 — "blocks of an arbitrary size").
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::storage::{Block, BlockMeta, DenseMatrix};
+use crate::tasking::CostHint;
+
+use super::DsArray;
+
+impl DsArray {
+    /// Return a new ds-array with the same contents and a different block
+    /// size. One task per output block, reading the overlapping inputs.
+    pub fn rechunk(&self, new_block: (usize, usize)) -> Result<DsArray> {
+        if new_block.0 == 0 || new_block.1 == 0 {
+            bail!("empty block shape {new_block:?}");
+        }
+        if new_block == self.block_shape {
+            return Ok(self.clone());
+        }
+        let (bs0, bs1) = self.block_shape;
+        let grid = (
+            DsArray::grid_dim(self.shape.0, new_block.0),
+            DsArray::grid_dim(self.shape.1, new_block.1),
+        );
+        let mut blocks = Vec::with_capacity(grid.0 * grid.1);
+        for oi in 0..grid.0 {
+            let or0 = oi * new_block.0;
+            let orn = (self.shape.0 - or0).min(new_block.0);
+            for oj in 0..grid.1 {
+                let oc0 = oj * new_block.1;
+                let ocn = (self.shape.1 - oc0).min(new_block.1);
+                let bi0 = or0 / bs0;
+                let bi1 = (or0 + orn - 1) / bs0;
+                let bj0 = oc0 / bs1;
+                let bj1 = (oc0 + ocn - 1) / bs1;
+                let mut futs = Vec::new();
+                let mut coords = Vec::new();
+                for bi in bi0..=bi1 {
+                    for bj in bj0..=bj1 {
+                        futs.push(self.block(bi, bj));
+                        coords.push((bi, bj));
+                    }
+                }
+                let meta = BlockMeta::dense(orn, ocn);
+                let out = self.rt.submit(
+                    "dsarray.rechunk.block",
+                    &futs,
+                    vec![meta],
+                    CostHint::default().with_bytes(2.0 * meta.bytes() as f64),
+                    Arc::new(move |ins: &[Arc<Block>]| {
+                        let mut out = DenseMatrix::zeros(orn, ocn);
+                        for (b, &(bi, bj)) in ins.iter().zip(&coords) {
+                            let d = b.to_dense()?;
+                            let br0 = bi * bs0;
+                            let bc0 = bj * bs1;
+                            let ir0 = or0.max(br0);
+                            let ic0 = oc0.max(bc0);
+                            let ir1 = (or0 + orn).min(br0 + d.rows());
+                            let ic1 = (oc0 + ocn).min(bc0 + d.cols());
+                            if ir0 >= ir1 || ic0 >= ic1 {
+                                continue;
+                            }
+                            let part = d.slice(ir0 - br0, ic0 - bc0, ir1 - ir0, ic1 - ic0)?;
+                            out.paste(ir0 - or0, ic0 - oc0, &part)?;
+                        }
+                        Ok(vec![Block::Dense(out)])
+                    }),
+                );
+                blocks.push(out[0]);
+            }
+        }
+        DsArray::from_parts(self.rt.clone(), self.shape, new_block, blocks, false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::creation;
+    use crate::storage::DenseMatrix;
+    use crate::tasking::Runtime;
+
+    #[test]
+    fn rechunk_preserves_contents() {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(10, 9, |i, j| (i * 9 + j) as f32);
+        let a = creation::from_matrix(&rt, &m, (3, 4)).unwrap();
+        for nb in [(2, 2), (5, 3), (10, 9), (4, 7), (1, 1)] {
+            let r = a.rechunk(nb).unwrap();
+            assert_eq!(r.block_shape(), nb);
+            assert_eq!(r.collect().unwrap(), m, "rechunk to {nb:?}");
+        }
+    }
+
+    #[test]
+    fn rechunk_same_shape_is_free() {
+        let rt = Runtime::local(1);
+        let a = creation::zeros(&rt, (4, 4), (2, 2)).unwrap();
+        let before = rt.metrics().total_tasks();
+        let r = a.rechunk((2, 2)).unwrap();
+        assert_eq!(rt.metrics().total_tasks(), before);
+        assert_eq!(r.grid(), a.grid());
+    }
+
+    #[test]
+    fn rechunk_task_count_one_per_output_block() {
+        let rt = Runtime::local(1);
+        let a = creation::zeros(&rt, (8, 8), (2, 2)).unwrap();
+        let before = rt.metrics();
+        a.rechunk((4, 4)).unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.tasks_for("dsarray.rechunk.block"), 4);
+    }
+
+    #[test]
+    fn enables_blocked_matmul_after_rechunk() {
+        let rt = Runtime::local(2);
+        let a = DenseMatrix::from_fn(4, 6, |i, j| (i + j) as f32);
+        let b = DenseMatrix::from_fn(6, 4, |i, j| (i * 4 + j) as f32 * 0.1);
+        let da = creation::from_matrix(&rt, &a, (2, 3)).unwrap();
+        let db = creation::from_matrix(&rt, &b, (2, 2)).unwrap();
+        // Incompatible inner blocks -> rechunk -> works.
+        assert!(da.matmul(&db).is_err());
+        let db2 = db.rechunk((3, 2)).unwrap();
+        let got = da.matmul(&db2).unwrap().collect().unwrap();
+        assert!(got.max_abs_diff(&a.matmul(&b).unwrap()) < 1e-5);
+    }
+}

@@ -1,0 +1,314 @@
+//! Axis reductions (paper §4.3, Fig 5): because ds-arrays are blocked along
+//! *both* axes, a column-wise reduction is one task per block-column (each
+//! reading that column's blocks as a collection) — the operation that
+//! Datasets could only do by loading everything into memory.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::storage::{Block, BlockMeta, DenseMatrix};
+use crate::tasking::{CostHint, Future};
+
+use super::DsArray;
+
+/// Which elementwise accumulation a reduction task applies.
+#[derive(Clone, Copy, Debug)]
+enum Kind {
+    Sum,
+    Min,
+    Max,
+    /// Sum of squares (for norms, fused — no intermediate `A**2` array).
+    SumSq,
+}
+
+impl Kind {
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Sum => "dsarray.reduce.sum",
+            Kind::Min => "dsarray.reduce.min",
+            Kind::Max => "dsarray.reduce.max",
+            Kind::SumSq => "dsarray.reduce.sumsq",
+        }
+    }
+
+    fn init(self) -> f32 {
+        match self {
+            Kind::Sum | Kind::SumSq => 0.0,
+            Kind::Min => f32::INFINITY,
+            Kind::Max => f32::NEG_INFINITY,
+        }
+    }
+
+    fn fold(self, acc: f32, x: f32) -> f32 {
+        match self {
+            Kind::Sum => acc + x,
+            Kind::SumSq => acc + x * x,
+            Kind::Min => acc.min(x),
+            Kind::Max => acc.max(x),
+        }
+    }
+
+    /// Merge two partial results (partials of SumSq are already squared).
+    fn combine(self, a: f32, b: f32) -> f32 {
+        match self {
+            Kind::Sum | Kind::SumSq => a + b,
+            Kind::Min => a.min(b),
+            Kind::Max => a.max(b),
+        }
+    }
+}
+
+impl DsArray {
+    /// Reduce along `axis` (0 = down columns → 1×cols; 1 = across rows →
+    /// rows×1). One task per block-column (axis 0) / block-row (axis 1).
+    fn reduce_axis(&self, kind: Kind, axis: usize) -> Result<DsArray> {
+        if axis > 1 {
+            bail!("axis must be 0 or 1, got {axis}");
+        }
+        let mut blocks = Vec::new();
+        if axis == 0 {
+            for j in 0..self.grid.1 {
+                let futs = self.block_col(j);
+                let c = self.block_cols_at(j);
+                let meta = BlockMeta::dense(1, c);
+                let flops: f64 = futs.iter().map(|f| (f.meta.rows * f.meta.cols) as f64).sum();
+                let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
+                let out = self.rt.submit(
+                    kind.name(),
+                    &futs,
+                    vec![meta],
+                    CostHint::flops(flops).with_bytes(bytes),
+                    reduce_fn(kind, axis),
+                );
+                blocks.push(out[0]);
+            }
+            DsArray::from_parts(
+                self.rt.clone(),
+                (1, self.shape.1),
+                (1, self.block_shape.1),
+                blocks,
+                false,
+            )
+        } else {
+            for i in 0..self.grid.0 {
+                let futs = self.block_row(i);
+                let r = self.block_rows_at(i);
+                let meta = BlockMeta::dense(r, 1);
+                let flops: f64 = futs.iter().map(|f| (f.meta.rows * f.meta.cols) as f64).sum();
+                let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
+                let out = self.rt.submit(
+                    kind.name(),
+                    &futs,
+                    vec![meta],
+                    CostHint::flops(flops).with_bytes(bytes),
+                    reduce_fn(kind, axis),
+                );
+                blocks.push(out[0]);
+            }
+            DsArray::from_parts(
+                self.rt.clone(),
+                (self.shape.0, 1),
+                (self.block_shape.0, 1),
+                blocks,
+                false,
+            )
+        }
+    }
+
+    /// Full reduction to a single future scalar (1×1 block): per-axis pass
+    /// then a final merge task over the partials.
+    fn reduce_all(&self, kind: Kind) -> Result<Future> {
+        let partial = self.reduce_axis(kind, 0)?; // 1 x cols in gc blocks
+        let futs: Vec<Future> = partial.blocks.clone();
+        let meta = BlockMeta::dense(1, 1);
+        let out = self.rt.submit(
+            "dsarray.reduce.final",
+            &futs,
+            vec![meta],
+            CostHint::flops(self.shape.1 as f64),
+            Arc::new(move |ins: &[Arc<Block>]| {
+                let mut acc = kind.init();
+                for b in ins {
+                    for &v in b.to_dense()?.data() {
+                        acc = kind.combine(acc, v);
+                    }
+                }
+                Ok(vec![Block::Dense(DenseMatrix::full(1, 1, acc))])
+            }),
+        );
+        Ok(out[0])
+    }
+
+    pub fn sum_axis(&self, axis: usize) -> Result<DsArray> {
+        self.reduce_axis(Kind::Sum, axis)
+    }
+
+    pub fn min_axis(&self, axis: usize) -> Result<DsArray> {
+        self.reduce_axis(Kind::Min, axis)
+    }
+
+    pub fn max_axis(&self, axis: usize) -> Result<DsArray> {
+        self.reduce_axis(Kind::Max, axis)
+    }
+
+    /// Mean along an axis (sum then scale).
+    pub fn mean_axis(&self, axis: usize) -> Result<DsArray> {
+        let n = if axis == 0 { self.shape.0 } else { self.shape.1 };
+        self.sum_axis(axis)?.mul_scalar(1.0 / n as f32)
+    }
+
+    /// L2 norm along an axis — fused sum-of-squares then sqrt, the paper's
+    /// `w.transpose().norm(axis=1)` building block.
+    pub fn norm_axis(&self, axis: usize) -> Result<DsArray> {
+        self.reduce_axis(Kind::SumSq, axis)?.sqrt()
+    }
+
+    /// Total sum as a synchronized scalar (local mode).
+    pub fn sum(&self) -> Result<f32> {
+        let f = self.reduce_all(Kind::Sum)?;
+        Ok(self.rt.wait(f)?.to_dense()?.get(0, 0))
+    }
+
+    pub fn min(&self) -> Result<f32> {
+        let f = self.reduce_all(Kind::Min)?;
+        Ok(self.rt.wait(f)?.to_dense()?.get(0, 0))
+    }
+
+    pub fn max(&self) -> Result<f32> {
+        let f = self.reduce_all(Kind::Max)?;
+        Ok(self.rt.wait(f)?.to_dense()?.get(0, 0))
+    }
+
+    pub fn mean(&self) -> Result<f32> {
+        Ok(self.sum()? / (self.shape.0 * self.shape.1) as f32)
+    }
+
+    /// Frobenius norm as a synchronized scalar.
+    pub fn norm(&self) -> Result<f32> {
+        let f = self.reduce_all(Kind::SumSq)?;
+        Ok(self.rt.wait(f)?.to_dense()?.get(0, 0).sqrt())
+    }
+}
+
+fn reduce_fn(kind: Kind, axis: usize) -> crate::tasking::TaskFn {
+    Arc::new(move |ins: &[Arc<Block>]| {
+        let first = ins[0].to_dense()?;
+        let mut acc = match axis {
+            0 => DenseMatrix::full(1, first.cols(), kind.init()),
+            _ => DenseMatrix::full(first.rows(), 1, kind.init()),
+        };
+        for b in ins {
+            let d = b.to_dense()?;
+            if axis == 0 {
+                for i in 0..d.rows() {
+                    for (a, &v) in acc.data_mut().iter_mut().zip(d.row(i)) {
+                        *a = kind.fold(*a, v);
+                    }
+                }
+            } else {
+                for i in 0..d.rows() {
+                    let folded = d.row(i).iter().fold(acc.get(i, 0), |a, &v| kind.fold(a, v));
+                    acc.set(i, 0, folded);
+                }
+            }
+        }
+        Ok(vec![Block::Dense(acc)])
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::creation;
+    use crate::storage::DenseMatrix;
+    use crate::tasking::Runtime;
+    use crate::util::prop::all_close;
+
+    fn setup() -> (Runtime, DenseMatrix, super::DsArray) {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(6, 8, |i, j| ((i * 8 + j) % 11) as f32 - 5.0);
+        let a = creation::from_matrix(&rt, &m, (2, 3)).unwrap();
+        (rt, m, a)
+    }
+
+    #[test]
+    fn axis_sums_match_reference() {
+        let (_rt, m, a) = setup();
+        let s0 = a.sum_axis(0).unwrap().collect().unwrap();
+        assert!(all_close(s0.data(), m.sum_axis(0).data(), 1e-5));
+        let s1 = a.sum_axis(1).unwrap().collect().unwrap();
+        assert!(all_close(s1.data(), m.sum_axis(1).data(), 1e-5));
+        assert!(a.sum_axis(2).is_err());
+    }
+
+    #[test]
+    fn min_max_mean() {
+        let (_rt, m, a) = setup();
+        let mn = a.min_axis(0).unwrap().collect().unwrap();
+        assert_eq!(mn.data(), m.fold_axis(0, f32::INFINITY, f32::min).data());
+        let mx = a.max_axis(1).unwrap().collect().unwrap();
+        assert_eq!(mx.data(), m.fold_axis(1, f32::NEG_INFINITY, f32::max).data());
+        let mean = a.mean_axis(0).unwrap().collect().unwrap();
+        let want = m.sum_axis(0).map(|x| x / 6.0);
+        assert!(all_close(mean.data(), want.data(), 1e-5));
+    }
+
+    #[test]
+    fn scalar_reductions() {
+        let (_rt, m, a) = setup();
+        assert!((a.sum().unwrap() - m.sum()).abs() < 1e-4);
+        assert_eq!(a.min().unwrap(), -5.0);
+        assert_eq!(a.max().unwrap(), 5.0);
+        assert!((a.norm().unwrap() - m.norm()).abs() < 1e-4);
+        assert!((a.mean().unwrap() - m.sum() / 48.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn norm_axis_fused_matches_two_step() {
+        let (_rt, m, a) = setup();
+        let fused = a.norm_axis(1).unwrap().collect().unwrap();
+        let want: Vec<f32> = (0..m.rows())
+            .map(|i| m.row(i).iter().map(|&x| x * x).sum::<f32>().sqrt())
+            .collect();
+        assert!(all_close(fused.data(), &want, 1e-5));
+    }
+
+    #[test]
+    fn task_counts_one_per_block_line() {
+        // Fig 5: column-of-blocks per task.
+        let (rt, _m, a) = setup();
+        let before = rt.metrics();
+        a.sum_axis(0).unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.total_tasks(), a.grid().1 as u64);
+        let before = rt.metrics();
+        a.sum_axis(1).unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.total_tasks(), a.grid().0 as u64);
+    }
+
+    #[test]
+    fn paper_expression_sqrt_norm_sq() {
+        // sqrt(||w^T||_2^2) per the paper's §4.2.3 chaining example.
+        let (_rt, m, a) = setup();
+        let expr = a
+            .transpose()
+            .unwrap()
+            .norm_axis(1)
+            .unwrap()
+            .pow(2.0)
+            .unwrap()
+            .sqrt()
+            .unwrap();
+        let got = expr.collect().unwrap();
+        let want: Vec<f32> = (0..m.cols())
+            .map(|j| {
+                (0..m.rows())
+                    .map(|i| m.get(i, j) * m.get(i, j))
+                    .sum::<f32>()
+                    .sqrt()
+            })
+            .collect();
+        assert!(all_close(got.data(), &want, 1e-4));
+    }
+}

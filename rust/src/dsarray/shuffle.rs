@@ -1,0 +1,278 @@
+//! Row shuffle (paper §5.4): redistributing rows across block-rows.
+//!
+//! With PyCOMPSs collection parameters a shuffle is **2N tasks** for an
+//! N×M grid: N "part" tasks (each reads its block-row and emits N parts via
+//! COLLECTION_OUT) and N "merge" tasks (each reads one part from every
+//! source via COLLECTION_IN and emits the new block-row). The
+//! no-collections variant — what the Dataset baseline is stuck with — needs
+//! one task per (source, destination) pair: N²+N tasks. Both are
+//! implemented here; the second feeds the ABL-COLL ablation.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::storage::{Block, BlockMeta, DenseMatrix};
+use crate::tasking::{CostHint, Future};
+use crate::util::rng::Xoshiro256;
+
+use super::DsArray;
+
+/// Destination bookkeeping computed on the master (the permutation is
+/// master-side in dislib too: task outputs must have known sizes).
+struct Plan {
+    /// For (source block-row i, dest block-row d): local source rows, in
+    /// destination order.
+    part_rows: Vec<Vec<Vec<usize>>>,
+    /// For (i, d): destination-local positions of those rows.
+    part_dest: Vec<Vec<Vec<usize>>>,
+}
+
+impl DsArray {
+    fn shuffle_plan(&self, seed: u64) -> Plan {
+        let n = self.grid.0;
+        let bs0 = self.block_shape.0;
+        let total = self.shape.0;
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        // p[new_pos] = old_row  =>  dest[old_row] = new_pos.
+        let p = rng.permutation(total);
+        let mut dest = vec![0usize; total];
+        for (new_pos, &old) in p.iter().enumerate() {
+            dest[old] = new_pos;
+        }
+        let mut part_rows = vec![vec![Vec::new(); n]; n];
+        let mut part_dest = vec![vec![Vec::new(); n]; n];
+        for i in 0..n {
+            let r0 = i * bs0;
+            let rows = self.block_rows_at(i);
+            // Collect (new_pos, local_row), sorted by new_pos within each dest.
+            let mut by_dest: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
+            for l in 0..rows {
+                let np = dest[r0 + l];
+                let d = np / bs0;
+                by_dest[d].push((np, l));
+            }
+            for (d, mut v) in by_dest.into_iter().enumerate() {
+                v.sort_unstable();
+                part_rows[i][d] = v.iter().map(|&(_, l)| l).collect();
+                part_dest[i][d] = v.iter().map(|&(np, _)| np - d * bs0).collect();
+            }
+        }
+        Plan {
+            part_rows,
+            part_dest,
+        }
+    }
+
+    /// Shuffle rows with collection parameters: 2N tasks (paper §4.3).
+    /// Densifies sparse arrays (rows are reassembled elementwise).
+    pub fn shuffle_rows(&self, seed: u64) -> Result<DsArray> {
+        self.shuffle_impl(seed, true)
+    }
+
+    /// Ablation variant without collection outputs: one part task per
+    /// (source, destination) pair — N²+N tasks, the pre-collections
+    /// topology (paper §4.3: "2N with collections and N²+N without").
+    pub fn shuffle_rows_no_collections(&self, seed: u64) -> Result<DsArray> {
+        self.shuffle_impl(seed, false)
+    }
+
+    fn shuffle_impl(&self, seed: u64, collections: bool) -> Result<DsArray> {
+        if self.shape.0 < 2 {
+            bail!("shuffle needs at least 2 rows");
+        }
+        let n = self.grid.0;
+        let gc = self.grid.1;
+        let cols = self.shape.1;
+        let plan = self.shuffle_plan(seed);
+
+        // ---- Phase 1: part tasks ----
+        // parts[d][i] = future of the part moving from source i to dest d.
+        let mut parts: Vec<Vec<Future>> = vec![Vec::with_capacity(n); n];
+        for i in 0..n {
+            let futs = self.block_row(i);
+            let in_bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
+            if collections {
+                // One task, N collection outputs.
+                let metas: Vec<BlockMeta> = (0..n)
+                    .map(|d| BlockMeta::dense(plan.part_rows[i][d].len(), cols))
+                    .collect();
+                let rows_by_dest: Vec<Vec<usize>> = plan.part_rows[i].clone();
+                let out = self.rt.submit(
+                    "dsarray.shuffle.part",
+                    &futs,
+                    metas,
+                    CostHint::default().with_bytes(2.0 * in_bytes),
+                    part_fn(rows_by_dest, cols),
+                );
+                for (d, f) in out.into_iter().enumerate() {
+                    parts[d].push(f);
+                }
+            } else {
+                // One task per destination.
+                for d in 0..n {
+                    let meta = BlockMeta::dense(plan.part_rows[i][d].len(), cols);
+                    let rows_one = vec![plan.part_rows[i][d].clone()];
+                    let out = self.rt.submit(
+                        "dsarray.shuffle_nocoll.part",
+                        &futs,
+                        vec![meta],
+                        CostHint::default().with_bytes(in_bytes / n as f64 * 2.0),
+                        part_fn(rows_one, cols),
+                    );
+                    parts[d].push(out[0]);
+                }
+            }
+        }
+
+        // ---- Phase 2: merge tasks (one per destination block-row) ----
+        let op_name: &'static str = if collections {
+            "dsarray.shuffle.merge"
+        } else {
+            "dsarray.shuffle_nocoll.merge"
+        };
+        let mut blocks = Vec::with_capacity(n * gc);
+        for d in 0..n {
+            let rows_d = self.block_rows_at(d);
+            let futs = parts[d].clone();
+            let in_bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
+            let metas: Vec<BlockMeta> = (0..gc)
+                .map(|j| BlockMeta::dense(rows_d, self.block_cols_at(j)))
+                .collect();
+            // Destination-local position of each incoming part row, in
+            // source-major order.
+            let positions: Vec<Vec<usize>> = (0..n).map(|i| plan.part_dest[i][d].clone()).collect();
+            let bs1 = self.block_shape.1;
+            let out = self.rt.submit(
+                op_name,
+                &futs,
+                metas,
+                CostHint::default().with_bytes(2.0 * in_bytes),
+                Arc::new(move |ins: &[Arc<Block>]| {
+                    let mut panel = DenseMatrix::zeros(rows_d, cols);
+                    for (part, pos) in ins.iter().zip(&positions) {
+                        let p = part.to_dense()?;
+                        debug_assert_eq!(p.rows(), pos.len());
+                        for (k, &dst) in pos.iter().enumerate() {
+                            panel.row_mut(dst).copy_from_slice(p.row(k));
+                        }
+                    }
+                    // Split the assembled row panel into grid blocks.
+                    let mut outs = Vec::new();
+                    let mut c0 = 0;
+                    while c0 < cols {
+                        let c = (cols - c0).min(bs1);
+                        outs.push(Block::Dense(panel.slice(0, c0, rows_d, c)?));
+                        c0 += c;
+                    }
+                    Ok(outs)
+                }),
+            );
+            blocks.extend(out);
+        }
+        DsArray::from_parts(self.rt.clone(), self.shape, self.block_shape, blocks, false)
+    }
+}
+
+/// Part task: read a block-row (as blocks), emit one part per destination
+/// (rows in destination order, full width).
+fn part_fn(rows_by_dest: Vec<Vec<usize>>, cols: usize) -> crate::tasking::TaskFn {
+    Arc::new(move |ins: &[Arc<Block>]| {
+        // Assemble the full-width row panel once.
+        let dense: Vec<DenseMatrix> = ins
+            .iter()
+            .map(|b| b.to_dense())
+            .collect::<Result<_>>()?;
+        let refs: Vec<&DenseMatrix> = dense.iter().collect();
+        let panel = DenseMatrix::hstack(&refs)?;
+        debug_assert_eq!(panel.cols(), cols);
+        let mut outs = Vec::with_capacity(rows_by_dest.len());
+        for rows in &rows_by_dest {
+            let mut part = DenseMatrix::zeros(rows.len(), cols);
+            for (k, &l) in rows.iter().enumerate() {
+                part.row_mut(k).copy_from_slice(panel.row(l));
+            }
+            outs.push(Block::Dense(part));
+        }
+        Ok(outs)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::creation;
+    use crate::storage::DenseMatrix;
+    use crate::tasking::Runtime;
+
+    /// Sorted rows (as tuples) for multiset comparison.
+    fn row_multiset(m: &DenseMatrix) -> Vec<Vec<u32>> {
+        let mut rows: Vec<Vec<u32>> = (0..m.rows())
+            .map(|i| m.row(i).iter().map(|&x| x.to_bits()).collect())
+            .collect();
+        rows.sort();
+        rows
+    }
+
+    fn setup(rows: usize, cols: usize, bs: (usize, usize)) -> (Runtime, DenseMatrix, super::DsArray) {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(rows, cols, |i, j| (i * cols + j) as f32);
+        let a = creation::from_matrix(&rt, &m, bs).unwrap();
+        (rt, m, a)
+    }
+
+    #[test]
+    fn shuffle_preserves_row_multiset() {
+        let (_rt, m, a) = setup(10, 6, (3, 2));
+        let s = a.shuffle_rows(99).unwrap();
+        let got = s.collect().unwrap();
+        assert_eq!(row_multiset(&got), row_multiset(&m));
+        assert_ne!(got, m, "seeded shuffle should move rows");
+    }
+
+    #[test]
+    fn shuffle_task_count_is_2n() {
+        let (rt, _m, a) = setup(12, 4, (3, 2)); // N = 4 block rows
+        let before = rt.metrics();
+        a.shuffle_rows(1).unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.tasks_for("dsarray.shuffle.part"), 4);
+        assert_eq!(d.tasks_for("dsarray.shuffle.merge"), 4);
+        assert_eq!(d.total_tasks(), 8); // 2N
+    }
+
+    #[test]
+    fn no_collections_variant_same_result_more_tasks() {
+        let (rt, m, a) = setup(12, 4, (3, 2)); // N = 4
+        let s1 = a.shuffle_rows(7).unwrap().collect().unwrap();
+        let before = rt.metrics();
+        let s2 = a.shuffle_rows_no_collections(7).unwrap();
+        let d = rt.metrics().since(&before);
+        // N² part tasks + N merge tasks.
+        assert_eq!(d.tasks_for("dsarray.shuffle_nocoll.part"), 16);
+        assert_eq!(d.tasks_for("dsarray.shuffle_nocoll.merge"), 4);
+        let s2 = s2.collect().unwrap();
+        // Same seed => identical permutation either way.
+        assert_eq!(s1, s2);
+        assert_eq!(row_multiset(&s1), row_multiset(&m));
+    }
+
+    #[test]
+    fn shuffle_is_seed_deterministic() {
+        let (_rt, _m, a) = setup(9, 3, (2, 3));
+        let s1 = a.shuffle_rows(5).unwrap().collect().unwrap();
+        let s2 = a.shuffle_rows(5).unwrap().collect().unwrap();
+        let s3 = a.shuffle_rows(6).unwrap().collect().unwrap();
+        assert_eq!(s1, s2);
+        assert_ne!(s1, s3);
+    }
+
+    #[test]
+    fn shuffle_multi_column_grid() {
+        let (_rt, m, a) = setup(8, 9, (2, 4)); // 4x3 grid
+        let s = a.shuffle_rows(3).unwrap();
+        assert_eq!(s.shape(), (8, 9));
+        assert_eq!(s.grid(), (4, 3));
+        // Rows stay intact across the full width (no column mixing).
+        assert_eq!(row_multiset(&s.collect().unwrap()), row_multiset(&m));
+    }
+}

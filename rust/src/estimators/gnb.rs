@@ -1,0 +1,274 @@
+//! Gaussian Naive Bayes — per-class feature moments computed distributed
+//! (one stats task per (block-row, class) pass + a reduction), prediction
+//! per block-row. A natural fit for ds-arrays: the fit is one masked
+//! column-stats sweep per class, the same primitive the scaler uses.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::dsarray::DsArray;
+use crate::storage::{Block, BlockMeta, DenseMatrix};
+use crate::tasking::CostHint;
+
+use super::Estimator;
+
+pub struct GaussianNb {
+    /// Class labels seen at fit (sorted).
+    pub classes: Vec<f32>,
+    /// Per class: (1, f) means.
+    pub means: Vec<DenseMatrix>,
+    /// Per class: (1, f) variances.
+    pub vars: Vec<DenseMatrix>,
+    /// Per class: prior probability.
+    pub priors: Vec<f64>,
+    pub var_smoothing: f32,
+}
+
+impl Default for GaussianNb {
+    fn default() -> Self {
+        Self {
+            classes: Vec::new(),
+            means: Vec::new(),
+            vars: Vec::new(),
+            priors: Vec::new(),
+            var_smoothing: 1e-6,
+        }
+    }
+}
+
+impl GaussianNb {
+    fn log_likelihood(&self, row: &[f32], class_idx: usize) -> f64 {
+        let mean = &self.means[class_idx];
+        let var = &self.vars[class_idx];
+        let mut ll = self.priors[class_idx].ln();
+        for (j, &x) in row.iter().enumerate() {
+            let v = (var.get(0, j) + self.var_smoothing) as f64;
+            let d = (x - mean.get(0, j)) as f64;
+            ll += -0.5 * ((2.0 * std::f64::consts::PI * v).ln() + d * d / v);
+        }
+        ll
+    }
+}
+
+impl Estimator for GaussianNb {
+    fn fit(&mut self, x: &DsArray, y: Option<&DsArray>) -> Result<()> {
+        let y = y.ok_or_else(|| anyhow::anyhow!("gaussian nb needs labels"))?;
+        if y.shape() != (x.rows(), 1) || y.block_shape().0 != x.block_shape().0 {
+            bail!("labels must be {}x1 with matching row blocking", x.rows());
+        }
+        let rt = x.runtime().clone();
+        if rt.is_sim() {
+            bail!("gnb fit requires synchronization (local mode)");
+        }
+        let f = x.cols();
+        let gc = x.grid().1;
+
+        // Discover classes (synchronizes labels — small column).
+        let labels = y.collect()?;
+        let mut classes: Vec<f32> = labels.data().to_vec();
+        classes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        classes.dedup();
+        if classes.len() < 2 {
+            bail!("need at least 2 classes, got {}", classes.len());
+        }
+
+        // Per (block-row, class): masked sums/sumsq/count tasks; reduce on
+        // the master (small 1×f partials).
+        let mut means = Vec::with_capacity(classes.len());
+        let mut vars = Vec::with_capacity(classes.len());
+        let mut priors = Vec::with_capacity(classes.len());
+        for &cls in &classes {
+            let mut partials = Vec::with_capacity(x.grid().0);
+            for i in 0..x.grid().0 {
+                let mut reads = x.block_row(i);
+                reads.push(y.block(i, 0));
+                let metas = vec![
+                    BlockMeta::dense(1, f),
+                    BlockMeta::dense(1, f),
+                    BlockMeta::dense(1, 1),
+                ];
+                let rows = x.block_rows_at(i);
+                let out = rt.submit(
+                    "gnb.class_stats",
+                    &reads,
+                    metas,
+                    CostHint::flops(3.0 * (rows * f) as f64),
+                    Arc::new(move |ins: &[Arc<Block>]| {
+                        let dense: Vec<DenseMatrix> = ins[..gc]
+                            .iter()
+                            .map(|b| b.to_dense())
+                            .collect::<Result<_>>()?;
+                        let refs: Vec<&DenseMatrix> = dense.iter().collect();
+                        let panel = DenseMatrix::hstack(&refs)?;
+                        let lab = ins[gc].to_dense()?;
+                        let mut sums = DenseMatrix::zeros(1, panel.cols());
+                        let mut sq = DenseMatrix::zeros(1, panel.cols());
+                        let mut count = 0.0f32;
+                        for r in 0..panel.rows() {
+                            if lab.get(r, 0) != cls {
+                                continue;
+                            }
+                            count += 1.0;
+                            for (j, &v) in panel.row(r).iter().enumerate() {
+                                sums.set(0, j, sums.get(0, j) + v);
+                                sq.set(0, j, sq.get(0, j) + v * v);
+                            }
+                        }
+                        Ok(vec![
+                            Block::Dense(sums),
+                            Block::Dense(sq),
+                            Block::Dense(DenseMatrix::full(1, 1, count)),
+                        ])
+                    }),
+                );
+                partials.push(out);
+            }
+            // Master-side reduce (partials are tiny).
+            let mut sums = DenseMatrix::zeros(1, f);
+            let mut sq = DenseMatrix::zeros(1, f);
+            let mut count = 0.0f32;
+            for p in partials {
+                sums.axpy(1.0, &rt.wait(p[0])?.to_dense()?)?;
+                sq.axpy(1.0, &rt.wait(p[1])?.to_dense()?)?;
+                count += rt.wait(p[2])?.to_dense()?.get(0, 0);
+            }
+            if count == 0.0 {
+                bail!("class {cls} has no samples");
+            }
+            let mean = sums.map(|s| s / count);
+            let var = DenseMatrix::from_fn(1, f, |_, j| {
+                (sq.get(0, j) / count - mean.get(0, j) * mean.get(0, j)).max(0.0)
+            });
+            means.push(mean);
+            vars.push(var);
+            priors.push(count as f64 / x.rows() as f64);
+        }
+        self.classes = classes;
+        self.means = means;
+        self.vars = vars;
+        self.priors = priors;
+        Ok(())
+    }
+
+    fn predict(&self, x: &DsArray) -> Result<DsArray> {
+        if self.classes.is_empty() {
+            bail!("predict before fit");
+        }
+        let rt = x.runtime().clone();
+        let model = Arc::new(GaussianNb {
+            classes: self.classes.clone(),
+            means: self.means.clone(),
+            vars: self.vars.clone(),
+            priors: self.priors.clone(),
+            var_smoothing: self.var_smoothing,
+        });
+        let gc = x.grid().1;
+        let mut blocks = Vec::with_capacity(x.grid().0);
+        for i in 0..x.grid().0 {
+            let reads = x.block_row(i);
+            let rows = x.block_rows_at(i);
+            let model = Arc::clone(&model);
+            let out = rt.submit(
+                "gnb.predict",
+                &reads,
+                vec![BlockMeta::dense(rows, 1)],
+                CostHint::flops((rows * x.cols() * self.classes.len()) as f64 * 4.0),
+                Arc::new(move |ins: &[Arc<Block>]| {
+                    let dense: Vec<DenseMatrix> = ins[..gc]
+                        .iter()
+                        .map(|b| b.to_dense())
+                        .collect::<Result<_>>()?;
+                    let refs: Vec<&DenseMatrix> = dense.iter().collect();
+                    let panel = DenseMatrix::hstack(&refs)?;
+                    let mut out = DenseMatrix::zeros(panel.rows(), 1);
+                    for r in 0..panel.rows() {
+                        let row = panel.row(r);
+                        let (mut best_ll, mut best_c) = (f64::NEG_INFINITY, 0.0f32);
+                        for (ci, &cls) in model.classes.iter().enumerate() {
+                            let ll = model.log_likelihood(row, ci);
+                            if ll > best_ll {
+                                best_ll = ll;
+                                best_c = cls;
+                            }
+                        }
+                        out.set(r, 0, best_c);
+                    }
+                    Ok(vec![Block::Dense(out)])
+                }),
+            );
+            blocks.push(out[0]);
+        }
+        DsArray::from_parts(rt, (x.rows(), 1), (x.block_shape().0, 1), blocks, false)
+    }
+
+    fn score(&self, x: &DsArray, y: &DsArray) -> Result<f64> {
+        let pred = self.predict(x)?.collect()?;
+        let truth = y.collect()?;
+        let hits = pred
+            .data()
+            .iter()
+            .zip(truth.data())
+            .filter(|(p, t)| p == t)
+            .count();
+        Ok(hits as f64 / truth.rows() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::blobs;
+    use crate::dsarray::creation;
+    use crate::tasking::Runtime;
+
+    #[test]
+    fn separable_blobs_high_accuracy() {
+        let rt = Runtime::local(2);
+        let (data, truth) = blobs(120, 6, 3, 0.8, 4);
+        let x = creation::from_matrix(&rt, &data, (20, 3)).unwrap();
+        let y_m = DenseMatrix::from_fn(120, 1, |i, _| truth[i] as f32);
+        let y = creation::from_matrix(&rt, &y_m, (20, 1)).unwrap();
+        let mut gnb = GaussianNb::default();
+        gnb.fit(&x, Some(&y)).unwrap();
+        assert_eq!(gnb.classes, vec![0.0, 1.0, 2.0]);
+        // Priors sum to 1 and reflect the balanced blobs.
+        let psum: f64 = gnb.priors.iter().sum();
+        assert!((psum - 1.0).abs() < 1e-9);
+        for &p in &gnb.priors {
+            assert!((p - 1.0 / 3.0).abs() < 0.05, "prior {p}");
+        }
+        assert!(gnb.score(&x, &y).unwrap() > 0.98);
+    }
+
+    #[test]
+    fn recovers_class_moments() {
+        let rt = Runtime::local(2);
+        // Two classes with known means 0 / 10.
+        let n = 200;
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(1);
+        let data = DenseMatrix::from_fn(n, 2, |i, _| {
+            (if i % 2 == 0 { 0.0 } else { 10.0 }) + rng.next_normal()
+        });
+        let labels = DenseMatrix::from_fn(n, 1, |i, _| (i % 2) as f32);
+        let x = creation::from_matrix(&rt, &data, (32, 2)).unwrap();
+        let y = creation::from_matrix(&rt, &labels, (32, 1)).unwrap();
+        let mut gnb = GaussianNb::default();
+        gnb.fit(&x, Some(&y)).unwrap();
+        assert!((gnb.means[0].get(0, 0) - 0.0).abs() < 0.3);
+        assert!((gnb.means[1].get(0, 0) - 10.0).abs() < 0.3);
+        assert!((gnb.vars[0].get(0, 0) - 1.0).abs() < 0.4);
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        let rt = Runtime::local(1);
+        let x = creation::zeros(&rt, (8, 2), (4, 2)).unwrap();
+        let mut gnb = GaussianNb::default();
+        assert!(gnb.fit(&x, None).is_err());
+        // Single class.
+        let y = creation::zeros(&rt, (8, 1), (4, 1)).unwrap();
+        assert!(gnb.fit(&x, Some(&y)).is_err());
+        assert!(GaussianNb::default().predict(&x).is_err());
+    }
+}

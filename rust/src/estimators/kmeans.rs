@@ -1,0 +1,600 @@
+//! K-means clustering (paper §5.5) — the control experiment: its
+//! parallelization (per-partition partial sums + reduction + center update)
+//! is identical on ds-arrays and Datasets, so performance should match.
+//!
+//! Hot path: the fused Pallas `kmeans_assign` artifact via PJRT when blocks
+//! fit the canonical shapes (k ≤ 8, features ≤ 128), tiled over sample rows
+//! on the Rust side; native fallback otherwise. The whole iteration is a
+//! task graph (partials → tree reduction → center update task), so the same
+//! code runs under the local executor and the cluster simulator.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::dataset::Dataset;
+use crate::dsarray::DsArray;
+use crate::storage::{Block, BlockMeta, DenseMatrix};
+use crate::tasking::{CostHint, Future, Runtime};
+use crate::util::rng::Xoshiro256;
+
+use super::Estimator;
+
+/// Arity of the partial-sum reduction tree.
+const REDUCE_ARITY: usize = 8;
+
+#[derive(Clone, Debug)]
+pub struct KMeansConfig {
+    pub k: usize,
+    pub max_iter: usize,
+    /// Stop when the relative inertia improvement drops below this
+    /// (ignored in sim mode, where nothing can synchronize).
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl Default for KMeansConfig {
+    fn default() -> Self {
+        Self {
+            k: 8,
+            max_iter: 10,
+            tol: 1e-4,
+            seed: 42,
+        }
+    }
+}
+
+pub struct KMeans {
+    pub cfg: KMeansConfig,
+    /// (k, f) fitted centers (local mode).
+    pub centers: Option<DenseMatrix>,
+    /// Inertia (sum of squared distances) at the last iteration.
+    pub inertia: f64,
+    /// Iterations actually executed.
+    pub n_iter: usize,
+}
+
+impl KMeans {
+    pub fn new(cfg: KMeansConfig) -> Self {
+        Self {
+            cfg,
+            centers: None,
+            inertia: f64::INFINITY,
+            n_iter: 0,
+        }
+    }
+
+    /// One assignment pass: per block-row partial task (+ tree reduction).
+    /// Returns futures of (psum (k,f), pcount (1,k), pssd (1,1)) reduced
+    /// over the whole array.
+    fn assignment_round(
+        rt: &Runtime,
+        x: &DsArray,
+        centers_fut: Future,
+        k: usize,
+    ) -> (Future, Future, Future) {
+        let f = x.cols();
+        let mut partials: Vec<(Future, Future, Future)> = Vec::with_capacity(x.grid().0);
+        for i in 0..x.grid().0 {
+            let mut reads = x.block_row(i);
+            let rows = x.block_rows_at(i);
+            reads.push(centers_fut);
+            let metas = vec![
+                BlockMeta::dense(k, f),
+                BlockMeta::dense(1, k),
+                BlockMeta::dense(1, 1),
+            ];
+            let bytes: f64 = reads.iter().map(|r| r.meta.bytes() as f64).sum();
+            // distances: 3*rows*f*k flops, psum matmul: 2*rows*k*f.
+            let flops = 5.0 * rows as f64 * f as f64 * k as f64;
+            let gc = x.grid().1;
+            let out = rt.submit(
+                "kmeans.partial",
+                &reads,
+                metas,
+                CostHint::flops(flops).with_bytes(bytes),
+                Arc::new(move |ins: &[Arc<Block>]| {
+                    let centers = ins[gc].to_dense()?;
+                    // Assemble the full-width sample panel.
+                    let dense: Vec<DenseMatrix> = ins[..gc]
+                        .iter()
+                        .map(|b| b.to_dense())
+                        .collect::<Result<_>>()?;
+                    let refs: Vec<&DenseMatrix> = dense.iter().collect();
+                    let panel = DenseMatrix::hstack(&refs)?;
+                    let (psum, pcount, pssd) = assign_block(&panel, &centers)?;
+                    Ok(vec![
+                        Block::Dense(psum),
+                        Block::Dense(pcount),
+                        Block::Dense(DenseMatrix::full(1, 1, pssd)),
+                    ])
+                }),
+            );
+            partials.push((out[0], out[1], out[2]));
+        }
+        // Tree reduction of the partial triples.
+        let mut level = partials;
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity(level.len().div_ceil(REDUCE_ARITY));
+            for chunk in level.chunks(REDUCE_ARITY) {
+                if chunk.len() == 1 {
+                    next.push(chunk[0]);
+                    continue;
+                }
+                let mut reads = Vec::with_capacity(chunk.len() * 3);
+                for &(s, c, d) in chunk {
+                    reads.push(s);
+                    reads.push(c);
+                    reads.push(d);
+                }
+                let metas = vec![
+                    BlockMeta::dense(k, f),
+                    BlockMeta::dense(1, k),
+                    BlockMeta::dense(1, 1),
+                ];
+                let out = rt.submit(
+                    "kmeans.reduce",
+                    &reads,
+                    metas,
+                    CostHint::flops((chunk.len() * k * (f + 1)) as f64),
+                    Arc::new(move |ins: &[Arc<Block>]| {
+                        let mut psum = ins[0].to_dense()?;
+                        let mut pcount = ins[1].to_dense()?;
+                        let mut pssd = ins[2].to_dense()?;
+                        for triple in ins[3..].chunks(3) {
+                            psum.axpy(1.0, &triple[0].to_dense()?)?;
+                            pcount.axpy(1.0, &triple[1].to_dense()?)?;
+                            pssd.axpy(1.0, &triple[2].to_dense()?)?;
+                        }
+                        Ok(vec![
+                            Block::Dense(psum),
+                            Block::Dense(pcount),
+                            Block::Dense(pssd),
+                        ])
+                    }),
+                );
+                next.push((out[0], out[1], out[2]));
+            }
+            level = next;
+        }
+        level[0]
+    }
+
+    /// Submit the center-update task: new centers from reduced partials
+    /// (empty clusters keep their previous center, like dislib).
+    fn update_round(
+        rt: &Runtime,
+        reduced: (Future, Future, Future),
+        centers_fut: Future,
+        k: usize,
+        f: usize,
+    ) -> Future {
+        let (psum, pcount, _) = reduced;
+        let out = rt.submit(
+            "kmeans.update",
+            &[psum, pcount, centers_fut],
+            vec![BlockMeta::dense(k, f)],
+            CostHint::flops((k * f) as f64),
+            Arc::new(move |ins: &[Arc<Block>]| {
+                let psum = ins[0].to_dense()?;
+                let pcount = ins[1].to_dense()?;
+                let old = ins[2].to_dense()?;
+                let mut new = old.clone();
+                for kk in 0..psum.rows() {
+                    let n = pcount.get(0, kk);
+                    if n > 0.0 {
+                        for j in 0..psum.cols() {
+                            new.set(kk, j, psum.get(kk, j) / n);
+                        }
+                    }
+                }
+                Ok(vec![Block::Dense(new)])
+            }),
+        );
+        out[0]
+    }
+
+    /// Build the full iteration graph. In local mode, synchronizes per
+    /// iteration for the tolerance check; in sim mode runs `max_iter`
+    /// fully asynchronous rounds.
+    pub fn fit_dsarray(&mut self, x: &DsArray) -> Result<()> {
+        let rt = x.runtime().clone();
+        let k = self.cfg.k;
+        let f = x.cols();
+        if k == 0 || k > x.rows() {
+            bail!("k={k} invalid for {} samples", x.rows());
+        }
+        // Init: random centers in the unit cube (dislib default is random).
+        let mut rng = Xoshiro256::seed_from_u64(self.cfg.seed);
+        let init = DenseMatrix::from_fn(k, f, |_, _| rng.next_f32());
+        let mut centers_fut = rt.put_block(Block::Dense(init));
+
+        let mut last = f64::INFINITY;
+        self.n_iter = 0;
+        for _ in 0..self.cfg.max_iter {
+            let reduced = Self::assignment_round(&rt, x, centers_fut, k);
+            centers_fut = Self::update_round(&rt, reduced, centers_fut, k, f);
+            self.n_iter += 1;
+            if !rt.is_sim() {
+                let ssd = rt.wait(reduced.2)?.to_dense()?.get(0, 0) as f64;
+                self.inertia = ssd;
+                if last.is_finite() && (last - ssd).abs() <= self.cfg.tol * last.max(1e-12) {
+                    break;
+                }
+                last = ssd;
+            }
+        }
+        if !rt.is_sim() {
+            self.centers = Some(rt.wait(centers_fut)?.to_dense()?.clone());
+        }
+        Ok(())
+    }
+
+    /// Dataset-path fit (the baseline): identical parallelization, one
+    /// partial task per Subset — the paper's point is that the curves match.
+    pub fn fit_dataset(&mut self, ds: &Dataset) -> Result<()> {
+        let rt = ds.runtime().clone();
+        let k = self.cfg.k;
+        let f = ds.n_features();
+        let mut rng = Xoshiro256::seed_from_u64(self.cfg.seed);
+        let init = DenseMatrix::from_fn(k, f, |_, _| rng.next_f32());
+        let mut centers_fut = rt.put_block(Block::Dense(init));
+
+        let mut last = f64::INFINITY;
+        self.n_iter = 0;
+        for _ in 0..self.cfg.max_iter {
+            // Per-Subset partials.
+            let mut partials = Vec::with_capacity(ds.n_subsets());
+            for i in 0..ds.n_subsets() {
+                let s = ds.subset(i);
+                let reads = vec![s.samples, centers_fut];
+                let rows = s.n_samples();
+                let metas = vec![
+                    BlockMeta::dense(k, f),
+                    BlockMeta::dense(1, k),
+                    BlockMeta::dense(1, 1),
+                ];
+                let out = rt.submit(
+                    "kmeans.partial",
+                    &reads,
+                    metas,
+                    CostHint::flops(5.0 * rows as f64 * f as f64 * k as f64)
+                        .with_bytes(s.samples.meta.bytes() as f64),
+                    Arc::new(move |ins: &[Arc<Block>]| {
+                        let panel = ins[0].to_dense()?;
+                        let centers = ins[1].to_dense()?;
+                        let (psum, pcount, pssd) = assign_block(&panel, &centers)?;
+                        Ok(vec![
+                            Block::Dense(psum),
+                            Block::Dense(pcount),
+                            Block::Dense(DenseMatrix::full(1, 1, pssd)),
+                        ])
+                    }),
+                );
+                partials.push((out[0], out[1], out[2]));
+            }
+            // Same tree reduction + update as the ds-array path.
+            let reduced = reduce_triples(&rt, partials, k, f);
+            centers_fut = Self::update_round(&rt, reduced, centers_fut, k, f);
+            self.n_iter += 1;
+            if !rt.is_sim() {
+                let ssd = rt.wait(reduced.2)?.to_dense()?.get(0, 0) as f64;
+                self.inertia = ssd;
+                if last.is_finite() && (last - ssd).abs() <= self.cfg.tol * last.max(1e-12) {
+                    break;
+                }
+                last = ssd;
+            }
+        }
+        if !rt.is_sim() {
+            self.centers = Some(rt.wait(centers_fut)?.to_dense()?.clone());
+        }
+        Ok(())
+    }
+}
+
+/// Reduce partial triples with the shared tree topology.
+fn reduce_triples(
+    rt: &Runtime,
+    mut level: Vec<(Future, Future, Future)>,
+    k: usize,
+    f: usize,
+) -> (Future, Future, Future) {
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(REDUCE_ARITY));
+        for chunk in level.chunks(REDUCE_ARITY) {
+            if chunk.len() == 1 {
+                next.push(chunk[0]);
+                continue;
+            }
+            let mut reads = Vec::with_capacity(chunk.len() * 3);
+            for &(s, c, d) in chunk {
+                reads.push(s);
+                reads.push(c);
+                reads.push(d);
+            }
+            let metas = vec![
+                BlockMeta::dense(k, f),
+                BlockMeta::dense(1, k),
+                BlockMeta::dense(1, 1),
+            ];
+            let out = rt.submit(
+                "kmeans.reduce",
+                &reads,
+                metas,
+                CostHint::flops((chunk.len() * k * (f + 1)) as f64),
+                Arc::new(move |ins: &[Arc<Block>]| {
+                    let mut psum = ins[0].to_dense()?;
+                    let mut pcount = ins[1].to_dense()?;
+                    let mut pssd = ins[2].to_dense()?;
+                    for triple in ins[3..].chunks(3) {
+                        psum.axpy(1.0, &triple[0].to_dense()?)?;
+                        pcount.axpy(1.0, &triple[1].to_dense()?)?;
+                        pssd.axpy(1.0, &triple[2].to_dense()?)?;
+                    }
+                    Ok(vec![
+                        Block::Dense(psum),
+                        Block::Dense(pcount),
+                        Block::Dense(pssd),
+                    ])
+                }),
+            );
+            next.push((out[0], out[1], out[2]));
+        }
+        level = next;
+    }
+    level[0]
+}
+
+/// Per-block assignment: PJRT fused kernel when shapes fit (tiled over
+/// 128-row chunks), native fallback otherwise.
+pub(crate) fn assign_block(
+    panel: &DenseMatrix,
+    centers: &DenseMatrix,
+) -> Result<(DenseMatrix, DenseMatrix, f32)> {
+    let (k, f) = (centers.rows(), centers.cols());
+    if k <= 8 && f <= 128 {
+        if let Some(svc) = crate::runtime::global() {
+            let mut psum = DenseMatrix::zeros(k, f);
+            let mut pcount = DenseMatrix::zeros(1, k);
+            let mut pssd = 0.0f32;
+            let mut r0 = 0;
+            while r0 < panel.rows() {
+                let rows = (panel.rows() - r0).min(128);
+                let chunk = panel.slice(r0, 0, rows, f)?;
+                let (s, c, d) = crate::runtime::exec::kmeans_assign(svc, &chunk, centers)?;
+                psum.axpy(1.0, &s)?;
+                pcount.axpy(1.0, &c)?;
+                pssd += d;
+                r0 += rows;
+            }
+            return Ok((psum, pcount, pssd));
+        }
+    }
+    assign_block_native(panel, centers)
+}
+
+/// Native oracle/fallback for the assignment step.
+pub(crate) fn assign_block_native(
+    panel: &DenseMatrix,
+    centers: &DenseMatrix,
+) -> Result<(DenseMatrix, DenseMatrix, f32)> {
+    let (k, f) = (centers.rows(), centers.cols());
+    let mut psum = DenseMatrix::zeros(k, f);
+    let mut pcount = DenseMatrix::zeros(1, k);
+    let mut pssd = 0.0f64;
+    for i in 0..panel.rows() {
+        let row = panel.row(i);
+        let mut best = (f32::INFINITY, 0usize);
+        for kk in 0..k {
+            let c = centers.row(kk);
+            let d2: f32 = row
+                .iter()
+                .zip(c)
+                .map(|(&a, &b)| (a - b) * (a - b))
+                .sum();
+            if d2 < best.0 {
+                best = (d2, kk);
+            }
+        }
+        pssd += best.0 as f64;
+        pcount.set(0, best.1, pcount.get(0, best.1) + 1.0);
+        let dst = psum.row_mut(best.1);
+        for (d, &v) in dst.iter_mut().zip(row) {
+            *d += v;
+        }
+    }
+    Ok((psum, pcount, pssd as f32))
+}
+
+impl Estimator for KMeans {
+    fn fit(&mut self, x: &DsArray, _y: Option<&DsArray>) -> Result<()> {
+        self.fit_dsarray(x)
+    }
+
+    /// Cluster label per sample, returned as a new rows×1 ds-array (the
+    /// §4.3 usability fix: predict returns fresh distributed data).
+    fn predict(&self, x: &DsArray) -> Result<DsArray> {
+        let centers = self
+            .centers
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("predict before fit"))?
+            .clone();
+        let rt = x.runtime().clone();
+        let gc = x.grid().1;
+        let centers_fut = rt.put_block(Block::Dense(centers));
+        let mut blocks = Vec::with_capacity(x.grid().0);
+        for i in 0..x.grid().0 {
+            let mut reads = x.block_row(i);
+            reads.push(centers_fut);
+            let rows = x.block_rows_at(i);
+            let out = rt.submit(
+                "kmeans.predict",
+                &reads,
+                vec![BlockMeta::dense(rows, 1)],
+                CostHint::flops(3.0 * rows as f64 * x.cols() as f64 * self.cfg.k as f64),
+                Arc::new(move |ins: &[Arc<Block>]| {
+                    let centers = ins[gc].to_dense()?;
+                    let dense: Vec<DenseMatrix> = ins[..gc]
+                        .iter()
+                        .map(|b| b.to_dense())
+                        .collect::<Result<_>>()?;
+                    let refs: Vec<&DenseMatrix> = dense.iter().collect();
+                    let panel = DenseMatrix::hstack(&refs)?;
+                    let mut labels = DenseMatrix::zeros(panel.rows(), 1);
+                    for r in 0..panel.rows() {
+                        let row = panel.row(r);
+                        let mut best = (f32::INFINITY, 0usize);
+                        for kk in 0..centers.rows() {
+                            let d2: f32 = row
+                                .iter()
+                                .zip(centers.row(kk))
+                                .map(|(&a, &b)| (a - b) * (a - b))
+                                .sum();
+                            if d2 < best.0 {
+                                best = (d2, kk);
+                            }
+                        }
+                        labels.set(r, 0, best.1 as f32);
+                    }
+                    Ok(vec![Block::Dense(labels)])
+                }),
+            );
+            blocks.push(out[0]);
+        }
+        DsArray::from_parts(rt, (x.rows(), 1), (x.block_shape().0, 1), blocks, false)
+    }
+
+    /// Negative inertia on x (higher is better), ignoring y.
+    fn score(&self, x: &DsArray, _y: &DsArray) -> Result<f64> {
+        let centers = self
+            .centers
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("score before fit"))?;
+        let collected = x.collect()?;
+        let (_, _, ssd) = assign_block_native(&collected, centers)?;
+        Ok(-(ssd as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsarray::creation;
+    use crate::tasking::SimConfig;
+
+    /// Two tight, well-separated blobs.
+    fn blobs(rt: &Runtime, n: usize, f: usize, bs: (usize, usize)) -> DsArray {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let m = DenseMatrix::from_fn(n, f, |i, _| {
+            let base = if i < n / 2 { 4.0 } else { -4.0 };
+            base + rng.next_normal() * 0.2
+        });
+        creation::from_matrix(rt, &m, bs).unwrap()
+    }
+
+    #[test]
+    fn converges_on_separated_blobs() {
+        let rt = Runtime::local(2);
+        let x = blobs(&rt, 60, 6, (16, 6));
+        let mut km = KMeans::new(KMeansConfig {
+            k: 2,
+            max_iter: 20,
+            tol: 1e-6,
+            seed: 3,
+        });
+        km.fit_dsarray(&x).unwrap();
+        let c = km.centers.as_ref().unwrap();
+        // One center near +4, the other near -4 (in every coordinate).
+        let m0 = c.row(0)[0];
+        let m1 = c.row(1)[0];
+        assert!(
+            (m0 - 4.0).abs() < 0.5 && (m1 + 4.0).abs() < 0.5
+                || (m0 + 4.0).abs() < 0.5 && (m1 - 4.0).abs() < 0.5,
+            "centers {m0} {m1}"
+        );
+        assert!(km.inertia < 60.0, "inertia {}", km.inertia);
+    }
+
+    #[test]
+    fn predict_labels_match_blob_membership() {
+        let rt = Runtime::local(2);
+        let x = blobs(&rt, 40, 4, (10, 4));
+        let mut km = KMeans::new(KMeansConfig {
+            k: 2,
+            max_iter: 15,
+            tol: 1e-6,
+            seed: 1,
+        });
+        km.fit(&x, None).unwrap();
+        let labels = km.predict(&x).unwrap().collect().unwrap();
+        // All first-half labels equal, all second-half equal, and different.
+        let a = labels.get(0, 0);
+        let b = labels.get(39, 0);
+        assert_ne!(a, b);
+        for i in 0..20 {
+            assert_eq!(labels.get(i, 0), a, "row {i}");
+        }
+        for i in 20..40 {
+            assert_eq!(labels.get(i, 0), b, "row {i}");
+        }
+    }
+
+    #[test]
+    fn dataset_and_dsarray_paths_agree() {
+        let rt = Runtime::local(2);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let m = DenseMatrix::from_fn(48, 5, |i, _| {
+            (if i % 2 == 0 { 3.0 } else { -3.0 }) + rng.next_normal() * 0.3
+        });
+        let x = creation::from_matrix(&rt, &m, (12, 5)).unwrap();
+        let ds = crate::dataset::Dataset::from_matrix(&rt, &m, None, 4).unwrap();
+        let cfg = KMeansConfig {
+            k: 2,
+            max_iter: 12,
+            tol: 1e-7,
+            seed: 2,
+        };
+        let mut km_a = KMeans::new(cfg.clone());
+        km_a.fit_dsarray(&x).unwrap();
+        let mut km_d = KMeans::new(cfg);
+        km_d.fit_dataset(&ds).unwrap();
+        // Same init + same partition boundaries => identical trajectories.
+        assert!((km_a.inertia - km_d.inertia).abs() < 1e-2);
+        let ca = km_a.centers.unwrap();
+        let cd = km_d.centers.unwrap();
+        assert!(ca.max_abs_diff(&cd) < 1e-3);
+    }
+
+    #[test]
+    fn sim_mode_builds_iteration_graph() {
+        let sim = Runtime::sim(SimConfig::with_workers(8));
+        let x = creation::random(&sim, (1000, 16), (100, 16), 0).unwrap();
+        let mut km = KMeans::new(KMeansConfig {
+            k: 4,
+            max_iter: 3,
+            tol: 0.0,
+            seed: 0,
+        });
+        km.fit_dsarray(&x).unwrap();
+        let m = sim.metrics();
+        // 10 partials per iteration × 3 iterations.
+        assert_eq!(m.tasks_for("kmeans.partial"), 30);
+        assert_eq!(m.tasks_for("kmeans.update"), 3);
+        assert!(m.tasks_for("kmeans.reduce") >= 3);
+        let report = sim.run_sim().unwrap();
+        assert!(report.makespan_s > 0.0);
+        assert!(km.centers.is_none(), "sim mode cannot materialize centers");
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        let rt = Runtime::local(1);
+        let x = creation::zeros(&rt, (4, 2), (2, 2)).unwrap();
+        let mut km = KMeans::new(KMeansConfig {
+            k: 10,
+            ..Default::default()
+        });
+        assert!(km.fit_dsarray(&x).is_err());
+    }
+}

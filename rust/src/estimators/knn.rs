@@ -1,0 +1,274 @@
+//! k-nearest-neighbors classifier — a dislib estimator family rebuilt on
+//! ds-arrays. Training data stays distributed; prediction streams query
+//! block-rows against every training block-row, merging per-block top-k
+//! candidate lists (one task per (query row-block, train row-block) pair +
+//! a merge per query block). The distance hot spot runs through the
+//! pairwise Pallas artifact when shapes fit.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::dsarray::DsArray;
+use crate::storage::{Block, BlockMeta, DenseMatrix};
+use crate::tasking::{CostHint, Future};
+
+use super::Estimator;
+
+pub struct KnnClassifier {
+    pub k: usize,
+    /// Training samples/labels (kept as distributed handles).
+    train_x: Option<DsArray>,
+    train_y: Option<DsArray>,
+}
+
+impl KnnClassifier {
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            train_x: None,
+            train_y: None,
+        }
+    }
+}
+
+/// Per-block candidate table: (k_best distances, labels) as a (2k, q) dense
+/// block — row 0..k distances, row k..2k labels, one column per query row.
+fn candidates_block(
+    queries: &DenseMatrix,
+    train: &DenseMatrix,
+    labels: &DenseMatrix,
+    k: usize,
+) -> Result<DenseMatrix> {
+    let d2 = pairwise(queries, train)?;
+    let q = queries.rows();
+    let mut out = DenseMatrix::full(2 * k, q, f32::INFINITY);
+    for qi in 0..q {
+        // Partial selection of the k smallest distances.
+        let row = d2.row(qi);
+        let mut idx: Vec<usize> = (0..row.len()).collect();
+        let kk = k.min(row.len());
+        idx.select_nth_unstable_by(kk - 1, |&a, &b| {
+            row[a].partial_cmp(&row[b]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for (slot, &t) in idx[..kk].iter().enumerate() {
+            out.set(slot, qi, row[t]);
+            out.set(k + slot, qi, labels.get(t, 0));
+        }
+    }
+    Ok(out)
+}
+
+fn pairwise(x: &DenseMatrix, y: &DenseMatrix) -> Result<DenseMatrix> {
+    let fits = x.rows().max(x.cols()).max(y.rows()) <= 128;
+    if fits {
+        if let Some(svc) = crate::runtime::global() {
+            return crate::runtime::exec::pairwise_dist2(svc, x, y);
+        }
+    }
+    // Native fallback.
+    let (m, f) = (x.rows(), x.cols());
+    let n = y.rows();
+    let mut d = DenseMatrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            for c in 0..f {
+                let t = x.get(i, c) - y.get(j, c);
+                s += t * t;
+            }
+            d.set(i, j, s);
+        }
+    }
+    Ok(d)
+}
+
+impl Estimator for KnnClassifier {
+    /// "Fitting" records the training set (lazy learner).
+    fn fit(&mut self, x: &DsArray, y: Option<&DsArray>) -> Result<()> {
+        let y = y.ok_or_else(|| anyhow::anyhow!("knn needs labels"))?;
+        if y.shape() != (x.rows(), 1) || y.block_shape().0 != x.block_shape().0 {
+            bail!("labels must be {}x1 with matching row blocking", x.rows());
+        }
+        if self.k == 0 || self.k > x.rows() {
+            bail!("k={} invalid for {} training rows", self.k, x.rows());
+        }
+        self.train_x = Some(x.clone());
+        self.train_y = Some(y.clone());
+        Ok(())
+    }
+
+    /// Majority label of the k nearest training samples per query row.
+    fn predict(&self, x: &DsArray) -> Result<DsArray> {
+        let (tx, ty) = match (&self.train_x, &self.train_y) {
+            (Some(a), Some(b)) => (a, b),
+            _ => bail!("predict before fit"),
+        };
+        if x.cols() != tx.cols() {
+            bail!("query has {} features, training {}", x.cols(), tx.cols());
+        }
+        let rt = x.runtime().clone();
+        let k = self.k;
+        let q_gc = x.grid().1;
+        let t_gc = tx.grid().1;
+        let mut out_blocks = Vec::with_capacity(x.grid().0);
+        for qi in 0..x.grid().0 {
+            let q_rows = x.block_rows_at(qi);
+            // One candidate task per training block-row.
+            let mut cands: Vec<Future> = Vec::with_capacity(tx.grid().0);
+            for ti in 0..tx.grid().0 {
+                let mut reads = x.block_row(qi);
+                reads.extend(tx.block_row(ti));
+                reads.push(ty.block(ti, 0));
+                let meta = BlockMeta::dense(2 * k, q_rows);
+                let flops = 3.0 * q_rows as f64 * tx.block_rows_at(ti) as f64 * x.cols() as f64;
+                let out = rt.submit(
+                    "knn.candidates",
+                    &reads,
+                    vec![meta],
+                    CostHint::flops(flops),
+                    Arc::new(move |ins: &[Arc<Block>]| {
+                        let qs: Vec<DenseMatrix> = ins[..q_gc]
+                            .iter()
+                            .map(|b| b.to_dense())
+                            .collect::<Result<_>>()?;
+                        let ts: Vec<DenseMatrix> = ins[q_gc..q_gc + t_gc]
+                            .iter()
+                            .map(|b| b.to_dense())
+                            .collect::<Result<_>>()?;
+                        let labels = ins[q_gc + t_gc].to_dense()?;
+                        let qrefs: Vec<&DenseMatrix> = qs.iter().collect();
+                        let trefs: Vec<&DenseMatrix> = ts.iter().collect();
+                        let queries = DenseMatrix::hstack(&qrefs)?;
+                        let train = DenseMatrix::hstack(&trefs)?;
+                        Ok(vec![Block::Dense(candidates_block(
+                            &queries, &train, &labels, k,
+                        )?)])
+                    }),
+                );
+                cands.push(out[0]);
+            }
+            // Merge candidate tables and vote.
+            let out = rt.submit(
+                "knn.vote",
+                &cands,
+                vec![BlockMeta::dense(q_rows, 1)],
+                CostHint::flops((q_rows * k * tx.grid().0) as f64),
+                Arc::new(move |ins: &[Arc<Block>]| {
+                    let tables: Vec<DenseMatrix> =
+                        ins.iter().map(|b| b.to_dense()).collect::<Result<_>>()?;
+                    let q = tables[0].cols();
+                    let mut labels_out = DenseMatrix::zeros(q, 1);
+                    for qi in 0..q {
+                        // Gather all candidates for this query across tables.
+                        let mut pool: Vec<(f32, f32)> = Vec::with_capacity(k * tables.len());
+                        for t in &tables {
+                            for slot in 0..k {
+                                let d = t.get(slot, qi);
+                                if d.is_finite() {
+                                    pool.push((d, t.get(k + slot, qi)));
+                                }
+                            }
+                        }
+                        pool.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+                        pool.truncate(k);
+                        // Majority vote (ties: smallest label).
+                        let mut counts: Vec<(f32, usize)> = Vec::new();
+                        for &(_, l) in &pool {
+                            match counts.iter_mut().find(|(cl, _)| *cl == l) {
+                                Some((_, c)) => *c += 1,
+                                None => counts.push((l, 1)),
+                            }
+                        }
+                        counts.sort_by(|a, b| b.1.cmp(&a.1).then(
+                            a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal),
+                        ));
+                        labels_out.set(qi, 0, counts.first().map(|&(l, _)| l).unwrap_or(0.0));
+                    }
+                    Ok(vec![Block::Dense(labels_out)])
+                }),
+            );
+            out_blocks.push(out[0]);
+        }
+        DsArray::from_parts(rt, (x.rows(), 1), (x.block_shape().0, 1), out_blocks, false)
+    }
+
+    /// Classification accuracy.
+    fn score(&self, x: &DsArray, y: &DsArray) -> Result<f64> {
+        let pred = self.predict(x)?.collect()?;
+        let truth = y.collect()?;
+        let hits = pred
+            .data()
+            .iter()
+            .zip(truth.data())
+            .filter(|(p, t)| p == t)
+            .count();
+        Ok(hits as f64 / truth.rows() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::blobs;
+    use crate::dsarray::creation;
+    use crate::tasking::Runtime;
+
+    fn labeled(rt: &Runtime, n: usize, f: usize, k: usize) -> (DsArray, DsArray, Vec<usize>) {
+        let (data, truth) = blobs(n, f, k, 0.5, 7);
+        let x = creation::from_matrix(rt, &data, (16, f)).unwrap();
+        let y_m = DenseMatrix::from_fn(n, 1, |i, _| truth[i] as f32);
+        let y = creation::from_matrix(rt, &y_m, (16, 1)).unwrap();
+        (x, y, truth)
+    }
+
+    #[test]
+    fn classifies_blobs_perfectly() {
+        let rt = Runtime::local(2);
+        let (x, y, _) = labeled(&rt, 96, 8, 3);
+        let mut knn = KnnClassifier::new(5);
+        knn.fit(&x, Some(&y)).unwrap();
+        let acc = knn.score(&x, &y).unwrap();
+        assert!(acc > 0.99, "accuracy {acc}");
+    }
+
+    #[test]
+    fn held_out_queries() {
+        let rt = Runtime::local(2);
+        let (x, y, _) = labeled(&rt, 90, 6, 3);
+        let mut knn = KnnClassifier::new(3);
+        knn.fit(&x, Some(&y)).unwrap();
+        // Fresh points from the same blobs.
+        let (qdata, qtruth) = blobs(30, 6, 3, 0.5, 99);
+        let q = creation::from_matrix(&rt, &qdata, (16, 6)).unwrap();
+        let pred = knn.predict(&q).unwrap().collect().unwrap();
+        let hits = (0..30).filter(|&i| pred.get(i, 0) as usize == qtruth[i]).count();
+        assert!(hits >= 28, "hits {hits}/30");
+    }
+
+    #[test]
+    fn k1_reproduces_training_labels() {
+        let rt = Runtime::local(2);
+        let (x, y, truth) = labeled(&rt, 48, 4, 2);
+        let mut knn = KnnClassifier::new(1);
+        knn.fit(&x, Some(&y)).unwrap();
+        let pred = knn.predict(&x).unwrap().collect().unwrap();
+        for (i, &t) in truth.iter().enumerate() {
+            assert_eq!(pred.get(i, 0) as usize, t, "row {i}");
+        }
+    }
+
+    #[test]
+    fn validation_errors() {
+        let rt = Runtime::local(1);
+        let x = creation::zeros(&rt, (8, 2), (4, 2)).unwrap();
+        let mut knn = KnnClassifier::new(3);
+        assert!(knn.fit(&x, None).is_err());
+        let y_bad = creation::zeros(&rt, (8, 1), (2, 1)).unwrap();
+        assert!(knn.fit(&x, Some(&y_bad)).is_err());
+        let mut knn0 = KnnClassifier::new(0);
+        let y = creation::zeros(&rt, (8, 1), (4, 1)).unwrap();
+        assert!(knn0.fit(&x, Some(&y)).is_err());
+        assert!(KnnClassifier::new(2).predict(&x).is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Ridge linear regression via distributed normal equations — one of the
+//! "common mathematical operations" the paper's §6 says ds-arrays unlock
+//! (`XᵀX` and `Xᵀy` need column access, painful with Datasets).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::dsarray::DsArray;
+use crate::storage::{Block, BlockMeta, DenseMatrix};
+use crate::tasking::CostHint;
+
+use super::Estimator;
+
+pub struct LinearRegression {
+    pub lambda: f32,
+    pub fit_intercept: bool,
+    /// (f, 1) weights after fit.
+    pub weights: Option<DenseMatrix>,
+    pub intercept: f32,
+}
+
+impl LinearRegression {
+    pub fn new(lambda: f32, fit_intercept: bool) -> Self {
+        Self {
+            lambda,
+            fit_intercept,
+            weights: None,
+            intercept: 0.0,
+        }
+    }
+}
+
+impl Default for LinearRegression {
+    fn default() -> Self {
+        Self::new(1e-6, true)
+    }
+}
+
+impl Estimator for LinearRegression {
+    fn fit(&mut self, x: &DsArray, y: Option<&DsArray>) -> Result<()> {
+        let y = y.ok_or_else(|| anyhow::anyhow!("linear regression needs labels"))?;
+        if y.shape() != (x.rows(), 1) {
+            bail!("y must be {}x1, got {:?}", x.rows(), y.shape());
+        }
+        if y.block_shape().0 != x.block_shape().0 {
+            bail!("y row blocking must match x (rechunk first)");
+        }
+        let rt = x.runtime().clone();
+        let n = x.rows() as f32;
+
+        // Distributed: G = XᵀX (f×f), b = Xᵀy (f×1) — both via block-column
+        // tasks; means for the intercept via axis reductions.
+        let gram = x.gram()?;
+        let xty = x.tn_matmul(y)?;
+        let (g, b, mx, my) = if self.fit_intercept {
+            let mx = x.mean_axis(0)?.collect()?; // 1×f
+            let my = y.mean_axis(0)?.collect()?.get(0, 0);
+            (gram.collect()?, xty.collect()?, mx, my)
+        } else {
+            (
+                gram.collect()?,
+                xty.collect()?,
+                DenseMatrix::zeros(1, x.cols()),
+                0.0,
+            )
+        };
+        if rt.is_sim() {
+            bail!("linear regression fit requires synchronization (local mode)");
+        }
+
+        // Centered normal equations: (G - n·mxᵀmx + λI) w = b - n·my·mxᵀ.
+        let f = x.cols();
+        let mut a = g;
+        let mut rhs = b;
+        if self.fit_intercept {
+            for i in 0..f {
+                for j in 0..f {
+                    let v = a.get(i, j) - n * mx.get(0, i) * mx.get(0, j);
+                    a.set(i, j, v);
+                }
+                let v = rhs.get(i, 0) - n * my * mx.get(0, i);
+                rhs.set(i, 0, v);
+            }
+        }
+        for i in 0..f {
+            let v = a.get(i, i) + self.lambda.max(1e-9);
+            a.set(i, i, v);
+        }
+        let w = a.solve_spd(&rhs)?;
+        self.intercept = if self.fit_intercept {
+            my - (0..f).map(|j| w.get(j, 0) * mx.get(0, j)).sum::<f32>()
+        } else {
+            0.0
+        };
+        self.weights = Some(w);
+        Ok(())
+    }
+
+    fn predict(&self, x: &DsArray) -> Result<DsArray> {
+        let w = self
+            .weights
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("predict before fit"))?
+            .clone();
+        let b = self.intercept;
+        let rt = x.runtime().clone();
+        let w_fut = rt.put_block(Block::Dense(w));
+        let gc = x.grid().1;
+        let mut blocks = Vec::with_capacity(x.grid().0);
+        for i in 0..x.grid().0 {
+            let mut reads = x.block_row(i);
+            reads.push(w_fut);
+            let rows = x.block_rows_at(i);
+            let out = rt.submit(
+                "linreg.predict",
+                &reads,
+                vec![BlockMeta::dense(rows, 1)],
+                CostHint::flops(2.0 * rows as f64 * x.cols() as f64),
+                Arc::new(move |ins: &[Arc<Block>]| {
+                    let w = ins[gc].to_dense()?;
+                    let dense: Vec<DenseMatrix> = ins[..gc]
+                        .iter()
+                        .map(|bl| bl.to_dense())
+                        .collect::<Result<_>>()?;
+                    let refs: Vec<&DenseMatrix> = dense.iter().collect();
+                    let panel = DenseMatrix::hstack(&refs)?;
+                    let mut pred = panel.matmul(&w)?;
+                    for v in pred.data_mut() {
+                        *v += b;
+                    }
+                    Ok(vec![Block::Dense(pred)])
+                }),
+            );
+            blocks.push(out[0]);
+        }
+        DsArray::from_parts(rt, (x.rows(), 1), (x.block_shape().0, 1), blocks, false)
+    }
+
+    /// R² coefficient of determination.
+    fn score(&self, x: &DsArray, y: &DsArray) -> Result<f64> {
+        let pred = self.predict(x)?.collect()?;
+        let truth = y.collect()?;
+        let n = truth.rows() as f64;
+        let mean: f64 = truth.data().iter().map(|&v| v as f64).sum::<f64>() / n;
+        let ss_res: f64 = pred
+            .data()
+            .iter()
+            .zip(truth.data())
+            .map(|(&p, &t)| ((t - p) as f64).powi(2))
+            .sum();
+        let ss_tot: f64 = truth
+            .data()
+            .iter()
+            .map(|&t| (t as f64 - mean).powi(2))
+            .sum();
+        Ok(1.0 - ss_res / ss_tot.max(1e-12))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsarray::creation;
+    use crate::tasking::Runtime;
+    use crate::util::rng::Xoshiro256;
+
+    fn linear_data(
+        rt: &Runtime,
+        n: usize,
+        f: usize,
+        noise: f32,
+        seed: u64,
+    ) -> (DsArray, DsArray, Vec<f32>, f32) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let w: Vec<f32> = (0..f).map(|_| rng.next_normal()).collect();
+        let b = 0.7;
+        let xm = DenseMatrix::from_fn(n, f, |_, _| rng.next_normal());
+        let ym = DenseMatrix::from_fn(n, 1, |i, _| {
+            let dot: f32 = (0..f).map(|j| xm.get(i, j) * w[j]).sum();
+            dot + b + rng.next_normal() * noise
+        });
+        let x = creation::from_matrix(rt, &xm, (8, 4)).unwrap();
+        let y = creation::from_matrix(rt, &ym, (8, 1)).unwrap();
+        (x, y, w, b)
+    }
+
+    #[test]
+    fn recovers_true_weights_noiseless() {
+        let rt = Runtime::local(2);
+        let (x, y, w, b) = linear_data(&rt, 64, 6, 0.0, 1);
+        let mut lr = LinearRegression::default();
+        lr.fit(&x, Some(&y)).unwrap();
+        let got = lr.weights.as_ref().unwrap();
+        for (j, &wj) in w.iter().enumerate() {
+            assert!((got.get(j, 0) - wj).abs() < 1e-2, "w[{j}]");
+        }
+        assert!((lr.intercept - b).abs() < 1e-2, "intercept {}", lr.intercept);
+        assert!(lr.score(&x, &y).unwrap() > 0.999);
+    }
+
+    #[test]
+    fn noisy_fit_still_generalizes() {
+        let rt = Runtime::local(2);
+        let (x, y, _, _) = linear_data(&rt, 96, 4, 0.1, 2);
+        let mut lr = LinearRegression::new(1e-4, true);
+        lr.fit(&x, Some(&y)).unwrap();
+        assert!(lr.score(&x, &y).unwrap() > 0.9);
+    }
+
+    #[test]
+    fn no_intercept_mode() {
+        let rt = Runtime::local(2);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let xm = DenseMatrix::from_fn(32, 3, |_, _| rng.next_normal());
+        let ym = DenseMatrix::from_fn(32, 1, |i, _| 2.0 * xm.get(i, 0) - xm.get(i, 2));
+        let x = creation::from_matrix(&rt, &xm, (8, 3)).unwrap();
+        let y = creation::from_matrix(&rt, &ym, (8, 1)).unwrap();
+        let mut lr = LinearRegression::new(1e-6, false);
+        lr.fit(&x, Some(&y)).unwrap();
+        let w = lr.weights.as_ref().unwrap();
+        assert!((w.get(0, 0) - 2.0).abs() < 1e-3);
+        assert!((w.get(1, 0)).abs() < 1e-3);
+        assert!((w.get(2, 0) + 1.0).abs() < 1e-3);
+        assert_eq!(lr.intercept, 0.0);
+    }
+
+    #[test]
+    fn rejects_missing_or_misaligned_labels() {
+        let rt = Runtime::local(1);
+        let x = creation::zeros(&rt, (8, 2), (4, 2)).unwrap();
+        let mut lr = LinearRegression::default();
+        assert!(lr.fit(&x, None).is_err());
+        let bad_y = creation::zeros(&rt, (8, 1), (2, 1)).unwrap();
+        assert!(lr.fit(&x, Some(&bad_y)).is_err());
+    }
+}

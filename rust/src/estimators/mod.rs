@@ -1,0 +1,43 @@
+//! Estimators (paper §3.2.2 / §4.3): the scikit-learn-style interface on
+//! top of ds-arrays — `fit(x, y)`, `predict(x)`, `score(x, y)` — which the
+//! ds-array design makes possible (Datasets forced `fit(dataset)` and
+//! label-field abuse, §4.1).
+//!
+//! K-means and ALS are the paper's evaluation models and are implemented on
+//! **both** structures (the Dataset path reproduces the baseline's
+//! inefficiencies on purpose). Linear regression, PCA and the
+//! StandardScaler are the "natural extensions" §6 motivates.
+
+pub mod als;
+pub mod gnb;
+pub mod kmeans;
+pub mod knn;
+pub mod linreg;
+pub mod pca;
+pub mod scaler;
+
+use anyhow::Result;
+
+use crate::dsarray::DsArray;
+
+/// Anything that learns from data (paper §3.2). `x` rows are samples.
+pub trait Estimator {
+    /// Learn parameters from samples `x` (and labels `y` when supervised).
+    fn fit(&mut self, x: &DsArray, y: Option<&DsArray>) -> Result<()>;
+
+    /// Per-sample predictions as a new rows×1 ds-array — returning a fresh
+    /// distributed array instead of mutating the input (the usability fix
+    /// over Datasets, §4.1).
+    fn predict(&self, x: &DsArray) -> Result<DsArray>;
+
+    /// Model quality on (x, y); higher is better.
+    fn score(&self, x: &DsArray, y: &DsArray) -> Result<f64>;
+}
+
+pub use als::Als;
+pub use gnb::GaussianNb;
+pub use kmeans::KMeans;
+pub use knn::KnnClassifier;
+pub use linreg::LinearRegression;
+pub use pca::Pca;
+pub use scaler::StandardScaler;

@@ -1,0 +1,222 @@
+//! PCA via the distributed Gram matrix + local power iteration with
+//! deflation — "matrix decomposition" as a natural ds-array operation
+//! (paper §6). The heavy O(n·f²) Gram runs distributed; the O(f²·q)
+//! eigen-extraction is master-side (f is small by assumption).
+
+use anyhow::{bail, Result};
+
+use crate::dsarray::DsArray;
+use crate::storage::DenseMatrix;
+use crate::util::rng::Xoshiro256;
+
+use super::Estimator;
+
+pub struct Pca {
+    /// Number of components to extract.
+    pub n_components: usize,
+    pub seed: u64,
+    /// (q, f) principal axes, row per component, after fit.
+    pub components: Option<DenseMatrix>,
+    /// Explained variance per component.
+    pub explained_variance: Vec<f32>,
+    /// (1, f) feature means, after fit.
+    pub mean: Option<DenseMatrix>,
+}
+
+impl Pca {
+    pub fn new(n_components: usize) -> Self {
+        Self {
+            n_components,
+            seed: 17,
+            components: None,
+            explained_variance: Vec::new(),
+            mean: None,
+        }
+    }
+
+    /// Power iteration with deflation on a symmetric PSD matrix.
+    fn top_eigs(cov: &DenseMatrix, q: usize, seed: u64) -> Result<(DenseMatrix, Vec<f32>)> {
+        let f = cov.rows();
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut work = cov.clone();
+        let mut comps = DenseMatrix::zeros(q, f);
+        let mut vals = Vec::with_capacity(q);
+        for c in 0..q {
+            let mut v: Vec<f32> = (0..f).map(|_| rng.next_normal()).collect();
+            let mut lambda = 0.0f32;
+            for _ in 0..300 {
+                // w = A v
+                let mut w = vec![0.0f32; f];
+                for i in 0..f {
+                    let row = work.row(i);
+                    w[i] = row.iter().zip(&v).map(|(&a, &b)| a * b).sum();
+                }
+                let norm = w.iter().map(|&x| x * x).sum::<f32>().sqrt();
+                if norm < 1e-12 {
+                    break;
+                }
+                for x in &mut w {
+                    *x /= norm;
+                }
+                let delta: f32 = w
+                    .iter()
+                    .zip(&v)
+                    .map(|(&a, &b)| (a - b).abs())
+                    .fold(0.0, f32::max);
+                v = w;
+                lambda = norm;
+                if delta < 1e-7 {
+                    break;
+                }
+            }
+            comps.row_mut(c).copy_from_slice(&v);
+            vals.push(lambda);
+            // Deflate: A -= λ v vᵀ.
+            for i in 0..f {
+                for j in 0..f {
+                    let x = work.get(i, j) - lambda * v[i] * v[j];
+                    work.set(i, j, x);
+                }
+            }
+        }
+        Ok((comps, vals))
+    }
+
+    /// Project samples onto the fitted components: (rows, q) ds-array.
+    pub fn transform(&self, x: &DsArray) -> Result<DsArray> {
+        let comps = self
+            .components
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("transform before fit"))?;
+        let mean = self.mean.as_ref().unwrap();
+        let rt = x.runtime().clone();
+        // Center then project: (X - μ) Wᵀ, both distributed ops.
+        let mean_arr =
+            crate::dsarray::creation::from_matrix(&rt, mean, (1, x.block_shape().1))?;
+        let centered = x.sub_row_broadcast(&mean_arr)?;
+        let wt = comps.transpose(); // (f, q)
+        let w_arr = crate::dsarray::creation::from_matrix(&rt, &wt, (x.block_shape().1, wt.cols()))?;
+        centered.matmul(&w_arr)
+    }
+}
+
+impl Estimator for Pca {
+    fn fit(&mut self, x: &DsArray, _y: Option<&DsArray>) -> Result<()> {
+        if self.n_components == 0 || self.n_components > x.cols() {
+            bail!(
+                "n_components {} invalid for {} features",
+                self.n_components,
+                x.cols()
+            );
+        }
+        let rt = x.runtime();
+        if rt.is_sim() {
+            bail!("PCA fit requires synchronization (local mode)");
+        }
+        let n = x.rows() as f32;
+        // Distributed: G = XᵀX and column means.
+        let g = x.gram()?.collect()?;
+        let mean = x.mean_axis(0)?.collect()?;
+        // Covariance = G/n - μᵀμ.
+        let f = x.cols();
+        let cov = DenseMatrix::from_fn(f, f, |i, j| {
+            g.get(i, j) / n - mean.get(0, i) * mean.get(0, j)
+        });
+        let (comps, vals) = Self::top_eigs(&cov, self.n_components, self.seed)?;
+        self.components = Some(comps);
+        self.explained_variance = vals;
+        self.mean = Some(mean);
+        Ok(())
+    }
+
+    /// First-component projection per sample (rows×1).
+    fn predict(&self, x: &DsArray) -> Result<DsArray> {
+        let t = self.transform(x)?;
+        t.slice_cols(0, 1)
+    }
+
+    /// Fraction of total variance explained by the kept components.
+    fn score(&self, x: &DsArray, _y: &DsArray) -> Result<f64> {
+        if self.components.is_none() {
+            bail!("score before fit");
+        }
+        let n = x.rows() as f32;
+        let g = x.gram()?.collect()?;
+        let mean = x.mean_axis(0)?.collect()?;
+        let total: f32 = (0..x.cols())
+            .map(|i| g.get(i, i) / n - mean.get(0, i) * mean.get(0, i))
+            .sum();
+        let kept: f32 = self.explained_variance.iter().sum();
+        Ok((kept / total.max(1e-12)) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsarray::creation;
+    use crate::tasking::Runtime;
+
+    /// Data stretched along a known direction.
+    fn stretched(rt: &Runtime, n: usize) -> (DsArray, DenseMatrix) {
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        // Principal axis (1, 1, 0)/√2 with sd 5; others sd 0.3.
+        let m = DenseMatrix::from_fn(n, 3, |_, _| rng.next_normal());
+        let mut data = DenseMatrix::zeros(n, 3);
+        for i in 0..n {
+            let t = m.get(i, 0) * 5.0;
+            data.set(i, 0, t * 0.7071 + m.get(i, 1) * 0.3 + 1.0);
+            data.set(i, 1, t * 0.7071 - m.get(i, 1) * 0.3 - 2.0);
+            data.set(i, 2, m.get(i, 2) * 0.3);
+        }
+        (creation::from_matrix(rt, &data, (16, 3)).unwrap(), data)
+    }
+
+    #[test]
+    fn finds_dominant_axis() {
+        let rt = Runtime::local(2);
+        let (x, _) = stretched(&rt, 128);
+        let mut pca = Pca::new(2);
+        pca.fit(&x, None).unwrap();
+        let c = pca.components.as_ref().unwrap();
+        // First component ≈ ±(0.7071, 0.7071, 0).
+        let (a, b, z) = (c.get(0, 0), c.get(0, 1), c.get(0, 2));
+        assert!((a.abs() - 0.7071).abs() < 0.05, "a={a}");
+        assert!((b.abs() - 0.7071).abs() < 0.05, "b={b}");
+        assert!(z.abs() < 0.1, "z={z}");
+        assert!(a * b > 0.0, "components aligned");
+        // Variances sorted descending.
+        assert!(pca.explained_variance[0] > pca.explained_variance[1]);
+        // Nearly all variance in 2 components.
+        let y = creation::zeros(&rt, (128, 1), (16, 1)).unwrap();
+        assert!(pca.score(&x, &y).unwrap() > 0.95);
+    }
+
+    #[test]
+    fn transform_decorrelates() {
+        let rt = Runtime::local(2);
+        let (x, _) = stretched(&rt, 96);
+        let mut pca = Pca::new(2);
+        pca.fit(&x, None).unwrap();
+        let t = pca.transform(&x).unwrap().collect().unwrap();
+        assert_eq!((t.rows(), t.cols()), (96, 2));
+        // Projected columns are uncorrelated and mean ~0.
+        let n = 96.0f32;
+        let m0: f32 = (0..96).map(|i| t.get(i, 0)).sum::<f32>() / n;
+        let m1: f32 = (0..96).map(|i| t.get(i, 1)).sum::<f32>() / n;
+        assert!(m0.abs() < 0.2 && m1.abs() < 0.2);
+        let cov01: f32 =
+            (0..96).map(|i| (t.get(i, 0) - m0) * (t.get(i, 1) - m1)).sum::<f32>() / n;
+        let v0: f32 = (0..96).map(|i| (t.get(i, 0) - m0).powi(2)).sum::<f32>() / n;
+        let v1: f32 = (0..96).map(|i| (t.get(i, 1) - m1).powi(2)).sum::<f32>() / n;
+        assert!(cov01.abs() / (v0 * v1).sqrt() < 0.1, "corr {}", cov01);
+    }
+
+    #[test]
+    fn rejects_bad_component_count() {
+        let rt = Runtime::local(1);
+        let x = creation::zeros(&rt, (8, 2), (4, 2)).unwrap();
+        assert!(Pca::new(0).fit(&x, None).is_err());
+        assert!(Pca::new(3).fit(&x, None).is_err());
+    }
+}

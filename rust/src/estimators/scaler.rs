@@ -1,0 +1,160 @@
+//! StandardScaler: per-feature standardization, the canonical first stage
+//! of the pipeline example. Fit computes distributed column statistics;
+//! transform standardizes each block through the fused `standardize` PJRT
+//! artifact (native fallback when artifacts are absent or blocks exceed the
+//! canonical shapes).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::dsarray::DsArray;
+use crate::storage::{Block, BlockMeta, DenseMatrix};
+use crate::tasking::CostHint;
+
+pub struct StandardScaler {
+    /// (1, f) feature means after fit.
+    pub mean: Option<DenseMatrix>,
+    /// (1, f) feature inverse standard deviations after fit.
+    pub inv_std: Option<DenseMatrix>,
+    pub eps: f32,
+}
+
+impl Default for StandardScaler {
+    fn default() -> Self {
+        Self {
+            mean: None,
+            inv_std: None,
+            eps: 1e-8,
+        }
+    }
+}
+
+impl StandardScaler {
+    /// Compute per-feature mean and std from the data (distributed sums +
+    /// sums of squares, synchronized at the end).
+    pub fn fit(&mut self, x: &DsArray) -> Result<()> {
+        let rt = x.runtime();
+        if rt.is_sim() {
+            bail!("scaler fit requires synchronization (local mode)");
+        }
+        let n = x.rows() as f32;
+        let sums = x.sum_axis(0)?.collect()?;
+        let sumsq = x.pow(2.0)?.sum_axis(0)?.collect()?;
+        let f = x.cols();
+        let mean = DenseMatrix::from_fn(1, f, |_, j| sums.get(0, j) / n);
+        let eps = self.eps;
+        let inv_std = DenseMatrix::from_fn(1, f, |_, j| {
+            let mu = mean.get(0, j);
+            let var = (sumsq.get(0, j) / n - mu * mu).max(0.0);
+            1.0 / (var + eps).sqrt()
+        });
+        self.mean = Some(mean);
+        self.inv_std = Some(inv_std);
+        Ok(())
+    }
+
+    /// Standardize every block: `(x - μ) σ⁻¹` (fused PJRT kernel per block).
+    pub fn transform(&self, x: &DsArray) -> Result<DsArray> {
+        let (mean, inv) = match (&self.mean, &self.inv_std) {
+            (Some(m), Some(s)) => (m.clone(), s.clone()),
+            _ => bail!("transform before fit"),
+        };
+        if mean.cols() != x.cols() {
+            bail!("scaler fitted on {} features, got {}", mean.cols(), x.cols());
+        }
+        let rt = x.runtime().clone();
+        let bs1 = x.block_shape().1;
+        let mut blocks = Vec::with_capacity(x.n_blocks());
+        for i in 0..x.grid().0 {
+            for j in 0..x.grid().1 {
+                let fut = x.block(i, j);
+                let c0 = j * bs1;
+                let cols = x.block_cols_at(j);
+                let mu = mean.slice(0, c0, 1, cols)?;
+                let is = inv.slice(0, c0, 1, cols)?;
+                let meta = BlockMeta::dense(fut.meta.rows, cols);
+                let out = rt.submit(
+                    "scaler.transform",
+                    &[fut],
+                    vec![meta],
+                    CostHint::flops(2.0 * (meta.rows * meta.cols) as f64)
+                        .with_bytes(2.0 * meta.bytes() as f64),
+                    Arc::new(move |ins: &[Arc<Block>]| {
+                        let d = ins[0].to_dense()?;
+                        // PJRT fused kernel when the block fits an artifact.
+                        if d.rows() <= 128 && d.cols() <= 128 {
+                            if let Some(svc) = crate::runtime::global() {
+                                let out = crate::runtime::exec::standardize(svc, &d, &mu, &is)?;
+                                return Ok(vec![Block::Dense(out)]);
+                            }
+                        }
+                        let out = DenseMatrix::from_fn(d.rows(), d.cols(), |r, c| {
+                            (d.get(r, c) - mu.get(0, c)) * is.get(0, c)
+                        });
+                        Ok(vec![Block::Dense(out)])
+                    }),
+                );
+                blocks.push(out[0]);
+            }
+        }
+        DsArray::from_parts(rt, x.shape(), x.block_shape(), blocks, false)
+    }
+
+    pub fn fit_transform(&mut self, x: &DsArray) -> Result<DsArray> {
+        self.fit(x)?;
+        self.transform(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsarray::creation;
+    use crate::tasking::Runtime;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn transformed_columns_are_standard() {
+        let rt = Runtime::local(2);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let m = DenseMatrix::from_fn(100, 5, |_, j| {
+            rng.next_normal() * (j as f32 + 1.0) + 10.0 * j as f32
+        });
+        let x = creation::from_matrix(&rt, &m, (32, 2)).unwrap();
+        let mut sc = StandardScaler::default();
+        let t = sc.fit_transform(&x).unwrap().collect().unwrap();
+        for j in 0..5 {
+            let col: Vec<f32> = (0..100).map(|i| t.get(i, j)).collect();
+            let mean = col.iter().sum::<f32>() / 100.0;
+            let var = col.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / 100.0;
+            assert!(mean.abs() < 1e-3, "col {j} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "col {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn constant_column_does_not_blow_up() {
+        let rt = Runtime::local(1);
+        let m = DenseMatrix::from_fn(10, 2, |i, j| if j == 0 { 3.0 } else { i as f32 });
+        let x = creation::from_matrix(&rt, &m, (5, 2)).unwrap();
+        let mut sc = StandardScaler::default();
+        let t = sc.fit_transform(&x).unwrap().collect().unwrap();
+        for i in 0..10 {
+            assert!(t.get(i, 0).abs() < 1.0, "constant col stays bounded");
+            assert!(t.get(i, 0).is_finite());
+        }
+    }
+
+    #[test]
+    fn transform_rejects_feature_mismatch_and_unfitted() {
+        let rt = Runtime::local(1);
+        let x = creation::zeros(&rt, (4, 2), (2, 2)).unwrap();
+        let sc = StandardScaler::default();
+        assert!(sc.transform(&x).is_err());
+        let mut sc = StandardScaler::default();
+        sc.fit(&x).unwrap();
+        let y = creation::zeros(&rt, (4, 3), (2, 3)).unwrap();
+        assert!(sc.transform(&y).is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! # rustdslib — ds-array reproduction (Rust + JAX + Pallas)
+//!
+//! A production-shaped reproduction of *"ds-array: A Distributed Data
+//! Structure for Large Scale Machine Learning"* (CS.DC 2021): a blocked
+//! 2-D distributed array with a NumPy-like API on top of a from-scratch
+//! PyCOMPSs-style task runtime, the legacy `Dataset`/`Subset` baseline it
+//! is compared against, estimator implementations (K-means, ALS, …), a
+//! PJRT runtime that executes AOT-compiled JAX/Pallas block kernels, and a
+//! discrete-event cluster simulator that replays the real task graphs at
+//! MareNostrum scale to regenerate every figure of the paper's evaluation.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
+
+pub mod bench;
+pub mod config;
+pub mod dataset;
+pub mod dsarray;
+pub mod estimators;
+pub mod runtime;
+pub mod storage;
+pub mod tasking;
+pub mod util;
+
+pub use storage::{Block, BlockMeta, CsrMatrix, DenseMatrix};
+pub use tasking::{Future, Runtime, SimConfig, SimReport};

@@ -1,0 +1,170 @@
+//! `repro` — CLI for the ds-array reproduction.
+//!
+//! Subcommands:
+//!   version                       build info
+//!   bench --fig 6|7|8|9|tasks|all paper-figure reproductions (simulated cluster)
+//!   ablation --which blocks|collections
+//!   calibrate                     local micro-measurements feeding the cost model
+//!   demo                          tiny local end-to-end sanity run
+//!
+//! Global flags: --config <toml>, --cores a,b,c, --seed, --workers, and the
+//! sim.* overrides (see config.rs).
+
+use anyhow::Result;
+
+use rustdslib::bench::{experiments, report};
+use rustdslib::config::Config;
+use rustdslib::dsarray::creation;
+use rustdslib::tasking::Runtime;
+use rustdslib::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("version") => {
+            println!("rustdslib {} — ds-array (CS.DC 2021) reproduction", env!("CARGO_PKG_VERSION"));
+        }
+        Some("bench") => bench(&args)?,
+        Some("ablation") => ablation(&args)?,
+        Some("calibrate") => calibrate(&args)?,
+        Some("demo") => demo(&args)?,
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown subcommand `{cmd}`\n");
+            }
+            eprintln!("usage: repro <version|bench|ablation|calibrate|demo> [flags]");
+            eprintln!("  repro bench --fig all");
+            eprintln!("  repro bench --fig 6 --cores 48,96,192");
+            eprintln!("  repro ablation --which collections");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn bench(args: &Args) -> Result<()> {
+    let mut cfg = Config::resolve(args)?;
+    if args.get("cores").is_none() {
+        cfg.sim_cores = vec![48, 96, 192, 384, 768];
+    }
+    let fig = args.get_str("fig", "all");
+    let iters = args.get_usize("iters", 10);
+    if fig == "6" || fig == "all" {
+        print!("{}", experiments::fig6_strong(&cfg, 768)?.render());
+        print!("{}", experiments::fig6_weak(&cfg)?.render());
+    }
+    if fig == "7" || fig == "all" {
+        print!("{}", experiments::fig7_als(&cfg, args.get_usize("grid", 192), iters)?.render());
+    }
+    if fig == "8" || fig == "all" {
+        let mut c8 = cfg.clone();
+        if args.get("cores").is_none() {
+            c8.sim_cores.push(1536);
+        }
+        print!("{}", experiments::fig8_shuffle(&c8)?.render());
+    }
+    if fig == "9" || fig == "all" {
+        let mut c9 = cfg.clone();
+        if args.get("cores").is_none() {
+            c9.sim_cores.push(1536);
+        }
+        print!("{}", experiments::fig9_kmeans(&c9, args.get_usize("kmeans-iters", 5))?.render());
+    }
+    if fig == "tasks" || fig == "all" {
+        let rows = experiments::task_count_table(&cfg, &[8, 32, 128, 512])?;
+        let kv: Vec<(String, String)> = rows
+            .iter()
+            .map(|(n, dtr, atr, dsh, ash, ashn)| {
+                (
+                    format!("N={n}"),
+                    format!(
+                        "transpose {dtr} vs {atr}; shuffle {dsh} vs {ash} (nocoll {ashn})"
+                    ),
+                )
+            })
+            .collect();
+        print!("{}", report::kv_table("task counts (Dataset vs ds-array)", &kv));
+    }
+    Ok(())
+}
+
+fn ablation(args: &Args) -> Result<()> {
+    let cfg = Config::resolve(args)?;
+    match args.get_str("which", "collections") {
+        "blocks" => {
+            let rows = experiments::ablation_blocks(
+                &cfg,
+                &args.get_usize_list("grids", &[24, 48, 96, 192]),
+                args.get_usize("iters", 3),
+            )?;
+            for (g, t, tasks) in rows {
+                println!("grid {g:>4} ({:>6} blocks): {t:>10.2}s, {tasks} tasks", g * g);
+            }
+        }
+        _ => {
+            let rows = experiments::ablation_collections(&cfg)?;
+            for (cores, w, wo, tw, two) in rows {
+                println!(
+                    "{cores:>5} cores: with {w:>9.2}s/{tw} tasks, without {wo:>9.2}s/{two} tasks ({:.1}x)",
+                    wo / w
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Measure real per-task latencies on the local executor — the numbers the
+/// cost model's worker-side constants are sanity-checked against.
+fn calibrate(args: &Args) -> Result<()> {
+    let cfg = Config::resolve(args)?;
+    let rt = Runtime::local(cfg.local_workers);
+    let t0 = std::time::Instant::now();
+    let a = creation::random(&rt, (2048, 512), (128, 128), cfg.seed)?;
+    rt.barrier()?;
+    let create_s = t0.elapsed().as_secs_f64();
+    let n_create = rt.metrics().total_tasks();
+
+    let t0 = std::time::Instant::now();
+    a.transpose()?;
+    rt.barrier()?;
+    let tr_s = t0.elapsed().as_secs_f64();
+
+    let rows = vec![
+        (
+            "create 2048x512 / 128² blocks".to_string(),
+            format!("{create_s:.3}s ({:.2} ms/task)", 1e3 * create_s / n_create as f64),
+        ),
+        ("transpose (16 row tasks)".to_string(), format!("{tr_s:.3}s")),
+        (
+            "local per-task overhead".to_string(),
+            format!("{:.3} ms", 1e3 * tr_s / 16.0),
+        ),
+        (
+            "sim master_task_s @48 cores".to_string(),
+            format!("{:.3} ms (calibrated to paper)", 1e3 * cfg.sim_at(48).master_task_s()),
+        ),
+    ];
+    print!("{}", report::kv_table("calibration", &rows));
+    Ok(())
+}
+
+fn demo(args: &Args) -> Result<()> {
+    let cfg = Config::resolve(args)?;
+    let rt = Runtime::local(cfg.local_workers);
+    let a = creation::random(&rt, (256, 128), (64, 64), cfg.seed)?;
+    let expr = a.transpose()?.norm_axis(1)?.pow(2.0)?.sqrt()?;
+    let v = expr.collect()?;
+    println!(
+        "demo: sqrt(||Aᵀ||²) over random 256x128 -> first values {:.3} {:.3} {:.3}",
+        v.get(0, 0),
+        v.get(0, 1),
+        v.get(0, 2)
+    );
+    println!("tasks: {}", rt.metrics().total_tasks());
+    println!(
+        "pjrt: {}",
+        if rustdslib::runtime::global().is_some() { "available" } else { "artifacts not built" }
+    );
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! Artifact manifest: what `python/compile/aot.py` produced, with the
+//! input/output shapes the Rust side must honor.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Shape signature of one compiled entry point.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSig {
+    pub name: String,
+    /// (rows, cols) per input, in call order.
+    pub inputs: Vec<(usize, usize)>,
+    /// (rows, cols) per output, in tuple order.
+    pub outputs: Vec<(usize, usize)>,
+}
+
+/// Parsed `manifest.json` + artifact directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactSig>,
+}
+
+fn parse_shapes(v: &Json, what: &str) -> Result<Vec<(usize, usize)>> {
+    let arr = v
+        .as_arr()
+        .with_context(|| format!("{what}: expected array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let pair = item.as_arr().with_context(|| format!("{what}: entry"))?;
+        let dims = pair
+            .first()
+            .and_then(|d| d.as_arr())
+            .with_context(|| format!("{what}: dims"))?;
+        let dtype = pair.get(1).and_then(|d| d.as_str()).unwrap_or("");
+        if dtype != "float32" {
+            bail!("{what}: unsupported dtype {dtype} (only f32 artifacts)");
+        }
+        let (r, c) = match dims {
+            [r, c] => (
+                r.as_usize().context("rows")?,
+                c.as_usize().context("cols")?,
+            ),
+            [n] => (1, n.as_usize().context("len")?),
+            [] => (1, 1),
+            _ => bail!("{what}: only rank <= 2 artifacts supported, got {dims:?}"),
+        };
+        out.push((r, c));
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let obj = root.as_obj().context("manifest root must be an object")?;
+        let mut entries = BTreeMap::new();
+        for (name, entry) in obj {
+            let sig = ArtifactSig {
+                name: name.clone(),
+                inputs: parse_shapes(
+                    entry.get("inputs").context("inputs")?,
+                    &format!("{name}.inputs"),
+                )?,
+                outputs: parse_shapes(
+                    entry.get("outputs").context("outputs")?,
+                    &format!("{name}.outputs"),
+                )?,
+            };
+            entries.insert(name.clone(), sig);
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    pub fn sig(&self, name: &str) -> Result<&ArtifactSig> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("no artifact `{name}` in manifest"))
+    }
+
+    /// Path of the HLO text for an entry point.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Validate that every entry's HLO file exists.
+    pub fn validate_files(&self) -> Result<()> {
+        for name in self.entries.keys() {
+            let p = self.hlo_path(name);
+            if !p.exists() {
+                bail!("artifact file missing: {}", p.display());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("rustdslib_manifest_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn parses_real_shape_signatures() {
+        let dir = tmpdir("ok");
+        write_manifest(
+            &dir,
+            r#"{
+              "gemm_64": {"inputs": [[[64,64],"float32"],[[64,64],"float32"],[[64,64],"float32"]],
+                          "outputs": [[[64,64],"float32"]]},
+              "kmeans_64_k8": {"inputs": [[[64,64],"float32"],[[8,64],"float32"],[[64,1],"float32"]],
+                               "outputs": [[[8,64],"float32"],[[1,8],"float32"],[[1,1],"float32"]]}
+            }"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let g = m.sig("gemm_64").unwrap();
+        assert_eq!(g.inputs, vec![(64, 64); 3]);
+        let k = m.sig("kmeans_64_k8").unwrap();
+        assert_eq!(k.outputs, vec![(8, 64), (1, 8), (1, 1)]);
+        assert!(m.sig("nope").is_err());
+        assert_eq!(m.hlo_path("gemm_64"), dir.join("gemm_64.hlo.txt"));
+        // Files absent -> validate fails.
+        assert!(m.validate_files().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_non_f32() {
+        let dir = tmpdir("dtype");
+        write_manifest(
+            &dir,
+            r#"{"x": {"inputs": [[[4,4],"int32"]], "outputs": [[[4,4],"float32"]]}}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn loads_repo_manifest_if_built() {
+        // Integration hook: when `make artifacts` has run, the real manifest
+        // must parse and be internally consistent.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entries.len() >= 6);
+        m.validate_files().unwrap();
+        let g = m.sig("gemm_64").unwrap();
+        assert_eq!(g.inputs.len(), 3);
+    }
+}

@@ -1,0 +1,176 @@
+//! The PJRT service thread: owns the (non-`Send`) PJRT CPU client and every
+//! compiled executable; serves execution requests over a channel.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::storage::DenseMatrix;
+
+use super::artifact::Manifest;
+use super::exec::{literal_to_dense, matrices_to_literals};
+
+struct Request {
+    name: String,
+    inputs: Vec<DenseMatrix>,
+    reply: mpsc::Sender<Result<Vec<DenseMatrix>>>,
+}
+
+/// Handle to the PJRT service thread. Cloneable and thread-safe; the PJRT
+/// objects themselves never leave the service thread.
+pub struct PjrtService {
+    tx: Mutex<mpsc::Sender<Request>>,
+    manifest: Manifest,
+}
+
+impl PjrtService {
+    /// Start the service for an artifact directory. Compiles executables
+    /// lazily (first call per entry point) on the service thread.
+    pub fn start(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        manifest.validate_files()?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let thread_manifest = manifest.clone();
+        std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_loop(thread_manifest, rx))
+            .context("spawning pjrt service thread")?;
+        Ok(Self {
+            tx: Mutex::new(tx),
+            manifest,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute `name` with the given inputs (shapes must match the
+    /// manifest); returns the output matrices.
+    pub fn call(&self, name: &str, inputs: Vec<DenseMatrix>) -> Result<Vec<DenseMatrix>> {
+        let sig = self.manifest.sig(name)?;
+        if inputs.len() != sig.inputs.len() {
+            anyhow::bail!(
+                "artifact {name} takes {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (m, &(r, c))) in inputs.iter().zip(&sig.inputs).enumerate() {
+            if (m.rows(), m.cols()) != (r, c) {
+                anyhow::bail!(
+                    "artifact {name} input {i}: expected {r}x{c}, got {}x{} (pad first)",
+                    m.rows(),
+                    m.cols()
+                );
+            }
+        }
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request {
+                name: name.to_string(),
+                inputs,
+                reply: rtx,
+            })
+            .map_err(|_| anyhow!("pjrt service thread is gone"))?;
+        rrx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))?
+    }
+}
+
+fn service_loop(manifest: Manifest, rx: mpsc::Receiver<Request>) {
+    // All PJRT state is thread-local to this loop.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the same cause.
+            while let Ok(req) = rx.recv() {
+                let _ = req.reply.send(Err(anyhow!("PJRT CPU client failed: {e}")));
+            }
+            return;
+        }
+    };
+    let mut executables: BTreeMap<String, xla::PjRtLoadedExecutable> = BTreeMap::new();
+
+    while let Ok(req) = rx.recv() {
+        let result = (|| -> Result<Vec<DenseMatrix>> {
+            if !executables.contains_key(&req.name) {
+                let path = manifest.hlo_path(&req.name);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {}: {e}", req.name))?;
+                executables.insert(req.name.clone(), exe);
+            }
+            let exe = &executables[&req.name];
+            let sig = manifest.sig(&req.name)?;
+            let literals = matrices_to_literals(&req.inputs)?;
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("executing {}: {e}", req.name))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching result of {}: {e}", req.name))?;
+            // aot.py lowers with return_tuple=True: unpack N outputs.
+            let items = out
+                .to_tuple()
+                .map_err(|e| anyhow!("untupling result of {}: {e}", req.name))?;
+            if items.len() != sig.outputs.len() {
+                anyhow::bail!(
+                    "{}: runtime returned {} outputs, manifest says {}",
+                    req.name,
+                    items.len(),
+                    sig.outputs.len()
+                );
+            }
+            items
+                .into_iter()
+                .zip(&sig.outputs)
+                .map(|(lit, &(r, c))| literal_to_dense(&lit, r, c))
+                .collect()
+        })();
+        // Receiver may have timed out/vanished; that's fine.
+        let _ = req.reply.send(result);
+    }
+}
+
+static GLOBAL: OnceLock<Option<PjrtService>> = OnceLock::new();
+
+/// Process-wide service over `$RUSTDSLIB_ARTIFACTS` (default `artifacts/`,
+/// resolved against the crate root for test runs). `None` when artifacts
+/// have not been built — callers fall back to native block math.
+pub fn global() -> Option<&'static PjrtService> {
+    GLOBAL
+        .get_or_init(|| {
+            let dir = std::env::var("RUSTDSLIB_ARTIFACTS").unwrap_or_else(|_| {
+                let local = Path::new("artifacts");
+                if local.join("manifest.json").exists() {
+                    "artifacts".to_string()
+                } else {
+                    // Fall back to the crate root (tests run from odd cwds).
+                    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+                }
+            });
+            PjrtService::start(Path::new(&dir)).ok()
+        })
+        .as_ref()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end PJRT checks live in rust/tests/pjrt_integration.rs; here
+    /// we only verify service startup error handling.
+    #[test]
+    fn start_fails_cleanly_without_artifacts() {
+        let dir = std::env::temp_dir().join(format!("no_artifacts_{}", std::process::id()));
+        assert!(PjrtService::start(&dir).is_err());
+    }
+}

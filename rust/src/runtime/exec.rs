@@ -1,0 +1,264 @@
+//! Block ⇄ `xla::Literal` conversion and padded-call helpers.
+//!
+//! Artifacts have fixed canonical shapes (AOT); these helpers pad inputs up
+//! to the canonical block edge and slice results back to logical sizes, so
+//! estimator task closures can call PJRT on any block size.
+
+use anyhow::{anyhow, Result};
+
+use crate::storage::DenseMatrix;
+
+use super::PjrtService;
+
+/// Dense matrices → row-major f32 literals. Uses the raw untyped-data
+/// constructor: one shaped copy instead of vec1 + XLA reshape (§Perf it.2).
+pub fn matrices_to_literals(ms: &[DenseMatrix]) -> Result<Vec<xla::Literal>> {
+    ms.iter()
+        .map(|m| {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(m.data().as_ptr() as *const u8, m.data().len() * 4)
+            };
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &[m.rows(), m.cols()],
+                bytes,
+            )
+            .map_err(|e| anyhow!("creating shaped literal: {e}"))
+        })
+        .collect()
+}
+
+/// Literal (rank ≤ 2 f32) → dense matrix with the manifest's shape.
+pub fn literal_to_dense(lit: &xla::Literal, rows: usize, cols: usize) -> Result<DenseMatrix> {
+    let v = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("reading f32 literal: {e}"))?;
+    DenseMatrix::from_vec(rows, cols, v)
+}
+
+/// Canonical artifact edges available, best (largest that fits) first.
+pub const CANONICAL_EDGES: [usize; 2] = [128, 64];
+
+/// Pick the smallest canonical edge that covers `n`, or the largest one for
+/// tiling bigger inputs.
+pub fn pick_edge(n: usize) -> usize {
+    for &e in CANONICAL_EDGES.iter().rev() {
+        if n <= e {
+            return e;
+        }
+    }
+    CANONICAL_EDGES[0]
+}
+
+
+
+/// Static artifact names for the canonical edges (§Perf it.3: no per-call
+/// string formatting on the dispatch path).
+fn artifact_name(kind: &str, edge: usize) -> &'static str {
+    match (kind, edge) {
+        ("gemm", 64) => "gemm_64",
+        ("gemm", _) => "gemm_128",
+        ("gemm_tn", 64) => "gemm_tn_64",
+        ("gemm_tn", _) => "gemm_tn_128",
+        ("kmeans", 64) => "kmeans_64_k8",
+        ("kmeans", _) => "kmeans_128_k8",
+        ("standardize", 64) => "standardize_64",
+        ("standardize", _) => "standardize_128",
+        ("col_stats", 64) => "col_stats_64",
+        ("col_stats", _) => "col_stats_128",
+        ("pairwise", 64) => "pairwise_64",
+        (_, _) => "pairwise_128",
+    }
+}
+
+/// Slice an owned output back to its logical size; a no-op move when the
+/// logical size IS the canonical size (§Perf: avoids a full-block copy).
+fn shrink(mut outs: Vec<DenseMatrix>, idx: usize, rows: usize, cols: usize) -> Result<DenseMatrix> {
+    let m = std::mem::replace(&mut outs[idx], DenseMatrix::zeros(0, 0));
+    if (m.rows(), m.cols()) == (rows, cols) {
+        Ok(m)
+    } else {
+        m.slice(0, 0, rows, cols)
+    }
+}
+
+/// `C + A@B` through the gemm artifact: pads (m,k,n) up to one canonical
+/// edge when everything fits, otherwise falls back to native matmul (the
+/// caller keeps block sizes ≤ 128 on the hot path).
+pub fn gemm_acc(
+    svc: &PjrtService,
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    c: &DenseMatrix,
+) -> Result<DenseMatrix> {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let edge = pick_edge(m.max(k).max(n));
+    if m.max(k).max(n) > edge {
+        // Larger than the largest artifact: native fallback.
+        let mut out = c.clone();
+        out.axpy(1.0, &a.matmul(b)?)?;
+        return Ok(out);
+    }
+    let name = artifact_name("gemm", edge);
+    let pa = a.pad_to(edge, edge)?;
+    let pb = b.pad_to(edge, edge)?;
+    let pc = c.pad_to(edge, edge)?;
+    let out = svc.call(name, vec![pa, pb, pc])?;
+    shrink(out, 0, m, n)
+}
+
+/// `C + Aᵀ@B` through the gemm_tn artifact (A is (k, m)).
+pub fn gemm_tn_acc(
+    svc: &PjrtService,
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    c: &DenseMatrix,
+) -> Result<DenseMatrix> {
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let edge = pick_edge(m.max(k).max(n));
+    if m.max(k).max(n) > edge {
+        let mut out = c.clone();
+        out.axpy(1.0, &a.transpose().matmul(b)?)?;
+        return Ok(out);
+    }
+    let name = artifact_name("gemm_tn", edge);
+    let pa = a.pad_to(edge, edge)?;
+    let pb = b.pad_to(edge, edge)?;
+    let pc = c.pad_to(edge, edge)?;
+    let out = svc.call(name, vec![pa, pb, pc])?;
+    shrink(out, 0, m, n)
+}
+
+/// Fused K-means assignment step through the kmeans artifact.
+///
+/// Pads samples to (edge, edge) with a validity mask, pads unused center
+/// rows with a huge sentinel (never selected — verified in
+/// python/tests/test_kernel.py), and slices partials back to (k, f).
+/// Returns (psum (k, f), pcount (1, k), pssd scalar).
+pub fn kmeans_assign(
+    svc: &PjrtService,
+    x: &DenseMatrix,
+    centers: &DenseMatrix,
+) -> Result<(DenseMatrix, DenseMatrix, f32)> {
+    let (m, f) = (x.rows(), x.cols());
+    let (k, fc) = (centers.rows(), centers.cols());
+    if f != fc {
+        anyhow::bail!("kmeans feature mismatch: x has {f}, centers have {fc}");
+    }
+    const K_MAX: usize = 8; // model.KMEANS_K baked into the artifacts
+    if k > K_MAX {
+        anyhow::bail!("artifact supports k <= {K_MAX}, got {k}");
+    }
+    let edge = pick_edge(m.max(f));
+    if m.max(f) > edge {
+        anyhow::bail!("block {m}x{f} exceeds largest kmeans artifact ({edge})");
+    }
+    let name = artifact_name("kmeans", edge);
+    let px = x.pad_to(edge, edge)?;
+    // Pad unused center rows with a sentinel far from any data.
+    let mut pc = DenseMatrix::full(K_MAX, edge, 1e30);
+    pc.paste(0, 0, centers)?;
+    // Zero-pad the center feature tail (sentinel would corrupt distances of
+    // real centers if left in their columns; those columns of x are zero).
+    for kk in 0..k {
+        for ff in f..edge {
+            pc.set(kk, ff, 0.0);
+        }
+    }
+    let mut mask = DenseMatrix::zeros(edge, 1);
+    for i in 0..m {
+        mask.set(i, 0, 1.0);
+    }
+    let out = svc.call(name, vec![px, pc, mask])?;
+    let psum = out[0].slice(0, 0, k, f)?;
+    let pcount = out[1].slice(0, 0, 1, k)?;
+    let pssd = out[2].get(0, 0);
+    Ok((psum, pcount, pssd))
+}
+
+/// Scaler transform `(x - mean) * inv_std` through the standardize artifact.
+pub fn standardize(
+    svc: &PjrtService,
+    x: &DenseMatrix,
+    mean: &DenseMatrix,
+    inv_std: &DenseMatrix,
+) -> Result<DenseMatrix> {
+    let (m, f) = (x.rows(), x.cols());
+    let edge = pick_edge(m.max(f));
+    if m.max(f) > edge {
+        anyhow::bail!("block {m}x{f} exceeds largest standardize artifact");
+    }
+    let name = artifact_name("standardize", edge);
+    let px = x.pad_to(edge, edge)?;
+    let pm = mean.pad_to(1, edge)?;
+    // inv_std pad with 1.0 (0 would zero the padding harmlessly, but 1 keeps
+    // the identity semantics if anything reads the tail).
+    let mut pi = DenseMatrix::full(1, edge, 1.0);
+    pi.paste(0, 0, inv_std)?;
+    let out = svc.call(name, vec![px, pm, pi])?;
+    shrink(out, 0, m, f)
+}
+
+/// Pairwise squared distances between query rows and a reference set
+/// through the pairwise artifact. Reference rows beyond `y.rows()` are
+/// padded with a distant sentinel and sliced away.
+pub fn pairwise_dist2(
+    svc: &PjrtService,
+    x: &DenseMatrix,
+    y: &DenseMatrix,
+) -> Result<DenseMatrix> {
+    let (m, f) = (x.rows(), x.cols());
+    let k = y.rows();
+    if y.cols() != f {
+        anyhow::bail!("pairwise feature mismatch: {f} vs {}", y.cols());
+    }
+    let edge = pick_edge(m.max(f).max(k));
+    if m.max(f).max(k) > edge {
+        anyhow::bail!("block {m}x{f} vs {k} refs exceeds largest pairwise artifact");
+    }
+    let name = artifact_name("pairwise", edge);
+    let px = x.pad_to(edge, edge)?;
+    // Padding reference rows with a large sentinel keeps them from ever
+    // being nearest; zero-padding x's feature tail keeps real distances
+    // exact as long as y's tail is zero for the real rows.
+    let mut py = DenseMatrix::full(edge, edge, 1e15);
+    py.paste(0, 0, y)?;
+    for r in 0..k {
+        for c in f..edge {
+            py.set(r, c, 0.0);
+        }
+    }
+    let out = svc.call(name, vec![px, py])?;
+    out[0].slice(0, 0, m, k)
+}
+
+/// Masked column stats (sums, sumsq) through the col_stats artifact.
+pub fn col_stats(svc: &PjrtService, x: &DenseMatrix) -> Result<(DenseMatrix, DenseMatrix)> {
+    let (m, f) = (x.rows(), x.cols());
+    let edge = pick_edge(m.max(f));
+    if m.max(f) > edge {
+        anyhow::bail!("block {m}x{f} exceeds largest col_stats artifact");
+    }
+    let name = artifact_name("col_stats", edge);
+    let px = x.pad_to(edge, edge)?;
+    let mut mask = DenseMatrix::zeros(edge, 1);
+    for i in 0..m {
+        mask.set(i, 0, 1.0);
+    }
+    let out = svc.call(name, vec![px, mask])?;
+    Ok((out[0].slice(0, 0, 1, f)?, out[1].slice(0, 0, 1, f)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_edge_prefers_smallest_cover() {
+        assert_eq!(pick_edge(1), 64);
+        assert_eq!(pick_edge(64), 64);
+        assert_eq!(pick_edge(65), 128);
+        assert_eq!(pick_edge(128), 128);
+        assert_eq!(pick_edge(129), 128); // tiling fallback edge
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from the L3 hot path. Python never runs at request time: `make
+//! artifacts` lowers the L2 graphs once to `artifacts/*.hlo.txt`, and this
+//! module compiles them on the PJRT CPU client at startup.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`/`Sync`), so all
+//! PJRT state lives on one dedicated **service thread**; task closures on
+//! worker threads call [`PjrtService::call`] through a channel. One compiled
+//! executable per (entry point, canonical shape) pair, per the manifest.
+
+pub mod artifact;
+pub mod client;
+pub mod exec;
+
+pub use artifact::{ArtifactSig, Manifest};
+pub use client::{global, PjrtService};

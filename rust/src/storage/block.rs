@@ -1,0 +1,222 @@
+//! The [`Block`] sum type moved around by the tasking runtime.
+//!
+//! A ds-array block is dense or CSR (paper §4.2). The third variant,
+//! [`Block::Phantom`], carries only metadata and exists for the
+//! discrete-event simulator: at MareNostrum scale (e.g. 5·10⁷×1 000 f32 =
+//! 200 GB) the data cannot be materialized in this container, but the task
+//! graphs must still be *built by the same library code*, so creation
+//! routines produce phantom blocks in sim mode and every operation
+//! propagates metadata through them (DESIGN.md §2).
+
+use anyhow::{bail, Result};
+
+use super::dense::DenseMatrix;
+use super::sparse::CsrMatrix;
+
+/// Shape + occupancy metadata; always available, even for phantom blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BlockMeta {
+    pub rows: usize,
+    pub cols: usize,
+    /// Stored non-zeros; for dense blocks this is rows*cols.
+    pub nnz: usize,
+    pub sparse: bool,
+}
+
+impl BlockMeta {
+    pub fn dense(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            nnz: rows * cols,
+            sparse: false,
+        }
+    }
+
+    pub fn sparse(rows: usize, cols: usize, nnz: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            nnz,
+            sparse: true,
+        }
+    }
+
+    /// Payload size in bytes (dense: f32; CSR: data + indices + indptr).
+    pub fn bytes(&self) -> usize {
+        if self.sparse {
+            self.nnz * (4 + 4) + (self.rows + 1) * 8
+        } else {
+            self.rows * self.cols * 4
+        }
+    }
+
+    pub fn transposed(&self) -> Self {
+        Self {
+            rows: self.cols,
+            cols: self.rows,
+            ..*self
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum Block {
+    Dense(DenseMatrix),
+    Csr(CsrMatrix),
+    /// Metadata-only block for simulated executions.
+    Phantom(BlockMeta),
+}
+
+impl Block {
+    pub fn meta(&self) -> BlockMeta {
+        match self {
+            Block::Dense(m) => BlockMeta::dense(m.rows(), m.cols()),
+            Block::Csr(m) => BlockMeta::sparse(m.rows(), m.cols(), m.nnz()),
+            Block::Phantom(meta) => *meta,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.meta().rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.meta().cols
+    }
+
+    pub fn is_phantom(&self) -> bool {
+        matches!(self, Block::Phantom(_))
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.meta().sparse
+    }
+
+    /// Borrow as dense; errors on CSR/phantom (callers that can handle both
+    /// densities match on the enum instead).
+    pub fn as_dense(&self) -> Result<&DenseMatrix> {
+        match self {
+            Block::Dense(m) => Ok(m),
+            Block::Csr(_) => bail!("expected dense block, got CSR"),
+            Block::Phantom(_) => bail!("expected dense block, got phantom (sim-mode data)"),
+        }
+    }
+
+    pub fn as_csr(&self) -> Result<&CsrMatrix> {
+        match self {
+            Block::Csr(m) => Ok(m),
+            Block::Dense(_) => bail!("expected CSR block, got dense"),
+            Block::Phantom(_) => bail!("expected CSR block, got phantom (sim-mode data)"),
+        }
+    }
+
+    /// Materialize as dense regardless of backend (errors on phantom).
+    pub fn to_dense(&self) -> Result<DenseMatrix> {
+        match self {
+            Block::Dense(m) => Ok(m.clone()),
+            Block::Csr(m) => Ok(m.to_dense()),
+            Block::Phantom(_) => bail!("cannot densify a phantom block"),
+        }
+    }
+
+    /// Transpose preserving backend; phantom transposes metadata.
+    pub fn transpose(&self) -> Block {
+        match self {
+            Block::Dense(m) => Block::Dense(m.transpose()),
+            Block::Csr(m) => Block::Csr(m.transpose()),
+            Block::Phantom(meta) => Block::Phantom(meta.transposed()),
+        }
+    }
+
+    /// Sub-matrix copy; phantom slices metadata (nnz scaled proportionally).
+    pub fn slice(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Result<Block> {
+        match self {
+            Block::Dense(m) => Ok(Block::Dense(m.slice(r0, c0, nr, nc)?)),
+            Block::Csr(m) => Ok(Block::Csr(m.slice(r0, c0, nr, nc)?)),
+            Block::Phantom(meta) => {
+                if r0 + nr > meta.rows || c0 + nc > meta.cols {
+                    bail!(
+                        "phantom slice [{r0}+{nr}, {c0}+{nc}) out of bounds for {}x{}",
+                        meta.rows,
+                        meta.cols
+                    );
+                }
+                let frac = (nr * nc) as f64 / (meta.rows * meta.cols).max(1) as f64;
+                let nnz = if meta.sparse {
+                    (meta.nnz as f64 * frac).round() as usize
+                } else {
+                    nr * nc
+                };
+                Ok(Block::Phantom(BlockMeta {
+                    rows: nr,
+                    cols: nc,
+                    nnz,
+                    sparse: meta.sparse,
+                }))
+            }
+        }
+    }
+}
+
+impl From<DenseMatrix> for Block {
+    fn from(m: DenseMatrix) -> Self {
+        Block::Dense(m)
+    }
+}
+
+impl From<CsrMatrix> for Block {
+    fn from(m: CsrMatrix) -> Self {
+        Block::Csr(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_bytes() {
+        let d = BlockMeta::dense(64, 64);
+        assert_eq!(d.bytes(), 64 * 64 * 4);
+        let s = BlockMeta::sparse(100, 1000, 1200);
+        assert_eq!(s.bytes(), 1200 * 8 + 101 * 8);
+        assert!(s.sparse && !d.sparse);
+    }
+
+    #[test]
+    fn block_meta_from_backends() {
+        let d = Block::from(DenseMatrix::zeros(3, 5));
+        assert_eq!(d.meta(), BlockMeta::dense(3, 5));
+        let c = Block::from(CsrMatrix::from_triplets(3, 5, &[(0, 0, 1.0)]).unwrap());
+        assert_eq!(c.meta(), BlockMeta::sparse(3, 5, 1));
+        let p = Block::Phantom(BlockMeta::dense(10, 10));
+        assert_eq!(p.meta().rows, 10);
+        assert!(p.is_phantom());
+    }
+
+    #[test]
+    fn phantom_refuses_data_access() {
+        let p = Block::Phantom(BlockMeta::dense(2, 2));
+        assert!(p.as_dense().is_err());
+        assert!(p.as_csr().is_err());
+        assert!(p.to_dense().is_err());
+    }
+
+    #[test]
+    fn transpose_preserves_backend() {
+        let d = Block::from(DenseMatrix::from_fn(2, 3, |i, j| (i + j) as f32));
+        assert!(matches!(d.transpose(), Block::Dense(_)));
+        assert_eq!(d.transpose().rows(), 3);
+        let p = Block::Phantom(BlockMeta::sparse(4, 7, 9)).transpose();
+        assert_eq!(p.meta(), BlockMeta::sparse(7, 4, 9));
+    }
+
+    #[test]
+    fn phantom_slice_scales_nnz() {
+        let p = Block::Phantom(BlockMeta::sparse(10, 10, 50));
+        let s = p.slice(0, 0, 5, 10).unwrap();
+        assert_eq!(s.meta().nnz, 25);
+        assert!(p.slice(8, 0, 5, 10).is_err());
+    }
+}

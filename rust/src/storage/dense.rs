@@ -1,0 +1,672 @@
+//! Dense row-major f32 matrix — the NumPy-array block backend equivalent.
+//!
+//! This is deliberately a small, predictable type: contiguous `Vec<f32>`,
+//! row-major, with the operations the ds-array layer and the estimators
+//! need. The FLOP-heavy paths (matmul, K-means distance step) normally run
+//! through the AOT-compiled Pallas kernels via PJRT (`crate::runtime`); the
+//! implementations here are the native fallbacks and test oracles.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn full(rows: usize, cols: usize, value: f32) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![value; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            bail!(
+                "dense shape mismatch: {}x{} needs {} elements, got {}",
+                rows,
+                cols,
+                rows * cols,
+                data.len()
+            );
+        }
+        Ok(Self { rows, cols, data })
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of the sub-matrix `[r0, r0+nr) x [c0, c0+nc)`.
+    pub fn slice(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Result<Self> {
+        if r0 + nr > self.rows || c0 + nc > self.cols {
+            bail!(
+                "slice [{r0}+{nr}, {c0}+{nc}) out of bounds for {}x{}",
+                self.rows,
+                self.cols
+            );
+        }
+        let mut data = Vec::with_capacity(nr * nc);
+        for i in r0..r0 + nr {
+            data.extend_from_slice(&self.data[i * self.cols + c0..i * self.cols + c0 + nc]);
+        }
+        Ok(Self {
+            rows: nr,
+            cols: nc,
+            data,
+        })
+    }
+
+    /// Write `src` into this matrix at offset (r0, c0).
+    pub fn paste(&mut self, r0: usize, c0: usize, src: &DenseMatrix) -> Result<()> {
+        if r0 + src.rows > self.rows || c0 + src.cols > self.cols {
+            bail!(
+                "paste of {}x{} at ({r0},{c0}) out of bounds for {}x{}",
+                src.rows,
+                src.cols,
+                self.rows,
+                self.cols
+            );
+        }
+        for i in 0..src.rows {
+            let dst = (r0 + i) * self.cols + c0;
+            self.data[dst..dst + src.cols].copy_from_slice(src.row(i));
+        }
+        Ok(())
+    }
+
+    /// Zero-padded copy with the given (larger or equal) physical shape —
+    /// used to bring edge blocks to the canonical AOT kernel shape.
+    /// Already-canonical matrices are returned as a plain clone (§Perf:
+    /// skips a zeros+paste pass on the PJRT hot path).
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Result<Self> {
+        if rows < self.rows || cols < self.cols {
+            bail!(
+                "pad_to target {rows}x{cols} smaller than {}x{}",
+                self.rows,
+                self.cols
+            );
+        }
+        if (rows, cols) == (self.rows, self.cols) {
+            return Ok(self.clone());
+        }
+        let mut out = Self::zeros(rows, cols);
+        out.paste(0, 0, self)?;
+        Ok(out)
+    }
+
+    pub fn transpose(&self) -> Self {
+        let mut out = Self::zeros(self.cols, self.rows);
+        // Blocked loop for cache friendliness on large blocks.
+        const TB: usize = 32;
+        for ib in (0..self.rows).step_by(TB) {
+            for jb in (0..self.cols).step_by(TB) {
+                for i in ib..(ib + TB).min(self.rows) {
+                    for j in jb..(jb + TB).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Native matmul: `self (m,k) @ rhs (k,n)` — ikj loop order, used as the
+    /// fallback/oracle next to the PJRT gemm artifact.
+    pub fn matmul(&self, rhs: &DenseMatrix) -> Result<Self> {
+        if self.cols != rhs.rows {
+            bail!(
+                "matmul shape mismatch: {}x{} @ {}x{}",
+                self.rows,
+                self.cols,
+                rhs.rows,
+                rhs.cols
+            );
+        }
+        let (m, k, n) = (self.rows, self.cols, rhs.cols);
+        let mut out = Self::zeros(m, n);
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &rhs.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// `self += alpha * other` (shape-checked).
+    pub fn axpy(&mut self, alpha: f32, other: &DenseMatrix) -> Result<()> {
+        if self.rows != other.rows || self.cols != other.cols {
+            bail!(
+                "axpy shape mismatch: {}x{} vs {}x{}",
+                self.rows,
+                self.cols,
+                other.rows,
+                other.cols
+            );
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        Self {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip_map(&self, other: &DenseMatrix, f: impl Fn(f32, f32) -> f32) -> Result<Self> {
+        if self.rows != other.rows || self.cols != other.cols {
+            bail!(
+                "zip_map shape mismatch: {}x{} vs {}x{}",
+                self.rows,
+                self.cols,
+                other.rows,
+                other.cols
+            );
+        }
+        Ok(Self {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        })
+    }
+
+    /// Sum along an axis: axis 0 -> 1 x cols (column sums); axis 1 -> rows x 1.
+    pub fn sum_axis(&self, axis: usize) -> Self {
+        match axis {
+            0 => {
+                let mut out = Self::zeros(1, self.cols);
+                for i in 0..self.rows {
+                    for (o, &v) in out.data.iter_mut().zip(self.row(i)) {
+                        *o += v;
+                    }
+                }
+                out
+            }
+            _ => {
+                let mut out = Self::zeros(self.rows, 1);
+                for i in 0..self.rows {
+                    out.data[i] = self.row(i).iter().sum();
+                }
+                out
+            }
+        }
+    }
+
+    /// Element-wise fold along an axis with an arbitrary combiner.
+    pub fn fold_axis(&self, axis: usize, init: f32, f: impl Fn(f32, f32) -> f32) -> Self {
+        match axis {
+            0 => {
+                let mut out = Self::full(1, self.cols, init);
+                for i in 0..self.rows {
+                    for (o, &v) in out.data.iter_mut().zip(self.row(i)) {
+                        *o = f(*o, v);
+                    }
+                }
+                out
+            }
+            _ => {
+                let mut out = Self::full(self.rows, 1, init);
+                for i in 0..self.rows {
+                    out.data[i] = self.row(i).iter().fold(init, |acc, &v| f(acc, v));
+                }
+                out
+            }
+        }
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt() as f32
+    }
+
+    /// Max |a - b| over all elements, for test assertions.
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f32 {
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Vertically stack matrices (all must share `cols`).
+    pub fn vstack(parts: &[&DenseMatrix]) -> Result<Self> {
+        if parts.is_empty() {
+            bail!("vstack of zero matrices");
+        }
+        let cols = parts[0].cols;
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            if p.cols != cols {
+                bail!("vstack col mismatch: {} vs {}", p.cols, cols);
+            }
+            data.extend_from_slice(&p.data);
+            rows += p.rows;
+        }
+        Ok(Self { rows, cols, data })
+    }
+
+    /// Horizontally stack matrices (all must share `rows`).
+    pub fn hstack(parts: &[&DenseMatrix]) -> Result<Self> {
+        if parts.is_empty() {
+            bail!("hstack of zero matrices");
+        }
+        let rows = parts[0].rows;
+        let cols: usize = parts.iter().map(|p| p.cols).sum();
+        let mut out = Self::zeros(rows, cols);
+        let mut c0 = 0;
+        for p in parts {
+            if p.rows != rows {
+                bail!("hstack row mismatch: {} vs {}", p.rows, rows);
+            }
+            out.paste(0, c0, p)?;
+            c0 += p.cols;
+        }
+        Ok(out)
+    }
+
+    /// Thin QR decomposition via Householder reflections: `self (m,n)` with
+    /// `m >= n` → `(Q (m,n), R (n,n))`, `Q` orthonormal columns, `R` upper
+    /// triangular. Backbone of the distributed TSQR (dsarray::decomposition).
+    pub fn qr_thin(&self) -> Result<(Self, Self)> {
+        let (m, n) = (self.rows, self.cols);
+        if m < n {
+            bail!("qr_thin needs rows >= cols, got {m}x{n}");
+        }
+        // Work in f64 for stability. Householder vectors live below the
+        // diagonal of `a` (raw v_i for i > k) with the head components in
+        // `v0s` and scaling factors in `betas`.
+        let mut a: Vec<f64> = self.data.iter().map(|&x| x as f64).collect();
+        let mut betas = vec![0.0f64; n];
+        let mut v0s = vec![0.0f64; n];
+        for k in 0..n {
+            let mut norm2 = 0.0;
+            for i in k..m {
+                let v = a[i * n + k];
+                norm2 += v * v;
+            }
+            let norm = norm2.sqrt();
+            if norm < 1e-300 {
+                continue; // zero column: skip reflector
+            }
+            let a_kk = a[k * n + k];
+            let alpha = if a_kk >= 0.0 { -norm } else { norm };
+            let v0 = a_kk - alpha;
+            let vtv = v0 * v0 + (norm2 - a_kk * a_kk);
+            if vtv <= 0.0 {
+                continue;
+            }
+            betas[k] = 2.0 / vtv;
+            v0s[k] = v0;
+            a[k * n + k] = alpha;
+            // Apply the reflector to the trailing columns.
+            for j in k + 1..n {
+                let mut dot = v0 * a[k * n + j];
+                for i in k + 1..m {
+                    dot += a[i * n + k] * a[i * n + j];
+                }
+                let s = betas[k] * dot;
+                a[k * n + j] -= s * v0;
+                for i in k + 1..m {
+                    a[i * n + j] -= s * a[i * n + k];
+                }
+            }
+        }
+        // Extract R (upper triangle of the reduced matrix).
+        let mut r = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                r.data[i * n + j] = a[i * n + j] as f32;
+            }
+        }
+        // Form the thin Q by applying reflectors (in reverse) to I's first
+        // n columns.
+        let mut q = vec![0.0f64; m * n];
+        for j in 0..n {
+            q[j * n + j] = 1.0;
+        }
+        for k in (0..n).rev() {
+            if betas[k] == 0.0 {
+                continue;
+            }
+            let v0 = v0s[k];
+            for j in 0..n {
+                let mut dot = v0 * q[k * n + j];
+                for i in k + 1..m {
+                    dot += a[i * n + k] * q[i * n + j];
+                }
+                let s = betas[k] * dot;
+                q[k * n + j] -= s * v0;
+                for i in k + 1..m {
+                    q[i * n + j] -= s * a[i * n + k];
+                }
+            }
+        }
+        let qm = DenseMatrix::from_vec(m, n, q.iter().map(|&x| x as f32).collect())?;
+        Ok((qm, r))
+    }
+
+    /// Solve the symmetric positive-definite system `A x = b` in-place via
+    /// Cholesky (A must be square, b is (n, m)). Used for the small d×d ALS
+    /// normal-equation solves that stay on the Rust side (DESIGN.md §4).
+    pub fn solve_spd(&self, b: &DenseMatrix) -> Result<Self> {
+        if self.rows != self.cols {
+            bail!("solve_spd needs square A, got {}x{}", self.rows, self.cols);
+        }
+        if b.rows != self.rows {
+            bail!("solve_spd rhs rows {} != n {}", b.rows, self.rows);
+        }
+        let n = self.rows;
+        // Cholesky factor L (lower), in f64 for stability.
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self.data[i * n + j] as f64;
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        bail!("solve_spd: matrix not positive definite (pivot {s} at {i})");
+                    }
+                    l[i * n + i] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        // Forward/back substitution per rhs column.
+        let m = b.cols;
+        let mut x = DenseMatrix::zeros(n, m);
+        let mut y = vec![0.0f64; n];
+        for c in 0..m {
+            for i in 0..n {
+                let mut s = b.data[i * m + c] as f64;
+                for k in 0..i {
+                    s -= l[i * n + k] * y[k];
+                }
+                y[i] = s / l[i * n + i];
+            }
+            for i in (0..n).rev() {
+                let mut s = y[i];
+                for k in i + 1..n {
+                    s -= l[k * n + i] * x.data[k * m + c] as f64;
+                }
+                x.data[i * m + c] = (s / l[i * n + i]) as f32;
+            }
+        }
+        Ok(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{all_close, check};
+
+    #[test]
+    fn construction_and_access() {
+        let m = DenseMatrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert!(DenseMatrix::from_vec(2, 2, vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn identity_matmul_is_noop() {
+        let a = DenseMatrix::from_fn(3, 3, |i, j| (i + 2 * j) as f32);
+        let i3 = DenseMatrix::identity(3);
+        assert_eq!(a.matmul(&i3).unwrap(), a);
+        assert_eq!(i3.matmul(&a).unwrap(), a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = DenseMatrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+        assert!(a.matmul(&DenseMatrix::zeros(3, 2)).is_err());
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = DenseMatrix::from_fn(5, 7, |i, j| (i * 7 + j) as f32);
+        let t = a.transpose();
+        assert_eq!(t.rows(), 7);
+        assert_eq!(t.get(3, 4), a.get(4, 3));
+        assert_eq!(t.transpose(), a);
+    }
+
+    #[test]
+    fn slice_paste_pad() {
+        let a = DenseMatrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let s = a.slice(1, 2, 2, 2).unwrap();
+        assert_eq!(s.data(), &[6.0, 7.0, 10.0, 11.0]);
+        assert!(a.slice(3, 3, 2, 2).is_err());
+
+        let p = s.pad_to(3, 4).unwrap();
+        assert_eq!(p.get(0, 0), 6.0);
+        assert_eq!(p.get(2, 3), 0.0);
+        assert!(p.slice(0, 0, 2, 2).unwrap().data() == s.data());
+
+        let mut z = DenseMatrix::zeros(4, 4);
+        z.paste(2, 2, &s).unwrap();
+        assert_eq!(z.get(3, 3), 11.0);
+        assert!(z.paste(3, 3, &s).is_err());
+    }
+
+    #[test]
+    fn axis_reductions() {
+        let a = DenseMatrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(a.sum_axis(0).data(), &[5.0, 7.0, 9.0]);
+        assert_eq!(a.sum_axis(1).data(), &[6.0, 15.0]);
+        assert_eq!(a.sum(), 21.0);
+        let mx = a.fold_axis(0, f32::NEG_INFINITY, f32::max);
+        assert_eq!(mx.data(), &[4.0, 5.0, 6.0]);
+        let mn = a.fold_axis(1, f32::INFINITY, f32::min);
+        assert_eq!(mn.data(), &[1.0, 4.0]);
+    }
+
+    #[test]
+    fn stacking() {
+        let a = DenseMatrix::full(1, 2, 1.0);
+        let b = DenseMatrix::full(2, 2, 2.0);
+        let v = DenseMatrix::vstack(&[&a, &b]).unwrap();
+        assert_eq!((v.rows(), v.cols()), (3, 2));
+        assert_eq!(v.get(2, 1), 2.0);
+
+        let c = DenseMatrix::full(3, 1, 3.0);
+        let h = DenseMatrix::hstack(&[&v, &c]).unwrap();
+        assert_eq!((h.rows(), h.cols()), (3, 3));
+        assert_eq!(h.get(0, 2), 3.0);
+        assert!(DenseMatrix::hstack(&[&a, &c]).is_err());
+    }
+
+    #[test]
+    fn solve_spd_recovers_solution() {
+        // A = M^T M + I is SPD for any M.
+        let m = DenseMatrix::from_fn(4, 4, |i, j| ((i * j + 1) % 5) as f32 * 0.3);
+        let mut a = m.transpose().matmul(&m).unwrap();
+        for i in 0..4 {
+            let v = a.get(i, i) + 1.0;
+            a.set(i, i, v);
+        }
+        let x_true = DenseMatrix::from_fn(4, 2, |i, j| (i + j) as f32 * 0.5 - 0.7);
+        let b = a.matmul(&x_true).unwrap();
+        let x = a.solve_spd(&b).unwrap();
+        assert!(x.max_abs_diff(&x_true) < 1e-4, "diff {}", x.max_abs_diff(&x_true));
+    }
+
+    #[test]
+    fn solve_spd_rejects_indefinite() {
+        let a = DenseMatrix::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]).unwrap();
+        assert!(a.solve_spd(&DenseMatrix::zeros(2, 1)).is_err());
+    }
+
+    #[test]
+    fn qr_thin_reconstructs_and_is_orthonormal() {
+        let a = DenseMatrix::from_fn(8, 4, |i, j| ((i * 7 + j * 3) % 11) as f32 - 5.0);
+        let (q, r) = a.qr_thin().unwrap();
+        assert_eq!((q.rows(), q.cols()), (8, 4));
+        assert_eq!((r.rows(), r.cols()), (4, 4));
+        // QR = A.
+        let qr = q.matmul(&r).unwrap();
+        assert!(qr.max_abs_diff(&a) < 1e-4, "QR != A: {}", qr.max_abs_diff(&a));
+        // QᵀQ = I.
+        let qtq = q.transpose().matmul(&q).unwrap();
+        assert!(qtq.max_abs_diff(&DenseMatrix::identity(4)) < 1e-4);
+        // R upper triangular.
+        for i in 0..4 {
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+        // Wide input rejected.
+        assert!(DenseMatrix::zeros(2, 5).qr_thin().is_err());
+    }
+
+    #[test]
+    fn qr_handles_rank_deficiency() {
+        // Column 2 = column 0: still must satisfy QR = A.
+        let a = DenseMatrix::from_fn(6, 3, |i, j| match j {
+            0 | 2 => i as f32 + 1.0,
+            _ => (i * i) as f32 * 0.1,
+        });
+        let (q, r) = a.qr_thin().unwrap();
+        assert!(q.matmul(&r).unwrap().max_abs_diff(&a) < 1e-4);
+    }
+
+    #[test]
+    fn prop_matmul_associativity_with_identity_chain() {
+        check("dense-matmul-identity", |g| {
+            let (m, k) = (g.sized(), g.sized());
+            let a = DenseMatrix::from_vec(m, k, g.f32_vec(m * k, 2.0)).unwrap();
+            let ik = DenseMatrix::identity(k);
+            let r = a.matmul(&ik).map_err(|e| e.to_string())?;
+            crate::prop_assert!(
+                all_close(r.data(), a.data(), 1e-6),
+                "A @ I != A for {m}x{k}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_transpose_involution() {
+        check("dense-transpose-involution", |g| {
+            let (m, n) = (g.sized(), g.sized());
+            let a = DenseMatrix::from_vec(m, n, g.f32_vec(m * n, 10.0)).unwrap();
+            crate::prop_assert!(a.transpose().transpose() == a, "(A^T)^T != A for {m}x{n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_sum_axis_consistent_with_total() {
+        check("dense-sum-axes-agree", |g| {
+            let (m, n) = (g.sized(), g.sized());
+            let a = DenseMatrix::from_vec(m, n, g.f32_vec(m * n, 1.0)).unwrap();
+            let s0 = a.sum_axis(0).sum();
+            let s1 = a.sum_axis(1).sum();
+            let s = a.sum();
+            crate::prop_assert!(
+                (s0 - s).abs() < 1e-3 && (s1 - s).abs() < 1e-3,
+                "axis sums disagree: {s0} {s1} {s}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,188 @@
+//! File loaders/writers — the `load_txt` / SVMLight equivalents of dislib's
+//! data-loading routines (paper §3.2.1). CSV maps to dense blocks; SVMLight
+//! (`label idx:val idx:val ...`) maps to CSR + a label column.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::dense::DenseMatrix;
+use super::sparse::CsrMatrix;
+
+/// Read a delimiter-separated numeric file into a dense matrix.
+pub fn read_csv(path: &Path, delimiter: char) -> Result<DenseMatrix> {
+    let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut data = Vec::new();
+    let mut cols = None;
+    let mut rows = 0;
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut n = 0;
+        for field in line.split(delimiter) {
+            let field = field.trim();
+            if field.is_empty() {
+                continue;
+            }
+            let v: f32 = field
+                .parse()
+                .with_context(|| format!("{}:{}: bad number `{field}`", path.display(), lineno + 1))?;
+            data.push(v);
+            n += 1;
+        }
+        match cols {
+            None => cols = Some(n),
+            Some(c) if c != n => bail!(
+                "{}:{}: ragged row ({n} fields, expected {c})",
+                path.display(),
+                lineno + 1
+            ),
+            _ => {}
+        }
+        rows += 1;
+    }
+    let cols = cols.unwrap_or(0);
+    DenseMatrix::from_vec(rows, cols, data)
+}
+
+pub fn write_csv(path: &Path, m: &DenseMatrix, delimiter: char) -> Result<()> {
+    let file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..m.rows() {
+        let row = m.row(i);
+        for (j, v) in row.iter().enumerate() {
+            if j > 0 {
+                write!(w, "{delimiter}")?;
+            }
+            write!(w, "{v}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Read an SVMLight file: returns (samples as CSR, labels as n x 1 dense).
+/// `n_features` fixes the column count (features are 1-based in the format).
+pub fn read_svmlight(path: &Path, n_features: usize) -> Result<(CsrMatrix, DenseMatrix)> {
+    let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut triplets = Vec::new();
+    let mut labels = Vec::new();
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f32 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("{}:{}: bad label", path.display(), lineno + 1))?;
+        let row = labels.len();
+        labels.push(label);
+        for p in parts {
+            let (idx, val) = p
+                .split_once(':')
+                .with_context(|| format!("{}:{}: bad feature `{p}`", path.display(), lineno + 1))?;
+            let idx: usize = idx.parse().context("feature index")?;
+            let val: f32 = val.parse().context("feature value")?;
+            if idx == 0 || idx > n_features {
+                bail!(
+                    "{}:{}: feature index {idx} out of range 1..={n_features}",
+                    path.display(),
+                    lineno + 1
+                );
+            }
+            triplets.push((row, idx - 1, val));
+        }
+    }
+    let n = labels.len();
+    let samples = CsrMatrix::from_triplets(n, n_features, &triplets)?;
+    let labels = DenseMatrix::from_vec(n, 1, labels)?;
+    Ok((samples, labels))
+}
+
+pub fn write_svmlight(path: &Path, samples: &CsrMatrix, labels: &DenseMatrix) -> Result<()> {
+    if labels.rows() != samples.rows() || labels.cols() != 1 {
+        bail!(
+            "labels must be {}x1, got {}x{}",
+            samples.rows(),
+            labels.rows(),
+            labels.cols()
+        );
+    }
+    let file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..samples.rows() {
+        write!(w, "{}", labels.get(i, 0))?;
+        let (cols, vals) = samples.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            write!(w, " {}:{}", c + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("rustdslib_io_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let m = DenseMatrix::from_fn(3, 4, |i, j| i as f32 * 0.5 - j as f32);
+        let p = tmp("rt.csv");
+        write_csv(&p, &m, ',').unwrap();
+        let r = read_csv(&p, ',').unwrap();
+        assert_eq!(r, m);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn csv_skips_comments_rejects_ragged() {
+        let p = tmp("cmt.csv");
+        std::fs::write(&p, "# header\n1,2\n3,4\n").unwrap();
+        let m = read_csv(&p, ',').unwrap();
+        assert_eq!((m.rows(), m.cols()), (2, 2));
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        assert!(read_csv(&p, ',').is_err());
+        std::fs::write(&p, "1,x\n").unwrap();
+        assert!(read_csv(&p, ',').is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn svmlight_round_trip() {
+        let samples =
+            CsrMatrix::from_triplets(3, 5, &[(0, 0, 1.5), (0, 4, 2.0), (2, 2, -1.0)]).unwrap();
+        let labels = DenseMatrix::from_vec(3, 1, vec![1.0, -1.0, 1.0]).unwrap();
+        let p = tmp("rt.svm");
+        write_svmlight(&p, &samples, &labels).unwrap();
+        let (s, l) = read_svmlight(&p, 5).unwrap();
+        assert_eq!(s.to_dense(), samples.to_dense());
+        assert_eq!(l, labels);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn svmlight_rejects_bad_index() {
+        let p = tmp("bad.svm");
+        std::fs::write(&p, "1 6:2.0\n").unwrap();
+        assert!(read_svmlight(&p, 5).is_err());
+        std::fs::write(&p, "1 0:2.0\n").unwrap();
+        assert!(read_svmlight(&p, 5).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,17 @@
+//! Block storage backends.
+//!
+//! The paper stores ds-array blocks as NumPy arrays or SciPy CSR matrices
+//! depending on data density; this module provides the equivalent Rust
+//! backends ([`DenseMatrix`], [`CsrMatrix`]) plus the [`Block`] sum type the
+//! tasking runtime moves around. A third variant, `Block::Phantom`, carries
+//! only metadata and is what the discrete-event simulator schedules when the
+//! data would be too large to materialize (DESIGN.md §2).
+
+pub mod block;
+pub mod dense;
+pub mod io;
+pub mod sparse;
+
+pub use block::{Block, BlockMeta};
+pub use dense::DenseMatrix;
+pub use sparse::CsrMatrix;

@@ -1,0 +1,240 @@
+//! Dependency-graph bookkeeping shared by the local executor and the
+//! discrete-event simulator.
+//!
+//! The master inserts every submitted task into this graph and tracks
+//! readiness (paper §3.1.2): a task becomes dependency-free when all of its
+//! read ids are produced. Because ids are single-assignment (SSA ≡ PyCOMPSs
+//! data renaming), the only dependency kind is reader-after-writer.
+
+use std::sync::Arc;
+
+use crate::storage::{Block, BlockMeta};
+
+use super::task::{DataId, DataState, TaskId, TaskSpec};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    /// Waiting on `deps_remaining` producers.
+    Pending,
+    /// Dependency-free, queued for dispatch.
+    Ready,
+    Running,
+    Done,
+    Failed,
+}
+
+pub struct TaskNode {
+    pub spec: TaskSpec,
+    pub state: TaskState,
+    pub deps_remaining: u32,
+    /// Tasks to notify on completion. May contain duplicates when a
+    /// dependent reads several of our outputs — each entry balances one
+    /// increment of that dependent's `deps_remaining`.
+    pub dependents: Vec<TaskId>,
+}
+
+#[derive(Default)]
+pub struct Graph {
+    pub tasks: Vec<TaskNode>,
+    pub data: Vec<DataState>,
+}
+
+impl Graph {
+    /// Register a block that exists from the start (no producing task).
+    pub fn put_block(&mut self, meta: BlockMeta, value: Option<Arc<Block>>) -> DataId {
+        let id = self.data.len() as DataId;
+        self.data.push(DataState {
+            meta,
+            value,
+            producer: None,
+        });
+        id
+    }
+
+    /// Insert a task; allocates its output ids, wires dependencies, and
+    /// returns (task id, output ids, ready-now?).
+    pub fn submit(
+        &mut self,
+        name: &'static str,
+        reads: &[DataId],
+        out_metas: Vec<BlockMeta>,
+        hint: super::task::CostHint,
+        read_bytes: f64,
+        func: super::task::TaskFn,
+    ) -> (TaskId, Vec<DataId>, bool) {
+        let tid = self.tasks.len() as TaskId;
+        let mut write_ids = Vec::with_capacity(out_metas.len());
+        let mut write_bytes = 0.0;
+        for meta in out_metas {
+            write_bytes += meta.bytes() as f64;
+            let id = self.data.len() as DataId;
+            self.data.push(DataState {
+                meta,
+                value: None,
+                producer: Some(tid),
+            });
+            write_ids.push(id);
+        }
+
+        let mut deps = 0u32;
+        for &r in reads {
+            let d = &self.data[r as usize];
+            if d.value.is_some() {
+                continue; // already materialized
+            }
+            match d.producer {
+                Some(p) if self.tasks[p as usize].state != TaskState::Done => {
+                    deps += 1;
+                    self.tasks[p as usize].dependents.push(tid);
+                }
+                _ => {}
+            }
+        }
+
+        let ready = deps == 0;
+        self.tasks.push(TaskNode {
+            spec: TaskSpec {
+                name,
+                reads: reads.to_vec().into_boxed_slice(),
+                writes: write_ids.clone().into_boxed_slice(),
+                hint,
+                read_bytes,
+                write_bytes,
+                func,
+            },
+            state: if ready { TaskState::Ready } else { TaskState::Pending },
+            deps_remaining: deps,
+            dependents: Vec::new(),
+        });
+        (tid, write_ids, ready)
+    }
+
+    /// Mark a task done, store its outputs (if any — the simulator passes
+    /// `None`s), and return the dependents that became ready.
+    pub fn complete(&mut self, tid: TaskId, outputs: Option<Vec<Block>>) -> Vec<TaskId> {
+        if let Some(outs) = outputs {
+            let writes: Vec<DataId> = self.tasks[tid as usize].spec.writes.to_vec();
+            debug_assert_eq!(outs.len(), writes.len(), "task output arity mismatch");
+            for (id, block) in writes.into_iter().zip(outs) {
+                self.data[id as usize].value = Some(Arc::new(block));
+            }
+        }
+        self.tasks[tid as usize].state = TaskState::Done;
+        let dependents = std::mem::take(&mut self.tasks[tid as usize].dependents);
+        let mut now_ready = Vec::new();
+        for dep in dependents {
+            let node = &mut self.tasks[dep as usize];
+            debug_assert!(node.deps_remaining > 0);
+            node.deps_remaining -= 1;
+            if node.deps_remaining == 0 && node.state == TaskState::Pending {
+                node.state = TaskState::Ready;
+                now_ready.push(dep);
+            }
+        }
+        now_ready
+    }
+
+    /// Longest path through the graph in task count — a lower bound used by
+    /// property tests (the simulated makespan can never beat the critical
+    /// path). O(V + E); valid because task ids are topologically ordered by
+    /// construction (a task can only depend on earlier submissions).
+    pub fn critical_path_len(&self) -> usize {
+        let mut depth = vec![0usize; self.tasks.len()];
+        let mut best = 0;
+        for (i, node) in self.tasks.iter().enumerate() {
+            let d = node
+                .spec
+                .reads
+                .iter()
+                .filter_map(|&r| self.data[r as usize].producer)
+                .map(|p| depth[p as usize] + 1)
+                .max()
+                .unwrap_or(1)
+                .max(1);
+            depth[i] = d;
+            best = best.max(d);
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::DenseMatrix;
+    use crate::tasking::task::CostHint;
+    use std::sync::Arc;
+
+    fn noop() -> super::super::task::TaskFn {
+        Arc::new(|_| Ok(vec![]))
+    }
+
+    fn meta() -> BlockMeta {
+        BlockMeta::dense(1, 1)
+    }
+
+    #[test]
+    fn diamond_dependencies_resolve_in_order() {
+        let mut g = Graph::default();
+        let src = g.put_block(meta(), Some(Arc::new(Block::Dense(DenseMatrix::zeros(1, 1)))));
+        let (a, a_out, ready_a) = g.submit("a", &[src], vec![meta()], CostHint::default(), 0.0, noop());
+        assert!(ready_a);
+        let (b, b_out, ready_b) =
+            g.submit("b", &[a_out[0]], vec![meta()], CostHint::default(), 0.0, noop());
+        let (c, c_out, ready_c) =
+            g.submit("c", &[a_out[0]], vec![meta()], CostHint::default(), 0.0, noop());
+        assert!(!ready_b && !ready_c);
+        let (d, _, ready_d) = g.submit(
+            "d",
+            &[b_out[0], c_out[0]],
+            vec![meta()],
+            CostHint::default(),
+            0.0,
+            noop(),
+        );
+        assert!(!ready_d);
+
+        let ready = g.complete(a, None);
+        assert_eq!(ready, vec![b, c]);
+        assert!(g.complete(b, None).is_empty());
+        assert_eq!(g.complete(c, None), vec![d]);
+        assert_eq!(g.critical_path_len(), 3);
+        let _ = d;
+    }
+
+    #[test]
+    fn reading_materialized_data_needs_no_dep() {
+        let mut g = Graph::default();
+        let x = g.put_block(meta(), Some(Arc::new(Block::Dense(DenseMatrix::zeros(1, 1)))));
+        let (_, _, ready) = g.submit("t", &[x, x], vec![meta()], CostHint::default(), 0.0, noop());
+        assert!(ready);
+    }
+
+    #[test]
+    fn duplicate_reads_from_same_producer_balance() {
+        let mut g = Graph::default();
+        let (a, outs, _) = g.submit("a", &[], vec![meta(), meta()], CostHint::default(), 0.0, noop());
+        let (b, _, ready) = g.submit(
+            "b",
+            &[outs[0], outs[1]],
+            vec![meta()],
+            CostHint::default(),
+            0.0,
+            noop(),
+        );
+        assert!(!ready);
+        assert_eq!(g.tasks[b as usize].deps_remaining, 2);
+        let ready = g.complete(a, None);
+        assert_eq!(ready, vec![b]);
+        assert_eq!(g.tasks[b as usize].deps_remaining, 0);
+    }
+
+    #[test]
+    fn completion_stores_outputs() {
+        let mut g = Graph::default();
+        let (a, outs, _) = g.submit("a", &[], vec![meta()], CostHint::default(), 0.0, noop());
+        g.complete(a, Some(vec![Block::Dense(DenseMatrix::full(1, 1, 7.0))]));
+        let v = g.data[outs[0] as usize].value.as_ref().unwrap();
+        assert_eq!(v.as_dense().unwrap().get(0, 0), 7.0);
+    }
+}

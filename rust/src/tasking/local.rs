@@ -1,0 +1,327 @@
+//! Real master–worker executor: a pool of OS threads executes tasks as they
+//! become dependency-free, mirroring PyCOMPSs' asynchronous task scheduling
+//! (paper §3.1.2). The submitting thread plays the master (graph insertion);
+//! workers pull ready tasks, resolve input futures, run the task function
+//! and publish outputs, waking dependents.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::storage::{Block, BlockMeta};
+
+use super::graph::{Graph, TaskState};
+use super::metrics::Metrics;
+use super::task::{CostHint, DataId, TaskFn, TaskId};
+
+struct State {
+    graph: Graph,
+    ready: VecDeque<TaskId>,
+    running: usize,
+    shutdown: bool,
+    /// First task failure; poisons the runtime (fail-fast).
+    error: Option<String>,
+    metrics: Metrics,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+pub struct LocalExecutor {
+    inner: Arc<Inner>,
+    workers: usize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl LocalExecutor {
+    pub fn new(workers: usize) -> Self {
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                graph: Graph::default(),
+                ready: VecDeque::new(),
+                running: 0,
+                shutdown: false,
+                error: None,
+                metrics: Metrics::default(),
+            }),
+            cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                std::thread::spawn(move || worker_loop(inner))
+            })
+            .collect();
+        Self {
+            inner,
+            workers,
+            handles: Mutex::new(handles),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn put_block(&self, block: Block) -> DataId {
+        let mut st = self.inner.state.lock().unwrap();
+        st.graph.put_block(block.meta(), Some(Arc::new(block)))
+    }
+
+    pub fn submit(
+        &self,
+        name: &'static str,
+        reads: &[DataId],
+        out_metas: Vec<BlockMeta>,
+        hint: CostHint,
+        read_bytes: f64,
+        f: TaskFn,
+    ) -> Vec<DataId> {
+        let mut st = self.inner.state.lock().unwrap();
+        let n_out = out_metas.len();
+        let write_bytes: f64 = out_metas.iter().map(|m| m.bytes() as f64).sum();
+        let (tid, outs, ready) = st.graph.submit(name, reads, out_metas, hint, read_bytes, f);
+        st.metrics
+            .record_submit(name, reads.len(), n_out, read_bytes, write_bytes);
+        if ready {
+            st.ready.push_back(tid);
+            self.inner.cv.notify_one();
+        }
+        outs
+    }
+
+    pub fn wait(&self, id: DataId) -> Result<Arc<Block>> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(err) = &st.error {
+                bail!("runtime poisoned by task failure: {err}");
+            }
+            if let Some(v) = &st.graph.data[id as usize].value {
+                return Ok(Arc::clone(v));
+            }
+            // Deadlock guard: nothing running, nothing ready, value absent.
+            if st.running == 0 && st.ready.is_empty() {
+                bail!("wait({id}) would deadlock: no runnable producer");
+            }
+            st = self.inner.cv.wait(st).unwrap();
+        }
+    }
+
+    pub fn barrier(&self) -> Result<()> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(err) = &st.error {
+                bail!("runtime poisoned by task failure: {err}");
+            }
+            if st.running == 0 && st.ready.is_empty() {
+                // All pending tasks must be blocked forever (impossible in a
+                // DAG unless the graph is malformed) — assert clean finish.
+                let stuck = st
+                    .graph
+                    .tasks
+                    .iter()
+                    .filter(|t| t.state == TaskState::Pending)
+                    .count();
+                if stuck > 0 {
+                    bail!("barrier: {stuck} tasks stuck pending (malformed graph)");
+                }
+                return Ok(());
+            }
+            st = self.inner.cv.wait(st).unwrap();
+        }
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.inner.state.lock().unwrap().metrics.clone()
+    }
+}
+
+impl Drop for LocalExecutor {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.cv.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    loop {
+        // Claim a ready task.
+        let (tid, func, inputs) = {
+            let mut st = inner.state.lock().unwrap();
+            let tid = loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(t) = st.ready.pop_front() {
+                    break t;
+                }
+                st = inner.cv.wait(st).unwrap();
+            };
+            st.graph.tasks[tid as usize].state = TaskState::Running;
+            st.running += 1;
+            let node = &st.graph.tasks[tid as usize];
+            let func = Arc::clone(&node.spec.func);
+            // Readiness guarantees every input value is resolved.
+            let inputs: Vec<Arc<Block>> = node
+                .spec
+                .reads
+                .iter()
+                .map(|&r| {
+                    st.graph.data[r as usize]
+                        .value
+                        .as_ref()
+                        .map(Arc::clone)
+                        .ok_or_else(|| anyhow!("input {r} unresolved for ready task"))
+                })
+                .collect::<Result<_>>()
+                .unwrap_or_default();
+            (tid, func, inputs)
+        };
+
+        // Run outside the lock.
+        let result = func(&inputs);
+
+        let mut st = inner.state.lock().unwrap();
+        st.running -= 1;
+        match result {
+            Ok(outs) => {
+                let expected = st.graph.tasks[tid as usize].spec.arity_out();
+                if outs.len() != expected {
+                    let name = st.graph.tasks[tid as usize].spec.name;
+                    st.graph.tasks[tid as usize].state = TaskState::Failed;
+                    st.error.get_or_insert(format!(
+                        "task `{name}` returned {} outputs, declared {expected}",
+                        outs.len()
+                    ));
+                } else {
+                    let now_ready = st.graph.complete(tid, Some(outs));
+                    for t in now_ready {
+                        st.ready.push_back(t);
+                    }
+                }
+            }
+            Err(e) => {
+                let name = st.graph.tasks[tid as usize].spec.name;
+                st.graph.tasks[tid as usize].state = TaskState::Failed;
+                st.error.get_or_insert(format!("task `{name}` failed: {e}"));
+            }
+        }
+        inner.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::DenseMatrix;
+
+    fn add_op(delta: f32) -> TaskFn {
+        Arc::new(move |ins: &[Arc<Block>]| {
+            let m = ins[0].as_dense()?;
+            Ok(vec![Block::Dense(m.map(|x| x + delta))])
+        })
+    }
+
+    #[test]
+    fn wide_fanout_executes_fully() {
+        let ex = LocalExecutor::new(4);
+        let src = ex.put_block(Block::Dense(DenseMatrix::full(2, 2, 1.0)));
+        let mut outs = Vec::new();
+        for i in 0..64 {
+            let o = ex.submit(
+                "fan",
+                &[src],
+                vec![BlockMeta::dense(2, 2)],
+                CostHint::default(),
+                16.0,
+                add_op(i as f32),
+            );
+            outs.push(o[0]);
+        }
+        ex.barrier().unwrap();
+        for (i, &o) in outs.iter().enumerate() {
+            let v = ex.wait(o).unwrap();
+            assert_eq!(v.as_dense().unwrap().get(0, 0), 1.0 + i as f32);
+        }
+        assert_eq!(ex.metrics().total_tasks(), 64);
+    }
+
+    #[test]
+    fn deep_chain_is_ordered() {
+        let ex = LocalExecutor::new(3);
+        let mut cur = ex.put_block(Block::Dense(DenseMatrix::full(1, 1, 0.0)));
+        for _ in 0..100 {
+            cur = ex.submit(
+                "inc",
+                &[cur],
+                vec![BlockMeta::dense(1, 1)],
+                CostHint::default(),
+                4.0,
+                add_op(1.0),
+            )[0];
+        }
+        let v = ex.wait(cur).unwrap();
+        assert_eq!(v.as_dense().unwrap().get(0, 0), 100.0);
+    }
+
+    #[test]
+    fn task_error_poisons_runtime() {
+        let ex = LocalExecutor::new(2);
+        let src = ex.put_block(Block::Dense(DenseMatrix::full(1, 1, 0.0)));
+        let bad = ex.submit(
+            "explode",
+            &[src],
+            vec![BlockMeta::dense(1, 1)],
+            CostHint::default(),
+            4.0,
+            Arc::new(|_| anyhow::bail!("boom")),
+        );
+        assert!(ex.wait(bad[0]).is_err());
+        assert!(ex.barrier().is_err());
+    }
+
+    #[test]
+    fn arity_mismatch_detected() {
+        let ex = LocalExecutor::new(1);
+        let out = ex.submit(
+            "liar",
+            &[],
+            vec![BlockMeta::dense(1, 1), BlockMeta::dense(1, 1)],
+            CostHint::default(),
+            0.0,
+            Arc::new(|_| Ok(vec![Block::Dense(DenseMatrix::zeros(1, 1))])),
+        );
+        assert!(ex.wait(out[0]).is_err());
+    }
+
+    #[test]
+    fn collection_style_many_inputs() {
+        let ex = LocalExecutor::new(4);
+        let parts: Vec<DataId> = (0..32)
+            .map(|i| ex.put_block(Block::Dense(DenseMatrix::full(1, 1, i as f32))))
+            .collect();
+        let sum = ex.submit(
+            "reduce_all",
+            &parts,
+            vec![BlockMeta::dense(1, 1)],
+            CostHint::default(),
+            128.0,
+            Arc::new(|ins: &[Arc<Block>]| {
+                let s: f32 = ins.iter().map(|b| b.as_dense().unwrap().get(0, 0)).sum();
+                Ok(vec![Block::Dense(DenseMatrix::full(1, 1, s))])
+            }),
+        );
+        let v = ex.wait(sum[0]).unwrap();
+        assert_eq!(v.as_dense().unwrap().get(0, 0), (0..32).sum::<i32>() as f32);
+    }
+}

@@ -1,0 +1,112 @@
+//! Runtime metrics: per-op task counts and traffic.
+//!
+//! Task counts are first-class experimental quantities in the paper (the
+//! `N²+N` vs `N` transpose claim, `N·min(N,S)+N` vs `2N` shuffle claim), so
+//! the runtime counts them on every submission and the benches assert the
+//! formulas (DESIGN.md §6, EXP-TASKS).
+
+use std::collections::BTreeMap;
+
+/// Snapshot of accumulated metrics. Cloneable plain data.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// Tasks submitted, keyed by op name.
+    pub tasks_by_op: BTreeMap<&'static str, u64>,
+    /// Total input futures declared across tasks (collection reads count
+    /// each element, matching how PyCOMPSs sees collection parameters).
+    pub read_edges: u64,
+    /// Total output futures produced by tasks.
+    pub write_edges: u64,
+    /// Total declared input bytes.
+    pub read_bytes: f64,
+    /// Total declared output bytes.
+    pub write_bytes: f64,
+}
+
+impl Metrics {
+    pub fn record_submit(
+        &mut self,
+        name: &'static str,
+        reads: usize,
+        writes: usize,
+        read_bytes: f64,
+        write_bytes: f64,
+    ) {
+        *self.tasks_by_op.entry(name).or_insert(0) += 1;
+        self.read_edges += reads as u64;
+        self.write_edges += writes as u64;
+        self.read_bytes += read_bytes;
+        self.write_bytes += write_bytes;
+    }
+
+    pub fn total_tasks(&self) -> u64 {
+        self.tasks_by_op.values().sum()
+    }
+
+    pub fn tasks_for(&self, op: &str) -> u64 {
+        self.tasks_by_op
+            .iter()
+            .filter(|(k, _)| **k == op)
+            .map(|(_, v)| *v)
+            .sum()
+    }
+
+    /// Tasks whose op name starts with `prefix` — ops are namespaced like
+    /// `dsarray.transpose.block` so prefixes select whole operations.
+    pub fn tasks_with_prefix(&self, prefix: &str) -> u64 {
+        self.tasks_by_op
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, v)| *v)
+            .sum()
+    }
+
+    /// Difference vs an earlier snapshot (for measuring one operation).
+    pub fn since(&self, earlier: &Metrics) -> Metrics {
+        let mut out = self.clone();
+        for (k, v) in &earlier.tasks_by_op {
+            if let Some(x) = out.tasks_by_op.get_mut(k) {
+                *x -= v;
+            }
+        }
+        out.tasks_by_op.retain(|_, v| *v > 0);
+        out.read_edges -= earlier.read_edges;
+        out.write_edges -= earlier.write_edges;
+        out.read_bytes -= earlier.read_bytes;
+        out.write_bytes -= earlier.write_bytes;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_and_prefix_queries() {
+        let mut m = Metrics::default();
+        m.record_submit("dsarray.transpose.block", 1, 1, 100.0, 100.0);
+        m.record_submit("dsarray.transpose.block", 1, 1, 100.0, 100.0);
+        m.record_submit("dataset.transpose.split", 1, 4, 50.0, 50.0);
+        assert_eq!(m.total_tasks(), 3);
+        assert_eq!(m.tasks_for("dsarray.transpose.block"), 2);
+        assert_eq!(m.tasks_with_prefix("dsarray.transpose"), 2);
+        assert_eq!(m.tasks_with_prefix("dataset."), 1);
+        assert_eq!(m.read_edges, 3);
+        assert_eq!(m.write_edges, 6);
+    }
+
+    #[test]
+    fn since_subtracts() {
+        let mut m = Metrics::default();
+        m.record_submit("a", 1, 1, 10.0, 10.0);
+        let snap = m.clone();
+        m.record_submit("a", 2, 1, 10.0, 10.0);
+        m.record_submit("b", 1, 1, 5.0, 5.0);
+        let d = m.since(&snap);
+        assert_eq!(d.total_tasks(), 2);
+        assert_eq!(d.tasks_for("a"), 1);
+        assert_eq!(d.tasks_for("b"), 1);
+        assert_eq!(d.read_edges, 3);
+    }
+}

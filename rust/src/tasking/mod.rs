@@ -1,0 +1,225 @@
+//! The task-based runtime — our from-scratch PyCOMPSs substrate.
+//!
+//! The paper's performance claims are claims about *task graphs*: how many
+//! tasks an operation emits, how wide they are, and how a master–worker
+//! runtime with a per-task scheduling cost executes them. This module
+//! reproduces that programming model:
+//!
+//! * applications (the ds-array layer, the Dataset baseline, estimators)
+//!   **submit tasks** with declared reads/writes; the master infers the
+//!   dependency graph and runs dependency-free tasks on workers
+//!   (paper §3.1.2);
+//! * data lives behind **future handles** ([`DataId`]); handles are
+//!   single-assignment (PyCOMPSs' data renaming, i.e. SSA), so the writer of
+//!   an id is unique and dependencies are exactly reader-after-writer;
+//! * **collection parameters** are plain multi-id reads/writes — a task may
+//!   read or write arbitrarily many blocks, which is the PyCOMPSs
+//!   `COLLECTION_IN`/`COLLECTION_OUT` feature ds-arrays exploit (paper
+//!   §4.2.1); the Dataset baseline predates it and uses bounded-arity tasks;
+//! * two executors share the submission API: [`Runtime::local`] (a real
+//!   thread-pool master–worker) and [`Runtime::sim`] (a discrete-event
+//!   simulator that executes the *same* graphs under a calibrated cluster
+//!   cost model at MareNostrum scale — DESIGN.md §2).
+
+pub mod graph;
+pub mod local;
+pub mod metrics;
+pub mod ops;
+pub mod sim;
+pub mod task;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::storage::{Block, BlockMeta};
+pub use metrics::Metrics;
+pub use sim::{SimConfig, SimReport};
+pub use task::{CostHint, DataId, TaskFn, TaskId, TaskSpec};
+
+/// Handle to a submitted-but-possibly-unfinished block — the PyCOMPSs
+/// "future object" (paper §3.1.2). Metadata is always known; the value
+/// requires synchronization (and is unavailable in sim mode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Future {
+    pub id: DataId,
+    pub meta: BlockMeta,
+}
+
+enum Exec {
+    Local(local::LocalExecutor),
+    Sim(sim::SimExecutor),
+}
+
+/// The runtime handle shared by every distributed structure. Cheap to clone.
+#[derive(Clone)]
+pub struct Runtime {
+    exec: Arc<Exec>,
+}
+
+impl Runtime {
+    /// Real executor: `workers` OS threads execute tasks as they become
+    /// dependency-free.
+    pub fn local(workers: usize) -> Self {
+        Self {
+            exec: Arc::new(Exec::Local(local::LocalExecutor::new(workers.max(1)))),
+        }
+    }
+
+    /// Simulated executor: tasks are recorded (never run) and
+    /// [`Runtime::run_sim`] replays the graph through the discrete-event
+    /// cluster model.
+    pub fn sim(cfg: SimConfig) -> Self {
+        Self {
+            exec: Arc::new(Exec::Sim(sim::SimExecutor::new(cfg))),
+        }
+    }
+
+    pub fn is_sim(&self) -> bool {
+        matches!(*self.exec, Exec::Sim(_))
+    }
+
+    /// Number of workers (threads or simulated cores).
+    pub fn workers(&self) -> usize {
+        match &*self.exec {
+            Exec::Local(l) => l.workers(),
+            Exec::Sim(s) => s.workers(),
+        }
+    }
+
+    /// Register an already-materialized block (no task executes for it).
+    pub fn put_block(&self, block: Block) -> Future {
+        let meta = block.meta();
+        let id = match &*self.exec {
+            Exec::Local(l) => l.put_block(block),
+            Exec::Sim(s) => s.put_block(block.meta()),
+        };
+        Future { id, meta }
+    }
+
+    /// Submit a task. `reads` are the input futures (collection reads are
+    /// just long lists), `out_metas` declare the output shapes (shape
+    /// inference is the submitter's job, mirroring the type/direction
+    /// declarations of the `@task` decorator), `hint` feeds the simulator's
+    /// cost model and `f` is the actual computation over resolved blocks.
+    pub fn submit(
+        &self,
+        name: &'static str,
+        reads: &[Future],
+        out_metas: Vec<BlockMeta>,
+        hint: CostHint,
+        f: TaskFn,
+    ) -> Vec<Future> {
+        let read_ids: Vec<DataId> = reads.iter().map(|r| r.id).collect();
+        let read_bytes: f64 = reads.iter().map(|r| r.meta.bytes() as f64).sum();
+        let metas = out_metas.clone();
+        let ids = match &*self.exec {
+            Exec::Local(l) => l.submit(name, &read_ids, out_metas, hint, read_bytes, f),
+            Exec::Sim(s) => s.submit(name, &read_ids, out_metas, hint, read_bytes, f),
+        };
+        ids.into_iter()
+            .zip(metas)
+            .map(|(id, meta)| Future { id, meta })
+            .collect()
+    }
+
+    /// Synchronize one future and return its block — `compss_wait_on`.
+    /// Errors in sim mode (simulated data has no values).
+    pub fn wait(&self, fut: Future) -> Result<Arc<Block>> {
+        match &*self.exec {
+            Exec::Local(l) => l.wait(fut.id),
+            Exec::Sim(_) => bail!("cannot synchronize data in simulation mode"),
+        }
+    }
+
+    /// Wait until every submitted task has finished (local mode) — the
+    /// explicit synchronization point of the programming model.
+    pub fn barrier(&self) -> Result<()> {
+        match &*self.exec {
+            Exec::Local(l) => l.barrier(),
+            Exec::Sim(_) => Ok(()), // graph replay happens in run_sim
+        }
+    }
+
+    /// Run the discrete-event simulation over all recorded tasks and return
+    /// the report. Errors in local mode.
+    pub fn run_sim(&self) -> Result<SimReport> {
+        match &*self.exec {
+            Exec::Local(_) => bail!("run_sim on a local (non-simulated) runtime"),
+            Exec::Sim(s) => s.run(),
+        }
+    }
+
+    /// As [`Runtime::run_sim`], recording the per-task schedule for trace
+    /// export (`SimReport::write_trace_csv`).
+    pub fn run_sim_traced(&self) -> Result<SimReport> {
+        match &*self.exec {
+            Exec::Local(_) => bail!("run_sim on a local (non-simulated) runtime"),
+            Exec::Sim(s) => s.run_traced(),
+        }
+    }
+
+    /// Task-count and traffic metrics accumulated so far.
+    pub fn metrics(&self) -> Metrics {
+        match &*self.exec {
+            Exec::Local(l) => l.metrics(),
+            Exec::Sim(s) => s.metrics(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::DenseMatrix;
+
+    fn dense(v: Vec<f32>, r: usize, c: usize) -> Block {
+        Block::Dense(DenseMatrix::from_vec(r, c, v).unwrap())
+    }
+
+    #[test]
+    fn submit_chain_and_wait() {
+        let rt = Runtime::local(2);
+        let a = rt.put_block(dense(vec![1.0, 2.0], 1, 2));
+        let b = rt.submit(
+            "double",
+            &[a],
+            vec![BlockMeta::dense(1, 2)],
+            CostHint::default(),
+            Arc::new(|ins| {
+                let m = ins[0].as_dense()?;
+                Ok(vec![Block::Dense(m.map(|x| x * 2.0))])
+            }),
+        );
+        let c = rt.submit(
+            "add_one",
+            &[b[0]],
+            vec![BlockMeta::dense(1, 2)],
+            CostHint::default(),
+            Arc::new(|ins| {
+                let m = ins[0].as_dense()?;
+                Ok(vec![Block::Dense(m.map(|x| x + 1.0))])
+            }),
+        );
+        let out = rt.wait(c[0]).unwrap();
+        assert_eq!(out.as_dense().unwrap().data(), &[3.0, 5.0]);
+        assert_eq!(rt.metrics().total_tasks(), 2);
+    }
+
+    #[test]
+    fn sim_mode_records_but_never_runs() {
+        let rt = Runtime::sim(SimConfig::with_workers(4));
+        let a = rt.put_block(Block::Phantom(BlockMeta::dense(100, 100)));
+        let out = rt.submit(
+            "noop",
+            &[a],
+            vec![BlockMeta::dense(100, 100)],
+            CostHint::flops(1e6),
+            Arc::new(|_| panic!("sim mode must not execute tasks")),
+        );
+        assert!(rt.wait(out[0]).is_err());
+        let report = rt.run_sim().unwrap();
+        assert_eq!(report.tasks_executed, 1);
+        assert!(report.makespan_s > 0.0);
+    }
+}

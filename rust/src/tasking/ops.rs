@@ -1,0 +1,177 @@
+//! Reusable task-function constructors for common block operations.
+//!
+//! Both the ds-array layer and the Dataset baseline build their task graphs
+//! from these closures, so the two structures differ *only* in graph shape —
+//! exactly the comparison the paper makes.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::storage::{Block, CsrMatrix, DenseMatrix};
+
+use super::task::TaskFn;
+
+/// Unary elementwise op over one block, preserving backend.
+pub fn map_op(f: impl Fn(f32) -> f32 + Send + Sync + 'static) -> TaskFn {
+    Arc::new(move |ins: &[Arc<Block>]| {
+        let b = &*ins[0];
+        match b {
+            Block::Dense(m) => Ok(vec![Block::Dense(m.map(&f))]),
+            Block::Csr(m) => {
+                // Elementwise maps with f(0) != 0 would densify; ds-arrays
+                // (like SciPy) only support zero-preserving maps on CSR.
+                if f(0.0) != 0.0 {
+                    bail!("non-zero-preserving map on a sparse block");
+                }
+                let d = m.to_dense().map(&f);
+                Ok(vec![Block::Csr(CsrMatrix::from_dense(&d, 0.0))])
+            }
+            Block::Phantom(_) => bail!("map on phantom block"),
+        }
+    })
+}
+
+/// Binary elementwise op over two same-shape blocks (densifies mixed pairs).
+pub fn zip_op(f: impl Fn(f32, f32) -> f32 + Send + Sync + 'static) -> TaskFn {
+    Arc::new(move |ins: &[Arc<Block>]| {
+        let a = ins[0].to_dense()?;
+        let b = ins[1].to_dense()?;
+        Ok(vec![Block::Dense(a.zip_map(&b, &f)?)])
+    })
+}
+
+/// Transpose a single block.
+pub fn transpose_op() -> TaskFn {
+    Arc::new(|ins: &[Arc<Block>]| Ok(vec![ins[0].transpose()]))
+}
+
+/// Vertically stack all input blocks into one.
+pub fn vstack_op() -> TaskFn {
+    Arc::new(|ins: &[Arc<Block>]| {
+        if ins.iter().all(|b| matches!(&**b, Block::Csr(_))) {
+            let parts: Vec<&CsrMatrix> = ins.iter().map(|b| b.as_csr().unwrap()).collect();
+            Ok(vec![Block::Csr(CsrMatrix::vstack(&parts)?)])
+        } else {
+            let dense: Vec<DenseMatrix> =
+                ins.iter().map(|b| b.to_dense()).collect::<Result<_>>()?;
+            let refs: Vec<&DenseMatrix> = dense.iter().collect();
+            Ok(vec![Block::Dense(DenseMatrix::vstack(&refs)?)])
+        }
+    })
+}
+
+/// Horizontally stack all input blocks into one.
+pub fn hstack_op() -> TaskFn {
+    Arc::new(|ins: &[Arc<Block>]| {
+        if ins.iter().all(|b| matches!(&**b, Block::Csr(_))) {
+            let parts: Vec<&CsrMatrix> = ins.iter().map(|b| b.as_csr().unwrap()).collect();
+            Ok(vec![Block::Csr(CsrMatrix::hstack(&parts)?)])
+        } else {
+            let dense: Vec<DenseMatrix> =
+                ins.iter().map(|b| b.to_dense()).collect::<Result<_>>()?;
+            let refs: Vec<&DenseMatrix> = dense.iter().collect();
+            Ok(vec![Block::Dense(DenseMatrix::hstack(&refs)?)])
+        }
+    })
+}
+
+/// Slice one block: `[r0, r0+nr) x [c0, c0+nc)`.
+pub fn slice_op(r0: usize, c0: usize, nr: usize, nc: usize) -> TaskFn {
+    Arc::new(move |ins: &[Arc<Block>]| Ok(vec![ins[0].slice(r0, c0, nr, nc)?]))
+}
+
+/// Sum-reduce all input blocks elementwise (same shape).
+pub fn add_reduce_op() -> TaskFn {
+    Arc::new(|ins: &[Arc<Block>]| {
+        let mut acc = ins[0].to_dense()?;
+        for b in &ins[1..] {
+            acc.axpy(1.0, &b.to_dense()?)?;
+        }
+        Ok(vec![Block::Dense(acc)])
+    })
+}
+
+/// Matmul of two blocks (dense@dense or csr@dense).
+pub fn matmul_op() -> TaskFn {
+    Arc::new(|ins: &[Arc<Block>]| {
+        let out = match (&*ins[0], &*ins[1]) {
+            (Block::Csr(a), Block::Dense(b)) => a.matmul_dense(b)?,
+            (a, b) => a.to_dense()?.matmul(&b.to_dense()?)?,
+        };
+        Ok(vec![Block::Dense(out)])
+    })
+}
+
+/// `C += A @ B` accumulate: inputs [A, B, C]; used by blocked matmul chains.
+pub fn gemm_acc_op() -> TaskFn {
+    Arc::new(|ins: &[Arc<Block>]| {
+        let prod = match (&*ins[0], &*ins[1]) {
+            (Block::Csr(a), Block::Dense(b)) => a.matmul_dense(b)?,
+            (a, b) => a.to_dense()?.matmul(&b.to_dense()?)?,
+        };
+        let mut c = ins[2].to_dense()?;
+        c.axpy(1.0, &prod)?;
+        Ok(vec![Block::Dense(c)])
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::BlockMeta;
+
+    fn dense(r: usize, c: usize, f: impl FnMut(usize, usize) -> f32) -> Arc<Block> {
+        Arc::new(Block::Dense(DenseMatrix::from_fn(r, c, f)))
+    }
+
+    #[test]
+    fn map_preserves_sparsity_when_zero_preserving() {
+        let m = CsrMatrix::from_triplets(2, 3, &[(0, 1, 2.0), (1, 0, -1.0)]).unwrap();
+        let out = map_op(|x| x * 2.0)(&[Arc::new(Block::Csr(m))]).unwrap();
+        match &out[0] {
+            Block::Csr(c) => {
+                assert_eq!(c.nnz(), 2);
+                assert_eq!(c.to_dense().get(0, 1), 4.0);
+            }
+            _ => panic!("expected CSR out"),
+        }
+    }
+
+    #[test]
+    fn map_rejects_densifying_sparse() {
+        let m = CsrMatrix::from_triplets(1, 1, &[]).unwrap();
+        assert!(map_op(|x| x + 1.0)(&[Arc::new(Block::Csr(m))]).is_err());
+    }
+
+    #[test]
+    fn zip_and_reduce() {
+        let a = dense(2, 2, |i, j| (i + j) as f32);
+        let b = dense(2, 2, |_, _| 10.0);
+        let s = zip_op(|x, y| x + y)(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(s[0].as_dense().unwrap().get(1, 1), 12.0);
+        let r = add_reduce_op()(&[a.clone(), a.clone(), a]).unwrap();
+        assert_eq!(r[0].as_dense().unwrap().get(1, 1), 6.0);
+    }
+
+    #[test]
+    fn gemm_acc_accumulates() {
+        let a = dense(2, 2, |i, j| if i == j { 1.0 } else { 0.0 });
+        let b = dense(2, 2, |i, j| (i * 2 + j) as f32);
+        let c = dense(2, 2, |_, _| 100.0);
+        let out = gemm_acc_op()(&[a, b.clone(), c]).unwrap();
+        assert_eq!(out[0].as_dense().unwrap().get(0, 1), 101.0);
+    }
+
+    #[test]
+    fn stack_ops_roundtrip() {
+        let a = dense(1, 2, |_, j| j as f32);
+        let b = dense(1, 2, |_, j| 10.0 + j as f32);
+        let v = vstack_op()(&[a.clone(), b]).unwrap();
+        assert_eq!(v[0].meta(), BlockMeta::dense(2, 2));
+        let h = hstack_op()(&[a.clone(), a]).unwrap();
+        assert_eq!(h[0].meta(), BlockMeta::dense(1, 4));
+        let s = slice_op(0, 1, 1, 1)(&[Arc::new(h[0].clone())]).unwrap();
+        assert_eq!(s[0].as_dense().unwrap().get(0, 0), 1.0);
+    }
+}

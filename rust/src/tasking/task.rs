@@ -1,0 +1,116 @@
+//! Task and data identifiers, cost hints, and the task specification record.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::storage::{Block, BlockMeta};
+
+/// Index into the runtime's data table. Single-assignment: exactly one
+/// producer task (or a `put_block`) ever writes an id — this is PyCOMPSs'
+/// data renaming made explicit, and it makes dependency inference exact.
+pub type DataId = u32;
+
+/// Index into the runtime's task table.
+pub type TaskId = u32;
+
+/// The computation a task performs over its resolved input blocks.
+/// Must return exactly as many blocks as the task declared output metas.
+pub type TaskFn = Arc<dyn Fn(&[Arc<Block>]) -> Result<Vec<Block>> + Send + Sync>;
+
+/// Cost hint captured at submission time; the discrete-event simulator turns
+/// it into a duration via the calibrated [`crate::tasking::sim::CostModel`].
+/// Real executors ignore it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CostHint {
+    /// Floating-point work the task performs.
+    pub flops: f64,
+    /// Bytes the task touches beyond its declared inputs/outputs (e.g. a
+    /// file-parse task streaming from storage).
+    pub extra_bytes: f64,
+}
+
+impl CostHint {
+    pub fn flops(flops: f64) -> Self {
+        Self {
+            flops,
+            extra_bytes: 0.0,
+        }
+    }
+
+    pub fn with_bytes(mut self, bytes: f64) -> Self {
+        self.extra_bytes = bytes;
+        self
+    }
+
+    /// Hint for a task that only moves/repacks its inputs (transpose, merge,
+    /// slice): cost is byte traffic, not FLOPs.
+    pub fn data_movement() -> Self {
+        Self::default()
+    }
+}
+
+/// A submitted task. Kept lean: graphs at paper scale reach millions of
+/// tasks (Dataset transpose at N=1536 emits N²+N ≈ 2.36M), so every field
+/// here is sized for that.
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub reads: Box<[DataId]>,
+    pub writes: Box<[DataId]>,
+    pub hint: CostHint,
+    /// Total bytes of the declared inputs (precomputed at submission so the
+    /// simulator never needs the data table to price a task).
+    pub read_bytes: f64,
+    /// Total bytes of the declared outputs.
+    pub write_bytes: f64,
+    /// The actual computation; `None` never occurs today but the simulator
+    /// path simply ignores it.
+    pub func: TaskFn,
+}
+
+impl TaskSpec {
+    pub fn arity_in(&self) -> usize {
+        self.reads.len()
+    }
+    pub fn arity_out(&self) -> usize {
+        self.writes.len()
+    }
+}
+
+/// Per-data record in the runtime table.
+pub struct DataState {
+    pub meta: BlockMeta,
+    /// Resolved value (local mode only; sim mode keeps `None`).
+    pub value: Option<Arc<Block>>,
+    /// Producing task, or `None` for blocks registered via `put_block`.
+    pub producer: Option<TaskId>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_hint_builders() {
+        let h = CostHint::flops(2e9).with_bytes(4096.0);
+        assert_eq!(h.flops, 2e9);
+        assert_eq!(h.extra_bytes, 4096.0);
+        let m = CostHint::data_movement();
+        assert_eq!(m.flops, 0.0);
+    }
+
+    #[test]
+    fn task_spec_arities() {
+        let spec = TaskSpec {
+            name: "t",
+            reads: vec![1, 2, 3].into_boxed_slice(),
+            writes: vec![4].into_boxed_slice(),
+            hint: CostHint::default(),
+            read_bytes: 0.0,
+            write_bytes: 0.0,
+            func: Arc::new(|_| Ok(vec![])),
+        };
+        assert_eq!(spec.arity_in(), 3);
+        assert_eq!(spec.arity_out(), 1);
+    }
+}

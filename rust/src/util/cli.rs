@@ -1,0 +1,134 @@
+//! Tiny CLI argument parser (clap is unavailable offline — DESIGN.md §3).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Typed getters with defaults keep call sites terse.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order (subcommand first by convention).
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (binary name already removed).
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let raw: Vec<String> = iter.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.options
+                        .insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.options.insert(body.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.options.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.options
+            .get(name)
+            .map(|v| v != "false")
+            .unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Comma-separated list of usize, e.g. `--cores 48,96,192`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(v) => v
+                .split(',')
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["bench", "--cores", "48", "--verbose", "--out=results.txt"]);
+        assert_eq!(a.subcommand(), Some("bench"));
+        assert_eq!(a.get_usize("cores", 0), 48);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out"), Some("results.txt"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "x"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("x"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_f64("missing", 0.5), 0.5);
+        assert_eq!(a.get_str("missing", "d"), "d");
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse(&["--cores", "48,96, 192"]);
+        assert_eq!(a.get_usize_list("cores", &[1]), vec![48, 96, 192]);
+        assert_eq!(a.get_usize_list("other", &[1, 2]), vec![1, 2]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained substrates that the offline environment forces us to
+//! implement from scratch (no `rand`, `serde`, `clap`, `proptest` crates are
+//! available — see DESIGN.md §3).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod toml;

@@ -1,0 +1,174 @@
+//! Property-based testing harness (proptest is unavailable offline).
+//!
+//! A deliberately small core: a [`Gen`] wraps the repo PRNG with sizing
+//! helpers, and [`check`] runs a property over many generated cases,
+//! reporting the seed of the first failing case so it can be replayed. A
+//! light "shrinking" pass retries the failing case with smaller size hints.
+//!
+//! Used by the coordinator-invariant property tests (DESIGN.md §8).
+
+use crate::util::rng::Xoshiro256;
+
+/// Test-case generator: PRNG + a size hint that [`check`] ramps up.
+pub struct Gen {
+    pub rng: Xoshiro256,
+    /// Grows from 2 to `max_size` over the run; generators should scale
+    /// their output with it so early cases are small.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self {
+            rng: Xoshiro256::seed_from_u64(seed),
+            size,
+        }
+    }
+
+    /// usize in [lo, hi] (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    /// usize in [1, size].
+    pub fn sized(&mut self) -> usize {
+        self.usize_in(1, self.size.max(1))
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of f32 drawn from [-scale, scale].
+    pub fn f32_vec(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(-scale, scale)).collect()
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub max_size: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            max_size: 24,
+            seed: 0xD15_1B0A,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated cases. Panics with the failing
+/// case's seed/size on the first failure (after trying smaller sizes to
+/// produce a more readable counterexample).
+pub fn check_with<F>(cfg: Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        // Ramp size 2..=max_size across the run.
+        let size = 2 + case * cfg.max_size.saturating_sub(2) / cfg.cases.max(1);
+        let seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // Shrinking-lite: retry the same seed with smaller sizes and
+            // report the smallest size that still fails.
+            let mut min_fail = (size, msg);
+            for s in (2..size).rev() {
+                let mut g2 = Gen::new(seed, s);
+                if let Err(m) = prop(&mut g2) {
+                    min_fail = (s, m);
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property `{name}` failed (case {case}, seed {seed:#x}, size {}): {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+/// [`check_with`] under the default configuration.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check_with(Config::default(), name, prop)
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Approximate float equality for property bodies.
+pub fn close(a: f32, b: f32, tol: f32) -> bool {
+    let scale = 1.0_f32.max(a.abs()).max(b.abs());
+    (a - b).abs() <= tol * scale
+}
+
+pub fn all_close(a: &[f32], b: &[f32], tol: f32) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(&x, &y)| close(x, y, tol))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", |g| {
+            n += 1;
+            let x = g.sized();
+            if x >= 1 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(n, Config::default().cases);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_handles_scale() {
+        assert!(close(1000.0, 1000.1, 1e-3));
+        assert!(!close(0.0, 0.1, 1e-3));
+        assert!(all_close(&[1.0, 2.0], &[1.0, 2.0000001], 1e-5));
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(1, 10);
+        for _ in 0..100 {
+            let v = g.usize_in(3, 5);
+            assert!((3..=5).contains(&v));
+            let f = g.f32_in(-2.0, 2.0);
+            assert!((-2.0..=2.0).contains(&f));
+            let s = g.sized();
+            assert!((1..=10).contains(&s));
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! Minimal TOML-subset parser for the config system.
+//!
+//! `serde`/`toml` are unavailable offline (DESIGN.md §3), so this implements
+//! the subset the repo's config files need: top-level keys, `[table]`
+//! headers, string / integer / float / boolean scalars, homogeneous arrays
+//! of those scalars, `#` comments, and basic escape sequences in strings.
+//! Keys are exposed flattened as `table.key`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`bandwidth = 12` ≡ `12.0`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse TOML text into a flat `table.key -> Value` map.
+pub fn parse(text: &str) -> Result<BTreeMap<String, Value>, ParseError> {
+    let mut out = BTreeMap::new();
+    let mut prefix = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                line: lineno,
+                msg: "unterminated table header".into(),
+            })?;
+            let name = name.trim();
+            if name.is_empty() || name.starts_with('[') {
+                return Err(ParseError {
+                    line: lineno,
+                    msg: "empty or array-of-tables header (unsupported)".into(),
+                });
+            }
+            prefix = format!("{name}.");
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| ParseError {
+            line: lineno,
+            msg: format!("expected `key = value`, got `{line}`"),
+        })?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(ParseError {
+                line: lineno,
+                msg: "empty key".into(),
+            });
+        }
+        let val = parse_value(line[eq + 1..].trim(), lineno)?;
+        out.insert(format!("{prefix}{key}"), val);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a string literal.
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => escaped = false,
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, ParseError> {
+    let err = |msg: String| ParseError { line: lineno, msg };
+    if s.is_empty() {
+        return Err(err("missing value".into()));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        return Ok(Value::Str(unescape(body, lineno)?));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array".into()))?
+            .trim();
+        if body.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(body) {
+            items.push(parse_value(part.trim(), lineno)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = s.replace('_', "");
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(format!("cannot parse value `{s}`")))
+}
+
+/// Split an array body on commas that are not inside strings.
+fn split_top_level(body: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in body.char_indices() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => escaped = false,
+        }
+    }
+    parts.push(&body[start..]);
+    parts
+}
+
+fn unescape(s: &str, lineno: usize) -> Result<String, ParseError> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => {
+                return Err(ParseError {
+                    line: lineno,
+                    msg: format!("unsupported escape `\\{}`", other.unwrap_or(' ')),
+                })
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let text = r#"
+# top comment
+name = "marenostrum"   # inline comment
+cores = 1536
+sched_overhead_s = 0.004
+verbose = true
+
+[cluster]
+bandwidth = 11.6e9
+nodes = 32
+"#;
+        let m = parse(text).unwrap();
+        assert_eq!(m["name"].as_str(), Some("marenostrum"));
+        assert_eq!(m["cores"].as_i64(), Some(1536));
+        assert_eq!(m["sched_overhead_s"].as_f64(), Some(0.004));
+        assert_eq!(m["verbose"].as_bool(), Some(true));
+        assert_eq!(m["cluster.bandwidth"].as_f64(), Some(11.6e9));
+        assert_eq!(m["cluster.nodes"].as_i64(), Some(32));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let m = parse("cores = [48, 96, 192]\nnames = [\"a\", \"b,c\"]").unwrap();
+        let cores: Vec<i64> = m["cores"]
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(cores, vec![48, 96, 192]);
+        let names: Vec<&str> = m["names"]
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["a", "b,c"]);
+    }
+
+    #[test]
+    fn int_with_underscores() {
+        let m = parse("n = 100_480_507").unwrap();
+        assert_eq!(m["n"].as_i64(), Some(100_480_507));
+    }
+
+    #[test]
+    fn string_escapes_and_hash_in_string() {
+        let m = parse(r#"s = "a#b\nc""#).unwrap();
+        assert_eq!(m["s"].as_str(), Some("a#b\nc"));
+    }
+
+    #[test]
+    fn int_usable_as_float() {
+        let m = parse("x = 3").unwrap();
+        assert_eq!(m["x"].as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbad line").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("x = \"unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn rejects_array_of_tables() {
+        assert!(parse("[[points]]\nx = 1").is_err());
+    }
+}

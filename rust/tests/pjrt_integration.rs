@@ -1,0 +1,163 @@
+//! End-to-end PJRT integration: load the real AOT artifacts (built by
+//! `make artifacts`), compile them on the PJRT CPU client, execute from
+//! multiple threads, and check numerics against the native Rust oracles.
+//!
+//! These tests are skipped (not failed) when artifacts/ has not been built,
+//! so `cargo test` stays useful before the Python step; `make test` always
+//! builds artifacts first.
+
+use rustdslib::runtime::{exec, global};
+use rustdslib::storage::DenseMatrix;
+use rustdslib::util::rng::Xoshiro256;
+
+fn svc() -> Option<&'static rustdslib::runtime::PjrtService> {
+    let s = global();
+    if s.is_none() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    s
+}
+
+fn randm(rng: &mut Xoshiro256, r: usize, c: usize) -> DenseMatrix {
+    DenseMatrix::from_fn(r, c, |_, _| rng.next_normal())
+}
+
+#[test]
+fn gemm_artifact_matches_native() {
+    let Some(svc) = svc() else { return };
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    for (m, k, n) in [(64, 64, 64), (10, 20, 30), (128, 128, 128), (65, 64, 3)] {
+        let a = randm(&mut rng, m, k);
+        let b = randm(&mut rng, k, n);
+        let c = randm(&mut rng, m, n);
+        let got = exec::gemm_acc(svc, &a, &b, &c).unwrap();
+        let mut want = c.clone();
+        want.axpy(1.0, &a.matmul(&b).unwrap()).unwrap();
+        assert!(
+            got.max_abs_diff(&want) < 1e-3,
+            "({m},{k},{n}): diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn gemm_tn_artifact_matches_native() {
+    let Some(svc) = svc() else { return };
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let a = randm(&mut rng, 48, 32); // (k, m)
+    let b = randm(&mut rng, 48, 16); // (k, n)
+    let c = DenseMatrix::zeros(32, 16);
+    let got = exec::gemm_tn_acc(svc, &a, &b, &c).unwrap();
+    let want = a.transpose().matmul(&b).unwrap();
+    assert!(got.max_abs_diff(&want) < 1e-3);
+}
+
+#[test]
+fn kmeans_artifact_matches_native_assignment() {
+    let Some(svc) = svc() else { return };
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let (m, f, k) = (50, 12, 3);
+    let x = randm(&mut rng, m, f);
+    let centers = randm(&mut rng, k, f);
+    let (psum, pcount, pssd) = exec::kmeans_assign(svc, &x, &centers).unwrap();
+
+    // Native oracle.
+    let mut want_sum = DenseMatrix::zeros(k, f);
+    let mut want_count = vec![0.0f32; k];
+    let mut want_ssd = 0.0f64;
+    for i in 0..m {
+        let mut best = (f32::INFINITY, 0usize);
+        for kk in 0..k {
+            let d2: f32 = (0..f)
+                .map(|j| {
+                    let d = x.get(i, j) - centers.get(kk, j);
+                    d * d
+                })
+                .sum();
+            if d2 < best.0 {
+                best = (d2, kk);
+            }
+        }
+        want_ssd += best.0 as f64;
+        want_count[best.1] += 1.0;
+        for j in 0..f {
+            let v = want_sum.get(best.1, j) + x.get(i, j);
+            want_sum.set(best.1, j, v);
+        }
+    }
+    assert!(psum.max_abs_diff(&want_sum) < 1e-2, "psum diff");
+    for kk in 0..k {
+        assert_eq!(pcount.get(0, kk), want_count[kk], "count {kk}");
+    }
+    assert!((pssd as f64 - want_ssd).abs() / want_ssd.max(1.0) < 1e-3);
+}
+
+#[test]
+fn standardize_and_col_stats_match_native() {
+    let Some(svc) = svc() else { return };
+    let mut rng = Xoshiro256::seed_from_u64(4);
+    let x = randm(&mut rng, 40, 10);
+    let (sums, sumsq) = exec::col_stats(svc, &x).unwrap();
+    let want_s = x.sum_axis(0);
+    assert!(sums.max_abs_diff(&want_s) < 1e-3);
+    let want_q = x.map(|v| v * v).sum_axis(0);
+    assert!(sumsq.max_abs_diff(&want_q) < 1e-3);
+
+    let mean = sums.map(|s| s / 40.0);
+    let inv = DenseMatrix::from_fn(1, 10, |_, j| {
+        let mu = mean.get(0, j);
+        let var = sumsq.get(0, j) / 40.0 - mu * mu;
+        1.0 / (var + 1e-8).sqrt()
+    });
+    let got = exec::standardize(svc, &x, &mean, &inv).unwrap();
+    // Standardized columns have ~0 mean, ~1 std.
+    let col_mean = got.sum_axis(0).map(|s| s / 40.0);
+    for j in 0..10 {
+        assert!(col_mean.get(0, j).abs() < 1e-3, "col {j} mean");
+    }
+}
+
+#[test]
+fn service_is_callable_from_many_threads() {
+    let Some(svc) = svc() else { return };
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let svc = global().unwrap();
+                let mut rng = Xoshiro256::seed_from_u64(100 + t);
+                for _ in 0..5 {
+                    let a = randm(&mut rng, 32, 32);
+                    let b = randm(&mut rng, 32, 32);
+                    let c = DenseMatrix::zeros(32, 32);
+                    let got = exec::gemm_acc(svc, &a, &b, &c).unwrap();
+                    let want = a.matmul(&b).unwrap();
+                    assert!(got.max_abs_diff(&want) < 1e-3);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let _ = svc;
+}
+
+#[test]
+fn bad_input_shapes_rejected() {
+    let Some(svc) = svc() else { return };
+    // Direct call with non-canonical shape must error, not crash.
+    let r = svc.call("gemm_64", vec![DenseMatrix::zeros(3, 3)]);
+    assert!(r.is_err());
+    let r = svc.call(
+        "gemm_64",
+        vec![
+            DenseMatrix::zeros(3, 3),
+            DenseMatrix::zeros(64, 64),
+            DenseMatrix::zeros(64, 64),
+        ],
+    );
+    assert!(r.is_err());
+    let r = svc.call("no_such_artifact", vec![]);
+    assert!(r.is_err());
+}

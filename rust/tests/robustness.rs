@@ -1,0 +1,196 @@
+//! Robustness: failure injection into the task runtime, determinism of the
+//! simulator, and stress shapes (degenerate grids, deep chains, wide
+//! fan-outs under contention).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use rustdslib::dsarray::creation;
+use rustdslib::storage::{Block, BlockMeta, DenseMatrix};
+use rustdslib::tasking::{CostHint, Runtime, SimConfig};
+
+#[test]
+fn mid_graph_failure_poisons_dependents_not_process() {
+    let rt = Runtime::local(3);
+    let src = rt.put_block(Block::Dense(DenseMatrix::full(1, 1, 1.0)));
+    // A healthy branch...
+    let ok = rt.submit(
+        "ok",
+        &[src],
+        vec![BlockMeta::dense(1, 1)],
+        CostHint::default(),
+        Arc::new(|ins: &[Arc<Block>]| Ok(vec![(*ins[0]).clone()])),
+    );
+    // ...and a failing branch with dependents.
+    let boom = rt.submit(
+        "boom",
+        &[src],
+        vec![BlockMeta::dense(1, 1)],
+        CostHint::default(),
+        Arc::new(|_| anyhow::bail!("injected failure")),
+    );
+    let dep = rt.submit(
+        "dep",
+        &[boom[0]],
+        vec![BlockMeta::dense(1, 1)],
+        CostHint::default(),
+        Arc::new(|ins: &[Arc<Block>]| Ok(vec![(*ins[0]).clone()])),
+    );
+    // The healthy result may or may not be retrievable depending on
+    // poisoning order; what MUST hold: dependents of the failure error out,
+    // the barrier reports the failure, and nothing hangs or crashes.
+    let _ = rt.wait(ok[0]);
+    assert!(rt.wait(dep[0]).is_err());
+    let err = rt.barrier().unwrap_err().to_string();
+    assert!(err.contains("injected failure"), "{err}");
+}
+
+#[test]
+fn every_worker_keeps_draining_after_failures() {
+    // 50 failing + 200 succeeding tasks interleaved: all successes must
+    // still have executed (fail-fast poisons waits, not the pool).
+    let rt = Runtime::local(4);
+    let counter = Arc::new(AtomicUsize::new(0));
+    let src = rt.put_block(Block::Dense(DenseMatrix::full(1, 1, 0.0)));
+    for i in 0..250 {
+        let c = Arc::clone(&counter);
+        if i % 5 == 0 {
+            rt.submit(
+                "fail",
+                &[src],
+                vec![BlockMeta::dense(1, 1)],
+                CostHint::default(),
+                Arc::new(|_| anyhow::bail!("nope")),
+            );
+        } else {
+            rt.submit(
+                "work",
+                &[src],
+                vec![BlockMeta::dense(1, 1)],
+                CostHint::default(),
+                Arc::new(move |_| {
+                    c.fetch_add(1, Ordering::Relaxed);
+                    Ok(vec![Block::Dense(DenseMatrix::zeros(1, 1))])
+                }),
+            );
+        }
+    }
+    let _ = rt.barrier(); // errors (poisoned) as soon as the first failure lands
+    // Fail-fast poisons waits immediately, but already-submitted healthy
+    // tasks keep draining — wait for quiescence before asserting.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while counter.load(Ordering::Relaxed) < 200 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(counter.load(Ordering::Relaxed), 200);
+}
+
+#[test]
+fn sim_is_deterministic() {
+    let run = || {
+        let rt = Runtime::sim(SimConfig::with_workers(16));
+        let a = creation::phantom(&rt, (512, 256), (64, 64), None).unwrap();
+        let t = a.transpose().unwrap();
+        let _ = t.matmul(&a).unwrap();
+        let _ = a.shuffle_rows(9).unwrap();
+        rt.run_sim().unwrap()
+    };
+    let r1 = run();
+    let r2 = run();
+    assert_eq!(r1.tasks_executed, r2.tasks_executed);
+    assert!((r1.makespan_s - r2.makespan_s).abs() < 1e-12);
+    assert!((r1.master_busy_s - r2.master_busy_s).abs() < 1e-12);
+    assert_eq!(r1.bytes_transferred, r2.bytes_transferred);
+}
+
+#[test]
+fn sim_worker_monotonicity() {
+    // More workers never increases makespan for the same graph (list
+    // scheduling on identical masters; master cost grows with cores, so
+    // allow the known master-bound exception by testing a compute-heavy
+    // graph).
+    let mk = |workers| {
+        let rt = Runtime::sim(SimConfig::with_workers(workers));
+        let src = rt.put_block(Block::Phantom(BlockMeta::dense(1, 1)));
+        for _ in 0..256 {
+            rt.submit(
+                "flops",
+                &[src],
+                vec![BlockMeta::dense(1, 1)],
+                CostHint::flops(4e9), // 2s each
+                Arc::new(|_| Ok(vec![Block::Dense(DenseMatrix::zeros(1, 1))])),
+            );
+        }
+        rt.run_sim().unwrap().makespan_s
+    };
+    let t2 = mk(2);
+    let t8 = mk(8);
+    let t32 = mk(32);
+    assert!(t2 > t8 && t8 > t32, "{t2} {t8} {t32}");
+}
+
+#[test]
+fn degenerate_grids() {
+    let rt = Runtime::local(2);
+    // 1x1 array.
+    let one = creation::from_matrix(&rt, &DenseMatrix::full(1, 1, 3.0), (1, 1)).unwrap();
+    assert_eq!(one.transpose().unwrap().collect().unwrap().get(0, 0), 3.0);
+    assert_eq!(one.sum().unwrap(), 3.0);
+    // Single row, many columns.
+    let row = creation::from_matrix(
+        &rt,
+        &DenseMatrix::from_fn(1, 30, |_, j| j as f32),
+        (1, 7),
+    )
+    .unwrap();
+    let t = row.transpose().unwrap();
+    assert_eq!(t.shape(), (30, 1));
+    assert_eq!(t.collect().unwrap().get(29, 0), 29.0);
+    // Block bigger than the array.
+    let big = creation::from_matrix(&rt, &DenseMatrix::full(3, 3, 1.0), (10, 10)).unwrap();
+    assert_eq!(big.grid(), (1, 1));
+    assert_eq!(big.sum().unwrap(), 9.0);
+}
+
+#[test]
+fn deep_dependency_chain_under_contention() {
+    // A 500-deep chain interleaved with a 500-wide fan-out on 2 workers.
+    let rt = Runtime::local(2);
+    let a = creation::from_matrix(&rt, &DenseMatrix::full(4, 4, 1.0), (2, 2)).unwrap();
+    let mut chain = a.clone();
+    for _ in 0..125 {
+        chain = chain.add_scalar(1.0).unwrap(); // 4 blocks per step
+    }
+    let wide: Vec<_> = (0..100)
+        .map(|i| a.mul_scalar(i as f32).unwrap())
+        .collect();
+    let got = chain.collect().unwrap();
+    assert_eq!(got.get(0, 0), 126.0);
+    for (i, w) in wide.iter().enumerate() {
+        assert_eq!(w.collect().unwrap().get(3, 3), i as f32);
+    }
+}
+
+#[test]
+fn pairwise_artifact_round_trip() {
+    let Some(svc) = rustdslib::runtime::global() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rng = rustdslib::util::rng::Xoshiro256::seed_from_u64(3);
+    let x = DenseMatrix::from_fn(40, 10, |_, _| rng.next_normal());
+    let y = DenseMatrix::from_fn(25, 10, |_, _| rng.next_normal());
+    let d2 = rustdslib::runtime::exec::pairwise_dist2(svc, &x, &y).unwrap();
+    assert_eq!((d2.rows(), d2.cols()), (40, 25));
+    for i in [0usize, 17, 39] {
+        for j in [0usize, 11, 24] {
+            let want: f32 = (0..10)
+                .map(|c| {
+                    let t = x.get(i, c) - y.get(j, c);
+                    t * t
+                })
+                .sum();
+            assert!((d2.get(i, j) - want).abs() < 1e-2, "({i},{j})");
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Cross-module integration: ds-array pipelines over the real executor,
+//! Dataset↔ds-array agreement, estimator composition, sim/local graph
+//! equivalence, and config plumbing.
+
+use rustdslib::bench::workloads;
+use rustdslib::config::Config;
+use rustdslib::dataset::Dataset;
+use rustdslib::dsarray::creation;
+use rustdslib::estimators::als::{Als, AlsConfig};
+use rustdslib::estimators::kmeans::{KMeans, KMeansConfig};
+use rustdslib::estimators::{Estimator, LinearRegression, Pca, StandardScaler};
+use rustdslib::storage::DenseMatrix;
+use rustdslib::tasking::{Runtime, SimConfig};
+use rustdslib::util::rng::Xoshiro256;
+
+#[test]
+fn scaler_then_kmeans_pipeline() {
+    let rt = Runtime::local(2);
+    let (data, truth) = workloads::blobs(600, 24, 4, 0.6, 1);
+    let x = creation::from_matrix(&rt, &data, (64, 24)).unwrap();
+    let mut scaler = StandardScaler::default();
+    let xs = scaler.fit_transform(&x).unwrap();
+    let mut km = KMeans::new(KMeansConfig {
+        k: 4,
+        max_iter: 30,
+        tol: 1e-6,
+        seed: 3,
+    });
+    km.fit(&xs, None).unwrap();
+    let pred = km.predict(&xs).unwrap().collect().unwrap();
+    // Purity of majority assignment.
+    let mut table = vec![vec![0usize; 4]; 4];
+    for (i, &t) in truth.iter().enumerate() {
+        table[t][pred.get(i, 0) as usize] += 1;
+    }
+    let purity: usize = table.iter().map(|r| *r.iter().max().unwrap()).sum();
+    assert!(purity >= 570, "purity {purity}/600");
+}
+
+#[test]
+fn pca_then_linreg_pipeline() {
+    // y depends on the dominant direction only: PCA(1) should retain it.
+    let rt = Runtime::local(2);
+    let mut rng = Xoshiro256::seed_from_u64(4);
+    let n = 256;
+    let mut x = DenseMatrix::zeros(n, 6);
+    let mut y = DenseMatrix::zeros(n, 1);
+    for i in 0..n {
+        let t = rng.next_normal() * 4.0;
+        for j in 0..6 {
+            let dir = if j < 3 { 1.0 } else { -1.0 };
+            x.set(i, j, t * dir * 0.4 + rng.next_normal() * 0.2);
+        }
+        y.set(i, 0, 2.0 * t + 1.0 + rng.next_normal() * 0.1);
+    }
+    let xd = creation::from_matrix(&rt, &x, (64, 6)).unwrap();
+    let yd = creation::from_matrix(&rt, &y, (64, 1)).unwrap();
+
+    let mut pca = Pca::new(1);
+    pca.fit(&xd, None).unwrap();
+    let proj = pca.transform(&xd).unwrap();
+    // LinReg on the single PCA feature (same runtime chain).
+    let proj = proj.rechunk((64, 1)).unwrap();
+    let mut lr = LinearRegression::default();
+    lr.fit(&proj, Some(&yd)).unwrap();
+    let r2 = lr.score(&proj, &yd).unwrap();
+    assert!(r2 > 0.97, "R² {r2}");
+}
+
+#[test]
+fn netflix_like_als_end_to_end() {
+    let rt = Runtime::local(2);
+    let ratings = workloads::netflix_like_csr(120, 600, 4000, 2).unwrap();
+    let x = creation::from_csr(&rt, &ratings, (40, 150)).unwrap();
+    assert!(x.is_sparse());
+    let mut als = Als::new(AlsConfig {
+        d: 8,
+        lambda: 0.1,
+        max_iter: 6,
+        seed: 5,
+    });
+    als.fit_dsarray(&x).unwrap();
+    // Observed cells predicted clearly above unobserved.
+    let rec = als.reconstruct().unwrap();
+    let dense = ratings.to_dense();
+    let (mut on, mut non) = (0.0f64, 0usize);
+    let (mut off, mut noff) = (0.0f64, 0usize);
+    for i in 0..120 {
+        for j in 0..600 {
+            if dense.get(i, j) > 0.0 {
+                on += rec.get(i, j) as f64;
+                non += 1;
+            } else {
+                off += rec.get(i, j) as f64;
+                noff += 1;
+            }
+        }
+    }
+    assert!(on / non as f64 > 3.0 * (off / noff as f64).abs().max(0.02));
+}
+
+#[test]
+fn dataset_and_dsarray_transpose_agree_on_data() {
+    let rt = Runtime::local(2);
+    let m = DenseMatrix::from_fn(24, 24, |i, j| (i * 24 + j) as f32);
+    let ds = Dataset::from_matrix(&rt, &m, None, 4).unwrap();
+    let da = creation::from_matrix(&rt, &m, (6, 24)).unwrap();
+    let t_ds = ds.transpose().unwrap().collect_samples().unwrap();
+    let t_da = da.transpose().unwrap().collect().unwrap();
+    assert_eq!(t_ds, t_da);
+    assert_eq!(t_ds, m.transpose());
+}
+
+#[test]
+fn sim_and_local_build_identical_graph_shapes() {
+    // The same library code must emit the same task multiset under both
+    // executors — the property that makes the DES results trustworthy.
+    let build = |rt: &Runtime| {
+        let a = creation::random(rt, (96, 48), (16, 16), 3).unwrap();
+        let t = a.transpose().unwrap();
+        let _ = t.sum_axis(0).unwrap();
+        let _ = a.shuffle_rows(1).unwrap();
+        let _ = a
+            .matmul(&creation::random(rt, (48, 32), (16, 16), 4).unwrap())
+            .unwrap();
+    };
+    let local = Runtime::local(2);
+    build(&local);
+    local.barrier().unwrap();
+    let sim = Runtime::sim(SimConfig::with_workers(4));
+    build(&sim);
+    let ml = local.metrics();
+    let ms = sim.metrics();
+    assert_eq!(ml.tasks_by_op, ms.tasks_by_op);
+    assert_eq!(ml.read_edges, ms.read_edges);
+    assert_eq!(ml.write_edges, ms.write_edges);
+    let report = sim.run_sim().unwrap();
+    assert_eq!(report.tasks_executed as u64, ms.total_tasks());
+}
+
+#[test]
+fn config_file_drives_simulation() {
+    let dir = std::env::temp_dir();
+    let p = dir.join(format!("itest_cfg_{}.toml", std::process::id()));
+    std::fs::write(
+        &p,
+        "sim_cores = [4]\n[sim]\nsched_task_s = 0.1\ncore_scale = 1e12\nper_input_s = 0.0\nsched_edge_s = 0.0\ntask_overhead_s = 0.0\n",
+    )
+    .unwrap();
+    let cfg = Config::from_file(&p).unwrap();
+    let rt = Runtime::sim(cfg.sim_at(4));
+    let a = creation::phantom(&rt, (40, 8), (10, 8), None).unwrap();
+    a.transpose().unwrap();
+    let r = rt.run_sim().unwrap();
+    // 4 transpose tasks × 0.1s serialized master ≈ 0.4s (+ compute ~0).
+    assert!(
+        r.makespan_s >= 0.4 && r.makespan_s < 0.6,
+        "makespan {}",
+        r.makespan_s
+    );
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn csv_to_pipeline_round_trip() {
+    // File -> ds-array -> ops -> collect, through the real loader tasks.
+    let rt = Runtime::local(2);
+    let m = DenseMatrix::from_fn(30, 10, |i, j| (i as f32) * 0.1 - j as f32);
+    let p = std::env::temp_dir().join(format!("itest_data_{}.csv", std::process::id()));
+    rustdslib::storage::io::write_csv(&p, &m, ',').unwrap();
+    let a = creation::load_csv(&rt, &p, (30, 10), (8, 4), ',').unwrap();
+    let s = a.add_scalar(1.0).unwrap().mul_scalar(2.0).unwrap();
+    let got = s.collect().unwrap();
+    assert_eq!(got, m.map(|x| (x + 1.0) * 2.0));
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn kmeans_paper_workload_miniature_sim() {
+    // Fig 9 miniature: compute-bound K-means should scale with cores.
+    let cfg = Config::default();
+    let mk = |cores: usize| {
+        let rt = Runtime::sim(cfg.sim_at(cores));
+        // 192 fat partitions (~0.6s compute each): compute >> overheads.
+        let x = creation::phantom(&rt, (9_600_000, 100), (50_000, 100), None).unwrap();
+        let mut km = KMeans::new(KMeansConfig {
+            k: 50,
+            max_iter: 3,
+            tol: 0.0,
+            seed: 1,
+        });
+        km.fit_dsarray(&x).unwrap();
+        rt.run_sim().unwrap().makespan_s
+    };
+    let t48 = mk(48);
+    let t96 = mk(96);
+    assert!(t96 < t48, "compute-bound workload should scale: {t48} -> {t96}");
+}
