@@ -64,8 +64,8 @@ fn main() -> Result<()> {
     })?;
     rows.push(("dsarray.sum_axis(0) 1024²".into(), t, String::new()));
 
-    // ---- Task-runtime overhead: empty tasks ----
-    let t = time(reps, || {
+    // ---- Task-runtime overhead: empty tasks, one submit per task ----
+    let t_serial = time(reps, || {
         let rt2 = Runtime::local(workers);
         let src = rt2.put_block(rustdslib::storage::Block::Dense(DenseMatrix::zeros(1, 1)));
         for _ in 0..1000 {
@@ -83,8 +83,56 @@ fn main() -> Result<()> {
     })?;
     rows.push((
         "task submit+run x1000 (1x1)".into(),
-        t,
-        format!("{:.1} µs/task", t * 1e3),
+        t_serial,
+        format!("{:.1} µs/task", t_serial * 1e3),
+    ));
+
+    // ---- Same 1000 tasks as ONE submit_batch (one lock round-trip) ----
+    let t_batch = time(reps, || {
+        let rt2 = Runtime::local(workers);
+        let src = rt2.put_block(rustdslib::storage::Block::Dense(DenseMatrix::zeros(1, 1)));
+        let batch: Vec<rustdslib::tasking::BatchTask> = (0..1000)
+            .map(|_| {
+                rustdslib::tasking::BatchTask::new(
+                    "noop",
+                    vec![src],
+                    vec![rustdslib::storage::BlockMeta::dense(1, 1)],
+                    rustdslib::tasking::CostHint::default(),
+                    std::sync::Arc::new(|ins: &[std::sync::Arc<rustdslib::storage::Block>]| {
+                        Ok(vec![(*ins[0]).clone()])
+                    }),
+                )
+            })
+            .collect();
+        rt2.submit_batch(batch);
+        rt2.barrier()
+    })?;
+    rows.push((
+        "task submit_batch+run x1000 (1x1)".into(),
+        t_batch,
+        format!(
+            "{:.1} µs/task ({:.2}x vs serial)",
+            t_batch * 1e3,
+            t_serial / t_batch.max(1e-12)
+        ),
+    ));
+
+    // ---- Refcount reclamation: rebinding pipeline, bounded residency ----
+    let rt3 = Runtime::local(workers);
+    let mut cur = creation::from_matrix(&rt3, &m, (128, 128))?;
+    for _ in 0..8 {
+        cur = cur.add_scalar(1.0)?; // drops the previous generation
+    }
+    rt3.barrier()?;
+    let met = rt3.metrics();
+    let produced_mb = 9.0 * 4.0; // 9 generations x 4 MiB each
+    rows.push((
+        "pipeline 8x add_scalar 1024² resident".into(),
+        met.peak_resident_bytes as f64 / (1024.0 * 1024.0),
+        format!(
+            "MiB peak of {produced_mb:.0} MiB produced, {} blocks evicted",
+            met.blocks_evicted
+        ),
     ));
 
     // ---- L1/L2 via PJRT vs native ----
@@ -123,10 +171,15 @@ fn main() -> Result<()> {
         rows.push(("pjrt".into(), f64::NAN, "artifacts not built".into()));
     }
 
-    println!("{:<40} {:>12} {:>18}", "op", "secs/iter", "rate");
-    println!("{}", "-".repeat(72));
+    println!("{:<40} {:>12} {:>22}", "op", "secs/iter", "rate");
+    println!("{}", "-".repeat(76));
     for (name, secs, rate) in rows {
-        println!("{name:<40} {secs:>12.6} {rate:>18}");
+        println!("{name:<40} {secs:>12.6} {rate:>22}");
     }
+    // Machine-readable residency/eviction counters (satellite: JSON out).
+    println!(
+        "\npipeline-metrics: {}",
+        rustdslib::bench::report::metrics_json(&met)
+    );
     Ok(())
 }

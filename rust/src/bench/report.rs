@@ -1,7 +1,10 @@
 //! Table/series reporting in the paper's format: execution time and
-//! speedup per core count, Datasets vs ds-arrays.
+//! speedup per core count, Datasets vs ds-arrays — plus machine-readable
+//! JSON emitters for runtime metrics and series.
 
 use std::fmt::Write as _;
+
+use crate::tasking::Metrics;
 
 /// One core-count measurement for one structure.
 #[derive(Clone, Debug)]
@@ -104,6 +107,83 @@ impl Series {
     }
 }
 
+/// Render runtime [`Metrics`] as a single-line JSON object, including the
+/// residency counters added with refcount reclamation
+/// (`peak_resident_bytes`, `blocks_evicted`).
+pub fn metrics_json(m: &Metrics) -> String {
+    let mut out = String::from("{");
+    let _ = write!(out, "\"total_tasks\":{}", m.total_tasks());
+    let _ = write!(out, ",\"read_edges\":{}", m.read_edges);
+    let _ = write!(out, ",\"write_edges\":{}", m.write_edges);
+    let _ = write!(out, ",\"read_bytes\":{:.0}", m.read_bytes);
+    let _ = write!(out, ",\"write_bytes\":{:.0}", m.write_bytes);
+    let _ = write!(out, ",\"resident_bytes\":{}", m.resident_bytes);
+    let _ = write!(out, ",\"peak_resident_bytes\":{}", m.peak_resident_bytes);
+    let _ = write!(out, ",\"blocks_evicted\":{}", m.blocks_evicted);
+    out.push_str(",\"tasks_by_op\":{");
+    for (i, (k, v)) in m.tasks_by_op.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "\"{k}\":{v}");
+    }
+    out.push_str("}}");
+    out
+}
+
+/// Minimal JSON string escaping (UTF-8 passes through unescaped).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl Series {
+    /// Machine-readable form of the series (one JSON object).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        let _ = write!(out, "\"title\":\"{}\"", json_escape(&self.title));
+        match self.baseline_s {
+            Some(b) => {
+                let _ = write!(out, ",\"baseline_s\":{b}");
+            }
+            None => out.push_str(",\"baseline_s\":null"),
+        }
+        out.push_str(",\"points\":[");
+        for (i, p) in self.points.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{{\"cores\":{}", p.cores);
+            match p.dataset_s {
+                Some(d) => {
+                    let _ = write!(out, ",\"dataset_s\":{d}");
+                }
+                None => out.push_str(",\"dataset_s\":null"),
+            }
+            let _ = write!(
+                out,
+                ",\"dsarray_s\":{},\"dataset_tasks\":{},\"dsarray_tasks\":{}}}",
+                p.dsarray_s, p.tasks.0, p.tasks.1
+            );
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
 /// Simple named-value table for ablations / single-run reports.
 pub fn kv_table(title: &str, rows: &[(String, String)]) -> String {
     let w = rows.iter().map(|(k, _)| k.len()).max().unwrap_or(8).max(8);
@@ -146,5 +226,46 @@ mod tests {
     fn kv_table_aligns() {
         let t = kv_table("t", &[("a".into(), "1".into()), ("long_key".into(), "2".into())]);
         assert!(t.contains("long_key : 2"));
+    }
+
+    #[test]
+    fn metrics_json_parses_and_surfaces_residency() {
+        let mut m = Metrics::default();
+        m.record_submit("op.a", 2, 1, 64.0, 32.0);
+        m.record_resident(4096);
+        m.record_evicted(1024);
+        let s = metrics_json(&m);
+        let v = crate::util::json::parse(&s).unwrap();
+        assert_eq!(v.get("total_tasks").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("peak_resident_bytes").unwrap().as_usize(), Some(4096));
+        assert_eq!(v.get("resident_bytes").unwrap().as_usize(), Some(3072));
+        assert_eq!(v.get("blocks_evicted").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            v.get("tasks_by_op").unwrap().get("op.a").unwrap().as_usize(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn series_json_parses() {
+        let mut s = Series::new("fig J");
+        s.push(Point {
+            cores: 48,
+            dataset_s: Some(10.0),
+            dsarray_s: 1.0,
+            tasks: (100, 10),
+        });
+        s.push(Point {
+            cores: 96,
+            dataset_s: None,
+            dsarray_s: 0.5,
+            tasks: (0, 10),
+        });
+        let v = crate::util::json::parse(&s.to_json()).unwrap();
+        assert_eq!(v.get("title").unwrap().as_str(), Some("fig J"));
+        let pts = v.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].get("dataset_s"), Some(&crate::util::json::Json::Null));
+        assert_eq!(pts[0].get("dsarray_tasks").unwrap().as_usize(), Some(10));
     }
 }

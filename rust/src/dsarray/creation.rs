@@ -10,7 +10,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::storage::{Block, BlockMeta, CsrMatrix, DenseMatrix};
-use crate::tasking::{CostHint, Runtime};
+use crate::tasking::{BatchTask, CostHint, Future, Runtime};
 use crate::util::rng::Xoshiro256;
 
 use super::DsArray;
@@ -25,7 +25,8 @@ fn validate(shape: (usize, usize), block_shape: (usize, usize)) -> Result<()> {
     Ok(())
 }
 
-/// Shared scaffold: one task per block, each generating its block.
+/// Shared scaffold: one task per block, each generating its block. The
+/// whole grid is submitted as one batch (one scheduler-lock round-trip).
 fn per_block(
     rt: &Runtime,
     shape: (usize, usize),
@@ -39,7 +40,7 @@ fn per_block(
         DsArray::grid_dim(shape.0, block_shape.0),
         DsArray::grid_dim(shape.1, block_shape.1),
     );
-    let mut blocks = Vec::with_capacity(grid.0 * grid.1);
+    let mut batch = Vec::with_capacity(grid.0 * grid.1);
     for i in 0..grid.0 {
         let r = (shape.0 - i * block_shape.0).min(block_shape.0);
         for j in 0..grid.1 {
@@ -49,10 +50,10 @@ fn per_block(
                 None => BlockMeta::dense(r, c),
             };
             let hint = CostHint::default().with_bytes(meta.bytes() as f64);
-            let out = rt.submit(name, &[], vec![meta], hint, make(i, j, r, c));
-            blocks.push(out[0]);
+            batch.push(BatchTask::new(name, Vec::new(), vec![meta], hint, make(i, j, r, c)));
         }
     }
+    let blocks: Vec<Future> = rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
     DsArray::from_parts(
         rt.clone(),
         shape,
@@ -255,7 +256,7 @@ pub fn load_csv(
         DsArray::grid_dim(shape.0, block_shape.0),
         DsArray::grid_dim(shape.1, block_shape.1),
     );
-    let mut blocks = Vec::with_capacity(grid.0 * grid.1);
+    let mut batch = Vec::with_capacity(grid.0);
     for i in 0..grid.0 {
         let r0 = i * block_shape.0;
         let r = (shape.0 - r0).min(block_shape.0);
@@ -269,9 +270,9 @@ pub fn load_csv(
         let path: PathBuf = path.to_path_buf();
         let bs1 = block_shape.1;
         let cols = shape.1;
-        let out = rt.submit(
+        batch.push(BatchTask::new(
             "dsarray.create.load_csv_rowblock",
-            &[],
+            Vec::new(),
             metas,
             CostHint::default().with_bytes(row_bytes * 2.0), // read + parse
             Arc::new(move |_| {
@@ -290,9 +291,9 @@ pub fn load_csv(
                 }
                 Ok(outs)
             }),
-        );
-        blocks.extend(out);
+        ));
     }
+    let blocks: Vec<Future> = rt.submit_batch(batch).into_iter().flatten().collect();
     DsArray::from_parts(rt.clone(), shape, block_shape, blocks, false)
 }
 

@@ -6,26 +6,25 @@
 use anyhow::{bail, Result};
 
 use crate::storage::BlockMeta;
-use crate::tasking::{ops, CostHint};
+use crate::tasking::{ops, BatchTask, CostHint, Future};
 
 use super::DsArray;
 
 impl DsArray {
-    /// Generic unary elementwise map (one task per block).
+    /// Generic unary elementwise map (one task per block, submitted as one
+    /// batch — a single scheduler-lock round-trip for the whole grid).
     fn map_blocks(&self, name: &'static str, f: impl Fn(f32) -> f32 + Send + Sync + Clone + 'static) -> Result<DsArray> {
-        let mut blocks = Vec::with_capacity(self.blocks.len());
+        let mut batch = Vec::with_capacity(self.blocks.len());
         for i in 0..self.grid.0 {
             for j in 0..self.grid.1 {
                 let fut = self.block(i, j);
                 let meta = fut.meta;
                 let hint = CostHint::flops((meta.rows * meta.cols) as f64)
                     .with_bytes(meta.bytes() as f64);
-                let out = self
-                    .rt
-                    .submit(name, &[fut], vec![meta], hint, ops::map_op(f.clone()));
-                blocks.push(out[0]);
+                batch.push(BatchTask::new(name, vec![fut], vec![meta], hint, ops::map_op(f.clone())));
             }
         }
+        let blocks: Vec<Future> = self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
         DsArray::from_parts(self.rt.clone(), self.shape, self.block_shape, blocks, self.sparse)
     }
 
@@ -46,7 +45,7 @@ impl DsArray {
                 other.block_shape
             );
         }
-        let mut blocks = Vec::with_capacity(self.blocks.len());
+        let mut batch = Vec::with_capacity(self.blocks.len());
         for i in 0..self.grid.0 {
             for j in 0..self.grid.1 {
                 let a = self.block(i, j);
@@ -54,12 +53,10 @@ impl DsArray {
                 let meta = BlockMeta::dense(a.meta.rows, a.meta.cols);
                 let hint = CostHint::flops((meta.rows * meta.cols) as f64)
                     .with_bytes(2.0 * meta.bytes() as f64);
-                let out = self
-                    .rt
-                    .submit(name, &[a, b], vec![meta], hint, ops::zip_op(f.clone()));
-                blocks.push(out[0]);
+                batch.push(BatchTask::new(name, vec![a, b], vec![meta], hint, ops::zip_op(f.clone())));
             }
         }
+        let blocks: Vec<Future> = self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
         // zip densifies (mixed backends fold to dense).
         DsArray::from_parts(self.rt.clone(), self.shape, self.block_shape, blocks, false)
     }
@@ -117,15 +114,15 @@ impl DsArray {
         &self,
         f: impl Fn(&[f32]) -> f32 + Send + Sync + Clone + 'static,
     ) -> Result<DsArray> {
-        let mut blocks = Vec::with_capacity(self.grid.0);
+        let mut batch = Vec::with_capacity(self.grid.0);
         for i in 0..self.grid.0 {
             let reads = self.block_row(i);
             let rows = self.block_rows_at(i);
             let bytes: f64 = reads.iter().map(|r| r.meta.bytes() as f64).sum();
             let f = f.clone();
-            let out = self.rt.submit(
+            batch.push(BatchTask::new(
                 "dsarray.apply_along_rows",
-                &reads,
+                reads,
                 vec![BlockMeta::dense(rows, 1)],
                 CostHint::flops((rows * self.shape.1) as f64).with_bytes(bytes),
                 std::sync::Arc::new(move |ins: &[std::sync::Arc<crate::storage::Block>]| {
@@ -139,9 +136,9 @@ impl DsArray {
                     }
                     Ok(vec![crate::storage::Block::Dense(out)])
                 }),
-            );
-            blocks.push(out[0]);
+            ));
         }
+        let blocks: Vec<Future> = self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
         DsArray::from_parts(
             self.rt.clone(),
             (self.shape.0, 1),
@@ -178,7 +175,7 @@ impl DsArray {
         if row.block_shape.1 != self.block_shape.1 {
             bail!("broadcast row block width mismatch");
         }
-        let mut blocks = Vec::with_capacity(self.blocks.len());
+        let mut batch = Vec::with_capacity(self.blocks.len());
         for i in 0..self.grid.0 {
             for j in 0..self.grid.1 {
                 let a = self.block(i, j);
@@ -187,9 +184,9 @@ impl DsArray {
                 let hint = CostHint::flops((meta.rows * meta.cols) as f64)
                     .with_bytes(meta.bytes() as f64);
                 let f = f.clone();
-                let out = self.rt.submit(
+                batch.push(BatchTask::new(
                     name,
-                    &[a, r],
+                    vec![a, r],
                     vec![meta],
                     hint,
                     std::sync::Arc::new(move |ins: &[std::sync::Arc<crate::storage::Block>]| {
@@ -202,10 +199,10 @@ impl DsArray {
                         );
                         Ok(vec![crate::storage::Block::Dense(out)])
                     }),
-                );
-                blocks.push(out[0]);
+                ));
             }
         }
+        let blocks: Vec<Future> = self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
         DsArray::from_parts(self.rt.clone(), self.shape, self.block_shape, blocks, false)
     }
 }

@@ -7,7 +7,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::storage::{Block, BlockMeta, DenseMatrix};
-use crate::tasking::{CostHint, Future};
+use crate::tasking::{BatchTask, CostHint, Future};
 
 use super::DsArray;
 
@@ -15,24 +15,25 @@ impl DsArray {
     /// Transpose: one task per **row of blocks** (collection-in /
     /// collection-out), then a master-side rearrangement of the grid so
     /// block (i,j) becomes block (j,i). For an N×M grid this is N tasks —
-    /// versus N²+N for the Dataset baseline (paper §5.2).
+    /// versus N²+N for the Dataset baseline (paper §5.2) — submitted as ONE
+    /// batch (one scheduler-lock round-trip for the whole operation).
     pub fn transpose(&self) -> Result<DsArray> {
         let (gr, gc) = self.grid;
         // Collected outputs: task i yields the transposed blocks of row i.
-        let mut row_outputs: Vec<Vec<Future>> = Vec::with_capacity(gr);
+        let mut batch = Vec::with_capacity(gr);
         for i in 0..gr {
             let futs = self.block_row(i);
             let metas: Vec<BlockMeta> = futs.iter().map(|f| f.meta.transposed()).collect();
             let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
-            let out = self.rt.submit(
+            batch.push(BatchTask::new(
                 "dsarray.transpose.rowblocks",
-                &futs,
+                futs,
                 metas,
                 CostHint::default().with_bytes(2.0 * bytes),
                 Arc::new(|ins: &[Arc<Block>]| Ok(ins.iter().map(|b| b.transpose()).collect())),
-            );
-            row_outputs.push(out);
+            ));
         }
+        let row_outputs: Vec<Vec<Future>> = self.rt.submit_batch(batch);
         // Grid rearrangement happens on the master: no tasks.
         let mut blocks = Vec::with_capacity(gr * gc);
         for j in 0..gc {
@@ -69,7 +70,8 @@ impl DsArray {
         let (gr, _) = self.grid;
         let gc = other.grid.1;
         let kb = self.grid.1;
-        let mut blocks = Vec::with_capacity(gr * gc);
+        // One task per output block, submitted as a single batch.
+        let mut batch = Vec::with_capacity(gr * gc);
         for i in 0..gr {
             let m = self.block_rows_at(i);
             let a_row = self.block_row(i);
@@ -81,9 +83,9 @@ impl DsArray {
                 let meta = BlockMeta::dense(m, n);
                 let flops = 2.0 * m as f64 * self.shape.1 as f64 * n as f64;
                 let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
-                let out = self.rt.submit(
+                batch.push(BatchTask::new(
                     "dsarray.matmul.block",
-                    &futs,
+                    futs,
                     vec![meta],
                     CostHint::flops(flops).with_bytes(bytes),
                     Arc::new(move |ins: &[Arc<Block>]| {
@@ -101,10 +103,10 @@ impl DsArray {
                         }
                         Ok(vec![Block::Dense(acc.expect("kb >= 1"))])
                     }),
-                );
-                blocks.push(out[0]);
+                ));
             }
         }
+        let blocks: Vec<Future> = self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
         DsArray::from_parts(
             self.rt.clone(),
             (self.shape.0, other.shape.1),
@@ -127,7 +129,7 @@ impl DsArray {
         let other_blocks: Vec<Future> = other.blocks.clone();
         let (obs0, obs1) = other.block_shape;
         let (ogr, ogc) = other.grid;
-        let mut blocks = Vec::with_capacity(self.blocks.len());
+        let mut batch = Vec::with_capacity(self.blocks.len());
         for i in 0..self.grid.0 {
             let rows_a = self.block_rows_at(i);
             for j in 0..self.grid.1 {
@@ -136,9 +138,9 @@ impl DsArray {
                 reads.extend_from_slice(&other_blocks);
                 let meta = BlockMeta::dense(rows_a * br, cols_a * bc);
                 let flops = (rows_a * cols_a * br * bc) as f64;
-                let out = self.rt.submit(
+                batch.push(BatchTask::new(
                     "dsarray.kron.block",
-                    &reads,
+                    reads,
                     vec![meta],
                     CostHint::flops(flops).with_bytes(meta.bytes() as f64),
                     Arc::new(move |ins: &[Arc<Block>]| {
@@ -163,10 +165,10 @@ impl DsArray {
                         }
                         Ok(vec![Block::Dense(out)])
                     }),
-                );
-                blocks.push(out[0]);
+                ));
             }
         }
+        let blocks: Vec<Future> = self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
         DsArray::from_parts(
             self.rt.clone(),
             (ar * br, ac * bc),
@@ -198,7 +200,7 @@ impl DsArray {
         }
         let gc = self.grid.1;
         let ogc = other.grid.1;
-        let mut blocks = Vec::with_capacity(gc * ogc);
+        let mut batch = Vec::with_capacity(gc * ogc);
         for i in 0..gc {
             let ci = self.block_cols_at(i);
             let col_i = self.block_col(i);
@@ -211,9 +213,9 @@ impl DsArray {
                 let flops = 2.0 * ci as f64 * self.shape.0 as f64 * cj as f64;
                 let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
                 let kb = self.grid.0;
-                let out = self.rt.submit(
+                batch.push(BatchTask::new(
                     "dsarray.tn_matmul.block",
-                    &futs,
+                    futs,
                     vec![meta],
                     CostHint::flops(flops).with_bytes(bytes),
                     Arc::new(move |ins: &[Arc<Block>]| {
@@ -232,10 +234,10 @@ impl DsArray {
                         }
                         Ok(vec![Block::Dense(acc.expect("grid.0 >= 1"))])
                     }),
-                );
-                blocks.push(out[0]);
+                ));
             }
         }
+        let blocks: Vec<Future> = self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
         DsArray::from_parts(
             self.rt.clone(),
             (self.shape.1, other.shape.1),

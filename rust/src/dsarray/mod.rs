@@ -26,7 +26,13 @@ use crate::storage::{CsrMatrix, DenseMatrix};
 use crate::tasking::{Future, Runtime};
 
 /// Distributed 2-D array divided in blocks (paper Fig 4).
-#[derive(Clone)]
+///
+/// A `DsArray` *owns* a handle reference on every block it holds:
+/// construction and [`Clone`] retain, [`Drop`] releases. When the last
+/// owner of a block is gone and every submitted reader has completed, the
+/// runtime evicts the block's value (refcount reclamation — see the
+/// `tasking` module docs), so pipelines that rebind intermediates keep a
+/// bounded resident set.
 pub struct DsArray {
     pub(crate) rt: Runtime,
     /// Logical shape (rows, cols).
@@ -40,6 +46,26 @@ pub struct DsArray {
     pub(crate) blocks: Vec<Future>,
     /// Whether blocks are CSR.
     pub(crate) sparse: bool,
+}
+
+impl Clone for DsArray {
+    fn clone(&self) -> Self {
+        self.rt.retain(&self.blocks);
+        Self {
+            rt: self.rt.clone(),
+            shape: self.shape,
+            block_shape: self.block_shape,
+            grid: self.grid,
+            blocks: self.blocks.clone(),
+            sparse: self.sparse,
+        }
+    }
+}
+
+impl Drop for DsArray {
+    fn drop(&mut self) {
+        self.rt.release(&self.blocks);
+    }
 }
 
 impl DsArray {
@@ -67,6 +93,14 @@ impl DsArray {
     }
     pub fn runtime(&self) -> &Runtime {
         &self.rt
+    }
+
+    /// Pin every block of this array: exempt from refcount reclamation even
+    /// after all owners drop (e.g. source data re-read via bare futures).
+    pub fn pin(&self) {
+        for &b in &self.blocks {
+            self.rt.pin(b);
+        }
     }
 
     /// Grid size for a logical size and block size.
@@ -123,6 +157,9 @@ impl DsArray {
                 grid.1
             );
         }
+        // Take ownership of a handle reference per block. If validation
+        // below bails, `arr` is dropped and releases them — balanced.
+        rt.retain(&blocks);
         let arr = Self {
             rt,
             shape,
@@ -218,5 +255,53 @@ mod tests {
         let b = creation::zeros(&rt, (4, 2), (2, 1)).unwrap();
         let r = DsArray::from_parts(rt, (2, 4), (1, 2), b.blocks.clone(), false);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn consumed_intermediates_are_reclaimed() {
+        // A rebinding pipeline: each step's input array is dropped, so its
+        // blocks must be evicted once the step's tasks consume them,
+        // bounding resident memory by the live frontier.
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(32, 32, |i, j| (i + j) as f32);
+        let mut cur = creation::from_matrix(&rt, &m, (8, 8)).unwrap();
+        for _ in 0..6 {
+            cur = cur.add_scalar(1.0).unwrap();
+        }
+        let got = cur.collect().unwrap();
+        assert_eq!(got, m.map(|x| x + 6.0));
+        rt.barrier().unwrap();
+        let met = rt.metrics();
+        // 6 consumed generations × 16 blocks each were reclaimed.
+        assert!(met.blocks_evicted >= 6 * 16, "evicted {}", met.blocks_evicted);
+        // 7 generations of 16 KiB each were produced, but the peak resident
+        // set stays well below the total (only a couple of generations live
+        // at once).
+        let gen_bytes = 16 * 32 * 32 / 16 * 4; // 16 blocks x 8x8 f32
+        assert!(
+            met.peak_resident_bytes < (7 * gen_bytes) as u64,
+            "peak {} not bounded",
+            met.peak_resident_bytes
+        );
+        assert!(met.peak_resident_bytes >= gen_bytes as u64);
+    }
+
+    #[test]
+    fn pinned_blocks_survive_owner_drop() {
+        let rt = Runtime::local(1);
+        let m = DenseMatrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let a = creation::from_matrix(&rt, &m, (2, 2)).unwrap();
+        let keep = a.block(0, 0);
+        rt.pin(keep);
+        let lost = a.block(1, 1);
+        let b = a.add_scalar(1.0).unwrap();
+        drop(a);
+        b.collect().unwrap();
+        rt.barrier().unwrap();
+        // The pinned block survived its owner; the unpinned one was
+        // reclaimed once its reader completed.
+        assert!(rt.wait(keep).is_ok());
+        assert!(rt.wait(lost).is_err());
+        assert!(rt.metrics().blocks_evicted >= 1);
     }
 }

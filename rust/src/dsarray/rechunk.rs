@@ -7,7 +7,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::storage::{Block, BlockMeta, DenseMatrix};
-use crate::tasking::CostHint;
+use crate::tasking::{BatchTask, CostHint, Future};
 
 use super::DsArray;
 
@@ -26,7 +26,8 @@ impl DsArray {
             DsArray::grid_dim(self.shape.0, new_block.0),
             DsArray::grid_dim(self.shape.1, new_block.1),
         );
-        let mut blocks = Vec::with_capacity(grid.0 * grid.1);
+        // One gather task per output block, submitted as one batch.
+        let mut batch = Vec::with_capacity(grid.0 * grid.1);
         for oi in 0..grid.0 {
             let or0 = oi * new_block.0;
             let orn = (self.shape.0 - or0).min(new_block.0);
@@ -46,9 +47,9 @@ impl DsArray {
                     }
                 }
                 let meta = BlockMeta::dense(orn, ocn);
-                let out = self.rt.submit(
+                batch.push(BatchTask::new(
                     "dsarray.rechunk.block",
-                    &futs,
+                    futs,
                     vec![meta],
                     CostHint::default().with_bytes(2.0 * meta.bytes() as f64),
                     Arc::new(move |ins: &[Arc<Block>]| {
@@ -69,10 +70,10 @@ impl DsArray {
                         }
                         Ok(vec![Block::Dense(out)])
                     }),
-                );
-                blocks.push(out[0]);
+                ));
             }
         }
+        let blocks: Vec<Future> = self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
         DsArray::from_parts(self.rt.clone(), self.shape, new_block, blocks, false)
     }
 }

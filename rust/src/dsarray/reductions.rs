@@ -8,7 +8,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::storage::{Block, BlockMeta, DenseMatrix};
-use crate::tasking::{CostHint, Future};
+use crate::tasking::{BatchTask, CostHint, Future};
 
 use super::DsArray;
 
@@ -66,7 +66,8 @@ impl DsArray {
         if axis > 1 {
             bail!("axis must be 0 or 1, got {axis}");
         }
-        let mut blocks = Vec::new();
+        // One task per block-line, submitted as one batch.
+        let mut batch = Vec::new();
         if axis == 0 {
             for j in 0..self.grid.1 {
                 let futs = self.block_col(j);
@@ -74,15 +75,16 @@ impl DsArray {
                 let meta = BlockMeta::dense(1, c);
                 let flops: f64 = futs.iter().map(|f| (f.meta.rows * f.meta.cols) as f64).sum();
                 let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
-                let out = self.rt.submit(
+                batch.push(BatchTask::new(
                     kind.name(),
-                    &futs,
+                    futs,
                     vec![meta],
                     CostHint::flops(flops).with_bytes(bytes),
                     reduce_fn(kind, axis),
-                );
-                blocks.push(out[0]);
+                ));
             }
+            let blocks: Vec<Future> =
+                self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
             DsArray::from_parts(
                 self.rt.clone(),
                 (1, self.shape.1),
@@ -97,15 +99,16 @@ impl DsArray {
                 let meta = BlockMeta::dense(r, 1);
                 let flops: f64 = futs.iter().map(|f| (f.meta.rows * f.meta.cols) as f64).sum();
                 let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
-                let out = self.rt.submit(
+                batch.push(BatchTask::new(
                     kind.name(),
-                    &futs,
+                    futs,
                     vec![meta],
                     CostHint::flops(flops).with_bytes(bytes),
                     reduce_fn(kind, axis),
-                );
-                blocks.push(out[0]);
+                ));
             }
+            let blocks: Vec<Future> =
+                self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
             DsArray::from_parts(
                 self.rt.clone(),
                 (self.shape.0, 1),

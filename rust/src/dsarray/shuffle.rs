@@ -13,7 +13,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::storage::{Block, BlockMeta, DenseMatrix};
-use crate::tasking::{CostHint, Future};
+use crate::tasking::{BatchTask, CostHint, Future};
 use crate::util::rng::Xoshiro256;
 
 use super::DsArray;
@@ -86,9 +86,10 @@ impl DsArray {
         let cols = self.shape.1;
         let plan = self.shuffle_plan(seed);
 
-        // ---- Phase 1: part tasks ----
+        // ---- Phase 1: part tasks (one batch for the whole phase) ----
         // parts[d][i] = future of the part moving from source i to dest d.
         let mut parts: Vec<Vec<Future>> = vec![Vec::with_capacity(n); n];
+        let mut batch = Vec::with_capacity(if collections { n } else { n * n });
         for i in 0..n {
             let futs = self.block_row(i);
             let in_bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
@@ -98,40 +99,48 @@ impl DsArray {
                     .map(|d| BlockMeta::dense(plan.part_rows[i][d].len(), cols))
                     .collect();
                 let rows_by_dest: Vec<Vec<usize>> = plan.part_rows[i].clone();
-                let out = self.rt.submit(
+                batch.push(BatchTask::new(
                     "dsarray.shuffle.part",
-                    &futs,
+                    futs,
                     metas,
                     CostHint::default().with_bytes(2.0 * in_bytes),
                     part_fn(rows_by_dest, cols),
-                );
-                for (d, f) in out.into_iter().enumerate() {
-                    parts[d].push(f);
-                }
+                ));
             } else {
                 // One task per destination.
                 for d in 0..n {
                     let meta = BlockMeta::dense(plan.part_rows[i][d].len(), cols);
                     let rows_one = vec![plan.part_rows[i][d].clone()];
-                    let out = self.rt.submit(
+                    batch.push(BatchTask::new(
                         "dsarray.shuffle_nocoll.part",
-                        &futs,
+                        futs.clone(),
                         vec![meta],
                         CostHint::default().with_bytes(in_bytes / n as f64 * 2.0),
                         part_fn(rows_one, cols),
-                    );
-                    parts[d].push(out[0]);
+                    ));
                 }
             }
         }
+        for (t, out) in self.rt.submit_batch(batch).into_iter().enumerate() {
+            if collections {
+                // Task t is source block-row t; output d goes to dest d.
+                for (d, f) in out.into_iter().enumerate() {
+                    parts[d].push(f);
+                }
+            } else {
+                // Task t = (source i, dest d) in row-major order.
+                parts[t % n].push(out[0]);
+            }
+        }
 
-        // ---- Phase 2: merge tasks (one per destination block-row) ----
+        // ---- Phase 2: merge tasks (one per destination block-row, one
+        // batch for the phase; merges read part futures from phase 1) ----
         let op_name: &'static str = if collections {
             "dsarray.shuffle.merge"
         } else {
             "dsarray.shuffle_nocoll.merge"
         };
-        let mut blocks = Vec::with_capacity(n * gc);
+        let mut batch = Vec::with_capacity(n);
         for d in 0..n {
             let rows_d = self.block_rows_at(d);
             let futs = parts[d].clone();
@@ -143,9 +152,9 @@ impl DsArray {
             // source-major order.
             let positions: Vec<Vec<usize>> = (0..n).map(|i| plan.part_dest[i][d].clone()).collect();
             let bs1 = self.block_shape.1;
-            let out = self.rt.submit(
+            batch.push(BatchTask::new(
                 op_name,
-                &futs,
+                futs,
                 metas,
                 CostHint::default().with_bytes(2.0 * in_bytes),
                 Arc::new(move |ins: &[Arc<Block>]| {
@@ -167,9 +176,9 @@ impl DsArray {
                     }
                     Ok(outs)
                 }),
-            );
-            blocks.extend(out);
+            ));
         }
+        let blocks: Vec<Future> = self.rt.submit_batch(batch).into_iter().flatten().collect();
         DsArray::from_parts(self.rt.clone(), self.shape, self.block_shape, blocks, false)
     }
 }

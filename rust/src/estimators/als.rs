@@ -28,7 +28,7 @@ use anyhow::{bail, Result};
 use crate::dataset::Dataset;
 use crate::dsarray::DsArray;
 use crate::storage::{Block, BlockMeta, DenseMatrix};
-use crate::tasking::{CostHint, Future, Runtime};
+use crate::tasking::{BatchTask, CostHint, Future, Runtime};
 use crate::util::rng::Xoshiro256;
 
 #[derive(Clone, Debug)]
@@ -67,17 +67,18 @@ impl Als {
         }
     }
 
-    /// Random (k, d) factor panels aligned to a list of panel heights.
+    /// Random (k, d) factor panels aligned to a list of panel heights —
+    /// one batch for all panels.
     fn init_factor(rt: &Runtime, heights: &[usize], d: usize, seed: u64) -> Vec<Future> {
-        heights
+        let batch: Vec<BatchTask> = heights
             .iter()
             .enumerate()
             .map(|(i, &h)| {
                 let meta = BlockMeta::dense(h, d);
                 let s = seed ^ (i as u64) << 17;
-                rt.submit(
+                BatchTask::new(
                     "als.init_factor",
-                    &[],
+                    Vec::new(),
                     vec![meta],
                     CostHint::default().with_bytes(meta.bytes() as f64),
                     Arc::new(move |_| {
@@ -86,20 +87,22 @@ impl Als {
                             rng.next_f32() * 0.1
                         }))])
                     }),
-                )[0]
+                )
             })
-            .collect()
+            .collect();
+        rt.submit_batch(batch).into_iter().map(|v| v[0]).collect()
     }
 
     /// Gram of a panel-distributed factor: Σ Fᵢᵀ Fᵢ (+ λI), tree-reduced.
+    /// Partials and every tree level go out as one batch each.
     fn factor_gram(rt: &Runtime, panels: &[Future], d: usize, lambda: f32) -> Future {
-        let mut partials: Vec<Future> = panels
+        let batch: Vec<BatchTask> = panels
             .iter()
             .map(|&p| {
                 let flops = 2.0 * p.meta.rows as f64 * (d * d) as f64;
-                rt.submit(
+                BatchTask::new(
                     "als.gram_partial",
-                    &[p],
+                    vec![p],
                     vec![BlockMeta::dense(d, d)],
                     CostHint::flops(flops).with_bytes(p.meta.bytes() as f64),
                     Arc::new(move |ins: &[Arc<Block>]| {
@@ -107,35 +110,42 @@ impl Als {
                         let g = gram_accelerated(&f)?;
                         Ok(vec![Block::Dense(g)])
                     }),
-                )[0]
+                )
             })
             .collect();
+        let mut partials: Vec<Future> =
+            rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
         // Tree-reduce, then add λI in the final task.
         while partials.len() > 1 {
-            let mut next = Vec::with_capacity(partials.len().div_ceil(8));
+            let mut next: Vec<Option<Future>> = Vec::with_capacity(partials.len().div_ceil(8));
+            let mut batch = Vec::new();
             for chunk in partials.chunks(8) {
                 if chunk.len() == 1 {
-                    next.push(chunk[0]);
+                    next.push(Some(chunk[0]));
                     continue;
                 }
-                let reads = chunk.to_vec();
-                next.push(
-                    rt.submit(
-                        "als.gram_reduce",
-                        &reads,
-                        vec![BlockMeta::dense(d, d)],
-                        CostHint::flops((chunk.len() * d * d) as f64),
-                        Arc::new(|ins: &[Arc<Block>]| {
-                            let mut acc = ins[0].to_dense()?;
-                            for b in &ins[1..] {
-                                acc.axpy(1.0, &b.to_dense()?)?;
-                            }
-                            Ok(vec![Block::Dense(acc)])
-                        }),
-                    )[0],
-                );
+                next.push(None);
+                batch.push(BatchTask::new(
+                    "als.gram_reduce",
+                    chunk.to_vec(),
+                    vec![BlockMeta::dense(d, d)],
+                    CostHint::flops((chunk.len() * d * d) as f64),
+                    Arc::new(|ins: &[Arc<Block>]| {
+                        let mut acc = ins[0].to_dense()?;
+                        for b in &ins[1..] {
+                            acc.axpy(1.0, &b.to_dense()?)?;
+                        }
+                        Ok(vec![Block::Dense(acc)])
+                    }),
+                ));
             }
-            partials = next;
+            let mut outs = rt.submit_batch(batch).into_iter();
+            partials = next
+                .into_iter()
+                .map(|slot| {
+                    slot.unwrap_or_else(|| outs.next().expect("batch output per chunk")[0])
+                })
+                .collect();
         }
         rt.submit(
             "als.gram_ridge",
@@ -153,11 +163,11 @@ impl Als {
         )[0]
     }
 
-    /// One factor-panel update task: `F_line = (Σ_b R_b @ P_b) G⁻¹` where
-    /// the R blocks and opposite panels come in as collections.
+    /// Build one factor-panel update task: `F_line = (Σ_b R_b @ P_b) G⁻¹`
+    /// where the R blocks and opposite panels come in as collections.
     /// `transpose_r` selects `R_bᵀ` (the V update reading block-columns).
-    fn update_line(
-        rt: &Runtime,
+    /// Returned as a [`BatchTask`] so callers batch a whole update phase.
+    fn update_line_task(
         r_blocks: &[Future],
         opposite: &[Future],
         gram: Future,
@@ -165,7 +175,7 @@ impl Als {
         d: usize,
         transpose_r: bool,
         name: &'static str,
-    ) -> Future {
+    ) -> BatchTask {
         let nb = r_blocks.len();
         let mut reads = r_blocks.to_vec();
         reads.extend_from_slice(opposite);
@@ -173,9 +183,9 @@ impl Als {
         let nnz: f64 = r_blocks.iter().map(|b| b.meta.nnz as f64).sum();
         let flops = 2.0 * nnz * d as f64 + rows_out as f64 * (d * d) as f64;
         let bytes: f64 = reads.iter().map(|b| b.meta.bytes() as f64).sum();
-        rt.submit(
+        BatchTask::new(
             name,
-            &reads,
+            reads,
             vec![BlockMeta::dense(rows_out, d)],
             CostHint::flops(flops).with_bytes(bytes),
             Arc::new(move |ins: &[Arc<Block>]| {
@@ -213,7 +223,7 @@ impl Als {
                 let ft = g.solve_spd(&s.transpose())?;
                 Ok(vec![Block::Dense(ft.transpose())])
             }),
-        )[0]
+        )
     }
 
     /// Fit on a ds-array: row updates read block-rows, column updates read
@@ -231,38 +241,38 @@ impl Als {
         let mut v = Self::init_factor(&rt, &v_heights, d, self.cfg.seed ^ 0xABCD);
 
         for _ in 0..self.cfg.max_iter {
-            // U ← R V Gv⁻¹ : one task per block-row.
+            // U ← R V Gv⁻¹ : one task per block-row, one batch per phase.
             let gv = Self::factor_gram(&rt, &v, d, self.cfg.lambda);
-            let mut new_u = Vec::with_capacity(gr);
-            for i in 0..gr {
-                new_u.push(Self::update_line(
-                    &rt,
-                    &r.block_row(i),
-                    &v,
-                    gv,
-                    u_heights[i],
-                    d,
-                    false,
-                    "als.update_u",
-                ));
-            }
-            u = new_u;
+            let batch: Vec<BatchTask> = (0..gr)
+                .map(|i| {
+                    Self::update_line_task(
+                        &r.block_row(i),
+                        &v,
+                        gv,
+                        u_heights[i],
+                        d,
+                        false,
+                        "als.update_u",
+                    )
+                })
+                .collect();
+            u = rt.submit_batch(batch).into_iter().map(|o| o[0]).collect();
             // V ← Rᵀ U Gu⁻¹ : one task per block-column — DIRECT access.
             let gu = Self::factor_gram(&rt, &u, d, self.cfg.lambda);
-            let mut new_v = Vec::with_capacity(gc);
-            for j in 0..gc {
-                new_v.push(Self::update_line(
-                    &rt,
-                    &r.block_col(j),
-                    &u,
-                    gu,
-                    v_heights[j],
-                    d,
-                    true,
-                    "als.update_v",
-                ));
-            }
-            v = new_v;
+            let batch: Vec<BatchTask> = (0..gc)
+                .map(|j| {
+                    Self::update_line_task(
+                        &r.block_col(j),
+                        &u,
+                        gu,
+                        v_heights[j],
+                        d,
+                        true,
+                        "als.update_v",
+                    )
+                })
+                .collect();
+            v = rt.submit_batch(batch).into_iter().map(|o| o[0]).collect();
         }
         if !rt.is_sim() {
             self.u = Some(collect_panels(&rt, &u)?);
@@ -292,35 +302,35 @@ impl Als {
         // does. Likewise for U in the V update.
         for _ in 0..self.cfg.max_iter {
             let gv = Self::factor_gram(&rt, &v, d, self.cfg.lambda);
-            let mut new_u = Vec::with_capacity(ds.n_subsets());
-            for i in 0..ds.n_subsets() {
-                new_u.push(Self::update_line(
-                    &rt,
-                    &[ds.subset(i).samples],
-                    &v,
-                    gv,
-                    u_heights[i],
-                    d,
-                    false,
-                    "als_dataset.update_u",
-                ));
-            }
-            u = new_u;
+            let batch: Vec<BatchTask> = (0..ds.n_subsets())
+                .map(|i| {
+                    Self::update_line_task(
+                        &[ds.subset(i).samples],
+                        &v,
+                        gv,
+                        u_heights[i],
+                        d,
+                        false,
+                        "als_dataset.update_u",
+                    )
+                })
+                .collect();
+            u = rt.submit_batch(batch).into_iter().map(|o| o[0]).collect();
             let gu = Self::factor_gram(&rt, &u, d, self.cfg.lambda);
-            let mut new_v = Vec::with_capacity(rt_ds.n_subsets());
-            for j in 0..rt_ds.n_subsets() {
-                new_v.push(Self::update_line(
-                    &rt,
-                    &[rt_ds.subset(j).samples],
-                    &u,
-                    gu,
-                    v_heights[j],
-                    d,
-                    false, // rows of the TRANSPOSED copy
-                    "als_dataset.update_v",
-                ));
-            }
-            v = new_v;
+            let batch: Vec<BatchTask> = (0..rt_ds.n_subsets())
+                .map(|j| {
+                    Self::update_line_task(
+                        &[rt_ds.subset(j).samples],
+                        &u,
+                        gu,
+                        v_heights[j],
+                        d,
+                        false, // rows of the TRANSPOSED copy
+                        "als_dataset.update_v",
+                    )
+                })
+                .collect();
+            v = rt.submit_batch(batch).into_iter().map(|o| o[0]).collect();
         }
         if !rt.is_sim() {
             self.u = Some(collect_panels(&rt, &u)?);

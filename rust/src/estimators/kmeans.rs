@@ -15,7 +15,7 @@ use anyhow::{bail, Result};
 use crate::dataset::Dataset;
 use crate::dsarray::DsArray;
 use crate::storage::{Block, BlockMeta, DenseMatrix};
-use crate::tasking::{CostHint, Future, Runtime};
+use crate::tasking::{BatchTask, CostHint, Future, Runtime};
 use crate::util::rng::Xoshiro256;
 
 use super::Estimator;
@@ -74,7 +74,8 @@ impl KMeans {
         k: usize,
     ) -> (Future, Future, Future) {
         let f = x.cols();
-        let mut partials: Vec<(Future, Future, Future)> = Vec::with_capacity(x.grid().0);
+        // One partial task per block-row, submitted as one batch.
+        let mut batch = Vec::with_capacity(x.grid().0);
         for i in 0..x.grid().0 {
             let mut reads = x.block_row(i);
             let rows = x.block_rows_at(i);
@@ -88,9 +89,9 @@ impl KMeans {
             // distances: 3*rows*f*k flops, psum matmul: 2*rows*k*f.
             let flops = 5.0 * rows as f64 * f as f64 * k as f64;
             let gc = x.grid().1;
-            let out = rt.submit(
+            batch.push(BatchTask::new(
                 "kmeans.partial",
-                &reads,
+                reads,
                 metas,
                 CostHint::flops(flops).with_bytes(bytes),
                 Arc::new(move |ins: &[Arc<Block>]| {
@@ -109,55 +110,14 @@ impl KMeans {
                         Block::Dense(DenseMatrix::full(1, 1, pssd)),
                     ])
                 }),
-            );
-            partials.push((out[0], out[1], out[2]));
+            ));
         }
-        // Tree reduction of the partial triples.
-        let mut level = partials;
-        while level.len() > 1 {
-            let mut next = Vec::with_capacity(level.len().div_ceil(REDUCE_ARITY));
-            for chunk in level.chunks(REDUCE_ARITY) {
-                if chunk.len() == 1 {
-                    next.push(chunk[0]);
-                    continue;
-                }
-                let mut reads = Vec::with_capacity(chunk.len() * 3);
-                for &(s, c, d) in chunk {
-                    reads.push(s);
-                    reads.push(c);
-                    reads.push(d);
-                }
-                let metas = vec![
-                    BlockMeta::dense(k, f),
-                    BlockMeta::dense(1, k),
-                    BlockMeta::dense(1, 1),
-                ];
-                let out = rt.submit(
-                    "kmeans.reduce",
-                    &reads,
-                    metas,
-                    CostHint::flops((chunk.len() * k * (f + 1)) as f64),
-                    Arc::new(move |ins: &[Arc<Block>]| {
-                        let mut psum = ins[0].to_dense()?;
-                        let mut pcount = ins[1].to_dense()?;
-                        let mut pssd = ins[2].to_dense()?;
-                        for triple in ins[3..].chunks(3) {
-                            psum.axpy(1.0, &triple[0].to_dense()?)?;
-                            pcount.axpy(1.0, &triple[1].to_dense()?)?;
-                            pssd.axpy(1.0, &triple[2].to_dense()?)?;
-                        }
-                        Ok(vec![
-                            Block::Dense(psum),
-                            Block::Dense(pcount),
-                            Block::Dense(pssd),
-                        ])
-                    }),
-                );
-                next.push((out[0], out[1], out[2]));
-            }
-            level = next;
-        }
-        level[0]
+        let partials: Vec<(Future, Future, Future)> = rt
+            .submit_batch(batch)
+            .into_iter()
+            .map(|out| (out[0], out[1], out[2]))
+            .collect();
+        reduce_triples(rt, partials, k, f)
     }
 
     /// Submit the center-update task: new centers from reduced partials
@@ -243,8 +203,8 @@ impl KMeans {
         let mut last = f64::INFINITY;
         self.n_iter = 0;
         for _ in 0..self.cfg.max_iter {
-            // Per-Subset partials.
-            let mut partials = Vec::with_capacity(ds.n_subsets());
+            // Per-Subset partials (one batch per iteration).
+            let mut batch = Vec::with_capacity(ds.n_subsets());
             for i in 0..ds.n_subsets() {
                 let s = ds.subset(i);
                 let reads = vec![s.samples, centers_fut];
@@ -254,9 +214,9 @@ impl KMeans {
                     BlockMeta::dense(1, k),
                     BlockMeta::dense(1, 1),
                 ];
-                let out = rt.submit(
+                batch.push(BatchTask::new(
                     "kmeans.partial",
-                    &reads,
+                    reads,
                     metas,
                     CostHint::flops(5.0 * rows as f64 * f as f64 * k as f64)
                         .with_bytes(s.samples.meta.bytes() as f64),
@@ -270,9 +230,13 @@ impl KMeans {
                             Block::Dense(DenseMatrix::full(1, 1, pssd)),
                         ])
                     }),
-                );
-                partials.push((out[0], out[1], out[2]));
+                ));
             }
+            let partials: Vec<(Future, Future, Future)> = rt
+                .submit_batch(batch)
+                .into_iter()
+                .map(|out| (out[0], out[1], out[2]))
+                .collect();
             // Same tree reduction + update as the ds-array path.
             let reduced = reduce_triples(&rt, partials, k, f);
             centers_fut = Self::update_round(&rt, reduced, centers_fut, k, f);
@@ -293,7 +257,8 @@ impl KMeans {
     }
 }
 
-/// Reduce partial triples with the shared tree topology.
+/// Reduce partial triples with the shared tree topology; each tree level
+/// is submitted as one batch.
 fn reduce_triples(
     rt: &Runtime,
     mut level: Vec<(Future, Future, Future)>,
@@ -302,11 +267,13 @@ fn reduce_triples(
 ) -> (Future, Future, Future) {
     while level.len() > 1 {
         let mut next = Vec::with_capacity(level.len().div_ceil(REDUCE_ARITY));
+        let mut batch = Vec::new();
         for chunk in level.chunks(REDUCE_ARITY) {
             if chunk.len() == 1 {
-                next.push(chunk[0]);
+                next.push(Some(chunk[0]));
                 continue;
             }
+            next.push(None); // filled from the batch below, in order
             let mut reads = Vec::with_capacity(chunk.len() * 3);
             for &(s, c, d) in chunk {
                 reads.push(s);
@@ -318,9 +285,9 @@ fn reduce_triples(
                 BlockMeta::dense(1, k),
                 BlockMeta::dense(1, 1),
             ];
-            let out = rt.submit(
+            batch.push(BatchTask::new(
                 "kmeans.reduce",
-                &reads,
+                reads,
                 metas,
                 CostHint::flops((chunk.len() * k * (f + 1)) as f64),
                 Arc::new(move |ins: &[Arc<Block>]| {
@@ -338,10 +305,18 @@ fn reduce_triples(
                         Block::Dense(pssd),
                     ])
                 }),
-            );
-            next.push((out[0], out[1], out[2]));
+            ));
         }
-        level = next;
+        let mut outs = rt.submit_batch(batch).into_iter();
+        level = next
+            .into_iter()
+            .map(|slot| {
+                slot.unwrap_or_else(|| {
+                    let out = outs.next().expect("one batch output per merged chunk");
+                    (out[0], out[1], out[2])
+                })
+            })
+            .collect();
     }
     level[0]
 }
@@ -423,14 +398,14 @@ impl Estimator for KMeans {
         let rt = x.runtime().clone();
         let gc = x.grid().1;
         let centers_fut = rt.put_block(Block::Dense(centers));
-        let mut blocks = Vec::with_capacity(x.grid().0);
+        let mut batch = Vec::with_capacity(x.grid().0);
         for i in 0..x.grid().0 {
             let mut reads = x.block_row(i);
             reads.push(centers_fut);
             let rows = x.block_rows_at(i);
-            let out = rt.submit(
+            batch.push(BatchTask::new(
                 "kmeans.predict",
-                &reads,
+                reads,
                 vec![BlockMeta::dense(rows, 1)],
                 CostHint::flops(3.0 * rows as f64 * x.cols() as f64 * self.cfg.k as f64),
                 Arc::new(move |ins: &[Arc<Block>]| {
@@ -459,9 +434,9 @@ impl Estimator for KMeans {
                     }
                     Ok(vec![Block::Dense(labels)])
                 }),
-            );
-            blocks.push(out[0]);
+            ));
         }
+        let blocks: Vec<Future> = rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
         DsArray::from_parts(rt, (x.rows(), 1), (x.block_shape().0, 1), blocks, false)
     }
 

@@ -8,7 +8,7 @@ use anyhow::{bail, Result};
 
 use crate::dsarray::DsArray;
 use crate::storage::{Block, BlockMeta, DenseMatrix};
-use crate::tasking::CostHint;
+use crate::tasking::{BatchTask, CostHint, Future};
 
 use super::Estimator;
 
@@ -107,14 +107,14 @@ impl Estimator for LinearRegression {
         let rt = x.runtime().clone();
         let w_fut = rt.put_block(Block::Dense(w));
         let gc = x.grid().1;
-        let mut blocks = Vec::with_capacity(x.grid().0);
+        let mut batch = Vec::with_capacity(x.grid().0);
         for i in 0..x.grid().0 {
             let mut reads = x.block_row(i);
             reads.push(w_fut);
             let rows = x.block_rows_at(i);
-            let out = rt.submit(
+            batch.push(BatchTask::new(
                 "linreg.predict",
-                &reads,
+                reads,
                 vec![BlockMeta::dense(rows, 1)],
                 CostHint::flops(2.0 * rows as f64 * x.cols() as f64),
                 Arc::new(move |ins: &[Arc<Block>]| {
@@ -131,9 +131,9 @@ impl Estimator for LinearRegression {
                     }
                     Ok(vec![Block::Dense(pred)])
                 }),
-            );
-            blocks.push(out[0]);
+            ));
         }
+        let blocks: Vec<Future> = rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
         DsArray::from_parts(rt, (x.rows(), 1), (x.block_shape().0, 1), blocks, false)
     }
 

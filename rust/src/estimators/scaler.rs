@@ -10,7 +10,7 @@ use anyhow::{bail, Result};
 
 use crate::dsarray::DsArray;
 use crate::storage::{Block, BlockMeta, DenseMatrix};
-use crate::tasking::CostHint;
+use crate::tasking::{BatchTask, CostHint, Future};
 
 pub struct StandardScaler {
     /// (1, f) feature means after fit.
@@ -65,7 +65,7 @@ impl StandardScaler {
         }
         let rt = x.runtime().clone();
         let bs1 = x.block_shape().1;
-        let mut blocks = Vec::with_capacity(x.n_blocks());
+        let mut batch = Vec::with_capacity(x.n_blocks());
         for i in 0..x.grid().0 {
             for j in 0..x.grid().1 {
                 let fut = x.block(i, j);
@@ -74,9 +74,9 @@ impl StandardScaler {
                 let mu = mean.slice(0, c0, 1, cols)?;
                 let is = inv.slice(0, c0, 1, cols)?;
                 let meta = BlockMeta::dense(fut.meta.rows, cols);
-                let out = rt.submit(
+                batch.push(BatchTask::new(
                     "scaler.transform",
-                    &[fut],
+                    vec![fut],
                     vec![meta],
                     CostHint::flops(2.0 * (meta.rows * meta.cols) as f64)
                         .with_bytes(2.0 * meta.bytes() as f64),
@@ -94,10 +94,10 @@ impl StandardScaler {
                         });
                         Ok(vec![Block::Dense(out)])
                     }),
-                );
-                blocks.push(out[0]);
+                ));
             }
         }
+        let blocks: Vec<Future> = rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
         DsArray::from_parts(rt, x.shape(), x.block_shape(), blocks, false)
     }
 

@@ -1,16 +1,26 @@
 //! The PJRT service thread: owns the (non-`Send`) PJRT CPU client and every
 //! compiled executable; serves execution requests over a channel.
 
-use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::mpsc;
 use std::sync::{Mutex, OnceLock};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use crate::storage::DenseMatrix;
 
 use super::artifact::Manifest;
+
+// The `xla` crate (and everything touching it) only exists behind the
+// `pjrt` cargo feature: the offline default build has no PJRT dependency
+// and every caller falls back to native block math via `global() == None`.
+#[cfg(feature = "pjrt")]
+use std::collections::BTreeMap;
+
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+
+#[cfg(feature = "pjrt")]
 use super::exec::{literal_to_dense, matrices_to_literals};
 
 struct Request {
@@ -29,6 +39,7 @@ pub struct PjrtService {
 impl PjrtService {
     /// Start the service for an artifact directory. Compiles executables
     /// lazily (first call per entry point) on the service thread.
+    #[cfg(feature = "pjrt")]
     pub fn start(dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
         manifest.validate_files()?;
@@ -42,6 +53,19 @@ impl PjrtService {
             tx: Mutex::new(tx),
             manifest,
         })
+    }
+
+    /// Built without the `pjrt` feature: validates the artifact directory
+    /// but always errors — `global()` then reports `None` and every hot
+    /// path uses its native fallback.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn start(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        manifest.validate_files()?;
+        anyhow::bail!(
+            "rustdslib was built without the `pjrt` feature: artifacts in {} cannot be executed",
+            dir.display()
+        )
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -82,6 +106,7 @@ impl PjrtService {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn service_loop(manifest: Manifest, rx: mpsc::Receiver<Request>) {
     // All PJRT state is thread-local to this loop.
     let client = match xla::PjRtClient::cpu() {

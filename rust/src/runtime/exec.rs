@@ -4,7 +4,10 @@
 //! to the canonical block edge and slice results back to logical sizes, so
 //! estimator task closures can call PJRT on any block size.
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
+
+#[cfg(feature = "pjrt")]
+use anyhow::anyhow;
 
 use crate::storage::DenseMatrix;
 
@@ -12,6 +15,7 @@ use super::PjrtService;
 
 /// Dense matrices → row-major f32 literals. Uses the raw untyped-data
 /// constructor: one shaped copy instead of vec1 + XLA reshape (§Perf it.2).
+#[cfg(feature = "pjrt")]
 pub fn matrices_to_literals(ms: &[DenseMatrix]) -> Result<Vec<xla::Literal>> {
     ms.iter()
         .map(|m| {
@@ -29,6 +33,7 @@ pub fn matrices_to_literals(ms: &[DenseMatrix]) -> Result<Vec<xla::Literal>> {
 }
 
 /// Literal (rank ≤ 2 f32) → dense matrix with the manifest's shape.
+#[cfg(feature = "pjrt")]
 pub fn literal_to_dense(lit: &xla::Literal, rows: usize, cols: usize) -> Result<DenseMatrix> {
     let v = lit
         .to_vec::<f32>()

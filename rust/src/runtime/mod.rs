@@ -8,6 +8,15 @@
 //! worker threads call [`PjrtService::call`] through a channel. One compiled
 //! executable per (entry point, canonical shape) pair, per the manifest.
 
+// The `pjrt` feature requires the external `xla` crate, which the offline
+// build intentionally does not declare. Fail with one actionable message
+// instead of a cascade of unresolved-crate errors. To actually enable PJRT:
+// add `xla` to [dependencies] in rust/Cargo.toml and delete this guard.
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature needs the undeclared `xla` crate: add it to rust/Cargo.toml [dependencies], then remove this guard in src/runtime/mod.rs"
+);
+
 pub mod artifact;
 pub mod client;
 pub mod exec;

@@ -10,7 +10,8 @@ use std::sync::Arc;
 
 use crate::storage::{Block, BlockMeta};
 
-use super::task::{DataId, DataState, TaskId, TaskSpec};
+use super::metrics::Metrics;
+use super::task::{DataId, DataState, TaskId, TaskSpec, TaskSubmit};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TaskState {
@@ -39,15 +40,22 @@ pub struct Graph {
     pub data: Vec<DataState>,
 }
 
+/// Outcome of completing one task: dependents that became ready, payload
+/// bytes of each block reclaimed by refcount eviction at this completion
+/// (0 for outputs dropped before they ever became resident — they count as
+/// evicted blocks but must not reduce `resident_bytes`), and the bytes of
+/// output values actually stored.
+pub struct Completion {
+    pub now_ready: Vec<TaskId>,
+    pub evicted: Vec<usize>,
+    pub stored_bytes: usize,
+}
+
 impl Graph {
     /// Register a block that exists from the start (no producing task).
     pub fn put_block(&mut self, meta: BlockMeta, value: Option<Arc<Block>>) -> DataId {
         let id = self.data.len() as DataId;
-        self.data.push(DataState {
-            meta,
-            value,
-            producer: None,
-        });
+        self.data.push(DataState::new(meta, value, None));
         id
     }
 
@@ -68,16 +76,15 @@ impl Graph {
         for meta in out_metas {
             write_bytes += meta.bytes() as f64;
             let id = self.data.len() as DataId;
-            self.data.push(DataState {
-                meta,
-                value: None,
-                producer: Some(tid),
-            });
+            self.data.push(DataState::new(meta, None, Some(tid)));
             write_ids.push(id);
         }
 
         let mut deps = 0u32;
         for &r in reads {
+            // Every read occurrence keeps the input alive until completion
+            // (balanced by the decrement in [`Graph::complete`]).
+            self.data[r as usize].pending_reads += 1;
             let d = &self.data[r as usize];
             if d.value.is_some() {
                 continue; // already materialized
@@ -109,14 +116,47 @@ impl Graph {
         (tid, write_ids, ready)
     }
 
+    /// Insert one executor-facing submission record and account it in
+    /// `metrics`. Shared by every executor so the real and simulated
+    /// backends build — and count — identical graphs.
+    pub fn submit_record(
+        &mut self,
+        t: TaskSubmit,
+        metrics: &mut Metrics,
+    ) -> (TaskId, Vec<DataId>, bool) {
+        let n_reads = t.reads.len();
+        let n_out = t.out_metas.len();
+        let write_bytes: f64 = t.out_metas.iter().map(|m| m.bytes() as f64).sum();
+        let (tid, outs, ready) =
+            self.submit(t.name, &t.reads, t.out_metas, t.hint, t.read_bytes, t.func);
+        metrics.record_submit(t.name, n_reads, n_out, t.read_bytes, write_bytes);
+        (tid, outs, ready)
+    }
+
     /// Mark a task done, store its outputs (if any — the simulator passes
-    /// `None`s), and return the dependents that became ready.
-    pub fn complete(&mut self, tid: TaskId, outputs: Option<Vec<Block>>) -> Vec<TaskId> {
+    /// `None`), decrement the reader counts of its inputs (reclaiming any
+    /// that became fully consumed), and report the dependents that became
+    /// ready.
+    pub fn complete(&mut self, tid: TaskId, outputs: Option<Vec<Block>>) -> Completion {
+        let mut evicted = Vec::new();
+        let mut stored_bytes = 0usize;
         if let Some(outs) = outputs {
             let writes: Vec<DataId> = self.tasks[tid as usize].spec.writes.to_vec();
             debug_assert_eq!(outs.len(), writes.len(), "task output arity mismatch");
             for (id, block) in writes.into_iter().zip(outs) {
-                self.data[id as usize].value = Some(Arc::new(block));
+                let d = &mut self.data[id as usize];
+                if d.ever_owned && d.handle_refs == 0 && d.pending_reads == 0 && !d.pinned {
+                    // Every owner released the handle (and no reader was ever
+                    // submitted) before the value materialized: drop it on
+                    // the floor instead of storing garbage forever. Reported
+                    // as 0 bytes — the value was never resident, so there is
+                    // nothing to subtract from the residency accounting.
+                    d.evicted = true;
+                    evicted.push(0);
+                } else {
+                    stored_bytes += block.meta().bytes();
+                    d.value = Some(Arc::new(block));
+                }
             }
         }
         self.tasks[tid as usize].state = TaskState::Done;
@@ -131,7 +171,49 @@ impl Graph {
                 now_ready.push(dep);
             }
         }
-        now_ready
+        // Balance the `pending_reads` increments from submission and
+        // reclaim inputs this completion fully consumed.
+        let reads: Vec<DataId> = self.tasks[tid as usize].spec.reads.to_vec();
+        for r in reads {
+            let d = &mut self.data[r as usize];
+            d.pending_reads = d.pending_reads.saturating_sub(1);
+            if let Some(bytes) = self.try_evict(r) {
+                evicted.push(bytes);
+            }
+        }
+        Completion {
+            now_ready,
+            evicted,
+            stored_bytes,
+        }
+    }
+
+    /// Add an application handle reference to `id`.
+    pub fn retain(&mut self, id: DataId) {
+        let d = &mut self.data[id as usize];
+        d.handle_refs += 1;
+        d.ever_owned = true;
+    }
+
+    /// Drop an application handle reference; returns the payload bytes when
+    /// the release triggered reclamation.
+    pub fn release(&mut self, id: DataId) -> Option<usize> {
+        let d = &mut self.data[id as usize];
+        d.handle_refs = d.handle_refs.saturating_sub(1);
+        self.try_evict(id)
+    }
+
+    /// Evict `id`'s value if it is fully consumed: once owned by a handle,
+    /// all handles released, no submitted reader outstanding, not pinned.
+    /// Returns the reclaimed payload bytes.
+    pub fn try_evict(&mut self, id: DataId) -> Option<usize> {
+        let d = &mut self.data[id as usize];
+        if d.pinned || !d.ever_owned || d.handle_refs > 0 || d.pending_reads > 0 {
+            return None;
+        }
+        let v = d.value.take()?;
+        d.evicted = true;
+        Some(v.meta().bytes())
     }
 
     /// Longest path through the graph in task count — a lower bound used by
@@ -194,10 +276,10 @@ mod tests {
         );
         assert!(!ready_d);
 
-        let ready = g.complete(a, None);
+        let ready = g.complete(a, None).now_ready;
         assert_eq!(ready, vec![b, c]);
-        assert!(g.complete(b, None).is_empty());
-        assert_eq!(g.complete(c, None), vec![d]);
+        assert!(g.complete(b, None).now_ready.is_empty());
+        assert_eq!(g.complete(c, None).now_ready, vec![d]);
         assert_eq!(g.critical_path_len(), 3);
         let _ = d;
     }
@@ -224,7 +306,7 @@ mod tests {
         );
         assert!(!ready);
         assert_eq!(g.tasks[b as usize].deps_remaining, 2);
-        let ready = g.complete(a, None);
+        let ready = g.complete(a, None).now_ready;
         assert_eq!(ready, vec![b]);
         assert_eq!(g.tasks[b as usize].deps_remaining, 0);
     }
@@ -233,8 +315,42 @@ mod tests {
     fn completion_stores_outputs() {
         let mut g = Graph::default();
         let (a, outs, _) = g.submit("a", &[], vec![meta()], CostHint::default(), 0.0, noop());
-        g.complete(a, Some(vec![Block::Dense(DenseMatrix::full(1, 1, 7.0))]));
+        let c = g.complete(a, Some(vec![Block::Dense(DenseMatrix::full(1, 1, 7.0))]));
+        assert_eq!(c.stored_bytes, 4);
+        assert!(c.evicted.is_empty());
         let v = g.data[outs[0] as usize].value.as_ref().unwrap();
         assert_eq!(v.as_dense().unwrap().get(0, 0), 7.0);
+    }
+
+    #[test]
+    fn refcount_eviction_on_last_consumer() {
+        let mut g = Graph::default();
+        let src = g.put_block(meta(), Some(Arc::new(Block::Dense(DenseMatrix::zeros(1, 1)))));
+        g.retain(src); // an application handle owns the source
+        let (t, _, ready) = g.submit("t", &[src], vec![meta()], CostHint::default(), 4.0, noop());
+        assert!(ready);
+        // Released handle + outstanding reader: kept until completion.
+        assert_eq!(g.release(src), None);
+        let c = g.complete(t, Some(vec![Block::Dense(DenseMatrix::zeros(1, 1))]));
+        assert_eq!(c.evicted, vec![4]);
+        assert!(g.data[src as usize].value.is_none());
+        assert!(g.data[src as usize].evicted);
+    }
+
+    #[test]
+    fn unowned_and_pinned_blocks_are_never_evicted() {
+        let mut g = Graph::default();
+        let bare = g.put_block(meta(), Some(Arc::new(Block::Dense(DenseMatrix::zeros(1, 1)))));
+        let (t, _, _) = g.submit("t", &[bare], vec![meta()], CostHint::default(), 4.0, noop());
+        // Never owned by a handle: consuming it must not reclaim it.
+        let c = g.complete(t, Some(vec![Block::Dense(DenseMatrix::zeros(1, 1))]));
+        assert!(c.evicted.is_empty());
+        assert!(g.data[bare as usize].value.is_some());
+        // Pinned blocks survive a full retain/release cycle.
+        let pinned = g.put_block(meta(), Some(Arc::new(Block::Dense(DenseMatrix::zeros(1, 1)))));
+        g.retain(pinned);
+        g.data[pinned as usize].pinned = true;
+        assert_eq!(g.release(pinned), None);
+        assert!(g.data[pinned as usize].value.is_some());
     }
 }

@@ -1,12 +1,36 @@
 //! Real master–worker executor: a pool of OS threads executes tasks as they
 //! become dependency-free, mirroring PyCOMPSs' asynchronous task scheduling
-//! (paper §3.1.2). The submitting thread plays the master (graph insertion);
-//! workers pull ready tasks, resolve input futures, run the task function
-//! and publish outputs, waking dependents.
+//! (paper §3.1.2).
+//!
+//! Scheduling layout (post executor-trait refactor):
+//!
+//! * **Batched insertion** — `submit_batch` inserts a whole slice of
+//!   [`TaskSubmit`]s into the dependency graph under ONE acquisition of the
+//!   central lock, amortizing the master's per-task scheduling cost exactly
+//!   the way the paper's collection parameters amortize PyCOMPSs' (§3.1.2,
+//!   §5.2).
+//! * **Per-worker deques with stealing** — ready tasks land in per-worker
+//!   deques (round-robin on submission, own-queue-first on completion for
+//!   locality). A worker pops its own deque from the front; when empty it
+//!   steals from the *costliest* victim's back, using the tasks'
+//!   [`TaskSpec::cost_score`] as the backlog estimate, so big tasks migrate
+//!   before trivial ones.
+//! * **Refcount reclamation** — the graph tracks, per data id, outstanding
+//!   task reads and application handle references; fully-consumed unpinned
+//!   blocks are evicted from the data table and accounted in
+//!   [`Metrics::blocks_evicted`] / `peak_resident_bytes`.
+//!
+//! Lock discipline: the central mutex guards the graph + counters; each
+//! deque has its own mutex. Pushers hold central→deque (in that order);
+//! poppers take a deque lock alone, release it, then take the central lock.
+//! No thread ever holds a deque lock while acquiring the central lock, so
+//! the two levels cannot deadlock.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -14,11 +38,21 @@ use crate::storage::{Block, BlockMeta};
 
 use super::graph::{Graph, TaskState};
 use super::metrics::Metrics;
-use super::task::{CostHint, DataId, TaskFn, TaskId};
+use super::task::{CostHint, DataId, TaskFn, TaskId, TaskSubmit};
+use super::Executor;
 
-struct State {
+/// One worker's ready deque plus its aggregate cost score (the steal
+/// heuristic's victim-selection key).
+#[derive(Default)]
+struct SubQueue {
+    dq: VecDeque<(TaskId, f64)>,
+    cost: f64,
+}
+
+struct Central {
     graph: Graph,
-    ready: VecDeque<TaskId>,
+    /// Ready tasks sitting in deques, not yet claimed by a worker.
+    queued: usize,
     running: usize,
     shutdown: bool,
     /// First task failure; poisons the runtime (fail-fast).
@@ -27,8 +61,27 @@ struct State {
 }
 
 struct Inner {
-    state: Mutex<State>,
+    state: Mutex<Central>,
     cv: Condvar,
+    queues: Vec<Mutex<SubQueue>>,
+    /// Round-robin pointer for distributing freshly-ready tasks.
+    rr: AtomicUsize,
+}
+
+impl Inner {
+    /// Push one ready task into worker `w`'s deque. Caller MUST hold the
+    /// central lock (`st`) — that is what makes `queued` and the condvar
+    /// wakeup race-free.
+    fn push_ready(&self, st: &mut Central, w: usize, tid: TaskId, score: f64) {
+        let mut q = self.queues[w].lock().unwrap();
+        q.dq.push_back((tid, score));
+        q.cost += score;
+        st.queued += 1;
+    }
+
+    fn next_rr(&self) -> usize {
+        self.rr.fetch_add(1, Ordering::Relaxed) % self.queues.len()
+    }
 }
 
 pub struct LocalExecutor {
@@ -39,21 +92,24 @@ pub struct LocalExecutor {
 
 impl LocalExecutor {
     pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
         let inner = Arc::new(Inner {
-            state: Mutex::new(State {
+            state: Mutex::new(Central {
                 graph: Graph::default(),
-                ready: VecDeque::new(),
+                queued: 0,
                 running: 0,
                 shutdown: false,
                 error: None,
                 metrics: Metrics::default(),
             }),
             cv: Condvar::new(),
+            queues: (0..workers).map(|_| Mutex::new(SubQueue::default())).collect(),
+            rr: AtomicUsize::new(0),
         });
         let handles = (0..workers)
-            .map(|_| {
+            .map(|me| {
                 let inner = Arc::clone(&inner);
-                std::thread::spawn(move || worker_loop(inner))
+                std::thread::spawn(move || worker_loop(inner, me))
             })
             .collect();
         Self {
@@ -63,15 +119,8 @@ impl LocalExecutor {
         }
     }
 
-    pub fn workers(&self) -> usize {
-        self.workers
-    }
-
-    pub fn put_block(&self, block: Block) -> DataId {
-        let mut st = self.inner.state.lock().unwrap();
-        st.graph.put_block(block.meta(), Some(Arc::new(block)))
-    }
-
+    /// Single-task convenience wrapper used by unit tests; the library goes
+    /// through [`Executor::submit_batch`].
     pub fn submit(
         &self,
         name: &'static str,
@@ -81,43 +130,87 @@ impl LocalExecutor {
         read_bytes: f64,
         f: TaskFn,
     ) -> Vec<DataId> {
-        let mut st = self.inner.state.lock().unwrap();
-        let n_out = out_metas.len();
-        let write_bytes: f64 = out_metas.iter().map(|m| m.bytes() as f64).sum();
-        let (tid, outs, ready) = st.graph.submit(name, reads, out_metas, hint, read_bytes, f);
-        st.metrics
-            .record_submit(name, reads.len(), n_out, read_bytes, write_bytes);
-        if ready {
-            st.ready.push_back(tid);
-            self.inner.cv.notify_one();
-        }
-        outs
+        self.submit_batch(vec![TaskSubmit {
+            name,
+            reads: reads.to_vec(),
+            out_metas,
+            hint,
+            read_bytes,
+            func: f,
+        }])
+        .pop()
+        .expect("one entry per task")
+    }
+}
+
+impl Executor for LocalExecutor {
+    fn workers(&self) -> usize {
+        self.workers
     }
 
-    pub fn wait(&self, id: DataId) -> Result<Arc<Block>> {
+    fn put_block(&self, block: Block) -> DataId {
+        let bytes = block.meta().bytes();
+        let mut st = self.inner.state.lock().unwrap();
+        let id = st.graph.put_block(block.meta(), Some(Arc::new(block)));
+        st.metrics.record_resident(bytes);
+        id
+    }
+
+    /// Insert a whole batch under one central-lock acquisition — the
+    /// master-side amortization this refactor is about. Tasks within a
+    /// batch may read outputs of earlier tasks in the same batch (ids are
+    /// allocated in order).
+    fn submit_batch(&self, tasks: Vec<TaskSubmit>) -> Vec<Vec<DataId>> {
+        let mut outs_all = Vec::with_capacity(tasks.len());
+        let mut any_ready = false;
+        {
+            let mut guard = self.inner.state.lock().unwrap();
+            let st = &mut *guard;
+            for t in tasks {
+                let (tid, outs, ready) = st.graph.submit_record(t, &mut st.metrics);
+                if ready {
+                    let score = st.graph.tasks[tid as usize].spec.cost_score();
+                    let w = self.inner.next_rr();
+                    self.inner.push_ready(st, w, tid, score);
+                    any_ready = true;
+                }
+                outs_all.push(outs);
+            }
+        }
+        if any_ready {
+            self.inner.cv.notify_all();
+        }
+        outs_all
+    }
+
+    fn wait(&self, id: DataId) -> Result<Arc<Block>> {
         let mut st = self.inner.state.lock().unwrap();
         loop {
             if let Some(err) = &st.error {
                 bail!("runtime poisoned by task failure: {err}");
             }
-            if let Some(v) = &st.graph.data[id as usize].value {
+            let d = &st.graph.data[id as usize];
+            if let Some(v) = &d.value {
                 return Ok(Arc::clone(v));
             }
-            // Deadlock guard: nothing running, nothing ready, value absent.
-            if st.running == 0 && st.ready.is_empty() {
+            if d.evicted {
+                bail!("wait({id}): block was reclaimed (all handles released); pin it to keep it resident");
+            }
+            // Deadlock guard: nothing running, nothing queued, value absent.
+            if st.running == 0 && st.queued == 0 {
                 bail!("wait({id}) would deadlock: no runnable producer");
             }
             st = self.inner.cv.wait(st).unwrap();
         }
     }
 
-    pub fn barrier(&self) -> Result<()> {
+    fn barrier(&self) -> Result<()> {
         let mut st = self.inner.state.lock().unwrap();
         loop {
             if let Some(err) = &st.error {
                 bail!("runtime poisoned by task failure: {err}");
             }
-            if st.running == 0 && st.ready.is_empty() {
+            if st.running == 0 && st.queued == 0 {
                 // All pending tasks must be blocked forever (impossible in a
                 // DAG unless the graph is malformed) — assert clean finish.
                 let stuck = st
@@ -135,8 +228,29 @@ impl LocalExecutor {
         }
     }
 
-    pub fn metrics(&self) -> Metrics {
+    fn metrics(&self) -> Metrics {
         self.inner.state.lock().unwrap().metrics.clone()
+    }
+
+    fn retain(&self, ids: &[DataId]) {
+        let mut st = self.inner.state.lock().unwrap();
+        for &id in ids {
+            st.graph.retain(id);
+        }
+    }
+
+    fn release(&self, ids: &[DataId]) {
+        let mut st = self.inner.state.lock().unwrap();
+        for &id in ids {
+            if let Some(bytes) = st.graph.release(id) {
+                st.metrics.record_evicted(bytes);
+            }
+        }
+    }
+
+    fn pin(&self, id: DataId) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.graph.data[id as usize].pinned = true;
     }
 }
 
@@ -153,26 +267,89 @@ impl Drop for LocalExecutor {
     }
 }
 
-fn worker_loop(inner: Arc<Inner>) {
+/// Grab work: own deque front first, then steal from the victim with the
+/// largest queued cost (back of its deque), then a full fallback scan.
+fn pop_task(inner: &Inner, me: usize) -> Option<TaskId> {
+    {
+        let mut q = inner.queues[me].lock().unwrap();
+        if let Some((tid, s)) = q.dq.pop_front() {
+            q.cost -= s;
+            return Some(tid);
+        }
+        q.cost = 0.0; // reset float drift whenever provably empty
+    }
+    let n = inner.queues.len();
+    let mut best: Option<(usize, f64)> = None;
+    for v in 0..n {
+        if v == me {
+            continue;
+        }
+        // try_lock: victim selection must never wait behind a busy peer.
+        if let Ok(q) = inner.queues[v].try_lock() {
+            if !q.dq.is_empty() && best.map_or(true, |(_, c)| q.cost > c) {
+                best = Some((v, q.cost));
+            }
+        }
+    }
+    if let Some((v, _)) = best {
+        let mut q = inner.queues[v].lock().unwrap();
+        if let Some((tid, s)) = q.dq.pop_back() {
+            q.cost -= s;
+            return Some(tid);
+        }
+    }
+    for v in 0..n {
+        if v == me {
+            continue;
+        }
+        let mut q = inner.queues[v].lock().unwrap();
+        if let Some((tid, s)) = q.dq.pop_back() {
+            q.cost -= s;
+            return Some(tid);
+        }
+    }
+    None
+}
+
+fn worker_loop(inner: Arc<Inner>, me: usize) {
     loop {
-        // Claim a ready task.
-        let (tid, func, inputs) = {
+        // ---- Acquire a ready task (deque fast path, then park) ----
+        let tid = match pop_task(&inner, me) {
+            Some(t) => t,
+            None => {
+                let mut st = inner.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if st.queued > 0 {
+                        break; // work appeared somewhere: rescan the deques
+                    }
+                    // Timeout is a belt-and-braces rescan, not a correctness
+                    // requirement: pushes update `queued` under this mutex.
+                    let (g, _) = inner
+                        .cv
+                        .wait_timeout(st, Duration::from_millis(10))
+                        .unwrap();
+                    st = g;
+                }
+                continue;
+            }
+        };
+
+        // ---- Claim: transition to Running and resolve inputs ----
+        let claimed = {
             let mut st = inner.state.lock().unwrap();
-            let tid = loop {
-                if st.shutdown {
-                    return;
-                }
-                if let Some(t) = st.ready.pop_front() {
-                    break t;
-                }
-                st = inner.cv.wait(st).unwrap();
-            };
+            st.queued = st.queued.saturating_sub(1);
             st.graph.tasks[tid as usize].state = TaskState::Running;
             st.running += 1;
             let node = &st.graph.tasks[tid as usize];
             let func = Arc::clone(&node.spec.func);
-            // Readiness guarantees every input value is resolved.
-            let inputs: Vec<Arc<Block>> = node
+            // Readiness guarantees every input is resolved; a hole here
+            // (e.g. a reclaimed input resubmitted by a stale handle) is a
+            // real error and must poison the runtime, not silently run the
+            // task with empty inputs.
+            let inputs: Result<Vec<Arc<Block>>> = node
                 .spec
                 .reads
                 .iter()
@@ -183,37 +360,64 @@ fn worker_loop(inner: Arc<Inner>) {
                         .map(Arc::clone)
                         .ok_or_else(|| anyhow!("input {r} unresolved for ready task"))
                 })
-                .collect::<Result<_>>()
-                .unwrap_or_default();
-            (tid, func, inputs)
-        };
-
-        // Run outside the lock.
-        let result = func(&inputs);
-
-        let mut st = inner.state.lock().unwrap();
-        st.running -= 1;
-        match result {
-            Ok(outs) => {
-                let expected = st.graph.tasks[tid as usize].spec.arity_out();
-                if outs.len() != expected {
+                .collect();
+            match inputs {
+                Ok(ins) => Ok((func, ins)),
+                Err(e) => {
                     let name = st.graph.tasks[tid as usize].spec.name;
                     st.graph.tasks[tid as usize].state = TaskState::Failed;
-                    st.error.get_or_insert(format!(
-                        "task `{name}` returned {} outputs, declared {expected}",
-                        outs.len()
-                    ));
-                } else {
-                    let now_ready = st.graph.complete(tid, Some(outs));
-                    for t in now_ready {
-                        st.ready.push_back(t);
-                    }
+                    st.running -= 1;
+                    st.error.get_or_insert(format!("task `{name}` failed: {e}"));
+                    Err(())
                 }
             }
-            Err(e) => {
-                let name = st.graph.tasks[tid as usize].spec.name;
-                st.graph.tasks[tid as usize].state = TaskState::Failed;
-                st.error.get_or_insert(format!("task `{name}` failed: {e}"));
+        };
+        let (func, inputs) = match claimed {
+            Ok(fi) => fi,
+            Err(()) => {
+                inner.cv.notify_all();
+                continue;
+            }
+        };
+
+        // ---- Run outside the lock ----
+        let result = func(&inputs);
+        drop(inputs);
+
+        // ---- Publish: store outputs, wake dependents, reclaim inputs ----
+        {
+            let mut st = inner.state.lock().unwrap();
+            st.running -= 1;
+            match result {
+                Ok(outs) => {
+                    let expected = st.graph.tasks[tid as usize].spec.arity_out();
+                    if outs.len() != expected {
+                        let name = st.graph.tasks[tid as usize].spec.name;
+                        st.graph.tasks[tid as usize].state = TaskState::Failed;
+                        st.error.get_or_insert(format!(
+                            "task `{name}` returned {} outputs, declared {expected}",
+                            outs.len()
+                        ));
+                    } else {
+                        let done = st.graph.complete(tid, Some(outs));
+                        st.metrics.record_resident(done.stored_bytes);
+                        for bytes in done.evicted {
+                            st.metrics.record_evicted(bytes);
+                        }
+                        for (i, dep) in done.now_ready.into_iter().enumerate() {
+                            let score = st.graph.tasks[dep as usize].spec.cost_score();
+                            // First unblocked dependent stays local (its
+                            // inputs are warm here); the rest round-robin.
+                            let w = if i == 0 { me } else { inner.next_rr() };
+                            inner.push_ready(&mut st, w, dep, score);
+                        }
+                    }
+                }
+                Err(e) => {
+                    let name = st.graph.tasks[tid as usize].spec.name;
+                    st.graph.tasks[tid as usize].state = TaskState::Failed;
+                    st.error.get_or_insert(format!("task `{name}` failed: {e}"));
+                }
             }
         }
         inner.cv.notify_all();
@@ -323,5 +527,123 @@ mod tests {
         );
         let v = ex.wait(sum[0]).unwrap();
         assert_eq!(v.as_dense().unwrap().get(0, 0), (0..32).sum::<i32>() as f32);
+    }
+
+    #[test]
+    fn batch_submit_one_lock_many_tasks() {
+        let ex = LocalExecutor::new(4);
+        let src = ex.put_block(Block::Dense(DenseMatrix::full(1, 1, 0.0)));
+        let batch: Vec<TaskSubmit> = (0..128)
+            .map(|i| TaskSubmit {
+                name: "batched",
+                reads: vec![src],
+                out_metas: vec![BlockMeta::dense(1, 1)],
+                hint: CostHint::default(),
+                read_bytes: 4.0,
+                func: add_op(i as f32),
+            })
+            .collect();
+        let outs = ex.submit_batch(batch);
+        assert_eq!(outs.len(), 128);
+        ex.barrier().unwrap();
+        for (i, o) in outs.iter().enumerate() {
+            let v = ex.wait(o[0]).unwrap();
+            assert_eq!(v.as_dense().unwrap().get(0, 0), i as f32);
+        }
+        assert_eq!(ex.metrics().total_tasks(), 128);
+    }
+
+    #[test]
+    fn intra_batch_dependencies_resolve() {
+        // Task 1 of the batch reads task 0's output: ids are allocated in
+        // order, so this must wire a dependency, not race.
+        let ex = LocalExecutor::new(2);
+        let src = ex.put_block(Block::Dense(DenseMatrix::full(1, 1, 1.0)));
+        let first = TaskSubmit {
+            name: "first",
+            reads: vec![src],
+            out_metas: vec![BlockMeta::dense(1, 1)],
+            hint: CostHint::default(),
+            read_bytes: 4.0,
+            func: add_op(10.0),
+        };
+        // The output id of `first` is predictable: next data id after src+1.
+        let first_out: DataId = src + 1;
+        let second = TaskSubmit {
+            name: "second",
+            reads: vec![first_out],
+            out_metas: vec![BlockMeta::dense(1, 1)],
+            hint: CostHint::default(),
+            read_bytes: 4.0,
+            func: add_op(100.0),
+        };
+        let outs = ex.submit_batch(vec![first, second]);
+        assert_eq!(outs[0][0], first_out);
+        let v = ex.wait(outs[1][0]).unwrap();
+        assert_eq!(v.as_dense().unwrap().get(0, 0), 111.0);
+    }
+
+    #[test]
+    fn contention_stress_submitters_vs_waiters() {
+        // Many threads submitting while others barrier/wait: the scheduler
+        // must neither lose tasks nor deadlock (satellite: contention test).
+        let ex = Arc::new(LocalExecutor::new(4));
+        let src = ex.put_block(Block::Dense(DenseMatrix::full(1, 1, 0.0)));
+        let n_threads = 6;
+        let per_thread = 200;
+        let mut handles = Vec::new();
+        for t in 0..n_threads {
+            let ex = Arc::clone(&ex);
+            handles.push(std::thread::spawn(move || {
+                let mut outs = Vec::with_capacity(per_thread);
+                for i in 0..per_thread {
+                    let o = ex.submit(
+                        "stress",
+                        &[src],
+                        vec![BlockMeta::dense(1, 1)],
+                        CostHint::flops((i % 7) as f64 * 1e3),
+                        4.0,
+                        add_op((t * per_thread + i) as f32),
+                    );
+                    outs.push((o[0], (t * per_thread + i) as f32));
+                    if i % 32 == 0 {
+                        ex.barrier().unwrap();
+                    }
+                }
+                for (id, want) in outs {
+                    let v = ex.wait(id).unwrap();
+                    assert_eq!(v.as_dense().unwrap().get(0, 0), want);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        ex.barrier().unwrap();
+        assert_eq!(
+            ex.metrics().total_tasks(),
+            (n_threads * per_thread) as u64
+        );
+    }
+
+    #[test]
+    fn stealing_drains_unbalanced_queues() {
+        // One giant batch lands round-robin; with 4 workers and heavily
+        // skewed costs every task must still execute exactly once.
+        let ex = LocalExecutor::new(4);
+        let src = ex.put_block(Block::Dense(DenseMatrix::full(1, 1, 0.0)));
+        let batch: Vec<TaskSubmit> = (0..256)
+            .map(|i| TaskSubmit {
+                name: "skewed",
+                reads: vec![src],
+                out_metas: vec![BlockMeta::dense(1, 1)],
+                hint: CostHint::flops(if i % 16 == 0 { 1e9 } else { 1.0 }),
+                read_bytes: 4.0,
+                func: add_op(1.0),
+            })
+            .collect();
+        ex.submit_batch(batch);
+        ex.barrier().unwrap();
+        assert_eq!(ex.metrics().tasks_for("skewed"), 256);
     }
 }

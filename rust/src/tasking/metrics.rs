@@ -21,6 +21,14 @@ pub struct Metrics {
     pub read_bytes: f64,
     /// Total declared output bytes.
     pub write_bytes: f64,
+    /// Bytes of block values currently resident in the executor's data
+    /// table (local mode; sim mode never materializes values).
+    pub resident_bytes: u64,
+    /// High-water mark of `resident_bytes` — the memory ceiling a pipeline
+    /// actually needed, the headline number of refcount reclamation.
+    pub peak_resident_bytes: u64,
+    /// Blocks reclaimed by refcount eviction (fully consumed, unpinned).
+    pub blocks_evicted: u64,
 }
 
 impl Metrics {
@@ -37,6 +45,20 @@ impl Metrics {
         self.write_edges += writes as u64;
         self.read_bytes += read_bytes;
         self.write_bytes += write_bytes;
+    }
+
+    /// A block value became resident (put_block or task output stored).
+    pub fn record_resident(&mut self, bytes: usize) {
+        self.resident_bytes += bytes as u64;
+        if self.resident_bytes > self.peak_resident_bytes {
+            self.peak_resident_bytes = self.resident_bytes;
+        }
+    }
+
+    /// A block value was reclaimed by refcount eviction.
+    pub fn record_evicted(&mut self, bytes: usize) {
+        self.resident_bytes = self.resident_bytes.saturating_sub(bytes as u64);
+        self.blocks_evicted += 1;
     }
 
     pub fn total_tasks(&self) -> u64 {
@@ -62,6 +84,8 @@ impl Metrics {
     }
 
     /// Difference vs an earlier snapshot (for measuring one operation).
+    /// `resident_bytes`/`peak_resident_bytes` are point-in-time values and
+    /// are carried over unchanged; `blocks_evicted` is differenced.
     pub fn since(&self, earlier: &Metrics) -> Metrics {
         let mut out = self.clone();
         for (k, v) in &earlier.tasks_by_op {
@@ -74,6 +98,7 @@ impl Metrics {
         out.write_edges -= earlier.write_edges;
         out.read_bytes -= earlier.read_bytes;
         out.write_bytes -= earlier.write_bytes;
+        out.blocks_evicted -= earlier.blocks_evicted;
         out
     }
 }
@@ -108,5 +133,20 @@ mod tests {
         assert_eq!(d.tasks_for("a"), 1);
         assert_eq!(d.tasks_for("b"), 1);
         assert_eq!(d.read_edges, 3);
+    }
+
+    #[test]
+    fn residency_tracking_peaks_and_evicts() {
+        let mut m = Metrics::default();
+        m.record_resident(100);
+        m.record_resident(50);
+        assert_eq!(m.resident_bytes, 150);
+        assert_eq!(m.peak_resident_bytes, 150);
+        m.record_evicted(100);
+        assert_eq!(m.resident_bytes, 50);
+        assert_eq!(m.peak_resident_bytes, 150, "peak is a high-water mark");
+        assert_eq!(m.blocks_evicted, 1);
+        m.record_resident(20);
+        assert_eq!(m.peak_resident_bytes, 150);
     }
 }

@@ -3,23 +3,37 @@
 //! The paper's performance claims are claims about *task graphs*: how many
 //! tasks an operation emits, how wide they are, and how a master–worker
 //! runtime with a per-task scheduling cost executes them. This module
-//! reproduces that programming model:
+//! reproduces that programming model behind a pluggable [`Executor`] trait:
 //!
 //! * applications (the ds-array layer, the Dataset baseline, estimators)
 //!   **submit tasks** with declared reads/writes; the master infers the
 //!   dependency graph and runs dependency-free tasks on workers
-//!   (paper §3.1.2);
+//!   (paper §3.1.2). [`Runtime::submit_batch`] inserts a whole slice of
+//!   tasks under ONE scheduler-lock acquisition, so an N×M transpose or
+//!   matmul costs one master round-trip per *operation* instead of one per
+//!   *task* — the same amortization the paper credits to collection
+//!   parameters (§4.2.1, §5.2);
 //! * data lives behind **future handles** ([`DataId`]); handles are
 //!   single-assignment (PyCOMPSs' data renaming, i.e. SSA), so the writer of
 //!   an id is unique and dependencies are exactly reader-after-writer;
 //! * **collection parameters** are plain multi-id reads/writes — a task may
-//!   read or write arbitrarily many blocks, which is the PyCOMPSs
-//!   `COLLECTION_IN`/`COLLECTION_OUT` feature ds-arrays exploit (paper
-//!   §4.2.1); the Dataset baseline predates it and uses bounded-arity tasks;
-//! * two executors share the submission API: [`Runtime::local`] (a real
-//!   thread-pool master–worker) and [`Runtime::sim`] (a discrete-event
-//!   simulator that executes the *same* graphs under a calibrated cluster
-//!   cost model at MareNostrum scale — DESIGN.md §2).
+//!   read or write arbitrarily many blocks (the PyCOMPSs
+//!   `COLLECTION_IN`/`COLLECTION_OUT` feature ds-arrays exploit, §4.2.1);
+//! * **block reclamation is refcounted**: the graph counts outstanding task
+//!   reads and application handle references per data id (`DsArray` owns
+//!   its blocks' handles — construction/`clone` retain, `Drop` releases).
+//!   A fully-consumed, unpinned block is evicted from the data table, so a
+//!   multi-step pipeline's resident memory is bounded by its live frontier
+//!   instead of growing with the whole graph. [`Metrics`] tracks
+//!   `peak_resident_bytes` and `blocks_evicted`; [`Runtime::pin`] opts a
+//!   block out.
+//!
+//! Two [`Executor`] backends share the submission API:
+//! [`Runtime::local`] — a real thread-pool master–worker with per-worker
+//! deques and cost-aware work stealing (see [`local`]) — and
+//! [`Runtime::sim`] — a discrete-event simulator that executes the *same*
+//! graphs under a calibrated cluster cost model at MareNostrum scale
+//! (DESIGN.md §2). [`Runtime::from_executor`] accepts any custom backend.
 
 pub mod graph;
 pub mod local;
@@ -35,34 +49,107 @@ use anyhow::{bail, Result};
 use crate::storage::{Block, BlockMeta};
 pub use metrics::Metrics;
 pub use sim::{SimConfig, SimReport};
-pub use task::{CostHint, DataId, TaskFn, TaskId, TaskSpec};
+pub use task::{CostHint, DataId, TaskFn, TaskId, TaskSpec, TaskSubmit};
 
 /// Handle to a submitted-but-possibly-unfinished block — the PyCOMPSs
 /// "future object" (paper §3.1.2). Metadata is always known; the value
 /// requires synchronization (and is unavailable in sim mode).
+///
+/// Futures are plain `Copy` handles and do not own the block: ownership is
+/// tracked per-container (a `DsArray` retains its blocks on construction
+/// and releases them on drop). A bare future that never enters a container
+/// keeps its block resident forever — the safe default.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Future {
     pub id: DataId,
     pub meta: BlockMeta,
 }
 
-enum Exec {
-    Local(local::LocalExecutor),
-    Sim(sim::SimExecutor),
+/// Pluggable execution backend behind [`Runtime`]. Implementations must be
+/// thread-safe: submissions, waits and barriers arrive concurrently.
+pub trait Executor: Send + Sync {
+    /// Number of workers (threads or simulated cores).
+    fn workers(&self) -> usize;
+
+    /// Whether this backend only records graphs for simulation.
+    fn is_sim(&self) -> bool {
+        false
+    }
+
+    /// Register an already-materialized block (no task executes for it).
+    fn put_block(&self, block: Block) -> DataId;
+
+    /// Insert a slice of tasks under one scheduler-lock acquisition.
+    /// Returns the output ids of each task, in submission order. Tasks may
+    /// read outputs of earlier tasks in the same batch.
+    fn submit_batch(&self, tasks: Vec<TaskSubmit>) -> Vec<Vec<DataId>>;
+
+    /// Synchronize one id and return its block — `compss_wait_on`.
+    fn wait(&self, id: DataId) -> Result<Arc<Block>>;
+
+    /// Wait until every submitted task has finished.
+    fn barrier(&self) -> Result<()>;
+
+    /// Task-count, traffic and residency metrics accumulated so far.
+    fn metrics(&self) -> Metrics;
+
+    /// Add an application handle reference to each id.
+    fn retain(&self, ids: &[DataId]);
+
+    /// Drop an application handle reference from each id; fully-consumed,
+    /// unpinned blocks are reclaimed.
+    fn release(&self, ids: &[DataId]);
+
+    /// Exempt an id from reclamation permanently.
+    fn pin(&self, id: DataId);
+
+    /// Replay the recorded graph through the cluster model (sim backends).
+    fn run_sim(&self, _traced: bool) -> Result<SimReport> {
+        bail!("run_sim on a non-simulated runtime")
+    }
+}
+
+/// One task of a [`Runtime::submit_batch`] call, with reads still expressed
+/// as [`Future`] handles (the runtime lowers them to ids and computes the
+/// declared input bytes).
+pub struct BatchTask {
+    pub name: &'static str,
+    pub reads: Vec<Future>,
+    pub out_metas: Vec<BlockMeta>,
+    pub hint: CostHint,
+    pub func: TaskFn,
+}
+
+impl BatchTask {
+    pub fn new(
+        name: &'static str,
+        reads: Vec<Future>,
+        out_metas: Vec<BlockMeta>,
+        hint: CostHint,
+        func: TaskFn,
+    ) -> Self {
+        Self {
+            name,
+            reads,
+            out_metas,
+            hint,
+            func,
+        }
+    }
 }
 
 /// The runtime handle shared by every distributed structure. Cheap to clone.
 #[derive(Clone)]
 pub struct Runtime {
-    exec: Arc<Exec>,
+    exec: Arc<dyn Executor>,
 }
 
 impl Runtime {
     /// Real executor: `workers` OS threads execute tasks as they become
-    /// dependency-free.
+    /// dependency-free (per-worker deques, cost-aware stealing).
     pub fn local(workers: usize) -> Self {
         Self {
-            exec: Arc::new(Exec::Local(local::LocalExecutor::new(workers.max(1)))),
+            exec: Arc::new(local::LocalExecutor::new(workers.max(1))),
         }
     }
 
@@ -71,37 +158,40 @@ impl Runtime {
     /// cluster model.
     pub fn sim(cfg: SimConfig) -> Self {
         Self {
-            exec: Arc::new(Exec::Sim(sim::SimExecutor::new(cfg))),
+            exec: Arc::new(sim::SimExecutor::new(cfg)),
         }
     }
 
+    /// Wrap a custom [`Executor`] backend.
+    pub fn from_executor(exec: Arc<dyn Executor>) -> Self {
+        Self { exec }
+    }
+
     pub fn is_sim(&self) -> bool {
-        matches!(*self.exec, Exec::Sim(_))
+        self.exec.is_sim()
     }
 
     /// Number of workers (threads or simulated cores).
     pub fn workers(&self) -> usize {
-        match &*self.exec {
-            Exec::Local(l) => l.workers(),
-            Exec::Sim(s) => s.workers(),
-        }
+        self.exec.workers()
     }
 
     /// Register an already-materialized block (no task executes for it).
     pub fn put_block(&self, block: Block) -> Future {
         let meta = block.meta();
-        let id = match &*self.exec {
-            Exec::Local(l) => l.put_block(block),
-            Exec::Sim(s) => s.put_block(block.meta()),
-        };
+        let id = self.exec.put_block(block);
         Future { id, meta }
     }
 
-    /// Submit a task. `reads` are the input futures (collection reads are
+    /// Submit one task. `reads` are the input futures (collection reads are
     /// just long lists), `out_metas` declare the output shapes (shape
     /// inference is the submitter's job, mirroring the type/direction
     /// declarations of the `@task` decorator), `hint` feeds the simulator's
-    /// cost model and `f` is the actual computation over resolved blocks.
+    /// cost model and the local scheduler's steal heuristic, and `f` is the
+    /// actual computation over resolved blocks.
+    ///
+    /// Hot paths that emit many tasks should use [`Runtime::submit_batch`]:
+    /// it pays the scheduler lock once per batch instead of once per task.
     pub fn submit(
         &self,
         name: &'static str,
@@ -110,61 +200,93 @@ impl Runtime {
         hint: CostHint,
         f: TaskFn,
     ) -> Vec<Future> {
-        let read_ids: Vec<DataId> = reads.iter().map(|r| r.id).collect();
-        let read_bytes: f64 = reads.iter().map(|r| r.meta.bytes() as f64).sum();
-        let metas = out_metas.clone();
-        let ids = match &*self.exec {
-            Exec::Local(l) => l.submit(name, &read_ids, out_metas, hint, read_bytes, f),
-            Exec::Sim(s) => s.submit(name, &read_ids, out_metas, hint, read_bytes, f),
-        };
+        self.submit_batch(vec![BatchTask::new(name, reads.to_vec(), out_metas, hint, f)])
+            .pop()
+            .expect("submit_batch returns one entry per task")
+    }
+
+    /// Submit a whole batch of tasks under one scheduler-lock acquisition.
+    /// Returns each task's output futures in submission order. Graph
+    /// construction is identical to equivalent serial [`Runtime::submit`]
+    /// calls (ids are allocated in order), so batching is purely a
+    /// throughput optimization.
+    pub fn submit_batch(&self, batch: Vec<BatchTask>) -> Vec<Vec<Future>> {
+        let mut metas: Vec<Vec<BlockMeta>> = Vec::with_capacity(batch.len());
+        let mut subs: Vec<TaskSubmit> = Vec::with_capacity(batch.len());
+        for t in batch {
+            let read_ids: Vec<DataId> = t.reads.iter().map(|r| r.id).collect();
+            let read_bytes: f64 = t.reads.iter().map(|r| r.meta.bytes() as f64).sum();
+            metas.push(t.out_metas.clone());
+            subs.push(TaskSubmit {
+                name: t.name,
+                reads: read_ids,
+                out_metas: t.out_metas,
+                hint: t.hint,
+                read_bytes,
+                func: t.func,
+            });
+        }
+        let ids = self.exec.submit_batch(subs);
         ids.into_iter()
             .zip(metas)
-            .map(|(id, meta)| Future { id, meta })
+            .map(|(ids, metas)| {
+                ids.into_iter()
+                    .zip(metas)
+                    .map(|(id, meta)| Future { id, meta })
+                    .collect()
+            })
             .collect()
     }
 
     /// Synchronize one future and return its block — `compss_wait_on`.
-    /// Errors in sim mode (simulated data has no values).
+    /// Errors in sim mode (simulated data has no values) and on blocks
+    /// already reclaimed by refcount eviction.
     pub fn wait(&self, fut: Future) -> Result<Arc<Block>> {
-        match &*self.exec {
-            Exec::Local(l) => l.wait(fut.id),
-            Exec::Sim(_) => bail!("cannot synchronize data in simulation mode"),
-        }
+        self.exec.wait(fut.id)
     }
 
     /// Wait until every submitted task has finished (local mode) — the
     /// explicit synchronization point of the programming model.
     pub fn barrier(&self) -> Result<()> {
-        match &*self.exec {
-            Exec::Local(l) => l.barrier(),
-            Exec::Sim(_) => Ok(()), // graph replay happens in run_sim
-        }
+        self.exec.barrier()
     }
 
     /// Run the discrete-event simulation over all recorded tasks and return
     /// the report. Errors in local mode.
     pub fn run_sim(&self) -> Result<SimReport> {
-        match &*self.exec {
-            Exec::Local(_) => bail!("run_sim on a local (non-simulated) runtime"),
-            Exec::Sim(s) => s.run(),
-        }
+        self.exec.run_sim(false)
     }
 
     /// As [`Runtime::run_sim`], recording the per-task schedule for trace
     /// export (`SimReport::write_trace_csv`).
     pub fn run_sim_traced(&self) -> Result<SimReport> {
-        match &*self.exec {
-            Exec::Local(_) => bail!("run_sim on a local (non-simulated) runtime"),
-            Exec::Sim(s) => s.run_traced(),
-        }
+        self.exec.run_sim(true)
     }
 
-    /// Task-count and traffic metrics accumulated so far.
+    /// Task-count, traffic and residency metrics accumulated so far.
     pub fn metrics(&self) -> Metrics {
-        match &*self.exec {
-            Exec::Local(l) => l.metrics(),
-            Exec::Sim(s) => s.metrics(),
-        }
+        self.exec.metrics()
+    }
+
+    /// Add an application handle reference to each future's block.
+    /// Containers that own blocks (e.g. `DsArray`) call this on
+    /// construction and clone; see the module docs on reclamation.
+    pub fn retain(&self, futs: &[Future]) {
+        let ids: Vec<DataId> = futs.iter().map(|f| f.id).collect();
+        self.exec.retain(&ids);
+    }
+
+    /// Drop an application handle reference from each future's block;
+    /// fully-consumed, unpinned blocks are evicted from the data table.
+    pub fn release(&self, futs: &[Future]) {
+        let ids: Vec<DataId> = futs.iter().map(|f| f.id).collect();
+        self.exec.release(&ids);
+    }
+
+    /// Exempt a block from refcount reclamation (e.g. source data that will
+    /// be re-read by ad-hoc futures outside any container).
+    pub fn pin(&self, fut: Future) {
+        self.exec.pin(fut.id);
     }
 }
 
@@ -221,5 +343,131 @@ mod tests {
         let report = rt.run_sim().unwrap();
         assert_eq!(report.tasks_executed, 1);
         assert!(report.makespan_s > 0.0);
+    }
+
+    fn scale_op(s: f32) -> TaskFn {
+        Arc::new(move |ins: &[Arc<Block>]| {
+            let m = ins[0].as_dense()?;
+            Ok(vec![Block::Dense(m.map(|x| x * s))])
+        })
+    }
+
+    /// Determinism: `submit_batch` must build a graph identical to the one
+    /// equivalent serial `submit` calls build — same ids, same metrics,
+    /// same values (satellite: determinism test).
+    #[test]
+    fn batch_and_serial_build_identical_graphs() {
+        let build_serial = |rt: &Runtime| -> Vec<Future> {
+            let src = rt.put_block(dense(vec![1.0, 2.0, 3.0, 4.0], 2, 2));
+            let mut outs = Vec::new();
+            for i in 0..16 {
+                let o = rt.submit(
+                    "scale",
+                    &[src],
+                    vec![BlockMeta::dense(2, 2)],
+                    CostHint::flops(i as f64),
+                    scale_op(i as f32),
+                );
+                outs.push(o[0]);
+            }
+            let fin = rt.submit(
+                "merge",
+                &outs,
+                vec![BlockMeta::dense(2, 2)],
+                CostHint::default(),
+                Arc::new(|ins: &[Arc<Block>]| {
+                    let mut acc = DenseMatrix::zeros(2, 2);
+                    for b in ins {
+                        acc.axpy(1.0, b.as_dense()?)?;
+                    }
+                    Ok(vec![Block::Dense(acc)])
+                }),
+            );
+            outs.push(fin[0]);
+            outs
+        };
+        let build_batched = |rt: &Runtime| -> Vec<Future> {
+            let src = rt.put_block(dense(vec![1.0, 2.0, 3.0, 4.0], 2, 2));
+            let batch: Vec<BatchTask> = (0..16)
+                .map(|i| {
+                    BatchTask::new(
+                        "scale",
+                        vec![src],
+                        vec![BlockMeta::dense(2, 2)],
+                        CostHint::flops(i as f64),
+                        scale_op(i as f32),
+                    )
+                })
+                .collect();
+            let mut outs: Vec<Future> = rt
+                .submit_batch(batch)
+                .into_iter()
+                .map(|v| v[0])
+                .collect();
+            let fin = rt.submit(
+                "merge",
+                &outs,
+                vec![BlockMeta::dense(2, 2)],
+                CostHint::default(),
+                Arc::new(|ins: &[Arc<Block>]| {
+                    let mut acc = DenseMatrix::zeros(2, 2);
+                    for b in ins {
+                        acc.axpy(1.0, b.as_dense()?)?;
+                    }
+                    Ok(vec![Block::Dense(acc)])
+                }),
+            );
+            outs.push(fin[0]);
+            outs
+        };
+
+        let rt_s = Runtime::local(2);
+        let outs_s = build_serial(&rt_s);
+        let rt_b = Runtime::local(2);
+        let outs_b = build_batched(&rt_b);
+
+        // Identical id/meta assignment...
+        assert_eq!(outs_s, outs_b);
+        // ...identical graph metrics...
+        let (ms, mb) = (rt_s.metrics(), rt_b.metrics());
+        assert_eq!(ms.tasks_by_op, mb.tasks_by_op);
+        assert_eq!(ms.read_edges, mb.read_edges);
+        assert_eq!(ms.write_edges, mb.write_edges);
+        assert_eq!(ms.read_bytes, mb.read_bytes);
+        // ...identical results.
+        let vs = rt_s.wait(*outs_s.last().unwrap()).unwrap();
+        let vb = rt_b.wait(*outs_b.last().unwrap()).unwrap();
+        assert_eq!(vs.as_dense().unwrap(), vb.as_dense().unwrap());
+    }
+
+    /// Refcount reclamation end-to-end at the Runtime level: retained +
+    /// released + consumed => evicted; pinned => kept.
+    #[test]
+    fn release_reclaims_consumed_blocks_pin_exempts() {
+        let rt = Runtime::local(2);
+        let a = rt.put_block(dense(vec![1.0; 4], 2, 2));
+        let b = rt.put_block(dense(vec![2.0; 4], 2, 2));
+        rt.retain(&[a, b]);
+        rt.pin(b);
+        let out = rt.submit(
+            "consume",
+            &[a, b],
+            vec![BlockMeta::dense(2, 2)],
+            CostHint::default(),
+            Arc::new(|ins: &[Arc<Block>]| {
+                let mut acc = ins[0].as_dense()?.clone();
+                acc.axpy(1.0, ins[1].as_dense()?)?;
+                Ok(vec![Block::Dense(acc)])
+            }),
+        );
+        rt.barrier().unwrap();
+        rt.release(&[a, b]);
+        // `a` is fully consumed and unpinned: reclaimed. `b` is pinned.
+        assert!(rt.wait(a).is_err());
+        assert!(rt.wait(b).is_ok());
+        let m = rt.metrics();
+        assert_eq!(m.blocks_evicted, 1);
+        assert!(m.peak_resident_bytes >= 3 * 16);
+        assert_eq!(rt.wait(out[0]).unwrap().as_dense().unwrap().get(0, 0), 3.0);
     }
 }

@@ -25,15 +25,16 @@
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::storage::BlockMeta;
+use crate::storage::{Block, BlockMeta};
 
 use super::graph::{Graph, TaskState};
 use super::metrics::Metrics;
-use super::task::{CostHint, DataId, TaskFn, TaskId};
+use super::task::{CostHint, DataId, TaskFn, TaskId, TaskSubmit};
+use super::Executor;
 
 /// Cluster cost model + core count. All times in seconds, rates in per-sec.
 #[derive(Clone, Debug)]
@@ -192,15 +193,14 @@ impl SimExecutor {
         }
     }
 
-    pub fn workers(&self) -> usize {
-        self.cfg.workers
-    }
-
-    pub fn put_block(&self, meta: BlockMeta) -> DataId {
+    /// Register a metadata-only block (phantom data).
+    pub fn put_meta(&self, meta: BlockMeta) -> DataId {
         let mut st = self.state.lock().unwrap();
         st.graph.put_block(meta, None)
     }
 
+    /// Single-task convenience wrapper used by unit tests; the library goes
+    /// through [`Executor::submit_batch`].
     pub fn submit(
         &self,
         name: &'static str,
@@ -210,20 +210,16 @@ impl SimExecutor {
         read_bytes: f64,
         f: TaskFn,
     ) -> Vec<DataId> {
-        let mut st = self.state.lock().unwrap();
-        let n_out = out_metas.len();
-        let write_bytes: f64 = out_metas.iter().map(|m| m.bytes() as f64).sum();
-        let (tid, outs, ready) = st.graph.submit(name, reads, out_metas, hint, read_bytes, f);
-        st.metrics
-            .record_submit(name, reads.len(), n_out, read_bytes, write_bytes);
-        if ready {
-            st.initially_ready.push(tid);
-        }
-        outs
-    }
-
-    pub fn metrics(&self) -> Metrics {
-        self.state.lock().unwrap().metrics.clone()
+        self.submit_batch(vec![TaskSubmit {
+            name,
+            reads: reads.to_vec(),
+            out_metas,
+            hint,
+            read_bytes,
+            func: f,
+        }])
+        .pop()
+        .expect("one entry per task")
     }
 
     /// Replay every recorded task through the cluster model.
@@ -235,7 +231,59 @@ impl SimExecutor {
     pub fn run_traced(&self) -> Result<SimReport> {
         self.run_inner(true)
     }
+}
 
+impl Executor for SimExecutor {
+    fn workers(&self) -> usize {
+        self.cfg.workers
+    }
+
+    fn is_sim(&self) -> bool {
+        true
+    }
+
+    fn put_block(&self, block: Block) -> DataId {
+        // Only metadata is recorded: phantom and real blocks alike.
+        self.put_meta(block.meta())
+    }
+
+    fn submit_batch(&self, tasks: Vec<TaskSubmit>) -> Vec<Vec<DataId>> {
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let mut outs_all = Vec::with_capacity(tasks.len());
+        for t in tasks {
+            let (tid, outs, ready) = st.graph.submit_record(t, &mut st.metrics);
+            if ready {
+                st.initially_ready.push(tid);
+            }
+            outs_all.push(outs);
+        }
+        outs_all
+    }
+
+    fn wait(&self, _id: DataId) -> Result<Arc<Block>> {
+        bail!("cannot synchronize data in simulation mode")
+    }
+
+    fn barrier(&self) -> Result<()> {
+        Ok(()) // graph replay happens in run_sim
+    }
+
+    fn metrics(&self) -> Metrics {
+        self.state.lock().unwrap().metrics.clone()
+    }
+
+    // Simulated data has no values: handle refcounts are irrelevant.
+    fn retain(&self, _ids: &[DataId]) {}
+    fn release(&self, _ids: &[DataId]) {}
+    fn pin(&self, _id: DataId) {}
+
+    fn run_sim(&self, traced: bool) -> Result<SimReport> {
+        self.run_inner(traced)
+    }
+}
+
+impl SimExecutor {
     fn run_inner(&self, traced: bool) -> Result<SimReport> {
         let mut st = self.state.lock().unwrap();
         let cfg = self.cfg.clone();
@@ -363,7 +411,7 @@ impl SimExecutor {
                 });
                 seq += 1;
             } else if let Some(ev) = events.pop() {
-                let now_ready = st.graph.complete(ev.tid, None);
+                let now_ready = st.graph.complete(ev.tid, None).now_ready;
                 for t in now_ready {
                     queue.push_back((ev.time, t));
                 }
@@ -413,7 +461,7 @@ mod tests {
     }
 
     fn submit_chain(ex: &SimExecutor, len: usize) -> DataId {
-        let mut cur = ex.put_block(meta());
+        let mut cur = ex.put_meta(meta());
         for _ in 0..len {
             cur = ex.submit(
                 "link",
@@ -443,7 +491,7 @@ mod tests {
     fn wide_graph_scales_with_workers_until_master_bound() {
         let mk = |workers| {
             let ex = SimExecutor::new(SimConfig::with_workers(workers));
-            let src = ex.put_block(meta());
+            let src = ex.put_meta(meta());
             for _ in 0..512 {
                 ex.submit(
                     "wide",
@@ -479,8 +527,8 @@ mod tests {
         // A task reading two blocks pre-placed on different workers must
         // pull at least one of them over the network.
         let ex = SimExecutor::new(SimConfig::with_workers(2));
-        let a = ex.put_block(BlockMeta::dense(1000, 1000)); // worker 0, 4MB
-        let b = ex.put_block(BlockMeta::dense(1000, 1000)); // worker 1, 4MB
+        let a = ex.put_meta(BlockMeta::dense(1000, 1000)); // worker 0, 4MB
+        let b = ex.put_meta(BlockMeta::dense(1000, 1000)); // worker 1, 4MB
         ex.submit("c", &[a, b], vec![meta()], CostHint::default(), 8e6, noop());
         let r = ex.run().unwrap();
         assert!(r.bytes_transferred >= 4e6, "moved {}", r.bytes_transferred);
@@ -491,7 +539,7 @@ mod tests {
         // Single block on worker 0; an idle cluster should schedule its
         // reader on worker 0 and move zero bytes.
         let ex = SimExecutor::new(SimConfig::with_workers(4));
-        let a = ex.put_block(BlockMeta::dense(1000, 1000));
+        let a = ex.put_meta(BlockMeta::dense(1000, 1000));
         ex.submit("c", &[a], vec![meta()], CostHint::default(), 4e6, noop());
         let r = ex.run().unwrap();
         assert_eq!(r.bytes_transferred, 0.0);

@@ -75,6 +75,27 @@ impl TaskSpec {
     pub fn arity_out(&self) -> usize {
         self.writes.len()
     }
+
+    /// Scalar work estimate used by the work-stealing scheduler: a victim
+    /// with a larger queued score is a better steal target. Floors at 1 so
+    /// zero-hint tasks still count as backlog.
+    pub fn cost_score(&self) -> f64 {
+        (self.hint.flops + self.hint.extra_bytes + self.read_bytes + self.write_bytes).max(1.0)
+    }
+}
+
+/// A fully-resolved submission record — the executor-facing form of one
+/// task, with reads already lowered from [`crate::tasking::Future`] handles
+/// to [`DataId`]s. Built by `Runtime::submit_batch`; a whole slice of these
+/// is inserted into the graph under a single lock acquisition.
+pub struct TaskSubmit {
+    pub name: &'static str,
+    pub reads: Vec<DataId>,
+    pub out_metas: Vec<BlockMeta>,
+    pub hint: CostHint,
+    /// Total bytes of the declared inputs (precomputed by the submitter).
+    pub read_bytes: f64,
+    pub func: TaskFn,
 }
 
 /// Per-data record in the runtime table.
@@ -84,6 +105,35 @@ pub struct DataState {
     pub value: Option<Arc<Block>>,
     /// Producing task, or `None` for blocks registered via `put_block`.
     pub producer: Option<TaskId>,
+    /// Outstanding reads by submitted-but-incomplete tasks (occurrence
+    /// count: a task reading the id twice contributes two).
+    pub pending_reads: u32,
+    /// Live application handles (`DsArray` block ownership / explicit
+    /// `Runtime::retain`).
+    pub handle_refs: u32,
+    /// Set once any handle has ever owned this id. Reclamation requires it,
+    /// so bare futures that never passed through a handle container are
+    /// kept forever — the safe (pre-refactor) default.
+    pub ever_owned: bool,
+    /// Pinned blocks are never reclaimed regardless of refcounts.
+    pub pinned: bool,
+    /// True once the value has been reclaimed by refcount eviction.
+    pub evicted: bool,
+}
+
+impl DataState {
+    pub fn new(meta: BlockMeta, value: Option<Arc<Block>>, producer: Option<TaskId>) -> Self {
+        Self {
+            meta,
+            value,
+            producer,
+            pending_reads: 0,
+            handle_refs: 0,
+            ever_owned: false,
+            pinned: false,
+            evicted: false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -112,5 +162,6 @@ mod tests {
         };
         assert_eq!(spec.arity_in(), 3);
         assert_eq!(spec.arity_out(), 1);
+        assert_eq!(spec.cost_score(), 1.0); // floored for zero-hint tasks
     }
 }
