@@ -26,11 +26,33 @@ fn main() -> Result<()> {
     let vals = expr.collect()?;
     println!("first 4  : {:?}", &vals.data()[..4]);
 
-    // -- Indexing --------------------------------------------------------
-    let rows = w.slice_rows(10, 20)?; // A[10:20]
-    let cols = w.slice_cols(350, 400)?; // A[:, 350:400] — cheap on ds-arrays!
-    println!("A[10:20] : {:?}   A[:,350:400]: {:?}", rows.shape(), cols.shape());
+    // -- Indexing: zero-copy views ---------------------------------------
+    // Block-aligned slices are pure metadata: zero tasks, blocks shared
+    // with `w` (benches/hotpath.rs measures this against forced copies —
+    // sub-microsecond view construction vs a full per-block copy pass).
+    let before = rt.metrics().total_tasks();
+    let rows = w.slice_rows(100, 500)?; // A[100:500] — aligned to 100-row blocks
+    let cols = w.slice_cols(300, 400)?; // A[:, 300:400] — cheap on ds-arrays!
+    println!(
+        "A[100:500]: {:?}   A[:,300:400]: {:?}   tasks submitted: {}",
+        rows.shape(),
+        cols.shape(),
+        rt.metrics().total_tasks() - before
+    );
+    // Unaligned slices become lazy views; downstream ops (or .force())
+    // materialize them per block only when needed.
+    let lazy = w.slice(5, 595, 3, 397)?;
+    println!("A[5:595,3:397]: is_view={} until an op forces it", lazy.is_view());
     println!("A[5,7]   : {:.4}", w.get(5, 7)?);
+    // Fancy indexing: arbitrary row lists, boolean masks, train/test split.
+    let picked = w.take_rows(&[599, 0, 7, 7])?;
+    let (train, test) = w.train_test_split(0.25, 42)?;
+    println!(
+        "take_rows : {:?}   split: train {:?} / test {:?} (all lazy views)",
+        picked.shape(),
+        train.shape(),
+        test.shape()
+    );
 
     // -- Math ------------------------------------------------------------
     let b = creation::random(&rt, (400, 300), (100, 100), 7)?;

@@ -64,6 +64,42 @@ fn main() -> Result<()> {
     })?;
     rows.push(("dsarray.sum_axis(0) 1024²".into(), t, String::new()));
 
+    // ---- View layer: aligned metadata slices vs materialized copies ----
+    // Block-aligned slicing is a pure metadata operation (zero tasks, blocks
+    // shared); unaligned slicing builds a lazy view whose force() pays one
+    // copy task per output block — the paper's §4.2.3 complexity claim.
+    let t_view = time(reps * 100, || {
+        let v = a.slice_rows(128, 896)?;
+        std::hint::black_box(v.shape());
+        Ok(())
+    })?;
+    rows.push((
+        "slice aligned 768x1024 (zero-copy view)".into(),
+        t_view,
+        format!("{:.2} µs", t_view * 1e6),
+    ));
+    let t_copy = time(reps, || {
+        let s = a.slice(100, 868, 50, 1000)?; // unaligned: lazy view
+        let c = s.force()?; // materialize: one copy task per block
+        c.runtime().barrier()
+    })?;
+    rows.push((
+        "slice unaligned 768x950 (force copy)".into(),
+        t_copy,
+        format!("{:.0}x aligned view", t_copy / t_view.max(1e-12)),
+    ));
+    let take_idx: Vec<usize> = (0..512).map(|i| (i * 37) % 1024).collect();
+    let t_take = time(reps, || {
+        let s = a.take_rows(&take_idx)?;
+        let c = s.force()?;
+        c.runtime().barrier()
+    })?;
+    rows.push((
+        "take_rows 512 of 1024² (force gather)".into(),
+        t_take,
+        format!("{:.1} MB/s", 2.0 / t_take),
+    ));
+
     // ---- Task-runtime overhead: empty tasks, one submit per task ----
     let t_serial = time(reps, || {
         let rt2 = Runtime::local(workers);

@@ -18,6 +18,12 @@ pub fn vstack(parts: &[&DsArray]) -> Result<DsArray> {
     if parts.is_empty() {
         bail!("vstack of zero arrays");
     }
+    // Materialize lazy views: stacking addresses canonical block grids.
+    if parts.iter().any(|p| p.is_view()) {
+        let forced: Vec<DsArray> = parts.iter().map(|p| p.force()).collect::<Result<_>>()?;
+        let refs: Vec<&DsArray> = forced.iter().collect();
+        return vstack(&refs);
+    }
     let first = parts[0];
     let bs = first.block_shape;
     for p in parts {
@@ -123,6 +129,11 @@ fn concat_rows_unaligned(parts: &[&DsArray], rows: usize) -> Result<DsArray> {
 pub fn hstack(parts: &[&DsArray]) -> Result<DsArray> {
     if parts.is_empty() {
         bail!("hstack of zero arrays");
+    }
+    if parts.iter().any(|p| p.is_view()) {
+        let forced: Vec<DsArray> = parts.iter().map(|p| p.force()).collect::<Result<_>>()?;
+        let refs: Vec<&DsArray> = forced.iter().collect();
+        return hstack(&refs);
     }
     let first = parts[0];
     let bs = first.block_shape;

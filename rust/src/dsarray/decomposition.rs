@@ -23,6 +23,9 @@ impl DsArray {
     /// same blocking and `R` an n×n future (synchronize with
     /// `runtime().wait`).
     pub fn tsqr(&self) -> Result<(DsArray, Future)> {
+        if self.view.is_some() {
+            return self.force()?.tsqr();
+        }
         if self.grid.1 != 1 {
             bail!(
                 "tsqr needs a single block column, got {} (rechunk to (bs, {}))",

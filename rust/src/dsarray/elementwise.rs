@@ -13,7 +13,11 @@ use super::DsArray;
 impl DsArray {
     /// Generic unary elementwise map (one task per block, submitted as one
     /// batch — a single scheduler-lock round-trip for the whole grid).
+    /// Lazy views are forced first (`dsarray::view`).
     fn map_blocks(&self, name: &'static str, f: impl Fn(f32) -> f32 + Send + Sync + Clone + 'static) -> Result<DsArray> {
+        if self.view.is_some() {
+            return self.force()?.map_blocks(name, f);
+        }
         let mut batch = Vec::with_capacity(self.blocks.len());
         for i in 0..self.grid.0 {
             for j in 0..self.grid.1 {
@@ -44,6 +48,9 @@ impl DsArray {
                 self.block_shape,
                 other.block_shape
             );
+        }
+        if self.view.is_some() || other.view.is_some() {
+            return self.force()?.zip_blocks(&other.force()?, name, f);
         }
         let mut batch = Vec::with_capacity(self.blocks.len());
         for i in 0..self.grid.0 {
@@ -114,6 +121,9 @@ impl DsArray {
         &self,
         f: impl Fn(&[f32]) -> f32 + Send + Sync + Clone + 'static,
     ) -> Result<DsArray> {
+        if self.view.is_some() {
+            return self.force()?.apply_along_rows(f);
+        }
         let mut batch = Vec::with_capacity(self.grid.0);
         for i in 0..self.grid.0 {
             let reads = self.block_row(i);
@@ -174,6 +184,9 @@ impl DsArray {
         }
         if row.block_shape.1 != self.block_shape.1 {
             bail!("broadcast row block width mismatch");
+        }
+        if self.view.is_some() || row.view.is_some() {
+            return self.force()?.row_broadcast(&row.force()?, name, f);
         }
         let mut batch = Vec::with_capacity(self.blocks.len());
         for i in 0..self.grid.0 {

@@ -1,202 +1,205 @@
 //! Indexing (paper §4.2.3): `A[10:100]`-style row slices, 2-D region
-//! slices, single-element access, and row selection by index list — the
-//! "filtering" operation that was slow on Datasets.
+//! slices, single-element access, and fancy indexing — the "filtering"
+//! operations that were slow on Datasets.
+//!
+//! Everything here is **zero-copy at call time** (the view layer): slices
+//! and index selections return lazy views sharing the parent's block
+//! futures, submitting no runtime tasks. Block-aligned slices are returned
+//! directly as canonical arrays and never pay a copy; other views
+//! materialize through [`DsArray::force`] when an operation needs
+//! canonical blocks.
 
 use anyhow::{bail, Result};
 
-use crate::storage::BlockMeta;
-use crate::tasking::{ops, CostHint};
+use crate::util::rng::Xoshiro256;
 
-use super::DsArray;
+use super::{DsArray, Sel};
 
 impl DsArray {
-    /// Rows `[r0, r1)` — `A[r0:r1]`.
+    /// Rows `[r0, r1)` — `A[r0:r1]`. Zero-copy; see [`DsArray::slice`].
+    ///
+    /// ```
+    /// use rustdslib::{dsarray::creation, tasking::Runtime};
+    /// let rt = Runtime::local(2);
+    /// let a = creation::random(&rt, (8, 6), (4, 3), 0).unwrap();
+    /// let top = a.slice_rows(0, 4).unwrap(); // block-aligned: pure metadata
+    /// assert_eq!(top.shape(), (4, 6));
+    /// assert!(!top.is_view()); // canonical, shares blocks with `a`
+    /// ```
     pub fn slice_rows(&self, r0: usize, r1: usize) -> Result<DsArray> {
         self.slice(r0, r1, 0, self.shape.1)
     }
 
     /// Columns `[c0, c1)` — `A[:, c0:c1]` (efficient on ds-arrays; the whole
-    /// point of two-axis blocking).
+    /// point of two-axis blocking). Zero-copy; see [`DsArray::slice`].
     pub fn slice_cols(&self, c0: usize, c1: usize) -> Result<DsArray> {
         self.slice(0, self.shape.0, c0, c1)
     }
 
-    /// Rectangular region `[r0, r1) x [c0, c1)`. One task per overlapped
-    /// output block.
+    /// Rectangular region `[r0, r1) × [c0, c1)` as a **zero-copy view**: no
+    /// tasks are submitted, the result shares block futures with `self`
+    /// (handle references retained, so the blocks outlive the parent).
+    ///
+    /// Block-aligned regions — offsets on block boundaries, extents ending
+    /// on a block boundary or the array edge — come back canonical and are
+    /// never copied at all. Anything else is a lazy view that materializes
+    /// per-block only when [`DsArray::force`] runs (downstream operations
+    /// force implicitly). Sparse arrays stay CSR throughout.
+    ///
+    /// ```
+    /// use rustdslib::{dsarray::creation, tasking::Runtime};
+    /// let rt = Runtime::local(2);
+    /// let a = creation::random(&rt, (8, 8), (4, 4), 1).unwrap();
+    /// let aligned = a.slice(4, 8, 0, 4).unwrap();
+    /// assert!(!aligned.is_view());
+    /// let lazy = a.slice(1, 6, 2, 7).unwrap(); // crosses block boundaries
+    /// assert!(lazy.is_view());
+    /// assert_eq!(lazy.shape(), (5, 5));
+    /// assert_eq!(lazy.get(0, 0).unwrap(), a.get(1, 2).unwrap());
+    /// ```
     pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Result<DsArray> {
         if r0 >= r1 || c0 >= c1 || r1 > self.shape.0 || c1 > self.shape.1 {
             bail!(
-                "slice [{r0}:{r1}, {c0}:{c1}] invalid for shape {:?}",
+                "slice [{r0}:{r1}, {c0}:{c1}] invalid for shape {:?} \
+                 (needs r0 < r1 <= rows and c0 < c1 <= cols)",
                 self.shape
             );
         }
         let (nr, nc) = (r1 - r0, c1 - c0);
-        let (bs0, bs1) = self.block_shape;
-        let grid = (
-            DsArray::grid_dim(nr, bs0),
-            DsArray::grid_dim(nc, bs1),
-        );
-        let mut blocks = Vec::with_capacity(grid.0 * grid.1);
-        for oi in 0..grid.0 {
-            // Output block-row oi covers logical rows [or0, or0+orn).
-            let or0 = r0 + oi * bs0;
-            let orn = (r1 - or0).min(bs0);
-            for oj in 0..grid.1 {
-                let oc0 = c0 + oj * bs1;
-                let ocn = (c1 - oc0).min(bs1);
-                // Input blocks overlapping the output region.
-                let bi0 = or0 / bs0;
-                let bi1 = (or0 + orn - 1) / bs0;
-                let bj0 = oc0 / bs1;
-                let bj1 = (oc0 + ocn - 1) / bs1;
-                let out_meta = if self.sparse {
-                    self.expect_sparse_meta(orn, ocn)
-                } else {
-                    BlockMeta::dense(orn, ocn)
-                };
-                // Common fast path: the output block lives inside ONE input
-                // block — a plain slice task. Otherwise assemble from up to
-                // four neighbors with a gather task.
-                if bi0 == bi1 && bj0 == bj1 {
-                    let fut = self.block(bi0, bj0);
-                    let lr = or0 - bi0 * bs0;
-                    let lc = oc0 - bj0 * bs1;
-                    let out = self.rt.submit(
-                        "dsarray.index.slice",
-                        &[fut],
-                        vec![out_meta],
-                        CostHint::default().with_bytes(out_meta.bytes() as f64),
-                        ops::slice_op(lr, lc, orn, ocn),
-                    );
-                    blocks.push(out[0]);
-                } else {
-                    let mut futs = Vec::new();
-                    let mut coords = Vec::new();
-                    for bi in bi0..=bi1 {
-                        for bj in bj0..=bj1 {
-                            futs.push(self.block(bi, bj));
-                            coords.push((bi, bj));
-                        }
-                    }
-                    let (gbs0, gbs1) = (bs0, bs1);
-                    let (gor0, goc0) = (or0, oc0);
-                    let out = self.rt.submit(
-                        "dsarray.index.gather",
-                        &futs,
-                        vec![out_meta],
-                        CostHint::default().with_bytes(2.0 * out_meta.bytes() as f64),
-                        std::sync::Arc::new(move |ins: &[std::sync::Arc<crate::storage::Block>]| {
-                            let mut out =
-                                crate::storage::DenseMatrix::zeros(orn, ocn);
-                            for (b, &(bi, bj)) in ins.iter().zip(&coords) {
-                                let d = b.to_dense()?;
-                                // Intersection of this input block with the
-                                // output region, in local coordinates.
-                                let br0 = bi * gbs0;
-                                let bc0 = bj * gbs1;
-                                let ir0 = gor0.max(br0);
-                                let ic0 = goc0.max(bc0);
-                                let ir1 = (gor0 + orn).min(br0 + d.rows());
-                                let ic1 = (goc0 + ocn).min(bc0 + d.cols());
-                                if ir0 >= ir1 || ic0 >= ic1 {
-                                    continue;
-                                }
-                                let part =
-                                    d.slice(ir0 - br0, ic0 - bc0, ir1 - ir0, ic1 - ic0)?;
-                                out.paste(ir0 - gor0, ic0 - goc0, &part)?;
-                            }
-                            Ok(vec![crate::storage::Block::Dense(out)])
-                        }),
-                    );
-                    blocks.push(out[0]);
-                }
-            }
-        }
-        // Gather path densifies sparse inputs; keep the sparse flag only on
-        // the aligned fast path.
-        let aligned = r0 % bs0 == 0 && c0 % bs1 == 0;
-        DsArray::from_parts(
-            self.rt.clone(),
-            (nr, nc),
-            self.block_shape,
-            blocks,
-            self.sparse && aligned,
-        )
+        // Compose each axis with the existing view (slice-of-slice,
+        // slice-of-take): fancy axes restrict the index map, contiguous
+        // axes shift the offset into stored coordinates. select_stored then
+        // keeps only the touched backing blocks.
+        let base = self.view.clone().unwrap_or_default();
+        self.select_stored(base.row_sel(r0, nr), base.col_sel(c0, nc))
     }
 
-    fn expect_sparse_meta(&self, r: usize, c: usize) -> BlockMeta {
-        let total_nnz: usize = self.blocks.iter().map(|b| b.meta.nnz).sum();
-        let frac = (r * c) as f64 / (self.shape.0 * self.shape.1).max(1) as f64;
-        BlockMeta::sparse(r, c, (total_nnz as f64 * frac).round() as usize)
-    }
-
-    /// Single element — synchronizes one block.
+    /// Single element — synchronizes exactly one backing block, applying
+    /// the view mapping when `self` is a lazy view.
+    ///
+    /// ```
+    /// use rustdslib::{dsarray::creation, tasking::Runtime};
+    /// let rt = Runtime::local(1);
+    /// let a = creation::identity(&rt, 4, (2, 2)).unwrap();
+    /// assert_eq!(a.get(2, 2).unwrap(), 1.0);
+    /// assert_eq!(a.get(2, 1).unwrap(), 0.0);
+    /// assert!(a.get(4, 0).is_err());
+    /// ```
     pub fn get(&self, i: usize, j: usize) -> Result<f32> {
         if i >= self.shape.0 || j >= self.shape.1 {
-            bail!("index ({i},{j}) out of bounds for {:?}", self.shape);
+            bail!("index ({i},{j}) out of bounds for shape {:?}", self.shape);
         }
-        let (bi, bj) = (i / self.block_shape.0, j / self.block_shape.1);
+        let (sr, sc) = match &self.view {
+            None => (i, j),
+            Some(v) => (v.map_row(i), v.map_col(j)),
+        };
+        let (bi, bj) = (sr / self.block_shape.0, sc / self.block_shape.1);
         let b = self.rt.wait(self.block(bi, bj))?;
         Ok(b.to_dense()?
-            .get(i - bi * self.block_shape.0, j - bj * self.block_shape.1))
+            .get(sr - bi * self.block_shape.0, sc - bj * self.block_shape.1))
     }
 
-    /// Select arbitrary rows by index (fancy indexing). One task per output
-    /// block-row, reading every input block-row it draws from.
+    /// Select arbitrary rows by index (fancy indexing) as a **lazy view** —
+    /// zero tasks at call time; arbitrary order and duplicates are allowed.
+    /// Materialization ([`DsArray::force`]) gathers one task per output
+    /// block, keeping CSR blocks CSR.
+    ///
+    /// The index list must be non-empty: a ds-array cannot have zero rows.
+    ///
+    /// ```
+    /// use rustdslib::{dsarray::creation, storage::DenseMatrix, tasking::Runtime};
+    /// let rt = Runtime::local(2);
+    /// let m = DenseMatrix::from_fn(6, 4, |i, j| (i * 4 + j) as f32);
+    /// let a = creation::from_matrix(&rt, &m, (2, 2)).unwrap();
+    /// let picked = a.take_rows(&[5, 0, 5]).unwrap();
+    /// assert!(picked.is_view());
+    /// let got = picked.collect().unwrap();
+    /// assert_eq!(got.row(0), m.row(5));
+    /// assert_eq!(got.row(1), m.row(0));
+    /// assert_eq!(got.row(2), m.row(5));
+    /// ```
     pub fn take_rows(&self, idx: &[usize]) -> Result<DsArray> {
+        if idx.is_empty() {
+            bail!("take_rows with an empty index list (a ds-array cannot have zero rows)");
+        }
         for &i in idx {
             if i >= self.shape.0 {
                 bail!("row index {i} out of bounds for {} rows", self.shape.0);
             }
         }
+        let base = self.view.clone().unwrap_or_default();
+        let mapped: Vec<usize> = idx.iter().map(|&k| base.map_row(k)).collect();
+        self.select_stored(Sel::Idx(mapped), base.col_sel(0, self.shape.1))
+    }
+
+    /// Select arbitrary columns by index (fancy indexing) as a lazy view —
+    /// the column-wise twin of [`DsArray::take_rows`], practical on
+    /// ds-arrays because both axes are blocked.
+    pub fn take_cols(&self, idx: &[usize]) -> Result<DsArray> {
         if idx.is_empty() {
-            bail!("take_rows with empty index");
+            bail!("take_cols with an empty index list (a ds-array cannot have zero columns)");
         }
-        let bs0 = self.block_shape.0;
-        let out_grid0 = DsArray::grid_dim(idx.len(), bs0);
-        let mut blocks = Vec::new();
-        for oi in 0..out_grid0 {
-            let lo = oi * bs0;
-            let hi = ((oi + 1) * bs0).min(idx.len());
-            let rows: Vec<usize> = idx[lo..hi].to_vec();
-            // Input block-rows feeding this output block-row.
-            let mut needed: Vec<usize> = rows.iter().map(|&r| r / bs0).collect();
-            needed.sort_unstable();
-            needed.dedup();
-            for oj in 0..self.grid.1 {
-                let ocn = self.block_cols_at(oj);
-                let futs: Vec<_> = needed.iter().map(|&bi| self.block(bi, oj)).collect();
-                let needed_c = needed.clone();
-                let rows_c = rows.clone();
-                let meta = BlockMeta::dense(rows.len(), ocn);
-                let out = self.rt.submit(
-                    "dsarray.index.take_rows",
-                    &futs,
-                    vec![meta],
-                    CostHint::default().with_bytes(meta.bytes() as f64 * 2.0),
-                    std::sync::Arc::new(move |ins: &[std::sync::Arc<crate::storage::Block>]| {
-                        let mut out =
-                            crate::storage::DenseMatrix::zeros(rows_c.len(), ocn);
-                        for (k, &gr) in rows_c.iter().enumerate() {
-                            let bi = gr / bs0;
-                            let pos = needed_c.binary_search(&bi).unwrap();
-                            let d = ins[pos].to_dense()?;
-                            let local = gr - bi * bs0;
-                            out.row_mut(k).copy_from_slice(d.row(local));
-                        }
-                        Ok(vec![crate::storage::Block::Dense(out)])
-                    }),
-                );
-                blocks.push(out[0]);
+        for &j in idx {
+            if j >= self.shape.1 {
+                bail!("column index {j} out of bounds for {} columns", self.shape.1);
             }
         }
-        DsArray::from_parts(
-            self.rt.clone(),
-            (idx.len(), self.shape.1),
-            self.block_shape,
-            blocks,
-            false,
-        )
+        let base = self.view.clone().unwrap_or_default();
+        let mapped: Vec<usize> = idx.iter().map(|&k| base.map_col(k)).collect();
+        self.select_stored(base.row_sel(0, self.shape.0), Sel::Idx(mapped))
+    }
+
+    /// Boolean-mask row filtering: keep row `i` where `mask[i]` is true
+    /// (NumPy's `A[mask]`). The mask length must equal the row count and
+    /// must select at least one row. Returns a lazy view.
+    pub fn filter_rows(&self, mask: &[bool]) -> Result<DsArray> {
+        if mask.len() != self.shape.0 {
+            bail!(
+                "boolean mask length {} != {} rows",
+                mask.len(),
+                self.shape.0
+            );
+        }
+        let idx: Vec<usize> = mask
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &keep)| keep.then_some(i))
+            .collect();
+        if idx.is_empty() {
+            bail!("boolean mask selects zero rows (a ds-array cannot have zero rows)");
+        }
+        self.take_rows(&idx)
+    }
+
+    /// Split rows into disjoint shuffled (train, test) views — the
+    /// estimator-facing row partitioner. `test_fraction` is clamped so both
+    /// sides keep at least one row; the permutation is seeded and
+    /// reproducible. Both results are lazy views: no data moves until an
+    /// estimator forces them.
+    ///
+    /// ```
+    /// use rustdslib::{dsarray::creation, tasking::Runtime};
+    /// let rt = Runtime::local(2);
+    /// let a = creation::random(&rt, (10, 4), (4, 4), 3).unwrap();
+    /// let (train, test) = a.train_test_split(0.3, 42).unwrap();
+    /// assert_eq!(train.shape(), (7, 4));
+    /// assert_eq!(test.shape(), (3, 4));
+    /// ```
+    pub fn train_test_split(&self, test_fraction: f64, seed: u64) -> Result<(DsArray, DsArray)> {
+        let n = self.shape.0;
+        if n < 2 {
+            bail!("train_test_split needs at least 2 rows, got {n}");
+        }
+        if !(0.0..=1.0).contains(&test_fraction) {
+            bail!("test_fraction {test_fraction} outside [0, 1]");
+        }
+        let n_test = ((n as f64) * test_fraction).round() as usize;
+        let n_test = n_test.clamp(1, n - 1);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let perm = rng.permutation(n);
+        let test = self.take_rows(&perm[..n_test])?;
+        let train = self.take_rows(&perm[n_test..])?;
+        Ok((train, test))
     }
 }
 
@@ -216,10 +219,10 @@ mod tests {
     #[test]
     fn aligned_and_unaligned_slices_match_reference() {
         let (_rt, m, a) = setup();
-        // Aligned (single-block fast path).
+        // Aligned (canonical shared-block fast path).
         let s = a.slice(3, 6, 3, 6).unwrap();
         assert_eq!(s.collect().unwrap(), m.slice(3, 3, 3, 3).unwrap());
-        // Unaligned (gather path across block boundaries).
+        // Unaligned (lazy view across block boundaries).
         let s = a.slice(1, 8, 2, 7).unwrap();
         assert_eq!(s.collect().unwrap(), m.slice(1, 2, 7, 5).unwrap());
         // Full-width row slice.
@@ -231,11 +234,104 @@ mod tests {
     }
 
     #[test]
-    fn invalid_slices_rejected() {
+    fn aligned_slices_submit_zero_tasks() {
+        // The paper's §4.2.3 claim, measured: block-aligned slicing is pure
+        // metadata — zero tasks at slice time AND at collect time.
+        let (rt, m, a) = setup();
+        let before = rt.metrics();
+        let s = a.slice(3, 9, 3, 6).unwrap();
+        let r = a.slice_rows(6, 9).unwrap();
+        let c = a.slice_cols(0, 6).unwrap();
+        assert_eq!(rt.metrics().since(&before).total_tasks(), 0);
+        assert!(!s.is_view() && !r.is_view() && !c.is_view());
+        // Blocks are shared with the parent, not copied.
+        assert_eq!(s.block(0, 0), a.block(1, 1));
+        assert_eq!(s.collect().unwrap(), m.slice(3, 3, 6, 3).unwrap());
+        assert_eq!(r.collect().unwrap(), m.slice(6, 0, 3, 8).unwrap());
+        assert_eq!(c.collect().unwrap(), m.slice(0, 0, 9, 6).unwrap());
+        assert_eq!(rt.metrics().since(&before).total_tasks(), 0);
+    }
+
+    #[test]
+    fn unaligned_slices_are_lazy_until_forced() {
+        let (rt, m, a) = setup();
+        let before = rt.metrics();
+        let v = a.slice(1, 8, 2, 7).unwrap();
+        assert!(v.is_view());
+        // Slicing and collecting a view submit no tasks.
+        assert_eq!(v.collect().unwrap(), m.slice(1, 2, 7, 5).unwrap());
+        assert_eq!(rt.metrics().since(&before).total_tasks(), 0);
+        // Forcing materializes: one copy task per output block.
+        let f = v.force().unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.total_tasks(), f.n_blocks() as u64);
+        assert_eq!(f.grid(), (3, 2));
+        assert_eq!(f.collect().unwrap(), m.slice(1, 2, 7, 5).unwrap());
+    }
+
+    #[test]
+    fn aligned_offset_with_partial_tail_is_view_but_collects_free() {
+        // Offsets on block boundaries but the extent cuts a block mid-way:
+        // still zero tasks at slice + collect; only force() copies.
+        let (rt, m, a) = setup();
+        let before = rt.metrics();
+        let v = a.slice(0, 8, 0, 7).unwrap();
+        assert!(v.is_view());
+        assert_eq!(v.collect().unwrap(), m.slice(0, 0, 8, 7).unwrap());
+        assert_eq!(rt.metrics().since(&before).total_tasks(), 0);
+    }
+
+    #[test]
+    fn single_row_and_column_slices() {
+        let (_rt, m, a) = setup();
+        let row = a.slice(4, 5, 0, 8).unwrap();
+        assert_eq!(row.shape(), (1, 8));
+        assert_eq!(row.collect().unwrap(), m.slice(4, 0, 1, 8).unwrap());
+        let col = a.slice(0, 9, 7, 8).unwrap();
+        assert_eq!(col.shape(), (9, 1));
+        assert_eq!(col.collect().unwrap(), m.slice(0, 7, 9, 1).unwrap());
+        // Forced copies agree too.
+        assert_eq!(
+            row.force().unwrap().collect().unwrap(),
+            m.slice(4, 0, 1, 8).unwrap()
+        );
+        assert_eq!(
+            col.force().unwrap().collect().unwrap(),
+            m.slice(0, 7, 9, 1).unwrap()
+        );
+    }
+
+    #[test]
+    fn slice_of_slice_composes() {
+        let (rt, m, a) = setup();
+        let before = rt.metrics();
+        let v1 = a.slice(1, 8, 2, 8).unwrap(); // 7x6 view at (1,2)
+        let v2 = v1.slice(2, 6, 1, 5).unwrap(); // 4x4 view at (3,3) absolute
+        assert_eq!(rt.metrics().since(&before).total_tasks(), 0);
+        assert_eq!(v2.collect().unwrap(), m.slice(3, 3, 4, 4).unwrap());
+        // Slice of an aligned (canonical) slice.
+        let c1 = a.slice(3, 9, 0, 6).unwrap();
+        let c2 = c1.slice(1, 5, 2, 6).unwrap();
+        assert_eq!(c2.collect().unwrap(), m.slice(4, 2, 4, 4).unwrap());
+        // Slice of a fancy-indexed view restricts the index map.
+        let t = a.take_rows(&[8, 0, 4, 2]).unwrap();
+        let ts = t.slice(1, 3, 2, 5).unwrap();
+        let got = ts.collect().unwrap();
+        assert_eq!(got.row(0), m.slice(0, 2, 1, 3).unwrap().row(0));
+        assert_eq!(got.row(1), m.slice(4, 2, 1, 3).unwrap().row(0));
+        // And forcing the composition matches.
+        assert_eq!(ts.force().unwrap().collect().unwrap(), got);
+    }
+
+    #[test]
+    fn invalid_slices_rejected_with_context() {
         let (_rt, _m, a) = setup();
         assert!(a.slice(5, 5, 0, 1).is_err());
         assert!(a.slice(0, 10, 0, 1).is_err());
         assert!(a.slice(0, 1, 7, 9).is_err());
+        let msg = a.slice(0, 10, 0, 1).unwrap_err().to_string();
+        assert!(msg.contains("[0:10, 0:1]"), "got: {msg}");
+        assert!(msg.contains("(9, 8)"), "got: {msg}");
     }
 
     #[test]
@@ -245,42 +341,190 @@ mod tests {
         assert_eq!(a.get(8, 7).unwrap(), m.get(8, 7));
         assert_eq!(a.get(4, 5).unwrap(), m.get(4, 5));
         assert!(a.get(9, 0).is_err());
+        let msg = a.get(9, 0).unwrap_err().to_string();
+        assert!(msg.contains("(9,0)") && msg.contains("(9, 8)"), "got: {msg}");
+        // get through views maps coordinates without synchronizing extra blocks.
+        let v = a.slice(2, 9, 1, 8).unwrap();
+        assert_eq!(v.get(0, 0).unwrap(), m.get(2, 1));
+        assert_eq!(v.get(6, 6).unwrap(), m.get(8, 7));
+        let t = a.take_rows(&[7, 1]).unwrap();
+        assert_eq!(t.get(0, 3).unwrap(), m.get(7, 3));
+        assert_eq!(t.get(1, 0).unwrap(), m.get(1, 0));
+        assert!(t.get(2, 0).is_err());
     }
 
     #[test]
     fn take_rows_matches_reference() {
-        let (_rt, m, a) = setup();
+        let (rt, m, a) = setup();
         let idx = vec![8, 0, 3, 3, 5, 1, 7];
+        let before = rt.metrics();
         let t = a.take_rows(&idx).unwrap();
+        // Fancy indexing is lazy: zero tasks until forced.
+        assert_eq!(rt.metrics().since(&before).total_tasks(), 0);
+        assert!(t.is_view());
         let got = t.collect().unwrap();
         for (k, &r) in idx.iter().enumerate() {
             assert_eq!(got.row(k), m.row(r), "row {k} (source {r})");
         }
+        assert_eq!(t.force().unwrap().collect().unwrap(), got);
         assert!(a.take_rows(&[9]).is_err());
-        assert!(a.take_rows(&[]).is_err());
+        let msg = a.take_rows(&[9]).unwrap_err().to_string();
+        assert!(msg.contains("9") && msg.contains("out of bounds"), "got: {msg}");
     }
 
     #[test]
-    fn sparse_aligned_slice_stays_sparse() {
+    fn take_rows_empty_index_rejected() {
+        let (_rt, _m, a) = setup();
+        let msg = a.take_rows(&[]).unwrap_err().to_string();
+        assert!(msg.contains("empty"), "got: {msg}");
+        let msg = a.take_cols(&[]).unwrap_err().to_string();
+        assert!(msg.contains("empty"), "got: {msg}");
+    }
+
+    #[test]
+    fn take_cols_matches_reference() {
+        let (_rt, m, a) = setup();
+        let idx = vec![7, 0, 0, 4];
+        let t = a.take_cols(&idx).unwrap();
+        assert_eq!(t.shape(), (9, 4));
+        assert_eq!(t.collect().unwrap(), m.take_cols(&idx).unwrap());
+        assert_eq!(
+            t.force().unwrap().collect().unwrap(),
+            m.take_cols(&idx).unwrap()
+        );
+        assert!(a.take_cols(&[8]).is_err());
+        // Rows-of-cols composition: both index maps live on one view.
+        let rc = a.take_rows(&[6, 2]).unwrap().take_cols(&[1, 5]).unwrap();
+        let got = rc.collect().unwrap();
+        assert_eq!(got.get(0, 0), m.get(6, 1));
+        assert_eq!(got.get(0, 1), m.get(6, 5));
+        assert_eq!(got.get(1, 0), m.get(2, 1));
+        assert_eq!(rc.force().unwrap().collect().unwrap(), got);
+    }
+
+    #[test]
+    fn filter_rows_boolean_mask() {
+        let (_rt, m, a) = setup();
+        let mask: Vec<bool> = (0..9).map(|i| i % 3 == 0).collect();
+        let f = a.filter_rows(&mask).unwrap();
+        assert_eq!(f.shape(), (3, 8));
+        let got = f.collect().unwrap();
+        assert_eq!(got.row(0), m.row(0));
+        assert_eq!(got.row(1), m.row(3));
+        assert_eq!(got.row(2), m.row(6));
+        assert!(a.filter_rows(&[true; 4]).is_err());
+        let msg = a.filter_rows(&[false; 9]).unwrap_err().to_string();
+        assert!(msg.contains("zero rows"), "got: {msg}");
+    }
+
+    #[test]
+    fn train_test_split_partitions_rows() {
+        let (_rt, m, a) = setup();
+        let (train, test) = a.train_test_split(0.33, 7).unwrap();
+        assert_eq!(train.rows() + test.rows(), 9);
+        assert_eq!(test.rows(), 3);
+        // Every original row appears exactly once across the two views:
+        // compare sorted first-column values.
+        let mut firsts: Vec<f32> = Vec::new();
+        let tr = train.collect().unwrap();
+        let te = test.collect().unwrap();
+        for i in 0..tr.rows() {
+            firsts.push(tr.get(i, 0));
+        }
+        for i in 0..te.rows() {
+            firsts.push(te.get(i, 0));
+        }
+        firsts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let want: Vec<f32> = (0..9).map(|i| m.get(i, 0)).collect();
+        assert_eq!(firsts, want);
+        // Reproducible.
+        let (tr2, _) = a.train_test_split(0.33, 7).unwrap();
+        assert_eq!(tr2.collect().unwrap(), tr);
+        assert!(a.train_test_split(1.5, 0).is_err());
+    }
+
+    #[test]
+    fn views_keep_shared_blocks_alive_after_parent_drop() {
+        // Refcount interplay: the view owns handle references on the blocks
+        // it shares, so dropping the parent (and letting its other blocks
+        // be consumed + reclaimed) must not invalidate the view.
+        let (rt, m, a) = setup();
+        let v = a.slice(0, 3, 0, 8).unwrap(); // first block-row, aligned
+        let b = a.add_scalar(1.0).unwrap(); // consumes every block of `a`
+        drop(a);
+        b.collect().unwrap();
+        rt.barrier().unwrap();
+        assert_eq!(v.collect().unwrap(), m.slice(0, 0, 3, 8).unwrap());
+    }
+
+    #[test]
+    fn downstream_ops_force_views_transparently() {
+        let (_rt, m, a) = setup();
+        let v = a.slice(1, 7, 1, 7).unwrap();
+        let got = v.add_scalar(1.0).unwrap().collect().unwrap();
+        let want = m.slice(1, 1, 6, 6).unwrap().map(|x| x + 1.0);
+        assert_eq!(got, want);
+        let s = v.sum_axis(0).unwrap().collect().unwrap();
+        let want = m.slice(1, 1, 6, 6).unwrap().sum_axis(0);
+        assert_eq!(s, want);
+        let t = a.take_rows(&[4, 2, 0]).unwrap();
+        let tt = t.transpose().unwrap().collect().unwrap();
+        assert_eq!(tt, m.take_rows(&[4, 2, 0]).unwrap().transpose());
+    }
+
+    #[test]
+    fn sparse_slices_stay_sparse() {
+        // Satellite fix: the gather path used to densify sparse inputs on
+        // unaligned slices; the view materializer keeps CSR end to end.
         let rt = Runtime::local(2);
         let csr = crate::storage::CsrMatrix::from_triplets(
             6,
             6,
-            &[(0, 0, 1.0), (3, 3, 2.0), (5, 5, 3.0)],
+            &[(0, 0, 1.0), (3, 3, 2.0), (4, 1, -1.0), (5, 5, 3.0)],
         )
         .unwrap();
         let a = creation::from_csr(&rt, &csr, (3, 3)).unwrap();
+        // Aligned: canonical, CSR blocks shared.
         let s = a.slice(3, 6, 3, 6).unwrap();
-        assert!(s.is_sparse());
+        assert!(s.is_sparse() && !s.is_view());
         assert_eq!(
             s.collect().unwrap(),
             csr.to_dense().slice(3, 3, 3, 3).unwrap()
         );
+        // Unaligned: lazy view, still sparse; forcing gathers in CSR.
         let u = a.slice(1, 5, 1, 5).unwrap();
-        assert!(!u.is_sparse());
+        assert!(u.is_sparse() && u.is_view());
+        let f = u.force().unwrap();
+        assert!(f.is_sparse());
         assert_eq!(
-            u.collect().unwrap(),
+            f.collect_csr().unwrap().to_dense(),
             csr.to_dense().slice(1, 1, 4, 4).unwrap()
         );
+        // Fancy row selection keeps CSR too.
+        let t = a.take_rows(&[5, 0, 3]).unwrap();
+        assert!(t.is_sparse());
+        let ft = t.force().unwrap();
+        assert_eq!(
+            ft.collect_csr().unwrap().to_dense(),
+            csr.to_dense().take_rows(&[5, 0, 3]).unwrap()
+        );
+    }
+
+    #[test]
+    fn unaligned_tail_block_geometry() {
+        // 10x7 with 4x3 blocks: edge blocks are 2x1; slices crossing into
+        // them must respect the smaller extents.
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(10, 7, |i, j| (i * 7 + j) as f32);
+        let a = creation::from_matrix(&rt, &m, (4, 3)).unwrap();
+        let v = a.slice(5, 10, 2, 7).unwrap();
+        assert_eq!(v.collect().unwrap(), m.slice(5, 2, 5, 5).unwrap());
+        let f = v.force().unwrap();
+        assert_eq!(f.grid(), (2, 2));
+        assert_eq!(f.collect().unwrap(), m.slice(5, 2, 5, 5).unwrap());
+        // A slice that IS the whole array is canonical and free.
+        let whole = a.slice(0, 10, 0, 7).unwrap();
+        assert!(!whole.is_view());
+        assert_eq!(whole.collect().unwrap(), m);
     }
 }

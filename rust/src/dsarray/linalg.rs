@@ -18,6 +18,9 @@ impl DsArray {
     /// versus N²+N for the Dataset baseline (paper §5.2) — submitted as ONE
     /// batch (one scheduler-lock round-trip for the whole operation).
     pub fn transpose(&self) -> Result<DsArray> {
+        if self.view.is_some() {
+            return self.force()?.transpose();
+        }
         let (gr, gc) = self.grid;
         // Collected outputs: task i yields the transposed blocks of row i.
         let mut batch = Vec::with_capacity(gr);
@@ -66,6 +69,10 @@ impl DsArray {
                 self.block_shape.1,
                 other.block_shape.0
             );
+        }
+        // Validated; now lazy views may pay their materialization tasks.
+        if self.view.is_some() || other.view.is_some() {
+            return self.force()?.matmul(&other.force()?);
         }
         let (gr, _) = self.grid;
         let gc = other.grid.1;
@@ -122,6 +129,9 @@ impl DsArray {
     /// `(bs_a.0 * other.rows, bs_a.1 * other.cols)` so the grid layout
     /// follows self's grid directly.
     pub fn kron(&self, other: &DsArray) -> Result<DsArray> {
+        if self.view.is_some() || other.view.is_some() {
+            return self.force()?.kron(&other.force()?);
+        }
         let (ar, ac) = self.shape;
         let (br, bc) = other.shape;
         // Each output "super-block" is (a_block ⊗ other) — computed as one
@@ -182,7 +192,10 @@ impl DsArray {
     /// transposed copy of `A` is ever materialized (ds-arrays give cheap
     /// column access; this is what the Dataset-based ALS could not do).
     pub fn gram(&self) -> Result<DsArray> {
-        self.tn_matmul(self)
+        // Force once so a lazy view is not materialized twice for the two
+        // tn_matmul operands.
+        let a = self.force()?;
+        a.tn_matmul(&a)
     }
 
     /// `selfᵀ @ other` without materializing the transpose: one task per
@@ -197,6 +210,9 @@ impl DsArray {
                 other.shape,
                 other.block_shape
             );
+        }
+        if self.view.is_some() || other.view.is_some() {
+            return self.force()?.tn_matmul(&other.force()?);
         }
         let gc = self.grid.1;
         let ogc = other.grid.1;

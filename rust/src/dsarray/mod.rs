@@ -8,7 +8,13 @@
 //!
 //! Submodules implement the NumPy-like API surface:
 //! [`creation`], [`indexing`], [`elementwise`], [`reductions`], [`linalg`]
-//! (transpose/matmul), [`shuffle`], [`rechunk`].
+//! (transpose/matmul), [`shuffle`], [`rechunk`] — see `docs/API.md` for the
+//! full NumPy ↔ ds-array mapping table.
+//!
+//! Slicing and fancy indexing go through the zero-copy **view layer**:
+//! `slice*`/`take_rows`/`take_cols` share block futures with the parent
+//! instead of copying, and lazy views materialize via [`DsArray::force`]
+//! only when an operation needs canonical blocks.
 
 pub mod combine;
 pub mod creation;
@@ -19,11 +25,14 @@ pub mod linalg;
 pub mod rechunk;
 pub mod reductions;
 pub mod shuffle;
+mod view;
 
 use anyhow::{bail, Result};
 
 use crate::storage::{CsrMatrix, DenseMatrix};
 use crate::tasking::{Future, Runtime};
+
+pub(crate) use view::{Sel, ViewSpec};
 
 /// Distributed 2-D array divided in blocks (paper Fig 4).
 ///
@@ -42,10 +51,15 @@ pub struct DsArray {
     pub(crate) block_shape: (usize, usize),
     /// Grid dimensions (block rows, block cols).
     pub(crate) grid: (usize, usize),
-    /// Row-major grid of block futures.
+    /// Row-major grid of block futures. For lazy views this is the shared
+    /// *backing* sub-grid; the `view` descriptor maps logical coordinates
+    /// onto it.
     pub(crate) blocks: Vec<Future>,
     /// Whether blocks are CSR.
     pub(crate) sparse: bool,
+    /// Lazy-view slice descriptor; `None` for canonical arrays (the view
+    /// layer, `dsarray::view`).
+    pub(crate) view: Option<ViewSpec>,
 }
 
 impl Clone for DsArray {
@@ -58,6 +72,7 @@ impl Clone for DsArray {
             grid: self.grid,
             blocks: self.blocks.clone(),
             sparse: self.sparse,
+            view: self.view.clone(),
         }
     }
 }
@@ -69,6 +84,8 @@ impl Drop for DsArray {
 }
 
 impl DsArray {
+    /// Logical shape `(rows, cols)` — for views, the shape of the selected
+    /// region, not of the backing blocks.
     pub fn shape(&self) -> (usize, usize) {
         self.shape
     }
@@ -78,10 +95,14 @@ impl DsArray {
     pub fn cols(&self) -> usize {
         self.shape.1
     }
+    /// Regular block shape; edge blocks are smaller when the shape does not
+    /// divide evenly.
     pub fn block_shape(&self) -> (usize, usize) {
         self.block_shape
     }
-    /// (block rows, block cols) of the grid.
+    /// (block rows, block cols) of the grid. For lazy views this is the
+    /// *backing* grid the view maps into; [`DsArray::force`] yields the
+    /// canonical grid of the selected region.
     pub fn grid(&self) -> (usize, usize) {
         self.grid
     }
@@ -108,19 +129,30 @@ impl DsArray {
         total.div_ceil(block)
     }
 
-    /// Logical row count of block-row `i` (edge rows are smaller).
+    /// Logical row count of block-row `i` (edge rows are smaller). On views
+    /// this describes the *materialized* grid [`DsArray::force`] would
+    /// produce — which can be smaller than the backing [`DsArray::grid`];
+    /// backing lines beyond it hold no materialized rows and return 0.
     pub fn block_rows_at(&self, i: usize) -> usize {
-        debug_assert!(i < self.grid.0);
-        (self.shape.0 - i * self.block_shape.0).min(self.block_shape.0)
+        debug_assert!(i < self.grid.0.max(Self::grid_dim(self.shape.0, self.block_shape.0)));
+        self.shape
+            .0
+            .saturating_sub(i * self.block_shape.0)
+            .min(self.block_shape.0)
     }
 
-    /// Logical col count of block-col `j`.
+    /// Logical col count of block-col `j` (see [`DsArray::block_rows_at`]).
     pub fn block_cols_at(&self, j: usize) -> usize {
-        debug_assert!(j < self.grid.1);
-        (self.shape.1 - j * self.block_shape.1).min(self.block_shape.1)
+        debug_assert!(j < self.grid.1.max(Self::grid_dim(self.shape.1, self.block_shape.1)));
+        self.shape
+            .1
+            .saturating_sub(j * self.block_shape.1)
+            .min(self.block_shape.1)
     }
 
-    /// Future of the block at grid position (i, j).
+    /// Future of the block at grid position (i, j). For lazy views this
+    /// addresses the shared *backing* grid (the view's mapping is not
+    /// applied); force the view first when canonical blocks are needed.
     pub fn block(&self, i: usize, j: usize) -> Future {
         debug_assert!(i < self.grid.0 && j < self.grid.1);
         self.blocks[i * self.grid.1 + j]
@@ -167,6 +199,7 @@ impl DsArray {
             grid,
             blocks,
             sparse,
+            view: None,
         };
         for i in 0..grid.0 {
             for j in 0..grid.1 {
@@ -186,20 +219,75 @@ impl DsArray {
 
     /// Synchronize every block and assemble the full dense matrix — the
     /// paper's `collect` (local mode only).
+    ///
+    /// Lazy views collect **without submitting tasks**: only the backing
+    /// blocks the view touches are synchronized, and the slice mapping is
+    /// applied while copying master-side.
     pub fn collect(&self) -> Result<DenseMatrix> {
-        let mut out = DenseMatrix::zeros(self.shape.0, self.shape.1);
-        for i in 0..self.grid.0 {
-            for j in 0..self.grid.1 {
-                let b = self.rt.wait(self.block(i, j))?;
-                let d = b.to_dense()?;
-                out.paste(i * self.block_shape.0, j * self.block_shape.1, &d)?;
+        let Some(view) = &self.view else {
+            let mut out = DenseMatrix::zeros(self.shape.0, self.shape.1);
+            for i in 0..self.grid.0 {
+                for j in 0..self.grid.1 {
+                    let b = self.rt.wait(self.block(i, j))?;
+                    let d = b.to_dense()?;
+                    out.paste(i * self.block_shape.0, j * self.block_shape.1, &d)?;
+                }
+            }
+            return Ok(out);
+        };
+        let (nr, nc) = self.shape;
+        let (bs0, bs1) = self.block_shape;
+        // Synchronize only the touched backing blocks, densified up front.
+        let (rlines, clines) = self.touched_lines();
+        let mut dense: Vec<Option<DenseMatrix>> = self.blocks.iter().map(|_| None).collect();
+        for &bi in &rlines {
+            for &bj in &clines {
+                let b = self.rt.wait(self.block(bi, bj))?;
+                dense[bi * self.grid.1 + bj] = Some(b.to_dense()?);
+            }
+        }
+        let mut out = DenseMatrix::zeros(nr, nc);
+        for k in 0..nr {
+            let sr = view.map_row(k);
+            let (bi, lr) = (sr / bs0, sr % bs0);
+            match &view.col_index {
+                // Contiguous column window: copy row segments per block-col.
+                None => {
+                    let mut written = 0;
+                    while written < nc {
+                        let sc = view.col_off + written;
+                        let (bj, lc) = (sc / bs1, sc % bs1);
+                        let d = dense[bi * self.grid.1 + bj]
+                            .as_ref()
+                            .expect("touched backing block fetched");
+                        let take = (d.cols() - lc).min(nc - written);
+                        out.row_mut(k)[written..written + take]
+                            .copy_from_slice(&d.row(lr)[lc..lc + take]);
+                        written += take;
+                    }
+                }
+                // Fancy columns: per-element copy through the index map.
+                Some(cidx) => {
+                    for (jj, &sc) in cidx.iter().enumerate() {
+                        let (bj, lc) = (sc / bs1, sc % bs1);
+                        let d = dense[bi * self.grid.1 + bj]
+                            .as_ref()
+                            .expect("touched backing block fetched");
+                        out.set(k, jj, d.get(lr, lc));
+                    }
+                }
             }
         }
         Ok(out)
     }
 
     /// Synchronize and assemble as CSR (errors if the array is dense-backed).
+    /// Lazy views are materialized first (this submits the view's copy
+    /// tasks); `collect` stays task-free if dense output is acceptable.
     pub fn collect_csr(&self) -> Result<CsrMatrix> {
+        if self.view.is_some() {
+            return self.force()?.collect_csr();
+        }
         if !self.sparse {
             bail!("collect_csr on a dense-backed ds-array");
         }

@@ -66,6 +66,9 @@ impl DsArray {
         if axis > 1 {
             bail!("axis must be 0 or 1, got {axis}");
         }
+        if self.view.is_some() {
+            return self.force()?.reduce_axis(kind, axis);
+        }
         // One task per block-line, submitted as one batch.
         let mut batch = Vec::new();
         if axis == 0 {
@@ -122,6 +125,7 @@ impl DsArray {
     /// Full reduction to a single future scalar (1×1 block): per-axis pass
     /// then a final merge task over the partials.
     fn reduce_all(&self, kind: Kind) -> Result<Future> {
+        // reduce_axis forces lazy views, so no explicit force is needed.
         let partial = self.reduce_axis(kind, 0)?; // 1 x cols in gc blocks
         let futs: Vec<Future> = partial.blocks.clone();
         let meta = BlockMeta::dense(1, 1);

@@ -78,6 +78,9 @@ impl DsArray {
     }
 
     fn shuffle_impl(&self, seed: u64, collections: bool) -> Result<DsArray> {
+        if self.view.is_some() {
+            return self.force()?.shuffle_impl(seed, collections);
+        }
         if self.shape.0 < 2 {
             bail!("shuffle needs at least 2 rows");
         }

@@ -1,0 +1,568 @@
+//! The zero-copy view layer (paper §4.2.3).
+//!
+//! The paper's complexity argument is that indexing a ds-array is a
+//! *metadata* operation, not a data movement: a slice only needs to know
+//! which blocks it overlaps and at what offset. This module makes that
+//! claim executable. A [`ViewSpec`] is a slice descriptor carried alongside
+//! the block grid: a row/col offset plus extent, optionally replaced by an
+//! arbitrary index map per axis (fancy indexing). Slicing constructs a view
+//! that *shares* the parent's block futures — zero tasks submitted, handle
+//! references retained through the refcount-reclamation machinery — and the
+//! data is only copied when something actually needs canonical blocks:
+//!
+//! * block-aligned slices whose extent ends on a block boundary (or the
+//!   array edge) are detected at construction time and returned as fully
+//!   canonical arrays — they are *never* materialized;
+//! * every other slice and every fancy-indexed selection stays lazy until
+//!   [`DsArray::force`] runs, which a downstream operation (matmul,
+//!   reductions, rechunk, shuffle, estimator fits, …) triggers implicitly;
+//! * `collect` and `get` never force: they synchronize the backing blocks
+//!   and apply the mapping master-side.
+//!
+//! Materialization preserves the sparse backend: per-block extraction goes
+//! through [`Block::slice`]/[`Block::take_rows`]/[`Block::take_cols`] and
+//! cross-block gathers assemble CSR regions with CSR stacking, so slicing a
+//! sparse ds-array no longer silently densifies it.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::storage::{Block, BlockMeta, CsrMatrix, DenseMatrix};
+use crate::tasking::{BatchTask, CostHint, Future, Runtime};
+
+use super::DsArray;
+
+/// Slice descriptor attached to a lazy [`DsArray`] view. Logical element
+/// `(i, j)` of the view lives at stored element `(map_row(i), map_col(j))`
+/// of the backing sub-grid (`DsArray::blocks`).
+#[derive(Clone, Debug, Default)]
+pub(crate) struct ViewSpec {
+    /// Stored row of logical row 0 (ignored when `row_index` is set).
+    pub row_off: usize,
+    /// Stored column of logical column 0 (ignored when `col_index` is set).
+    pub col_off: usize,
+    /// Fancy row indexing: logical row `k` is stored row `row_index[k]`.
+    /// Arbitrary order and duplicates are allowed.
+    pub row_index: Option<Arc<Vec<usize>>>,
+    /// Fancy column indexing, same contract as `row_index`.
+    pub col_index: Option<Arc<Vec<usize>>>,
+}
+
+impl ViewSpec {
+    /// Stored row backing logical row `k`.
+    pub fn map_row(&self, k: usize) -> usize {
+        match &self.row_index {
+            Some(m) => m[k],
+            None => self.row_off + k,
+        }
+    }
+
+    /// Stored column backing logical column `k`.
+    pub fn map_col(&self, k: usize) -> usize {
+        match &self.col_index {
+            Some(m) => m[k],
+            None => self.col_off + k,
+        }
+    }
+
+    /// Stored-coordinate selection of the logical row range `[lo, lo+len)`.
+    pub fn row_sel(&self, lo: usize, len: usize) -> Sel {
+        match &self.row_index {
+            Some(m) => Sel::Idx(m[lo..lo + len].to_vec()),
+            None => Sel::Range {
+                start: self.row_off + lo,
+                len,
+            },
+        }
+    }
+
+    /// Stored-coordinate selection of the logical column range `[lo, lo+len)`.
+    pub fn col_sel(&self, lo: usize, len: usize) -> Sel {
+        match &self.col_index {
+            Some(m) => Sel::Idx(m[lo..lo + len].to_vec()),
+            None => Sel::Range {
+                start: self.col_off + lo,
+                len,
+            },
+        }
+    }
+}
+
+/// One axis of one materialization task: which stored coordinates feed the
+/// output, in output order.
+#[derive(Clone, Debug)]
+pub(crate) enum Sel {
+    /// Contiguous stored range `[start, start + len)`.
+    Range { start: usize, len: usize },
+    /// Arbitrary stored indices.
+    Idx(Vec<usize>),
+}
+
+impl Sel {
+    fn count(&self) -> usize {
+        match self {
+            Sel::Range { len, .. } => *len,
+            Sel::Idx(v) => v.len(),
+        }
+    }
+
+    /// Stored block-lines this selection reads (sorted, deduplicated).
+    fn needed_lines(&self, bs: usize) -> Vec<usize> {
+        match self {
+            Sel::Range { start, len } => ((start / bs)..=((start + len - 1) / bs)).collect(),
+            Sel::Idx(v) => {
+                let mut lines: Vec<usize> = v.iter().map(|&s| s / bs).collect();
+                lines.sort_unstable();
+                lines.dedup();
+                lines
+            }
+        }
+    }
+
+    /// Rebase stored coordinates onto a region stacked from `lines` (whose
+    /// cumulative start offsets are `offs`).
+    fn localize(&self, bs: usize, lines: &[usize], offs: &[usize]) -> Sel {
+        let to_local = |s: usize| {
+            let line = s / bs;
+            let pos = lines.binary_search(&line).expect("needed line present");
+            offs[pos] + (s - line * bs)
+        };
+        match self {
+            // A contiguous stored range stays contiguous: its needed lines
+            // are consecutive and each is stacked in full.
+            Sel::Range { start, len } => Sel::Range {
+                start: to_local(*start),
+                len: *len,
+            },
+            Sel::Idx(v) => Sel::Idx(v.iter().map(|&s| to_local(s)).collect()),
+        }
+    }
+}
+
+/// Compact a stored-coordinate index list onto the sub-grid of its touched
+/// block-lines: returns (kept lines, sorted/deduplicated, and the indices
+/// rebased onto that compacted grid). Keeping only touched lines is what
+/// stops a small fancy-index view from pinning the whole backing grid
+/// resident (refcount reclamation keeps working for untouched blocks).
+fn compact_index(idx: &[usize], bs: usize) -> (Vec<usize>, Vec<usize>) {
+    let mut lines: Vec<usize> = idx.iter().map(|&s| s / bs).collect();
+    lines.sort_unstable();
+    lines.dedup();
+    // All kept lines except the last are full (`bs`-sized): any non-final
+    // parent line is full, and the parent's final line sorts last. So the
+    // compacted coordinate of a row is `position_of_line * bs + local`.
+    let remapped = idx
+        .iter()
+        .map(|&s| {
+            let pos = lines.binary_search(&(s / bs)).expect("own line present");
+            pos * bs + (s % bs)
+        })
+        .collect();
+    (lines, remapped)
+}
+
+/// Stack the input blocks of a gather task (row-major, `ncl` blocks per
+/// band) into one region block, staying CSR when every input is CSR.
+/// Single-input tasks bypass this (extraction reads the input directly).
+fn stack_region(ins: &[Arc<Block>], ncl: usize) -> Result<Block> {
+    if ins.iter().all(|b| matches!(&**b, Block::Csr(_))) {
+        let mut bands: Vec<CsrMatrix> = Vec::with_capacity(ins.len() / ncl);
+        for band in ins.chunks(ncl) {
+            let parts: Vec<&CsrMatrix> = band.iter().map(|b| b.as_csr().unwrap()).collect();
+            bands.push(CsrMatrix::hstack(&parts)?);
+        }
+        let refs: Vec<&CsrMatrix> = bands.iter().collect();
+        Ok(Block::Csr(CsrMatrix::vstack(&refs)?))
+    } else {
+        let dense: Vec<DenseMatrix> = ins.iter().map(|b| b.to_dense()).collect::<Result<_>>()?;
+        let mut bands: Vec<DenseMatrix> = Vec::with_capacity(dense.len() / ncl);
+        for band in dense.chunks(ncl) {
+            let refs: Vec<&DenseMatrix> = band.iter().collect();
+            bands.push(DenseMatrix::hstack(&refs)?);
+        }
+        let refs: Vec<&DenseMatrix> = bands.iter().collect();
+        Ok(Block::Dense(DenseMatrix::vstack(&refs)?))
+    }
+}
+
+/// Extract the selected sub-matrix from a region block, preserving backend.
+fn extract(region: &Block, rows: &Sel, cols: &Sel) -> Result<Block> {
+    let picked = match rows {
+        Sel::Range { start, len } => region.slice(*start, 0, *len, region.cols())?,
+        Sel::Idx(v) => region.take_rows(v)?,
+    };
+    match cols {
+        Sel::Range { start, len } => picked.slice(0, *start, picked.rows(), *len),
+        Sel::Idx(v) => picked.take_cols(v),
+    }
+}
+
+impl DsArray {
+    /// Whether this array is a lazy view over another array's blocks
+    /// (shared futures plus a slice descriptor — see [`DsArray::force`]).
+    /// Canonical arrays return `false`.
+    pub fn is_view(&self) -> bool {
+        self.view.is_some()
+    }
+
+    /// Shape of the stored backing grid (equals [`DsArray::shape`] for
+    /// canonical arrays; for views it is the region the shared blocks
+    /// cover, of which the view exposes a subset).
+    pub(crate) fn stored_shape(&self) -> (usize, usize) {
+        if self.view.is_none() {
+            return self.shape;
+        }
+        let rows = (0..self.grid.0)
+            .map(|i| self.blocks[i * self.grid.1].meta.rows)
+            .sum();
+        let cols = (0..self.grid.1).map(|j| self.blocks[j].meta.cols).sum();
+        (rows, cols)
+    }
+
+    /// Declared output metadata for an `r × c` selection of this array:
+    /// dense, or a proportional-nnz CSR estimate when sparse.
+    pub(crate) fn sel_out_meta(&self, r: usize, c: usize) -> BlockMeta {
+        if !self.sparse {
+            return BlockMeta::dense(r, c);
+        }
+        let total_nnz: usize = self.blocks.iter().map(|b| b.meta.nnz).sum();
+        let (sr, sc) = self.stored_shape();
+        let frac = (r * c) as f64 / (sr * sc).max(1) as f64;
+        BlockMeta::sparse(r, c, (total_nnz as f64 * frac).round() as usize)
+    }
+
+    /// Assemble a lazy view over an explicit backing sub-grid. Retains one
+    /// handle reference per block (released on drop), validates that the
+    /// mapping stays inside the stored region, and never submits tasks.
+    pub(crate) fn from_view(
+        rt: Runtime,
+        shape: (usize, usize),
+        block_shape: (usize, usize),
+        stored_grid: (usize, usize),
+        blocks: Vec<Future>,
+        sparse: bool,
+        view: ViewSpec,
+    ) -> Result<Self> {
+        if blocks.len() != stored_grid.0 * stored_grid.1 {
+            bail!(
+                "view block count {} != backing grid {}x{}",
+                blocks.len(),
+                stored_grid.0,
+                stored_grid.1
+            );
+        }
+        rt.retain(&blocks);
+        let arr = Self {
+            rt,
+            shape,
+            block_shape,
+            grid: stored_grid,
+            blocks,
+            sparse,
+            view: Some(view),
+        };
+        // Non-terminal stored lines must be full blocks: the view's
+        // `coordinate / block_size` arithmetic depends on it. Sub-grids of a
+        // regular parent grid satisfy this by construction.
+        for i in 0..arr.grid.0.saturating_sub(1) {
+            debug_assert_eq!(arr.blocks[i * arr.grid.1].meta.rows, arr.block_shape.0);
+        }
+        for j in 0..arr.grid.1.saturating_sub(1) {
+            debug_assert_eq!(arr.blocks[j].meta.cols, arr.block_shape.1);
+        }
+        let (sr, sc) = arr.stored_shape();
+        let v = arr.view.as_ref().expect("just set");
+        let max_r = match &v.row_index {
+            Some(m) => m.iter().copied().max().unwrap_or(0),
+            None => v.row_off + shape.0 - 1,
+        };
+        let max_c = match &v.col_index {
+            Some(m) => m.iter().copied().max().unwrap_or(0),
+            None => v.col_off + shape.1 - 1,
+        };
+        if max_r >= sr || max_c >= sc {
+            bail!("view mapping reaches ({max_r},{max_c}), backing region is {sr}x{sc}");
+        }
+        Ok(arr)
+    }
+
+    /// Wrap a backing sub-grid as either a canonical array (when the view
+    /// descriptor is trivial and the blocks exactly cover `shape` — the
+    /// block-aligned fast path, pure metadata forever) or a lazy view.
+    pub(crate) fn wrap_view(
+        rt: Runtime,
+        shape: (usize, usize),
+        block_shape: (usize, usize),
+        stored_grid: (usize, usize),
+        blocks: Vec<Future>,
+        sparse: bool,
+        view: ViewSpec,
+    ) -> Result<Self> {
+        let trivial = view.row_index.is_none()
+            && view.col_index.is_none()
+            && view.row_off == 0
+            && view.col_off == 0;
+        if trivial {
+            let stored_rows: usize = (0..stored_grid.0)
+                .map(|i| blocks[i * stored_grid.1].meta.rows)
+                .sum();
+            let stored_cols: usize = (0..stored_grid.1).map(|j| blocks[j].meta.cols).sum();
+            if (stored_rows, stored_cols) == shape {
+                return DsArray::from_parts(rt, shape, block_shape, blocks, sparse);
+            }
+        }
+        DsArray::from_view(rt, shape, block_shape, stored_grid, blocks, sparse, view)
+    }
+
+    /// Materialize a lazy view into a canonical blocked array.
+    ///
+    /// Canonical arrays (including block-aligned slices) return a cheap
+    /// clone that shares blocks — zero tasks. Lazy views submit one copy
+    /// task per output block (`dsarray.index.slice` when the output lives
+    /// inside a single backing block, `dsarray.index.gather` otherwise) and
+    /// preserve the sparse backend throughout. Operations that need
+    /// canonical blocks (linalg, elementwise, reductions, rechunk, shuffle,
+    /// the estimators) call this implicitly; call it yourself before
+    /// chaining several such operations off one view, so the copy happens
+    /// once instead of per operation.
+    ///
+    /// ```
+    /// use rustdslib::{dsarray::creation, tasking::Runtime};
+    /// let rt = Runtime::local(2);
+    /// let a = creation::random(&rt, (8, 8), (4, 4), 1).unwrap();
+    /// let lazy = a.slice(1, 6, 2, 7).unwrap();
+    /// assert!(lazy.is_view());
+    /// let owned = lazy.force().unwrap();
+    /// assert!(!owned.is_view());
+    /// assert_eq!(owned.collect().unwrap(), lazy.collect().unwrap());
+    /// ```
+    pub fn force(&self) -> Result<DsArray> {
+        let Some(view) = self.view.clone() else {
+            return Ok(self.clone());
+        };
+        let (nr, nc) = self.shape;
+        let (bs0, bs1) = self.block_shape;
+        let out_grid = (Self::grid_dim(nr, bs0), Self::grid_dim(nc, bs1));
+        let mut batch = Vec::with_capacity(out_grid.0 * out_grid.1);
+        for oi in 0..out_grid.0 {
+            let r_lo = oi * bs0;
+            let rsel = view.row_sel(r_lo, (nr - r_lo).min(bs0));
+            for oj in 0..out_grid.1 {
+                let c_lo = oj * bs1;
+                let csel = view.col_sel(c_lo, (nc - c_lo).min(bs1));
+                batch.push(self.gather_task(rsel.clone(), csel));
+            }
+        }
+        let blocks: Vec<Future> = self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
+        DsArray::from_parts(
+            self.rt.clone(),
+            self.shape,
+            self.block_shape,
+            blocks,
+            self.sparse,
+        )
+    }
+
+    /// Build the copy task materializing one output block of a view.
+    fn gather_task(&self, rsel: Sel, csel: Sel) -> BatchTask {
+        let (bs0, bs1) = self.block_shape;
+        let rlines = rsel.needed_lines(bs0);
+        let clines = csel.needed_lines(bs1);
+        let mut futs = Vec::with_capacity(rlines.len() * clines.len());
+        for &bi in &rlines {
+            for &bj in &clines {
+                futs.push(self.block(bi, bj));
+            }
+        }
+        // Start offset of each needed line within the stacked region.
+        let mut roffs = Vec::with_capacity(rlines.len());
+        let mut acc = 0;
+        for &bi in &rlines {
+            roffs.push(acc);
+            acc += self.blocks[bi * self.grid.1].meta.rows;
+        }
+        let mut coffs = Vec::with_capacity(clines.len());
+        let mut acc = 0;
+        for &bj in &clines {
+            coffs.push(acc);
+            acc += self.blocks[bj].meta.cols;
+        }
+        let r_local = rsel.localize(bs0, &rlines, &roffs);
+        let c_local = csel.localize(bs1, &clines, &coffs);
+        let out_meta = self.sel_out_meta(rsel.count(), csel.count());
+        let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
+        let name = if futs.len() == 1 {
+            "dsarray.index.slice"
+        } else {
+            "dsarray.index.gather"
+        };
+        let ncl = clines.len();
+        BatchTask::new(
+            name,
+            futs,
+            vec![out_meta],
+            CostHint::default().with_bytes(bytes + out_meta.bytes() as f64),
+            Arc::new(move |ins: &[Arc<Block>]| {
+                // Single input: extract straight from the resolved block —
+                // no region copy.
+                if ins.len() == 1 {
+                    return Ok(vec![extract(&ins[0], &r_local, &c_local)?]);
+                }
+                let region = stack_region(ins, ncl)?;
+                Ok(vec![extract(&region, &r_local, &c_local)?])
+            }),
+        )
+    }
+
+    /// Build a zero-task view (or canonical array) selecting `rsel × csel`
+    /// of this array's backing grid, in stored coordinates. Each axis keeps
+    /// only the block-lines it touches: contiguous selections rebase their
+    /// offset onto the restricted range, fancy selections are compacted via
+    /// [`compact_index`] — so small views never pin unrelated blocks.
+    pub(crate) fn select_stored(&self, rsel: Sel, csel: Sel) -> Result<DsArray> {
+        let (bs0, bs1) = self.block_shape;
+        let shape = (rsel.count(), csel.count());
+        let (rlines, row_off, row_index) = match rsel {
+            Sel::Range { start, len } => {
+                let lines: Vec<usize> = ((start / bs0)..=((start + len - 1) / bs0)).collect();
+                let off = start - lines[0] * bs0;
+                (lines, off, None)
+            }
+            Sel::Idx(idx) => {
+                let (lines, remapped) = compact_index(&idx, bs0);
+                (lines, 0, Some(Arc::new(remapped)))
+            }
+        };
+        let (clines, col_off, col_index) = match csel {
+            Sel::Range { start, len } => {
+                let lines: Vec<usize> = ((start / bs1)..=((start + len - 1) / bs1)).collect();
+                let off = start - lines[0] * bs1;
+                (lines, off, None)
+            }
+            Sel::Idx(idx) => {
+                let (lines, remapped) = compact_index(&idx, bs1);
+                (lines, 0, Some(Arc::new(remapped)))
+            }
+        };
+        let mut blocks = Vec::with_capacity(rlines.len() * clines.len());
+        for &bi in &rlines {
+            for &bj in &clines {
+                blocks.push(self.block(bi, bj));
+            }
+        }
+        DsArray::wrap_view(
+            self.rt.clone(),
+            shape,
+            self.block_shape,
+            (rlines.len(), clines.len()),
+            blocks,
+            self.sparse,
+            ViewSpec {
+                row_off,
+                col_off,
+                row_index,
+                col_index,
+            },
+        )
+    }
+
+    /// The stored block-lines a view touches per axis (canonical arrays
+    /// touch everything). Used by the master-side `collect`/`get` paths.
+    pub(crate) fn touched_lines(&self) -> (Vec<usize>, Vec<usize>) {
+        match &self.view {
+            None => ((0..self.grid.0).collect(), (0..self.grid.1).collect()),
+            Some(v) => (
+                v.row_sel(0, self.shape.0).needed_lines(self.block_shape.0),
+                v.col_sel(0, self.shape.1).needed_lines(self.block_shape.1),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::creation;
+    use super::*;
+    use crate::tasking::Runtime;
+
+    #[test]
+    fn sel_geometry() {
+        let r = Sel::Range { start: 5, len: 7 };
+        assert_eq!(r.count(), 7);
+        assert_eq!(r.needed_lines(4), vec![1, 2]);
+        let i = Sel::Idx(vec![9, 0, 9, 2]);
+        assert_eq!(i.count(), 4);
+        assert_eq!(i.needed_lines(4), vec![0, 2]);
+        // Localize onto a region stacked from lines [0, 2] of size 4 each.
+        let loc = i.localize(4, &[0, 2], &[0, 4]);
+        match loc {
+            Sel::Idx(v) => assert_eq!(v, vec![5, 0, 5, 2]),
+            _ => panic!("expected Idx"),
+        }
+        let loc = r.localize(4, &[1, 2], &[0, 4]);
+        match loc {
+            Sel::Range { start, len } => assert_eq!((start, len), (1, 7)),
+            _ => panic!("expected Range"),
+        }
+    }
+
+    #[test]
+    fn compact_index_keeps_only_touched_lines() {
+        let (lines, remapped) = compact_index(&[7, 1, 7, 2], 3);
+        assert_eq!(lines, vec![0, 2]);
+        // Line 2 stacks right after line 0: stored 7 → 3 + 1 = 4.
+        assert_eq!(remapped, vec![4, 1, 4, 2]);
+        // Identity when every line is touched.
+        let (lines, remapped) = compact_index(&[5, 0, 3], 3);
+        assert_eq!(lines, vec![0, 1]);
+        assert_eq!(remapped, vec![5, 0, 3]);
+    }
+
+    #[test]
+    fn fancy_views_pin_only_touched_lines() {
+        // take_rows of a few rows must not retain the whole backing grid:
+        // untouched block-rows stay reclaimable by the refcount machinery.
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(9, 4, |i, j| (i * 4 + j) as f32);
+        let a = creation::from_matrix(&rt, &m, (3, 4)).unwrap(); // 3x1 grid
+        let v = a.take_rows(&[1, 0]).unwrap(); // touches block-row 0 only
+        assert_eq!(v.grid(), (1, 1));
+        let untouched = a.block(2, 0);
+        let consumed = a.add_scalar(1.0).unwrap(); // reads every block
+        drop(a);
+        consumed.collect().unwrap();
+        rt.barrier().unwrap();
+        // The untouched line was evicted once its reader finished; the
+        // view's shared line survives.
+        assert!(rt.wait(untouched).is_err());
+        let got = v.collect().unwrap();
+        assert_eq!(got.row(0), m.row(1));
+        assert_eq!(got.row(1), m.row(0));
+    }
+
+    #[test]
+    fn force_on_canonical_is_free() {
+        let rt = Runtime::local(1);
+        let a = creation::zeros(&rt, (6, 6), (2, 2)).unwrap();
+        let before = rt.metrics().total_tasks();
+        let f = a.force().unwrap();
+        assert_eq!(rt.metrics().total_tasks(), before);
+        assert!(!f.is_view());
+        assert_eq!(f.block(1, 1), a.block(1, 1));
+    }
+
+    #[test]
+    fn forcing_a_view_copies_once_per_output_block() {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(9, 9, |i, j| (i * 9 + j) as f32);
+        let a = creation::from_matrix(&rt, &m, (3, 3)).unwrap();
+        let v = a.slice(1, 8, 1, 8).unwrap();
+        assert!(v.is_view());
+        let before = rt.metrics();
+        let f = v.force().unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.tasks_with_prefix("dsarray.index."), f.n_blocks() as u64);
+        assert_eq!(f.collect().unwrap(), m.slice(1, 1, 7, 7).unwrap());
+    }
+}

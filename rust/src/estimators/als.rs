@@ -229,6 +229,8 @@ impl Als {
     /// Fit on a ds-array: row updates read block-rows, column updates read
     /// block-columns **directly** — zero transpose tasks.
     pub fn fit_dsarray(&mut self, r: &DsArray) -> Result<()> {
+        let r = r.force()?;
+        let r = &r;
         let rt = r.runtime().clone();
         let d = self.cfg.d;
         if d == 0 {

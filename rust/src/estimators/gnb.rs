@@ -61,6 +61,10 @@ impl Estimator for GaussianNb {
         if rt.is_sim() {
             bail!("gnb fit requires synchronization (local mode)");
         }
+        let x = x.force()?;
+        let x = &x;
+        let y = y.force()?;
+        let y = &y;
         let f = x.cols();
         let gc = x.grid().1;
 
@@ -155,6 +159,8 @@ impl Estimator for GaussianNb {
         if self.classes.is_empty() {
             bail!("predict before fit");
         }
+        let x = x.force()?;
+        let x = &x;
         let rt = x.runtime().clone();
         let model = Arc::new(GaussianNb {
             classes: self.classes.clone(),

@@ -158,6 +158,10 @@ impl KMeans {
     /// iteration for the tolerance check; in sim mode runs `max_iter`
     /// fully asynchronous rounds.
     pub fn fit_dsarray(&mut self, x: &DsArray) -> Result<()> {
+        // Lazy views (slices, train/test splits) materialize once up front;
+        // canonical inputs pass through for free.
+        let x = x.force()?;
+        let x = &x;
         let rt = x.runtime().clone();
         let k = self.cfg.k;
         let f = x.cols();
@@ -395,6 +399,8 @@ impl Estimator for KMeans {
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("predict before fit"))?
             .clone();
+        let x = x.force()?;
+        let x = &x;
         let rt = x.runtime().clone();
         let gc = x.grid().1;
         let centers_fut = rt.put_block(Block::Dense(centers));
@@ -560,6 +566,28 @@ mod tests {
         let report = sim.run_sim().unwrap();
         assert!(report.makespan_s > 0.0);
         assert!(km.centers.is_none(), "sim mode cannot materialize centers");
+    }
+
+    #[test]
+    fn fit_and_predict_on_row_slice_views() {
+        // Views flow through fit/predict: an unaligned row slice is
+        // materialized once at entry instead of copied per iteration.
+        let rt = Runtime::local(2);
+        let x = blobs(&rt, 60, 6, (16, 6));
+        let v = x.slice_rows(1, 59).unwrap();
+        assert!(v.is_view());
+        let mut km = KMeans::new(KMeansConfig {
+            k: 2,
+            max_iter: 20,
+            tol: 1e-6,
+            seed: 3,
+        });
+        km.fit_dsarray(&v).unwrap();
+        let labels = km.predict(&v).unwrap().collect().unwrap();
+        assert_eq!(labels.rows(), 58);
+        let a = labels.get(0, 0);
+        let b = labels.get(57, 0);
+        assert_ne!(a, b);
     }
 
     #[test]

@@ -84,7 +84,9 @@ fn pairwise(x: &DenseMatrix, y: &DenseMatrix) -> Result<DenseMatrix> {
 }
 
 impl Estimator for KnnClassifier {
-    /// "Fitting" records the training set (lazy learner).
+    /// "Fitting" records the training set (lazy learner). Lazy views — e.g.
+    /// the result of `train_test_split` — are materialized here, so
+    /// prediction reads canonical block grids.
     fn fit(&mut self, x: &DsArray, y: Option<&DsArray>) -> Result<()> {
         let y = y.ok_or_else(|| anyhow::anyhow!("knn needs labels"))?;
         if y.shape() != (x.rows(), 1) || y.block_shape().0 != x.block_shape().0 {
@@ -93,8 +95,8 @@ impl Estimator for KnnClassifier {
         if self.k == 0 || self.k > x.rows() {
             bail!("k={} invalid for {} training rows", self.k, x.rows());
         }
-        self.train_x = Some(x.clone());
-        self.train_y = Some(y.clone());
+        self.train_x = Some(x.force()?);
+        self.train_y = Some(y.force()?);
         Ok(())
     }
 
@@ -107,6 +109,8 @@ impl Estimator for KnnClassifier {
         if x.cols() != tx.cols() {
             bail!("query has {} features, training {}", x.cols(), tx.cols());
         }
+        let x = x.force()?;
+        let x = &x;
         let rt = x.runtime().clone();
         let k = self.k;
         let q_gc = x.grid().1;
@@ -256,6 +260,22 @@ mod tests {
         for (i, &t) in truth.iter().enumerate() {
             assert_eq!(pred.get(i, 0) as usize, t, "row {i}");
         }
+    }
+
+    #[test]
+    fn fit_on_train_test_split_views() {
+        // The estimator-facing view scenario: split rows into lazy views,
+        // fit on the train view, score on the held-out view — data is only
+        // copied when fit/predict force the views.
+        let rt = Runtime::local(2);
+        let (x, y, _) = labeled(&rt, 96, 6, 3);
+        let (train_x, test_x) = x.train_test_split(0.25, 11).unwrap();
+        let (train_y, test_y) = y.train_test_split(0.25, 11).unwrap();
+        assert!(train_x.is_view() && test_x.is_view());
+        let mut knn = KnnClassifier::new(5);
+        knn.fit(&train_x, Some(&train_y)).unwrap();
+        let acc = knn.score(&test_x, &test_y).unwrap();
+        assert!(acc > 0.95, "held-out accuracy {acc}");
     }
 
     #[test]

@@ -46,6 +46,12 @@ impl Estimator for LinearRegression {
         if y.block_shape().0 != x.block_shape().0 {
             bail!("y row blocking must match x (rechunk first)");
         }
+        // Force lazy views once: gram/tn_matmul/mean_axis would otherwise
+        // each materialize the view independently.
+        let x = x.force()?;
+        let x = &x;
+        let y = y.force()?;
+        let y = &y;
         let rt = x.runtime().clone();
         let n = x.rows() as f32;
 
@@ -104,6 +110,8 @@ impl Estimator for LinearRegression {
             .ok_or_else(|| anyhow::anyhow!("predict before fit"))?
             .clone();
         let b = self.intercept;
+        let x = x.force()?;
+        let x = &x;
         let rt = x.runtime().clone();
         let w_fut = rt.put_block(Block::Dense(w));
         let gc = x.grid().1;

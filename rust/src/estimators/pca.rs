@@ -89,6 +89,8 @@ impl Pca {
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("transform before fit"))?;
         let mean = self.mean.as_ref().unwrap();
+        let x = x.force()?;
+        let x = &x;
         let rt = x.runtime().clone();
         // Center then project: (X - μ) Wᵀ, both distributed ops.
         let mean_arr =
@@ -113,6 +115,9 @@ impl Estimator for Pca {
         if rt.is_sim() {
             bail!("PCA fit requires synchronization (local mode)");
         }
+        // Force lazy views once for the gram + mean passes.
+        let x = x.force()?;
+        let x = &x;
         let n = x.rows() as f32;
         // Distributed: G = XᵀX and column means.
         let g = x.gram()?.collect()?;
@@ -140,6 +145,8 @@ impl Estimator for Pca {
         if self.components.is_none() {
             bail!("score before fit");
         }
+        let x = x.force()?;
+        let x = &x;
         let n = x.rows() as f32;
         let g = x.gram()?.collect()?;
         let mean = x.mean_axis(0)?.collect()?;
@@ -210,6 +217,25 @@ mod tests {
         let v0: f32 = (0..96).map(|i| (t.get(i, 0) - m0).powi(2)).sum::<f32>() / n;
         let v1: f32 = (0..96).map(|i| (t.get(i, 1) - m1).powi(2)).sum::<f32>() / n;
         assert!(cov01.abs() / (v0 * v1).sqrt() < 0.1, "corr {}", cov01);
+    }
+
+    #[test]
+    fn fit_on_a_row_slice_view() {
+        // Slicing instead of copying: fit on an unaligned row-slice view;
+        // gram/mean force it internally.
+        let rt = Runtime::local(2);
+        let (x, _) = stretched(&rt, 128);
+        let v = x.slice_rows(3, 125).unwrap();
+        assert!(v.is_view());
+        let mut pca = Pca::new(2);
+        pca.fit(&v, None).unwrap();
+        let c = pca.components.as_ref().unwrap();
+        let (a, b) = (c.get(0, 0), c.get(0, 1));
+        assert!((a.abs() - 0.7071).abs() < 0.05, "a={a}");
+        assert!(a * b > 0.0);
+        // predict slices the transform with a zero-copy column view.
+        let p = pca.predict(&v).unwrap();
+        assert_eq!(p.shape(), (122, 1));
     }
 
     #[test]

@@ -38,6 +38,9 @@ impl StandardScaler {
         if rt.is_sim() {
             bail!("scaler fit requires synchronization (local mode)");
         }
+        // Force lazy views once for the two reduction passes.
+        let x = x.force()?;
+        let x = &x;
         let n = x.rows() as f32;
         let sums = x.sum_axis(0)?.collect()?;
         let sumsq = x.pow(2.0)?.sum_axis(0)?.collect()?;
@@ -63,6 +66,8 @@ impl StandardScaler {
         if mean.cols() != x.cols() {
             bail!("scaler fitted on {} features, got {}", mean.cols(), x.cols());
         }
+        let x = x.force()?;
+        let x = &x;
         let rt = x.runtime().clone();
         let bs1 = x.block_shape().1;
         let mut batch = Vec::with_capacity(x.n_blocks());

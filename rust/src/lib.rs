@@ -9,6 +9,25 @@
 //! discrete-event cluster simulator that replays the real task graphs at
 //! MareNostrum scale to regenerate every figure of the paper's evaluation.
 //!
+//! Indexing goes through a zero-copy **view layer**: slices and fancy
+//! index selections share block futures with the parent and materialize
+//! lazily (see [`dsarray::DsArray::force`] and `docs/API.md` for the full
+//! NumPy ↔ ds-array mapping).
+//!
+//! ```
+//! use rustdslib::{dsarray::creation, tasking::Runtime};
+//!
+//! let rt = Runtime::local(2);
+//! let w = creation::random(&rt, (60, 40), (10, 10), 42).unwrap();
+//! // Chain like NumPy; everything before collect() runs as async tasks.
+//! let expr = w.transpose().unwrap().norm_axis(1).unwrap();
+//! let vals = expr.collect().unwrap();
+//! assert_eq!(vals.rows(), 40);
+//! // Block-aligned slicing is pure metadata — zero tasks.
+//! let top = w.slice_rows(0, 30).unwrap();
+//! assert!(!top.is_view());
+//! ```
+//!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
 
 pub mod bench;

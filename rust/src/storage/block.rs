@@ -157,6 +157,61 @@ impl Block {
             }
         }
     }
+
+    /// Gather arbitrary rows in index order, preserving backend (CSR stays
+    /// CSR); phantom scales metadata like [`Block::slice`].
+    pub fn take_rows(&self, idx: &[usize]) -> Result<Block> {
+        match self {
+            Block::Dense(m) => Ok(Block::Dense(m.take_rows(idx)?)),
+            Block::Csr(m) => Ok(Block::Csr(m.take_rows(idx)?)),
+            Block::Phantom(meta) => {
+                for &i in idx {
+                    if i >= meta.rows {
+                        bail!("row index {i} out of bounds for {} rows", meta.rows);
+                    }
+                }
+                let frac = idx.len() as f64 / meta.rows.max(1) as f64;
+                let nnz = if meta.sparse {
+                    (meta.nnz as f64 * frac).round() as usize
+                } else {
+                    idx.len() * meta.cols
+                };
+                Ok(Block::Phantom(BlockMeta {
+                    rows: idx.len(),
+                    cols: meta.cols,
+                    nnz,
+                    sparse: meta.sparse,
+                }))
+            }
+        }
+    }
+
+    /// Gather arbitrary columns in index order, preserving backend.
+    pub fn take_cols(&self, idx: &[usize]) -> Result<Block> {
+        match self {
+            Block::Dense(m) => Ok(Block::Dense(m.take_cols(idx)?)),
+            Block::Csr(m) => Ok(Block::Csr(m.take_cols(idx)?)),
+            Block::Phantom(meta) => {
+                for &j in idx {
+                    if j >= meta.cols {
+                        bail!("column index {j} out of bounds for {} columns", meta.cols);
+                    }
+                }
+                let frac = idx.len() as f64 / meta.cols.max(1) as f64;
+                let nnz = if meta.sparse {
+                    (meta.nnz as f64 * frac).round() as usize
+                } else {
+                    meta.rows * idx.len()
+                };
+                Ok(Block::Phantom(BlockMeta {
+                    rows: meta.rows,
+                    cols: idx.len(),
+                    nnz,
+                    sparse: meta.sparse,
+                }))
+            }
+        }
+    }
 }
 
 impl From<DenseMatrix> for Block {
@@ -210,6 +265,22 @@ mod tests {
         assert_eq!(d.transpose().rows(), 3);
         let p = Block::Phantom(BlockMeta::sparse(4, 7, 9)).transpose();
         assert_eq!(p.meta(), BlockMeta::sparse(7, 4, 9));
+    }
+
+    #[test]
+    fn take_preserves_backend() {
+        let d = Block::from(DenseMatrix::from_fn(3, 4, |i, j| (i * 4 + j) as f32));
+        let t = d.take_rows(&[2, 0]).unwrap();
+        assert!(matches!(t, Block::Dense(_)));
+        assert_eq!(t.to_dense().unwrap().row(0), d.as_dense().unwrap().row(2));
+        let c = Block::from(CsrMatrix::from_triplets(3, 4, &[(1, 2, 5.0)]).unwrap());
+        let tc = c.take_cols(&[2, 2, 0]).unwrap();
+        assert!(matches!(tc, Block::Csr(_)));
+        assert_eq!(tc.to_dense().unwrap().get(1, 0), 5.0);
+        assert_eq!(tc.to_dense().unwrap().get(1, 1), 5.0);
+        let p = Block::Phantom(BlockMeta::sparse(10, 10, 40)).take_rows(&[0, 1, 2, 3, 4]).unwrap();
+        assert_eq!(p.meta(), BlockMeta::sparse(5, 10, 20));
+        assert!(Block::Phantom(BlockMeta::dense(2, 2)).take_cols(&[2]).is_err());
     }
 
     #[test]

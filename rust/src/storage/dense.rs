@@ -126,6 +126,44 @@ impl DenseMatrix {
         })
     }
 
+    /// Copy of arbitrary rows in index order (duplicates allowed) — the
+    /// dense backend of ds-array fancy indexing.
+    pub fn take_rows(&self, idx: &[usize]) -> Result<Self> {
+        let mut data = Vec::with_capacity(idx.len() * self.cols);
+        for &i in idx {
+            if i >= self.rows {
+                bail!("row index {i} out of bounds for {} rows", self.rows);
+            }
+            data.extend_from_slice(self.row(i));
+        }
+        Ok(Self {
+            rows: idx.len(),
+            cols: self.cols,
+            data,
+        })
+    }
+
+    /// Copy of arbitrary columns in index order (duplicates allowed).
+    pub fn take_cols(&self, idx: &[usize]) -> Result<Self> {
+        for &j in idx {
+            if j >= self.cols {
+                bail!("column index {j} out of bounds for {} columns", self.cols);
+            }
+        }
+        let mut data = Vec::with_capacity(idx.len() * self.rows);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for &j in idx {
+                data.push(row[j]);
+            }
+        }
+        Ok(Self {
+            rows: self.rows,
+            cols: idx.len(),
+            data,
+        })
+    }
+
     /// Write `src` into this matrix at offset (r0, c0).
     pub fn paste(&mut self, r0: usize, c0: usize, src: &DenseMatrix) -> Result<()> {
         if r0 + src.rows > self.rows || c0 + src.cols > self.cols {
@@ -546,6 +584,23 @@ mod tests {
         z.paste(2, 2, &s).unwrap();
         assert_eq!(z.get(3, 3), 11.0);
         assert!(z.paste(3, 3, &s).is_err());
+    }
+
+    #[test]
+    fn take_rows_and_cols() {
+        let a = DenseMatrix::from_fn(4, 3, |i, j| (i * 3 + j) as f32);
+        let r = a.take_rows(&[3, 0, 0]).unwrap();
+        assert_eq!((r.rows(), r.cols()), (3, 3));
+        assert_eq!(r.row(0), a.row(3));
+        assert_eq!(r.row(1), a.row(0));
+        assert_eq!(r.row(2), a.row(0));
+        assert!(a.take_rows(&[4]).is_err());
+
+        let c = a.take_cols(&[2, 0]).unwrap();
+        assert_eq!((c.rows(), c.cols()), (4, 2));
+        assert_eq!(c.get(1, 0), a.get(1, 2));
+        assert_eq!(c.get(1, 1), a.get(1, 0));
+        assert!(a.take_cols(&[3]).is_err());
     }
 
     #[test]

@@ -230,6 +230,61 @@ impl CsrMatrix {
         })
     }
 
+    /// Gather arbitrary rows in index order (duplicates allowed), staying
+    /// CSR — the sparse backend of ds-array fancy indexing.
+    pub fn take_rows(&self, idx: &[usize]) -> Result<Self> {
+        let mut indptr = vec![0usize; idx.len() + 1];
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        for (k, &i) in idx.iter().enumerate() {
+            if i >= self.rows {
+                bail!("row index {i} out of bounds for {} rows", self.rows);
+            }
+            let (cols, vals) = self.row(i);
+            indices.extend_from_slice(cols);
+            data.extend_from_slice(vals);
+            indptr[k + 1] = indices.len();
+        }
+        Ok(Self {
+            rows: idx.len(),
+            cols: self.cols,
+            indptr,
+            indices,
+            data,
+        })
+    }
+
+    /// Gather arbitrary columns in index order (duplicates allowed),
+    /// staying CSR. Per stored row, each wanted column is located by binary
+    /// search (column indices are sorted within rows).
+    pub fn take_cols(&self, idx: &[usize]) -> Result<Self> {
+        for &j in idx {
+            if j >= self.cols {
+                bail!("column index {j} out of bounds for {} columns", self.cols);
+            }
+        }
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (k, &j) in idx.iter().enumerate() {
+                if let Ok(pos) = cols.binary_search(&(j as u32)) {
+                    indices.push(k as u32);
+                    data.push(vals[pos]);
+                }
+            }
+            indptr[i + 1] = indices.len();
+        }
+        Ok(Self {
+            rows: self.rows,
+            cols: idx.len(),
+            indptr,
+            indices,
+            data,
+        })
+    }
+
     /// SpMM: `self (m,k) @ dense (k,n) -> dense (m,n)`.
     pub fn matmul_dense(&self, rhs: &DenseMatrix) -> Result<DenseMatrix> {
         if self.cols != rhs.rows() {
@@ -382,6 +437,21 @@ mod tests {
         let rs = m.row_slice(1, 2).unwrap();
         assert_eq!(rs.to_dense(), m.to_dense().slice(1, 0, 2, 5).unwrap());
         assert!(m.slice(3, 3, 2, 3).is_err());
+    }
+
+    #[test]
+    fn take_rows_and_cols_match_dense() {
+        let trips = vec![(0, 0, 1.0), (1, 2, 2.0), (2, 4, 3.0), (3, 1, 4.0)];
+        let m = CsrMatrix::from_triplets(4, 5, &trips).unwrap();
+        let idx = [3, 0, 3, 2];
+        let t = m.take_rows(&idx).unwrap();
+        assert_eq!(t.to_dense(), m.to_dense().take_rows(&idx).unwrap());
+        assert!(m.take_rows(&[4]).is_err());
+
+        let cidx = [4, 0, 0, 2];
+        let c = m.take_cols(&cidx).unwrap();
+        assert_eq!(c.to_dense(), m.to_dense().take_cols(&cidx).unwrap());
+        assert!(m.take_cols(&[5]).is_err());
     }
 
     #[test]

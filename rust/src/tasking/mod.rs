@@ -147,6 +147,13 @@ pub struct Runtime {
 impl Runtime {
     /// Real executor: `workers` OS threads execute tasks as they become
     /// dependency-free (per-worker deques, cost-aware stealing).
+    ///
+    /// ```
+    /// use rustdslib::tasking::Runtime;
+    /// let rt = Runtime::local(2);
+    /// assert_eq!(rt.workers(), 2);
+    /// assert!(!rt.is_sim());
+    /// ```
     pub fn local(workers: usize) -> Self {
         Self {
             exec: Arc::new(local::LocalExecutor::new(workers.max(1))),
