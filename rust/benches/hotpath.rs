@@ -2,10 +2,12 @@
 //! the measurement harness for the §Perf optimization pass (EXPERIMENTS.md).
 //!
 //! Measures wall-clock for: block transpose / shuffle / matmul through the
-//! task runtime, raw PJRT artifact dispatch (gemm / kmeans / standardize),
-//! native block math, and runtime overheads (submit, graph, channels).
+//! task runtime, the fused elementwise engine (fused vs per-op chains,
+//! in-place vs copy execution), the tiled gemm-accumulate kernel vs the old
+//! product+axpy pattern, raw PJRT artifact dispatch, native block math, and
+//! runtime overheads (submit, graph, channels).
 //!
-//! Usage: cargo bench --bench hotpath [-- --reps 5]
+//! Usage: cargo bench --bench hotpath [-- --reps 5 --json BENCH_hotpath.json]
 
 use std::time::Instant;
 
@@ -100,6 +102,118 @@ fn main() -> Result<()> {
         format!("{:.1} MB/s", 2.0 / t_take),
     ));
 
+    // ---- Fused elementwise engine: 3-op chain, fused vs per-op ----
+    // The per-op variant forces after every op (one task + one allocation
+    // per op per block — the pre-fusion behavior); the fused variant defers
+    // and collapses to ONE task per block.
+    let t_perop = time(reps, || {
+        let c = a
+            .add_scalar(1.0)?
+            .force()?
+            .mul_scalar(0.5)?
+            .force()?
+            .add_scalar(-3.0)?
+            .force()?;
+        c.runtime().barrier()
+    })?;
+    rows.push((
+        "ew chain 3 ops 1024² per-op (forced)".into(),
+        t_perop,
+        format!("{:.1} MB/s", 3.0 * 4.0 / t_perop),
+    ));
+    let t_fused = time(reps, || {
+        let c = a
+            .add_scalar(1.0)?
+            .mul_scalar(0.5)?
+            .add_scalar(-3.0)?
+            .force()?;
+        c.runtime().barrier()
+    })?;
+    rows.push((
+        "ew chain 3 ops 1024² fused".into(),
+        t_fused,
+        format!("{:.2}x vs per-op", t_perop / t_fused.max(1e-12)),
+    ));
+
+    // ---- In-place vs copy execution of a fused chain ----
+    // Copy: the chain's input stays alive, so every block is copied once.
+    let t_copy_ew = time(reps, || {
+        let tmp = a.add_scalar(0.0)?.force()?;
+        tmp.runtime().barrier()?;
+        let c = tmp.mul_scalar(1.0001)?.add_scalar(0.5)?.force()?; // tmp alive
+        c.runtime().barrier()
+    })?;
+    rows.push((
+        "ew fused 1024² copy (input alive)".into(),
+        t_copy_ew,
+        String::new(),
+    ));
+    // In-place: the input dies before materialization, so the executor
+    // grants every block to the fused closure for in-place mutation.
+    let rt_ip = Runtime::local(workers);
+    let a_ip = creation::from_matrix(&rt_ip, &m, (128, 128))?;
+    let before_ip = rt_ip.metrics();
+    let t_inplace_ew = time(reps, || {
+        let tmp = a_ip.add_scalar(0.0)?.force()?;
+        tmp.runtime().barrier()?;
+        let chain = tmp.mul_scalar(1.0001)?.add_scalar(0.5)?;
+        drop(tmp); // sole owner gone: blocks are granted in place
+        let c = chain.force()?;
+        c.runtime().barrier()
+    })?;
+    // time() executes warmup + reps runs; report grants per run so the
+    // JSON artifact is comparable across rep counts.
+    let ip_hits = rt_ip.metrics().since(&before_ip).inplace_hits / (reps as u64 + 1);
+    rows.push((
+        "ew fused 1024² in-place (input dead)".into(),
+        t_inplace_ew,
+        format!(
+            "{:.2}x vs copy, {ip_hits} grants/run",
+            t_copy_ew / t_inplace_ew.max(1e-12)
+        ),
+    ));
+
+    // ---- Tiled gemm-accumulate vs old product+axpy, per block size ----
+    // Old pattern: allocate the product, then a second full pass to add it
+    // (what the blocked matmul inner loop used to do per k-step).
+    for bs in [64usize, 128, 256] {
+        let x = DenseMatrix::from_fn(bs, bs, |_, _| rng.next_normal());
+        let y = DenseMatrix::from_fn(bs, bs, |_, _| rng.next_normal());
+        let steps = 8;
+        let fl = steps as f64 * 2.0 * (bs as f64).powi(3) / 1e9;
+        let t_old = time(reps, || {
+            let mut acc = DenseMatrix::zeros(bs, bs);
+            for _ in 0..steps {
+                let prod = x.matmul(&y)?;
+                acc.axpy(1.0, &prod)?;
+            }
+            std::hint::black_box(acc.get(0, 0));
+            Ok(())
+        })?;
+        rows.push((
+            format!("gemm {bs}³ x{steps} old (prod+axpy)"),
+            t_old,
+            format!("{:.2} GFLOP/s", fl / t_old),
+        ));
+        let t_tiled = time(reps, || {
+            let mut acc = DenseMatrix::zeros(bs, bs);
+            for _ in 0..steps {
+                acc.gemm_acc(&x, &y)?;
+            }
+            std::hint::black_box(acc.get(0, 0));
+            Ok(())
+        })?;
+        rows.push((
+            format!("gemm {bs}³ x{steps} tiled gemm_acc"),
+            t_tiled,
+            format!(
+                "{:.2} GFLOP/s ({:.2}x vs old)",
+                fl / t_tiled,
+                t_old / t_tiled.max(1e-12)
+            ),
+        ));
+    }
+
     // ---- Task-runtime overhead: empty tasks, one submit per task ----
     let t_serial = time(reps, || {
         let rt2 = Runtime::local(workers);
@@ -153,21 +267,28 @@ fn main() -> Result<()> {
         ),
     ));
 
-    // ---- Refcount reclamation: rebinding pipeline, bounded residency ----
+    // ---- Refcount reclamation + fusion: rebinding pipeline residency ----
+    // The 8 rebinding ops fold into ONE fused expression; the eager
+    // pipeline would have produced 9 generations (36 MiB), the fused one
+    // materializes once, in place over the dead source generation.
     let rt3 = Runtime::local(workers);
     let mut cur = creation::from_matrix(&rt3, &m, (128, 128))?;
     for _ in 0..8 {
-        cur = cur.add_scalar(1.0)?; // drops the previous generation
+        cur = cur.add_scalar(1.0)?; // deferred: extends the expression
     }
-    rt3.barrier()?;
+    let done = cur.force()?;
+    done.runtime().barrier()?;
     let met = rt3.metrics();
-    let produced_mb = 9.0 * 4.0; // 9 generations x 4 MiB each
+    // Not a timing row: secs is NaN (null in the JSON artifact) so perf
+    // tooling never mistakes MiB for seconds; the numbers live in the note.
     rows.push((
         "pipeline 8x add_scalar 1024² resident".into(),
-        met.peak_resident_bytes as f64 / (1024.0 * 1024.0),
+        f64::NAN,
         format!(
-            "MiB peak of {produced_mb:.0} MiB produced, {} blocks evicted",
-            met.blocks_evicted
+            "{:.1} MiB peak of 36 MiB eager-equivalent; {} fused, {} in-place",
+            met.peak_resident_bytes as f64 / (1024.0 * 1024.0),
+            met.tasks_fused,
+            met.inplace_hits
         ),
     ));
 
@@ -209,13 +330,20 @@ fn main() -> Result<()> {
 
     println!("{:<40} {:>12} {:>22}", "op", "secs/iter", "rate");
     println!("{}", "-".repeat(76));
-    for (name, secs, rate) in rows {
+    for (name, secs, rate) in &rows {
         println!("{name:<40} {secs:>12.6} {rate:>22}");
     }
-    // Machine-readable residency/eviction counters (satellite: JSON out).
+    // Machine-readable residency/eviction/fusion counters.
     println!(
         "\npipeline-metrics: {}",
         rustdslib::bench::report::metrics_json(&met)
     );
+    // Full machine-readable dump — CI uploads this as the BENCH_hotpath.json
+    // artifact so the perf trajectory is tracked across PRs.
+    if let Some(path) = args.get("json") {
+        let json = rustdslib::bench::report::bench_rows_json(&rows, &met);
+        std::fs::write(path, json)?;
+        eprintln!("wrote {path}");
+    }
     Ok(())
 }

@@ -109,7 +109,8 @@ impl Series {
 
 /// Render runtime [`Metrics`] as a single-line JSON object, including the
 /// residency counters added with refcount reclamation
-/// (`peak_resident_bytes`, `blocks_evicted`).
+/// (`peak_resident_bytes`, `blocks_evicted`) and the fusion counters
+/// (`tasks_fused`, `inplace_hits`, `bytes_allocated`).
 pub fn metrics_json(m: &Metrics) -> String {
     let mut out = String::from("{");
     let _ = write!(out, "\"total_tasks\":{}", m.total_tasks());
@@ -120,6 +121,9 @@ pub fn metrics_json(m: &Metrics) -> String {
     let _ = write!(out, ",\"resident_bytes\":{}", m.resident_bytes);
     let _ = write!(out, ",\"peak_resident_bytes\":{}", m.peak_resident_bytes);
     let _ = write!(out, ",\"blocks_evicted\":{}", m.blocks_evicted);
+    let _ = write!(out, ",\"tasks_fused\":{}", m.tasks_fused);
+    let _ = write!(out, ",\"inplace_hits\":{}", m.inplace_hits);
+    let _ = write!(out, ",\"bytes_allocated\":{}", m.bytes_allocated);
     out.push_str(",\"tasks_by_op\":{");
     for (i, (k, v)) in m.tasks_by_op.iter().enumerate() {
         if i > 0 {
@@ -184,6 +188,34 @@ impl Series {
     }
 }
 
+/// Machine-readable form of hot-path bench rows (`(name, secs, note)`),
+/// paired with a metrics snapshot — the `BENCH_hotpath.json` artifact CI
+/// tracks across PRs.
+pub fn bench_rows_json(rows: &[(String, f64, String)], metrics: &Metrics) -> String {
+    let mut out = String::from("{\"rows\":[");
+    for (i, (name, secs, note)) in rows.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let s = if secs.is_finite() {
+            format!("{secs}")
+        } else {
+            "null".to_string()
+        };
+        let _ = write!(
+            out,
+            "{{\"name\":\"{}\",\"secs\":{},\"note\":\"{}\"}}",
+            json_escape(name),
+            s,
+            json_escape(note)
+        );
+    }
+    out.push_str("],\"metrics\":");
+    out.push_str(&metrics_json(metrics));
+    out.push('}');
+    out
+}
+
 /// Simple named-value table for ablations / single-run reports.
 pub fn kv_table(title: &str, rows: &[(String, String)]) -> String {
     let w = rows.iter().map(|(k, _)| k.len()).max().unwrap_or(8).max(8);
@@ -234,15 +266,39 @@ mod tests {
         m.record_submit("op.a", 2, 1, 64.0, 32.0);
         m.record_resident(4096);
         m.record_evicted(1024);
+        m.record_fused(4);
+        m.record_inplace_grant(256);
+        m.record_allocated(512, 256);
         let s = metrics_json(&m);
         let v = crate::util::json::parse(&s).unwrap();
         assert_eq!(v.get("total_tasks").unwrap().as_usize(), Some(1));
         assert_eq!(v.get("peak_resident_bytes").unwrap().as_usize(), Some(4096));
-        assert_eq!(v.get("resident_bytes").unwrap().as_usize(), Some(3072));
-        assert_eq!(v.get("blocks_evicted").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("resident_bytes").unwrap().as_usize(), Some(2816));
+        assert_eq!(v.get("blocks_evicted").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("tasks_fused").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("inplace_hits").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("bytes_allocated").unwrap().as_usize(), Some(256));
         assert_eq!(
             v.get("tasks_by_op").unwrap().get("op.a").unwrap().as_usize(),
             Some(1)
+        );
+    }
+
+    #[test]
+    fn bench_rows_json_parses() {
+        let rows = vec![
+            ("fused chain".to_string(), 0.0125, "3 ops".to_string()),
+            ("pjrt".to_string(), f64::NAN, "artifacts not built".to_string()),
+        ];
+        let s = bench_rows_json(&rows, &Metrics::default());
+        let v = crate::util::json::parse(&s).unwrap();
+        let r = v.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].get("name").unwrap().as_str(), Some("fused chain"));
+        assert_eq!(r[1].get("secs"), Some(&crate::util::json::Json::Null));
+        assert_eq!(
+            v.get("metrics").unwrap().get("total_tasks").unwrap().as_usize(),
+            Some(0)
         );
     }
 

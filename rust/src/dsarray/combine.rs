@@ -18,8 +18,9 @@ pub fn vstack(parts: &[&DsArray]) -> Result<DsArray> {
     if parts.is_empty() {
         bail!("vstack of zero arrays");
     }
-    // Materialize lazy views: stacking addresses canonical block grids.
-    if parts.iter().any(|p| p.is_view()) {
+    // Materialize lazy views and deferred expressions: stacking addresses
+    // canonical block grids.
+    if parts.iter().any(|p| p.is_lazy()) {
         let forced: Vec<DsArray> = parts.iter().map(|p| p.force()).collect::<Result<_>>()?;
         let refs: Vec<&DsArray> = forced.iter().collect();
         return vstack(&refs);
@@ -130,7 +131,7 @@ pub fn hstack(parts: &[&DsArray]) -> Result<DsArray> {
     if parts.is_empty() {
         bail!("hstack of zero arrays");
     }
-    if parts.iter().any(|p| p.is_view()) {
+    if parts.iter().any(|p| p.is_lazy()) {
         let forced: Vec<DsArray> = parts.iter().map(|p| p.force()).collect::<Result<_>>()?;
         let refs: Vec<&DsArray> = forced.iter().collect();
         return hstack(&refs);
@@ -193,6 +194,26 @@ mod tests {
         assert_eq!(rt.metrics().total_tasks(), before, "fast path: no tasks");
         assert_eq!(v.shape(), (10, 4));
         assert_eq!(v.collect().unwrap(), DenseMatrix::vstack(&[&a, &b]).unwrap());
+    }
+
+    #[test]
+    fn stacking_deferred_expressions_materializes_first() {
+        // Regression: a deferred elementwise array's `blocks` hold the raw
+        // UN-evaluated base operands; stacking must force the chain, not
+        // splice those blocks in.
+        let rt = Runtime::local(2);
+        let a = DenseMatrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let b = DenseMatrix::from_fn(4, 4, |i, j| (i + j) as f32);
+        let da = creation::from_matrix(&rt, &a, (2, 2)).unwrap();
+        let db = creation::from_matrix(&rt, &b, (2, 2)).unwrap();
+        let lazy = da.add_scalar(10.0).unwrap();
+        assert!(lazy.is_deferred());
+        let v = vstack(&[&lazy, &db]).unwrap();
+        let want = DenseMatrix::vstack(&[&a.map(|x| x + 10.0), &b]).unwrap();
+        assert_eq!(v.collect().unwrap(), want);
+        let h = hstack(&[&db, &lazy]).unwrap();
+        let want = DenseMatrix::hstack(&[&b, &a.map(|x| x + 10.0)]).unwrap();
+        assert_eq!(h.collect().unwrap(), want);
     }
 
     #[test]

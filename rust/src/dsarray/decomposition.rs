@@ -23,7 +23,7 @@ impl DsArray {
     /// same blocking and `R` an n×n future (synchronize with
     /// `runtime().wait`).
     pub fn tsqr(&self) -> Result<(DsArray, Future)> {
-        if self.view.is_some() {
+        if self.is_lazy() {
             return self.force()?.tsqr();
         }
         if self.grid.1 != 1 {

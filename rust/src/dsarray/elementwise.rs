@@ -1,7 +1,13 @@
 //! Element-wise operators (paper §4.2.3): scalar ops (`A ** 2`, `A + 1`),
-//! array∘array ops, and math maps (`sqrt`, `abs`, `exp`). One task per
-//! block; all return new ds-arrays so expressions chain like NumPy:
+//! array∘array ops, math maps (`sqrt`, `abs`, `exp`) and row broadcasts.
+//! All of them are **deferred** on dense arrays: they attach a fused
+//! expression (`dsarray::expr`) and submit zero tasks, so a chain like
+//! `(x − μ) / σ` costs exactly one task and at most one allocation per
+//! block when it materializes. Expressions chain like NumPy:
 //! `(w.transpose().norm(1) ** 2).sqrt()`.
+//!
+//! Sparse arrays keep the eager one-task-per-op path, which preserves the
+//! CSR backend (and its zero-preserving-map check) block by block.
 
 use anyhow::{bail, Result};
 
@@ -11,12 +17,16 @@ use crate::tasking::{ops, BatchTask, CostHint, Future};
 use super::DsArray;
 
 impl DsArray {
-    /// Generic unary elementwise map (one task per block, submitted as one
-    /// batch — a single scheduler-lock round-trip for the whole grid).
-    /// Lazy views are forced first (`dsarray::view`).
-    fn map_blocks(&self, name: &'static str, f: impl Fn(f32) -> f32 + Send + Sync + Clone + 'static) -> Result<DsArray> {
-        if self.view.is_some() {
-            return self.force()?.map_blocks(name, f);
+    /// Eager unary elementwise map (one task per block, submitted as one
+    /// batch): the sparse-array path, preserving the CSR backend. Dense
+    /// arrays defer through `map_lazy` instead.
+    pub(crate) fn map_blocks_eager(
+        &self,
+        name: &'static str,
+        f: impl Fn(f32) -> f32 + Send + Sync + Clone + 'static,
+    ) -> Result<DsArray> {
+        if self.is_lazy() {
+            return self.force()?.map_blocks_eager(name, f);
         }
         let mut batch = Vec::with_capacity(self.blocks.len());
         for i in 0..self.grid.0 {
@@ -33,6 +43,8 @@ impl DsArray {
     }
 
     /// Generic binary elementwise op; shapes and block shapes must match.
+    /// Dense pairs defer into one fused expression; pairs involving a
+    /// sparse operand run eagerly (zip densifies either way).
     fn zip_blocks(
         &self,
         other: &DsArray,
@@ -49,8 +61,22 @@ impl DsArray {
                 other.block_shape
             );
         }
-        if self.view.is_some() || other.view.is_some() {
-            return self.force()?.zip_blocks(&other.force()?, name, f);
+        if self.sparse || other.sparse {
+            return self.zip_blocks_eager(other, name, f);
+        }
+        let a = if self.view.is_some() { self.force()? } else { self.clone() };
+        let b = if other.view.is_some() { other.force()? } else { other.clone() };
+        a.zip_lazy(&b, f)
+    }
+
+    fn zip_blocks_eager(
+        &self,
+        other: &DsArray,
+        name: &'static str,
+        f: impl Fn(f32, f32) -> f32 + Send + Sync + Clone + 'static,
+    ) -> Result<DsArray> {
+        if self.is_lazy() || other.is_lazy() {
+            return self.force()?.zip_blocks_eager(&other.force()?, name, f);
         }
         let mut batch = Vec::with_capacity(self.blocks.len());
         for i in 0..self.grid.0 {
@@ -69,32 +95,32 @@ impl DsArray {
     }
 
     pub fn add_scalar(&self, s: f32) -> Result<DsArray> {
-        self.map_blocks("dsarray.ew.add_scalar", move |x| x + s)
+        self.map_lazy("dsarray.ew.add_scalar", move |x| x + s)
     }
 
     pub fn mul_scalar(&self, s: f32) -> Result<DsArray> {
-        self.map_blocks("dsarray.ew.mul_scalar", move |x| x * s)
+        self.map_lazy("dsarray.ew.mul_scalar", move |x| x * s)
     }
 
     /// Element-wise power — the paper's `A ** 2`.
     pub fn pow(&self, e: f32) -> Result<DsArray> {
-        self.map_blocks("dsarray.ew.pow", move |x| x.powf(e))
+        self.map_lazy("dsarray.ew.pow", move |x| x.powf(e))
     }
 
     pub fn sqrt(&self) -> Result<DsArray> {
-        self.map_blocks("dsarray.ew.sqrt", |x| x.sqrt())
+        self.map_lazy("dsarray.ew.sqrt", |x| x.sqrt())
     }
 
     pub fn abs(&self) -> Result<DsArray> {
-        self.map_blocks("dsarray.ew.abs", |x| x.abs())
+        self.map_lazy("dsarray.ew.abs", |x| x.abs())
     }
 
     pub fn exp(&self) -> Result<DsArray> {
-        self.map_blocks("dsarray.ew.exp", |x| x.exp())
+        self.map_lazy("dsarray.ew.exp", |x| x.exp())
     }
 
     pub fn neg(&self) -> Result<DsArray> {
-        self.map_blocks("dsarray.ew.neg", |x| -x)
+        self.map_lazy("dsarray.ew.neg", |x| -x)
     }
 
     pub fn add(&self, other: &DsArray) -> Result<DsArray> {
@@ -121,7 +147,7 @@ impl DsArray {
         &self,
         f: impl Fn(&[f32]) -> f32 + Send + Sync + Clone + 'static,
     ) -> Result<DsArray> {
-        if self.view.is_some() {
+        if self.is_lazy() {
             return self.force()?.apply_along_rows(f);
         }
         let mut batch = Vec::with_capacity(self.grid.0);
@@ -161,18 +187,24 @@ impl DsArray {
     /// Broadcast a 1×cols row array across all rows: `self - row` (used by
     /// the scaler / normalization pipelines).
     pub fn sub_row_broadcast(&self, row: &DsArray) -> Result<DsArray> {
-        self.row_broadcast(row, "dsarray.ew.sub_bcast", |a, b| a - b)
+        self.row_broadcast(row, |a, b| a - b)
     }
 
     /// Broadcast divide by a 1×cols row array.
     pub fn div_row_broadcast(&self, row: &DsArray) -> Result<DsArray> {
-        self.row_broadcast(row, "dsarray.ew.div_bcast", |a, b| if b != 0.0 { a / b } else { 0.0 })
+        self.row_broadcast(row, |a, b| if b != 0.0 { a / b } else { 0.0 })
+    }
+
+    /// Broadcast multiply by a 1×cols row array — with
+    /// [`DsArray::sub_row_broadcast`] this is the fused standardize chain
+    /// `(x − μ) · σ⁻¹`.
+    pub fn mul_row_broadcast(&self, row: &DsArray) -> Result<DsArray> {
+        self.row_broadcast(row, |a, b| a * b)
     }
 
     fn row_broadcast(
         &self,
         row: &DsArray,
-        name: &'static str,
         f: impl Fn(f32, f32) -> f32 + Send + Sync + Clone + 'static,
     ) -> Result<DsArray> {
         if row.shape.0 != 1 || row.shape.1 != self.shape.1 {
@@ -185,38 +217,11 @@ impl DsArray {
         if row.block_shape.1 != self.block_shape.1 {
             bail!("broadcast row block width mismatch");
         }
-        if self.view.is_some() || row.view.is_some() {
-            return self.force()?.row_broadcast(&row.force()?, name, f);
-        }
-        let mut batch = Vec::with_capacity(self.blocks.len());
-        for i in 0..self.grid.0 {
-            for j in 0..self.grid.1 {
-                let a = self.block(i, j);
-                let r = row.block(0, j);
-                let meta = BlockMeta::dense(a.meta.rows, a.meta.cols);
-                let hint = CostHint::flops((meta.rows * meta.cols) as f64)
-                    .with_bytes(meta.bytes() as f64);
-                let f = f.clone();
-                batch.push(BatchTask::new(
-                    name,
-                    vec![a, r],
-                    vec![meta],
-                    hint,
-                    std::sync::Arc::new(move |ins: &[std::sync::Arc<crate::storage::Block>]| {
-                        let m = ins[0].to_dense()?;
-                        let row = ins[1].to_dense()?;
-                        let out = crate::storage::DenseMatrix::from_fn(
-                            m.rows(),
-                            m.cols(),
-                            |bi, bj| f(m.get(bi, bj), row.get(0, bj)),
-                        );
-                        Ok(vec![crate::storage::Block::Dense(out)])
-                    }),
-                ));
-            }
-        }
-        let blocks: Vec<Future> = self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
-        DsArray::from_parts(self.rt.clone(), self.shape, self.block_shape, blocks, false)
+        // Sparse operands are fine here: the fused evaluator densifies per
+        // block, and broadcast output was always dense.
+        let a = if self.view.is_some() { self.force()? } else { self.clone() };
+        let r = if row.view.is_some() { row.force()? } else { row.clone() };
+        a.bcast_lazy(&r, f)
     }
 }
 
@@ -285,6 +290,10 @@ mod tests {
         let want = DenseMatrix::from_fn(5, 7, |i, j| m.get(i, j) - row.get(0, j));
         assert_eq!(got, want);
         assert!(a.sub_row_broadcast(&a).is_err());
+        // Multiply-broadcast (the standardize second stage).
+        let got = a.mul_row_broadcast(&r).unwrap().collect().unwrap();
+        let want = DenseMatrix::from_fn(5, 7, |i, j| m.get(i, j) * row.get(0, j));
+        assert_eq!(got, want);
     }
 
     #[test]
@@ -307,11 +316,49 @@ mod tests {
     }
 
     #[test]
-    fn one_task_per_block() {
-        let (rt, _m, a) = setup();
+    fn lazy_chain_is_one_task_per_block() {
+        // The acceptance criterion: a 3-op elementwise chain submits zero
+        // tasks while deferred and exactly one fused task per block when
+        // consumed.
+        let (rt, m, a) = setup();
         let before = rt.metrics();
-        a.add_scalar(1.0).unwrap();
+        let chain = a
+            .add_scalar(1.0)
+            .unwrap()
+            .mul_scalar(2.0)
+            .unwrap()
+            .add_scalar(-0.5)
+            .unwrap();
+        assert!(chain.is_deferred());
+        assert_eq!(rt.metrics().since(&before).total_tasks(), 0);
+        let got = chain.collect().unwrap();
         let d = rt.metrics().since(&before);
         assert_eq!(d.total_tasks(), a.n_blocks() as u64);
+        assert_eq!(d.tasks_for("dsarray.ew.fused"), a.n_blocks() as u64);
+        assert_eq!(got, m.map(|x| (x + 1.0) * 2.0 - 0.5));
+    }
+
+    #[test]
+    fn sparse_maps_stay_eager_and_csr() {
+        let rt = Runtime::local(2);
+        let csr =
+            crate::storage::CsrMatrix::from_triplets(4, 6, &[(0, 5, 2.0), (3, 2, -4.0)]).unwrap();
+        let a = creation::from_csr(&rt, &csr, (2, 3)).unwrap();
+        let before = rt.metrics();
+        let doubled = a.mul_scalar(2.0).unwrap();
+        // Eager: one task per block, CSR preserved.
+        assert!(!doubled.is_deferred());
+        assert!(doubled.is_sparse());
+        assert_eq!(
+            rt.metrics().since(&before).tasks_for("dsarray.ew.mul_scalar"),
+            a.n_blocks() as u64
+        );
+        assert_eq!(
+            doubled.collect_csr().unwrap().to_dense(),
+            csr.to_dense().map(|x| x * 2.0)
+        );
+        // Non-zero-preserving maps on CSR are still rejected at run time.
+        let bad = a.add_scalar(1.0).unwrap();
+        assert!(bad.collect().is_err() || bad.runtime().barrier().is_err());
     }
 }

@@ -1,0 +1,623 @@
+//! The fused lazy elementwise expression engine (§Perf optimization).
+//!
+//! Elementwise operators used to submit one task and allocate one full
+//! intermediate block per op per block, so a standardize chain like
+//! `(x − μ) / σ` paid 3× the tasks and 3× the allocations it needed. This
+//! module makes the elementwise layer *deferred*: scalar ops, unary maps,
+//! array∘array ops and row-broadcasts attach an [`ExprSpec`] DAG to the
+//! `DsArray` (mirroring the view layer's `ViewSpec` pattern) and submit
+//! **zero tasks**. The whole chain collapses to exactly one fused task per
+//! block when something consumes the array ([`DsArray::force`], `collect`,
+//! or any operation that needs canonical blocks).
+//!
+//! Fused tasks are *ownership-aware* (`TaskBody::Owned`): at claim time the
+//! executor hands over any input block it can prove no other reader,
+//! handle, or pin will ever need again (the refcount-reclamation condition,
+//! with the claiming read outstanding), and the evaluator then mutates that
+//! buffer **in place** through the entire chain — zero allocations. Inputs
+//! still referenced elsewhere are copied exactly once (copy-on-write), so a
+//! parent array that is still alive is never mutated. `Metrics` counts the
+//! effect end-to-end: `tasks_fused` (submissions avoided), `inplace_hits`
+//! (exclusive grants) and `bytes_allocated` (fresh output bytes).
+//!
+//! Materialization is memoized: the first `force` stores the canonical
+//! result in the expression's shared state, so repeated consumers of one
+//! deferred chain execute it once. At that point the expression releases
+//! its own handle references early (the fused tasks hold reads on every
+//! operand, so nothing can be evicted prematurely) — which is exactly what
+//! lets a dead intermediate's blocks be granted in place.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::storage::{Block, BlockMeta, DenseMatrix};
+use crate::tasking::{BatchTask, CostHint, Future, TaskInput};
+
+use super::DsArray;
+
+pub(crate) type ScalarFn = Arc<dyn Fn(f32) -> f32 + Send + Sync>;
+pub(crate) type ScalarFn2 = Arc<dyn Fn(f32, f32) -> f32 + Send + Sync>;
+
+/// How an operand's block grid maps onto the result grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum OperandKind {
+    /// Same grid as the result: fused task (i, j) reads block (i, j).
+    Full,
+    /// A 1×cols row array on a 1×gc grid: task (i, j) reads block (0, j).
+    Row,
+}
+
+/// One leaf array of a deferred expression, with its per-block futures.
+#[derive(Clone)]
+pub(crate) struct Operand {
+    pub blocks: Vec<Future>,
+    pub kind: OperandKind,
+}
+
+/// A node of the deferred scalar-expression DAG. Leaves reference operand
+/// slots; every slot is referenced exactly once (a repeated array appears
+/// as separate slots), which lets evaluation consume inputs by move.
+pub(crate) enum ExprNode {
+    Input(usize),
+    Map {
+        f: ScalarFn,
+        child: Arc<ExprNode>,
+    },
+    Zip {
+        f: ScalarFn2,
+        lhs: Arc<ExprNode>,
+        rhs: Arc<ExprNode>,
+    },
+    /// Row broadcast: `rhs` must evaluate to a 1×cols block, combined with
+    /// every row of `lhs`.
+    Bcast {
+        f: ScalarFn2,
+        lhs: Arc<ExprNode>,
+        rhs: Arc<ExprNode>,
+    },
+}
+
+/// Mutable shared state of one logical expression (shared by clones of the
+/// deferred array).
+#[derive(Default)]
+pub(crate) struct ExprState {
+    /// Memoized materialization: filled by the first `force`, reused by
+    /// later consumers so a chain executes once.
+    pub forced: Option<DsArray>,
+    /// Set when `force` released this expression's handle references early
+    /// (enabling in-place grants); exactly one subsequent `Drop` consumes
+    /// the credit instead of releasing again.
+    pub release_credit: bool,
+}
+
+/// Deferred elementwise expression carried by a [`DsArray`] — the op-layer
+/// twin of the view layer's `ViewSpec`.
+#[derive(Clone)]
+pub(crate) struct ExprSpec {
+    /// Operands beyond the base array (`DsArray::blocks` is slot 0);
+    /// `extra[k]` is slot `k + 1`.
+    pub extra: Vec<Operand>,
+    pub root: Arc<ExprNode>,
+    /// Logical elementwise ops folded into this expression.
+    pub n_ops: usize,
+    pub state: Arc<Mutex<ExprState>>,
+}
+
+/// Rebuild `node` with every input slot shifted by `by` (composing two
+/// expressions into one operand list).
+fn shift_slots(node: &Arc<ExprNode>, by: usize) -> Arc<ExprNode> {
+    if by == 0 {
+        return Arc::clone(node);
+    }
+    match &**node {
+        ExprNode::Input(s) => Arc::new(ExprNode::Input(s + by)),
+        ExprNode::Map { f, child } => Arc::new(ExprNode::Map {
+            f: Arc::clone(f),
+            child: shift_slots(child, by),
+        }),
+        ExprNode::Zip { f, lhs, rhs } => Arc::new(ExprNode::Zip {
+            f: Arc::clone(f),
+            lhs: shift_slots(lhs, by),
+            rhs: shift_slots(rhs, by),
+        }),
+        ExprNode::Bcast { f, lhs, rhs } => Arc::new(ExprNode::Bcast {
+            f: Arc::clone(f),
+            lhs: shift_slots(lhs, by),
+            rhs: shift_slots(rhs, by),
+        }),
+    }
+}
+
+/// Evaluate the DAG over one block's inputs. Each leaf consumes its slot by
+/// move: an exclusively-owned dense input becomes the working buffer with
+/// zero copies, and every interior node mutates that buffer in place — the
+/// whole chain costs at most one allocation (none when the base input was
+/// granted owned).
+fn eval(node: &ExprNode, slots: &mut [Option<TaskInput>]) -> Result<DenseMatrix> {
+    match node {
+        ExprNode::Input(s) => {
+            let inp = slots
+                .get_mut(*s)
+                .and_then(|slot| slot.take())
+                .ok_or_else(|| anyhow!("expression slot {s} missing or consumed twice"))?;
+            inp.into_dense()
+        }
+        ExprNode::Map { f, child } => {
+            let mut m = eval(child, slots)?;
+            for x in m.data_mut() {
+                *x = f(*x);
+            }
+            Ok(m)
+        }
+        ExprNode::Zip { f, lhs, rhs } => {
+            let mut a = eval(lhs, slots)?;
+            combine_into(&mut a, f, rhs, slots, false)?;
+            Ok(a)
+        }
+        ExprNode::Bcast { f, lhs, rhs } => {
+            let mut a = eval(lhs, slots)?;
+            combine_into(&mut a, f, rhs, slots, true)?;
+            Ok(a)
+        }
+    }
+}
+
+/// Fold the rhs of a zip/broadcast into `a` in place. The rhs is only ever
+/// *read*, so a leaf rhs borrows its dense payload straight from the input
+/// block — no copy — keeping a fused zip between two live parents at
+/// exactly one allocation (the lhs working buffer), same as the eager path
+/// it replaces. Interior rhs nodes evaluate recursively.
+fn combine_into(
+    a: &mut DenseMatrix,
+    f: &ScalarFn2,
+    rhs: &ExprNode,
+    slots: &mut [Option<TaskInput>],
+    bcast: bool,
+) -> Result<()> {
+    if let ExprNode::Input(s) = rhs {
+        let inp = slots
+            .get_mut(*s)
+            .and_then(|slot| slot.take())
+            .ok_or_else(|| anyhow!("expression slot {s} missing or consumed twice"))?;
+        return match inp.block() {
+            Block::Dense(m) => apply_rhs(a, f, m, bcast),
+            other => apply_rhs(a, f, &other.to_dense()?, bcast),
+        };
+    }
+    let b = eval(rhs, slots)?;
+    apply_rhs(a, f, &b, bcast)
+}
+
+/// Apply `a[i][j] = f(a[i][j], b[...])` element-wise (`bcast`: `b` is a
+/// 1×cols row combined with every row of `a`).
+fn apply_rhs(a: &mut DenseMatrix, f: &ScalarFn2, b: &DenseMatrix, bcast: bool) -> Result<()> {
+    if bcast {
+        if b.rows() != 1 || b.cols() != a.cols() {
+            bail!(
+                "fused broadcast needs a 1x{} row, got {}x{}",
+                a.cols(),
+                b.rows(),
+                b.cols()
+            );
+        }
+        for i in 0..a.rows() {
+            for (x, &y) in a.row_mut(i).iter_mut().zip(b.data()) {
+                *x = f(*x, y);
+            }
+        }
+        return Ok(());
+    }
+    if a.rows() != b.rows() || a.cols() != b.cols() {
+        bail!(
+            "fused zip shape mismatch: {}x{} vs {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        );
+    }
+    for (x, &y) in a.data_mut().iter_mut().zip(b.data()) {
+        *x = f(*x, y);
+    }
+    Ok(())
+}
+
+impl DsArray {
+    /// Whether this array carries a deferred elementwise expression that
+    /// has not been consumed yet (see [`DsArray::force`]).
+    ///
+    /// Elementwise chains on dense arrays submit zero tasks until consumed;
+    /// they materialize as exactly one fused task per block:
+    ///
+    /// ```
+    /// use rustdslib::{dsarray::creation, tasking::Runtime};
+    /// let rt = Runtime::local(2);
+    /// let a = creation::random(&rt, (8, 8), (4, 4), 1).unwrap();
+    /// let chain = a.add_scalar(1.0).unwrap().sqrt().unwrap();
+    /// assert!(chain.is_deferred()); // zero tasks so far
+    /// let owned = chain.force().unwrap(); // one fused task per block
+    /// assert!(!owned.is_deferred());
+    /// // Materialization is memoized: re-consuming the chain is free.
+    /// assert_eq!(chain.force().unwrap().block(0, 0), owned.block(0, 0));
+    /// ```
+    pub fn is_deferred(&self) -> bool {
+        self.expr.is_some()
+    }
+
+    /// Whether consuming this array requires materialization first — a
+    /// lazy view or a deferred elementwise expression.
+    pub fn is_lazy(&self) -> bool {
+        self.view.is_some() || self.expr.is_some()
+    }
+
+    /// Snapshot this array as expression operands rooted at slot `slot0`,
+    /// retaining one handle reference per block on behalf of the new
+    /// expression. Already-materialized expressions snapshot their cached
+    /// canonical result instead (extending a consumed chain must read the
+    /// result, not re-read possibly-reclaimed sources); the check and the
+    /// retains run under the expression's state lock, serializing against a
+    /// concurrent `force`'s early release.
+    fn expr_parts(&self, slot0: usize, kind: OperandKind) -> (Vec<Operand>, Arc<ExprNode>, usize) {
+        if let Some(expr) = &self.expr {
+            let st = expr.state.lock().unwrap();
+            if let Some(f) = &st.forced {
+                let f = f.clone();
+                drop(st);
+                return f.expr_parts(slot0, kind);
+            }
+            self.rt.retain(&self.blocks);
+            for op in &expr.extra {
+                self.rt.retain(&op.blocks);
+            }
+            let mut ops = Vec::with_capacity(1 + expr.extra.len());
+            ops.push(Operand {
+                blocks: self.blocks.clone(),
+                kind,
+            });
+            // A row array used as a broadcast operand narrows ALL of its
+            // own operands to Row (they live on its 1×gc grid).
+            ops.extend(expr.extra.iter().map(|op| Operand {
+                blocks: op.blocks.clone(),
+                kind: if kind == OperandKind::Row {
+                    OperandKind::Row
+                } else {
+                    op.kind
+                },
+            }));
+            (ops, shift_slots(&expr.root, slot0), expr.n_ops)
+        } else {
+            self.rt.retain(&self.blocks);
+            (
+                vec![Operand {
+                    blocks: self.blocks.clone(),
+                    kind,
+                }],
+                Arc::new(ExprNode::Input(slot0)),
+                0,
+            )
+        }
+    }
+
+    /// Assemble a deferred-expression array over pre-retained operands
+    /// (callers snapshot operands via [`DsArray::expr_parts`], which
+    /// retains). Geometry is inherited from `self`.
+    fn from_lazy(&self, operands: Vec<Operand>, root: Arc<ExprNode>, n_ops: usize) -> DsArray {
+        let mut it = operands.into_iter();
+        let base = it.next().expect("expression has a base operand");
+        DsArray {
+            rt: self.rt.clone(),
+            shape: self.shape,
+            block_shape: self.block_shape,
+            grid: self.grid,
+            blocks: base.blocks,
+            sparse: false,
+            view: None,
+            expr: Some(ExprSpec {
+                extra: it.collect(),
+                root,
+                n_ops,
+                state: Arc::default(),
+            }),
+        }
+    }
+
+    /// Defer a unary elementwise map: zero tasks now, folded into one fused
+    /// task per block at consume time. Sparse arrays take the eager per-op
+    /// path instead (preserving the CSR backend and its zero-preserving-map
+    /// check); lazy views are forced first.
+    pub(crate) fn map_lazy(
+        &self,
+        name: &'static str,
+        f: impl Fn(f32) -> f32 + Send + Sync + Clone + 'static,
+    ) -> Result<DsArray> {
+        if self.sparse {
+            return self.map_blocks_eager(name, f);
+        }
+        if self.view.is_some() {
+            return self.force()?.map_lazy(name, f);
+        }
+        let (ops, root, n) = self.expr_parts(0, OperandKind::Full);
+        let root = Arc::new(ExprNode::Map {
+            f: Arc::new(f),
+            child: root,
+        });
+        Ok(self.from_lazy(ops, root, n + 1))
+    }
+
+    /// Defer a binary elementwise op over two same-geometry dense arrays;
+    /// both sides' pending expressions fold into one DAG.
+    pub(crate) fn zip_lazy(
+        &self,
+        other: &DsArray,
+        f: impl Fn(f32, f32) -> f32 + Send + Sync + Clone + 'static,
+    ) -> Result<DsArray> {
+        let (mut ops, lroot, ln) = self.expr_parts(0, OperandKind::Full);
+        let (rops, rroot, rn) = other.expr_parts(ops.len(), OperandKind::Full);
+        ops.extend(rops);
+        let root = Arc::new(ExprNode::Zip {
+            f: Arc::new(f),
+            lhs: lroot,
+            rhs: rroot,
+        });
+        Ok(self.from_lazy(ops, root, ln + rn + 1))
+    }
+
+    /// Defer a row-broadcast op (`self ∘ row` per column); the row array's
+    /// own pending expression folds in too.
+    pub(crate) fn bcast_lazy(
+        &self,
+        row: &DsArray,
+        f: impl Fn(f32, f32) -> f32 + Send + Sync + Clone + 'static,
+    ) -> Result<DsArray> {
+        let (mut ops, lroot, ln) = self.expr_parts(0, OperandKind::Full);
+        let (rops, rroot, rn) = row.expr_parts(ops.len(), OperandKind::Row);
+        ops.extend(rops);
+        let root = Arc::new(ExprNode::Bcast {
+            f: Arc::new(f),
+            lhs: lroot,
+            rhs: rroot,
+        });
+        Ok(self.from_lazy(ops, root, ln + rn + 1))
+    }
+
+    /// Materialize a deferred expression: exactly one fused ownership-aware
+    /// task per block, submitted as one batch. Memoized — repeated
+    /// consumers of the same deferred array share the first result.
+    pub(crate) fn force_expr(&self) -> Result<DsArray> {
+        let expr = self.expr.as_ref().expect("force_expr on expression arrays only");
+        let mut st = expr.state.lock().unwrap();
+        if let Some(f) = &st.forced {
+            return Ok(f.clone());
+        }
+        let (gr, gc) = self.grid;
+        let n_slots = 1 + expr.extra.len();
+        let mut batch = Vec::with_capacity(gr * gc);
+        for i in 0..gr {
+            for j in 0..gc {
+                let base = self.blocks[i * gc + j];
+                let mut reads = Vec::with_capacity(n_slots);
+                reads.push(base);
+                for op in &expr.extra {
+                    reads.push(match op.kind {
+                        OperandKind::Full => op.blocks[i * gc + j],
+                        OperandKind::Row => op.blocks[j],
+                    });
+                }
+                let meta = BlockMeta::dense(base.meta.rows, base.meta.cols);
+                let bytes: f64 = reads.iter().map(|r| r.meta.bytes() as f64).sum();
+                let flops = (expr.n_ops * meta.rows * meta.cols) as f64;
+                let root = Arc::clone(&expr.root);
+                batch.push(
+                    BatchTask::new_owned(
+                        "dsarray.ew.fused",
+                        reads,
+                        vec![meta],
+                        CostHint::flops(flops).with_bytes(bytes),
+                        Arc::new(move |ins: Vec<TaskInput>| {
+                            let mut slots: Vec<Option<TaskInput>> =
+                                ins.into_iter().map(Some).collect();
+                            let out = eval(&root, &mut slots)?;
+                            Ok(vec![Block::Dense(out)])
+                        }),
+                    )
+                    .with_fused_ops(expr.n_ops as u32),
+                );
+            }
+        }
+        // Early release, atomic with the submission: the fused tasks'
+        // reads register before this expression's handle references drop,
+        // so nothing is evicted prematurely — and no claim ever observes
+        // the stale handles, which makes in-place grants for dead operands
+        // deterministic. One future Drop consumes the credit.
+        let mut release: Vec<Future> = self.blocks.clone();
+        for op in &expr.extra {
+            release.extend_from_slice(&op.blocks);
+        }
+        let blocks: Vec<Future> = self
+            .rt
+            .submit_batch_releasing(batch, &release)
+            .into_iter()
+            .map(|v| v[0])
+            .collect();
+        // Credit is armed as soon as the handles are gone, so a failure
+        // below can never lead Drop to double-release.
+        st.release_credit = true;
+        let out = DsArray::from_parts(self.rt.clone(), self.shape, self.block_shape, blocks, false)?;
+        st.forced = Some(out.clone());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::creation;
+    use super::*;
+    use crate::tasking::Runtime;
+
+    fn setup() -> (Runtime, DenseMatrix, DsArray) {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(6, 8, |i, j| (i as f32 - 2.5) * 0.5 + j as f32);
+        let a = creation::from_matrix(&rt, &m, (2, 3)).unwrap();
+        (rt, m, a)
+    }
+
+    #[test]
+    fn deferred_ops_submit_zero_tasks_until_forced() {
+        let (rt, m, a) = setup();
+        let before = rt.metrics();
+        let chain = a
+            .add_scalar(1.0)
+            .unwrap()
+            .mul_scalar(0.5)
+            .unwrap()
+            .sqrt()
+            .unwrap();
+        assert!(chain.is_deferred());
+        assert_eq!(rt.metrics().since(&before).total_tasks(), 0);
+        let forced = chain.force().unwrap();
+        let d = rt.metrics().since(&before);
+        // Exactly one fused task per block, crediting 2 fused-away ops each.
+        assert_eq!(d.total_tasks(), a.n_blocks() as u64);
+        assert_eq!(d.tasks_for("dsarray.ew.fused"), a.n_blocks() as u64);
+        assert_eq!(d.tasks_fused, 2 * a.n_blocks() as u64);
+        let want = m.map(|x| ((x + 1.0) * 0.5).sqrt());
+        assert!(forced.collect().unwrap().max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn force_is_memoized_and_extension_reads_the_cache() {
+        let (rt, m, a) = setup();
+        let chain = a.add_scalar(2.0).unwrap();
+        let f1 = chain.force().unwrap();
+        let before = rt.metrics();
+        let f2 = chain.force().unwrap();
+        // Second force: zero tasks, same blocks.
+        assert_eq!(rt.metrics().since(&before).total_tasks(), 0);
+        assert_eq!(f1.block(0, 0), f2.block(0, 0));
+        // Extending an already-consumed chain must base itself on the
+        // cached result (the sources may have been reclaimed in place).
+        let ext = chain.mul_scalar(3.0).unwrap();
+        let got = ext.collect().unwrap();
+        assert!(got.max_abs_diff(&m.map(|x| (x + 2.0) * 3.0)) < 1e-5);
+    }
+
+    #[test]
+    fn live_parent_is_never_mutated_in_place() {
+        let (rt, m, a) = setup();
+        let chain = a.add_scalar(100.0).unwrap();
+        let before = rt.metrics();
+        let forced = chain.force().unwrap();
+        rt.barrier().unwrap();
+        // `a` is still alive: its blocks stay shared, no in-place grant.
+        assert_eq!(rt.metrics().since(&before).inplace_hits, 0);
+        assert_eq!(a.collect().unwrap(), m);
+        assert!(forced.collect().unwrap().max_abs_diff(&m.map(|x| x + 100.0)) < 1e-5);
+    }
+
+    #[test]
+    fn dead_intermediates_execute_in_place() {
+        let (rt, _m, a) = setup();
+        // Materialize a fresh generation owned only by `tmp`, chain over
+        // it, drop it: the fused tasks must be granted every block.
+        let tmp = a.add_scalar(1.0).unwrap().force().unwrap();
+        rt.barrier().unwrap();
+        let n = tmp.n_blocks() as u64;
+        let chain = tmp.mul_scalar(2.0).unwrap();
+        drop(tmp);
+        let before = rt.metrics();
+        let out = chain.force().unwrap();
+        out.runtime().barrier().unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.inplace_hits, n, "every dead input granted in place");
+        // In-place execution allocates no fresh output bytes.
+        assert_eq!(d.bytes_allocated, 0);
+    }
+
+    #[test]
+    fn zip_and_broadcast_fuse_into_one_task() {
+        let (rt, m, a) = setup();
+        let n = DenseMatrix::from_fn(6, 8, |i, j| (i + 2 * j) as f32 + 1.0);
+        let b = creation::from_matrix(&rt, &n, (2, 3)).unwrap();
+        let row = DenseMatrix::from_fn(1, 8, |_, j| j as f32 * 0.25 + 1.0);
+        let r = creation::from_matrix(&rt, &row, (1, 3)).unwrap();
+        let before = rt.metrics();
+        // ((a + 1) * b − row) / 2 : four logical ops, one task per block.
+        let expr = a
+            .add_scalar(1.0)
+            .unwrap()
+            .mul(&b)
+            .unwrap()
+            .sub_row_broadcast(&r)
+            .unwrap()
+            .mul_scalar(0.5)
+            .unwrap();
+        assert_eq!(rt.metrics().since(&before).total_tasks(), 0);
+        let got = expr.collect().unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.total_tasks(), a.n_blocks() as u64);
+        assert_eq!(d.tasks_fused, 3 * a.n_blocks() as u64);
+        let want = DenseMatrix::from_fn(6, 8, |i, j| {
+            ((m.get(i, j) + 1.0) * n.get(i, j) - row.get(0, j)) * 0.5
+        });
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn fusion_composes_with_lazy_views_and_split() {
+        let (_rt, m, a) = setup();
+        // Unaligned view → one gather per block, then the chain fuses.
+        let v = a.slice(1, 6, 1, 7).unwrap();
+        assert!(v.is_view());
+        let got = v
+            .add_scalar(-1.0)
+            .unwrap()
+            .pow(2.0)
+            .unwrap()
+            .collect()
+            .unwrap();
+        let want = m.slice(1, 1, 5, 6).unwrap().map(|x| (x - 1.0) * (x - 1.0));
+        assert!(got.max_abs_diff(&want) < 1e-4);
+        // train_test_split views feed fused chains too.
+        let (train, test) = a.train_test_split(0.25, 7).unwrap();
+        let t = train.mul_scalar(2.0).unwrap().collect().unwrap();
+        let want = train.collect().unwrap().map(|x| x * 2.0);
+        assert!(t.max_abs_diff(&want) < 1e-5);
+        let t = test.neg().unwrap().collect().unwrap();
+        assert!(t.max_abs_diff(&test.collect().unwrap().map(|x| -x)) < 1e-5);
+    }
+
+    #[test]
+    fn self_zip_and_shared_operands_stay_correct() {
+        let (rt, m, a) = setup();
+        // a ⊙ a through one deferred expression: duplicate operand slots
+        // must not trigger an in-place grant (pending_reads = 2 per block).
+        let sq = a.mul(&a).unwrap().collect().unwrap();
+        assert!(sq.max_abs_diff(&m.map(|x| x * x)) < 1e-4);
+        assert_eq!(a.collect().unwrap(), m);
+        // Same with a dead duplicated operand: both reads resolve shared,
+        // the value is read consistently, nothing is granted twice.
+        let tmp = a.add_scalar(1.0).unwrap().force().unwrap();
+        rt.barrier().unwrap();
+        let z = tmp.mul(&tmp).unwrap();
+        drop(tmp);
+        let got = z.collect().unwrap();
+        let want = m.map(|x| (x + 1.0) * (x + 1.0));
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn deep_chain_fuses_to_single_pass() {
+        let (rt, m, a) = setup();
+        let mut cur = a.clone();
+        for _ in 0..60 {
+            cur = cur.add_scalar(1.0).unwrap();
+        }
+        let before = rt.metrics();
+        let got = cur.collect().unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.total_tasks(), a.n_blocks() as u64);
+        assert_eq!(d.tasks_fused, 59 * a.n_blocks() as u64);
+        assert_eq!(got, m.map(|x| x + 60.0));
+    }
+}

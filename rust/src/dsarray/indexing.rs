@@ -65,6 +65,12 @@ impl DsArray {
                 self.shape
             );
         }
+        // Deferred elementwise expressions materialize before slicing (the
+        // backing blocks hold un-evaluated inputs); memoized, so slicing a
+        // chain several ways executes it once.
+        if self.expr.is_some() {
+            return self.force()?.slice(r0, r1, c0, c1);
+        }
         let (nr, nc) = (r1 - r0, c1 - c0);
         // Compose each axis with the existing view (slice-of-slice,
         // slice-of-take): fancy axes restrict the index map, contiguous
@@ -88,6 +94,9 @@ impl DsArray {
     pub fn get(&self, i: usize, j: usize) -> Result<f32> {
         if i >= self.shape.0 || j >= self.shape.1 {
             bail!("index ({i},{j}) out of bounds for shape {:?}", self.shape);
+        }
+        if self.expr.is_some() {
+            return self.force()?.get(i, j);
         }
         let (sr, sc) = match &self.view {
             None => (i, j),
@@ -127,6 +136,9 @@ impl DsArray {
                 bail!("row index {i} out of bounds for {} rows", self.shape.0);
             }
         }
+        if self.expr.is_some() {
+            return self.force()?.take_rows(idx);
+        }
         let base = self.view.clone().unwrap_or_default();
         let mapped: Vec<usize> = idx.iter().map(|&k| base.map_row(k)).collect();
         self.select_stored(Sel::Idx(mapped), base.col_sel(0, self.shape.1))
@@ -143,6 +155,9 @@ impl DsArray {
             if j >= self.shape.1 {
                 bail!("column index {j} out of bounds for {} columns", self.shape.1);
             }
+        }
+        if self.expr.is_some() {
+            return self.force()?.take_cols(idx);
         }
         let base = self.view.clone().unwrap_or_default();
         let mapped: Vec<usize> = idx.iter().map(|&k| base.map_col(k)).collect();

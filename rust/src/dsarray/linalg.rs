@@ -18,7 +18,7 @@ impl DsArray {
     /// versus N²+N for the Dataset baseline (paper §5.2) — submitted as ONE
     /// batch (one scheduler-lock round-trip for the whole operation).
     pub fn transpose(&self) -> Result<DsArray> {
-        if self.view.is_some() {
+        if self.is_lazy() {
             return self.force()?.transpose();
         }
         let (gr, gc) = self.grid;
@@ -71,7 +71,7 @@ impl DsArray {
             );
         }
         // Validated; now lazy views may pay their materialization tasks.
-        if self.view.is_some() || other.view.is_some() {
+        if self.is_lazy() || other.is_lazy() {
             return self.force()?.matmul(&other.force()?);
         }
         let (gr, _) = self.grid;
@@ -96,19 +96,20 @@ impl DsArray {
                     vec![meta],
                     CostHint::flops(flops).with_bytes(bytes),
                     Arc::new(move |ins: &[Arc<Block>]| {
+                        // Accumulate every k-step straight into the output
+                        // block (tiled gemm_acc / SpMM-acc kernels) — the
+                        // old path allocated a product per step and axpy'd.
                         let (a_blocks, b_blocks) = ins.split_at(kb);
-                        let mut acc: Option<DenseMatrix> = None;
+                        let mut acc = DenseMatrix::zeros(m, n);
                         for (a, b) in a_blocks.iter().zip(b_blocks) {
-                            let prod = match (&**a, &**b) {
-                                (Block::Csr(s), Block::Dense(d)) => s.matmul_dense(d)?,
-                                (x, y) => x.to_dense()?.matmul(&y.to_dense()?)?,
-                            };
-                            match &mut acc {
-                                None => acc = Some(prod),
-                                Some(c) => c.axpy(1.0, &prod)?,
+                            match (&**a, &**b) {
+                                (Block::Csr(s), Block::Dense(d)) => {
+                                    s.matmul_dense_acc(d, &mut acc)?
+                                }
+                                (x, y) => acc.gemm_acc(&x.to_dense()?, &y.to_dense()?)?,
                             }
                         }
-                        Ok(vec![Block::Dense(acc.expect("kb >= 1"))])
+                        Ok(vec![Block::Dense(acc)])
                     }),
                 ));
             }
@@ -129,7 +130,7 @@ impl DsArray {
     /// `(bs_a.0 * other.rows, bs_a.1 * other.cols)` so the grid layout
     /// follows self's grid directly.
     pub fn kron(&self, other: &DsArray) -> Result<DsArray> {
-        if self.view.is_some() || other.view.is_some() {
+        if self.is_lazy() || other.is_lazy() {
             return self.force()?.kron(&other.force()?);
         }
         let (ar, ac) = self.shape;
@@ -211,7 +212,7 @@ impl DsArray {
                 other.block_shape
             );
         }
-        if self.view.is_some() || other.view.is_some() {
+        if self.is_lazy() || other.is_lazy() {
             return self.force()?.tn_matmul(&other.force()?);
         }
         let gc = self.grid.1;
@@ -236,19 +237,15 @@ impl DsArray {
                     CostHint::flops(flops).with_bytes(bytes),
                     Arc::new(move |ins: &[Arc<Block>]| {
                         let (a_blocks, b_blocks) = ins.split_at(kb);
-                        let mut acc: Option<DenseMatrix> = None;
+                        let mut acc = DenseMatrix::zeros(ci, cj);
                         for (a, b) in a_blocks.iter().zip(b_blocks) {
                             let at = a.to_dense()?.transpose();
-                            let prod = match &**b {
-                                Block::Csr(s) => at.matmul(&s.to_dense())?,
-                                y => at.matmul(&y.to_dense()?)?,
-                            };
-                            match &mut acc {
-                                None => acc = Some(prod),
-                                Some(c) => c.axpy(1.0, &prod)?,
+                            match &**b {
+                                Block::Csr(s) => acc.gemm_acc(&at, &s.to_dense())?,
+                                y => acc.gemm_acc(&at, &y.to_dense()?)?,
                             }
                         }
-                        Ok(vec![Block::Dense(acc.expect("grid.0 >= 1"))])
+                        Ok(vec![Block::Dense(acc)])
                     }),
                 ));
             }

@@ -20,6 +20,7 @@ pub mod combine;
 pub mod creation;
 pub mod decomposition;
 pub mod elementwise;
+mod expr;
 pub mod indexing;
 pub mod linalg;
 pub mod rechunk;
@@ -32,6 +33,7 @@ use anyhow::{bail, Result};
 use crate::storage::{CsrMatrix, DenseMatrix};
 use crate::tasking::{Future, Runtime};
 
+pub(crate) use expr::ExprSpec;
 pub(crate) use view::{Sel, ViewSpec};
 
 /// Distributed 2-D array divided in blocks (paper Fig 4).
@@ -60,11 +62,21 @@ pub struct DsArray {
     /// Lazy-view slice descriptor; `None` for canonical arrays (the view
     /// layer, `dsarray::view`).
     pub(crate) view: Option<ViewSpec>,
+    /// Deferred elementwise expression; `None` for canonical arrays and
+    /// views (the fusion engine, `dsarray::expr`). For expression arrays
+    /// `blocks` is the base operand's grid; further operands live in the
+    /// spec. `view` and `expr` are never both set.
+    pub(crate) expr: Option<ExprSpec>,
 }
 
 impl Clone for DsArray {
     fn clone(&self) -> Self {
         self.rt.retain(&self.blocks);
+        if let Some(expr) = &self.expr {
+            for op in &expr.extra {
+                self.rt.retain(&op.blocks);
+            }
+        }
         Self {
             rt: self.rt.clone(),
             shape: self.shape,
@@ -73,12 +85,27 @@ impl Clone for DsArray {
             blocks: self.blocks.clone(),
             sparse: self.sparse,
             view: self.view.clone(),
+            expr: self.expr.clone(),
         }
     }
 }
 
 impl Drop for DsArray {
     fn drop(&mut self) {
+        if let Some(expr) = &self.expr {
+            {
+                let mut st = expr.state.lock().unwrap();
+                if st.release_credit {
+                    // force() already released one owner's references
+                    // early; this drop consumes the credit.
+                    st.release_credit = false;
+                    return;
+                }
+            }
+            for op in &expr.extra {
+                self.rt.release(&op.blocks);
+            }
+        }
         self.rt.release(&self.blocks);
     }
 }
@@ -118,6 +145,9 @@ impl DsArray {
 
     /// Pin every block of this array: exempt from refcount reclamation even
     /// after all owners drop (e.g. source data re-read via bare futures).
+    /// On a lazy view or deferred expression this pins the *backing/base*
+    /// blocks (which also disables in-place execution over them); force
+    /// first to pin the materialized result.
     pub fn pin(&self) {
         for &b in &self.blocks {
             self.rt.pin(b);
@@ -152,7 +182,10 @@ impl DsArray {
 
     /// Future of the block at grid position (i, j). For lazy views this
     /// addresses the shared *backing* grid (the view's mapping is not
-    /// applied); force the view first when canonical blocks are needed.
+    /// applied), and for deferred elementwise expressions it addresses the
+    /// raw **un-evaluated base operand**; force first when canonical
+    /// (computed) blocks are needed. Internal consumers and the estimators
+    /// all force at entry.
     pub fn block(&self, i: usize, j: usize) -> Future {
         debug_assert!(i < self.grid.0 && j < self.grid.1);
         self.blocks[i * self.grid.1 + j]
@@ -200,6 +233,7 @@ impl DsArray {
             blocks,
             sparse,
             view: None,
+            expr: None,
         };
         for i in 0..grid.0 {
             for j in 0..grid.1 {
@@ -222,8 +256,13 @@ impl DsArray {
     ///
     /// Lazy views collect **without submitting tasks**: only the backing
     /// blocks the view touches are synchronized, and the slice mapping is
-    /// applied while copying master-side.
+    /// applied while copying master-side. Deferred elementwise expressions
+    /// materialize first (one fused task per block, memoized — see
+    /// [`DsArray::force`]).
     pub fn collect(&self) -> Result<DenseMatrix> {
+        if self.expr.is_some() {
+            return self.force()?.collect();
+        }
         let Some(view) = &self.view else {
             let mut out = DenseMatrix::zeros(self.shape.0, self.shape.1);
             for i in 0..self.grid.0 {
@@ -285,7 +324,7 @@ impl DsArray {
     /// Lazy views are materialized first (this submits the view's copy
     /// tasks); `collect` stays task-free if dense output is acceptable.
     pub fn collect_csr(&self) -> Result<CsrMatrix> {
-        if self.view.is_some() {
+        if self.is_lazy() {
             return self.force()?.collect_csr();
         }
         if !self.sparse {
@@ -347,9 +386,10 @@ mod tests {
 
     #[test]
     fn consumed_intermediates_are_reclaimed() {
-        // A rebinding pipeline: each step's input array is dropped, so its
-        // blocks must be evicted once the step's tasks consume them,
-        // bounding resident memory by the live frontier.
+        // A rebinding pipeline: with the fused expression engine, the six
+        // chained ops never materialize intermediate generations at all —
+        // one fused task per block reads the (dead) source generation,
+        // which is granted in place and reclaimed.
         let rt = Runtime::local(2);
         let m = DenseMatrix::from_fn(32, 32, |i, j| (i + j) as f32);
         let mut cur = creation::from_matrix(&rt, &m, (8, 8)).unwrap();
@@ -360,14 +400,19 @@ mod tests {
         assert_eq!(got, m.map(|x| x + 6.0));
         rt.barrier().unwrap();
         let met = rt.metrics();
-        // 6 consumed generations × 16 blocks each were reclaimed.
-        assert!(met.blocks_evicted >= 6 * 16, "evicted {}", met.blocks_evicted);
-        // 7 generations of 16 KiB each were produced, but the peak resident
-        // set stays well below the total (only a couple of generations live
-        // at once).
-        let gen_bytes = 16 * 32 * 32 / 16 * 4; // 16 blocks x 8x8 f32
+        // One fused task per block, 5 per-block submissions fused away.
+        assert_eq!(met.tasks_for("dsarray.ew.fused"), 16);
+        assert_eq!(met.tasks_fused, 5 * 16);
+        // The dead source generation executes in place: all 16 blocks
+        // granted and reclaimed, and no fresh output bytes allocated.
+        assert_eq!(met.inplace_hits, 16, "source generation granted in place");
+        assert!(met.blocks_evicted >= 16, "evicted {}", met.blocks_evicted);
+        assert_eq!(met.bytes_allocated, 0);
+        // Where the eager pipeline produced 7 generations, the fused one
+        // keeps at most ~one generation resident.
+        let gen_bytes = 32 * 32 * 4; // 16 blocks x 8x8 f32
         assert!(
-            met.peak_resident_bytes < (7 * gen_bytes) as u64,
+            met.peak_resident_bytes <= 2 * gen_bytes as u64,
             "peak {} not bounded",
             met.peak_resident_bytes
         );

@@ -18,7 +18,7 @@ impl DsArray {
         if new_block.0 == 0 || new_block.1 == 0 {
             bail!("empty block shape {new_block:?}");
         }
-        if self.view.is_some() {
+        if self.is_lazy() {
             // Materialize first: rechunk always yields a canonical array.
             return self.force()?.rechunk(new_block);
         }

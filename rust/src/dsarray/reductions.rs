@@ -66,7 +66,7 @@ impl DsArray {
         if axis > 1 {
             bail!("axis must be 0 or 1, got {axis}");
         }
-        if self.view.is_some() {
+        if self.is_lazy() {
             return self.force()?.reduce_axis(kind, axis);
         }
         // One task per block-line, submitted as one batch.

@@ -78,7 +78,7 @@ impl DsArray {
     }
 
     fn shuffle_impl(&self, seed: u64, collections: bool) -> Result<DsArray> {
-        if self.view.is_some() {
+        if self.is_lazy() {
             return self.force()?.shuffle_impl(seed, collections);
         }
         if self.shape.0 < 2 {

@@ -261,6 +261,7 @@ impl DsArray {
             blocks,
             sparse,
             view: Some(view),
+            expr: None,
         };
         // Non-terminal stored lines must be full blocks: the view's
         // `coordinate / block_size` arithmetic depends on it. Sub-grids of a
@@ -315,15 +316,20 @@ impl DsArray {
         DsArray::from_view(rt, shape, block_shape, stored_grid, blocks, sparse, view)
     }
 
-    /// Materialize a lazy view into a canonical blocked array.
+    /// Materialize a lazy view or a deferred elementwise expression into a
+    /// canonical blocked array.
     ///
     /// Canonical arrays (including block-aligned slices) return a cheap
     /// clone that shares blocks — zero tasks. Lazy views submit one copy
     /// task per output block (`dsarray.index.slice` when the output lives
     /// inside a single backing block, `dsarray.index.gather` otherwise) and
-    /// preserve the sparse backend throughout. Operations that need
-    /// canonical blocks (linalg, elementwise, reductions, rechunk, shuffle,
-    /// the estimators) call this implicitly; call it yourself before
+    /// preserve the sparse backend throughout. Deferred elementwise chains
+    /// (`dsarray::expr`) collapse to one fused `dsarray.ew.fused` task per
+    /// block, executed in place when the executor holds the sole reference
+    /// to an input block; their materialization is **memoized**, so
+    /// repeated consumers of one chain execute it once. Operations that
+    /// need canonical blocks (linalg, reductions, rechunk, shuffle, the
+    /// estimators) call this implicitly; for views, call it yourself before
     /// chaining several such operations off one view, so the copy happens
     /// once instead of per operation.
     ///
@@ -338,6 +344,9 @@ impl DsArray {
     /// assert_eq!(owned.collect().unwrap(), lazy.collect().unwrap());
     /// ```
     pub fn force(&self) -> Result<DsArray> {
+        if self.expr.is_some() {
+            return self.force_expr();
+        }
         let Some(view) = self.view.clone() else {
             return Ok(self.clone());
         };

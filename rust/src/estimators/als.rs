@@ -395,7 +395,8 @@ fn gram_accelerated(f: &DenseMatrix) -> Result<DenseMatrix> {
             return Ok(g);
         }
     }
-    g.axpy(1.0, &f.transpose().matmul(f)?)?;
+    let ft = f.transpose();
+    g.gemm_acc(&ft, f)?;
     Ok(g)
 }
 

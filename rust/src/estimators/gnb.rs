@@ -248,6 +248,29 @@ mod tests {
     }
 
     #[test]
+    fn fit_on_deferred_fused_input() {
+        // The fit entry point must force a deferred elementwise chain
+        // (here a standardize-style expression) exactly once, memoized
+        // across fit and score.
+        let rt = Runtime::local(2);
+        let (data, truth) = blobs(120, 6, 3, 0.8, 4);
+        let x = creation::from_matrix(&rt, &data, (20, 3)).unwrap();
+        let y_m = DenseMatrix::from_fn(120, 1, |i, _| truth[i] as f32);
+        let y = creation::from_matrix(&rt, &y_m, (20, 1)).unwrap();
+        let lazy = x.mul_scalar(2.0).unwrap().add_scalar(-1.0).unwrap();
+        assert!(lazy.is_deferred());
+        let before = rt.metrics();
+        let mut gnb = GaussianNb::default();
+        gnb.fit(&lazy, Some(&y)).unwrap();
+        let score = gnb.score(&lazy, &y).unwrap();
+        assert!(score > 0.98, "score {score}");
+        // The chain materialized once (one fused task per block), not once
+        // per estimator entry.
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.tasks_for("dsarray.ew.fused"), x.n_blocks() as u64);
+    }
+
+    #[test]
     fn recovers_class_moments() {
         let rt = Runtime::local(2);
         // Two classes with known means 0 / 10.

@@ -498,6 +498,36 @@ mod tests {
     }
 
     #[test]
+    fn fit_on_deferred_fused_input_matches_eager() {
+        // K-means over a deferred `2x + 1` chain must equal K-means over
+        // the materialized equivalent, and the chain must fuse to one task
+        // per block (memoized across fit and predict).
+        let rt = Runtime::local(2);
+        let x = blobs(&rt, 60, 6, (16, 6));
+        let lazy = x.mul_scalar(2.0).unwrap().add_scalar(1.0).unwrap();
+        let eager = lazy.force().unwrap();
+        let cfg = KMeansConfig {
+            k: 2,
+            max_iter: 20,
+            tol: 1e-6,
+            seed: 3,
+        };
+        let mut km_lazy = KMeans::new(cfg.clone());
+        km_lazy.fit_dsarray(&lazy).unwrap();
+        let mut km_eager = KMeans::new(cfg);
+        km_eager.fit_dsarray(&eager).unwrap();
+        assert!((km_lazy.inertia - km_eager.inertia).abs() < 1e-3);
+        let p1 = km_lazy.predict(&lazy).unwrap().collect().unwrap();
+        let p2 = km_eager.predict(&eager).unwrap().collect().unwrap();
+        assert_eq!(p1, p2);
+        // One fused materialization total for the whole lazy flow.
+        assert_eq!(
+            rt.metrics().tasks_for("dsarray.ew.fused"),
+            x.n_blocks() as u64
+        );
+    }
+
+    #[test]
     fn predict_labels_match_blob_membership() {
         let rt = Runtime::local(2);
         let x = blobs(&rt, 40, 4, (10, 4));

@@ -92,7 +92,9 @@ impl Pca {
         let x = x.force()?;
         let x = &x;
         let rt = x.runtime().clone();
-        // Center then project: (X - μ) Wᵀ, both distributed ops.
+        // Center then project: (X - μ) Wᵀ. The centering is a deferred
+        // fused expression — matmul materializes it in one task per block,
+        // so no centered copy of X is ever staged separately.
         let mean_arr =
             crate::dsarray::creation::from_matrix(&rt, mean, (1, x.block_shape().1))?;
         let centered = x.sub_row_broadcast(&mean_arr)?;

@@ -1,16 +1,20 @@
 //! StandardScaler: per-feature standardization, the canonical first stage
 //! of the pipeline example. Fit computes distributed column statistics;
-//! transform standardizes each block through the fused `standardize` PJRT
-//! artifact (native fallback when artifacts are absent or blocks exceed the
-//! canonical shapes).
-
-use std::sync::Arc;
+//! transform standardizes through the **fused elementwise engine**: the
+//! `(x − μ) · σ⁻¹` chain is two deferred row-broadcasts that collapse to
+//! exactly ONE task per block (and zero intermediate allocations when the
+//! input block is exclusively owned) at materialization.
+//!
+//! This supersedes the per-block PJRT `standardize` artifact dispatch the
+//! transform used previously (the fused evaluator does the same single
+//! pass natively, composes with further chained ops, and can run in
+//! place); `runtime::exec::standardize` remains available for direct
+//! artifact calls and is still exercised by the PJRT bench/tests.
 
 use anyhow::{bail, Result};
 
-use crate::dsarray::DsArray;
-use crate::storage::{Block, BlockMeta, DenseMatrix};
-use crate::tasking::{BatchTask, CostHint, Future};
+use crate::dsarray::{creation, DsArray};
+use crate::storage::DenseMatrix;
 
 pub struct StandardScaler {
     /// (1, f) feature means after fit.
@@ -43,6 +47,8 @@ impl StandardScaler {
         let x = &x;
         let n = x.rows() as f32;
         let sums = x.sum_axis(0)?.collect()?;
+        // `x ** 2` stays deferred: sum_axis fuses it into its own pass via
+        // force, so this is one fused task + one reduction per block-line.
         let sumsq = x.pow(2.0)?.sum_axis(0)?.collect()?;
         let f = x.cols();
         let mean = DenseMatrix::from_fn(1, f, |_, j| sums.get(0, j) / n);
@@ -57,7 +63,11 @@ impl StandardScaler {
         Ok(())
     }
 
-    /// Standardize every block: `(x - μ) σ⁻¹` (fused PJRT kernel per block).
+    /// Standardize every block: `(x − μ) · σ⁻¹` as one deferred fused
+    /// chain — zero tasks now, exactly one task per block when the result
+    /// is consumed (and in-place execution when the input is a dead
+    /// intermediate). Returns the lazy array; chain further elementwise ops
+    /// onto it for free, or `force()` it to materialize once.
     pub fn transform(&self, x: &DsArray) -> Result<DsArray> {
         let (mean, inv) = match (&self.mean, &self.inv_std) {
             (Some(m), Some(s)) => (m.clone(), s.clone()),
@@ -67,43 +77,11 @@ impl StandardScaler {
             bail!("scaler fitted on {} features, got {}", mean.cols(), x.cols());
         }
         let x = x.force()?;
-        let x = &x;
         let rt = x.runtime().clone();
-        let bs1 = x.block_shape().1;
-        let mut batch = Vec::with_capacity(x.n_blocks());
-        for i in 0..x.grid().0 {
-            for j in 0..x.grid().1 {
-                let fut = x.block(i, j);
-                let c0 = j * bs1;
-                let cols = x.block_cols_at(j);
-                let mu = mean.slice(0, c0, 1, cols)?;
-                let is = inv.slice(0, c0, 1, cols)?;
-                let meta = BlockMeta::dense(fut.meta.rows, cols);
-                batch.push(BatchTask::new(
-                    "scaler.transform",
-                    vec![fut],
-                    vec![meta],
-                    CostHint::flops(2.0 * (meta.rows * meta.cols) as f64)
-                        .with_bytes(2.0 * meta.bytes() as f64),
-                    Arc::new(move |ins: &[Arc<Block>]| {
-                        let d = ins[0].to_dense()?;
-                        // PJRT fused kernel when the block fits an artifact.
-                        if d.rows() <= 128 && d.cols() <= 128 {
-                            if let Some(svc) = crate::runtime::global() {
-                                let out = crate::runtime::exec::standardize(svc, &d, &mu, &is)?;
-                                return Ok(vec![Block::Dense(out)]);
-                            }
-                        }
-                        let out = DenseMatrix::from_fn(d.rows(), d.cols(), |r, c| {
-                            (d.get(r, c) - mu.get(0, c)) * is.get(0, c)
-                        });
-                        Ok(vec![Block::Dense(out)])
-                    }),
-                ));
-            }
-        }
-        let blocks: Vec<Future> = rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
-        DsArray::from_parts(rt, x.shape(), x.block_shape(), blocks, false)
+        let bw = x.block_shape().1;
+        let mean_arr = creation::from_matrix(&rt, &mean, (1, bw))?;
+        let inv_arr = creation::from_matrix(&rt, &inv, (1, bw))?;
+        x.sub_row_broadcast(&mean_arr)?.mul_row_broadcast(&inv_arr)
     }
 
     pub fn fit_transform(&mut self, x: &DsArray) -> Result<DsArray> {
@@ -115,7 +93,6 @@ impl StandardScaler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dsarray::creation;
     use crate::tasking::Runtime;
     use crate::util::rng::Xoshiro256;
 
@@ -136,6 +113,33 @@ mod tests {
             assert!(mean.abs() < 1e-3, "col {j} mean {mean}");
             assert!((var - 1.0).abs() < 1e-2, "col {j} var {var}");
         }
+    }
+
+    #[test]
+    fn transform_chain_is_one_fused_task_per_block() {
+        // The acceptance criterion on the estimator hot path: the scaler's
+        // `(x − μ) · σ⁻¹` chain submits exactly one task per block.
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(64, 6, |i, j| (i * 6 + j) as f32 * 0.1);
+        let x = creation::from_matrix(&rt, &m, (16, 3)).unwrap();
+        let mut sc = StandardScaler::default();
+        sc.fit(&x).unwrap();
+        let before = rt.metrics();
+        let t = sc.transform(&x).unwrap();
+        // Deferred: nothing submitted yet.
+        assert!(t.is_deferred());
+        assert_eq!(rt.metrics().since(&before).total_tasks(), 0);
+        let got = t.collect().unwrap();
+        let d = rt.metrics().since(&before);
+        assert_eq!(d.tasks_for("dsarray.ew.fused"), x.n_blocks() as u64);
+        assert_eq!(d.total_tasks(), x.n_blocks() as u64);
+        assert_eq!(d.tasks_fused, x.n_blocks() as u64); // 2 ops fused to 1
+        // Values match the unfused reference computation.
+        let mean = sc.mean.as_ref().unwrap();
+        let inv = sc.inv_std.as_ref().unwrap();
+        let want =
+            DenseMatrix::from_fn(64, 6, |i, j| (m.get(i, j) - mean.get(0, j)) * inv.get(0, j));
+        assert!(got.max_abs_diff(&want) < 1e-5);
     }
 
     #[test]

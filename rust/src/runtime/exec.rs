@@ -99,9 +99,9 @@ pub fn gemm_acc(
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     let edge = pick_edge(m.max(k).max(n));
     if m.max(k).max(n) > edge {
-        // Larger than the largest artifact: native fallback.
+        // Larger than the largest artifact: native tiled-accumulate fallback.
         let mut out = c.clone();
-        out.axpy(1.0, &a.matmul(b)?)?;
+        out.gemm_acc(a, b)?;
         return Ok(out);
     }
     let name = artifact_name("gemm", edge);
@@ -123,7 +123,8 @@ pub fn gemm_tn_acc(
     let edge = pick_edge(m.max(k).max(n));
     if m.max(k).max(n) > edge {
         let mut out = c.clone();
-        out.axpy(1.0, &a.transpose().matmul(b)?)?;
+        let at = a.transpose();
+        out.gemm_acc(&at, b)?;
         return Ok(out);
     }
     let name = artifact_name("gemm_tn", edge);

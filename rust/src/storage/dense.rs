@@ -218,7 +218,8 @@ impl DenseMatrix {
         out
     }
 
-    /// Native matmul: `self (m,k) @ rhs (k,n)` — ikj loop order, used as the
+    /// Native matmul: `self (m,k) @ rhs (k,n)` — a zeroed accumulator fed
+    /// through the tiled [`DenseMatrix::gemm_acc`] kernel; used as the
     /// fallback/oracle next to the PJRT gemm artifact.
     pub fn matmul(&self, rhs: &DenseMatrix) -> Result<Self> {
         if self.cols != rhs.rows {
@@ -230,22 +231,56 @@ impl DenseMatrix {
                 rhs.cols
             );
         }
-        let (m, k, n) = (self.rows, self.cols, rhs.cols);
-        let mut out = Self::zeros(m, n);
-        for i in 0..m {
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for p in 0..k {
-                let a = self.data[i * k + p];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &rhs.data[p * n..(p + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
+        let mut out = Self::zeros(self.rows, rhs.cols);
+        out.gemm_acc(self, rhs)?;
+        Ok(out)
+    }
+
+    /// `self += a @ b` without materializing the product — the accumulate
+    /// kernel behind blocked matmul/tn_matmul/Gram/TSQR chains, which used
+    /// to allocate a temporary product per k-step and `axpy` it (two full
+    /// passes over the output per step).
+    ///
+    /// Cache-tiled ikj order: a row tile of `a` and a k-strip of `b` stay
+    /// hot across the inner loops, the innermost loop streams one output
+    /// row segment against one `b` row (both contiguous).
+    pub fn gemm_acc(&mut self, a: &DenseMatrix, b: &DenseMatrix) -> Result<()> {
+        if a.cols != b.rows || self.rows != a.rows || self.cols != b.cols {
+            bail!(
+                "gemm_acc shape mismatch: {}x{} += {}x{} @ {}x{}",
+                self.rows,
+                self.cols,
+                a.rows,
+                a.cols,
+                b.rows,
+                b.cols
+            );
+        }
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        // Tile sizes: IB rows of C/A per pass reuse the same KB-row strip
+        // of B (KB * n * 4 bytes ≈ L2-resident for n ≤ 1024).
+        const IB: usize = 64;
+        const KB: usize = 256;
+        for ib in (0..m).step_by(IB) {
+            let iend = (ib + IB).min(m);
+            for kb in (0..k).step_by(KB) {
+                let kend = (kb + KB).min(k);
+                for i in ib..iend {
+                    let crow = &mut self.data[i * n..(i + 1) * n];
+                    let arow = &a.data[i * k..(i + 1) * k];
+                    for (p, &av) in arow.iter().enumerate().take(kend).skip(kb) {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[p * n..(p + 1) * n];
+                        for (c, &bv) in crow.iter_mut().zip(brow) {
+                            *c += av * bv;
+                        }
+                    }
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 
     /// `self += alpha * other` (shape-checked).
@@ -557,6 +592,50 @@ mod tests {
         let c = a.matmul(&b).unwrap();
         assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
         assert!(a.matmul(&DenseMatrix::zeros(3, 2)).is_err());
+    }
+
+    #[test]
+    fn gemm_acc_accumulates_in_place() {
+        let a = DenseMatrix::from_fn(5, 7, |i, j| ((i * 7 + j) % 5) as f32 - 2.0);
+        let b = DenseMatrix::from_fn(7, 4, |i, j| ((i + 2 * j) % 3) as f32 * 0.5);
+        let mut c = DenseMatrix::from_fn(5, 4, |i, j| (i + j) as f32);
+        let want = {
+            let mut w = c.clone();
+            w.axpy(1.0, &a.matmul(&b).unwrap()).unwrap();
+            w
+        };
+        c.gemm_acc(&a, &b).unwrap();
+        assert!(c.max_abs_diff(&want) < 1e-5);
+        // Shape checks.
+        assert!(c.gemm_acc(&b, &a).is_err());
+        let mut wrong = DenseMatrix::zeros(5, 5);
+        assert!(wrong.gemm_acc(&a, &b).is_err());
+    }
+
+    #[test]
+    fn gemm_acc_tiling_covers_edge_sizes() {
+        // Sizes straddling the IB=64 / KB=256 tile boundaries must match a
+        // naive triple-loop oracle exactly.
+        for (m, k, n) in [(1, 1, 1), (65, 3, 2), (3, 300, 5), (66, 257, 9)] {
+            let a = DenseMatrix::from_fn(m, k, |i, j| ((i * 13 + j * 7) % 11) as f32 - 5.0);
+            let b = DenseMatrix::from_fn(k, n, |i, j| ((i * 5 + j * 3) % 7) as f32 * 0.25);
+            let mut got = DenseMatrix::zeros(m, n);
+            got.gemm_acc(&a, &b).unwrap();
+            let mut want = DenseMatrix::zeros(m, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0.0f32;
+                    for p in 0..k {
+                        s += a.get(i, p) * b.get(p, j);
+                    }
+                    want.set(i, j, s);
+                }
+            }
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "gemm_acc mismatch at {m}x{k}x{n}"
+            );
+        }
     }
 
     #[test]

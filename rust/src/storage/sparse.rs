@@ -287,6 +287,15 @@ impl CsrMatrix {
 
     /// SpMM: `self (m,k) @ dense (k,n) -> dense (m,n)`.
     pub fn matmul_dense(&self, rhs: &DenseMatrix) -> Result<DenseMatrix> {
+        let mut out = DenseMatrix::zeros(self.rows, rhs.cols());
+        self.matmul_dense_acc(rhs, &mut out)?;
+        Ok(out)
+    }
+
+    /// SpMM accumulate: `out += self @ rhs` — the sparse twin of
+    /// [`DenseMatrix::gemm_acc`], so blocked matmul chains accumulate CSR
+    /// k-steps without a temporary product block.
+    pub fn matmul_dense_acc(&self, rhs: &DenseMatrix, out: &mut DenseMatrix) -> Result<()> {
         if self.cols != rhs.rows() {
             bail!(
                 "spmm shape mismatch: {}x{} @ {}x{}",
@@ -296,19 +305,26 @@ impl CsrMatrix {
                 rhs.cols()
             );
         }
-        let n = rhs.cols();
-        let mut out = DenseMatrix::zeros(self.rows, n);
+        if out.rows() != self.rows || out.cols() != rhs.cols() {
+            bail!(
+                "spmm accumulator {}x{} != output shape {}x{}",
+                out.rows(),
+                out.cols(),
+                self.rows,
+                rhs.cols()
+            );
+        }
         for i in 0..self.rows {
             let (cols, vals) = self.row(i);
             let orow = out.row_mut(i);
             for (&c, &v) in cols.iter().zip(vals) {
                 let brow = rhs.row(c as usize);
-                for j in 0..n {
-                    orow[j] += v * brow[j];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += v * b;
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 
     /// Vertically stack CSR parts (all must share `cols`).
@@ -462,6 +478,21 @@ mod tests {
         let c = a.matmul_dense(&b).unwrap();
         let c_ref = a.to_dense().matmul(&b).unwrap();
         assert_eq!(c, c_ref);
+    }
+
+    #[test]
+    fn spmm_acc_accumulates_and_checks_shapes() {
+        let a = CsrMatrix::from_triplets(2, 3, &[(0, 1, 2.0), (1, 0, -1.0)]).unwrap();
+        let b = DenseMatrix::from_fn(3, 2, |i, j| (i * 2 + j) as f32);
+        let mut acc = DenseMatrix::full(2, 2, 5.0);
+        a.matmul_dense_acc(&b, &mut acc).unwrap();
+        let mut want = DenseMatrix::full(2, 2, 5.0);
+        want.axpy(1.0, &a.to_dense().matmul(&b).unwrap()).unwrap();
+        assert_eq!(acc, want);
+        // Mismatched accumulator shape rejected.
+        let mut wrong = DenseMatrix::zeros(3, 2);
+        assert!(a.matmul_dense_acc(&b, &mut wrong).is_err());
+        assert!(a.matmul_dense_acc(&DenseMatrix::zeros(4, 2), &mut acc).is_err());
     }
 
     #[test]

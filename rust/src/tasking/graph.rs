@@ -11,7 +11,7 @@ use std::sync::Arc;
 use crate::storage::{Block, BlockMeta};
 
 use super::metrics::Metrics;
-use super::task::{DataId, DataState, TaskId, TaskSpec, TaskSubmit};
+use super::task::{DataId, DataState, TaskBody, TaskId, TaskSpec, TaskSubmit};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TaskState {
@@ -68,7 +68,7 @@ impl Graph {
         out_metas: Vec<BlockMeta>,
         hint: super::task::CostHint,
         read_bytes: f64,
-        func: super::task::TaskFn,
+        body: TaskBody,
     ) -> (TaskId, Vec<DataId>, bool) {
         let tid = self.tasks.len() as TaskId;
         let mut write_ids = Vec::with_capacity(out_metas.len());
@@ -107,7 +107,7 @@ impl Graph {
                 hint,
                 read_bytes,
                 write_bytes,
-                func,
+                body,
             },
             state: if ready { TaskState::Ready } else { TaskState::Pending },
             deps_remaining: deps,
@@ -128,8 +128,9 @@ impl Graph {
         let n_out = t.out_metas.len();
         let write_bytes: f64 = t.out_metas.iter().map(|m| m.bytes() as f64).sum();
         let (tid, outs, ready) =
-            self.submit(t.name, &t.reads, t.out_metas, t.hint, t.read_bytes, t.func);
+            self.submit(t.name, &t.reads, t.out_metas, t.hint, t.read_bytes, t.body);
         metrics.record_submit(t.name, n_reads, n_out, t.read_bytes, write_bytes);
+        metrics.record_fused(t.fused_ops);
         (tid, outs, ready)
     }
 
@@ -216,6 +217,21 @@ impl Graph {
         Some(v.meta().bytes())
     }
 
+    /// Hand `id`'s value exclusively to its sole claiming reader, removing
+    /// it from the data table. Eligibility is the [`Graph::try_evict`]
+    /// condition with the claiming read itself still outstanding — i.e. the
+    /// value would be reclaimed right after this read completes anyway, so
+    /// granting it early lets the task reuse the buffer in place.
+    pub fn take_exclusive(&mut self, id: DataId) -> Option<Arc<Block>> {
+        let d = &mut self.data[id as usize];
+        if d.pinned || !d.ever_owned || d.handle_refs > 0 || d.pending_reads != 1 {
+            return None;
+        }
+        let v = d.value.take()?;
+        d.evicted = true;
+        Some(v)
+    }
+
     /// Longest path through the graph in task count — a lower bound used by
     /// property tests (the simulated makespan can never beat the critical
     /// path). O(V + E); valid because task ids are topologically ordered by
@@ -247,8 +263,8 @@ mod tests {
     use crate::tasking::task::CostHint;
     use std::sync::Arc;
 
-    fn noop() -> super::super::task::TaskFn {
-        Arc::new(|_| Ok(vec![]))
+    fn noop() -> TaskBody {
+        TaskBody::Shared(Arc::new(|_| Ok(vec![])))
     }
 
     fn meta() -> BlockMeta {
@@ -335,6 +351,29 @@ mod tests {
         assert_eq!(c.evicted, vec![4]);
         assert!(g.data[src as usize].value.is_none());
         assert!(g.data[src as usize].evicted);
+    }
+
+    #[test]
+    fn take_exclusive_mirrors_eviction_rules() {
+        let mut g = Graph::default();
+        let src = g.put_block(meta(), Some(Arc::new(Block::Dense(DenseMatrix::zeros(1, 1)))));
+        g.retain(src);
+        let _ = g.submit("t", &[src], vec![meta()], CostHint::default(), 4.0, noop());
+        // Handle still held: no grant.
+        assert!(g.take_exclusive(src).is_none());
+        g.release(src);
+        // Sole reader, no handles: granted, and the table slot is evicted.
+        let v = g.take_exclusive(src).unwrap();
+        assert_eq!(v.meta(), meta());
+        assert!(g.data[src as usize].value.is_none());
+        assert!(g.data[src as usize].evicted);
+        // Two outstanding readers: never granted.
+        let two = g.put_block(meta(), Some(Arc::new(Block::Dense(DenseMatrix::zeros(1, 1)))));
+        g.retain(two);
+        let _ = g.submit("r1", &[two], vec![meta()], CostHint::default(), 4.0, noop());
+        let _ = g.submit("r2", &[two], vec![meta()], CostHint::default(), 4.0, noop());
+        g.release(two);
+        assert!(g.take_exclusive(two).is_none());
     }
 
     #[test]

@@ -38,7 +38,7 @@ use crate::storage::{Block, BlockMeta};
 
 use super::graph::{Graph, TaskState};
 use super::metrics::Metrics;
-use super::task::{CostHint, DataId, TaskFn, TaskId, TaskSubmit};
+use super::task::{CostHint, DataId, OwnedTaskFn, TaskBody, TaskFn, TaskId, TaskInput, TaskSubmit};
 use super::Executor;
 
 /// One worker's ready deque plus its aggregate cost score (the steal
@@ -136,7 +136,8 @@ impl LocalExecutor {
             out_metas,
             hint,
             read_bytes,
-            func: f,
+            body: TaskBody::Shared(f),
+            fused_ops: 1,
         }])
         .pop()
         .expect("one entry per task")
@@ -161,6 +162,18 @@ impl Executor for LocalExecutor {
     /// batch may read outputs of earlier tasks in the same batch (ids are
     /// allocated in order).
     fn submit_batch(&self, tasks: Vec<TaskSubmit>) -> Vec<Vec<DataId>> {
+        self.submit_batch_releasing(tasks, &[])
+    }
+
+    /// Batch insertion plus handle releases in the SAME critical section:
+    /// the reads register before the handles drop (nothing evicts early),
+    /// and no claim can observe the stale handles (in-place grants for the
+    /// batch's own tasks are deterministic, not submission-order races).
+    fn submit_batch_releasing(
+        &self,
+        tasks: Vec<TaskSubmit>,
+        release: &[DataId],
+    ) -> Vec<Vec<DataId>> {
         let mut outs_all = Vec::with_capacity(tasks.len());
         let mut any_ready = false;
         {
@@ -175,6 +188,11 @@ impl Executor for LocalExecutor {
                     any_ready = true;
                 }
                 outs_all.push(outs);
+            }
+            for &id in release {
+                if let Some(bytes) = st.graph.release(id) {
+                    st.metrics.record_evicted(bytes);
+                }
             }
         }
         if any_ready {
@@ -311,6 +329,13 @@ fn pop_task(inner: &Inner, me: usize) -> Option<TaskId> {
     None
 }
 
+/// A claimed task's body with its resolved inputs, ready to run outside
+/// the central lock.
+enum Resolved {
+    Shared(TaskFn, Vec<Arc<Block>>),
+    Owned(OwnedTaskFn, Vec<TaskInput>),
+}
+
 fn worker_loop(inner: Arc<Inner>, me: usize) {
     loop {
         // ---- Acquire a ready task (deque fast path, then park) ----
@@ -339,30 +364,71 @@ fn worker_loop(inner: Arc<Inner>, me: usize) {
 
         // ---- Claim: transition to Running and resolve inputs ----
         let claimed = {
-            let mut st = inner.state.lock().unwrap();
+            let mut guard = inner.state.lock().unwrap();
+            let st = &mut *guard;
             st.queued = st.queued.saturating_sub(1);
             st.graph.tasks[tid as usize].state = TaskState::Running;
             st.running += 1;
-            let node = &st.graph.tasks[tid as usize];
-            let func = Arc::clone(&node.spec.func);
+            let body = st.graph.tasks[tid as usize].spec.body.clone();
+            let mut granted_bytes = 0usize;
             // Readiness guarantees every input is resolved; a hole here
             // (e.g. a reclaimed input resubmitted by a stale handle) is a
             // real error and must poison the runtime, not silently run the
             // task with empty inputs.
-            let inputs: Result<Vec<Arc<Block>>> = node
-                .spec
-                .reads
-                .iter()
-                .map(|&r| {
-                    st.graph.data[r as usize]
-                        .value
-                        .as_ref()
-                        .map(Arc::clone)
-                        .ok_or_else(|| anyhow!("input {r} unresolved for ready task"))
-                })
-                .collect();
-            match inputs {
-                Ok(ins) => Ok((func, ins)),
+            let resolved: Result<Resolved> = match body {
+                // Shared bodies only read the graph: resolve by borrow, no
+                // copy of the reads list in the critical section.
+                TaskBody::Shared(f) => st.graph.tasks[tid as usize]
+                    .spec
+                    .reads
+                    .iter()
+                    .map(|&r| {
+                        st.graph.data[r as usize]
+                            .value
+                            .as_ref()
+                            .map(Arc::clone)
+                            .ok_or_else(|| anyhow!("input {r} unresolved for ready task"))
+                    })
+                    .collect::<Result<Vec<_>>>()
+                    .map(|ins| Resolved::Shared(f, ins)),
+                // Owned bodies mutate the data table (`take_exclusive`), so
+                // the reads list is copied out first to release the borrow.
+                TaskBody::Owned(f) => {
+                    let reads: Vec<DataId> = st.graph.tasks[tid as usize].spec.reads.to_vec();
+                    reads
+                        .iter()
+                        .enumerate()
+                        .map(|(idx, &r)| {
+                            // In-place hook: the task's FIRST input — by
+                            // convention the fused evaluator's working
+                            // buffer — is handed over exclusively when this
+                            // task is its sole remaining consumer (the
+                            // eviction condition with this read
+                            // outstanding). Later inputs are read-only in
+                            // the evaluator, so granting them would only
+                            // inflate the in-place metrics; dead ones are
+                            // reclaimed at completion as usual.
+                            if idx == 0 {
+                                if let Some(v) = st.graph.take_exclusive(r) {
+                                    let bytes = v.meta().bytes();
+                                    granted_bytes += bytes;
+                                    st.metrics.record_inplace_grant(bytes);
+                                    return Ok(TaskInput::Owned(v));
+                                }
+                            }
+                            st.graph.data[r as usize]
+                                .value
+                                .as_ref()
+                                .map(Arc::clone)
+                                .map(TaskInput::Shared)
+                                .ok_or_else(|| anyhow!("input {r} unresolved for ready task"))
+                        })
+                        .collect::<Result<Vec<_>>>()
+                        .map(|ins| Resolved::Owned(f, ins))
+                }
+            };
+            match resolved {
+                Ok(res) => Ok((res, granted_bytes)),
                 Err(e) => {
                     let name = st.graph.tasks[tid as usize].spec.name;
                     st.graph.tasks[tid as usize].state = TaskState::Failed;
@@ -372,7 +438,7 @@ fn worker_loop(inner: Arc<Inner>, me: usize) {
                 }
             }
         };
-        let (func, inputs) = match claimed {
+        let (resolved, granted_bytes) = match claimed {
             Ok(fi) => fi,
             Err(()) => {
                 inner.cv.notify_all();
@@ -381,8 +447,14 @@ fn worker_loop(inner: Arc<Inner>, me: usize) {
         };
 
         // ---- Run outside the lock ----
-        let result = func(&inputs);
-        drop(inputs);
+        let result = match resolved {
+            Resolved::Shared(f, ins) => {
+                let r = f(&ins);
+                drop(ins);
+                r
+            }
+            Resolved::Owned(f, ins) => f(ins),
+        };
 
         // ---- Publish: store outputs, wake dependents, reclaim inputs ----
         {
@@ -401,6 +473,7 @@ fn worker_loop(inner: Arc<Inner>, me: usize) {
                     } else {
                         let done = st.graph.complete(tid, Some(outs));
                         st.metrics.record_resident(done.stored_bytes);
+                        st.metrics.record_allocated(done.stored_bytes, granted_bytes);
                         for bytes in done.evicted {
                             st.metrics.record_evicted(bytes);
                         }
@@ -540,7 +613,8 @@ mod tests {
                 out_metas: vec![BlockMeta::dense(1, 1)],
                 hint: CostHint::default(),
                 read_bytes: 4.0,
-                func: add_op(i as f32),
+                body: TaskBody::Shared(add_op(i as f32)),
+                fused_ops: 1,
             })
             .collect();
         let outs = ex.submit_batch(batch);
@@ -565,7 +639,8 @@ mod tests {
             out_metas: vec![BlockMeta::dense(1, 1)],
             hint: CostHint::default(),
             read_bytes: 4.0,
-            func: add_op(10.0),
+            body: TaskBody::Shared(add_op(10.0)),
+            fused_ops: 1,
         };
         // The output id of `first` is predictable: next data id after src+1.
         let first_out: DataId = src + 1;
@@ -575,7 +650,8 @@ mod tests {
             out_metas: vec![BlockMeta::dense(1, 1)],
             hint: CostHint::default(),
             read_bytes: 4.0,
-            func: add_op(100.0),
+            body: TaskBody::Shared(add_op(100.0)),
+            fused_ops: 1,
         };
         let outs = ex.submit_batch(vec![first, second]);
         assert_eq!(outs[0][0], first_out);
@@ -627,6 +703,77 @@ mod tests {
     }
 
     #[test]
+    fn owned_task_grants_inplace_only_for_dead_blocks() {
+        use std::sync::atomic::AtomicBool;
+        let ex = LocalExecutor::new(2);
+        let kept = ex.put_block(Block::Dense(DenseMatrix::full(2, 2, 1.0)));
+        let dead = ex.put_block(Block::Dense(DenseMatrix::full(2, 2, 2.0)));
+        ex.retain(&[kept, dead]);
+        // Gate the owned task behind a spinning predecessor so its claim —
+        // where the grant decision happens — runs only after `dead`'s
+        // handle is released.
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        let gate_out = ex.submit(
+            "gate",
+            &[],
+            vec![BlockMeta::dense(1, 1)],
+            CostHint::default(),
+            0.0,
+            Arc::new(move |_ins: &[Arc<Block>]| {
+                while !g.load(Ordering::SeqCst) {
+                    std::thread::yield_now();
+                }
+                Ok(vec![Block::Dense(DenseMatrix::zeros(1, 1))])
+            }),
+        );
+        // Ownership-aware task: adds 10 to every element of inputs it was
+        // granted exclusively, so the grant decision is observable. `dead`
+        // is the FIRST read — the only position eligible for a grant.
+        let outs = ex.submit_batch(vec![TaskSubmit {
+            name: "owned",
+            reads: vec![dead, kept, gate_out[0]],
+            out_metas: vec![
+                BlockMeta::dense(2, 2),
+                BlockMeta::dense(2, 2),
+                BlockMeta::dense(1, 1),
+            ],
+            hint: CostHint::default(),
+            read_bytes: 36.0,
+            body: TaskBody::Owned(Arc::new(|ins: Vec<TaskInput>| {
+                let mut outs = Vec::with_capacity(ins.len());
+                for inp in ins {
+                    let bump = if inp.is_owned() { 10.0 } else { 0.0 };
+                    let mut d = inp.into_dense()?;
+                    for x in d.data_mut() {
+                        *x += bump;
+                    }
+                    outs.push(Block::Dense(d));
+                }
+                Ok(outs)
+            })),
+            fused_ops: 3,
+        }]);
+        // `dead`'s handle goes away while its reader is still pending: the
+        // claim must hand the value over exclusively. `kept`'s handle stays.
+        ex.release(&[dead]);
+        gate.store(true, Ordering::SeqCst);
+        ex.barrier().unwrap();
+        let o = &outs[0];
+        assert_eq!(ex.wait(o[0]).unwrap().as_dense().unwrap().get(0, 0), 12.0);
+        assert_eq!(ex.wait(o[1]).unwrap().as_dense().unwrap().get(0, 0), 1.0);
+        assert_eq!(ex.wait(o[2]).unwrap().as_dense().unwrap().get(0, 0), 0.0);
+        // The granted block left the data table; the shared one survives.
+        assert!(ex.wait(dead).is_err());
+        assert!(ex.wait(kept).is_ok());
+        let m = ex.metrics();
+        assert_eq!(m.inplace_hits, 1);
+        assert_eq!(m.tasks_fused, 2);
+        // gate stored 4 B fresh; owned stored 36 B with 16 B reused.
+        assert_eq!(m.bytes_allocated, 24);
+    }
+
+    #[test]
     fn stealing_drains_unbalanced_queues() {
         // One giant batch lands round-robin; with 4 workers and heavily
         // skewed costs every task must still execute exactly once.
@@ -639,7 +786,8 @@ mod tests {
                 out_metas: vec![BlockMeta::dense(1, 1)],
                 hint: CostHint::flops(if i % 16 == 0 { 1e9 } else { 1.0 }),
                 read_bytes: 4.0,
-                func: add_op(1.0),
+                body: TaskBody::Shared(add_op(1.0)),
+                fused_ops: 1,
             })
             .collect();
         ex.submit_batch(batch);

@@ -27,8 +27,19 @@ pub struct Metrics {
     /// High-water mark of `resident_bytes` — the memory ceiling a pipeline
     /// actually needed, the headline number of refcount reclamation.
     pub peak_resident_bytes: u64,
-    /// Blocks reclaimed by refcount eviction (fully consumed, unpinned).
+    /// Blocks reclaimed by refcount eviction (fully consumed, unpinned),
+    /// including blocks granted exclusively to in-place tasks.
     pub blocks_evicted: u64,
+    /// Per-block task submissions avoided by expression fusion: a fused
+    /// task covering k logical elementwise ops contributes k − 1.
+    pub tasks_fused: u64,
+    /// Input blocks handed exclusively to ownership-aware tasks at claim
+    /// time (the fused closure mutates these buffers in place).
+    pub inplace_hits: u64,
+    /// Output bytes stored from fresh allocations — per task, stored output
+    /// bytes minus exclusively-granted input bytes (floored at 0), so
+    /// in-place execution shows up as bytes *not* allocated.
+    pub bytes_allocated: u64,
 }
 
 impl Metrics {
@@ -59,6 +70,25 @@ impl Metrics {
     pub fn record_evicted(&mut self, bytes: usize) {
         self.resident_bytes = self.resident_bytes.saturating_sub(bytes as u64);
         self.blocks_evicted += 1;
+    }
+
+    /// A task fusing `ops` logical operations was submitted (ordinary tasks
+    /// pass 1 and contribute nothing).
+    pub fn record_fused(&mut self, ops: u32) {
+        self.tasks_fused += u64::from(ops.saturating_sub(1));
+    }
+
+    /// An input block was granted exclusively to an in-place task.
+    pub fn record_inplace_grant(&mut self, bytes: usize) {
+        self.inplace_hits += 1;
+        self.resident_bytes = self.resident_bytes.saturating_sub(bytes as u64);
+        self.blocks_evicted += 1;
+    }
+
+    /// A completed task stored `stored` output bytes after receiving
+    /// `granted` bytes of exclusively-owned inputs (reused in place).
+    pub fn record_allocated(&mut self, stored: usize, granted: usize) {
+        self.bytes_allocated += stored.saturating_sub(granted) as u64;
     }
 
     pub fn total_tasks(&self) -> u64 {
@@ -99,6 +129,9 @@ impl Metrics {
         out.read_bytes -= earlier.read_bytes;
         out.write_bytes -= earlier.write_bytes;
         out.blocks_evicted -= earlier.blocks_evicted;
+        out.tasks_fused -= earlier.tasks_fused;
+        out.inplace_hits -= earlier.inplace_hits;
+        out.bytes_allocated -= earlier.bytes_allocated;
         out
     }
 }
@@ -133,6 +166,29 @@ mod tests {
         assert_eq!(d.tasks_for("a"), 1);
         assert_eq!(d.tasks_for("b"), 1);
         assert_eq!(d.read_edges, 3);
+    }
+
+    #[test]
+    fn fusion_and_inplace_counters() {
+        let mut m = Metrics::default();
+        m.record_fused(1); // ordinary task: no credit
+        m.record_fused(3); // fuses 3 ops: 2 submissions avoided
+        assert_eq!(m.tasks_fused, 2);
+        m.record_resident(100);
+        m.record_inplace_grant(40);
+        assert_eq!(m.inplace_hits, 1);
+        assert_eq!(m.resident_bytes, 60);
+        assert_eq!(m.blocks_evicted, 1);
+        m.record_allocated(50, 40);
+        m.record_allocated(10, 30); // full reuse floors at 0
+        assert_eq!(m.bytes_allocated, 10);
+        let snap = m.clone();
+        m.record_fused(2);
+        m.record_allocated(8, 0);
+        let d = m.since(&snap);
+        assert_eq!(d.tasks_fused, 1);
+        assert_eq!(d.inplace_hits, 0);
+        assert_eq!(d.bytes_allocated, 8);
     }
 
     #[test]

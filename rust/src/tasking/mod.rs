@@ -26,7 +26,14 @@
 //!   multi-step pipeline's resident memory is bounded by its live frontier
 //!   instead of growing with the whole graph. [`Metrics`] tracks
 //!   `peak_resident_bytes` and `blocks_evicted`; [`Runtime::pin`] opts a
-//!   block out.
+//!   block out;
+//! * **ownership-aware tasks** ([`TaskBody::Owned`]) extend reclamation
+//!   into execution: at claim time, an input block that meets the eviction
+//!   condition (sole outstanding reader, no handles, unpinned) is handed to
+//!   the task exclusively ([`TaskInput::Owned`]) so it can mutate the
+//!   buffer in place instead of allocating — the execution mode of the
+//!   fused elementwise engine (`dsarray::expr`). [`Metrics`] counts
+//!   `tasks_fused`, `inplace_hits` and `bytes_allocated`.
 //!
 //! Two [`Executor`] backends share the submission API:
 //! [`Runtime::local`] — a real thread-pool master–worker with per-worker
@@ -49,7 +56,9 @@ use anyhow::{bail, Result};
 use crate::storage::{Block, BlockMeta};
 pub use metrics::Metrics;
 pub use sim::{SimConfig, SimReport};
-pub use task::{CostHint, DataId, TaskFn, TaskId, TaskSpec, TaskSubmit};
+pub use task::{
+    CostHint, DataId, OwnedTaskFn, TaskBody, TaskFn, TaskId, TaskInput, TaskSpec, TaskSubmit,
+};
 
 /// Handle to a submitted-but-possibly-unfinished block — the PyCOMPSs
 /// "future object" (paper §3.1.2). Metadata is always known; the value
@@ -84,6 +93,22 @@ pub trait Executor: Send + Sync {
     /// read outputs of earlier tasks in the same batch.
     fn submit_batch(&self, tasks: Vec<TaskSubmit>) -> Vec<Vec<DataId>>;
 
+    /// Insert a batch and then drop one application handle reference per
+    /// entry of `release` — atomically with respect to task claims, so a
+    /// submitter that hands its inputs over to the batch (the fused
+    /// elementwise engine's early release) can register its reads before
+    /// the handles disappear. The default is the non-atomic sequence;
+    /// executors with concurrent claim paths should override it.
+    fn submit_batch_releasing(
+        &self,
+        tasks: Vec<TaskSubmit>,
+        release: &[DataId],
+    ) -> Vec<Vec<DataId>> {
+        let outs = self.submit_batch(tasks);
+        self.release(release);
+        outs
+    }
+
     /// Synchronize one id and return its block — `compss_wait_on`.
     fn wait(&self, id: DataId) -> Result<Arc<Block>>;
 
@@ -117,7 +142,10 @@ pub struct BatchTask {
     pub reads: Vec<Future>,
     pub out_metas: Vec<BlockMeta>,
     pub hint: CostHint,
-    pub func: TaskFn,
+    pub body: TaskBody,
+    /// Logical operations this task fuses (1 for ordinary tasks); feeds
+    /// [`Metrics`]' `tasks_fused` counter.
+    pub fused_ops: u32,
 }
 
 impl BatchTask {
@@ -133,8 +161,35 @@ impl BatchTask {
             reads,
             out_metas,
             hint,
-            func,
+            body: TaskBody::Shared(func),
+            fused_ops: 1,
         }
+    }
+
+    /// An ownership-aware task: the executor grants exclusively-consumable
+    /// inputs as [`TaskInput::Owned`] so the closure can mutate them in
+    /// place (the fused elementwise engine's execution mode).
+    pub fn new_owned(
+        name: &'static str,
+        reads: Vec<Future>,
+        out_metas: Vec<BlockMeta>,
+        hint: CostHint,
+        func: OwnedTaskFn,
+    ) -> Self {
+        Self {
+            name,
+            reads,
+            out_metas,
+            hint,
+            body: TaskBody::Owned(func),
+            fused_ops: 1,
+        }
+    }
+
+    /// Declare how many logical operations this task fuses.
+    pub fn with_fused_ops(mut self, ops: u32) -> Self {
+        self.fused_ops = ops.max(1);
+        self
     }
 }
 
@@ -218,6 +273,19 @@ impl Runtime {
     /// calls (ids are allocated in order), so batching is purely a
     /// throughput optimization.
     pub fn submit_batch(&self, batch: Vec<BatchTask>) -> Vec<Vec<Future>> {
+        self.submit_batch_releasing(batch, &[])
+    }
+
+    /// As [`Runtime::submit_batch`], additionally dropping one application
+    /// handle reference per entry of `release` under the SAME scheduler
+    /// critical section. The batch's reads register before the handles go,
+    /// so nothing is evicted prematurely — and claims never observe the
+    /// stale handles, which is what makes in-place grants deterministic.
+    pub fn submit_batch_releasing(
+        &self,
+        batch: Vec<BatchTask>,
+        release: &[Future],
+    ) -> Vec<Vec<Future>> {
         let mut metas: Vec<Vec<BlockMeta>> = Vec::with_capacity(batch.len());
         let mut subs: Vec<TaskSubmit> = Vec::with_capacity(batch.len());
         for t in batch {
@@ -230,10 +298,12 @@ impl Runtime {
                 out_metas: t.out_metas,
                 hint: t.hint,
                 read_bytes,
-                func: t.func,
+                body: t.body,
+                fused_ops: t.fused_ops,
             });
         }
-        let ids = self.exec.submit_batch(subs);
+        let release_ids: Vec<DataId> = release.iter().map(|f| f.id).collect();
+        let ids = self.exec.submit_batch_releasing(subs, &release_ids);
         ids.into_iter()
             .zip(metas)
             .map(|(ids, metas)| {

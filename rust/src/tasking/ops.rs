@@ -103,15 +103,17 @@ pub fn matmul_op() -> TaskFn {
     })
 }
 
-/// `C += A @ B` accumulate: inputs [A, B, C]; used by blocked matmul chains.
+/// `C += A @ B` accumulate: inputs [A, B, C]; used by blocked matmul
+/// chains. Accumulates straight into C through the tiled
+/// `DenseMatrix::gemm_acc` / CSR `matmul_dense_acc` kernels — no
+/// temporary product block.
 pub fn gemm_acc_op() -> TaskFn {
     Arc::new(|ins: &[Arc<Block>]| {
-        let prod = match (&*ins[0], &*ins[1]) {
-            (Block::Csr(a), Block::Dense(b)) => a.matmul_dense(b)?,
-            (a, b) => a.to_dense()?.matmul(&b.to_dense()?)?,
-        };
         let mut c = ins[2].to_dense()?;
-        c.axpy(1.0, &prod)?;
+        match (&*ins[0], &*ins[1]) {
+            (Block::Csr(a), Block::Dense(b)) => a.matmul_dense_acc(b, &mut c)?,
+            (a, b) => c.gemm_acc(&a.to_dense()?, &b.to_dense()?)?,
+        }
         Ok(vec![Block::Dense(c)])
     })
 }

@@ -216,7 +216,8 @@ impl SimExecutor {
             out_metas,
             hint,
             read_bytes,
-            func: f,
+            body: crate::tasking::task::TaskBody::Shared(f),
+            fused_ops: 1,
         }])
         .pop()
         .expect("one entry per task")

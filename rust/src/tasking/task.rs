@@ -4,7 +4,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::storage::{Block, BlockMeta};
+use crate::storage::{Block, BlockMeta, DenseMatrix};
 
 /// Index into the runtime's data table. Single-assignment: exactly one
 /// producer task (or a `put_block`) ever writes an id — this is PyCOMPSs'
@@ -17,6 +17,68 @@ pub type TaskId = u32;
 /// The computation a task performs over its resolved input blocks.
 /// Must return exactly as many blocks as the task declared output metas.
 pub type TaskFn = Arc<dyn Fn(&[Arc<Block>]) -> Result<Vec<Block>> + Send + Sync>;
+
+/// One resolved input of an ownership-aware task (see [`OwnedTaskFn`]).
+pub enum TaskInput {
+    /// Still readable by other tasks or application handles — read-only.
+    Shared(Arc<Block>),
+    /// Exclusively granted: at claim time the executor proved no other
+    /// reader, handle, or pin will ever need this value (the same condition
+    /// refcount reclamation uses — the block would have been evicted right
+    /// after this read anyway) and removed it from the data table. The task
+    /// may consume the buffer in place. Only a task's FIRST input is ever
+    /// granted — by convention the working buffer of fused evaluation; the
+    /// rest are read-only and arrive [`TaskInput::Shared`].
+    Owned(Arc<Block>),
+}
+
+impl TaskInput {
+    /// Borrow the block regardless of ownership.
+    pub fn block(&self) -> &Block {
+        match self {
+            TaskInput::Shared(b) | TaskInput::Owned(b) => b,
+        }
+    }
+
+    pub fn is_owned(&self) -> bool {
+        matches!(self, TaskInput::Owned(_))
+    }
+
+    /// Dense payload — by move (zero-copy) for exclusively-owned dense
+    /// blocks, by copy otherwise. The copy fallback also covers the rare
+    /// case where a `wait` client still holds a clone of an owned `Arc`.
+    pub fn into_dense(self) -> Result<DenseMatrix> {
+        match self {
+            TaskInput::Owned(arc) => match Arc::try_unwrap(arc) {
+                Ok(Block::Dense(m)) => Ok(m),
+                Ok(b) => b.to_dense(),
+                Err(arc) => arc.to_dense(),
+            },
+            TaskInput::Shared(arc) => arc.to_dense(),
+        }
+    }
+}
+
+/// An ownership-aware task function: inputs arrive as [`TaskInput`]s so the
+/// closure can mutate exclusively-owned blocks in place instead of
+/// allocating fresh outputs. Used by the fused elementwise engine
+/// (`dsarray::expr`); ordinary tasks keep the simpler [`TaskFn`] shape.
+pub type OwnedTaskFn = Arc<dyn Fn(Vec<TaskInput>) -> Result<Vec<Block>> + Send + Sync>;
+
+/// The executable body of a task: a plain shared-input function, or an
+/// ownership-aware one eligible for in-place input grants.
+#[derive(Clone)]
+pub enum TaskBody {
+    Shared(TaskFn),
+    Owned(OwnedTaskFn),
+}
+
+impl TaskBody {
+    /// Whether the executor should attempt exclusive input grants.
+    pub fn wants_ownership(&self) -> bool {
+        matches!(self, TaskBody::Owned(_))
+    }
+}
 
 /// Cost hint captured at submission time; the discrete-event simulator turns
 /// it into a duration via the calibrated [`crate::tasking::sim::CostModel`].
@@ -63,9 +125,8 @@ pub struct TaskSpec {
     pub read_bytes: f64,
     /// Total bytes of the declared outputs.
     pub write_bytes: f64,
-    /// The actual computation; `None` never occurs today but the simulator
-    /// path simply ignores it.
-    pub func: TaskFn,
+    /// The actual computation (the simulator path simply ignores it).
+    pub body: TaskBody,
 }
 
 impl TaskSpec {
@@ -95,7 +156,10 @@ pub struct TaskSubmit {
     pub hint: CostHint,
     /// Total bytes of the declared inputs (precomputed by the submitter).
     pub read_bytes: f64,
-    pub func: TaskFn,
+    pub body: TaskBody,
+    /// Logical operations this task fuses (1 for ordinary tasks). The
+    /// metrics layer credits `fused_ops - 1` to `Metrics::tasks_fused`.
+    pub fused_ops: u32,
 }
 
 /// Per-data record in the runtime table.
@@ -158,10 +222,30 @@ mod tests {
             hint: CostHint::default(),
             read_bytes: 0.0,
             write_bytes: 0.0,
-            func: Arc::new(|_| Ok(vec![])),
+            body: TaskBody::Shared(Arc::new(|_| Ok(vec![]))),
         };
         assert_eq!(spec.arity_in(), 3);
         assert_eq!(spec.arity_out(), 1);
         assert_eq!(spec.cost_score(), 1.0); // floored for zero-hint tasks
+    }
+
+    #[test]
+    fn task_input_ownership_semantics() {
+        let m = DenseMatrix::from_fn(2, 2, |i, j| (i * 2 + j) as f32);
+        // Owned with a sole reference: the dense payload moves out.
+        let owned = TaskInput::Owned(Arc::new(Block::Dense(m.clone())));
+        assert!(owned.is_owned());
+        assert_eq!(owned.into_dense().unwrap(), m);
+        // Owned but a clone escaped (e.g. a wait client): copy fallback.
+        let arc = Arc::new(Block::Dense(m.clone()));
+        let escaped = Arc::clone(&arc);
+        let owned = TaskInput::Owned(arc);
+        assert_eq!(owned.into_dense().unwrap(), m);
+        assert_eq!(escaped.as_dense().unwrap(), &m);
+        // Shared never moves.
+        let shared = TaskInput::Shared(Arc::new(Block::Dense(m.clone())));
+        assert!(!shared.is_owned());
+        assert_eq!(shared.block().meta(), BlockMeta::dense(2, 2));
+        assert_eq!(shared.into_dense().unwrap(), m);
     }
 }
