@@ -1,0 +1,99 @@
+//! Out-of-core quickstart: ingest a CSV with the parallel partitioned
+//! loader, fit KMeans under a memory budget **half** the array's footprint,
+//! and verify the centroids match an unconstrained in-memory run.
+//!
+//! ```text
+//! cargo run --release --example out_of_core
+//! cargo run --release --example out_of_core -- --data fixtures/csv_parts --svm fixtures/part.svm
+//! ```
+//!
+//! `--data <dir>` loads a partition directory (one CSV file per block-row)
+//! instead of generating data; `--svm <file>` additionally smoke-tests the
+//! parallel SVMLight loader; `--budget-kb <n>` overrides the budget.
+
+use anyhow::Result;
+use rustdslib::dsarray::io as dsio;
+use rustdslib::estimators::kmeans::{KMeans, KMeansConfig};
+use rustdslib::estimators::Estimator;
+use rustdslib::storage::DenseMatrix;
+use rustdslib::tasking::Runtime;
+use rustdslib::util::rng::Xoshiro256;
+
+fn main() -> Result<()> {
+    let args = rustdslib::util::cli::Args::from_env();
+    let workers = args.get_usize("workers", 2);
+
+    // Where the data comes from: a partition directory, or a generated file.
+    let mut generated = None;
+    let (path, block_shape) = match args.get("data") {
+        // Partition directory: rows-per-block comes from the files.
+        Some(dir) => (std::path::PathBuf::from(dir), (usize::MAX, 16)),
+        None => {
+            let mut rng = Xoshiro256::seed_from_u64(9);
+            let m = DenseMatrix::from_fn(512, 16, |_, _| rng.next_normal());
+            let p = std::env::temp_dir()
+                .join(format!("rustdslib_ooc_example_{}.csv", std::process::id()));
+            rustdslib::storage::io::write_csv(&p, &m, ',')?;
+            generated = Some(p.clone());
+            (p, (64, 16))
+        }
+    };
+
+    // Unconstrained baseline.
+    let rt_mem = Runtime::local(workers);
+    let x_mem = dsio::load_csv(&rt_mem, &path, block_shape, ',')?;
+    let footprint = (x_mem.rows() * x_mem.cols() * 4) as u64;
+    let mut km_mem = KMeans::new(KMeansConfig::default());
+    km_mem.fit(&x_mem, None)?;
+
+    // Same pipeline at HALF the footprint: blocks spill to disk and fault
+    // back in as the fit touches them.
+    let budget = args.get_u64("budget-kb", 0) * 1024;
+    let budget = if budget > 0 { budget } else { (footprint / 2).max(1) };
+    let rt = Runtime::local_with_budget(workers, budget)?;
+    let x = dsio::load_csv(&rt, &path, block_shape, ',')?;
+    println!(
+        "loaded {}x{} ({} blocks) from {} — footprint {} B, budget {} B",
+        x.rows(),
+        x.cols(),
+        x.n_blocks(),
+        path.display(),
+        footprint,
+        budget
+    );
+    let mut km = KMeans::new(KMeansConfig::default());
+    km.fit(&x, None)?;
+
+    let same = km.centers.as_ref() == km_mem.centers.as_ref();
+    let met = rt.metrics();
+    println!(
+        "kmeans at {}x RAM: centroids identical to in-memory run: {same}",
+        (footprint as f64 / budget as f64 * 10.0).round() / 10.0
+    );
+    println!(
+        "spilled {} blocks ({} B written), faulted {} back, peak resident {} B",
+        met.blocks_spilled, met.spill_bytes, met.blocks_faulted, met.peak_resident_bytes
+    );
+    assert!(same, "out-of-core run must be bit-identical");
+    assert!(met.blocks_spilled > 0 && met.blocks_faulted > 0);
+
+    // Optional: smoke the parallel SVMLight loader against a fixture.
+    if let Some(svm) = args.get("svm") {
+        let nf = args.get_usize("svm-features", 10);
+        let (xs, ys) = dsio::load_svmlight(&rt, std::path::Path::new(svm), nf, (64, nf))?;
+        println!(
+            "svmlight: {}x{} sparse samples + {} labels loaded in {} tasks",
+            xs.rows(),
+            xs.cols(),
+            ys.rows(),
+            rt.metrics().tasks_for("dsarray.io.load_svmlight")
+        );
+        xs.runtime().barrier()?;
+    }
+
+    if let Some(p) = generated {
+        std::fs::remove_file(p).ok();
+    }
+    println!("ok");
+    Ok(())
+}

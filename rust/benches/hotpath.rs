@@ -214,6 +214,79 @@ fn main() -> Result<()> {
         ));
     }
 
+    // ---- Parallel partitioned load: serial baseline vs 1/4/16 block-rows ----
+    // Serial = master-side read + scatter (the pre-out-of-core path); the
+    // parallel loader splits the file by byte ranges and parses one task
+    // per block-row, so parallelism scales with the row blocking.
+    let load_m = DenseMatrix::from_fn(512, 64, |_, _| rng.next_normal());
+    let csv_path = std::env::temp_dir().join(format!(
+        "rustdslib_bench_load_{}.csv",
+        std::process::id()
+    ));
+    rustdslib::storage::io::write_csv(&csv_path, &load_m, ',')?;
+    let load_mb = (512 * 64 * 4) as f64 / (1024.0 * 1024.0);
+    let t_serial_load = time(reps, || {
+        let rt2 = Runtime::local(workers);
+        let m = rustdslib::storage::io::read_csv(&csv_path, ',')?;
+        let a = creation::from_matrix(&rt2, &m, (512, 64))?;
+        a.runtime().barrier()
+    })?;
+    rows.push((
+        "load csv 512x64 serial (read+scatter)".into(),
+        t_serial_load,
+        format!("{:.1} MB/s", load_mb / t_serial_load),
+    ));
+    for nb in [1usize, 4, 16] {
+        let t = time(reps, || {
+            let rt2 = Runtime::local(workers);
+            let a = rustdslib::dsarray::io::load_csv(&rt2, &csv_path, (512 / nb, 64), ',')?;
+            a.runtime().barrier()
+        })?;
+        rows.push((
+            format!("load csv 512x64 parallel {nb} block-row{}", if nb > 1 { "s" } else { "" }),
+            t,
+            format!("{:.1} MB/s ({:.2}x vs serial)", load_mb / t, t_serial_load / t.max(1e-12)),
+        ));
+    }
+    std::fs::remove_file(&csv_path).ok();
+
+    // ---- In-memory vs spill-backed matmul (budget = half of one operand) ----
+    let mm = DenseMatrix::from_fn(256, 256, |_, _| rng.next_normal());
+    let mm_gflops = 2.0 * 256f64.powi(3) / 1e9;
+    let t_mm_mem = time(reps, || {
+        let rt2 = Runtime::local(workers);
+        let a = creation::from_matrix(&rt2, &mm, (64, 64))?;
+        let b = creation::from_matrix(&rt2, &mm, (64, 64))?;
+        let c = a.matmul(&b)?;
+        c.runtime().barrier()
+    })?;
+    rows.push((
+        "matmul 256³ in-memory".into(),
+        t_mm_mem,
+        format!("{:.2} GFLOP/s", mm_gflops / t_mm_mem),
+    ));
+    let (mut spilled, mut faulted) = (0u64, 0u64);
+    let t_mm_ooc = time(reps, || {
+        // Budget: half of ONE operand — all three arrays stream through it.
+        let rt2 = Runtime::local_with_budget(workers, 256 * 256 * 4 / 2)?;
+        let a = creation::from_matrix(&rt2, &mm, (64, 64))?;
+        let b = creation::from_matrix(&rt2, &mm, (64, 64))?;
+        let c = a.matmul(&b)?;
+        c.runtime().barrier()?;
+        let met = rt2.metrics();
+        (spilled, faulted) = (met.blocks_spilled, met.blocks_faulted);
+        Ok(())
+    })?;
+    rows.push((
+        "matmul 256³ spill-backed (budget ½ operand)".into(),
+        t_mm_ooc,
+        format!(
+            "{:.2} GFLOP/s, {spilled} spills/{faulted} faults, {:.2}x in-memory cost",
+            mm_gflops / t_mm_ooc,
+            t_mm_ooc / t_mm_mem.max(1e-12)
+        ),
+    ));
+
     // ---- Task-runtime overhead: empty tasks, one submit per task ----
     let t_serial = time(reps, || {
         let rt2 = Runtime::local(workers);

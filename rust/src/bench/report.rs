@@ -109,8 +109,9 @@ impl Series {
 
 /// Render runtime [`Metrics`] as a single-line JSON object, including the
 /// residency counters added with refcount reclamation
-/// (`peak_resident_bytes`, `blocks_evicted`) and the fusion counters
-/// (`tasks_fused`, `inplace_hits`, `bytes_allocated`).
+/// (`peak_resident_bytes`, `blocks_evicted`), the fusion counters
+/// (`tasks_fused`, `inplace_hits`, `bytes_allocated`), and the out-of-core
+/// counters (`blocks_spilled`, `blocks_faulted`, `spill_bytes`).
 pub fn metrics_json(m: &Metrics) -> String {
     let mut out = String::from("{");
     let _ = write!(out, "\"total_tasks\":{}", m.total_tasks());
@@ -124,6 +125,9 @@ pub fn metrics_json(m: &Metrics) -> String {
     let _ = write!(out, ",\"tasks_fused\":{}", m.tasks_fused);
     let _ = write!(out, ",\"inplace_hits\":{}", m.inplace_hits);
     let _ = write!(out, ",\"bytes_allocated\":{}", m.bytes_allocated);
+    let _ = write!(out, ",\"blocks_spilled\":{}", m.blocks_spilled);
+    let _ = write!(out, ",\"blocks_faulted\":{}", m.blocks_faulted);
+    let _ = write!(out, ",\"spill_bytes\":{}", m.spill_bytes);
     out.push_str(",\"tasks_by_op\":{");
     for (i, (k, v)) in m.tasks_by_op.iter().enumerate() {
         if i > 0 {
@@ -269,6 +273,8 @@ mod tests {
         m.record_fused(4);
         m.record_inplace_grant(256);
         m.record_allocated(512, 256);
+        m.record_spilled(512, 512);
+        m.record_faulted(512);
         let s = metrics_json(&m);
         let v = crate::util::json::parse(&s).unwrap();
         assert_eq!(v.get("total_tasks").unwrap().as_usize(), Some(1));
@@ -278,6 +284,9 @@ mod tests {
         assert_eq!(v.get("tasks_fused").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("inplace_hits").unwrap().as_usize(), Some(1));
         assert_eq!(v.get("bytes_allocated").unwrap().as_usize(), Some(256));
+        assert_eq!(v.get("blocks_spilled").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("blocks_faulted").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("spill_bytes").unwrap().as_usize(), Some(512));
         assert_eq!(
             v.get("tasks_by_op").unwrap().get("op.a").unwrap().as_usize(),
             Some(1)

@@ -17,6 +17,13 @@ use crate::util::toml;
 pub struct Config {
     /// Worker threads for real (local) execution.
     pub local_workers: usize,
+    /// Out-of-core resident-set budget for local execution; `None` keeps
+    /// every block in memory (see `Runtime::local_with_budget`).
+    pub memory_budget_bytes: Option<u64>,
+    /// Parent directory for the out-of-core block store's spill files
+    /// (each runtime creates — and removes at teardown — its own
+    /// uniquely-named subdirectory under it). Only used with a budget.
+    pub spill_dir: Option<String>,
     /// Simulated core counts for scaling sweeps.
     pub sim_cores: Vec<usize>,
     /// Cost model template (worker count is substituted per sweep point).
@@ -33,6 +40,8 @@ impl Default for Config {
             local_workers: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1),
+            memory_budget_bytes: None,
+            spill_dir: None,
             sim_cores: vec![48, 96, 192, 384, 768],
             sim: SimConfig::marenostrum(48),
             artifacts_dir: "artifacts".to_string(),
@@ -57,6 +66,12 @@ impl Config {
         }
         if let Some(v) = map.get("artifacts_dir").and_then(|v| v.as_str()) {
             cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = map.get("memory_budget_bytes").and_then(|v| v.as_i64()) {
+            cfg.memory_budget_bytes = (v > 0).then_some(v as u64);
+        }
+        if let Some(v) = map.get("spill_dir").and_then(|v| v.as_str()) {
+            cfg.spill_dir = Some(v.to_string());
         }
         if let Some(arr) = map.get("sim_cores").and_then(|v| v.as_array()) {
             cfg.sim_cores = arr
@@ -100,12 +115,35 @@ impl Config {
         if let Some(v) = args.get("artifacts-dir") {
             self.artifacts_dir = v.to_string();
         }
+        if let Some(v) = args.get("memory-budget-mb") {
+            if let Ok(mb) = v.parse::<u64>() {
+                self.memory_budget_bytes = (mb > 0).then_some(mb * 1024 * 1024);
+            }
+        }
+        if let Some(v) = args.get("spill-dir") {
+            self.spill_dir = Some(v.to_string());
+        }
         if args.get("cores").is_some() {
             self.sim_cores = args.get_usize_list("cores", &self.sim_cores);
         }
         self.sim.sched_task_s = args.get_f64("sched-task-s", self.sim.sched_task_s);
         self.sim.per_input_s = args.get_f64("per-input-s", self.sim.per_input_s);
         self.sim.flops_per_s = args.get_f64("flops-per-s", self.sim.flops_per_s);
+    }
+
+    /// Build the configured local runtime: worker count plus the
+    /// out-of-core budget / spill directory when set. The store's spill
+    /// directory lives for the runtime's lifetime and is removed at
+    /// teardown.
+    pub fn local_runtime(&self) -> Result<crate::tasking::Runtime> {
+        let mut opts = crate::tasking::LocalOptions::new(self.local_workers);
+        if let Some(b) = self.memory_budget_bytes {
+            opts = opts.with_memory_budget(b);
+            if let Some(dir) = &self.spill_dir {
+                opts = opts.with_spill_dir(std::path::PathBuf::from(dir));
+            }
+        }
+        crate::tasking::Runtime::local_with_options(opts)
     }
 
     /// Cost model at a specific simulated core count.
@@ -144,25 +182,38 @@ mod tests {
         p.push(format!("rustdslib_cfg_{}.toml", std::process::id()));
         std::fs::write(
             &p,
-            "seed = 7\nsim_cores = [8, 16]\n[sim]\nsched_task_s = 0.001\nflops_per_s = 1e9\n",
+            "seed = 7\nsim_cores = [8, 16]\nmemory_budget_bytes = 1048576\n[sim]\nsched_task_s = 0.001\nflops_per_s = 1e9\n",
         )
         .unwrap();
         let cfg = Config::from_file(&p).unwrap();
         assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.memory_budget_bytes, Some(1 << 20));
         assert_eq!(cfg.sim_cores, vec![8, 16]);
         assert_eq!(cfg.sim.sched_task_s, 0.001);
         assert_eq!(cfg.sim.flops_per_s, 1e9);
 
         let args = Args::parse(
-            ["--seed", "9", "--cores", "4", "--sched-task-s", "0.002"]
-                .iter()
-                .map(|s| s.to_string()),
+            [
+                "--seed",
+                "9",
+                "--cores",
+                "4",
+                "--sched-task-s",
+                "0.002",
+                "--memory-budget-mb",
+                "2",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
         );
         let mut cfg2 = cfg.clone();
         cfg2.apply_args(&args);
         assert_eq!(cfg2.seed, 9);
         assert_eq!(cfg2.sim_cores, vec![4]);
         assert_eq!(cfg2.sim.sched_task_s, 0.002);
+        assert_eq!(cfg2.memory_budget_bytes, Some(2 << 20));
+        let rt = cfg2.local_runtime().unwrap();
+        assert!(!rt.is_sim());
 
         let sim16 = cfg2.sim_at(16);
         assert_eq!(sim16.workers, 16);

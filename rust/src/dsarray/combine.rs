@@ -169,7 +169,11 @@ pub fn hstack(parts: &[&DsArray]) -> Result<DsArray> {
 }
 
 impl DsArray {
-    /// Synchronize and write the array as CSV (collect-based; local mode).
+    /// Synchronize and write the array as ONE CSV file (collect-based: the
+    /// master materializes the full matrix — fine for small outputs). For
+    /// arrays near or beyond memory, use the parallel partitioned writer
+    /// [`crate::dsarray::io::save_csv_parts`], which writes one file per
+    /// block-row from worker tasks and keeps the master empty-handed.
     pub fn save_csv(&self, path: &Path, delimiter: char) -> Result<()> {
         let m = self.collect()?;
         crate::storage::io::write_csv(path, &m, delimiter)

@@ -4,7 +4,7 @@
 //! spawn **one task per row of blocks** (files are parsed line by line).
 //! Block size is caller-chosen — the flexibility Datasets lack.
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -242,8 +242,12 @@ pub fn from_csr(rt: &Runtime, m: &CsrMatrix, block_shape: (usize, usize)) -> Res
     DsArray::from_parts(rt.clone(), shape, block_shape, blocks, true)
 }
 
-/// Load a CSV file into a ds-array: one parse task per **row of blocks**
-/// (files are parsed line by line — paper §4.2.2). Shape must be known.
+/// Load a CSV file into a ds-array with a declared shape: one parse task
+/// per **row of blocks** (paper §4.2.2). This is a shape-checking wrapper
+/// over the parallel partitioned loader [`crate::dsarray::io::load_csv`] —
+/// each task parses only its own byte range, so the master never
+/// materializes the matrix. Prefer the `io` entry point when the shape
+/// should be inferred from the file.
 pub fn load_csv(
     rt: &Runtime,
     path: &Path,
@@ -252,49 +256,18 @@ pub fn load_csv(
     delimiter: char,
 ) -> Result<DsArray> {
     validate(shape, block_shape)?;
-    let grid = (
-        DsArray::grid_dim(shape.0, block_shape.0),
-        DsArray::grid_dim(shape.1, block_shape.1),
-    );
-    let mut batch = Vec::with_capacity(grid.0);
-    for i in 0..grid.0 {
-        let r0 = i * block_shape.0;
-        let r = (shape.0 - r0).min(block_shape.0);
-        let metas: Vec<BlockMeta> = (0..grid.1)
-            .map(|j| {
-                let c = (shape.1 - j * block_shape.1).min(block_shape.1);
-                BlockMeta::dense(r, c)
-            })
-            .collect();
-        let row_bytes: f64 = metas.iter().map(|m| m.bytes() as f64).sum();
-        let path: PathBuf = path.to_path_buf();
-        let bs1 = block_shape.1;
-        let cols = shape.1;
-        batch.push(BatchTask::new(
-            "dsarray.create.load_csv_rowblock",
-            Vec::new(),
-            metas,
-            CostHint::default().with_bytes(row_bytes * 2.0), // read + parse
-            Arc::new(move |_| {
-                // Parse only this block-row's line range.
-                let full = crate::storage::io::read_csv(&path, delimiter)?;
-                if full.cols() != cols {
-                    bail!("csv has {} cols, expected {cols}", full.cols());
-                }
-                let panel = full.slice(r0, 0, r, cols)?;
-                let mut outs = Vec::new();
-                let mut c0 = 0;
-                while c0 < cols {
-                    let c = (cols - c0).min(bs1);
-                    outs.push(Block::Dense(panel.slice(0, c0, r, c)?));
-                    c0 += c;
-                }
-                Ok(outs)
-            }),
-        ));
+    let arr = crate::dsarray::io::load_csv(rt, path, block_shape, delimiter)?;
+    if arr.shape() != shape {
+        bail!(
+            "{}: file holds a {}x{} matrix, caller declared {}x{}",
+            path.display(),
+            arr.rows(),
+            arr.cols(),
+            shape.0,
+            shape.1
+        );
     }
-    let blocks: Vec<Future> = rt.submit_batch(batch).into_iter().flatten().collect();
-    DsArray::from_parts(rt.clone(), shape, block_shape, blocks, false)
+    Ok(arr)
 }
 
 #[cfg(test)]
@@ -367,7 +340,9 @@ mod tests {
         crate::storage::io::write_csv(&p, &m, ',').unwrap();
         let a = load_csv(&rt, &p, (7, 5), (3, 2), ',').unwrap();
         assert_eq!(a.collect().unwrap(), m);
-        assert_eq!(rt.metrics().tasks_for("dsarray.create.load_csv_rowblock"), 3);
+        assert_eq!(rt.metrics().tasks_for("dsarray.io.load_csv"), 3);
+        // A wrong declared shape is a clear error, not silent truncation.
+        assert!(load_csv(&rt, &p, (8, 5), (3, 2), ',').is_err());
         std::fs::remove_file(&p).ok();
     }
 

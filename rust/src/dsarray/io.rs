@@ -1,0 +1,632 @@
+//! Parallel partitioned file I/O for ds-arrays — out-of-core ingestion and
+//! write-back (paper §4.2.2, "files are read in parallel by the workers").
+//!
+//! Every loader here submits **one `dsarray.io.load_*` task per block-row**
+//! through the executor; the master's only work is a streaming byte scan
+//! ([`crate::storage::io::partition_lines`]) or an NPY header read — it
+//! never materializes the matrix, so master-side peak residency during a
+//! load stays below one block-row regardless of file size. Combined with a
+//! runtime memory budget ([`crate::tasking::Runtime::local_with_budget`]),
+//! this is what lets an array larger than RAM be ingested, transformed and
+//! fitted end to end.
+//!
+//! Three formats, each with a symmetric parallel saver:
+//!
+//! | format    | load                                  | save                         |
+//! |-----------|---------------------------------------|------------------------------|
+//! | CSV       | [`load_csv`] (byte-range split) / [`load_csv_parts`] (one file per block-row) | [`save_csv_parts`] |
+//! | SVMLight  | [`load_svmlight`] → (CSR features, labels) | [`save_svmlight_parts`] |
+//! | NPY       | [`load_npy`] (exact binary ranges)    | [`save_npy`] (single pre-sized file, parallel range writes) |
+//!
+//! See `docs/IO.md` for the partitioned-format rules and runnable examples.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::storage::io::{
+    self, partition_lines, probe_csv_cols, read_csv_range, read_npy_header, read_npy_rows,
+    read_svmlight_range, LinePartition,
+};
+use crate::storage::{Block, BlockMeta, CsrMatrix, DenseMatrix};
+use crate::tasking::{BatchTask, CostHint, Future, Runtime};
+
+use super::DsArray;
+
+fn validate_block_shape(block_shape: (usize, usize)) -> Result<()> {
+    if block_shape.0 == 0 || block_shape.1 == 0 {
+        bail!("empty block shape {block_shape:?}");
+    }
+    Ok(())
+}
+
+/// Column-block widths of a row of `cols` logical columns under `bs1`.
+fn col_blocks(cols: usize, bs1: usize) -> Vec<usize> {
+    (0..DsArray::grid_dim(cols, bs1))
+        .map(|j| (cols - j * bs1).min(bs1))
+        .collect()
+}
+
+/// Split a dense row panel into its column blocks.
+fn split_dense_panel(panel: &DenseMatrix, bs1: usize) -> Result<Vec<Block>> {
+    let mut outs = Vec::new();
+    let mut c0 = 0;
+    while c0 < panel.cols() {
+        let c = (panel.cols() - c0).min(bs1);
+        outs.push(Block::Dense(panel.slice(0, c0, panel.rows(), c)?));
+        c0 += c;
+    }
+    Ok(outs)
+}
+
+/// Load a delimiter-separated text file as a dense ds-array, in parallel.
+///
+/// The master streams the file once to find block-row line boundaries
+/// (byte offsets, O(1) memory — the shape is *inferred*, not declared),
+/// then submits one `dsarray.io.load_csv` task per block-row; each task
+/// seeks to its byte range and parses only its own lines. Ingestion
+/// parallelism therefore equals the block-row count, and no process ever
+/// holds more than one block-row of parsed data.
+///
+/// If `path` is a directory, this delegates to [`load_csv_parts`] (one
+/// partition file per block-row; `block_shape.0` is then taken from the
+/// partition files themselves).
+pub fn load_csv(
+    rt: &Runtime,
+    path: &Path,
+    block_shape: (usize, usize),
+    delimiter: char,
+) -> Result<DsArray> {
+    validate_block_shape(block_shape)?;
+    if path.is_dir() {
+        return load_csv_parts(rt, path, block_shape.1, delimiter);
+    }
+    let parts = partition_lines(path, block_shape.0)?;
+    let rows: usize = parts.iter().map(|p| p.rows).sum();
+    let cols = probe_csv_cols(path, delimiter)?;
+    if rows == 0 || cols == 0 {
+        bail!("{}: no data rows to load", path.display());
+    }
+    let widths = col_blocks(cols, block_shape.1);
+    let mut batch = Vec::with_capacity(parts.len());
+    for part in &parts {
+        batch.push(load_csv_task(
+            path.to_path_buf(),
+            *part,
+            cols,
+            &widths,
+            delimiter,
+        ));
+    }
+    let blocks: Vec<Future> = rt.submit_batch(batch).into_iter().flatten().collect();
+    DsArray::from_parts(rt.clone(), (rows, cols), block_shape, blocks, false)
+}
+
+fn load_csv_task(
+    path: PathBuf,
+    part: LinePartition,
+    cols: usize,
+    widths: &[usize],
+    delimiter: char,
+) -> BatchTask {
+    let metas: Vec<BlockMeta> = widths.iter().map(|&c| BlockMeta::dense(part.rows, c)).collect();
+    let panel_bytes: f64 = metas.iter().map(|m| m.bytes() as f64).sum();
+    let bs1 = widths[0];
+    BatchTask::new(
+        "dsarray.io.load_csv",
+        Vec::new(),
+        metas,
+        CostHint::data_movement().with_bytes(panel_bytes * 2.0), // read + parse
+        Arc::new(move |_| {
+            let panel =
+                read_csv_range(&path, part.offset, part.rows, delimiter, cols, part.lineno)?;
+            split_dense_panel(&panel, bs1)
+        }),
+    )
+}
+
+/// Load a partition directory — **one file per block-row**, ordered by
+/// file name — as a dense ds-array. All partition files must hold the same
+/// number of data rows except the last (shorter is fine); that common row
+/// count becomes `block_shape.0`. One `dsarray.io.load_csv` task per file.
+pub fn load_csv_parts(
+    rt: &Runtime,
+    dir: &Path,
+    block_cols: usize,
+    delimiter: char,
+) -> Result<DsArray> {
+    if block_cols == 0 {
+        bail!("empty block width");
+    }
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading partition directory {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.is_file())
+        // Editor droppings and OS metadata (.DS_Store, .gitignore, …) are
+        // not partitions.
+        .filter(|p| !matches!(p.file_name().and_then(|n| n.to_str()), Some(n) if n.starts_with('.')))
+        .collect();
+    // When the directory holds a `save_csv_parts` layout, read exactly
+    // that: other formats saved alongside (part-*.svm) or stray files must
+    // not be concatenated in as CSV rows. Arbitrary user-named partition
+    // files still work in directories without `part-*.csv` entries.
+    let canonical: Vec<PathBuf> = files
+        .iter()
+        .filter(|p| {
+            matches!(p.file_name().and_then(|n| n.to_str()),
+                     Some(n) if n.starts_with("part-") && n.ends_with(".csv"))
+        })
+        .cloned()
+        .collect();
+    if !canonical.is_empty() {
+        files = canonical;
+    }
+    files.sort();
+    if files.is_empty() {
+        bail!("{}: empty partition directory", dir.display());
+    }
+    // One streaming scan per file: row count + first-data-line offset.
+    let mut parts: Vec<(PathBuf, LinePartition)> = Vec::with_capacity(files.len());
+    for f in files {
+        let mut ps = partition_lines(&f, usize::MAX)?;
+        match ps.pop() {
+            Some(p) => parts.push((f, p)),
+            None => bail!("{}: partition file holds no data rows", f.display()),
+        }
+    }
+    let bs0 = parts[0].1.rows;
+    for (i, (f, p)) in parts.iter().enumerate() {
+        let last = i + 1 == parts.len();
+        if (!last && p.rows != bs0) || (last && p.rows > bs0) {
+            bail!(
+                "{}: partition file has {} rows, expected {} (only the last may be shorter)",
+                f.display(),
+                p.rows,
+                bs0
+            );
+        }
+    }
+    let cols = probe_csv_cols(&parts[0].0, delimiter)?;
+    if cols == 0 {
+        bail!("{}: no columns in first partition", parts[0].0.display());
+    }
+    let rows: usize = parts.iter().map(|(_, p)| p.rows).sum();
+    let widths = col_blocks(cols, block_cols);
+    let batch: Vec<BatchTask> = parts
+        .into_iter()
+        .map(|(f, p)| load_csv_task(f, p, cols, &widths, delimiter))
+        .collect();
+    let blocks: Vec<Future> = rt.submit_batch(batch).into_iter().flatten().collect();
+    DsArray::from_parts(rt.clone(), (rows, cols), (bs0, block_cols), blocks, false)
+}
+
+/// Partition file name of block-row `i` (shared by the `save_*_parts`
+/// writers and readable back by the `load_*_parts` loaders, which sort by
+/// name).
+fn part_name(i: usize, ext: &str) -> String {
+    format!("part-{i:05}.{ext}")
+}
+
+/// Remove every existing `part-*.{ext}` file from `dir` before a
+/// partitioned save: a previous, larger save into the same directory must
+/// not leave stale partitions behind for a reload to silently pick up.
+fn clear_stale_parts(dir: &Path, ext: &str) -> Result<()> {
+    let suffix = format!(".{ext}");
+    for entry in std::fs::read_dir(dir)? {
+        let p = entry?.path();
+        let Some(name) = p.file_name().and_then(|n| n.to_str()) else { continue };
+        if name.starts_with("part-") && name.ends_with(&suffix) {
+            std::fs::remove_file(&p)
+                .with_context(|| format!("removing stale partition {}", p.display()))?;
+        }
+    }
+    Ok(())
+}
+
+/// Write a ds-array as a partition directory of CSV files — one
+/// `dsarray.io.save_csv` task (and one `part-NNNNN.csv` file) per
+/// block-row, the symmetric write-back of [`load_csv_parts`]. Blocks are
+/// synchronized *inside* the tasks, so write parallelism equals the
+/// block-row count and the master materializes nothing. Blocks until every
+/// partition is on disk.
+pub fn save_csv_parts(arr: &DsArray, dir: &Path, delimiter: char) -> Result<()> {
+    let arr = arr.force()?;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating partition directory {}", dir.display()))?;
+    clear_stale_parts(dir, "csv")?;
+    let rt = arr.runtime().clone();
+    let mut batch = Vec::with_capacity(arr.grid().0);
+    for i in 0..arr.grid().0 {
+        let reads = arr.block_row(i);
+        let bytes: f64 = reads.iter().map(|f| f.meta.bytes() as f64).sum();
+        let out = dir.join(part_name(i, "csv"));
+        batch.push(BatchTask::new(
+            "dsarray.io.save_csv",
+            reads,
+            Vec::new(),
+            CostHint::data_movement().with_bytes(bytes * 2.0),
+            Arc::new(move |ins: &[Arc<Block>]| {
+                let dense: Vec<DenseMatrix> =
+                    ins.iter().map(|b| b.to_dense()).collect::<Result<_>>()?;
+                let refs: Vec<&DenseMatrix> = dense.iter().collect();
+                io::write_csv(&out, &DenseMatrix::hstack(&refs)?, delimiter)?;
+                Ok(Vec::new())
+            }),
+        ));
+    }
+    rt.submit_batch(batch);
+    rt.barrier()
+}
+
+/// Load an SVMLight file (`label idx:val ...`, 1-based indices) in
+/// parallel: one `dsarray.io.load_svmlight` task per block-row, each
+/// parsing only its byte range. Returns `(samples, labels)` — samples as a
+/// CSR-blocked sparse ds-array of width `n_features`, labels as an `n×1`
+/// dense ds-array with the same row blocking. Out-of-range feature indices
+/// are line-numbered errors.
+pub fn load_svmlight(
+    rt: &Runtime,
+    path: &Path,
+    n_features: usize,
+    block_shape: (usize, usize),
+) -> Result<(DsArray, DsArray)> {
+    validate_block_shape(block_shape)?;
+    if n_features == 0 {
+        bail!("n_features must be positive");
+    }
+    let parts = partition_lines(path, block_shape.0)?;
+    let rows: usize = parts.iter().map(|p| p.rows).sum();
+    if rows == 0 {
+        bail!("{}: no data rows to load", path.display());
+    }
+    let file_len = std::fs::metadata(path)?.len();
+    let widths = col_blocks(n_features, block_shape.1);
+    let bs1 = block_shape.1;
+    let mut batch = Vec::with_capacity(parts.len());
+    for (i, part) in parts.iter().enumerate() {
+        let range_bytes = match parts.get(i + 1) {
+            Some(next) => next.offset - part.offset,
+            None => file_len.saturating_sub(part.offset),
+        };
+        // ~12 text bytes per stored feature — only an accounting estimate;
+        // the true nnz is known when the task completes.
+        let est_nnz = (range_bytes as usize / 12).max(1);
+        let mut metas: Vec<BlockMeta> = widths
+            .iter()
+            .map(|&c| BlockMeta::sparse(part.rows, c, (est_nnz * c / n_features).max(1)))
+            .collect();
+        metas.push(BlockMeta::dense(part.rows, 1)); // labels
+        let path = path.to_path_buf();
+        let (part, nf) = (*part, n_features);
+        batch.push(BatchTask::new(
+            "dsarray.io.load_svmlight",
+            Vec::new(),
+            metas,
+            CostHint::data_movement().with_bytes(range_bytes as f64 * 2.0),
+            Arc::new(move |_| {
+                let (panel, labels) =
+                    read_svmlight_range(&path, part.offset, part.rows, nf, part.lineno)?;
+                let mut outs = Vec::new();
+                let mut c0 = 0;
+                while c0 < nf {
+                    let c = (nf - c0).min(bs1);
+                    outs.push(Block::Csr(panel.slice(0, c0, part.rows, c)?));
+                    c0 += c;
+                }
+                outs.push(Block::Dense(labels));
+                Ok(outs)
+            }),
+        ));
+    }
+    let per_task = rt.submit_batch(batch);
+    let mut feat_blocks = Vec::with_capacity(parts.len() * widths.len());
+    let mut label_blocks = Vec::with_capacity(parts.len());
+    for mut outs in per_task {
+        label_blocks.push(outs.pop().expect("labels block declared last"));
+        feat_blocks.extend(outs);
+    }
+    let samples = DsArray::from_parts(
+        rt.clone(),
+        (rows, n_features),
+        block_shape,
+        feat_blocks,
+        true,
+    )?;
+    let labels = DsArray::from_parts(rt.clone(), (rows, 1), (block_shape.0, 1), label_blocks, false)?;
+    Ok((samples, labels))
+}
+
+/// Write `(samples, labels)` as a partition directory of SVMLight files —
+/// one `dsarray.io.save_svmlight` task per block-row, symmetric with
+/// [`load_svmlight`] (load the directory back file by file, or
+/// concatenate). Dense sample blocks are sparsified (exact zeros dropped).
+/// Blocks until every partition is on disk.
+pub fn save_svmlight_parts(samples: &DsArray, labels: &DsArray, dir: &Path) -> Result<()> {
+    if labels.rows() != samples.rows() || labels.cols() != 1 {
+        bail!(
+            "labels must be {}x1, got {}x{}",
+            samples.rows(),
+            labels.rows(),
+            labels.cols()
+        );
+    }
+    if labels.block_shape().0 != samples.block_shape().0 {
+        bail!(
+            "labels row blocking {} != samples row blocking {}",
+            labels.block_shape().0,
+            samples.block_shape().0
+        );
+    }
+    let samples = samples.force()?;
+    let labels = labels.force()?;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating partition directory {}", dir.display()))?;
+    clear_stale_parts(dir, "svm")?;
+    let rt = samples.runtime().clone();
+    let mut batch = Vec::with_capacity(samples.grid().0);
+    for i in 0..samples.grid().0 {
+        let mut reads = samples.block_row(i);
+        let gc = reads.len();
+        reads.push(labels.block(i, 0));
+        let bytes: f64 = reads.iter().map(|f| f.meta.bytes() as f64).sum();
+        let out = dir.join(part_name(i, "svm"));
+        batch.push(BatchTask::new(
+            "dsarray.io.save_svmlight",
+            reads,
+            Vec::new(),
+            CostHint::data_movement().with_bytes(bytes * 2.0),
+            Arc::new(move |ins: &[Arc<Block>]| {
+                let csrs: Vec<CsrMatrix> = ins[..gc]
+                    .iter()
+                    .map(|b| match &**b {
+                        Block::Csr(m) => Ok(m.clone()),
+                        Block::Dense(m) => Ok(CsrMatrix::from_dense(m, 0.0)),
+                        Block::Phantom(_) => bail!("cannot save phantom blocks"),
+                    })
+                    .collect::<Result<_>>()?;
+                let refs: Vec<&CsrMatrix> = csrs.iter().collect();
+                let panel = CsrMatrix::hstack(&refs)?;
+                io::write_svmlight(&out, &panel, &ins[gc].to_dense()?)?;
+                Ok(Vec::new())
+            }),
+        ));
+    }
+    rt.submit_batch(batch);
+    rt.barrier()
+}
+
+/// Load a `.npy` file (C-order `<f4`/`<f8`) as a dense ds-array. The fixed
+/// row stride makes the split *exact*: the master reads only the header,
+/// and each of the one-per-block-row `dsarray.io.load_npy` tasks seeks
+/// straight to its byte range — no line scan at all.
+pub fn load_npy(rt: &Runtime, path: &Path, block_shape: (usize, usize)) -> Result<DsArray> {
+    validate_block_shape(block_shape)?;
+    let h = read_npy_header(path)?;
+    if h.rows == 0 || h.cols == 0 {
+        bail!("{}: empty npy array", path.display());
+    }
+    let grid_rows = DsArray::grid_dim(h.rows, block_shape.0);
+    let bs1 = block_shape.1;
+    let mut batch = Vec::with_capacity(grid_rows);
+    for i in 0..grid_rows {
+        let r0 = i * block_shape.0;
+        let r = (h.rows - r0).min(block_shape.0);
+        let metas: Vec<BlockMeta> = col_blocks(h.cols, bs1)
+            .into_iter()
+            .map(|c| BlockMeta::dense(r, c))
+            .collect();
+        let panel_bytes: f64 = metas.iter().map(|m| m.bytes() as f64).sum();
+        let path = path.to_path_buf();
+        batch.push(BatchTask::new(
+            "dsarray.io.load_npy",
+            Vec::new(),
+            metas,
+            CostHint::data_movement().with_bytes(panel_bytes * 2.0),
+            Arc::new(move |_| {
+                let panel = read_npy_rows(&path, &h, r0, r)?;
+                split_dense_panel(&panel, bs1)
+            }),
+        ));
+    }
+    let blocks: Vec<Future> = rt.submit_batch(batch).into_iter().flatten().collect();
+    DsArray::from_parts(rt.clone(), (h.rows, h.cols), block_shape, blocks, false)
+}
+
+/// Write a ds-array as a single `.npy` file with **parallel range writes**:
+/// the master writes the header and pre-sizes the file; one
+/// `dsarray.io.save_npy` task per block-row then fills its disjoint row
+/// range in place. Blocks until the file is complete.
+pub fn save_npy(arr: &DsArray, path: &Path) -> Result<()> {
+    let arr = arr.force()?;
+    let (rows, cols) = arr.shape();
+    let data_offset = io::create_npy(path, rows, cols)?;
+    let rt = arr.runtime().clone();
+    let mut batch = Vec::with_capacity(arr.grid().0);
+    for i in 0..arr.grid().0 {
+        let reads = arr.block_row(i);
+        let bytes: f64 = reads.iter().map(|f| f.meta.bytes() as f64).sum();
+        let r0 = i * arr.block_shape().0;
+        let path = path.to_path_buf();
+        batch.push(BatchTask::new(
+            "dsarray.io.save_npy",
+            reads,
+            Vec::new(),
+            CostHint::data_movement().with_bytes(bytes * 2.0),
+            Arc::new(move |ins: &[Arc<Block>]| {
+                let dense: Vec<DenseMatrix> =
+                    ins.iter().map(|b| b.to_dense()).collect::<Result<_>>()?;
+                let refs: Vec<&DenseMatrix> = dense.iter().collect();
+                io::write_npy_rows_at(&path, data_offset, rows, cols, r0, &DenseMatrix::hstack(&refs)?)?;
+                Ok(Vec::new())
+            }),
+        ));
+    }
+    rt.submit_batch(batch);
+    rt.barrier()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsarray::creation;
+    use crate::storage::io::{read_csv, read_npy, read_svmlight, write_csv, write_svmlight};
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("rustdslib_dsio_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn parallel_load_csv_matches_serial_read() {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(13, 7, |i, j| (i * 7 + j) as f32 * 0.25 - 3.0);
+        let p = tmp("par.csv");
+        write_csv(&p, &m, ',').unwrap();
+        let a = load_csv(&rt, &p, (4, 3), ',').unwrap();
+        assert_eq!(a.shape(), (13, 7));
+        assert_eq!(a.grid(), (4, 3));
+        // Parity: parallel ingestion equals master-side read + scatter.
+        let b = creation::from_matrix(&rt, &read_csv(&p, ',').unwrap(), (4, 3)).unwrap();
+        assert_eq!(a.collect().unwrap(), b.collect().unwrap());
+        // One load task per block-row.
+        assert_eq!(rt.metrics().tasks_for("dsarray.io.load_csv"), 4);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn load_csv_handles_comments_and_missing_trailing_newline() {
+        let rt = Runtime::local(2);
+        let p = tmp("cmt.csv");
+        std::fs::write(&p, "# head\n1,2\n3,4\n# mid\n5,6\n7,8").unwrap();
+        let a = load_csv(&rt, &p, (3, 2), ',').unwrap();
+        assert_eq!(a.shape(), (4, 2));
+        assert_eq!(a.collect().unwrap().data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn csv_parts_save_load_round_trip() {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(10, 6, |i, j| (i * 6 + j) as f32);
+        let a = creation::from_matrix(&rt, &m, (4, 6)).unwrap();
+        let dir = tmp("csvparts");
+        save_csv_parts(&a, &dir, ',').unwrap();
+        // One partition file per block-row, written by parallel tasks.
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 3);
+        assert_eq!(rt.metrics().tasks_for("dsarray.io.save_csv"), 3);
+        let back = load_csv_parts(&rt, &dir, 2, ',').unwrap();
+        assert_eq!(back.shape(), (10, 6));
+        assert_eq!(back.block_shape(), (4, 2)); // rows-per-file becomes bs0
+        assert_eq!(back.collect().unwrap(), m);
+        // `load_csv` on a directory delegates to the partitioned loader.
+        let via_dir = load_csv(&rt, &dir, (999, 3), ',').unwrap();
+        assert_eq!(via_dir.collect().unwrap(), m);
+        // Hidden files and foreign-format partitions are not CSV rows.
+        std::fs::write(dir.join(".stray"), "not,a,partition\n").unwrap();
+        std::fs::write(dir.join("part-00000.svm"), "1 1:2.0\n").unwrap();
+        assert_eq!(load_csv_parts(&rt, &dir, 2, ',').unwrap().collect().unwrap(), m);
+        // Re-saving a SMALLER array into the same directory clears the
+        // stale higher-numbered partitions — a reload must not see them.
+        let small = DenseMatrix::from_fn(4, 6, |i, j| -((i * 6 + j) as f32));
+        let b = creation::from_matrix(&rt, &small, (4, 6)).unwrap();
+        save_csv_parts(&b, &dir, ',').unwrap();
+        assert_eq!(load_csv_parts(&rt, &dir, 6, ',').unwrap().collect().unwrap(), small);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_parts_rejects_ragged_partitions() {
+        let dir = tmp("ragged_parts");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("part-00000.csv"), "1,2\n3,4\n").unwrap();
+        std::fs::write(dir.join("part-00001.csv"), "5,6\n7,8\n9,10\n").unwrap();
+        let rt = Runtime::local(1);
+        let err = load_csv_parts(&rt, &dir, 2, ',').unwrap_err().to_string();
+        assert!(err.contains("only the last may be shorter"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parallel_svmlight_matches_serial_and_round_trips() {
+        let rt = Runtime::local(2);
+        let trips: Vec<(usize, usize, f32)> = (0..40)
+            .map(|k| ((k * 7) % 11, (k * 3) % 6, k as f32 * 0.5 - 2.0))
+            .collect();
+        let csr = CsrMatrix::from_triplets(11, 6, &trips).unwrap();
+        let labels = DenseMatrix::from_fn(11, 1, |i, _| if i % 2 == 0 { 1.0 } else { -1.0 });
+        let p = tmp("par.svm");
+        write_svmlight(&p, &csr, &labels).unwrap();
+
+        let (x, y) = load_svmlight(&rt, &p, 6, (4, 3)).unwrap();
+        assert!(x.is_sparse());
+        assert_eq!(x.shape(), (11, 6));
+        assert_eq!(rt.metrics().tasks_for("dsarray.io.load_svmlight"), 3);
+        let (sx, sy) = read_svmlight(&p, 6).unwrap();
+        assert_eq!(x.collect_csr().unwrap().to_dense(), sx.to_dense());
+        assert_eq!(y.collect().unwrap(), sy);
+
+        // Symmetric partitioned write-back, loadable file by file.
+        let dir = tmp("svmparts");
+        save_svmlight_parts(&x, &y, &dir).unwrap();
+        let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .collect();
+        files.sort();
+        assert_eq!(files.len(), 3);
+        let mut row = 0;
+        for f in files {
+            let (ps, pl) = read_svmlight(&f, 6).unwrap();
+            let want = csr.row_slice(row, ps.rows()).unwrap();
+            assert_eq!(ps.to_dense(), want.to_dense());
+            assert_eq!(pl.get(0, 0), labels.get(row, 0));
+            row += ps.rows();
+        }
+        assert_eq!(row, 11);
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn svmlight_out_of_range_index_is_line_numbered_error() {
+        let rt = Runtime::local(2);
+        let p = tmp("oob.svm");
+        std::fs::write(&p, "1 1:1.0\n1 2:1.0\n-1 9:1.0\n").unwrap();
+        let (x, _) = load_svmlight(&rt, &p, 5, (2, 5)).unwrap();
+        let err = x.collect_csr().unwrap_err().to_string();
+        assert!(err.contains(":3") && err.contains("out of range 1..=5"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn npy_load_save_round_trip() {
+        let rt = Runtime::local(2);
+        let m = DenseMatrix::from_fn(9, 5, |i, j| (i * 5 + j) as f32 * 0.125);
+        let p = tmp("rt.npy");
+        io::write_npy(&p, &m).unwrap();
+        let a = load_npy(&rt, &p, (4, 2)).unwrap();
+        assert_eq!(a.shape(), (9, 5));
+        assert_eq!(a.collect().unwrap(), m);
+        assert_eq!(rt.metrics().tasks_for("dsarray.io.load_npy"), 3);
+
+        let q = tmp("save.npy");
+        save_npy(&a, &q).unwrap();
+        assert_eq!(read_npy(&q).unwrap(), m);
+        assert_eq!(rt.metrics().tasks_for("dsarray.io.save_npy"), 3);
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&q).ok();
+    }
+
+    #[test]
+    fn loaders_reject_empty_inputs() {
+        let rt = Runtime::local(1);
+        let p = tmp("empty.csv");
+        std::fs::write(&p, "# only comments\n").unwrap();
+        assert!(load_csv(&rt, &p, (2, 2), ',').is_err());
+        assert!(load_svmlight(&rt, &p, 4, (2, 2)).is_err());
+        assert!(load_csv(&rt, &p, (0, 2), ',').is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -8,8 +8,11 @@
 //!
 //! Submodules implement the NumPy-like API surface:
 //! [`creation`], [`indexing`], [`elementwise`], [`reductions`], [`linalg`]
-//! (transpose/matmul), [`shuffle`], [`rechunk`] — see `docs/API.md` for the
-//! full NumPy ↔ ds-array mapping table.
+//! (transpose/matmul), [`shuffle`], [`rechunk`], and [`io`] (parallel
+//! partitioned file loaders/savers — one task per block-row, so arrays
+//! larger than any single memory can be ingested) — see `docs/API.md` for
+//! the full NumPy ↔ ds-array mapping table and `docs/IO.md` for the
+//! out-of-core I/O model.
 //!
 //! Slicing and fancy indexing go through the zero-copy **view layer**:
 //! `slice*`/`take_rows`/`take_cols` share block futures with the parent
@@ -22,6 +25,7 @@ pub mod decomposition;
 pub mod elementwise;
 mod expr;
 pub mod indexing;
+pub mod io;
 pub mod linalg;
 pub mod rechunk;
 pub mod reductions;

@@ -14,6 +14,13 @@
 //! lazily (see [`dsarray::DsArray::force`] and `docs/API.md` for the full
 //! NumPy ↔ ds-array mapping).
 //!
+//! Data sets larger than memory go through the **out-of-core layer**:
+//! parallel partitioned loaders ([`dsarray::io`], one task per block-row —
+//! the master never materializes the matrix) and a runtime memory budget
+//! ([`tasking::Runtime::local_with_budget`]) that spills live blocks to a
+//! [`storage::BlockStore`] and faults them back transparently. The
+//! [`io_guide`] module embeds `docs/IO.md` with runnable examples.
+//!
 //! ```
 //! use rustdslib::{dsarray::creation, tasking::Runtime};
 //!
@@ -39,6 +46,12 @@ pub mod runtime;
 pub mod storage;
 pub mod tasking;
 pub mod util;
+
+/// Guide: partitioned file I/O and the out-of-core block store
+/// (`docs/IO.md`, embedded so its examples run under `cargo test --doc`
+/// and its intra-doc links are checked by `cargo doc -D warnings`).
+#[doc = include_str!("../../docs/IO.md")]
+pub mod io_guide {}
 
 pub use storage::{Block, BlockMeta, CsrMatrix, DenseMatrix};
 pub use tasking::{Future, Runtime, SimConfig, SimReport};

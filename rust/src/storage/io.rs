@@ -1,15 +1,62 @@
-//! File loaders/writers — the `load_txt` / SVMLight equivalents of dislib's
-//! data-loading routines (paper §3.2.1). CSV maps to dense blocks; SVMLight
-//! (`label idx:val idx:val ...`) maps to CSR + a label column.
+//! File loaders/writers — the `load_txt` / SVMLight / NPY equivalents of
+//! dislib's data-loading routines (paper §3.2.1). CSV maps to dense blocks;
+//! SVMLight (`label idx:val idx:val ...`) maps to CSR + a label column; NPY
+//! is the binary fast path (fixed row stride, exact byte-range splits).
+//!
+//! Besides the whole-file readers, this module provides the *partitioned*
+//! primitives the parallel ds-array loaders (`crate::dsarray::io`) fan out
+//! over: [`partition_lines`] scans a text file once with O(1) memory and
+//! returns byte offsets at block-row boundaries, and the `*_range` readers
+//! parse only their slice of the file — so ingestion parallelism equals the
+//! block-row count and no single process ever materializes the full matrix.
+//!
+//! Float formatting: all writers go through [`fmt_f32`], which relies on
+//! Rust's shortest-round-trip float `Display` — `write` then `read` returns
+//! bit-identical finite values (locked in by property tests below).
 
-use std::fs::File;
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::fmt::Write as FmtWrite;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use super::dense::DenseMatrix;
 use super::sparse::CsrMatrix;
+
+/// Format one `f32` with the shortest representation that parses back to
+/// the same bits. Rust's float `Display` guarantees shortest-round-trip
+/// output (and its `inf`/`-inf`/`NaN` spellings are accepted by
+/// `f32::from_str`), so this is a thin, documented pin of that contract —
+/// the writers below must never lose precision to a fixed digit count.
+pub fn fmt_f32(out: &mut String, v: f32) {
+    let _ = write!(out, "{v}");
+}
+
+/// Parse one CSV data line (already trimmed, non-empty, non-comment) into
+/// `data`; returns the number of fields appended. Shared by the whole-file
+/// and byte-range readers so both report identical line-numbered errors.
+fn parse_csv_line(
+    line: &str,
+    delimiter: char,
+    data: &mut Vec<f32>,
+    path: &Path,
+    lineno: usize,
+) -> Result<usize> {
+    let mut n = 0;
+    for field in line.split(delimiter) {
+        let field = field.trim();
+        if field.is_empty() {
+            continue;
+        }
+        let v: f32 = field
+            .parse()
+            .with_context(|| format!("{}:{}: bad number `{field}`", path.display(), lineno))?;
+        data.push(v);
+        n += 1;
+    }
+    Ok(n)
+}
 
 /// Read a delimiter-separated numeric file into a dense matrix.
 pub fn read_csv(path: &Path, delimiter: char) -> Result<DenseMatrix> {
@@ -23,18 +70,7 @@ pub fn read_csv(path: &Path, delimiter: char) -> Result<DenseMatrix> {
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let mut n = 0;
-        for field in line.split(delimiter) {
-            let field = field.trim();
-            if field.is_empty() {
-                continue;
-            }
-            let v: f32 = field
-                .parse()
-                .with_context(|| format!("{}:{}: bad number `{field}`", path.display(), lineno + 1))?;
-            data.push(v);
-            n += 1;
-        }
+        let n = parse_csv_line(line, delimiter, &mut data, path, lineno + 1)?;
         match cols {
             None => cols = Some(n),
             Some(c) if c != n => bail!(
@@ -53,17 +89,193 @@ pub fn read_csv(path: &Path, delimiter: char) -> Result<DenseMatrix> {
 pub fn write_csv(path: &Path, m: &DenseMatrix, delimiter: char) -> Result<()> {
     let file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
     let mut w = BufWriter::new(file);
+    let mut line = String::new();
     for i in 0..m.rows() {
-        let row = m.row(i);
-        for (j, v) in row.iter().enumerate() {
+        line.clear();
+        for (j, &v) in m.row(i).iter().enumerate() {
             if j > 0 {
-                write!(w, "{delimiter}")?;
+                line.push(delimiter);
             }
-            write!(w, "{v}")?;
+            fmt_f32(&mut line, v);
         }
-        writeln!(w)?;
+        line.push('\n');
+        w.write_all(line.as_bytes())?;
     }
     Ok(())
+}
+
+/// One block-row's slice of a partitioned text file: where its first data
+/// line starts, how many data lines it holds, and the 1-based file line
+/// number of its first line (for error reporting inside range readers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinePartition {
+    pub offset: u64,
+    pub rows: usize,
+    pub lineno: usize,
+}
+
+/// Scan a text file once (streaming, O(1) memory) and split its *data*
+/// lines — non-empty, first non-whitespace char not `#`, matching the
+/// skip rules of [`read_csv`]/[`read_svmlight`] — into partitions of
+/// `rows_per_chunk` lines. Returns one [`LinePartition`] per block-row;
+/// only the last may be short. This is the master-side cost of a parallel
+/// load: a byte scan, never a parse, never a materialization.
+pub fn partition_lines(path: &Path, rows_per_chunk: usize) -> Result<Vec<LinePartition>> {
+    if rows_per_chunk == 0 {
+        bail!("rows_per_chunk must be positive");
+    }
+    let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::with_capacity(64 * 1024, file);
+    let mut parts: Vec<LinePartition> = Vec::new();
+    let mut pos = 0u64;
+    let mut line_start = 0u64;
+    let mut lineno = 1usize;
+    let mut first_nonws: Option<u8> = None;
+    let mut data_rows = 0usize;
+    let finish_line = |parts: &mut Vec<LinePartition>,
+                           line_start: u64,
+                           lineno: usize,
+                           first_nonws: Option<u8>,
+                           data_rows: &mut usize| {
+        let is_data = matches!(first_nonws, Some(c) if c != b'#');
+        if is_data {
+            if *data_rows % rows_per_chunk == 0 {
+                parts.push(LinePartition {
+                    offset: line_start,
+                    rows: 0,
+                    lineno,
+                });
+            }
+            parts.last_mut().expect("pushed above or earlier").rows += 1;
+            *data_rows += 1;
+        }
+    };
+    loop {
+        let buf = r.fill_buf()?;
+        if buf.is_empty() {
+            break;
+        }
+        let n = buf.len();
+        for &b in buf {
+            if b == b'\n' {
+                finish_line(&mut parts, line_start, lineno, first_nonws, &mut data_rows);
+                line_start = pos + 1;
+                lineno += 1;
+                first_nonws = None;
+            } else if first_nonws.is_none() && !b.is_ascii_whitespace() {
+                first_nonws = Some(b);
+            }
+            pos += 1;
+        }
+        r.consume(n);
+    }
+    // Final line without a trailing newline.
+    if pos > line_start {
+        finish_line(&mut parts, line_start, lineno, first_nonws, &mut data_rows);
+    }
+    Ok(parts)
+}
+
+/// Column count of the first data line (the shape probe of a parallel CSV
+/// load — reads a few bytes, parses one line).
+pub fn probe_csv_cols(path: &Path, delimiter: char) -> Result<usize> {
+    let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut probe = Vec::new();
+        return parse_csv_line(line, delimiter, &mut probe, path, lineno + 1);
+    }
+    Ok(0)
+}
+
+/// Parse `n_rows` data lines starting at byte `offset` (a line boundary
+/// from [`partition_lines`]). `expect_cols` pins the width; `first_lineno`
+/// is the 1-based file line number at `offset` so errors carry global
+/// positions. This is the worker-side body of a parallel CSV load.
+pub fn read_csv_range(
+    path: &Path,
+    offset: u64,
+    n_rows: usize,
+    delimiter: char,
+    expect_cols: usize,
+    first_lineno: usize,
+) -> Result<DenseMatrix> {
+    let mut file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    file.seek(SeekFrom::Start(offset))?;
+    let mut data = Vec::with_capacity(n_rows * expect_cols);
+    let mut rows = 0;
+    for (k, line) in BufReader::new(file).lines().enumerate() {
+        if rows == n_rows {
+            break;
+        }
+        let line = line?;
+        let line = line.trim();
+        let lineno = first_lineno + k;
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let n = parse_csv_line(line, delimiter, &mut data, path, lineno)?;
+        if n != expect_cols {
+            bail!(
+                "{}:{}: ragged row ({n} fields, expected {expect_cols})",
+                path.display(),
+                lineno
+            );
+        }
+        rows += 1;
+    }
+    if rows != n_rows {
+        bail!(
+            "{}: range at byte {offset} ended after {rows} data rows, expected {n_rows}",
+            path.display()
+        );
+    }
+    DenseMatrix::from_vec(n_rows, expect_cols, data)
+}
+
+/// Parse one SVMLight data line (comment-stripped, non-empty): returns the
+/// label and appends `(row, col, val)` triplets. All errors carry
+/// `path:lineno`; feature indices are validated against `1..=n_features`
+/// (out-of-range indices are a hard, line-numbered error — never a silent
+/// out-of-bounds write).
+fn parse_svmlight_line(
+    line: &str,
+    path: &Path,
+    lineno: usize,
+    n_features: usize,
+    row: usize,
+    triplets: &mut Vec<(usize, usize, f32)>,
+) -> Result<f32> {
+    let mut parts = line.split_whitespace();
+    let label: f32 = parts
+        .next()
+        .expect("caller passes non-empty lines")
+        .parse()
+        .with_context(|| format!("{}:{}: bad label", path.display(), lineno))?;
+    for p in parts {
+        let (idx, val) = p.split_once(':').with_context(|| {
+            format!("{}:{}: bad feature `{p}` (expected idx:val)", path.display(), lineno)
+        })?;
+        let idx: usize = idx.parse().with_context(|| {
+            format!("{}:{}: bad feature index `{idx}`", path.display(), lineno)
+        })?;
+        let val: f32 = val.parse().with_context(|| {
+            format!("{}:{}: bad feature value `{val}`", path.display(), lineno)
+        })?;
+        if idx == 0 || idx > n_features {
+            bail!(
+                "{}:{}: feature index {idx} out of range 1..={n_features}",
+                path.display(),
+                lineno
+            );
+        }
+        triplets.push((row, idx - 1, val));
+    }
+    Ok(label)
 }
 
 /// Read an SVMLight file: returns (samples as CSR, labels as n x 1 dense).
@@ -78,33 +290,63 @@ pub fn read_svmlight(path: &Path, n_features: usize) -> Result<(CsrMatrix, Dense
         if line.is_empty() {
             continue;
         }
-        let mut parts = line.split_whitespace();
-        let label: f32 = parts
-            .next()
-            .unwrap()
-            .parse()
-            .with_context(|| format!("{}:{}: bad label", path.display(), lineno + 1))?;
         let row = labels.len();
-        labels.push(label);
-        for p in parts {
-            let (idx, val) = p
-                .split_once(':')
-                .with_context(|| format!("{}:{}: bad feature `{p}`", path.display(), lineno + 1))?;
-            let idx: usize = idx.parse().context("feature index")?;
-            let val: f32 = val.parse().context("feature value")?;
-            if idx == 0 || idx > n_features {
-                bail!(
-                    "{}:{}: feature index {idx} out of range 1..={n_features}",
-                    path.display(),
-                    lineno + 1
-                );
-            }
-            triplets.push((row, idx - 1, val));
-        }
+        labels.push(parse_svmlight_line(
+            line,
+            path,
+            lineno + 1,
+            n_features,
+            row,
+            &mut triplets,
+        )?);
     }
     let n = labels.len();
     let samples = CsrMatrix::from_triplets(n, n_features, &triplets)?;
     let labels = DenseMatrix::from_vec(n, 1, labels)?;
+    Ok((samples, labels))
+}
+
+/// Parse `n_rows` SVMLight data lines starting at byte `offset` (from
+/// [`partition_lines`]) — the worker-side body of a parallel SVMLight load.
+pub fn read_svmlight_range(
+    path: &Path,
+    offset: u64,
+    n_rows: usize,
+    n_features: usize,
+    first_lineno: usize,
+) -> Result<(CsrMatrix, DenseMatrix)> {
+    let mut file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    file.seek(SeekFrom::Start(offset))?;
+    let mut triplets = Vec::new();
+    let mut labels = Vec::with_capacity(n_rows);
+    for (k, line) in BufReader::new(file).lines().enumerate() {
+        if labels.len() == n_rows {
+            break;
+        }
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let row = labels.len();
+        labels.push(parse_svmlight_line(
+            line,
+            path,
+            first_lineno + k,
+            n_features,
+            row,
+            &mut triplets,
+        )?);
+    }
+    if labels.len() != n_rows {
+        bail!(
+            "{}: range at byte {offset} ended after {} data rows, expected {n_rows}",
+            path.display(),
+            labels.len()
+        );
+    }
+    let samples = CsrMatrix::from_triplets(n_rows, n_features, &triplets)?;
+    let labels = DenseMatrix::from_vec(n_rows, 1, labels)?;
     Ok((samples, labels))
 }
 
@@ -119,20 +361,237 @@ pub fn write_svmlight(path: &Path, samples: &CsrMatrix, labels: &DenseMatrix) ->
     }
     let file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
     let mut w = BufWriter::new(file);
+    let mut line = String::new();
     for i in 0..samples.rows() {
-        write!(w, "{}", labels.get(i, 0))?;
+        line.clear();
+        fmt_f32(&mut line, labels.get(i, 0));
         let (cols, vals) = samples.row(i);
         for (&c, &v) in cols.iter().zip(vals) {
-            write!(w, " {}:{}", c + 1, v)?;
+            let _ = write!(line, " {}:", c + 1);
+            fmt_f32(&mut line, v);
         }
-        writeln!(w)?;
+        line.push('\n');
+        w.write_all(line.as_bytes())?;
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// NPY — NumPy's binary array format (v1.0 headers, C-order f4/f8).
+// ---------------------------------------------------------------------------
+
+/// Parsed `.npy` header: logical shape, element width, and the byte offset
+/// where row-major data begins. Fixed row stride makes byte-range splits
+/// exact — the parallel loader seeks straight to `data_offset + r0 * cols *
+/// itemsize` with no master-side scan at all.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NpyHeader {
+    pub rows: usize,
+    pub cols: usize,
+    /// Element type is little-endian f64 (`'<f8'`); otherwise f32 (`'<f4'`).
+    pub f8: bool,
+    pub data_offset: u64,
+}
+
+impl NpyHeader {
+    pub fn itemsize(&self) -> usize {
+        if self.f8 {
+            8
+        } else {
+            4
+        }
+    }
+}
+
+fn npy_dict_field<'a>(dict: &'a str, key: &str) -> Result<&'a str> {
+    let pat = format!("'{key}':");
+    let at = dict
+        .find(&pat)
+        .with_context(|| format!("npy header missing `{key}`"))?;
+    Ok(dict[at + pat.len()..].trim_start())
+}
+
+/// Read and validate a `.npy` header (format versions 1.0/2.0, C-order,
+/// `<f4`/`<f8`). 1-D arrays are treated as a single column.
+pub fn read_npy_header(path: &Path) -> Result<NpyHeader> {
+    let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut head = [0u8; 8];
+    r.read_exact(&mut head)
+        .with_context(|| format!("{}: truncated npy preamble", path.display()))?;
+    if &head[..6] != b"\x93NUMPY" {
+        bail!("{}: not an npy file (bad magic)", path.display());
+    }
+    let (major, _minor) = (head[6], head[7]);
+    let header_len = match major {
+        1 => {
+            let mut b = [0u8; 2];
+            r.read_exact(&mut b)?;
+            u16::from_le_bytes(b) as usize
+        }
+        2 => {
+            let mut b = [0u8; 4];
+            r.read_exact(&mut b)?;
+            u32::from_le_bytes(b) as usize
+        }
+        v => bail!("{}: unsupported npy format version {v}", path.display()),
+    };
+    let data_offset = if major == 1 { 10 } else { 12 } as u64 + header_len as u64;
+    let mut dict = vec![0u8; header_len];
+    r.read_exact(&mut dict)
+        .with_context(|| format!("{}: truncated npy header", path.display()))?;
+    let dict = std::str::from_utf8(&dict)
+        .with_context(|| format!("{}: npy header is not ASCII", path.display()))?;
+
+    let descr = npy_dict_field(dict, "descr")?;
+    let f8 = if descr.starts_with("'<f4'") || descr.starts_with("'|f4'") {
+        false
+    } else if descr.starts_with("'<f8'") || descr.starts_with("'|f8'") {
+        true
+    } else {
+        bail!(
+            "{}: unsupported npy dtype {} (need '<f4' or '<f8')",
+            path.display(),
+            descr.split(',').next().unwrap_or(descr)
+        );
+    };
+    let order = npy_dict_field(dict, "fortran_order")?;
+    if !order.starts_with("False") {
+        bail!("{}: fortran-order npy arrays are not supported", path.display());
+    }
+    let shape = npy_dict_field(dict, "shape")?;
+    let open = shape
+        .find('(')
+        .with_context(|| format!("{}: npy shape is not a tuple", path.display()))?;
+    let close = shape
+        .find(')')
+        .with_context(|| format!("{}: npy shape is not a tuple", path.display()))?;
+    let dims: Vec<usize> = shape[open + 1..close]
+        .split(',')
+        .map(|d| d.trim())
+        .filter(|d| !d.is_empty())
+        .map(|d| {
+            d.parse()
+                .with_context(|| format!("{}: bad npy shape dim `{d}`", path.display()))
+        })
+        .collect::<Result<_>>()?;
+    let (rows, cols) = match dims.len() {
+        1 => (dims[0], 1),
+        2 => (dims[0], dims[1]),
+        n => bail!("{}: {n}-D npy arrays are not supported", path.display()),
+    };
+    Ok(NpyHeader {
+        rows,
+        cols,
+        f8,
+        data_offset,
+    })
+}
+
+/// Read rows `[r0, r0 + nrows)` of an npy file as f32 (f8 files are
+/// narrowed). Seeks directly to the row range — the worker-side body of the
+/// parallel NPY load.
+pub fn read_npy_rows(path: &Path, h: &NpyHeader, r0: usize, nrows: usize) -> Result<DenseMatrix> {
+    if r0 + nrows > h.rows {
+        bail!(
+            "{}: npy row range [{r0}, {}) out of bounds for {} rows",
+            path.display(),
+            r0 + nrows,
+            h.rows
+        );
+    }
+    let mut file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    file.seek(SeekFrom::Start(
+        h.data_offset + (r0 * h.cols * h.itemsize()) as u64,
+    ))?;
+    let n = nrows * h.cols;
+    let mut raw = vec![0u8; n * h.itemsize()];
+    file.read_exact(&mut raw)
+        .with_context(|| format!("{}: truncated npy payload", path.display()))?;
+    let data: Vec<f32> = if h.f8 {
+        raw.chunks_exact(8)
+            .map(|b| f64::from_le_bytes(b.try_into().unwrap()) as f32)
+            .collect()
+    } else {
+        raw.chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect()
+    };
+    DenseMatrix::from_vec(nrows, h.cols, data)
+}
+
+/// Read a whole `.npy` file into a dense matrix.
+pub fn read_npy(path: &Path) -> Result<DenseMatrix> {
+    let h = read_npy_header(path)?;
+    read_npy_rows(path, &h, 0, h.rows)
+}
+
+/// Create a `.npy` file: write a v1.0 `<f4` C-order header and pre-size the
+/// file to its final length, so concurrent writers can then fill disjoint
+/// row ranges in place ([`write_npy_rows_at`]) — the parallel save path.
+/// Returns the data offset.
+pub fn create_npy(path: &Path, rows: usize, cols: usize) -> Result<u64> {
+    let mut dict = format!("{{'descr': '<f4', 'fortran_order': False, 'shape': ({rows}, {cols}), }}");
+    // Pad with spaces so preamble + header is 64-byte aligned, newline-terminated.
+    let unpadded = 10 + dict.len() + 1;
+    dict.push_str(&" ".repeat(unpadded.div_ceil(64) * 64 - unpadded));
+    dict.push('\n');
+    if dict.len() > u16::MAX as usize {
+        bail!("npy header too large");
+    }
+    let file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(b"\x93NUMPY\x01\x00")?;
+    w.write_all(&(dict.len() as u16).to_le_bytes())?;
+    w.write_all(dict.as_bytes())?;
+    w.flush()?;
+    let data_offset = 10 + dict.len() as u64;
+    w.get_ref().set_len(data_offset + (rows * cols * 4) as u64)?;
+    Ok(data_offset)
+}
+
+/// Write `m` as rows `[r0, r0 + m.rows())` of a pre-sized npy file created
+/// by [`create_npy`] with shape `(rows, cols)`. Disjoint row ranges may be
+/// written concurrently; ranges past the declared shape are an error (the
+/// header would silently hide them).
+pub fn write_npy_rows_at(
+    path: &Path,
+    data_offset: u64,
+    rows: usize,
+    cols: usize,
+    r0: usize,
+    m: &DenseMatrix,
+) -> Result<()> {
+    if m.cols() != cols {
+        bail!("npy row panel has {} cols, file has {cols}", m.cols());
+    }
+    if r0 + m.rows() > rows {
+        bail!(
+            "npy row range [{r0}, {}) out of bounds for {rows} rows",
+            r0 + m.rows()
+        );
+    }
+    let mut file = OpenOptions::new()
+        .write(true)
+        .open(path)
+        .with_context(|| format!("opening {} for writing", path.display()))?;
+    file.seek(SeekFrom::Start(data_offset + (r0 * cols * 4) as u64))?;
+    let mut w = BufWriter::new(file);
+    super::store::write_f32s(&mut w, m.data())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write a whole matrix as a `.npy` file (v1.0, `<f4`, C-order).
+pub fn write_npy(path: &Path, m: &DenseMatrix) -> Result<()> {
+    let off = create_npy(path, m.rows(), m.cols())?;
+    write_npy_rows_at(path, off, m.rows(), m.cols(), 0, m)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
 
     fn tmp(name: &str) -> std::path::PathBuf {
         let mut p = std::env::temp_dir();
@@ -164,6 +623,54 @@ mod tests {
     }
 
     #[test]
+    fn csv_write_read_round_trips_extreme_floats_property() {
+        // Shortest-round-trip formatting must reproduce every finite f32
+        // bit pattern exactly — subnormals, extremes, and negative zero.
+        let p = tmp("prop.csv");
+        prop::check("csv f32 round trip", |g| {
+            let rows = g.usize_in(1, 5);
+            let cols = g.usize_in(1, 5);
+            let data: Vec<f32> = (0..rows * cols)
+                .map(|_| match g.usize_in(0, 7) {
+                    0 => f32::from_bits(1), // smallest subnormal
+                    1 => f32::MAX,
+                    2 => -f32::MIN_POSITIVE,
+                    3 => 0.1,
+                    4 => -0.0,
+                    _ => f32::from_bits(g.rng.next_u64() as u32),
+                })
+                .map(|v| if v.is_nan() { 1.25 } else { v })
+                .collect();
+            let m = DenseMatrix::from_vec(rows, cols, data).unwrap();
+            write_csv(&p, &m, ',').map_err(|e| e.to_string())?;
+            let r = read_csv(&p, ',').map_err(|e| e.to_string())?;
+            for (a, b) in m.data().iter().zip(r.data()) {
+                crate::prop_assert!(
+                    a.to_bits() == b.to_bits(),
+                    "wrote {a:?} ({:#010x}), read {b:?} ({:#010x})",
+                    a.to_bits(),
+                    b.to_bits()
+                );
+            }
+            Ok(())
+        });
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn csv_round_trips_non_finite_values() {
+        let p = tmp("nonfinite.csv");
+        let m = DenseMatrix::from_vec(1, 3, vec![f32::INFINITY, f32::NEG_INFINITY, f32::NAN])
+            .unwrap();
+        write_csv(&p, &m, ',').unwrap();
+        let r = read_csv(&p, ',').unwrap();
+        assert_eq!(r.get(0, 0), f32::INFINITY);
+        assert_eq!(r.get(0, 1), f32::NEG_INFINITY);
+        assert!(r.get(0, 2).is_nan());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
     fn svmlight_round_trip() {
         let samples =
             CsrMatrix::from_triplets(3, 5, &[(0, 0, 1.5), (0, 4, 2.0), (2, 2, -1.0)]).unwrap();
@@ -177,12 +684,157 @@ mod tests {
     }
 
     #[test]
-    fn svmlight_rejects_bad_index() {
+    fn svmlight_write_read_round_trips_property() {
+        let p = tmp("prop.svm");
+        prop::check("svmlight f32 round trip", |g| {
+            let rows = g.usize_in(1, 6);
+            let cols = g.usize_in(1, 8);
+            let nnz = g.usize_in(0, rows * cols);
+            let trips: Vec<(usize, usize, f32)> = (0..nnz)
+                .map(|_| {
+                    let v = f32::from_bits(g.rng.next_u64() as u32);
+                    (
+                        g.usize_in(0, rows - 1),
+                        g.usize_in(0, cols - 1),
+                        if v.is_nan() { -0.5 } else { v },
+                    )
+                })
+                .collect();
+            let samples = CsrMatrix::from_triplets(rows, cols, &trips).unwrap();
+            let labels =
+                DenseMatrix::from_vec(rows, 1, g.f32_vec(rows, 1e30)).unwrap();
+            write_svmlight(&p, &samples, &labels).map_err(|e| e.to_string())?;
+            let (s, l) = read_svmlight(&p, cols).map_err(|e| e.to_string())?;
+            let (da, db) = (samples.to_dense(), s.to_dense());
+            for (a, b) in da.data().iter().zip(db.data()) {
+                crate::prop_assert!(a.to_bits() == b.to_bits(), "sample {a:?} != {b:?}");
+            }
+            for (a, b) in labels.data().iter().zip(l.data()) {
+                crate::prop_assert!(a.to_bits() == b.to_bits(), "label {a:?} != {b:?}");
+            }
+            Ok(())
+        });
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn svmlight_rejects_bad_index_with_line_numbers() {
         let p = tmp("bad.svm");
-        std::fs::write(&p, "1 6:2.0\n").unwrap();
-        assert!(read_svmlight(&p, 5).is_err());
+        std::fs::write(&p, "1 1:1.0\n1 6:2.0\n").unwrap();
+        let err = read_svmlight(&p, 5).unwrap_err().to_string();
+        assert!(err.contains(":2"), "error should carry the line number: {err}");
+        assert!(err.contains("out of range 1..=5"), "{err}");
         std::fs::write(&p, "1 0:2.0\n").unwrap();
         assert!(read_svmlight(&p, 5).is_err());
+        // Unparsable index and value are line-numbered errors, not panics.
+        std::fs::write(&p, "1 1:1.0\n1 x:2.0\n").unwrap();
+        let err = read_svmlight(&p, 5).unwrap_err().to_string();
+        assert!(err.contains(":2") && err.contains("bad feature index"), "{err}");
+        std::fs::write(&p, "1 2:zz\n").unwrap();
+        let err = read_svmlight(&p, 5).unwrap_err().to_string();
+        assert!(err.contains(":1") && err.contains("bad feature value"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn partition_lines_splits_on_data_lines_only() {
+        let p = tmp("parts.csv");
+        std::fs::write(&p, "# header\n1,2\n3,4\n\n5,6\n# mid\n7,8\n9,10").unwrap();
+        let parts = partition_lines(&p, 2).unwrap();
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].rows, 2);
+        assert_eq!(parts[1].rows, 2);
+        assert_eq!(parts[2].rows, 1); // final line has no trailing newline
+        assert_eq!(parts[0].offset, 9); // after "# header\n"
+        assert_eq!(parts[0].lineno, 2);
+        assert_eq!(parts[1].lineno, 5); // "5,6" after the blank line
+        // Ranges parse independently and agree with the whole-file read.
+        let full = read_csv(&p, ',').unwrap();
+        let mut r0 = 0;
+        for part in &parts {
+            let m = read_csv_range(&p, part.offset, part.rows, ',', 2, part.lineno).unwrap();
+            assert_eq!(m, full.slice(r0, 0, part.rows, 2).unwrap());
+            r0 += part.rows;
+        }
+        assert_eq!(probe_csv_cols(&p, ',').unwrap(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn csv_range_errors_carry_global_line_numbers() {
+        let p = tmp("rangeerr.csv");
+        std::fs::write(&p, "1,2\n3,4\n5,x\n").unwrap();
+        let parts = partition_lines(&p, 2).unwrap();
+        let err = read_csv_range(&p, parts[1].offset, parts[1].rows, ',', 2, parts[1].lineno)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(":3"), "global line number expected: {err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn npy_round_trip_and_row_ranges() {
+        let p = tmp("rt.npy");
+        let m = DenseMatrix::from_fn(7, 3, |i, j| (i * 3 + j) as f32 * 0.5 - 1.0);
+        write_npy(&p, &m).unwrap();
+        let h = read_npy_header(&p).unwrap();
+        assert_eq!((h.rows, h.cols, h.f8), (7, 3, false));
+        assert_eq!(read_npy(&p).unwrap(), m);
+        let mid = read_npy_rows(&p, &h, 2, 4).unwrap();
+        assert_eq!(mid, m.slice(2, 0, 4, 3).unwrap());
+        assert!(read_npy_rows(&p, &h, 5, 3).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn npy_parallel_style_writes_fill_disjoint_ranges() {
+        let p = tmp("par.npy");
+        let m = DenseMatrix::from_fn(6, 4, |i, j| (i * 4 + j) as f32);
+        let off = create_npy(&p, 6, 4).unwrap();
+        write_npy_rows_at(&p, off, 6, 4, 3, &m.slice(3, 0, 3, 4).unwrap()).unwrap();
+        write_npy_rows_at(&p, off, 6, 4, 0, &m.slice(0, 0, 3, 4).unwrap()).unwrap();
+        assert_eq!(read_npy(&p).unwrap(), m);
+        // Writing past the declared shape is refused, not silently grown.
+        assert!(write_npy_rows_at(&p, off, 6, 4, 5, &m.slice(0, 0, 3, 4).unwrap()).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn npy_rejects_unsupported_layouts() {
+        let p = tmp("bad.npy");
+        std::fs::write(&p, b"NOTNPY\x01\x00").unwrap();
+        assert!(read_npy_header(&p).is_err());
+        // Fortran order is refused.
+        let dict = "{'descr': '<f4', 'fortran_order': True, 'shape': (2, 2), }\n";
+        let mut bytes = b"\x93NUMPY\x01\x00".to_vec();
+        bytes.extend((dict.len() as u16).to_le_bytes());
+        bytes.extend(dict.as_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_npy_header(&p).unwrap_err().to_string().contains("fortran"));
+        // Unsupported dtype is refused.
+        let dict = "{'descr': '<i8', 'fortran_order': False, 'shape': (2, 2), }\n";
+        let mut bytes = b"\x93NUMPY\x01\x00".to_vec();
+        bytes.extend((dict.len() as u16).to_le_bytes());
+        bytes.extend(dict.as_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_npy_header(&p).unwrap_err().to_string().contains("dtype"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn npy_f8_narrowing_read() {
+        // Hand-built '<f8' file: 2x2 [1.5, -2.0, 0.25, 1e9].
+        let p = tmp("f8.npy");
+        let dict = "{'descr': '<f8', 'fortran_order': False, 'shape': (2, 2), }\n";
+        let mut bytes = b"\x93NUMPY\x01\x00".to_vec();
+        bytes.extend((dict.len() as u16).to_le_bytes());
+        bytes.extend(dict.as_bytes());
+        for v in [1.5f64, -2.0, 0.25, 1e9] {
+            bytes.extend(v.to_le_bytes());
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let m = read_npy(&p).unwrap();
+        assert_eq!(m.data(), &[1.5, -2.0, 0.25, 1e9]);
         std::fs::remove_file(&p).ok();
     }
 }

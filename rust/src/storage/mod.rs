@@ -6,12 +6,20 @@
 //! tasking runtime moves around. A third variant, `Block::Phantom`, carries
 //! only metadata and is what the discrete-event simulator schedules when the
 //! data would be too large to materialize (DESIGN.md §2).
+//!
+//! Two disk-facing pieces complete the layer: [`io`] holds the partitioned
+//! file readers/writers (CSV, SVMLight, NPY — including the byte-range
+//! readers the parallel ds-array loaders fan out over), and [`store`] holds
+//! the [`BlockStore`] spill backend that lets a budgeted runtime keep live
+//! blocks on disk (out-of-core execution — see `docs/IO.md`).
 
 pub mod block;
 pub mod dense;
 pub mod io;
 pub mod sparse;
+pub mod store;
 
 pub use block::{Block, BlockMeta};
 pub use dense::DenseMatrix;
 pub use sparse::CsrMatrix;
+pub use store::BlockStore;

@@ -132,6 +132,60 @@ impl CsrMatrix {
         }
     }
 
+    /// Row pointer array (`len == rows + 1`) — raw CSR access for
+    /// serialization (the spill store, file writers).
+    #[inline]
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    /// Column indices (`len == nnz`, sorted within each row).
+    #[inline]
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    /// Stored values (`len == nnz`), parallel to [`CsrMatrix::indices`].
+    #[inline]
+    pub fn values(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Rebuild from raw CSR arrays (the inverse of the accessors above).
+    /// Validates monotone row pointers, array lengths and column bounds —
+    /// the spill store round-trips through this on fault-in.
+    pub fn from_raw_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        data: Vec<f32>,
+    ) -> Result<Self> {
+        if indptr.len() != rows + 1 || indptr.first() != Some(&0) {
+            bail!("csr indptr must have len rows+1 and start at 0");
+        }
+        if indptr.windows(2).any(|w| w[0] > w[1]) || *indptr.last().unwrap() != indices.len() {
+            bail!("csr indptr not monotone or inconsistent with nnz {}", indices.len());
+        }
+        if indices.len() != data.len() {
+            bail!(
+                "csr indices/data length mismatch: {} vs {}",
+                indices.len(),
+                data.len()
+            );
+        }
+        if indices.iter().any(|&c| c as usize >= cols) {
+            bail!("csr column index out of bounds for {cols} columns");
+        }
+        Ok(Self {
+            rows,
+            cols,
+            indptr,
+            indices,
+            data,
+        })
+    }
+
     /// (column indices, values) of row `i`.
     #[inline]
     pub fn row(&self, i: usize) -> (&[u32], &[f32]) {

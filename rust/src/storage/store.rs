@@ -1,0 +1,303 @@
+//! Out-of-core block store — the spill backend of the memory-budget policy.
+//!
+//! When a runtime is created with a `memory_budget_bytes` high-water mark
+//! (see [`crate::tasking::LocalOptions`]), blocks that are still referenced
+//! but push the resident set over budget are *spilled* here: the payload is
+//! written to one file per block under a per-runtime directory, the
+//! in-memory value is dropped, and task-input resolution (or `wait`)
+//! transparently *faults* it back in on next use. Dense and CSR blocks are
+//! both supported; phantom blocks carry no payload and are never spilled.
+//!
+//! The file format is a minimal self-describing binary record (no external
+//! serialization crate in the offline build):
+//!
+//! ```text
+//! magic  b"DSBK"            4 B
+//! version u8 = 1            1 B
+//! kind    u8                1 B   0 = dense, 1 = CSR
+//! rows    u64 LE            8 B
+//! cols    u64 LE            8 B
+//! dense:  rows*cols f32 LE          (row-major)
+//! csr:    nnz u64 LE, indptr (rows+1)*u64 LE, indices nnz*u32 LE,
+//!         data nnz*f32 LE
+//! ```
+//!
+//! Lifecycle: the store owns its directory; dropping the store (runtime
+//! teardown) removes the directory and every spill file in it. Files of
+//! individual blocks are unlinked earlier when refcount reclamation proves
+//! the block dead (see `Graph::try_evict`).
+
+use std::fs::{self, File};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use super::block::Block;
+use super::dense::DenseMatrix;
+use super::sparse::CsrMatrix;
+
+const MAGIC: &[u8; 4] = b"DSBK";
+const VERSION: u8 = 1;
+const KIND_DENSE: u8 = 0;
+const KIND_CSR: u8 = 1;
+
+/// Distinguishes spill directories of runtimes created in the same process.
+static STORE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Per-runtime spill directory: one file per spilled block, keyed by the
+/// block's `DataId`. All methods are `&self`; callers (the executor)
+/// serialize access through their own scheduler lock.
+pub struct BlockStore {
+    dir: PathBuf,
+}
+
+impl BlockStore {
+    /// Open a store rooted at `dir` (created if absent). The store takes
+    /// ownership of the directory: it is removed on drop.
+    pub fn new(dir: PathBuf) -> Result<Self> {
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating spill directory {}", dir.display()))?;
+        Ok(Self { dir })
+    }
+
+    /// Open a store in a fresh, uniquely-named subdirectory of `parent`.
+    /// The store owns (and removes on drop) only its own subdirectory —
+    /// never the caller's directory — and concurrent runtimes pointed at
+    /// the same `parent` cannot collide on block file names.
+    pub fn new_unique_under(parent: &Path) -> Result<Self> {
+        let seq = STORE_SEQ.fetch_add(1, Ordering::Relaxed);
+        Self::new(parent.join(format!("rustdslib-spill-{}-{seq}", std::process::id())))
+    }
+
+    /// Open a store in a fresh unique directory under the system temp dir.
+    pub fn in_temp() -> Result<Self> {
+        Self::new_unique_under(&std::env::temp_dir())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path(&self, id: u32) -> PathBuf {
+        self.dir.join(format!("d{id:08}.blk"))
+    }
+
+    /// Write `block`'s payload to this block's spill file. Returns the
+    /// bytes written. Phantom blocks have no payload and error.
+    pub fn spill(&self, id: u32, block: &Block) -> Result<u64> {
+        let path = self.path(id);
+        let file = File::create(&path)
+            .with_context(|| format!("creating spill file {}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        let written = write_block(&mut w, block)
+            .with_context(|| format!("spilling block {id} to {}", path.display()))?;
+        w.flush()?;
+        Ok(written)
+    }
+
+    /// Read this block's spill file back into memory.
+    pub fn fault(&self, id: u32) -> Result<Block> {
+        let path = self.path(id);
+        let file = File::open(&path)
+            .with_context(|| format!("opening spill file {}", path.display()))?;
+        read_block(&mut BufReader::new(file))
+            .with_context(|| format!("faulting block {id} from {}", path.display()))
+    }
+
+    /// Unlink this block's spill file (the block died while spilled, or its
+    /// clean on-disk copy became garbage). Missing files are ignored.
+    pub fn remove(&self, id: u32) {
+        let _ = fs::remove_file(self.path(id));
+    }
+}
+
+impl Drop for BlockStore {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Chunked encoder for 4-byte little-endian elements (f32/u32) — one
+/// buffered implementation shared by every 4-byte section writer.
+fn write_le4<T: Copy>(
+    w: &mut impl Write,
+    xs: &[T],
+    enc: impl Fn(T) -> [u8; 4],
+) -> std::io::Result<()> {
+    let mut buf = [0u8; 4096];
+    for chunk in xs.chunks(1024) {
+        for (i, &v) in chunk.iter().enumerate() {
+            buf[i * 4..i * 4 + 4].copy_from_slice(&enc(v));
+        }
+        w.write_all(&buf[..chunk.len() * 4])?;
+    }
+    Ok(())
+}
+
+/// Chunked decoder twin of [`write_le4`].
+fn read_le4<T>(
+    r: &mut impl Read,
+    n: usize,
+    dec: impl Fn([u8; 4]) -> T,
+) -> std::io::Result<Vec<T>> {
+    let mut out = Vec::with_capacity(n);
+    let mut buf = [0u8; 4096];
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(1024);
+        r.read_exact(&mut buf[..take * 4])?;
+        for i in 0..take {
+            out.push(dec(buf[i * 4..i * 4 + 4].try_into().unwrap()));
+        }
+        left -= take;
+    }
+    Ok(out)
+}
+
+/// f32 section codec, shared with the NPY writer.
+pub(crate) fn write_f32s(w: &mut impl Write, xs: &[f32]) -> std::io::Result<()> {
+    write_le4(w, xs, f32::to_le_bytes)
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> std::io::Result<Vec<f32>> {
+    read_le4(r, n, f32::from_le_bytes)
+}
+
+fn write_u32s(w: &mut impl Write, xs: &[u32]) -> std::io::Result<()> {
+    write_le4(w, xs, u32::to_le_bytes)
+}
+
+fn read_u32s(r: &mut impl Read, n: usize) -> std::io::Result<Vec<u32>> {
+    read_le4(r, n, u32::from_le_bytes)
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Serialize one block in the spill format; returns the payload size in
+/// bytes (header + sections).
+pub fn write_block(w: &mut impl Write, block: &Block) -> Result<u64> {
+    w.write_all(MAGIC)?;
+    w.write_all(&[VERSION])?;
+    match block {
+        Block::Dense(m) => {
+            w.write_all(&[KIND_DENSE])?;
+            write_u64(w, m.rows() as u64)?;
+            write_u64(w, m.cols() as u64)?;
+            write_f32s(w, m.data())?;
+            Ok(22 + 4 * m.data().len() as u64)
+        }
+        Block::Csr(m) => {
+            w.write_all(&[KIND_CSR])?;
+            write_u64(w, m.rows() as u64)?;
+            write_u64(w, m.cols() as u64)?;
+            write_u64(w, m.nnz() as u64)?;
+            for &p in m.indptr() {
+                write_u64(w, p as u64)?;
+            }
+            write_u32s(w, m.indices())?;
+            write_f32s(w, m.values())?;
+            Ok(30 + 8 * (m.rows() as u64 + 1) + 8 * m.nnz() as u64)
+        }
+        Block::Phantom(_) => bail!("phantom blocks carry no payload and cannot be spilled"),
+    }
+}
+
+/// Deserialize one block from the spill format.
+pub fn read_block(r: &mut impl Read) -> Result<Block> {
+    let mut head = [0u8; 6];
+    r.read_exact(&mut head)?;
+    if &head[..4] != MAGIC {
+        bail!("bad spill file magic {:?}", &head[..4]);
+    }
+    if head[4] != VERSION {
+        bail!("unsupported spill format version {}", head[4]);
+    }
+    let kind = head[5];
+    let rows = read_u64(r)? as usize;
+    let cols = read_u64(r)? as usize;
+    match kind {
+        KIND_DENSE => {
+            let data = read_f32s(r, rows * cols)?;
+            Ok(Block::Dense(DenseMatrix::from_vec(rows, cols, data)?))
+        }
+        KIND_CSR => {
+            let nnz = read_u64(r)? as usize;
+            let mut indptr = Vec::with_capacity(rows + 1);
+            for _ in 0..=rows {
+                indptr.push(read_u64(r)? as usize);
+            }
+            let indices = read_u32s(r, nnz)?;
+            let data = read_f32s(r, nnz)?;
+            Ok(Block::Csr(CsrMatrix::from_raw_parts(
+                rows, cols, indptr, indices, data,
+            )?))
+        }
+        k => bail!("unknown spill block kind {k}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_spill_fault_round_trip() {
+        let store = BlockStore::in_temp().unwrap();
+        let m = DenseMatrix::from_fn(7, 5, |i, j| i as f32 * 0.25 - j as f32);
+        let written = store.spill(3, &Block::Dense(m.clone())).unwrap();
+        assert_eq!(written, 22 + 4 * 35);
+        let back = store.fault(3).unwrap();
+        assert_eq!(back.as_dense().unwrap(), &m);
+    }
+
+    #[test]
+    fn csr_spill_fault_round_trip() {
+        let store = BlockStore::in_temp().unwrap();
+        let m = CsrMatrix::from_triplets(4, 6, &[(0, 5, 1.5), (2, 0, -2.0), (3, 3, 0.25)])
+            .unwrap();
+        store.spill(9, &Block::Csr(m.clone())).unwrap();
+        let back = store.fault(9).unwrap();
+        assert_eq!(back.as_csr().unwrap(), &m);
+    }
+
+    #[test]
+    fn phantom_refused_missing_file_errors() {
+        let store = BlockStore::in_temp().unwrap();
+        let p = Block::Phantom(crate::storage::BlockMeta::dense(2, 2));
+        assert!(store.spill(0, &p).is_err());
+        assert!(store.fault(42).is_err());
+    }
+
+    #[test]
+    fn remove_unlinks_and_drop_cleans_directory() {
+        let store = BlockStore::in_temp().unwrap();
+        let dir = store.dir().to_path_buf();
+        store
+            .spill(1, &Block::Dense(DenseMatrix::zeros(2, 2)))
+            .unwrap();
+        assert!(dir.join("d00000001.blk").exists());
+        store.remove(1);
+        assert!(!dir.join("d00000001.blk").exists());
+        store.remove(1); // idempotent
+        drop(store);
+        assert!(!dir.exists());
+    }
+
+    #[test]
+    fn corrupt_header_rejected() {
+        let mut bytes = Vec::new();
+        write_block(&mut bytes, &Block::Dense(DenseMatrix::zeros(1, 1))).unwrap();
+        bytes[0] = b'X';
+        assert!(read_block(&mut bytes.as_slice()).is_err());
+    }
+}

@@ -38,6 +38,12 @@ pub struct TaskNode {
 pub struct Graph {
     pub tasks: Vec<TaskNode>,
     pub data: Vec<DataState>,
+    /// Logical time for LRU spill ordering; bumped on every value touch.
+    pub clock: u64,
+    /// Ids whose spill files became garbage (the block died while a valid
+    /// on-disk copy existed). The graph has no file-system access; the
+    /// executor drains this queue and unlinks the files.
+    pub dead_files: Vec<DataId>,
 }
 
 /// Outcome of completing one task: dependents that became ready, payload
@@ -56,7 +62,32 @@ impl Graph {
     pub fn put_block(&mut self, meta: BlockMeta, value: Option<Arc<Block>>) -> DataId {
         let id = self.data.len() as DataId;
         self.data.push(DataState::new(meta, value, None));
+        self.touch(id);
         id
+    }
+
+    /// Bump `id`'s LRU timestamp (value resolved, synchronized, or stored).
+    pub fn touch(&mut self, id: DataId) {
+        self.clock += 1;
+        self.data[id as usize].last_use = self.clock;
+    }
+
+    /// Resident, unpinned, non-phantom blocks — what the memory-budget
+    /// policy may spill — as `(last_use, id, payload bytes)` triples.
+    /// The caller sorts by `last_use` and spills until under budget.
+    pub fn spill_candidates(&self) -> Vec<(u64, DataId, usize)> {
+        self.data
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| !d.pinned)
+            .filter_map(|(id, d)| {
+                let v = d.value.as_ref()?;
+                if v.is_phantom() {
+                    return None;
+                }
+                Some((d.last_use, id as DataId, v.meta().bytes()))
+            })
+            .collect()
     }
 
     /// Insert a task; allocates its output ids, wires dependencies, and
@@ -157,6 +188,7 @@ impl Graph {
                 } else {
                     stored_bytes += block.meta().bytes();
                     d.value = Some(Arc::new(block));
+                    self.touch(id);
                 }
             }
         }
@@ -206,15 +238,33 @@ impl Graph {
 
     /// Evict `id`'s value if it is fully consumed: once owned by a handle,
     /// all handles released, no submitted reader outstanding, not pinned.
-    /// Returns the reclaimed payload bytes.
+    /// Returns the reclaimed payload bytes. A block that dies while spilled
+    /// reclaims 0 resident bytes but queues its file for unlinking; any
+    /// stale clean on-disk copy is queued likewise.
     pub fn try_evict(&mut self, id: DataId) -> Option<usize> {
         let d = &mut self.data[id as usize];
         if d.pinned || !d.ever_owned || d.handle_refs > 0 || d.pending_reads > 0 {
             return None;
         }
-        let v = d.value.take()?;
-        d.evicted = true;
-        Some(v.meta().bytes())
+        if let Some(v) = d.value.take() {
+            d.evicted = true;
+            if d.on_disk {
+                d.on_disk = false;
+                d.spilled = false;
+                self.dead_files.push(id);
+            }
+            return Some(v.meta().bytes());
+        }
+        if d.spilled {
+            // The value lives only on disk and the block just died: the
+            // spill file is garbage now, not at store teardown.
+            d.spilled = false;
+            d.on_disk = false;
+            d.evicted = true;
+            self.dead_files.push(id);
+            return Some(0);
+        }
+        None
     }
 
     /// Hand `id`'s value exclusively to its sole claiming reader, removing
@@ -229,6 +279,12 @@ impl Graph {
         }
         let v = d.value.take()?;
         d.evicted = true;
+        if d.on_disk {
+            // The grantee consumes the buffer; the clean disk copy is stale.
+            d.on_disk = false;
+            d.spilled = false;
+            self.dead_files.push(id);
+        }
         Some(v)
     }
 

@@ -19,6 +19,13 @@
 //!   task reads and application handle references; fully-consumed unpinned
 //!   blocks are evicted from the data table and accounted in
 //!   [`Metrics::blocks_evicted`] / `peak_resident_bytes`.
+//! * **Out-of-core residency** — with a [`LocalOptions`] memory budget,
+//!   *live* blocks past the high-water mark are spilled LRU-first to a
+//!   per-runtime [`BlockStore`] directory (write-back for dirty values,
+//!   free drop for clean ones) and faulted back at task-input resolution
+//!   or `wait`; dead spilled blocks have their files unlinked eagerly.
+//!   Spill/fault runs under the central lock: the policy is race-free
+//!   because claiming workers hold `Arc` clones of their inputs.
 //!
 //! Lock discipline: the central mutex guards the graph + counters; each
 //! deque has its own mutex. Pushers hold central→deque (in that order);
@@ -34,7 +41,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::storage::{Block, BlockMeta};
+use crate::storage::{Block, BlockMeta, BlockStore};
 
 use super::graph::{Graph, TaskState};
 use super::metrics::Metrics;
@@ -49,6 +56,44 @@ struct SubQueue {
     cost: f64,
 }
 
+/// Configuration of a [`LocalExecutor`] beyond the worker count — the
+/// out-of-core memory budget and its spill directory.
+#[derive(Clone, Debug, Default)]
+pub struct LocalOptions {
+    /// Worker threads (0 is clamped to 1).
+    pub workers: usize,
+    /// Resident-set high-water mark in bytes. When the payload bytes held
+    /// in the data table exceed this, least-recently-used clean blocks are
+    /// dropped and dirty ones written back to the spill store; spilled
+    /// blocks fault back in transparently at task-input resolution or
+    /// `wait`. `None` (the default) keeps everything resident.
+    pub memory_budget_bytes: Option<u64>,
+    /// Parent directory for spill files; defaults to the system temp dir.
+    /// A uniquely-named per-runtime subdirectory is created under it (so
+    /// runtimes sharing a parent never collide) and only that subdirectory
+    /// is removed at teardown — never the parent itself.
+    pub spill_dir: Option<std::path::PathBuf>,
+}
+
+impl LocalOptions {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            workers,
+            ..Self::default()
+        }
+    }
+
+    pub fn with_memory_budget(mut self, bytes: u64) -> Self {
+        self.memory_budget_bytes = Some(bytes);
+        self
+    }
+
+    pub fn with_spill_dir(mut self, dir: std::path::PathBuf) -> Self {
+        self.spill_dir = Some(dir);
+        self
+    }
+}
+
 struct Central {
     graph: Graph,
     /// Ready tasks sitting in deques, not yet claimed by a worker.
@@ -58,6 +103,82 @@ struct Central {
     /// First task failure; poisons the runtime (fail-fast).
     error: Option<String>,
     metrics: Metrics,
+    /// Resident-set high-water mark; `None` disables spilling.
+    budget: Option<u64>,
+    /// Spill backend; `Some` exactly when `budget` is set. Dropping it at
+    /// executor teardown removes the spill directory.
+    store: Option<BlockStore>,
+}
+
+/// Enforce the resident-set budget: spill least-recently-used blocks until
+/// `resident_bytes` is back under the high-water mark. Clean blocks (valid
+/// on-disk copy) are dropped for free; dirty ones are written back first.
+/// Runs under the central lock — spilling is a stop-the-scheduler event,
+/// which keeps the policy race-free (workers hold `Arc` clones of any
+/// value they are actively computing on, so dropping the table reference
+/// is always safe).
+fn maybe_spill(st: &mut Central) {
+    let Some(budget) = st.budget else { return };
+    if st.metrics.resident_bytes <= budget {
+        return;
+    }
+    let mut cands = st.graph.spill_candidates();
+    cands.sort_unstable();
+    for (_, id, bytes) in cands {
+        if st.metrics.resident_bytes <= budget {
+            break;
+        }
+        let d = &st.graph.data[id as usize];
+        let (on_disk, value) = (d.on_disk, d.value.clone());
+        let Some(v) = value else { continue };
+        let mut written = 0u64;
+        if !on_disk {
+            let store = st.store.as_ref().expect("budget set implies store");
+            match store.spill(id, &v) {
+                Ok(w) => written = w,
+                Err(e) => {
+                    st.error.get_or_insert(format!("spill of block {id} failed: {e}"));
+                    return;
+                }
+            }
+        }
+        let d = &mut st.graph.data[id as usize];
+        d.value = None;
+        d.on_disk = true;
+        d.spilled = true;
+        st.metrics.record_spilled(bytes, written);
+    }
+}
+
+/// Fault one spilled block back into the data table (no-op when resident).
+fn fault_in(st: &mut Central, id: DataId) -> Result<()> {
+    let d = &st.graph.data[id as usize];
+    if d.value.is_some() || !d.spilled {
+        return Ok(());
+    }
+    let store = st.store.as_ref().expect("spilled block implies store");
+    let block = store.fault(id)?;
+    let bytes = block.meta().bytes();
+    let d = &mut st.graph.data[id as usize];
+    d.value = Some(Arc::new(block));
+    d.spilled = false; // `on_disk` stays set: the copy is clean
+    st.graph.touch(id);
+    st.metrics.record_faulted(bytes);
+    Ok(())
+}
+
+/// Unlink spill files of blocks that died (queued by the graph, which has
+/// no file-system access of its own).
+fn drain_dead_files(st: &mut Central) {
+    if st.graph.dead_files.is_empty() {
+        return;
+    }
+    let dead = std::mem::take(&mut st.graph.dead_files);
+    if let Some(store) = &st.store {
+        for id in dead {
+            store.remove(id);
+        }
+    }
 }
 
 struct Inner {
@@ -92,7 +213,19 @@ pub struct LocalExecutor {
 
 impl LocalExecutor {
     pub fn new(workers: usize) -> Self {
-        let workers = workers.max(1);
+        // Infallible: without a budget no spill directory is created.
+        Self::with_options(LocalOptions::new(workers)).expect("budget-less executor needs no I/O")
+    }
+
+    /// Executor with an out-of-core memory budget (see [`LocalOptions`]).
+    /// Errors if the spill directory cannot be created.
+    pub fn with_options(opts: LocalOptions) -> Result<Self> {
+        let workers = opts.workers.max(1);
+        let store = match (&opts.memory_budget_bytes, &opts.spill_dir) {
+            (Some(_), Some(parent)) => Some(BlockStore::new_unique_under(parent)?),
+            (Some(_), None) => Some(BlockStore::in_temp()?),
+            (None, _) => None,
+        };
         let inner = Arc::new(Inner {
             state: Mutex::new(Central {
                 graph: Graph::default(),
@@ -101,6 +234,8 @@ impl LocalExecutor {
                 shutdown: false,
                 error: None,
                 metrics: Metrics::default(),
+                budget: opts.memory_budget_bytes,
+                store,
             }),
             cv: Condvar::new(),
             queues: (0..workers).map(|_| Mutex::new(SubQueue::default())).collect(),
@@ -112,11 +247,11 @@ impl LocalExecutor {
                 std::thread::spawn(move || worker_loop(inner, me))
             })
             .collect();
-        Self {
+        Ok(Self {
             inner,
             workers,
             handles: Mutex::new(handles),
-        }
+        })
     }
 
     /// Single-task convenience wrapper used by unit tests; the library goes
@@ -154,6 +289,10 @@ impl Executor for LocalExecutor {
         let mut st = self.inner.state.lock().unwrap();
         let id = st.graph.put_block(block.meta(), Some(Arc::new(block)));
         st.metrics.record_resident(bytes);
+        // Streaming registration (e.g. `from_matrix` over a huge source)
+        // spills older blocks as the budget fills — the data table never
+        // holds more than budget + one block.
+        maybe_spill(&mut st);
         id
     }
 
@@ -194,6 +333,7 @@ impl Executor for LocalExecutor {
                     st.metrics.record_evicted(bytes);
                 }
             }
+            drain_dead_files(st);
         }
         if any_ready {
             self.inner.cv.notify_all();
@@ -209,7 +349,21 @@ impl Executor for LocalExecutor {
             }
             let d = &st.graph.data[id as usize];
             if let Some(v) = &d.value {
-                return Ok(Arc::clone(v));
+                let v = Arc::clone(v);
+                st.graph.touch(id);
+                return Ok(v);
+            }
+            if d.spilled {
+                // Transparent fault-in: synchronizing a spilled block reads
+                // it back (and may push something else out).
+                fault_in(&mut st, id)?;
+                let v = st.graph.data[id as usize]
+                    .value
+                    .as_ref()
+                    .map(Arc::clone)
+                    .expect("fault_in installs the value");
+                maybe_spill(&mut st);
+                return Ok(v);
             }
             if d.evicted {
                 bail!("wait({id}): block was reclaimed (all handles released); pin it to keep it resident");
@@ -264,6 +418,7 @@ impl Executor for LocalExecutor {
                 st.metrics.record_evicted(bytes);
             }
         }
+        drain_dead_files(&mut st);
     }
 
     fn pin(&self, id: DataId) {
@@ -371,11 +526,22 @@ fn worker_loop(inner: Arc<Inner>, me: usize) {
             st.running += 1;
             let body = st.graph.tasks[tid as usize].spec.body.clone();
             let mut granted_bytes = 0usize;
+            // Out-of-core: fault spilled inputs back in before resolution
+            // and bump every input's LRU stamp so the task's working set is
+            // the last thing the budget policy would push out.
+            let faulted: Result<()> = {
+                let reads: Vec<DataId> = st.graph.tasks[tid as usize].spec.reads.to_vec();
+                reads.iter().try_for_each(|&r| {
+                    fault_in(st, r)?;
+                    st.graph.touch(r);
+                    Ok(())
+                })
+            };
             // Readiness guarantees every input is resolved; a hole here
             // (e.g. a reclaimed input resubmitted by a stale handle) is a
             // real error and must poison the runtime, not silently run the
             // task with empty inputs.
-            let resolved: Result<Resolved> = match body {
+            let resolved: Result<Resolved> = faulted.and_then(|()| match body {
                 // Shared bodies only read the graph: resolve by borrow, no
                 // copy of the reads list in the critical section.
                 TaskBody::Shared(f) => st.graph.tasks[tid as usize]
@@ -426,7 +592,12 @@ fn worker_loop(inner: Arc<Inner>, me: usize) {
                         .collect::<Result<Vec<_>>>()
                         .map(|ins| Resolved::Owned(f, ins))
                 }
-            };
+            });
+            // Faulting may have pushed the resident set over budget; the
+            // resolved inputs are Arc-cloned above, so re-spilling them is
+            // safe (accounting only) and the task still runs on its values.
+            drain_dead_files(st);
+            maybe_spill(st);
             match resolved {
                 Ok(res) => Ok((res, granted_bytes)),
                 Err(e) => {
@@ -477,6 +648,11 @@ fn worker_loop(inner: Arc<Inner>, me: usize) {
                         for bytes in done.evicted {
                             st.metrics.record_evicted(bytes);
                         }
+                        // Fresh outputs may exceed the budget: unlink files
+                        // of blocks this completion killed, then spill LRU
+                        // blocks down to the high-water mark.
+                        drain_dead_files(&mut st);
+                        maybe_spill(&mut st);
                         for (i, dep) in done.now_ready.into_iter().enumerate() {
                             let score = st.graph.tasks[dep as usize].spec.cost_score();
                             // First unblocked dependent stays local (its
@@ -771,6 +947,104 @@ mod tests {
         assert_eq!(m.tasks_fused, 2);
         // gate stored 4 B fresh; owned stored 36 B with 16 B reused.
         assert_eq!(m.bytes_allocated, 24);
+    }
+
+    #[test]
+    fn budget_spills_lru_and_wait_faults_back() {
+        // 2x2 f32 blocks are 16 B; budget of 3 blocks, 6 registered.
+        let ex = LocalExecutor::with_options(LocalOptions::new(2).with_memory_budget(48)).unwrap();
+        let ids: Vec<DataId> = (0..6)
+            .map(|i| ex.put_block(Block::Dense(DenseMatrix::full(2, 2, i as f32))))
+            .collect();
+        let m = ex.metrics();
+        assert_eq!(m.blocks_spilled, 3, "oldest half pushed out");
+        assert!(m.resident_bytes <= 48);
+        assert!(m.spill_bytes > 0);
+        // Every value still synchronizes — spilled ones fault from disk.
+        for (i, &id) in ids.iter().enumerate() {
+            assert_eq!(ex.wait(id).unwrap().as_dense().unwrap().get(0, 0), i as f32);
+        }
+        let m = ex.metrics();
+        // Walking all six in put order faults every block once (the three
+        // initially resident ones get spilled as the walk advances).
+        assert_eq!(m.blocks_faulted, 6);
+        assert_eq!(m.blocks_spilled, 9);
+        assert!(m.resident_bytes <= 48, "faulting re-enforces the budget");
+        // Each of the 6 blocks was written to disk exactly once (22 B
+        // header + 16 B payload): re-spills of clean blocks write nothing.
+        assert_eq!(m.spill_bytes, 6 * 38);
+        assert_eq!(m.blocks_evicted, 0, "spilling is not eviction");
+    }
+
+    #[test]
+    fn tasks_fault_spilled_inputs_transparently() {
+        // Budget of ONE block: a 2-input task must fault both its inputs.
+        let ex = LocalExecutor::with_options(LocalOptions::new(2).with_memory_budget(16)).unwrap();
+        let a = ex.put_block(Block::Dense(DenseMatrix::full(2, 2, 1.0)));
+        let b = ex.put_block(Block::Dense(DenseMatrix::full(2, 2, 10.0)));
+        let out = ex.submit(
+            "sum2",
+            &[a, b],
+            vec![BlockMeta::dense(2, 2)],
+            CostHint::default(),
+            32.0,
+            Arc::new(|ins: &[Arc<Block>]| {
+                let mut acc = ins[0].as_dense()?.clone();
+                acc.axpy(1.0, ins[1].as_dense()?)?;
+                Ok(vec![Block::Dense(acc)])
+            }),
+        );
+        assert_eq!(ex.wait(out[0]).unwrap().as_dense().unwrap().get(0, 0), 11.0);
+        let m = ex.metrics();
+        assert!(m.blocks_spilled >= 1 && m.blocks_faulted >= 1);
+    }
+
+    #[test]
+    fn dead_spilled_blocks_unlink_files_and_teardown_removes_dir() {
+        let dir = std::env::temp_dir().join(format!(
+            "rustdslib_spilltest_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok(); // leftovers from aborted runs
+        let ex = LocalExecutor::with_options(
+            LocalOptions::new(1)
+                .with_memory_budget(16)
+                .with_spill_dir(dir.clone()),
+        )
+        .unwrap();
+        let a = ex.put_block(Block::Dense(DenseMatrix::full(2, 2, 1.0)));
+        let b = ex.put_block(Block::Dense(DenseMatrix::full(2, 2, 2.0))); // spills `a`
+        // The store owns a uniquely-named subdirectory of the configured
+        // parent — never the parent itself.
+        let sub = std::fs::read_dir(&dir).unwrap().next().unwrap().unwrap().path();
+        assert!(sub.join("d00000000.blk").exists());
+        // `a` dies while spilled: refcount reclamation unlinks its file.
+        ex.retain(&[a]);
+        ex.release(&[a]);
+        assert!(!sub.join("d00000000.blk").exists());
+        assert!(ex.wait(a).is_err());
+        assert_eq!(ex.wait(b).unwrap().as_dense().unwrap().get(0, 0), 2.0);
+        let m = ex.metrics();
+        assert_eq!(m.blocks_evicted, 1);
+        drop(ex);
+        assert!(!sub.exists(), "teardown removes the per-runtime spill subdirectory");
+        assert!(dir.exists(), "the caller's parent directory is untouched");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pinned_blocks_are_never_spilled() {
+        let ex = LocalExecutor::with_options(LocalOptions::new(1).with_memory_budget(16)).unwrap();
+        let a = ex.put_block(Block::Dense(DenseMatrix::full(2, 2, 7.0)));
+        ex.pin(a);
+        for i in 0..4 {
+            ex.put_block(Block::Dense(DenseMatrix::full(2, 2, i as f32)));
+        }
+        // `a` stayed resident through all the budget pressure: waiting on
+        // it must not count a fault.
+        let before = ex.metrics().blocks_faulted;
+        assert_eq!(ex.wait(a).unwrap().as_dense().unwrap().get(0, 0), 7.0);
+        assert_eq!(ex.metrics().blocks_faulted, before);
     }
 
     #[test]

@@ -40,6 +40,16 @@ pub struct Metrics {
     /// bytes minus exclusively-granted input bytes (floored at 0), so
     /// in-place execution shows up as bytes *not* allocated.
     pub bytes_allocated: u64,
+    /// Live blocks pushed out of memory by the `memory_budget_bytes`
+    /// resident-set policy (value moved to the spill store; the block stays
+    /// referenced and faults back in on next use).
+    pub blocks_spilled: u64,
+    /// Spilled blocks read back into memory at task-input resolution or
+    /// `wait` time.
+    pub blocks_faulted: u64,
+    /// Bytes actually written to spill files. Clean re-spills (the on-disk
+    /// copy is still valid) drop the value without rewriting and add 0.
+    pub spill_bytes: u64,
 }
 
 impl Metrics {
@@ -91,6 +101,21 @@ impl Metrics {
         self.bytes_allocated += stored.saturating_sub(granted) as u64;
     }
 
+    /// A live block of `resident` payload bytes was spilled to disk;
+    /// `written` is what the spill actually wrote (0 for clean drops whose
+    /// on-disk copy was still valid).
+    pub fn record_spilled(&mut self, resident: usize, written: u64) {
+        self.blocks_spilled += 1;
+        self.spill_bytes += written;
+        self.resident_bytes = self.resident_bytes.saturating_sub(resident as u64);
+    }
+
+    /// A spilled block was faulted back into memory.
+    pub fn record_faulted(&mut self, bytes: usize) {
+        self.blocks_faulted += 1;
+        self.record_resident(bytes);
+    }
+
     pub fn total_tasks(&self) -> u64 {
         self.tasks_by_op.values().sum()
     }
@@ -132,6 +157,9 @@ impl Metrics {
         out.tasks_fused -= earlier.tasks_fused;
         out.inplace_hits -= earlier.inplace_hits;
         out.bytes_allocated -= earlier.bytes_allocated;
+        out.blocks_spilled -= earlier.blocks_spilled;
+        out.blocks_faulted -= earlier.blocks_faulted;
+        out.spill_bytes -= earlier.spill_bytes;
         out
     }
 }
@@ -189,6 +217,27 @@ mod tests {
         assert_eq!(d.tasks_fused, 1);
         assert_eq!(d.inplace_hits, 0);
         assert_eq!(d.bytes_allocated, 8);
+    }
+
+    #[test]
+    fn spill_and_fault_counters() {
+        let mut m = Metrics::default();
+        m.record_resident(1000);
+        m.record_spilled(400, 400); // dirty: written to disk
+        assert_eq!(m.resident_bytes, 600);
+        assert_eq!((m.blocks_spilled, m.spill_bytes), (1, 400));
+        m.record_faulted(400);
+        assert_eq!(m.resident_bytes, 1000);
+        assert_eq!(m.blocks_faulted, 1);
+        m.record_spilled(400, 0); // clean re-spill: nothing rewritten
+        assert_eq!((m.blocks_spilled, m.spill_bytes), (2, 400));
+        assert_eq!(m.resident_bytes, 600);
+        assert_eq!(m.peak_resident_bytes, 1000);
+        let snap = m.clone();
+        m.record_spilled(100, 100);
+        m.record_faulted(100);
+        let d = m.since(&snap);
+        assert_eq!((d.blocks_spilled, d.blocks_faulted, d.spill_bytes), (1, 1, 100));
     }
 
     #[test]

@@ -33,7 +33,13 @@
 //!   the task exclusively ([`TaskInput::Owned`]) so it can mutate the
 //!   buffer in place instead of allocating — the execution mode of the
 //!   fused elementwise engine (`dsarray::expr`). [`Metrics`] counts
-//!   `tasks_fused`, `inplace_hits` and `bytes_allocated`.
+//!   `tasks_fused`, `inplace_hits` and `bytes_allocated`;
+//! * **out-of-core residency** ([`Runtime::local_with_budget`]) extends
+//!   reclamation from "drop dead blocks" to a full resident-set policy:
+//!   a `memory_budget_bytes` high-water mark spills least-recently-used
+//!   *live* blocks to a per-runtime [`crate::storage::BlockStore`]
+//!   directory and task-input resolution / [`Runtime::wait`] fault them
+//!   back transparently, so any pipeline runs at N× RAM (`docs/IO.md`).
 //!
 //! Two [`Executor`] backends share the submission API:
 //! [`Runtime::local`] — a real thread-pool master–worker with per-worker
@@ -54,6 +60,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::storage::{Block, BlockMeta};
+pub use local::LocalOptions;
 pub use metrics::Metrics;
 pub use sim::{SimConfig, SimReport};
 pub use task::{
@@ -213,6 +220,38 @@ impl Runtime {
         Self {
             exec: Arc::new(local::LocalExecutor::new(workers.max(1))),
         }
+    }
+
+    /// Local executor with an out-of-core **memory budget**: when the
+    /// resident block payload exceeds `memory_budget_bytes`, least-recently
+    /// used blocks are spilled to a per-runtime disk directory (write-back
+    /// for dirty values, free drop for clean ones) and fault back in
+    /// transparently when a task or [`Runtime::wait`] needs them. Every
+    /// workload — including the estimators — runs unmodified at N× RAM;
+    /// [`Metrics`] reports `blocks_spilled` / `blocks_faulted` /
+    /// `spill_bytes`. The spill directory is removed at runtime teardown.
+    ///
+    /// ```
+    /// use rustdslib::dsarray::creation;
+    /// use rustdslib::tasking::Runtime;
+    /// let rt = Runtime::local_with_budget(2, 4 * 64 * 64 * 4).unwrap(); // 4 blocks
+    /// let a = creation::random(&rt, (512, 64), (64, 64), 7).unwrap(); // 8 blocks
+    /// let b = a.add_scalar(1.0).unwrap().collect().unwrap(); // faults as needed
+    /// assert_eq!(b.rows(), 512);
+    /// assert!(rt.metrics().blocks_spilled > 0);
+    /// ```
+    pub fn local_with_budget(workers: usize, memory_budget_bytes: u64) -> Result<Self> {
+        Self::local_with_options(
+            LocalOptions::new(workers).with_memory_budget(memory_budget_bytes),
+        )
+    }
+
+    /// Local executor from full [`LocalOptions`] (budget + spill dir).
+    /// Errors if the spill directory cannot be created.
+    pub fn local_with_options(opts: LocalOptions) -> Result<Self> {
+        Ok(Self {
+            exec: Arc::new(local::LocalExecutor::with_options(opts)?),
+        })
     }
 
     /// Simulated executor: tasks are recorded (never run) and

@@ -179,10 +179,22 @@ pub struct DataState {
     /// so bare futures that never passed through a handle container are
     /// kept forever — the safe (pre-refactor) default.
     pub ever_owned: bool,
-    /// Pinned blocks are never reclaimed regardless of refcounts.
+    /// Pinned blocks are never reclaimed regardless of refcounts — and
+    /// never spilled by the memory-budget policy.
     pub pinned: bool,
     /// True once the value has been reclaimed by refcount eviction.
     pub evicted: bool,
+    /// The value currently lives only in the spill store (still referenced;
+    /// faults back in on next use). Implies `on_disk`.
+    pub spilled: bool,
+    /// A valid copy of the value exists in the spill store. Stays set after
+    /// a fault-in ("clean" residency: re-spilling is a free drop, no
+    /// write-back needed — values are single-assignment, so a disk copy
+    /// never goes stale while the block lives).
+    pub on_disk: bool,
+    /// Logical timestamp of the last resolution/synchronization touching
+    /// this value — the LRU key of the spill policy.
+    pub last_use: u64,
 }
 
 impl DataState {
@@ -196,6 +208,9 @@ impl DataState {
             ever_owned: false,
             pinned: false,
             evicted: false,
+            spilled: false,
+            on_disk: false,
+            last_use: 0,
         }
     }
 }

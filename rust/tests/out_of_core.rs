@@ -1,0 +1,185 @@
+//! Out-of-core end-to-end tests: workloads whose working set exceeds the
+//! runtime memory budget must produce results identical to unconstrained
+//! in-memory runs, with the spill/fault counters proving the budget was
+//! actually exercised. (PR acceptance: a KMeans fit over a `load_csv`-
+//! ingested array at half-footprint budget matches the unconstrained run.)
+
+use rustdslib::dsarray::{creation, io as dsio};
+use rustdslib::estimators::kmeans::{KMeans, KMeansConfig};
+use rustdslib::estimators::{Estimator, Pca};
+use rustdslib::storage::DenseMatrix;
+use rustdslib::tasking::Runtime;
+use rustdslib::util::rng::Xoshiro256;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("rustdslib_ooc_{name}_{}", std::process::id()))
+}
+
+fn random_matrix(rows: usize, cols: usize, seed: u64) -> DenseMatrix {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    DenseMatrix::from_fn(rows, cols, |_, _| rng.next_normal())
+}
+
+/// The PR's acceptance scenario: CSV-ingested KMeans at half-footprint
+/// budget equals the unconstrained run, spills and faults both fire, and
+/// load-time residency stays bounded by budget + one block-row (the master
+/// never materializes the matrix).
+#[test]
+fn kmeans_on_spill_backed_load_csv_matches_unconstrained() {
+    let m = random_matrix(64, 8, 11);
+    let p = tmp("kmeans.csv");
+    rustdslib::storage::io::write_csv(&p, &m, ',').unwrap();
+
+    let footprint = (64 * 8 * 4) as u64; // 2048 B
+    let block_row_bytes = (8 * 8 * 4) as u64; // (8, 8) blocks, one per block-row
+    let fit = |rt: &Runtime| {
+        let x = dsio::load_csv(rt, &p, (8, 8), ',').unwrap();
+        let load_peak = rt.metrics().peak_resident_bytes;
+        let mut km = KMeans::new(KMeansConfig {
+            k: 4,
+            max_iter: 8,
+            tol: 1e-9,
+            seed: 5,
+        });
+        km.fit(&x, None).unwrap();
+        (km.centers.unwrap(), km.inertia, load_peak)
+    };
+
+    let rt_mem = Runtime::local(2);
+    let (centers_mem, inertia_mem, _) = fit(&rt_mem);
+
+    let rt_ooc = Runtime::local_with_budget(2, footprint / 2).unwrap();
+    let (centers_ooc, inertia_ooc, load_peak) = fit(&rt_ooc);
+
+    // Same task graph, same arithmetic: bit-identical centroids.
+    assert_eq!(centers_ooc, centers_mem);
+    assert_eq!(inertia_ooc, inertia_mem);
+    let met = rt_ooc.metrics();
+    assert!(met.blocks_spilled > 0, "budget must force spills");
+    assert!(met.blocks_faulted > 0, "fit must fault spilled blocks back");
+    assert!(met.spill_bytes > 0);
+    // Ingestion streams block-rows through the budget: residency during
+    // load is bounded by budget + one block-row, far below the footprint.
+    assert!(
+        load_peak <= footprint / 2 + block_row_bytes,
+        "load peak {load_peak} exceeds budget {} + one block-row {block_row_bytes}",
+        footprint / 2
+    );
+    assert!(load_peak < footprint);
+
+    // The hard streaming proof: with a budget of ONE block-row, the whole
+    // 8-block-row load flows through a single-block-row window — the
+    // master-side path never materializes the matrix.
+    let rt_tiny = Runtime::local_with_budget(2, block_row_bytes).unwrap();
+    let x = dsio::load_csv(&rt_tiny, &p, (8, 8), ',').unwrap();
+    x.runtime().barrier().unwrap();
+    assert!(
+        rt_tiny.metrics().peak_resident_bytes <= 2 * block_row_bytes,
+        "peak {} with a one-block-row budget",
+        rt_tiny.metrics().peak_resident_bytes
+    );
+    assert_eq!(x.collect().unwrap(), m);
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn matmul_with_working_set_over_budget_matches_in_memory() {
+    let ma = random_matrix(64, 64, 21);
+    let mb = random_matrix(64, 64, 22);
+    let run = |rt: &Runtime| {
+        let a = creation::from_matrix(rt, &ma, (16, 16)).unwrap();
+        let b = creation::from_matrix(rt, &mb, (16, 16)).unwrap();
+        a.matmul(&b).unwrap().collect().unwrap()
+    };
+    let expect = run(&Runtime::local(2));
+    // Working set is 3 x 16 KiB (a, b, c); budget fits half of one array.
+    let rt = Runtime::local_with_budget(2, 8 * 1024).unwrap();
+    let got = run(&rt);
+    assert_eq!(got, expect, "spill-backed matmul must be bit-identical");
+    let met = rt.metrics();
+    assert!(met.blocks_spilled > 0 && met.blocks_faulted > 0);
+    assert!(met.resident_bytes <= 8 * 1024 + 1024, "budget enforced up to one block");
+}
+
+/// Deferred elementwise expressions and lazy views over a (partly) spilled
+/// parent must force correctly — the fused tasks and gather tasks fault
+/// their inputs like any other reader.
+#[test]
+fn deferred_expr_and_view_over_spilled_parent_force_correctly() {
+    let m = random_matrix(64, 64, 33);
+    // Budget of 4 blocks out of 64: registration itself spills.
+    let rt = Runtime::local_with_budget(2, 4 * 8 * 8 * 4).unwrap();
+    let a = creation::from_matrix(&rt, &m, (8, 8)).unwrap();
+    assert!(rt.metrics().blocks_spilled > 0, "registration over budget spills");
+
+    // Fused expression chain over the spilled parent (parent stays alive:
+    // shared reads, every input faulted on demand).
+    let got = a
+        .add_scalar(1.0)
+        .unwrap()
+        .mul_scalar(0.5)
+        .unwrap()
+        .collect()
+        .unwrap();
+    let mut want = m.map(|x| (x + 1.0) * 0.5);
+    assert_eq!(got, want);
+
+    // Unaligned lazy view over the spilled parent: force() gathers across
+    // block boundaries, faulting the touched backing blocks.
+    let v = a.slice(3, 61, 5, 50).unwrap();
+    assert!(v.is_view());
+    let forced = v.force().unwrap();
+    assert_eq!(forced.collect().unwrap(), m.slice(3, 5, 58, 45).unwrap());
+
+    // In-place execution over a dead spilled intermediate: the exclusive
+    // grant faults the buffer in first, then mutates it in place.
+    let tmp = a.add_scalar(0.0).unwrap().force().unwrap();
+    rt.barrier().unwrap();
+    let chain = tmp.mul_scalar(3.0).unwrap();
+    drop(tmp);
+    let before = rt.metrics();
+    let got = chain.collect().unwrap();
+    want = m.map(|x| x * 3.0);
+    assert_eq!(got, want);
+    let delta = rt.metrics().since(&before);
+    assert!(delta.inplace_hits > 0, "dead intermediate should be granted in place");
+}
+
+/// Estimators run unmodified on spill-backed arrays: PCA at a quarter of
+/// the footprint equals the in-memory fit exactly.
+#[test]
+fn pca_on_spill_backed_array_matches_in_memory() {
+    let m = random_matrix(96, 16, 44);
+    let run = |rt: &Runtime| {
+        let x = creation::from_matrix(rt, &m, (12, 16)).unwrap();
+        let mut pca = Pca::new(4);
+        pca.fit(&x, None).unwrap();
+        pca.components.unwrap()
+    };
+    let expect = run(&Runtime::local(2));
+    let rt = Runtime::local_with_budget(2, (96 * 16 * 4) / 4).unwrap();
+    let got = run(&rt);
+    assert_eq!(got, expect);
+    assert!(rt.metrics().blocks_spilled > 0);
+}
+
+/// Parallel partitioned save/load under budget: write-back never needs the
+/// master to hold the array, and the round trip is exact.
+#[test]
+fn partitioned_save_load_round_trip_under_budget() {
+    let m = random_matrix(48, 12, 55);
+    let rt = Runtime::local_with_budget(2, 4 * 8 * 12 * 4).unwrap();
+    let a = creation::from_matrix(&rt, &m, (8, 12)).unwrap();
+    let dir = tmp("parts");
+    dsio::save_csv_parts(&a, &dir, ',').unwrap();
+    let back = dsio::load_csv_parts(&rt, &dir, 4, ',').unwrap();
+    assert_eq!(back.collect().unwrap(), m);
+
+    let npy = tmp("rt.npy");
+    dsio::save_npy(&a, &npy).unwrap();
+    let back = dsio::load_npy(&rt, &npy, (8, 4)).unwrap();
+    assert_eq!(back.collect().unwrap(), m);
+    assert!(rt.metrics().blocks_spilled > 0);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&npy).ok();
+}
