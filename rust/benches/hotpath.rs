@@ -287,6 +287,47 @@ fn main() -> Result<()> {
         ),
     ));
 
+    // ---- Same gemm through the cluster backend: 2 in-process TCP workers
+    // (same wire protocol and daemon loop as `dsarray worker` processes).
+    // Deliberately named without the gated row-group words: wall time here
+    // includes loopback TCP and is noisier than the compute rows.
+    let spawn_worker = || {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let _ = rustdslib::tasking::cluster::serve_worker(
+                l,
+                rustdslib::tasking::WorkerOptions::default(),
+            );
+        });
+        addr
+    };
+    let (mut wire_mib, mut loc_hits, mut loc_misses) = (0.0f64, 0u64, 0u64);
+    let t_mm_cluster = time(reps, || {
+        let rt2 = Runtime::cluster(
+            rustdslib::tasking::ClusterOptions::connect(vec![spawn_worker(), spawn_worker()])
+                .with_threads(workers),
+        )?;
+        let a = creation::from_matrix(&rt2, &mm, (64, 64))?;
+        let b = creation::from_matrix(&rt2, &mm, (64, 64))?;
+        let c = a.matmul(&b)?;
+        c.runtime().barrier()?;
+        let met = rt2.metrics();
+        wire_mib = met.bytes_on_wire as f64 / (1024.0 * 1024.0);
+        loc_hits = met.locality_hits;
+        loc_misses = met.remote_transfers;
+        Ok(())
+    })?;
+    rows.push((
+        "cluster gemm-over-wire 256³ (2 workers)".into(),
+        t_mm_cluster,
+        format!(
+            "{:.2} GFLOP/s, {wire_mib:.1} MiB wire, {loc_hits} hits/{loc_misses} transfers, {:.2}x in-memory",
+            mm_gflops / t_mm_cluster,
+            t_mm_cluster / t_mm_mem.max(1e-12)
+        ),
+    ));
+
     // ---- Task-runtime overhead: empty tasks, one submit per task ----
     let t_serial = time(reps, || {
         let rt2 = Runtime::local(workers);

@@ -110,8 +110,10 @@ impl Series {
 /// Render runtime [`Metrics`] as a single-line JSON object, including the
 /// residency counters added with refcount reclamation
 /// (`peak_resident_bytes`, `blocks_evicted`), the fusion counters
-/// (`tasks_fused`, `inplace_hits`, `bytes_allocated`), and the out-of-core
-/// counters (`blocks_spilled`, `blocks_faulted`, `spill_bytes`).
+/// (`tasks_fused`, `inplace_hits`, `bytes_allocated`), the out-of-core
+/// counters (`blocks_spilled`, `blocks_faulted`, `spill_bytes`), and the
+/// cluster-backend counters (`bytes_on_wire`, `remote_transfers`,
+/// `locality_hits`).
 pub fn metrics_json(m: &Metrics) -> String {
     let mut out = String::from("{");
     let _ = write!(out, "\"total_tasks\":{}", m.total_tasks());
@@ -128,6 +130,9 @@ pub fn metrics_json(m: &Metrics) -> String {
     let _ = write!(out, ",\"blocks_spilled\":{}", m.blocks_spilled);
     let _ = write!(out, ",\"blocks_faulted\":{}", m.blocks_faulted);
     let _ = write!(out, ",\"spill_bytes\":{}", m.spill_bytes);
+    let _ = write!(out, ",\"bytes_on_wire\":{}", m.bytes_on_wire);
+    let _ = write!(out, ",\"remote_transfers\":{}", m.remote_transfers);
+    let _ = write!(out, ",\"locality_hits\":{}", m.locality_hits);
     out.push_str(",\"tasks_by_op\":{");
     for (i, (k, v)) in m.tasks_by_op.iter().enumerate() {
         if i > 0 {
@@ -275,6 +280,8 @@ mod tests {
         m.record_allocated(512, 256);
         m.record_spilled(512, 512);
         m.record_faulted(512);
+        m.record_wire(2048);
+        m.record_locality(5, 2);
         let s = metrics_json(&m);
         let v = crate::util::json::parse(&s).unwrap();
         assert_eq!(v.get("total_tasks").unwrap().as_usize(), Some(1));
@@ -287,6 +294,9 @@ mod tests {
         assert_eq!(v.get("blocks_spilled").unwrap().as_usize(), Some(1));
         assert_eq!(v.get("blocks_faulted").unwrap().as_usize(), Some(1));
         assert_eq!(v.get("spill_bytes").unwrap().as_usize(), Some(512));
+        assert_eq!(v.get("bytes_on_wire").unwrap().as_usize(), Some(2048));
+        assert_eq!(v.get("remote_transfers").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("locality_hits").unwrap().as_usize(), Some(5));
         assert_eq!(
             v.get("tasks_by_op").unwrap().get("op.a").unwrap().as_usize(),
             Some(1)

@@ -6,17 +6,49 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::tasking::SimConfig;
+use crate::tasking::{ClusterOptions, SimConfig};
 use crate::util::cli::Args;
 use crate::util::toml;
+
+/// Which [`crate::tasking::Executor`] backend `Config::runtime` builds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// In-process thread pool (optionally with an out-of-core budget).
+    #[default]
+    Local,
+    /// Discrete-event simulator (graphs recorded, never executed).
+    Sim,
+    /// Multi-process coordinator over TCP workers (`dsarray worker`).
+    Cluster,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "local" => Ok(Backend::Local),
+            "sim" => Ok(Backend::Sim),
+            "cluster" => Ok(Backend::Cluster),
+            other => bail!("unknown backend `{other}` (expected local|sim|cluster)"),
+        }
+    }
+}
 
 /// Top-level runtime configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
-    /// Worker threads for real (local) execution.
+    /// Execution backend for `Config::runtime` (`--backend`).
+    pub backend: Backend,
+    /// Worker threads for real (local) execution; on the cluster backend
+    /// this is the coordinator's executor-thread count.
     pub local_workers: usize,
+    /// Worker processes the cluster backend spawns on loopback when no
+    /// explicit addresses are given (`--cluster-workers`).
+    pub cluster_workers: usize,
+    /// Addresses of already-running `dsarray worker` processes
+    /// (`--cluster-addr host:port,host:port`); empty means spawn.
+    pub cluster_addrs: Vec<String>,
     /// Out-of-core resident-set budget for local execution; `None` keeps
     /// every block in memory (see `Runtime::local_with_budget`).
     pub memory_budget_bytes: Option<u64>,
@@ -37,9 +69,12 @@ pub struct Config {
 impl Default for Config {
     fn default() -> Self {
         Self {
+            backend: Backend::Local,
             local_workers: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1),
+            cluster_workers: 2,
+            cluster_addrs: Vec::new(),
             memory_budget_bytes: None,
             spill_dir: None,
             sim_cores: vec![48, 96, 192, 384, 768],
@@ -60,6 +95,15 @@ impl Config {
 
         if let Some(v) = map.get("local_workers").and_then(|v| v.as_i64()) {
             cfg.local_workers = v as usize;
+        }
+        if let Some(v) = map.get("backend").and_then(|v| v.as_str()) {
+            cfg.backend = Backend::parse(v)?;
+        }
+        if let Some(v) = map.get("cluster_workers").and_then(|v| v.as_i64()) {
+            cfg.cluster_workers = v as usize;
+        }
+        if let Some(v) = map.get("cluster_addr").and_then(|v| v.as_str()) {
+            cfg.cluster_addrs = split_addrs(v);
         }
         if let Some(v) = map.get("seed").and_then(|v| v.as_i64()) {
             cfg.seed = v as u64;
@@ -100,12 +144,24 @@ impl Config {
         Ok(cfg)
     }
 
-    /// Apply CLI overrides on top (flags mirror the TOML keys).
-    pub fn apply_args(&mut self, args: &Args) {
+    /// Apply CLI overrides on top (flags mirror the TOML keys). Errors on
+    /// an unknown `--backend` value instead of silently running local.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
         if let Some(v) = args.get("workers") {
             if let Ok(n) = v.parse() {
                 self.local_workers = n;
             }
+        }
+        if let Some(v) = args.get("backend") {
+            self.backend = Backend::parse(v)?;
+        }
+        if let Some(v) = args.get("cluster-workers") {
+            if let Ok(n) = v.parse() {
+                self.cluster_workers = n;
+            }
+        }
+        if let Some(v) = args.get("cluster-addr") {
+            self.cluster_addrs = split_addrs(v);
         }
         if let Some(v) = args.get("seed") {
             if let Ok(n) = v.parse() {
@@ -129,6 +185,7 @@ impl Config {
         self.sim.sched_task_s = args.get_f64("sched-task-s", self.sim.sched_task_s);
         self.sim.per_input_s = args.get_f64("per-input-s", self.sim.per_input_s);
         self.sim.flops_per_s = args.get_f64("flops-per-s", self.sim.flops_per_s);
+        Ok(())
     }
 
     /// Build the configured local runtime: worker count plus the
@@ -146,6 +203,32 @@ impl Config {
         crate::tasking::Runtime::local_with_options(opts)
     }
 
+    /// Build the configured runtime for the selected [`Backend`]: local
+    /// thread pool, discrete-event simulator, or the multi-process cluster
+    /// coordinator (connecting to `cluster_addrs` when given, otherwise
+    /// spawning `cluster_workers` loopback worker processes that are shut
+    /// down at runtime teardown).
+    pub fn runtime(&self) -> Result<crate::tasking::Runtime> {
+        match self.backend {
+            Backend::Local => self.local_runtime(),
+            Backend::Sim => Ok(crate::tasking::Runtime::sim(self.sim.clone())),
+            Backend::Cluster => {
+                let mut opts = if self.cluster_addrs.is_empty() {
+                    ClusterOptions::spawn(self.cluster_workers)
+                } else {
+                    ClusterOptions::connect(self.cluster_addrs.clone())
+                };
+                opts = opts.with_threads(self.local_workers);
+                if let Some(b) = self.memory_budget_bytes {
+                    // On the cluster backend the budget is per worker: each
+                    // spawned worker spills to its own BlockStore past it.
+                    opts = opts.with_worker_budget(b);
+                }
+                crate::tasking::Runtime::cluster(opts)
+            }
+        }
+    }
+
     /// Cost model at a specific simulated core count.
     pub fn sim_at(&self, cores: usize) -> SimConfig {
         let mut s = self.sim.clone();
@@ -159,9 +242,17 @@ impl Config {
             Some(path) => Config::from_file(Path::new(path))?,
             None => Config::default(),
         };
-        cfg.apply_args(args);
+        cfg.apply_args(args)?;
         Ok(cfg)
     }
+}
+
+/// `host:port,host:port` → list (whitespace tolerated).
+fn split_addrs(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|p| p.trim().to_string())
+        .filter(|p| !p.is_empty())
+        .collect()
 }
 
 #[cfg(test)]
@@ -207,7 +298,7 @@ mod tests {
             .map(|s| s.to_string()),
         );
         let mut cfg2 = cfg.clone();
-        cfg2.apply_args(&args);
+        cfg2.apply_args(&args).unwrap();
         assert_eq!(cfg2.seed, 9);
         assert_eq!(cfg2.sim_cores, vec![4]);
         assert_eq!(cfg2.sim.sched_task_s, 0.002);
@@ -218,5 +309,43 @@ mod tests {
         let sim16 = cfg2.sim_at(16);
         assert_eq!(sim16.workers, 16);
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn backend_and_cluster_flags_parse() {
+        let c = Config::default();
+        assert_eq!(c.backend, Backend::Local);
+        assert_eq!(c.cluster_workers, 2);
+        assert!(c.cluster_addrs.is_empty());
+
+        let args = Args::parse(
+            [
+                "--backend",
+                "cluster",
+                "--cluster-workers",
+                "3",
+                "--cluster-addr",
+                "127.0.0.1:7401, 127.0.0.1:7402",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let mut c = Config::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.backend, Backend::Cluster);
+        assert_eq!(c.cluster_workers, 3);
+        assert_eq!(
+            c.cluster_addrs,
+            vec!["127.0.0.1:7401".to_string(), "127.0.0.1:7402".to_string()]
+        );
+
+        let bad = Args::parse(["--backend", "mpi"].iter().map(|s| s.to_string()));
+        assert!(Config::default().apply_args(&bad).is_err());
+        assert!(Backend::parse("sim").is_ok());
+
+        // The sim backend builds a record-only runtime.
+        let mut c = Config::default();
+        c.backend = Backend::Sim;
+        assert!(c.runtime().unwrap().is_sim());
     }
 }

@@ -21,6 +21,12 @@
 //! [`storage::BlockStore`] and faults them back transparently. The
 //! [`io_guide`] module embeds `docs/IO.md` with runnable examples.
 //!
+//! Multi-process execution goes through the **cluster backend**
+//! ([`tasking::Runtime::cluster`]): block payloads live on `dsarray
+//! worker` processes over TCP, tasks are placed on the worker holding the
+//! most input bytes, and missing blocks move worker-to-worker. The
+//! [`cluster_guide`] module embeds `docs/CLUSTER.md`.
+//!
 //! ```
 //! use rustdslib::{dsarray::creation, tasking::Runtime};
 //!
@@ -52,6 +58,12 @@ pub mod util;
 /// and its intra-doc links are checked by `cargo doc -D warnings`).
 #[doc = include_str!("../../docs/IO.md")]
 pub mod io_guide {}
+
+/// Guide: the multi-process cluster backend — wire protocol, locality
+/// placement, failure semantics (`docs/CLUSTER.md`, embedded so its
+/// examples run under `cargo test --doc`).
+#[doc = include_str!("../../docs/CLUSTER.md")]
+pub mod cluster_guide {}
 
 pub use storage::{Block, BlockMeta, CsrMatrix, DenseMatrix};
 pub use tasking::{Future, Runtime, SimConfig, SimReport};

@@ -1,21 +1,24 @@
-//! `repro` — CLI for the ds-array reproduction.
+//! `dsarray` — CLI for the ds-array reproduction.
 //!
 //! Subcommands:
 //!   version                       build info
 //!   bench --fig 6|7|8|9|tasks|all paper-figure reproductions (simulated cluster)
 //!   ablation --which blocks|collections
 //!   calibrate                     local micro-measurements feeding the cost model
-//!   demo                          tiny local end-to-end sanity run
+//!   demo                          end-to-end sanity run (expr chain + KMeans fit)
+//!   worker --listen <addr>        cluster worker daemon (block storage over TCP)
 //!
-//! Global flags: --config <toml>, --cores a,b,c, --seed, --workers, and the
-//! sim.* overrides (see config.rs).
+//! Global flags: --config <toml>, --cores a,b,c, --seed, --workers,
+//! --backend local|sim|cluster, --cluster-workers N,
+//! --cluster-addr host:port,…, and the sim.* overrides (see config.rs).
 
 use anyhow::Result;
 
 use rustdslib::bench::{experiments, report};
 use rustdslib::config::Config;
 use rustdslib::dsarray::creation;
-use rustdslib::tasking::Runtime;
+use rustdslib::estimators::kmeans::{KMeans, KMeansConfig};
+use rustdslib::tasking::{Runtime, WorkerOptions};
 use rustdslib::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -28,18 +31,53 @@ fn main() -> Result<()> {
         Some("ablation") => ablation(&args)?,
         Some("calibrate") => calibrate(&args)?,
         Some("demo") => demo(&args)?,
+        Some("worker") => worker(&args)?,
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown subcommand `{cmd}`\n");
             }
-            eprintln!("usage: repro <version|bench|ablation|calibrate|demo> [flags]");
-            eprintln!("  repro bench --fig all");
-            eprintln!("  repro bench --fig 6 --cores 48,96,192");
-            eprintln!("  repro ablation --which collections");
+            eprintln!("usage: dsarray <version|bench|ablation|calibrate|demo|worker> [flags]");
+            eprintln!("  dsarray bench --fig all");
+            eprintln!("  dsarray bench --fig 6 --cores 48,96,192");
+            eprintln!("  dsarray ablation --which collections");
+            eprintln!("  dsarray worker --listen 127.0.0.1:7401");
+            eprintln!("  dsarray demo --backend cluster --cluster-addr 127.0.0.1:7401,127.0.0.1:7402");
             std::process::exit(2);
         }
     }
     Ok(())
+}
+
+/// Cluster worker daemon: bind, announce `LISTENING <addr>` on stdout (the
+/// coordinator and CI parse it — port 0 picks a free port), then serve
+/// blocks until a Shutdown frame or SIGKILL.
+fn worker(args: &Args) -> Result<()> {
+    let listen = args.get_str("listen", "127.0.0.1:0");
+    // A malformed budget must be a startup error, not a silently unbounded
+    // worker that OOMs mid-run far from the configuration mistake.
+    let budget = match (args.get("memory-budget-bytes"), args.get("memory-budget-mb")) {
+        (Some(v), _) => Some(
+            v.parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("bad --memory-budget-bytes `{v}`: {e}"))?,
+        ),
+        (None, Some(v)) => Some(
+            v.parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("bad --memory-budget-mb `{v}`: {e}"))?
+                * 1024
+                * 1024,
+        ),
+        (None, None) => None,
+    };
+    let listener = std::net::TcpListener::bind(listen)?;
+    println!("LISTENING {}", listener.local_addr()?);
+    use std::io::Write as _;
+    std::io::stdout().flush()?;
+    rustdslib::tasking::cluster::serve_worker(
+        listener,
+        WorkerOptions {
+            memory_budget_bytes: budget,
+        },
+    )
 }
 
 fn bench(args: &Args) -> Result<()> {
@@ -151,7 +189,11 @@ fn calibrate(args: &Args) -> Result<()> {
 
 fn demo(args: &Args) -> Result<()> {
     let cfg = Config::resolve(args)?;
-    let rt = Runtime::local(cfg.local_workers);
+    let rt = cfg.runtime()?;
+    if rt.is_sim() {
+        println!("demo needs a value-producing backend; use --backend local|cluster");
+        return Ok(());
+    }
     let a = creation::random(&rt, (256, 128), (64, 64), cfg.seed)?;
     let expr = a.transpose()?.norm_axis(1)?.pow(2.0)?.sqrt()?;
     let v = expr.collect()?;
@@ -161,7 +203,18 @@ fn demo(args: &Args) -> Result<()> {
         v.get(0, 1),
         v.get(0, 2)
     );
-    println!("tasks: {}", rt.metrics().total_tasks());
+    // A full estimator fit on the selected backend — the CI cluster-smoke
+    // job drives this through `--backend cluster` against live workers.
+    let x = creation::random(&rt, (240, 16), (48, 16), cfg.seed)?;
+    let mut km = KMeans::new(KMeansConfig {
+        k: 4,
+        max_iter: 5,
+        tol: 1e-6,
+        seed: cfg.seed,
+    });
+    km.fit_dsarray(&x)?;
+    println!("kmeans: k=4 on 240x16 -> inertia {:.4} after {} iters", km.inertia, km.n_iter);
+    println!("metrics: {}", report::metrics_json(&rt.metrics()));
     println!(
         "pjrt: {}",
         if rustdslib::runtime::global().is_some() { "available" } else { "artifacts not built" }

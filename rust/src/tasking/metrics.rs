@@ -50,6 +50,15 @@ pub struct Metrics {
     /// Bytes actually written to spill files. Clean re-spills (the on-disk
     /// copy is still valid) drop the value without rewriting and add 0.
     pub spill_bytes: u64,
+    /// Payload + frame bytes moved over TCP by the cluster backend:
+    /// coordinator↔worker puts/gets and worker↔worker pulls.
+    pub bytes_on_wire: u64,
+    /// Task inputs that had to cross workers (pulled to the placement
+    /// worker, or relayed from a non-placement holder).
+    pub remote_transfers: u64,
+    /// Task inputs already resident on the worker the task was placed on —
+    /// the locality scheduler's payoff counter.
+    pub locality_hits: u64,
 }
 
 impl Metrics {
@@ -116,6 +125,18 @@ impl Metrics {
         self.record_resident(bytes);
     }
 
+    /// `bytes` moved over the cluster backend's TCP links.
+    pub fn record_wire(&mut self, bytes: u64) {
+        self.bytes_on_wire += bytes;
+    }
+
+    /// A task was placed: `hits` inputs were already on the placement
+    /// worker, `transfers` had to cross workers to reach the closure.
+    pub fn record_locality(&mut self, hits: u64, transfers: u64) {
+        self.locality_hits += hits;
+        self.remote_transfers += transfers;
+    }
+
     pub fn total_tasks(&self) -> u64 {
         self.tasks_by_op.values().sum()
     }
@@ -160,6 +181,9 @@ impl Metrics {
         out.blocks_spilled -= earlier.blocks_spilled;
         out.blocks_faulted -= earlier.blocks_faulted;
         out.spill_bytes -= earlier.spill_bytes;
+        out.bytes_on_wire -= earlier.bytes_on_wire;
+        out.remote_transfers -= earlier.remote_transfers;
+        out.locality_hits -= earlier.locality_hits;
         out
     }
 }
@@ -238,6 +262,24 @@ mod tests {
         m.record_faulted(100);
         let d = m.since(&snap);
         assert_eq!((d.blocks_spilled, d.blocks_faulted, d.spill_bytes), (1, 1, 100));
+    }
+
+    #[test]
+    fn wire_and_locality_counters() {
+        let mut m = Metrics::default();
+        m.record_wire(1000);
+        m.record_locality(3, 1);
+        m.record_wire(24);
+        assert_eq!(m.bytes_on_wire, 1024);
+        assert_eq!(m.locality_hits, 3);
+        assert_eq!(m.remote_transfers, 1);
+        let snap = m.clone();
+        m.record_wire(6);
+        m.record_locality(0, 2);
+        let d = m.since(&snap);
+        assert_eq!(d.bytes_on_wire, 6);
+        assert_eq!(d.locality_hits, 0);
+        assert_eq!(d.remote_transfers, 2);
     }
 
     #[test]

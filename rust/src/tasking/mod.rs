@@ -41,25 +41,31 @@
 //!   directory and task-input resolution / [`Runtime::wait`] fault them
 //!   back transparently, so any pipeline runs at N× RAM (`docs/IO.md`).
 //!
-//! Two [`Executor`] backends share the submission API:
+//! Three [`Executor`] backends share the submission API:
 //! [`Runtime::local`] — a real thread-pool master–worker with per-worker
-//! deques and cost-aware work stealing (see [`local`]) — and
+//! deques and cost-aware work stealing (see [`local`]) —
+//! [`Runtime::cluster`] — a multi-**process** coordinator that distributes
+//! block residency across TCP worker daemons with locality-aware task
+//! placement (see [`cluster`] and `docs/CLUSTER.md`) — and
 //! [`Runtime::sim`] — a discrete-event simulator that executes the *same*
 //! graphs under a calibrated cluster cost model at MareNostrum scale
 //! (DESIGN.md §2). [`Runtime::from_executor`] accepts any custom backend.
 
+pub mod cluster;
 pub mod graph;
 pub mod local;
 pub mod metrics;
 pub mod ops;
 pub mod sim;
 pub mod task;
+pub mod wire;
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::storage::{Block, BlockMeta};
+pub use cluster::{ClusterOptions, TransferMode, WorkerOptions};
 pub use local::LocalOptions;
 pub use metrics::Metrics;
 pub use sim::{SimConfig, SimReport};
@@ -251,6 +257,19 @@ impl Runtime {
     pub fn local_with_options(opts: LocalOptions) -> Result<Self> {
         Ok(Self {
             exec: Arc::new(local::LocalExecutor::with_options(opts)?),
+        })
+    }
+
+    /// Multi-process cluster executor: block payloads live on N worker
+    /// **processes** reached over TCP (`dsarray worker --listen <addr>`),
+    /// tasks are placed on the worker holding the most input bytes, and
+    /// missing inputs move worker-to-worker (or relay through the
+    /// coordinator). Spawns workers, connects to existing ones, or both —
+    /// see [`ClusterOptions`]. [`Metrics`] gains `bytes_on_wire`,
+    /// `remote_transfers` and `locality_hits` on this backend.
+    pub fn cluster(opts: ClusterOptions) -> Result<Self> {
+        Ok(Self {
+            exec: Arc::new(cluster::ClusterExecutor::new(opts)?),
         })
     }
 

@@ -1,0 +1,471 @@
+//! Length-prefixed binary protocol between the cluster coordinator and its
+//! worker processes (`dsarray worker --listen <addr>`).
+//!
+//! Every message is one **frame**:
+//!
+//! ```text
+//! len     u32 LE               payload byte count (excludes this field)
+//! opcode  u8                   message kind (below)
+//! body    len-1 bytes          opcode-specific
+//! ```
+//!
+//! Block payloads reuse the self-describing record format of the out-of-core
+//! spill store ([`crate::storage::store::write_block`]) — `DSBK` magic,
+//! dense and CSR kinds — so a block travels the wire in exactly the bytes it
+//! would occupy in a spill file, and the codec is tested once.
+//!
+//! Request opcodes (coordinator → worker, or worker → peer worker):
+//!
+//! | op   | name     | body                                             |
+//! |------|----------|--------------------------------------------------|
+//! | 0x01 | Ping     | —                                                |
+//! | 0x02 | Put      | `id u32` + block record                          |
+//! | 0x03 | Get      | `id u32`                                         |
+//! | 0x04 | Free     | `n u32` + n × `id u32`                           |
+//! | 0x05 | Pull     | `id u32` + `alen u16` + peer address (UTF-8)     |
+//! | 0x06 | Stat     | —                                                |
+//! | 0x07 | Shutdown | —                                                |
+//!
+//! Response opcodes (worker → requester):
+//!
+//! | op   | name   | body                                               |
+//! |------|--------|----------------------------------------------------|
+//! | 0x81 | Ok     | —                                                  |
+//! | 0x82 | Block  | block record                                       |
+//! | 0x83 | Pulled | `bytes u64` (wire bytes moved worker-to-worker)    |
+//! | 0x84 | Stat   | `blocks u64, resident u64, spilled u64, pulled u64`|
+//! | 0x85 | Err    | UTF-8 message                                      |
+//!
+//! Exactly one response answers each request, in order, per connection. The
+//! codec is transport-agnostic (`Read`/`Write`), so the same functions serve
+//! TCP streams and in-memory buffers in tests.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::storage::store::{read_block, write_block};
+use crate::storage::Block;
+
+/// Sanity cap on a single frame (1 GiB) — a corrupt length prefix must not
+/// turn into an unbounded allocation.
+pub const MAX_FRAME: u32 = 1 << 30;
+
+const OP_PING: u8 = 0x01;
+const OP_PUT: u8 = 0x02;
+const OP_GET: u8 = 0x03;
+const OP_FREE: u8 = 0x04;
+const OP_PULL: u8 = 0x05;
+const OP_STAT: u8 = 0x06;
+const OP_SHUTDOWN: u8 = 0x07;
+const OP_OK: u8 = 0x81;
+const OP_BLOCK: u8 = 0x82;
+const OP_PULLED: u8 = 0x83;
+const OP_STAT_R: u8 = 0x84;
+const OP_ERR: u8 = 0x85;
+
+/// One coordinator/peer request to a worker.
+#[derive(Debug)]
+pub enum Request {
+    /// Liveness probe.
+    Ping,
+    /// Store `block` under `id` (overwrites any previous value).
+    Put { id: u32, block: Block },
+    /// Return the block stored under `id`.
+    Get { id: u32 },
+    /// Drop the listed blocks (refcount reclamation's remote free).
+    Free { ids: Vec<u32> },
+    /// Fetch `id` from the worker listening at `from` and store it locally
+    /// (worker-to-worker pull; the source keeps its copy — blocks are
+    /// single-assignment, so replicas never go stale).
+    Pull { id: u32, from: String },
+    /// Report block count / resident bytes / spill and pull counters.
+    Stat,
+    /// Clean up (remove the spill directory) and exit the worker process.
+    Shutdown,
+}
+
+/// Worker-side counters returned by [`Request::Stat`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerStat {
+    /// Blocks currently stored (in memory or spilled).
+    pub blocks: u64,
+    /// Payload bytes currently resident in worker memory.
+    pub resident_bytes: u64,
+    /// Blocks pushed to this worker's spill store by its memory budget.
+    pub blocks_spilled: u64,
+    /// Wire bytes this worker fetched from peers via [`Request::Pull`].
+    pub pulled_bytes: u64,
+}
+
+/// One worker reply.
+#[derive(Debug)]
+pub enum Response {
+    Ok,
+    Block(Block),
+    Pulled { bytes: u64 },
+    Stat(WorkerStat),
+    Err(String),
+}
+
+fn push_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Cursor over a received payload; every read is bounds-checked so a
+/// truncated or malicious frame errors instead of panicking.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "truncated frame: wanted {n} bytes at offset {}, payload is {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+}
+
+/// Write one frame; returns the total bytes written (header + payload).
+fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<u64> {
+    // Checked BEFORE the u32 cast: a >= 4 GiB payload must error, not wrap
+    // into a small header that desyncs the stream.
+    if payload.len() > MAX_FRAME as usize {
+        bail!("frame of {} bytes exceeds MAX_FRAME", payload.len());
+    }
+    let len = payload.len() as u32;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(4 + payload.len() as u64)
+}
+
+/// Read one frame payload; returns (payload, total bytes read).
+fn read_frame(r: &mut impl Read) -> Result<(Vec<u8>, u64)> {
+    let mut hdr = [0u8; 4];
+    r.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes(hdr);
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds MAX_FRAME — corrupt stream?");
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok((payload, 4 + len as u64))
+}
+
+/// Serialize and send one request; returns the bytes written.
+pub fn write_request(w: &mut impl Write, req: &Request) -> Result<u64> {
+    let mut buf = Vec::new();
+    match req {
+        Request::Ping => buf.push(OP_PING),
+        Request::Put { id, block } => {
+            buf.push(OP_PUT);
+            push_u32(&mut buf, *id);
+            write_block(&mut buf, block).context("encoding Put block record")?;
+        }
+        Request::Get { id } => {
+            buf.push(OP_GET);
+            push_u32(&mut buf, *id);
+        }
+        Request::Free { ids } => {
+            buf.push(OP_FREE);
+            push_u32(&mut buf, ids.len() as u32);
+            for &id in ids {
+                push_u32(&mut buf, id);
+            }
+        }
+        Request::Pull { id, from } => {
+            buf.push(OP_PULL);
+            push_u32(&mut buf, *id);
+            let a = from.as_bytes();
+            if a.len() > u16::MAX as usize {
+                bail!("peer address of {} bytes is not addressable", a.len());
+            }
+            push_u16(&mut buf, a.len() as u16);
+            buf.extend_from_slice(a);
+        }
+        Request::Stat => buf.push(OP_STAT),
+        Request::Shutdown => buf.push(OP_SHUTDOWN),
+    }
+    write_frame(w, &buf)
+}
+
+/// Receive and decode one request.
+pub fn read_request(r: &mut impl Read) -> Result<Request> {
+    let (payload, _) = read_frame(r)?;
+    let mut c = Cursor::new(&payload);
+    let op = c.take(1)?[0];
+    Ok(match op {
+        OP_PING => Request::Ping,
+        OP_PUT => {
+            let id = c.u32()?;
+            let mut rest = c.rest();
+            let block = read_block(&mut rest).context("decoding Put block record")?;
+            Request::Put { id, block }
+        }
+        OP_GET => Request::Get { id: c.u32()? },
+        OP_FREE => {
+            let n = c.u32()? as usize;
+            let mut ids = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                ids.push(c.u32()?);
+            }
+            Request::Free { ids }
+        }
+        OP_PULL => {
+            let id = c.u32()?;
+            let alen = c.u16()? as usize;
+            let from = String::from_utf8(c.take(alen)?.to_vec())
+                .context("peer address is not UTF-8")?;
+            Request::Pull { id, from }
+        }
+        OP_STAT => Request::Stat,
+        OP_SHUTDOWN => Request::Shutdown,
+        other => bail!("unknown request opcode 0x{other:02x}"),
+    })
+}
+
+/// Serialize and send one response; returns the bytes written.
+pub fn write_response(w: &mut impl Write, resp: &Response) -> Result<u64> {
+    let mut buf = Vec::new();
+    match resp {
+        Response::Ok => buf.push(OP_OK),
+        Response::Block(block) => {
+            buf.push(OP_BLOCK);
+            write_block(&mut buf, block).context("encoding Block response")?;
+        }
+        Response::Pulled { bytes } => {
+            buf.push(OP_PULLED);
+            push_u64(&mut buf, *bytes);
+        }
+        Response::Stat(s) => {
+            buf.push(OP_STAT_R);
+            push_u64(&mut buf, s.blocks);
+            push_u64(&mut buf, s.resident_bytes);
+            push_u64(&mut buf, s.blocks_spilled);
+            push_u64(&mut buf, s.pulled_bytes);
+        }
+        Response::Err(msg) => {
+            buf.push(OP_ERR);
+            buf.extend_from_slice(msg.as_bytes());
+        }
+    }
+    write_frame(w, &buf)
+}
+
+/// Receive and decode one response; returns it with the bytes read (frame
+/// header included) so callers can account `bytes_on_wire` exactly.
+pub fn read_response(r: &mut impl Read) -> Result<(Response, u64)> {
+    let (payload, n) = read_frame(r)?;
+    let mut c = Cursor::new(&payload);
+    let op = c.take(1)?[0];
+    let resp = match op {
+        OP_OK => Response::Ok,
+        OP_BLOCK => {
+            let mut rest = c.rest();
+            Response::Block(read_block(&mut rest).context("decoding Block response")?)
+        }
+        OP_PULLED => Response::Pulled { bytes: c.u64()? },
+        OP_STAT_R => Response::Stat(WorkerStat {
+            blocks: c.u64()?,
+            resident_bytes: c.u64()?,
+            blocks_spilled: c.u64()?,
+            pulled_bytes: c.u64()?,
+        }),
+        OP_ERR => Response::Err(String::from_utf8_lossy(c.rest()).into_owned()),
+        other => bail!("unknown response opcode 0x{other:02x}"),
+    };
+    Ok((resp, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{CsrMatrix, DenseMatrix};
+
+    fn round_trip_request(req: &Request) -> Request {
+        let mut buf = Vec::new();
+        let written = write_request(&mut buf, req).unwrap();
+        assert_eq!(written as usize, buf.len());
+        let back = read_request(&mut buf.as_slice()).unwrap();
+        // The whole frame must be consumed.
+        back
+    }
+
+    fn round_trip_response(resp: &Response) -> Response {
+        let mut buf = Vec::new();
+        let written = write_response(&mut buf, resp).unwrap();
+        assert_eq!(written as usize, buf.len());
+        let (back, read) = read_response(&mut buf.as_slice()).unwrap();
+        assert_eq!(read as usize, buf.len());
+        back
+    }
+
+    #[test]
+    fn dense_put_round_trips_bit_for_bit() {
+        let m = DenseMatrix::from_fn(7, 5, |i, j| i as f32 * 0.25 - j as f32);
+        let req = Request::Put {
+            id: 42,
+            block: Block::Dense(m.clone()),
+        };
+        match round_trip_request(&req) {
+            Request::Put { id, block } => {
+                assert_eq!(id, 42);
+                assert_eq!(block.as_dense().unwrap(), &m);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn csr_block_response_round_trips() {
+        let m = CsrMatrix::from_triplets(4, 6, &[(0, 5, 1.5), (2, 0, -2.0), (3, 3, 0.25)])
+            .unwrap();
+        match round_trip_response(&Response::Block(Block::Csr(m.clone()))) {
+            Response::Block(b) => assert_eq!(b.as_csr().unwrap(), &m),
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_messages_round_trip() {
+        assert!(matches!(round_trip_request(&Request::Ping), Request::Ping));
+        assert!(matches!(round_trip_request(&Request::Stat), Request::Stat));
+        assert!(matches!(
+            round_trip_request(&Request::Shutdown),
+            Request::Shutdown
+        ));
+        match round_trip_request(&Request::Get { id: 7 }) {
+            Request::Get { id } => assert_eq!(id, 7),
+            other => panic!("decoded {other:?}"),
+        }
+        match round_trip_request(&Request::Free {
+            ids: vec![1, 2, 1000],
+        }) {
+            Request::Free { ids } => assert_eq!(ids, vec![1, 2, 1000]),
+            other => panic!("decoded {other:?}"),
+        }
+        match round_trip_request(&Request::Pull {
+            id: 9,
+            from: "127.0.0.1:7401".into(),
+        }) {
+            Request::Pull { id, from } => {
+                assert_eq!(id, 9);
+                assert_eq!(from, "127.0.0.1:7401");
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        match round_trip_response(&Response::Pulled { bytes: 12345 }) {
+            Response::Pulled { bytes } => assert_eq!(bytes, 12345),
+            other => panic!("decoded {other:?}"),
+        }
+        let stat = WorkerStat {
+            blocks: 3,
+            resident_bytes: 4096,
+            blocks_spilled: 1,
+            pulled_bytes: 2048,
+        };
+        match round_trip_response(&Response::Stat(stat)) {
+            Response::Stat(s) => assert_eq!(s, stat),
+            other => panic!("decoded {other:?}"),
+        }
+        match round_trip_response(&Response::Err("boom at 127.0.0.1:1".into())) {
+            Response::Err(m) => assert_eq!(m, "boom at 127.0.0.1:1"),
+            other => panic!("decoded {other:?}"),
+        }
+        assert!(matches!(round_trip_response(&Response::Ok), Response::Ok));
+    }
+
+    #[test]
+    fn truncated_and_oversized_frames_error() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, &Request::Get { id: 3 }).unwrap();
+        // Chop the payload: decode must error, not panic.
+        assert!(read_request(&mut &buf[..buf.len() - 2]).is_err());
+        // A length prefix past MAX_FRAME is rejected before allocating.
+        let huge = (MAX_FRAME + 1).to_le_bytes();
+        assert!(read_request(&mut huge.as_slice()).is_err());
+        // Unknown opcode.
+        let mut bad = Vec::new();
+        write_frame(&mut bad, &[0x7f]).unwrap();
+        assert!(read_request(&mut bad.as_slice()).is_err());
+        assert!(read_response(&mut bad.as_slice()).is_err());
+    }
+
+    #[test]
+    fn frames_round_trip_over_a_real_tcp_stream() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // Echo server: Get{id} is answered with a 1x1 dense block of id.
+            loop {
+                match read_request(&mut s) {
+                    Ok(Request::Get { id }) => {
+                        let b = Block::Dense(DenseMatrix::full(1, 1, id as f32));
+                        write_response(&mut s, &Response::Block(b)).unwrap();
+                    }
+                    Ok(Request::Shutdown) => {
+                        write_response(&mut s, &Response::Ok).unwrap();
+                        return;
+                    }
+                    Ok(_) => write_response(&mut s, &Response::Err("unexpected".into()))
+                        .map(|_| ())
+                        .unwrap(),
+                    Err(_) => return, // connection closed
+                }
+            }
+        });
+        let mut c = std::net::TcpStream::connect(addr).unwrap();
+        for id in [0u32, 9, 1000] {
+            write_request(&mut c, &Request::Get { id }).unwrap();
+            match read_response(&mut c).unwrap().0 {
+                Response::Block(b) => {
+                    assert_eq!(b.as_dense().unwrap().get(0, 0), id as f32)
+                }
+                other => panic!("got {other:?}"),
+            }
+        }
+        write_request(&mut c, &Request::Shutdown).unwrap();
+        assert!(matches!(read_response(&mut c).unwrap().0, Response::Ok));
+        server.join().unwrap();
+    }
+}

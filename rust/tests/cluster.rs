@@ -1,0 +1,217 @@
+//! Local-vs-cluster parity suite: the same workloads must produce
+//! bit-identical results whether blocks live in the coordinator's memory
+//! (local backend) or on ≥2 **separate worker processes** reached over TCP
+//! (cluster backend). Workers here are real `dsarray worker` OS processes
+//! spawned from the built CLI binary — this is the repo's first test in
+//! which a block actually crosses a process boundary.
+//!
+//! Also covers the failure contract: a worker process killed mid-workload
+//! must surface as a poisoned task naming the worker address and task —
+//! never a hang.
+
+use std::path::Path;
+use std::process::Child;
+
+use rustdslib::dsarray::creation;
+use rustdslib::estimators::kmeans::{KMeans, KMeansConfig};
+use rustdslib::estimators::{Estimator, LinearRegression, Pca};
+use rustdslib::storage::DenseMatrix;
+use rustdslib::tasking::cluster::spawn_worker_process;
+use rustdslib::tasking::wire::{self, Request, Response, WorkerStat};
+use rustdslib::tasking::{ClusterOptions, Runtime};
+use rustdslib::util::rng::Xoshiro256;
+
+/// A fleet of real worker processes; killed (and reaped) on drop.
+struct Workers {
+    children: Vec<Child>,
+    addrs: Vec<String>,
+}
+
+impl Workers {
+    fn spawn(n: usize, budget_bytes: Option<u64>) -> Self {
+        // The library's spawn helper, pointed at the real CLI binary (a
+        // test harness's current_exe is the test binary, not `dsarray`).
+        let program = Path::new(env!("CARGO_BIN_EXE_dsarray"));
+        let mut children = Vec::new();
+        let mut addrs = Vec::new();
+        for _ in 0..n {
+            let (child, addr) =
+                spawn_worker_process(program, budget_bytes).expect("spawn dsarray worker");
+            children.push(child);
+            addrs.push(addr);
+        }
+        Self { children, addrs }
+    }
+
+    fn runtime(&self) -> Runtime {
+        Runtime::cluster(ClusterOptions::connect(self.addrs.clone()).with_threads(2)).unwrap()
+    }
+
+    fn stat(&self, i: usize) -> WorkerStat {
+        let mut s = std::net::TcpStream::connect(&self.addrs[i]).unwrap();
+        wire::write_request(&mut s, &Request::Stat).unwrap();
+        match wire::read_response(&mut s).unwrap().0 {
+            Response::Stat(st) => st,
+            other => panic!("got {other:?}"),
+        }
+    }
+}
+
+impl Drop for Workers {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            c.kill().ok();
+            c.wait().ok();
+        }
+    }
+}
+
+fn random_matrix(rows: usize, cols: usize, seed: u64) -> DenseMatrix {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    DenseMatrix::from_fn(rows, cols, |_, _| rng.next_normal())
+}
+
+/// The acceptance scenario: a KMeans fit over 2 worker processes is
+/// bit-identical to the local fit, with real bytes on the wire and the
+/// locality scheduler visibly placing tasks where their inputs live.
+#[test]
+fn kmeans_parity_local_vs_cluster() {
+    let m = random_matrix(96, 8, 11);
+    let fit = |rt: &Runtime| {
+        let x = creation::from_matrix(rt, &m, (16, 8)).unwrap();
+        let mut km = KMeans::new(KMeansConfig {
+            k: 4,
+            max_iter: 8,
+            tol: 1e-9,
+            seed: 5,
+        });
+        km.fit(&x, None).unwrap();
+        (km.centers.unwrap(), km.inertia)
+    };
+    let (centers_local, inertia_local) = fit(&Runtime::local(2));
+
+    let workers = Workers::spawn(2, None);
+    let rt = workers.runtime();
+    let (centers_cluster, inertia_cluster) = fit(&rt);
+
+    assert_eq!(centers_cluster, centers_local, "bit-for-bit centroid parity");
+    assert_eq!(inertia_cluster, inertia_local);
+    let met = rt.metrics();
+    assert!(met.bytes_on_wire > 0, "blocks must actually cross the wire");
+    assert!(met.locality_hits > 0, "placement must find co-located inputs");
+    // Both worker processes really held blocks.
+    assert!(workers.stat(0).blocks > 0);
+    assert!(workers.stat(1).blocks > 0);
+}
+
+#[test]
+fn pca_and_linreg_parity_local_vs_cluster() {
+    let xm = random_matrix(96, 16, 44);
+    let ym = random_matrix(96, 1, 45);
+    let run = |rt: &Runtime| {
+        let x = creation::from_matrix(rt, &xm, (12, 16)).unwrap();
+        let mut pca = Pca::new(4);
+        pca.fit(&x, None).unwrap();
+        let y = creation::from_matrix(rt, &ym, (12, 1)).unwrap();
+        let mut lr = LinearRegression::new(1e-4, true);
+        lr.fit(&x, Some(&y)).unwrap();
+        (pca.components.unwrap(), lr.weights.unwrap(), lr.intercept)
+    };
+    let (comp_l, w_l, b_l) = run(&Runtime::local(2));
+    let workers = Workers::spawn(2, None);
+    let (comp_c, w_c, b_c) = run(&workers.runtime());
+    assert_eq!(comp_c, comp_l, "PCA components parity");
+    assert_eq!(w_c, w_l, "ridge weights parity");
+    assert_eq!(b_c, b_l);
+}
+
+/// Per-worker memory budgets: a matmul whose working set exceeds every
+/// worker's budget still matches the local result bit for bit, and the
+/// worker-side spill counters prove the disk tier was exercised.
+#[test]
+fn spill_backed_matmul_parity_with_worker_budgets() {
+    let ma = random_matrix(64, 64, 21);
+    let mb = random_matrix(64, 64, 22);
+    let run = |rt: &Runtime| {
+        let a = creation::from_matrix(rt, &ma, (16, 16)).unwrap();
+        let b = creation::from_matrix(rt, &mb, (16, 16)).unwrap();
+        a.matmul(&b).unwrap().collect().unwrap()
+    };
+    let expect = run(&Runtime::local(2));
+    // Each 16x16 f32 block is 1 KiB; 2 KiB budgets force worker spills.
+    let workers = Workers::spawn(2, Some(2048));
+    let got = run(&workers.runtime());
+    assert_eq!(got, expect, "spill-backed cluster matmul must be bit-identical");
+    let spilled = workers.stat(0).blocks_spilled + workers.stat(1).blocks_spilled;
+    assert!(spilled > 0, "worker budgets must actually spill");
+}
+
+/// Fused elementwise chains and lazy views run unmodified on the cluster
+/// backend: one fused task per block against remote inputs, view
+/// materialization gathers across worker-held blocks.
+#[test]
+fn fused_chain_and_view_parity_local_vs_cluster() {
+    let m = random_matrix(64, 64, 33);
+    let run = |rt: &Runtime| {
+        let a = creation::from_matrix(rt, &m, (8, 8)).unwrap();
+        let fused = a
+            .add_scalar(1.0)
+            .unwrap()
+            .mul_scalar(0.5)
+            .unwrap()
+            .add_scalar(-3.0)
+            .unwrap()
+            .collect()
+            .unwrap();
+        let view = a.slice(3, 61, 5, 50).unwrap(); // unaligned: lazy view
+        assert!(view.is_view());
+        let forced = view.force().unwrap().collect().unwrap();
+        let metrics = rt.metrics();
+        (fused, forced, metrics.tasks_for("dsarray.ew.fused"))
+    };
+    let (fused_l, view_l, n_fused_l) = run(&Runtime::local(2));
+    let workers = Workers::spawn(2, None);
+    let rt = workers.runtime();
+    let (fused_c, view_c, n_fused_c) = run(&rt);
+    assert_eq!(fused_c, fused_l, "fused chain parity");
+    assert_eq!(view_c, view_l, "forced view parity");
+    // Identical graphs on both backends: the chain still collapses to one
+    // fused task per block.
+    assert_eq!(n_fused_c, n_fused_l);
+    assert!(rt.metrics().bytes_on_wire > 0);
+}
+
+/// A worker process dying mid-workload must poison the runtime with the
+/// worker address and the failing task's name — and every subsequent
+/// synchronization must error immediately instead of hanging (mirrors the
+/// PR-1 fix that removed the silent input-resolution swallow).
+#[test]
+fn killed_worker_poisons_with_address_and_task_name() {
+    let mut workers = Workers::spawn(2, None);
+    let rt = workers.runtime();
+    let m = random_matrix(32, 32, 7);
+    let a = creation::from_matrix(&rt, &m, (8, 8)).unwrap();
+    rt.barrier().unwrap();
+    // Both workers hold half of the 16 blocks.
+    assert!(workers.stat(0).blocks > 0 && workers.stat(1).blocks > 0);
+
+    // Kill worker 0 mid-cluster. Tasks over its blocks must fail loudly.
+    workers.children[0].kill().unwrap();
+    workers.children[0].wait().unwrap();
+
+    let err = a
+        .add_scalar(1.0)
+        .unwrap()
+        .collect()
+        .expect_err("reading blocks of a dead worker must fail")
+        .to_string();
+    assert!(err.contains("task `"), "error should name the task: {err}");
+    assert!(
+        err.contains(&workers.addrs[0]),
+        "error should name the dead worker {}: {err}",
+        workers.addrs[0]
+    );
+    // Poisoned, not hung: barriers and fresh waits fail fast.
+    let b_err = rt.barrier().expect_err("barrier must observe the poison");
+    assert!(b_err.to_string().contains("poisoned"), "{b_err}");
+}

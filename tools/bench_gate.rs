@@ -1,0 +1,154 @@
+//! CI benchmark regression gate.
+//!
+//! Compares a freshly produced `BENCH_hotpath.json` (written by
+//! `cargo bench --bench hotpath -- --json …`) against the committed
+//! baseline at the repository root and **fails (exit 1) when the median
+//! regression of any watched row group exceeds the threshold** (default
+//! 25%, groups `matmul`, `fused`, `load` — the rows the perf PRs optimize).
+//!
+//! Median-per-group, not worst-row, so one noisy timing on a shared CI
+//! runner cannot fail the gate by itself; the threshold absorbs the rest of
+//! the runner-to-runner variance. Rows present on only one side are
+//! reported but never gate (new benchmarks must not fail their own PR).
+//! An empty baseline (the committed seed, or a bench format change) passes
+//! vacuously — the push-to-main refresh step repopulates it.
+//!
+//! Usage:
+//!   bench_gate --baseline ../BENCH_hotpath.json --current BENCH_hotpath.json \
+//!              [--max-regress 0.25] [--groups matmul,fused,load]
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+use rustdslib::util::cli::Args;
+use rustdslib::util::json::Json;
+
+fn main() {
+    match run() {
+        Ok(true) => {}
+        Ok(false) => std::process::exit(1),
+        Err(e) => {
+            eprintln!("bench_gate: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run() -> Result<bool> {
+    let args = Args::from_env();
+    let baseline_path = args
+        .get("baseline")
+        .ok_or_else(|| anyhow!("--baseline <path> is required"))?;
+    let current_path = args
+        .get("current")
+        .ok_or_else(|| anyhow!("--current <path> is required"))?;
+    let max_regress = args.get_f64("max-regress", 0.25);
+    let groups: Vec<String> = args
+        .get_str("groups", "matmul,fused,load")
+        .split(',')
+        .map(|g| g.trim().to_string())
+        .filter(|g| !g.is_empty())
+        .collect();
+
+    let baseline = load_rows(baseline_path)?;
+    let current = load_rows(current_path)?;
+
+    if baseline.is_empty() {
+        println!(
+            "bench_gate: baseline {baseline_path} has no timed rows — vacuous pass \
+             (the next push to main commits a real baseline)"
+        );
+        return Ok(true);
+    }
+
+    println!(
+        "bench_gate: {} baseline rows vs {} current rows; gate = median regression \
+         > {:.0}% on any of {:?}",
+        baseline.len(),
+        current.len(),
+        max_regress * 100.0,
+        groups
+    );
+    let mut ok = true;
+    for group in &groups {
+        let mut regressions: Vec<f64> = Vec::new();
+        println!("-- group `{group}`");
+        for (name, cur) in &current {
+            if !name.contains(group.as_str()) {
+                continue;
+            }
+            match baseline.get(name) {
+                Some(base) => {
+                    let reg = (cur - base) / base;
+                    regressions.push(reg);
+                    println!(
+                        "   {name}: {base:.6}s -> {cur:.6}s ({:+.1}%)",
+                        reg * 100.0
+                    );
+                }
+                None => println!("   {name}: {cur:.6}s (new row, not gated)"),
+            }
+        }
+        // Baseline rows that vanished from the current run: visible in the
+        // log (a renamed or dropped benchmark should not pass unnoticed),
+        // but they carry no timing to gate on.
+        for (name, base) in &baseline {
+            if name.contains(group.as_str()) && !current.contains_key(name) {
+                println!("   {name}: {base:.6}s -> MISSING from current run (not gated)");
+            }
+        }
+        match median(&mut regressions) {
+            None => println!("   no comparable rows — group passes vacuously"),
+            Some(med) if med > max_regress => {
+                ok = false;
+                println!(
+                    "   FAIL: median regression {:+.1}% exceeds {:.0}%",
+                    med * 100.0,
+                    max_regress * 100.0
+                );
+            }
+            Some(med) => println!("   ok: median regression {:+.1}%", med * 100.0),
+        }
+    }
+    if ok {
+        println!("bench_gate: PASS");
+    } else {
+        println!("bench_gate: FAIL — see regressing groups above");
+    }
+    Ok(ok)
+}
+
+/// `name -> secs` for every finite, positive timing row of one artifact.
+fn load_rows(path: &str) -> Result<BTreeMap<String, f64>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let v: Json = rustdslib::util::json::parse(&text)
+        .map_err(|e| anyhow!("{e}"))
+        .with_context(|| format!("parsing {path}"))?;
+    let mut out = BTreeMap::new();
+    if let Some(rows) = v.get("rows").and_then(|r| r.as_arr()) {
+        for row in rows {
+            let name = row.get("name").and_then(|n| n.as_str());
+            let secs = row.get("secs").and_then(|s| s.as_f64());
+            let (Some(name), Some(secs)) = (name, secs) else {
+                continue; // informational rows carry null secs
+            };
+            if secs.is_finite() && secs > 0.0 {
+                out.insert(name.to_string(), secs);
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn median(xs: &mut [f64]) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("finite regressions"));
+    let n = xs.len();
+    Some(if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    })
+}
