@@ -4,8 +4,11 @@
 //! Measures wall-clock for: block transpose / shuffle / matmul through the
 //! task runtime, the fused elementwise engine (fused vs per-op chains,
 //! in-place vs copy execution), the tiled gemm-accumulate kernel vs the old
-//! product+axpy pattern, raw PJRT artifact dispatch, native block math, and
-//! runtime overheads (submit, graph, channels).
+//! product+axpy pattern, the kernel layer (scalar vs detected SIMD tables:
+//! gemm, elementwise chain, pairwise distances) and intra-block splitting
+//! (whole fat-block task vs sub-range work items), raw PJRT artifact
+//! dispatch, native block math, and runtime overheads (submit, graph,
+//! channels).
 //!
 //! Usage: cargo bench --bench hotpath [-- --reps 5 --json BENCH_hotpath.json]
 
@@ -13,6 +16,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 use rustdslib::dsarray::creation;
+use rustdslib::kernels::{self, UnaryKind};
 use rustdslib::runtime::{exec, global};
 use rustdslib::storage::DenseMatrix;
 use rustdslib::tasking::Runtime;
@@ -213,6 +217,166 @@ fn main() -> Result<()> {
             ),
         ));
     }
+
+    // ---- Kernel layer: scalar vs detected (SIMD) tables, direct calls ----
+    // No task runtime in these rows — they isolate the micro-kernel speedup
+    // itself. Both tables are bit-identical by contract, so this is a pure
+    // throughput comparison. The `detected` rows keep stable names (the
+    // actual table — avx2 or scalar fallback — goes in the note).
+    let ker_s = kernels::scalar();
+    let ker_d = kernels::detected();
+    for n in [64usize, 256, 1024] {
+        let x = DenseMatrix::from_fn(n, n, |_, _| rng.next_normal());
+        let y = DenseMatrix::from_fn(n, n, |_, _| rng.next_normal());
+        let fl = 2.0 * (n as f64).powi(3) / 1e9;
+        let reps_k = if n >= 1024 { reps } else { reps * 10 };
+        let t_s = time(reps_k, || {
+            let mut c = DenseMatrix::zeros(n, n);
+            (ker_s.gemm_acc)(c.data_mut(), x.data(), y.data(), n, n, n);
+            std::hint::black_box(c.get(0, 0));
+            Ok(())
+        })?;
+        rows.push((
+            format!("kernel gemm {n}³ scalar"),
+            t_s,
+            format!("{:.2} GFLOP/s", fl / t_s),
+        ));
+        let t_d = time(reps_k, || {
+            let mut c = DenseMatrix::zeros(n, n);
+            (ker_d.gemm_acc)(c.data_mut(), x.data(), y.data(), n, n, n);
+            std::hint::black_box(c.get(0, 0));
+            Ok(())
+        })?;
+        rows.push((
+            format!("kernel gemm {n}³ detected"),
+            t_d,
+            format!(
+                "{:.2} GFLOP/s ({}, {:.2}x vs scalar)",
+                fl / t_d,
+                ker_d.name,
+                t_s / t_d.max(1e-12)
+            ),
+        ));
+    }
+    // Interpreted elementwise chain over one 1M-element buffer (the inner
+    // loop of the fused executor, minus the task plumbing).
+    let ew_src: Vec<f32> = (0..1 << 20).map(|_| rng.next_normal()).collect();
+    let ew_chain = [
+        UnaryKind::AddScalar(1.0),
+        UnaryKind::MulScalar(0.5),
+        UnaryKind::AddScalar(-3.0),
+    ];
+    let t_ew_s = time(reps, || {
+        let mut xs = ew_src.clone();
+        for op in ew_chain {
+            (ker_s.unary)(op, &mut xs);
+        }
+        std::hint::black_box(xs[0]);
+        Ok(())
+    })?;
+    rows.push((
+        "kernel ew chain 3 ops 1M scalar".into(),
+        t_ew_s,
+        format!("{:.1} MB/s", 3.0 * 4.0 / t_ew_s),
+    ));
+    let t_ew_d = time(reps, || {
+        let mut xs = ew_src.clone();
+        for op in ew_chain {
+            (ker_d.unary)(op, &mut xs);
+        }
+        std::hint::black_box(xs[0]);
+        Ok(())
+    })?;
+    rows.push((
+        "kernel ew chain 3 ops 1M detected".into(),
+        t_ew_d,
+        format!(
+            "{:.1} MB/s ({}, {:.2}x vs scalar)",
+            3.0 * 4.0 / t_ew_d,
+            ker_d.name,
+            t_ew_s / t_ew_d.max(1e-12)
+        ),
+    ));
+    // Pairwise squared distances, 256×256 row pairs over 64 features.
+    let px = DenseMatrix::from_fn(256, 64, |_, _| rng.next_normal());
+    let py = DenseMatrix::from_fn(256, 64, |_, _| rng.next_normal());
+    let pd_fl = 3.0 * 256.0 * 256.0 * 64.0 / 1e9;
+    let t_pd_s = time(reps, || {
+        let mut acc = 0.0f32;
+        for i in 0..256 {
+            for j in 0..256 {
+                acc += (ker_s.dist2)(px.row(i), py.row(j));
+            }
+        }
+        std::hint::black_box(acc);
+        Ok(())
+    })?;
+    rows.push((
+        "kernel pairwise dist2 256x256x64 scalar".into(),
+        t_pd_s,
+        format!("{:.2} GFLOP/s", pd_fl / t_pd_s),
+    ));
+    let t_pd_d = time(reps, || {
+        let mut acc = 0.0f32;
+        for i in 0..256 {
+            for j in 0..256 {
+                acc += (ker_d.dist2)(px.row(i), py.row(j));
+            }
+        }
+        std::hint::black_box(acc);
+        Ok(())
+    })?;
+    rows.push((
+        "kernel pairwise dist2 256x256x64 detected".into(),
+        t_pd_d,
+        format!(
+            "{:.2} GFLOP/s ({}, {:.2}x vs scalar)",
+            pd_fl / t_pd_d,
+            ker_d.name,
+            t_pd_s / t_pd_d.max(1e-12)
+        ),
+    ));
+
+    // ---- Intra-block splitting: one fat single-block gemm task, whole
+    // (split threshold at max) vs sub-range work items on the worker
+    // deques. Same kernel table both ways — the delta is pure parallelism.
+    let fat = 512usize;
+    let fat_m = DenseMatrix::from_fn(fat, fat, |_, _| rng.next_normal());
+    let fat_fl = 2.0 * (fat as f64).powi(3) / 1e9;
+    let split_prev = kernels::set_split_min(usize::MAX);
+    let t_whole = time(reps, || {
+        let rt2 = Runtime::local(workers);
+        let fa = creation::from_matrix(&rt2, &fat_m, (fat, fat))?;
+        let fb = creation::from_matrix(&rt2, &fat_m, (fat, fat))?;
+        let c = fa.matmul(&fb)?;
+        c.runtime().barrier()
+    })?;
+    rows.push((
+        "split gemm 512³ single-block whole".into(),
+        t_whole,
+        format!("{:.2} GFLOP/s", fat_fl / t_whole),
+    ));
+    kernels::set_split_min(1 << 16);
+    let mut fat_subs = 0u64;
+    let t_split = time(reps, || {
+        let rt2 = Runtime::local(workers);
+        let fa = creation::from_matrix(&rt2, &fat_m, (fat, fat))?;
+        let fb = creation::from_matrix(&rt2, &fat_m, (fat, fat))?;
+        let c = fa.matmul(&fb)?;
+        c.runtime().barrier()?;
+        fat_subs = rt2.metrics().subtasks_spawned;
+        Ok(())
+    })?;
+    kernels::set_split_min(split_prev);
+    rows.push((
+        "split gemm 512³ single-block sub-tasks".into(),
+        t_split,
+        format!(
+            "{:.2} GFLOP/s ({:.2}x vs whole, {fat_subs} sub-tasks/run)",
+            fat_fl / t_split,
+            t_whole / t_split.max(1e-12)
+        ),
+    ));
 
     // ---- Parallel partitioned load: serial baseline vs 1/4/16 block-rows ----
     // Serial = master-side read + scatter (the pre-out-of-core path); the

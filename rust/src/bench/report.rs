@@ -111,9 +111,10 @@ impl Series {
 /// residency counters added with refcount reclamation
 /// (`peak_resident_bytes`, `blocks_evicted`), the fusion counters
 /// (`tasks_fused`, `inplace_hits`, `bytes_allocated`), the out-of-core
-/// counters (`blocks_spilled`, `blocks_faulted`, `spill_bytes`), and the
+/// counters (`blocks_spilled`, `blocks_faulted`, `spill_bytes`), the
 /// cluster-backend counters (`bytes_on_wire`, `remote_transfers`,
-/// `locality_hits`).
+/// `locality_hits`), and the kernel-layer counters (`simd_kernel_hits`,
+/// `subtasks_spawned`).
 pub fn metrics_json(m: &Metrics) -> String {
     let mut out = String::from("{");
     let _ = write!(out, "\"total_tasks\":{}", m.total_tasks());
@@ -133,6 +134,8 @@ pub fn metrics_json(m: &Metrics) -> String {
     let _ = write!(out, ",\"bytes_on_wire\":{}", m.bytes_on_wire);
     let _ = write!(out, ",\"remote_transfers\":{}", m.remote_transfers);
     let _ = write!(out, ",\"locality_hits\":{}", m.locality_hits);
+    let _ = write!(out, ",\"simd_kernel_hits\":{}", m.simd_kernel_hits);
+    let _ = write!(out, ",\"subtasks_spawned\":{}", m.subtasks_spawned);
     out.push_str(",\"tasks_by_op\":{");
     for (i, (k, v)) in m.tasks_by_op.iter().enumerate() {
         if i > 0 {
@@ -282,6 +285,8 @@ mod tests {
         m.record_faulted(512);
         m.record_wire(2048);
         m.record_locality(5, 2);
+        m.simd_kernel_hits = 7;
+        m.record_subtasks(4);
         let s = metrics_json(&m);
         let v = crate::util::json::parse(&s).unwrap();
         assert_eq!(v.get("total_tasks").unwrap().as_usize(), Some(1));
@@ -297,6 +302,8 @@ mod tests {
         assert_eq!(v.get("bytes_on_wire").unwrap().as_usize(), Some(2048));
         assert_eq!(v.get("remote_transfers").unwrap().as_usize(), Some(2));
         assert_eq!(v.get("locality_hits").unwrap().as_usize(), Some(5));
+        assert_eq!(v.get("simd_kernel_hits").unwrap().as_usize(), Some(7));
+        assert_eq!(v.get("subtasks_spawned").unwrap().as_usize(), Some(4));
         assert_eq!(
             v.get("tasks_by_op").unwrap().get("op.a").unwrap().as_usize(),
             Some(1)

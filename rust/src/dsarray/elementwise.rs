@@ -11,6 +11,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::kernels::{BinaryKind, UnaryKind};
 use crate::storage::BlockMeta;
 use crate::tasking::{ops, BatchTask, CostHint, Future};
 
@@ -45,12 +46,7 @@ impl DsArray {
     /// Generic binary elementwise op; shapes and block shapes must match.
     /// Dense pairs defer into one fused expression; pairs involving a
     /// sparse operand run eagerly (zip densifies either way).
-    fn zip_blocks(
-        &self,
-        other: &DsArray,
-        name: &'static str,
-        f: impl Fn(f32, f32) -> f32 + Send + Sync + Clone + 'static,
-    ) -> Result<DsArray> {
+    fn zip_blocks(&self, other: &DsArray, name: &'static str, op: BinaryKind) -> Result<DsArray> {
         if self.shape != other.shape {
             bail!("shape mismatch: {:?} vs {:?}", self.shape, other.shape);
         }
@@ -62,11 +58,11 @@ impl DsArray {
             );
         }
         if self.sparse || other.sparse {
-            return self.zip_blocks_eager(other, name, f);
+            return self.zip_blocks_eager(other, name, move |a, b| op.apply(a, b));
         }
         let a = if self.view.is_some() { self.force()? } else { self.clone() };
         let b = if other.view.is_some() { other.force()? } else { other.clone() };
-        a.zip_lazy(&b, f)
+        a.zip_lazy(&b, op)
     }
 
     fn zip_blocks_eager(
@@ -95,48 +91,48 @@ impl DsArray {
     }
 
     pub fn add_scalar(&self, s: f32) -> Result<DsArray> {
-        self.map_lazy("dsarray.ew.add_scalar", move |x| x + s)
+        self.map_lazy("dsarray.ew.add_scalar", UnaryKind::AddScalar(s))
     }
 
     pub fn mul_scalar(&self, s: f32) -> Result<DsArray> {
-        self.map_lazy("dsarray.ew.mul_scalar", move |x| x * s)
+        self.map_lazy("dsarray.ew.mul_scalar", UnaryKind::MulScalar(s))
     }
 
     /// Element-wise power — the paper's `A ** 2`.
     pub fn pow(&self, e: f32) -> Result<DsArray> {
-        self.map_lazy("dsarray.ew.pow", move |x| x.powf(e))
+        self.map_lazy("dsarray.ew.pow", UnaryKind::Pow(e))
     }
 
     pub fn sqrt(&self) -> Result<DsArray> {
-        self.map_lazy("dsarray.ew.sqrt", |x| x.sqrt())
+        self.map_lazy("dsarray.ew.sqrt", UnaryKind::Sqrt)
     }
 
     pub fn abs(&self) -> Result<DsArray> {
-        self.map_lazy("dsarray.ew.abs", |x| x.abs())
+        self.map_lazy("dsarray.ew.abs", UnaryKind::Abs)
     }
 
     pub fn exp(&self) -> Result<DsArray> {
-        self.map_lazy("dsarray.ew.exp", |x| x.exp())
+        self.map_lazy("dsarray.ew.exp", UnaryKind::Exp)
     }
 
     pub fn neg(&self) -> Result<DsArray> {
-        self.map_lazy("dsarray.ew.neg", |x| -x)
+        self.map_lazy("dsarray.ew.neg", UnaryKind::Neg)
     }
 
     pub fn add(&self, other: &DsArray) -> Result<DsArray> {
-        self.zip_blocks(other, "dsarray.ew.add", |a, b| a + b)
+        self.zip_blocks(other, "dsarray.ew.add", BinaryKind::Add)
     }
 
     pub fn sub(&self, other: &DsArray) -> Result<DsArray> {
-        self.zip_blocks(other, "dsarray.ew.sub", |a, b| a - b)
+        self.zip_blocks(other, "dsarray.ew.sub", BinaryKind::Sub)
     }
 
     pub fn mul(&self, other: &DsArray) -> Result<DsArray> {
-        self.zip_blocks(other, "dsarray.ew.mul", |a, b| a * b)
+        self.zip_blocks(other, "dsarray.ew.mul", BinaryKind::Mul)
     }
 
     pub fn div(&self, other: &DsArray) -> Result<DsArray> {
-        self.zip_blocks(other, "dsarray.ew.div", |a, b| a / b)
+        self.zip_blocks(other, "dsarray.ew.div", BinaryKind::Div)
     }
 
     /// dislib's `apply_along_axis` over axis 1: run an arbitrary
@@ -187,26 +183,22 @@ impl DsArray {
     /// Broadcast a 1×cols row array across all rows: `self - row` (used by
     /// the scaler / normalization pipelines).
     pub fn sub_row_broadcast(&self, row: &DsArray) -> Result<DsArray> {
-        self.row_broadcast(row, |a, b| a - b)
+        self.row_broadcast(row, BinaryKind::Sub)
     }
 
-    /// Broadcast divide by a 1×cols row array.
+    /// Broadcast divide by a 1×cols row array (zero divisors yield 0).
     pub fn div_row_broadcast(&self, row: &DsArray) -> Result<DsArray> {
-        self.row_broadcast(row, |a, b| if b != 0.0 { a / b } else { 0.0 })
+        self.row_broadcast(row, BinaryKind::DivOrZero)
     }
 
     /// Broadcast multiply by a 1×cols row array — with
     /// [`DsArray::sub_row_broadcast`] this is the fused standardize chain
     /// `(x − μ) · σ⁻¹`.
     pub fn mul_row_broadcast(&self, row: &DsArray) -> Result<DsArray> {
-        self.row_broadcast(row, |a, b| a * b)
+        self.row_broadcast(row, BinaryKind::Mul)
     }
 
-    fn row_broadcast(
-        &self,
-        row: &DsArray,
-        f: impl Fn(f32, f32) -> f32 + Send + Sync + Clone + 'static,
-    ) -> Result<DsArray> {
+    fn row_broadcast(&self, row: &DsArray, op: BinaryKind) -> Result<DsArray> {
         if row.shape.0 != 1 || row.shape.1 != self.shape.1 {
             bail!(
                 "broadcast row must be 1x{}, got {:?}",
@@ -221,7 +213,7 @@ impl DsArray {
         // block, and broadcast output was always dense.
         let a = if self.view.is_some() { self.force()? } else { self.clone() };
         let r = if row.view.is_some() { row.force()? } else { row.clone() };
-        a.bcast_lazy(&r, f)
+        a.bcast_lazy(&r, op)
     }
 }
 

@@ -26,18 +26,24 @@
 //! its own handle references early (the fused tasks hold reads on every
 //! operand, so nothing can be evicted prematurely) — which is exactly what
 //! lets a dead intermediate's blocks be granted in place.
+//!
+//! Since the kernel-layer PR, expression nodes carry closed op *kinds*
+//! ([`UnaryKind`]/[`BinaryKind`]) instead of boxed closures: the evaluator
+//! interprets each chain over SIMD lanes through the [`Kernels`] vtable the
+//! `Runtime` resolved once at startup (captured at submission time — no
+//! per-block feature detection), and each op pass may split across the
+//! executor's deques via `kernels::{unary,binary,bcast}_par` while
+//! preserving the in-place `take_exclusive` path unchanged.
 
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::kernels::{self, BinaryKind, Kernels, UnaryKind};
 use crate::storage::{Block, BlockMeta, DenseMatrix};
 use crate::tasking::{BatchTask, CostHint, Future, TaskInput};
 
 use super::DsArray;
-
-pub(crate) type ScalarFn = Arc<dyn Fn(f32) -> f32 + Send + Sync>;
-pub(crate) type ScalarFn2 = Arc<dyn Fn(f32, f32) -> f32 + Send + Sync>;
 
 /// How an operand's block grid maps onto the result grid.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -61,18 +67,18 @@ pub(crate) struct Operand {
 pub(crate) enum ExprNode {
     Input(usize),
     Map {
-        f: ScalarFn,
+        op: UnaryKind,
         child: Arc<ExprNode>,
     },
     Zip {
-        f: ScalarFn2,
+        op: BinaryKind,
         lhs: Arc<ExprNode>,
         rhs: Arc<ExprNode>,
     },
     /// Row broadcast: `rhs` must evaluate to a 1×cols block, combined with
     /// every row of `lhs`.
     Bcast {
-        f: ScalarFn2,
+        op: BinaryKind,
         lhs: Arc<ExprNode>,
         rhs: Arc<ExprNode>,
     },
@@ -112,17 +118,17 @@ fn shift_slots(node: &Arc<ExprNode>, by: usize) -> Arc<ExprNode> {
     }
     match &**node {
         ExprNode::Input(s) => Arc::new(ExprNode::Input(s + by)),
-        ExprNode::Map { f, child } => Arc::new(ExprNode::Map {
-            f: Arc::clone(f),
+        ExprNode::Map { op, child } => Arc::new(ExprNode::Map {
+            op: *op,
             child: shift_slots(child, by),
         }),
-        ExprNode::Zip { f, lhs, rhs } => Arc::new(ExprNode::Zip {
-            f: Arc::clone(f),
+        ExprNode::Zip { op, lhs, rhs } => Arc::new(ExprNode::Zip {
+            op: *op,
             lhs: shift_slots(lhs, by),
             rhs: shift_slots(rhs, by),
         }),
-        ExprNode::Bcast { f, lhs, rhs } => Arc::new(ExprNode::Bcast {
-            f: Arc::clone(f),
+        ExprNode::Bcast { op, lhs, rhs } => Arc::new(ExprNode::Bcast {
+            op: *op,
             lhs: shift_slots(lhs, by),
             rhs: shift_slots(rhs, by),
         }),
@@ -133,8 +139,13 @@ fn shift_slots(node: &Arc<ExprNode>, by: usize) -> Arc<ExprNode> {
 /// move: an exclusively-owned dense input becomes the working buffer with
 /// zero copies, and every interior node mutates that buffer in place — the
 /// whole chain costs at most one allocation (none when the base input was
-/// granted owned).
-fn eval(node: &ExprNode, slots: &mut [Option<TaskInput>]) -> Result<DenseMatrix> {
+/// granted owned). Op passes run through `ker`'s lane kernels and may split
+/// across the executor's deques when the block is long.
+fn eval(
+    ker: &'static Kernels,
+    node: &ExprNode,
+    slots: &mut [Option<TaskInput>],
+) -> Result<DenseMatrix> {
     match node {
         ExprNode::Input(s) => {
             let inp = slots
@@ -143,21 +154,19 @@ fn eval(node: &ExprNode, slots: &mut [Option<TaskInput>]) -> Result<DenseMatrix>
                 .ok_or_else(|| anyhow!("expression slot {s} missing or consumed twice"))?;
             inp.into_dense()
         }
-        ExprNode::Map { f, child } => {
-            let mut m = eval(child, slots)?;
-            for x in m.data_mut() {
-                *x = f(*x);
-            }
+        ExprNode::Map { op, child } => {
+            let mut m = eval(ker, child, slots)?;
+            kernels::unary_par(ker, *op, m.data_mut());
             Ok(m)
         }
-        ExprNode::Zip { f, lhs, rhs } => {
-            let mut a = eval(lhs, slots)?;
-            combine_into(&mut a, f, rhs, slots, false)?;
+        ExprNode::Zip { op, lhs, rhs } => {
+            let mut a = eval(ker, lhs, slots)?;
+            combine_into(ker, &mut a, *op, rhs, slots, false)?;
             Ok(a)
         }
-        ExprNode::Bcast { f, lhs, rhs } => {
-            let mut a = eval(lhs, slots)?;
-            combine_into(&mut a, f, rhs, slots, true)?;
+        ExprNode::Bcast { op, lhs, rhs } => {
+            let mut a = eval(ker, lhs, slots)?;
+            combine_into(ker, &mut a, *op, rhs, slots, true)?;
             Ok(a)
         }
     }
@@ -169,8 +178,9 @@ fn eval(node: &ExprNode, slots: &mut [Option<TaskInput>]) -> Result<DenseMatrix>
 /// exactly one allocation (the lhs working buffer), same as the eager path
 /// it replaces. Interior rhs nodes evaluate recursively.
 fn combine_into(
+    ker: &'static Kernels,
     a: &mut DenseMatrix,
-    f: &ScalarFn2,
+    op: BinaryKind,
     rhs: &ExprNode,
     slots: &mut [Option<TaskInput>],
     bcast: bool,
@@ -181,17 +191,23 @@ fn combine_into(
             .and_then(|slot| slot.take())
             .ok_or_else(|| anyhow!("expression slot {s} missing or consumed twice"))?;
         return match inp.block() {
-            Block::Dense(m) => apply_rhs(a, f, m, bcast),
-            other => apply_rhs(a, f, &other.to_dense()?, bcast),
+            Block::Dense(m) => apply_rhs(ker, a, op, m, bcast),
+            other => apply_rhs(ker, a, op, &other.to_dense()?, bcast),
         };
     }
-    let b = eval(rhs, slots)?;
-    apply_rhs(a, f, &b, bcast)
+    let b = eval(ker, rhs, slots)?;
+    apply_rhs(ker, a, op, &b, bcast)
 }
 
-/// Apply `a[i][j] = f(a[i][j], b[...])` element-wise (`bcast`: `b` is a
+/// Apply `a[i][j] = op(a[i][j], b[...])` element-wise (`bcast`: `b` is a
 /// 1×cols row combined with every row of `a`).
-fn apply_rhs(a: &mut DenseMatrix, f: &ScalarFn2, b: &DenseMatrix, bcast: bool) -> Result<()> {
+fn apply_rhs(
+    ker: &'static Kernels,
+    a: &mut DenseMatrix,
+    op: BinaryKind,
+    b: &DenseMatrix,
+    bcast: bool,
+) -> Result<()> {
     if bcast {
         if b.rows() != 1 || b.cols() != a.cols() {
             bail!(
@@ -201,11 +217,8 @@ fn apply_rhs(a: &mut DenseMatrix, f: &ScalarFn2, b: &DenseMatrix, bcast: bool) -
                 b.cols()
             );
         }
-        for i in 0..a.rows() {
-            for (x, &y) in a.row_mut(i).iter_mut().zip(b.data()) {
-                *x = f(*x, y);
-            }
-        }
+        let cols = a.cols();
+        kernels::bcast_par(ker, op, a.data_mut(), cols, b.data());
         return Ok(());
     }
     if a.rows() != b.rows() || a.cols() != b.cols() {
@@ -217,9 +230,7 @@ fn apply_rhs(a: &mut DenseMatrix, f: &ScalarFn2, b: &DenseMatrix, bcast: bool) -
             b.cols()
         );
     }
-    for (x, &y) in a.data_mut().iter_mut().zip(b.data()) {
-        *x = f(*x, y);
-    }
+    kernels::binary_par(ker, op, a.data_mut(), b.data());
     Ok(())
 }
 
@@ -326,37 +337,26 @@ impl DsArray {
     /// task per block at consume time. Sparse arrays take the eager per-op
     /// path instead (preserving the CSR backend and its zero-preserving-map
     /// check); lazy views are forced first.
-    pub(crate) fn map_lazy(
-        &self,
-        name: &'static str,
-        f: impl Fn(f32) -> f32 + Send + Sync + Clone + 'static,
-    ) -> Result<DsArray> {
+    pub(crate) fn map_lazy(&self, name: &'static str, op: UnaryKind) -> Result<DsArray> {
         if self.sparse {
-            return self.map_blocks_eager(name, f);
+            return self.map_blocks_eager(name, move |x| op.apply(x));
         }
         if self.view.is_some() {
-            return self.force()?.map_lazy(name, f);
+            return self.force()?.map_lazy(name, op);
         }
         let (ops, root, n) = self.expr_parts(0, OperandKind::Full);
-        let root = Arc::new(ExprNode::Map {
-            f: Arc::new(f),
-            child: root,
-        });
+        let root = Arc::new(ExprNode::Map { op, child: root });
         Ok(self.from_lazy(ops, root, n + 1))
     }
 
     /// Defer a binary elementwise op over two same-geometry dense arrays;
     /// both sides' pending expressions fold into one DAG.
-    pub(crate) fn zip_lazy(
-        &self,
-        other: &DsArray,
-        f: impl Fn(f32, f32) -> f32 + Send + Sync + Clone + 'static,
-    ) -> Result<DsArray> {
+    pub(crate) fn zip_lazy(&self, other: &DsArray, op: BinaryKind) -> Result<DsArray> {
         let (mut ops, lroot, ln) = self.expr_parts(0, OperandKind::Full);
         let (rops, rroot, rn) = other.expr_parts(ops.len(), OperandKind::Full);
         ops.extend(rops);
         let root = Arc::new(ExprNode::Zip {
-            f: Arc::new(f),
+            op,
             lhs: lroot,
             rhs: rroot,
         });
@@ -365,16 +365,12 @@ impl DsArray {
 
     /// Defer a row-broadcast op (`self ∘ row` per column); the row array's
     /// own pending expression folds in too.
-    pub(crate) fn bcast_lazy(
-        &self,
-        row: &DsArray,
-        f: impl Fn(f32, f32) -> f32 + Send + Sync + Clone + 'static,
-    ) -> Result<DsArray> {
+    pub(crate) fn bcast_lazy(&self, row: &DsArray, op: BinaryKind) -> Result<DsArray> {
         let (mut ops, lroot, ln) = self.expr_parts(0, OperandKind::Full);
         let (rops, rroot, rn) = row.expr_parts(ops.len(), OperandKind::Row);
         ops.extend(rops);
         let root = Arc::new(ExprNode::Bcast {
-            f: Arc::new(f),
+            op,
             lhs: lroot,
             rhs: rroot,
         });
@@ -392,6 +388,10 @@ impl DsArray {
         }
         let (gr, gc) = self.grid;
         let n_slots = 1 + expr.extra.len();
+        // The vtable was resolved once at Runtime construction; capturing
+        // it here means the per-block closures never re-run feature
+        // detection (satellite: no per-task dispatch).
+        let ker = self.rt.kernels();
         let mut batch = Vec::with_capacity(gr * gc);
         for i in 0..gr {
             for j in 0..gc {
@@ -415,9 +415,10 @@ impl DsArray {
                         vec![meta],
                         CostHint::flops(flops).with_bytes(bytes),
                         Arc::new(move |ins: Vec<TaskInput>| {
+                            kernels::record_hit(ker);
                             let mut slots: Vec<Option<TaskInput>> =
                                 ins.into_iter().map(Some).collect();
-                            let out = eval(&root, &mut slots)?;
+                            let out = eval(ker, &root, &mut slots)?;
                             Ok(vec![Block::Dense(out)])
                         }),
                     )
@@ -443,7 +444,8 @@ impl DsArray {
         // Credit is armed as soon as the handles are gone, so a failure
         // below can never lead Drop to double-release.
         st.release_credit = true;
-        let out = DsArray::from_parts(self.rt.clone(), self.shape, self.block_shape, blocks, false)?;
+        let out =
+            DsArray::from_parts(self.rt.clone(), self.shape, self.block_shape, blocks, false)?;
         st.forced = Some(out.clone());
         Ok(out)
     }

@@ -7,9 +7,20 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::storage::{Block, BlockMeta, DenseMatrix};
-use crate::tasking::{BatchTask, CostHint, Future};
+use crate::tasking::{ops, BatchTask, CostHint, Future};
 
 use super::DsArray;
+
+/// Densify and horizontally stack a row panel of blocks into one
+/// contiguous matrix (single-block panels just densify).
+fn hstack_panel(blocks: &[Arc<Block>]) -> Result<DenseMatrix> {
+    if blocks.len() == 1 {
+        return blocks[0].to_dense();
+    }
+    let dense: Vec<DenseMatrix> = blocks.iter().map(|b| b.to_dense()).collect::<Result<_>>()?;
+    let refs: Vec<&DenseMatrix> = dense.iter().collect();
+    DenseMatrix::hstack(&refs)
+}
 
 impl DsArray {
     /// Transpose: one task per **row of blocks** (collection-in /
@@ -184,6 +195,68 @@ impl DsArray {
             self.rt.clone(),
             (ar * br, ac * bc),
             (self.block_shape.0 * br, self.block_shape.1 * bc),
+            blocks,
+            false,
+        )
+    }
+
+    /// Pairwise squared Euclidean distances between rows:
+    /// `D[i,j] = ‖selfᵢ − otherⱼ‖²`, the inner product of the KNN and
+    /// K-means estimators, exposed as a first-class blocked operation. One
+    /// task per output block — a block-row of `self` against a block-row of
+    /// `other` (collections). Multi-column grids hstack their row panels
+    /// inside the task; single-column grids go straight to
+    /// [`ops::pairwise_dist2_op`], the kernel-layer distance micro-kernel.
+    pub fn pairwise_dist2(&self, other: &DsArray) -> Result<DsArray> {
+        if self.shape.1 != other.shape.1 {
+            bail!(
+                "pairwise_dist2 feature mismatch: {:?} vs {:?}",
+                self.shape,
+                other.shape
+            );
+        }
+        if self.is_lazy() || other.is_lazy() {
+            return self.force()?.pairwise_dist2(&other.force()?);
+        }
+        let feats = self.shape.1;
+        let (gx, gy) = (self.grid.0, other.grid.0);
+        let xc = self.grid.1;
+        let one_panel = xc == 1 && other.grid.1 == 1;
+        let mut batch = Vec::with_capacity(gx * gy);
+        for i in 0..gx {
+            let mx = self.block_rows_at(i);
+            let x_row = self.block_row(i);
+            for j in 0..gy {
+                let my = other.block_rows_at(j);
+                let mut futs = x_row.clone();
+                futs.extend_from_slice(&other.block_row(j));
+                let meta = BlockMeta::dense(mx, my);
+                let flops = 3.0 * mx as f64 * my as f64 * feats as f64;
+                let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
+                let body = if one_panel {
+                    ops::pairwise_dist2_op()
+                } else {
+                    Arc::new(move |ins: &[Arc<Block>]| {
+                        let (xs, ys) = ins.split_at(xc);
+                        let x = hstack_panel(xs)?;
+                        let y = hstack_panel(ys)?;
+                        Ok(vec![Block::Dense(x.pairwise_dist2(&y)?)])
+                    })
+                };
+                batch.push(BatchTask::new(
+                    "dsarray.pairwise_dist2",
+                    futs,
+                    vec![meta],
+                    CostHint::flops(flops).with_bytes(bytes),
+                    body,
+                ));
+            }
+        }
+        let blocks: Vec<Future> = self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
+        DsArray::from_parts(
+            self.rt.clone(),
+            (self.shape.0, other.shape.0),
+            (self.block_shape.0, other.block_shape.0),
             blocks,
             false,
         )
@@ -382,6 +455,42 @@ mod tests {
         assert_eq!(got.get(0, 0), b.get(0, 0));
         assert_eq!(got.get(1, 1), b.get(0, 0));
         assert_eq!(got.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn pairwise_dist2_matches_oracle_across_grids() {
+        let rt = Runtime::local(2);
+        let x = DenseMatrix::from_fn(7, 5, |i, j| ((i * 5 + j) % 9) as f32 * 0.3 - 1.0);
+        let y = DenseMatrix::from_fn(4, 5, |i, j| ((i + 2 * j) % 7) as f32 * 0.5);
+        // Multi-column grid on x (panels hstacked in-task), single-column
+        // grid on y.
+        let dx = creation::from_matrix(&rt, &x, (3, 2)).unwrap();
+        let dy = creation::from_matrix(&rt, &y, (2, 5)).unwrap();
+        let before = rt.metrics();
+        let d = dx.pairwise_dist2(&dy).unwrap();
+        let delta = rt.metrics().since(&before);
+        // One task per (block-row of x) × (block-row of y): 3 × 2.
+        assert_eq!(delta.tasks_for("dsarray.pairwise_dist2"), 6);
+        assert_eq!(d.shape(), (7, 4));
+        let got = d.collect().unwrap();
+        for i in 0..7 {
+            for j in 0..4 {
+                let want: f32 = (0..5)
+                    .map(|k| {
+                        let dk = x.get(i, k) - y.get(j, k);
+                        dk * dk
+                    })
+                    .sum();
+                assert!((got.get(i, j) - want).abs() <= 1e-4 * want.max(1.0), "({i},{j})");
+            }
+        }
+        // Single-panel fast path (both grids one block wide) agrees.
+        let dx1 = creation::from_matrix(&rt, &x, (4, 5)).unwrap();
+        let d1 = dx1.pairwise_dist2(&dy).unwrap().collect().unwrap();
+        assert_eq!(d1, got);
+        // Feature-dimension mismatch rejected.
+        let bad = creation::zeros(&rt, (3, 4), (2, 2)).unwrap();
+        assert!(dx.pairwise_dist2(&bad).is_err());
     }
 
     #[test]

@@ -359,6 +359,10 @@ pub(crate) fn assign_block_native(
     centers: &DenseMatrix,
 ) -> Result<(DenseMatrix, DenseMatrix, f32)> {
     let (k, f) = (centers.rows(), centers.cols());
+    // Kernel-layer distance micro-kernel (SIMD when available; scalar and
+    // SIMD tables are bit-identical, so assignments never diverge).
+    let ker = crate::kernels::active();
+    crate::kernels::record_hit(ker);
     let mut psum = DenseMatrix::zeros(k, f);
     let mut pcount = DenseMatrix::zeros(1, k);
     let mut pssd = 0.0f64;
@@ -366,12 +370,7 @@ pub(crate) fn assign_block_native(
         let row = panel.row(i);
         let mut best = (f32::INFINITY, 0usize);
         for kk in 0..k {
-            let c = centers.row(kk);
-            let d2: f32 = row
-                .iter()
-                .zip(c)
-                .map(|(&a, &b)| (a - b) * (a - b))
-                .sum();
+            let d2 = (ker.dist2)(row, centers.row(kk));
             if d2 < best.0 {
                 best = (d2, kk);
             }
@@ -422,16 +421,14 @@ impl Estimator for KMeans {
                         .collect::<Result<_>>()?;
                     let refs: Vec<&DenseMatrix> = dense.iter().collect();
                     let panel = DenseMatrix::hstack(&refs)?;
+                    let ker = crate::kernels::active();
+                    crate::kernels::record_hit(ker);
                     let mut labels = DenseMatrix::zeros(panel.rows(), 1);
                     for r in 0..panel.rows() {
                         let row = panel.row(r);
                         let mut best = (f32::INFINITY, 0usize);
                         for kk in 0..centers.rows() {
-                            let d2: f32 = row
-                                .iter()
-                                .zip(centers.row(kk))
-                                .map(|(&a, &b)| (a - b) * (a - b))
-                                .sum();
+                            let d2 = (ker.dist2)(row, centers.row(kk));
                             if d2 < best.0 {
                                 best = (d2, kk);
                             }

@@ -66,21 +66,9 @@ fn pairwise(x: &DenseMatrix, y: &DenseMatrix) -> Result<DenseMatrix> {
             return crate::runtime::exec::pairwise_dist2(svc, x, y);
         }
     }
-    // Native fallback.
-    let (m, f) = (x.rows(), x.cols());
-    let n = y.rows();
-    let mut d = DenseMatrix::zeros(m, n);
-    for i in 0..m {
-        for j in 0..n {
-            let mut s = 0.0f32;
-            for c in 0..f {
-                let t = x.get(i, c) - y.get(j, c);
-                s += t * t;
-            }
-            d.set(i, j, s);
-        }
-    }
-    Ok(d)
+    // Native fallback: the kernel-layer distance micro-kernel (SIMD when
+    // available, scalar otherwise — bit-identical either way).
+    x.pairwise_dist2(y)
 }
 
 impl Estimator for KnnClassifier {

@@ -1,0 +1,851 @@
+//! Kernel layer: packed SIMD micro-kernels and intra-block work splitting
+//! for the dense hot paths (§Perf optimization, ROADMAP item 2).
+//!
+//! Every FLOP-heavy block operation funnels through a [`Kernels`] vtable of
+//! plain function pointers — one entry per kernel shape that dominates the
+//! estimator family: elementwise unary maps, elementwise binary/broadcast
+//! ops, the tiled gemm-accumulate, and pairwise squared distances. Two
+//! tables exist:
+//!
+//! * [`scalar`] — the portable reference implementation. Plain loops, no
+//!   architecture assumptions; also the oracle the property tests compare
+//!   against.
+//! * the SIMD table — explicit f32x8 micro-kernels written with stable
+//!   `core::arch::x86_64` AVX intrinsics (the storage dtype is f32, so the
+//!   8-lane table is the one that ships; the dispatch layer is
+//!   dtype-agnostic and an f64x4 table slots in alongside it when an f64
+//!   block backend lands).
+//!
+//! [`active`] picks one table **once per process** (a `OnceLock`): runtime
+//! feature detection via `is_x86_feature_detected!("avx2")`, overridable
+//! with `DSARRAY_NO_SIMD=1` (the CI lane that keeps the scalar fallback
+//! honest). Per-task code never re-runs feature detection — the resolved
+//! table is stored in the `Runtime` and captured by fused-task closures at
+//! submission time.
+//!
+//! **Bit-identicality.** The SIMD kernels are bit-identical to the scalar
+//! reference, not merely close: no FMA contraction (separate mul + add,
+//! matching scalar rounding), accumulation order fixed per element (gemm
+//! accumulates `p` ascending whether or not the tile is register-blocked),
+//! `abs`/`neg` are sign-bit ops, and the pairwise distance uses the same
+//! 8-bin striped accumulation + fixed reduction tree in both tables.
+//! Transcendentals (`pow`, `exp`) and the branchy `DivOrZero` run scalar
+//! under both tables — there is no closed-form lane op bit-identical to
+//! libm, so they are excluded from vectorization rather than allowed to
+//! drift. The cluster parity suite and the SIMD-disabled CI lane both lean
+//! on this property.
+//!
+//! **Intra-block parallelism.** A single fat block task (a gemm over a big
+//! tile grid, a fused chain over a long block) no longer serializes one
+//! worker while its siblings idle: [`parallel_for`] splits the work into
+//! sub-range items and offers them to the executor through the [`IntraPool`]
+//! installed in each worker thread (the local executor pushes helper tokens
+//! onto the existing per-worker deques). Splits are gated by a size
+//! threshold ([`set_split_min`]) and deterministic **by construction**:
+//! parts are disjoint output ranges and no element's accumulation order
+//! depends on the split plan or worker count, so split, unsplit, 1-worker
+//! and N-worker runs produce bit-identical blocks. Threads without a pool
+//! (cluster executor threads, plain callers) run the parts inline, in
+//! order.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// Unary elementwise operation kinds — the closed set the fused expression
+/// engine interprets over SIMD lanes (`dsarray/expr.rs`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UnaryKind {
+    AddScalar(f32),
+    MulScalar(f32),
+    /// `x.powf(e)` — transcendental, runs scalar under both tables.
+    Pow(f32),
+    Sqrt,
+    Abs,
+    /// `x.exp()` — transcendental, runs scalar under both tables.
+    Exp,
+    Neg,
+}
+
+impl UnaryKind {
+    /// Scalar reference semantics of the op — the single source of truth
+    /// every vectorized path must match bit for bit.
+    #[inline]
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            UnaryKind::AddScalar(s) => x + s,
+            UnaryKind::MulScalar(s) => x * s,
+            UnaryKind::Pow(e) => x.powf(e),
+            UnaryKind::Sqrt => x.sqrt(),
+            UnaryKind::Abs => x.abs(),
+            UnaryKind::Exp => x.exp(),
+            UnaryKind::Neg => -x,
+        }
+    }
+}
+
+/// Binary elementwise operation kinds (array∘array and row-broadcast).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinaryKind {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    /// `if b != 0 { a / b } else { 0 }` (broadcast divide's safe form) —
+    /// branchy, runs scalar under both tables.
+    DivOrZero,
+}
+
+impl BinaryKind {
+    /// Scalar reference semantics of the op.
+    #[inline]
+    pub fn apply(self, a: f32, b: f32) -> f32 {
+        match self {
+            BinaryKind::Add => a + b,
+            BinaryKind::Sub => a - b,
+            BinaryKind::Mul => a * b,
+            BinaryKind::Div => a / b,
+            BinaryKind::DivOrZero => {
+                if b != 0.0 {
+                    a / b
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// One kernel vtable: plain function pointers, selected once per process.
+pub struct Kernels {
+    /// Human-readable table name (shows up in bench notes).
+    pub name: &'static str,
+    /// Whether this table uses SIMD lanes (drives `simd_kernel_hits`).
+    pub simd: bool,
+    /// `xs[i] = op(xs[i])` in place.
+    pub unary: fn(UnaryKind, &mut [f32]),
+    /// `a[i] = op(a[i], b[i])` in place over `min(len)` elements.
+    pub binary: fn(BinaryKind, &mut [f32], &[f32]),
+    /// `c += a @ b` for row-major `c (m×n)`, `a (m×k)`, `b (k×n)`.
+    /// Accumulates `p` ascending per element — callers may split over
+    /// disjoint row ranges of `c`/`a` without changing any result bit.
+    pub gemm_acc: fn(&mut [f32], &[f32], &[f32], usize, usize, usize),
+    /// Squared Euclidean distance between two equal-length vectors,
+    /// 8-bin striped accumulation + fixed reduction tree.
+    pub dist2: fn(&[f32], &[f32]) -> f32,
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference kernels (portable fallback and property-test oracle).
+// ---------------------------------------------------------------------------
+
+fn unary_scalar(op: UnaryKind, xs: &mut [f32]) {
+    for x in xs {
+        *x = op.apply(*x);
+    }
+}
+
+fn binary_scalar(op: BinaryKind, a: &mut [f32], b: &[f32]) {
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x = op.apply(*x, y);
+    }
+}
+
+/// Tiled scalar gemm-accumulate. Same tiling as the pre-kernel-layer
+/// `DenseMatrix::gemm_acc`, minus its `a == 0.0` skip: skipping terms is
+/// not bit-stable (`0·inf = NaN`, `-0.0 + 0.0 = +0.0`), so both tables
+/// include every term, in the same ascending-`p` order per element.
+fn gemm_acc_scalar(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    const IB: usize = 64;
+    const KB: usize = 256;
+    for ib in (0..m).step_by(IB) {
+        let iend = (ib + IB).min(m);
+        for kb in (0..k).step_by(KB) {
+            let kend = (kb + KB).min(k);
+            for i in ib..iend {
+                let crow = &mut c[i * n..(i + 1) * n];
+                let arow = &a[i * k..(i + 1) * k];
+                for p in kb..kend {
+                    let av = arow[p];
+                    let brow = &b[p * n..(p + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fixed 8-bin reduction tree shared by both dist2 implementations —
+/// matching trees is what makes the horizontal sum bit-identical.
+#[inline]
+fn reduce8(b: &[f32; 8]) -> f32 {
+    let s0 = b[0] + b[4];
+    let s1 = b[1] + b[5];
+    let s2 = b[2] + b[6];
+    let s3 = b[3] + b[7];
+    (s0 + s2) + (s1 + s3)
+}
+
+/// Scalar dist2 with the same striped accumulation the 8-lane kernel uses:
+/// element `i` lands in bin `i % 8`, bins combine through [`reduce8`].
+fn dist2_scalar(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len().min(y.len());
+    let mut bins = [0.0f32; 8];
+    for i in 0..n {
+        let d = x[i] - y[i];
+        bins[i % 8] += d * d;
+    }
+    reduce8(&bins)
+}
+
+static SCALAR: Kernels = Kernels {
+    name: "scalar",
+    simd: false,
+    unary: unary_scalar,
+    binary: binary_scalar,
+    gemm_acc: gemm_acc_scalar,
+    dist2: dist2_scalar,
+};
+
+// ---------------------------------------------------------------------------
+// f32x8 AVX kernels (x86-64 only; selected after runtime detection).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{BinaryKind, Kernels, UnaryKind};
+    use std::arch::x86_64::*;
+
+    pub(super) static KERNELS: Kernels = Kernels {
+        name: "avx2 (f32x8)",
+        simd: true,
+        unary: unary,
+        binary: binary,
+        gemm_acc: gemm_acc,
+        dist2: dist2,
+    };
+
+    fn unary(op: UnaryKind, xs: &mut [f32]) {
+        // SAFETY: this table is only reachable after
+        // `is_x86_feature_detected!("avx2")` returned true.
+        unsafe { unary_impl(op, xs) }
+    }
+
+    fn binary(op: BinaryKind, a: &mut [f32], b: &[f32]) {
+        // SAFETY: as above — avx2 verified before table selection.
+        unsafe { binary_impl(op, a, b) }
+    }
+
+    fn gemm_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        // SAFETY: as above — avx2 verified before table selection.
+        unsafe { gemm_acc_impl(c, a, b, m, k, n) }
+    }
+
+    fn dist2(x: &[f32], y: &[f32]) -> f32 {
+        // SAFETY: as above — avx2 verified before table selection.
+        unsafe { dist2_impl(x, y) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn unary_impl(op: UnaryKind, xs: &mut [f32]) {
+        let n = xs.len();
+        let p = xs.as_mut_ptr();
+        let mut i = 0;
+        match op {
+            UnaryKind::AddScalar(s) => {
+                let vs = _mm256_set1_ps(s);
+                while i + 8 <= n {
+                    let v = _mm256_loadu_ps(p.add(i));
+                    _mm256_storeu_ps(p.add(i), _mm256_add_ps(v, vs));
+                    i += 8;
+                }
+            }
+            UnaryKind::MulScalar(s) => {
+                let vs = _mm256_set1_ps(s);
+                while i + 8 <= n {
+                    let v = _mm256_loadu_ps(p.add(i));
+                    _mm256_storeu_ps(p.add(i), _mm256_mul_ps(v, vs));
+                    i += 8;
+                }
+            }
+            UnaryKind::Sqrt => {
+                while i + 8 <= n {
+                    let v = _mm256_loadu_ps(p.add(i));
+                    _mm256_storeu_ps(p.add(i), _mm256_sqrt_ps(v));
+                    i += 8;
+                }
+            }
+            UnaryKind::Abs => {
+                // Clear the sign bit: bit-identical to `f32::abs`.
+                let mask = _mm256_set1_ps(-0.0);
+                while i + 8 <= n {
+                    let v = _mm256_loadu_ps(p.add(i));
+                    _mm256_storeu_ps(p.add(i), _mm256_andnot_ps(mask, v));
+                    i += 8;
+                }
+            }
+            UnaryKind::Neg => {
+                // Flip the sign bit: bit-identical to scalar negation.
+                let mask = _mm256_set1_ps(-0.0);
+                while i + 8 <= n {
+                    let v = _mm256_loadu_ps(p.add(i));
+                    _mm256_storeu_ps(p.add(i), _mm256_xor_ps(v, mask));
+                    i += 8;
+                }
+            }
+            // Transcendentals stay scalar: the tail loop below (entered
+            // with i == 0) processes the whole slice via `op.apply`.
+            UnaryKind::Pow(_) | UnaryKind::Exp => {}
+        }
+        while i < n {
+            *p.add(i) = op.apply(*p.add(i));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn binary_impl(op: BinaryKind, a: &mut [f32], b: &[f32]) {
+        let n = a.len().min(b.len());
+        let pa = a.as_mut_ptr();
+        let pb = b.as_ptr();
+        let mut i = 0;
+        match op {
+            BinaryKind::Add => {
+                while i + 8 <= n {
+                    let va = _mm256_loadu_ps(pa.add(i));
+                    let vb = _mm256_loadu_ps(pb.add(i));
+                    _mm256_storeu_ps(pa.add(i), _mm256_add_ps(va, vb));
+                    i += 8;
+                }
+            }
+            BinaryKind::Sub => {
+                while i + 8 <= n {
+                    let va = _mm256_loadu_ps(pa.add(i));
+                    let vb = _mm256_loadu_ps(pb.add(i));
+                    _mm256_storeu_ps(pa.add(i), _mm256_sub_ps(va, vb));
+                    i += 8;
+                }
+            }
+            BinaryKind::Mul => {
+                while i + 8 <= n {
+                    let va = _mm256_loadu_ps(pa.add(i));
+                    let vb = _mm256_loadu_ps(pb.add(i));
+                    _mm256_storeu_ps(pa.add(i), _mm256_mul_ps(va, vb));
+                    i += 8;
+                }
+            }
+            BinaryKind::Div => {
+                while i + 8 <= n {
+                    let va = _mm256_loadu_ps(pa.add(i));
+                    let vb = _mm256_loadu_ps(pb.add(i));
+                    _mm256_storeu_ps(pa.add(i), _mm256_div_ps(va, vb));
+                    i += 8;
+                }
+            }
+            // Branchy op stays scalar (tail loop covers the whole slice).
+            BinaryKind::DivOrZero => {}
+        }
+        while i < n {
+            *pa.add(i) = op.apply(*pa.add(i), *pb.add(i));
+            i += 1;
+        }
+    }
+
+    /// Register-blocked gemm-accumulate: k-strips of `KB`, B packed into a
+    /// contiguous `KB×8` column panel per j-block (A rows are already
+    /// contiguous along k), 4×8 micro-kernel holding four accumulators in
+    /// registers across the whole strip. Per element the arithmetic is the
+    /// scalar reference's exact sequence: load `c`, add `a·b` for `p`
+    /// ascending, store — mul and add kept separate (no FMA contraction).
+    #[target_feature(enable = "avx2")]
+    unsafe fn gemm_acc_impl(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        const KB: usize = 256;
+        const NR: usize = 8;
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        let cp = c.as_mut_ptr();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let jmax = n - n % NR;
+        let mut bpack = [0.0f32; KB * NR];
+        let mut kb = 0;
+        while kb < k {
+            let kend = (kb + KB).min(k);
+            let kl = kend - kb;
+            let mut jb = 0;
+            while jb < jmax {
+                // Pack the KB×8 B panel (strided rows → contiguous).
+                for t in 0..kl {
+                    std::ptr::copy_nonoverlapping(
+                        bp.add((kb + t) * n + jb),
+                        bpack.as_mut_ptr().add(t * NR),
+                        NR,
+                    );
+                }
+                let bpp = bpack.as_ptr();
+                let mut i = 0;
+                while i + 4 <= m {
+                    let r0 = i * n + jb;
+                    let r1 = (i + 1) * n + jb;
+                    let r2 = (i + 2) * n + jb;
+                    let r3 = (i + 3) * n + jb;
+                    let mut acc0 = _mm256_loadu_ps(cp.add(r0));
+                    let mut acc1 = _mm256_loadu_ps(cp.add(r1));
+                    let mut acc2 = _mm256_loadu_ps(cp.add(r2));
+                    let mut acc3 = _mm256_loadu_ps(cp.add(r3));
+                    for t in 0..kl {
+                        let vb = _mm256_loadu_ps(bpp.add(t * NR));
+                        let a0 = _mm256_set1_ps(*ap.add(i * k + kb + t));
+                        let a1 = _mm256_set1_ps(*ap.add((i + 1) * k + kb + t));
+                        let a2 = _mm256_set1_ps(*ap.add((i + 2) * k + kb + t));
+                        let a3 = _mm256_set1_ps(*ap.add((i + 3) * k + kb + t));
+                        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(a0, vb));
+                        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(a1, vb));
+                        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(a2, vb));
+                        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(a3, vb));
+                    }
+                    _mm256_storeu_ps(cp.add(r0), acc0);
+                    _mm256_storeu_ps(cp.add(r1), acc1);
+                    _mm256_storeu_ps(cp.add(r2), acc2);
+                    _mm256_storeu_ps(cp.add(r3), acc3);
+                    i += 4;
+                }
+                while i < m {
+                    let mut acc = _mm256_loadu_ps(cp.add(i * n + jb));
+                    for t in 0..kl {
+                        let vb = _mm256_loadu_ps(bpp.add(t * NR));
+                        let av = _mm256_set1_ps(*ap.add(i * k + kb + t));
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(av, vb));
+                    }
+                    _mm256_storeu_ps(cp.add(i * n + jb), acc);
+                    i += 1;
+                }
+                jb += NR;
+            }
+            // Column tail (n % 8): scalar, same ascending-p order.
+            for i in 0..m {
+                for j in jmax..n {
+                    let mut acc = *cp.add(i * n + j);
+                    for p in kb..kend {
+                        acc += *ap.add(i * k + p) * *bp.add(p * n + j);
+                    }
+                    *cp.add(i * n + j) = acc;
+                }
+            }
+            kb = kend;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dist2_impl(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len().min(y.len());
+        let px = x.as_ptr();
+        let py = y.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(px.add(i)), _mm256_loadu_ps(py.add(i)));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+            i += 8;
+        }
+        // Lane l of `acc` holds exactly the i ≡ l (mod 8) partials, in
+        // ascending order — the scalar reference's bins. Tail elements
+        // append to the same bins, then both sides share `reduce8`.
+        let mut bins = [0.0f32; 8];
+        _mm256_storeu_ps(bins.as_mut_ptr(), acc);
+        while i < n {
+            let d = *px.add(i) - *py.add(i);
+            bins[i % 8] += d * d;
+            i += 1;
+        }
+        super::reduce8(&bins)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table selection — once per process.
+// ---------------------------------------------------------------------------
+
+/// The portable scalar reference table (also the property-test oracle).
+pub fn scalar() -> &'static Kernels {
+    &SCALAR
+}
+
+/// The best table this CPU supports, ignoring the `DSARRAY_NO_SIMD`
+/// override — what benches use to measure scalar-vs-SIMD side by side.
+pub fn detected() -> &'static Kernels {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            return &avx2::KERNELS;
+        }
+    }
+    &SCALAR
+}
+
+static ACTIVE: OnceLock<&'static Kernels> = OnceLock::new();
+
+/// The process-wide table: feature detection runs once, on first use, and
+/// honors `DSARRAY_NO_SIMD=1` (the scalar-fallback CI lane). All hot paths
+/// (and the `Runtime`, which stores the resolved reference) go through
+/// this.
+pub fn active() -> &'static Kernels {
+    ACTIVE.get_or_init(|| {
+        let forced_off = std::env::var("DSARRAY_NO_SIMD").map(|v| v == "1").unwrap_or(false);
+        if forced_off {
+            &SCALAR
+        } else {
+            detected()
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// SIMD hit accounting (process-global; overlaid onto Metrics snapshots).
+// ---------------------------------------------------------------------------
+
+static SIMD_HITS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one block-level kernel dispatch against `k` (counted only when
+/// the table is a SIMD one). Process-global so every executor backend is
+/// covered by the same counter; `Runtime::metrics` folds it into the
+/// snapshot as `simd_kernel_hits`.
+#[inline]
+pub fn record_hit(k: &Kernels) {
+    if k.simd {
+        SIMD_HITS.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Total block-level SIMD kernel dispatches in this process.
+pub fn simd_kernel_hits() -> u64 {
+    SIMD_HITS.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Intra-block parallelism: split plan + executor hook.
+// ---------------------------------------------------------------------------
+
+/// Below this many scalar ops a block task never splits (the sub-task
+/// machinery costs more than it saves). Default: 256 Ki ops.
+const DEFAULT_SPLIT_MIN: usize = 1 << 18;
+
+/// Hard cap on parts per split — deques hold at most this many helper
+/// tokens per fat task.
+pub const MAX_PARTS: usize = 8;
+
+static SPLIT_MIN: AtomicUsize = AtomicUsize::new(DEFAULT_SPLIT_MIN);
+
+/// Current split threshold, in approximate scalar ops per block task.
+pub fn split_min() -> usize {
+    SPLIT_MIN.load(Ordering::Relaxed)
+}
+
+/// Set the split threshold (tests/benches force or forbid splitting with
+/// tiny/huge values; `usize::MAX` disables splitting entirely). Returns the
+/// previous value so callers can restore it.
+pub fn set_split_min(min: usize) -> usize {
+    SPLIT_MIN.swap(min.max(1), Ordering::Relaxed)
+}
+
+/// How many parts a task of `work` scalar ops should split into: 1 below
+/// the threshold, otherwise `work / split_min` clamped by `max_parts` (the
+/// caller's structural limit, e.g. row count) and [`MAX_PARTS`]. The plan
+/// depends only on `work` and the threshold — never on worker count — and
+/// parts are disjoint output ranges, so results are split-plan independent.
+pub fn plan_parts(work: usize, max_parts: usize) -> usize {
+    let min = SPLIT_MIN.load(Ordering::Relaxed).max(1);
+    if max_parts <= 1 || work < min.saturating_mul(2) {
+        return 1;
+    }
+    (work / min).min(max_parts).min(MAX_PARTS)
+}
+
+/// Executor-side helper pool: `run(parts, f)` executes `f(0..parts)` with
+/// sibling workers' help and returns true, or returns false when it cannot
+/// help (caller then runs the parts inline). Implementations must not
+/// return until every part has finished — `f` borrows the caller's stack.
+pub trait IntraPool: Send + Sync {
+    fn run(&self, parts: usize, f: &(dyn Fn(usize) + Sync)) -> bool;
+}
+
+thread_local! {
+    static POOL: RefCell<Option<Arc<dyn IntraPool>>> = const { RefCell::new(None) };
+}
+
+/// Install (or clear) this thread's helper pool. The local executor calls
+/// this at the top of each worker loop; threads without a pool fall back
+/// to inline execution in [`parallel_for`].
+pub fn install_pool(pool: Option<Arc<dyn IntraPool>>) {
+    POOL.with(|p| *p.borrow_mut() = pool);
+}
+
+/// Run `run(p)` for every `p in 0..parts`, farming parts out through the
+/// installed [`IntraPool`] when there is one. Returns true when a pool
+/// actually helped; the inline fallback runs parts in ascending order.
+/// Either way, all parts have completed when this returns.
+pub fn parallel_for(parts: usize, run: &(dyn Fn(usize) + Sync)) -> bool {
+    if parts > 1 {
+        let pool = POOL.with(|p| p.borrow().clone());
+        if let Some(pool) = pool {
+            if pool.run(parts, run) {
+                return true;
+            }
+        }
+    }
+    for p in 0..parts {
+        run(p);
+    }
+    false
+}
+
+/// Raw-pointer wrapper that lets split closures write disjoint ranges of
+/// one output buffer from helper threads. Safety contract: every part
+/// touches a distinct range, and the originator blocks until all parts
+/// finish (enforced by [`IntraPool::run`] / the inline fallback).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+// SAFETY: SendPtr is only used to hand disjoint sub-ranges of one buffer
+// to scoped helpers that finish before the owning borrow ends.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> Self {
+        Self(p)
+    }
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Split-aware slice helpers (the fused expression engine's entry points).
+// ---------------------------------------------------------------------------
+
+/// Elements below which a chunk is never worth a helper token.
+const CHUNK_FLOOR: usize = 4096;
+
+/// In-place unary over a slice, split into lane-aligned chunks when large.
+pub fn unary_par(ker: &'static Kernels, op: UnaryKind, xs: &mut [f32]) {
+    let n = xs.len();
+    let parts = plan_parts(n, n / CHUNK_FLOOR);
+    if parts <= 1 {
+        return (ker.unary)(op, xs);
+    }
+    let chunk = chunk8(n, parts);
+    let base = SendPtr::new(xs.as_mut_ptr());
+    parallel_for(parts, &|p| {
+        let lo = p * chunk;
+        if lo >= n {
+            return;
+        }
+        let hi = (lo + chunk).min(n);
+        // SAFETY: chunks are disjoint and the borrow outlives all parts.
+        let s = unsafe { std::slice::from_raw_parts_mut(base.get().add(lo), hi - lo) };
+        (ker.unary)(op, s);
+    });
+}
+
+/// In-place binary over two slices, split into lane-aligned chunks.
+pub fn binary_par(ker: &'static Kernels, op: BinaryKind, a: &mut [f32], b: &[f32]) {
+    let n = a.len().min(b.len());
+    let parts = plan_parts(n, n / CHUNK_FLOOR);
+    if parts <= 1 {
+        return (ker.binary)(op, a, b);
+    }
+    let chunk = chunk8(n, parts);
+    let base = SendPtr::new(a.as_mut_ptr());
+    parallel_for(parts, &|p| {
+        let lo = p * chunk;
+        if lo >= n {
+            return;
+        }
+        let hi = (lo + chunk).min(n);
+        // SAFETY: chunks are disjoint and the borrow outlives all parts.
+        let s = unsafe { std::slice::from_raw_parts_mut(base.get().add(lo), hi - lo) };
+        (ker.binary)(op, s, &b[lo..hi]);
+    });
+}
+
+/// Row-broadcast: `a[r][j] = op(a[r][j], row[j])` for every row of the
+/// `rows×cols` buffer `a`, split on row boundaries when large.
+pub fn bcast_par(ker: &'static Kernels, op: BinaryKind, a: &mut [f32], cols: usize, row: &[f32]) {
+    if cols == 0 {
+        return;
+    }
+    let rows = a.len() / cols;
+    let parts = plan_parts(rows * cols, rows);
+    if parts <= 1 {
+        for r in 0..rows {
+            (ker.binary)(op, &mut a[r * cols..(r + 1) * cols], row);
+        }
+        return;
+    }
+    let rchunk = rows.div_ceil(parts);
+    let base = SendPtr::new(a.as_mut_ptr());
+    parallel_for(parts, &|p| {
+        let r0 = p * rchunk;
+        if r0 >= rows {
+            return;
+        }
+        let r1 = (r0 + rchunk).min(rows);
+        for r in r0..r1 {
+            // SAFETY: row ranges are disjoint per part.
+            let s = unsafe { std::slice::from_raw_parts_mut(base.get().add(r * cols), cols) };
+            (ker.binary)(op, s, row);
+        }
+    });
+}
+
+/// Chunk size covering `n` in `parts` pieces, rounded up to a multiple of
+/// 8 so SIMD chunks stay lane-aligned (correctness never depends on this —
+/// elementwise ops are element-independent — it only avoids split tails).
+fn chunk8(n: usize, parts: usize) -> usize {
+    (n.div_ceil(parts) + 7) & !7
+}
+
+/// Unit tests mutating the process-global split threshold serialize on
+/// this guard (the test binary runs tests concurrently, and an unrelated
+/// test observing a transiently-huge threshold would skip its split).
+#[cfg(test)]
+pub(crate) fn split_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(n: usize) -> (Vec<f32>, Vec<f32>) {
+        let a: Vec<f32> = (0..n).map(|i| (i as f32 - 7.5) * 0.37).collect();
+        let b: Vec<f32> = (0..n).map(|i| ((i * 3) % 11) as f32 - 5.0).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn detected_unary_bit_identical_to_scalar() {
+        for op in [
+            UnaryKind::AddScalar(1.5),
+            UnaryKind::MulScalar(-0.25),
+            UnaryKind::Pow(2.0),
+            UnaryKind::Sqrt,
+            UnaryKind::Abs,
+            UnaryKind::Exp,
+            UnaryKind::Neg,
+        ] {
+            for n in [0usize, 1, 7, 8, 9, 64, 133] {
+                let (base, _) = vecs(n);
+                let mut s = base.clone();
+                let mut v = base.clone();
+                (scalar().unary)(op, &mut s);
+                (detected().unary)(op, &mut v);
+                let sb: Vec<u32> = s.iter().map(|x| x.to_bits()).collect();
+                let vb: Vec<u32> = v.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(sb, vb, "{op:?} len {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn detected_binary_bit_identical_to_scalar() {
+        use BinaryKind::*;
+        for op in [Add, Sub, Mul, Div, DivOrZero] {
+            for n in [0usize, 1, 8, 13, 100] {
+                let (base, mut b) = vecs(n);
+                if n > 4 {
+                    b[2] = 0.0; // Div/DivOrZero divergence point
+                    b[4] = f32::INFINITY;
+                }
+                let mut s = base.clone();
+                let mut v = base.clone();
+                (scalar().binary)(op, &mut s, &b);
+                (detected().binary)(op, &mut v, &b);
+                let sb: Vec<u32> = s.iter().map(|x| x.to_bits()).collect();
+                let vb: Vec<u32> = v.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(sb, vb, "{op:?} len {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn detected_gemm_and_dist2_bit_identical_to_scalar() {
+        for (m, k, n) in [(0, 3, 3), (1, 1, 1), (4, 8, 8), (5, 300, 9), (13, 17, 23)] {
+            let a: Vec<f32> = (0..m * k).map(|i| ((i * 7) % 13) as f32 - 6.0).collect();
+            let b: Vec<f32> = (0..k * n).map(|i| ((i * 5) % 9) as f32 * 0.5 - 2.0).collect();
+            let mut cs = vec![0.25f32; m * n];
+            let mut cv = cs.clone();
+            (scalar().gemm_acc)(&mut cs, &a, &b, m, k, n);
+            (detected().gemm_acc)(&mut cv, &a, &b, m, k, n);
+            let sb: Vec<u32> = cs.iter().map(|x| x.to_bits()).collect();
+            let vb: Vec<u32> = cv.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(sb, vb, "gemm {m}x{k}x{n}");
+        }
+        for n in [0usize, 1, 8, 9, 65] {
+            let (x, y) = vecs(n);
+            let ds = (scalar().dist2)(&x, &y);
+            let dv = (detected().dist2)(&x, &y);
+            assert_eq!(ds.to_bits(), dv.to_bits(), "dist2 len {n}");
+        }
+    }
+
+    #[test]
+    fn split_plan_respects_threshold_and_caps() {
+        let _g = split_guard();
+        let old = set_split_min(1000);
+        assert_eq!(plan_parts(100, 64), 1, "below threshold");
+        assert_eq!(plan_parts(1999, 64), 1, "below 2x threshold");
+        assert_eq!(plan_parts(4000, 64), 4);
+        assert_eq!(plan_parts(1_000_000, 64), MAX_PARTS, "hard cap");
+        assert_eq!(plan_parts(4000, 3), 3, "structural cap");
+        assert_eq!(plan_parts(4000, 1), 1);
+        set_split_min(usize::MAX);
+        assert_eq!(plan_parts(usize::MAX / 2, 64), 1, "disabled");
+        set_split_min(old);
+    }
+
+    #[test]
+    fn parallel_for_inline_covers_every_part_in_order() {
+        // No pool installed on this thread: inline, ascending.
+        let seen = std::sync::Mutex::new(Vec::new());
+        let helped = parallel_for(5, &|p| seen.lock().unwrap().push(p));
+        assert!(!helped);
+        assert_eq!(*seen.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn split_helpers_match_unsplit_bitwise() {
+        let _g = split_guard();
+        let old = set_split_min(1024); // force splitting on ~64k elements
+        let n = 70_000;
+        let (base, b) = vecs(n);
+        let ker = active();
+        let mut whole = base.clone();
+        (ker.unary)(UnaryKind::MulScalar(1.5), &mut whole);
+        let mut split = base.clone();
+        unary_par(ker, UnaryKind::MulScalar(1.5), &mut split);
+        assert_eq!(whole, split);
+
+        let mut whole = base.clone();
+        (ker.binary)(BinaryKind::Add, &mut whole, &b);
+        let mut split = base.clone();
+        binary_par(ker, BinaryKind::Add, &mut split, &b);
+        assert_eq!(whole, split);
+
+        let cols = 100;
+        let row: Vec<f32> = (0..cols).map(|j| j as f32 * 0.1).collect();
+        let mut whole = base.clone();
+        for r in 0..n / cols {
+            (ker.binary)(BinaryKind::Sub, &mut whole[r * cols..(r + 1) * cols], &row);
+        }
+        let mut split = base.clone();
+        bcast_par(ker, BinaryKind::Sub, &mut split, cols, &row);
+        assert_eq!(whole, split);
+        set_split_min(old);
+    }
+}

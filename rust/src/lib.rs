@@ -27,6 +27,13 @@
 //! most input bytes, and missing blocks move worker-to-worker. The
 //! [`cluster_guide`] module embeds `docs/CLUSTER.md`.
 //!
+//! Per-block compute goes through the **kernel layer** ([`kernels`]):
+//! packed SIMD micro-kernels behind a vtable selected once per process by
+//! runtime CPU feature detection (portable scalar fallback, bit-identical
+//! results), plus size-gated intra-block sub-task splitting so one fat
+//! block can occupy every worker. The [`kernels_guide`] module embeds
+//! `docs/KERNELS.md`.
+//!
 //! ```
 //! use rustdslib::{dsarray::creation, tasking::Runtime};
 //!
@@ -48,6 +55,7 @@ pub mod config;
 pub mod dataset;
 pub mod dsarray;
 pub mod estimators;
+pub mod kernels;
 pub mod runtime;
 pub mod storage;
 pub mod tasking;
@@ -64,6 +72,13 @@ pub mod io_guide {}
 /// examples run under `cargo test --doc`).
 #[doc = include_str!("../../docs/CLUSTER.md")]
 pub mod cluster_guide {}
+
+/// Guide: the SIMD kernel layer and intra-block parallelism — vtable
+/// dispatch, bit-identicality contract, sub-task splitting
+/// (`docs/KERNELS.md`, embedded so its examples run under
+/// `cargo test --doc`).
+#[doc = include_str!("../../docs/KERNELS.md")]
+pub mod kernels_guide {}
 
 pub use storage::{Block, BlockMeta, CsrMatrix, DenseMatrix};
 pub use tasking::{Future, Runtime, SimConfig, SimReport};

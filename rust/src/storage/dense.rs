@@ -241,9 +241,13 @@ impl DenseMatrix {
     /// to allocate a temporary product per k-step and `axpy` it (two full
     /// passes over the output per step).
     ///
-    /// Cache-tiled ikj order: a row tile of `a` and a k-strip of `b` stay
-    /// hot across the inner loops, the innermost loop streams one output
-    /// row segment against one `b` row (both contiguous).
+    /// Dispatches through the kernel layer: the scalar table keeps the
+    /// cache-tiled ikj loop, the SIMD table adds a packed-B register-blocked
+    /// micro-kernel inside the same tiles. Big products additionally split
+    /// into disjoint row ranges over the executor's deques
+    /// ([`crate::kernels::parallel_for`]); every element accumulates `p`
+    /// ascending under every table and split plan, so the result is
+    /// bit-identical regardless of table, split, or worker count.
     pub fn gemm_acc(&mut self, a: &DenseMatrix, b: &DenseMatrix) -> Result<()> {
         if a.cols != b.rows || self.rows != a.rows || self.cols != b.cols {
             bail!(
@@ -257,30 +261,76 @@ impl DenseMatrix {
             );
         }
         let (m, k, n) = (a.rows, a.cols, b.cols);
-        // Tile sizes: IB rows of C/A per pass reuse the same KB-row strip
-        // of B (KB * n * 4 bytes ≈ L2-resident for n ≤ 1024).
-        const IB: usize = 64;
-        const KB: usize = 256;
-        for ib in (0..m).step_by(IB) {
-            let iend = (ib + IB).min(m);
-            for kb in (0..k).step_by(KB) {
-                let kend = (kb + KB).min(k);
-                for i in ib..iend {
-                    let crow = &mut self.data[i * n..(i + 1) * n];
-                    let arow = &a.data[i * k..(i + 1) * k];
-                    for (p, &av) in arow.iter().enumerate().take(kend).skip(kb) {
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let brow = &b.data[p * n..(p + 1) * n];
-                        for (c, &bv) in crow.iter_mut().zip(brow) {
-                            *c += av * bv;
-                        }
-                    }
+        let ker = crate::kernels::active();
+        crate::kernels::record_hit(ker);
+        let parts = crate::kernels::plan_parts(m * k * n, m.div_ceil(16));
+        if parts <= 1 {
+            (ker.gemm_acc)(&mut self.data, &a.data, &b.data, m, k, n);
+            return Ok(());
+        }
+        let rchunk = m.div_ceil(parts);
+        let base = crate::kernels::SendPtr::new(self.data.as_mut_ptr());
+        crate::kernels::parallel_for(parts, &|p| {
+            let r0 = p * rchunk;
+            if r0 >= m {
+                return;
+            }
+            let r1 = (r0 + rchunk).min(m);
+            // SAFETY: parts cover disjoint row ranges of C, and
+            // parallel_for does not return until every part finished.
+            let c = unsafe { std::slice::from_raw_parts_mut(base.get().add(r0 * n), (r1 - r0) * n) };
+            (ker.gemm_acc)(c, &a.data[r0 * k..r1 * k], &b.data, r1 - r0, k, n);
+        });
+        Ok(())
+    }
+
+    /// Pairwise squared Euclidean distances between the rows of `self`
+    /// (m×f) and `other` (n×f): an m×n matrix with `out[i][j] =
+    /// ||self.row(i) − other.row(j)||²` — the KMeans/kNN inner loop, routed
+    /// through the kernel layer's striped-accumulation `dist2` (identical
+    /// binning under the scalar and SIMD tables). Large products split over
+    /// disjoint row ranges of the output.
+    pub fn pairwise_dist2(&self, other: &DenseMatrix) -> Result<Self> {
+        if self.cols != other.cols {
+            bail!(
+                "pairwise_dist2 feature mismatch: {}x{} vs {}x{}",
+                self.rows,
+                self.cols,
+                other.rows,
+                other.cols
+            );
+        }
+        let (mx, my, f) = (self.rows, other.rows, self.cols);
+        let ker = crate::kernels::active();
+        crate::kernels::record_hit(ker);
+        let mut out = Self::zeros(mx, my);
+        let parts = crate::kernels::plan_parts(mx * my * f.max(1) * 3, mx);
+        if parts <= 1 {
+            for i in 0..mx {
+                let xr = self.row(i);
+                for j in 0..my {
+                    out.data[i * my + j] = (ker.dist2)(xr, other.row(j));
                 }
             }
+            return Ok(out);
         }
-        Ok(())
+        let rchunk = mx.div_ceil(parts);
+        let base = crate::kernels::SendPtr::new(out.data.as_mut_ptr());
+        crate::kernels::parallel_for(parts, &|p| {
+            let r0 = p * rchunk;
+            if r0 >= mx {
+                return;
+            }
+            let r1 = (r0 + rchunk).min(mx);
+            for i in r0..r1 {
+                let xr = self.row(i);
+                for j in 0..my {
+                    // SAFETY: each part writes only its own output rows.
+                    unsafe { *base.get().add(i * my + j) = (ker.dist2)(xr, other.row(j)) };
+                }
+            }
+        });
+        Ok(out)
     }
 
     /// `self += alpha * other` (shape-checked).
@@ -636,6 +686,28 @@ mod tests {
                 "gemm_acc mismatch at {m}x{k}x{n}"
             );
         }
+    }
+
+    #[test]
+    fn pairwise_dist2_matches_naive_oracle() {
+        let x = DenseMatrix::from_fn(7, 13, |i, j| ((i * 13 + j * 5) % 9) as f32 - 4.0);
+        let y = DenseMatrix::from_fn(5, 13, |i, j| ((i * 7 + j * 3) % 11) as f32 * 0.5);
+        let d = x.pairwise_dist2(&y).unwrap();
+        assert_eq!((d.rows(), d.cols()), (7, 5));
+        for i in 0..7 {
+            for j in 0..5 {
+                let want: f32 = (0..13).map(|c| (x.get(i, c) - y.get(j, c)).powi(2)).sum();
+                assert!(
+                    (d.get(i, j) - want).abs() <= 1e-4 * want.max(1.0),
+                    "d[{i}][{j}] = {} want {want}",
+                    d.get(i, j)
+                );
+            }
+        }
+        // Feature-count mismatch is an error; empty feature dim is zeros.
+        assert!(x.pairwise_dist2(&DenseMatrix::zeros(3, 12)).is_err());
+        let e = DenseMatrix::zeros(2, 0).pairwise_dist2(&DenseMatrix::zeros(3, 0)).unwrap();
+        assert_eq!(e.data(), &[0.0; 6]);
     }
 
     #[test]

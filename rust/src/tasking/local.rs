@@ -19,6 +19,13 @@
 //!   task reads and application handle references; fully-consumed unpinned
 //!   blocks are evicted from the data table and accounted in
 //!   [`Metrics::blocks_evicted`] / `peak_resident_bytes`.
+//! * **Intra-block sub-tasks** — a fat block task (big gemm tile grid,
+//!   long fused chain) splits itself through the kernel layer's
+//!   [`IntraPool`] hook: helper tokens land at the *front* of sibling
+//!   deques and idle workers execute disjoint sub-ranges of the same block
+//!   while the originator works through the rest. The split plan is
+//!   size-gated and worker-count independent, so results stay bit-identical
+//!   (see `kernels`); accounted in [`Metrics::subtasks_spawned`].
 //! * **Out-of-core residency** — with a [`LocalOptions`] memory budget,
 //!   *live* blocks past the high-water mark are spilled LRU-first to a
 //!   per-runtime [`BlockStore`] directory (write-back for dirty values,
@@ -35,12 +42,13 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::kernels::IntraPool;
 use crate::storage::{Block, BlockMeta, BlockStore};
 
 use super::graph::{Graph, TaskState};
@@ -48,12 +56,114 @@ use super::metrics::Metrics;
 use super::task::{CostHint, DataId, OwnedTaskFn, TaskBody, TaskFn, TaskId, TaskInput, TaskSubmit};
 use super::Executor;
 
+/// One entry of a worker deque: either a whole ready task or a helper
+/// token for an intra-block split in progress on a sibling worker.
+enum WorkItem {
+    /// Ready task and its cost score (the steal heuristic's unit).
+    Task(TaskId, f64),
+    /// Helper token: claim sub-ranges of a splitting task. Tokens carry no
+    /// cost (the owning task's score already counts) and are pushed to the
+    /// deque *front* — finishing an in-flight block beats starting new ones.
+    Sub(Arc<SubTask>),
+}
+
 /// One worker's ready deque plus its aggregate cost score (the steal
 /// heuristic's victim-selection key).
 #[derive(Default)]
 struct SubQueue {
-    dq: VecDeque<(TaskId, f64)>,
+    dq: VecDeque<WorkItem>,
     cost: f64,
+}
+
+/// A splitting task's shared claim state — the scoped-task pattern. `run`
+/// borrows the originating task's stack; that borrow stays valid because
+/// the originator blocks in [`DequePool::run`] until `done == parts`, and
+/// after that point every `next.fetch_add` claim lands `>= parts` and
+/// returns without touching `run`. Stale tokens left in deques after the
+/// originator returns are therefore harmless no-ops.
+struct SubTask {
+    run: *const (dyn Fn(usize) + Sync),
+    parts: usize,
+    /// Next unclaimed part index; claims past `parts` are discards.
+    next: AtomicUsize,
+    /// Completed parts; the originator's wakeup condition.
+    done: Mutex<usize>,
+    cv: Condvar,
+}
+
+// SAFETY: `run` is dereferenced only for claims `< parts`, all of which
+// complete before the originator (who owns the pointee) returns.
+unsafe impl Send for SubTask {}
+unsafe impl Sync for SubTask {}
+
+impl SubTask {
+    /// Claim and execute parts until none remain unclaimed.
+    fn help(&self) {
+        loop {
+            let p = self.next.fetch_add(1, Ordering::Relaxed);
+            if p >= self.parts {
+                return;
+            }
+            // SAFETY: a claim below `parts` means the originator has not
+            // returned yet, so the closure is alive (see struct docs).
+            let f = unsafe { &*self.run };
+            f(p);
+            let mut d = self.done.lock().unwrap();
+            *d += 1;
+            if *d == self.parts {
+                self.cv.notify_all();
+            }
+        }
+    }
+}
+
+/// The local executor's [`IntraPool`]: sub-range work items go onto the
+/// existing per-worker deques so idle siblings help with a fat block. One
+/// instance per worker thread, installed at the top of its loop.
+struct DequePool {
+    inner: Weak<Inner>,
+    me: usize,
+}
+
+impl IntraPool for DequePool {
+    fn run(&self, parts: usize, f: &(dyn Fn(usize) + Sync)) -> bool {
+        let Some(inner) = self.inner.upgrade() else {
+            return false;
+        };
+        let n = inner.queues.len();
+        if n <= 1 || parts <= 1 {
+            return false; // nobody to help: caller runs inline
+        }
+        let sub = Arc::new(SubTask {
+            run: f as *const (dyn Fn(usize) + Sync),
+            parts,
+            next: AtomicUsize::new(0),
+            done: Mutex::new(0),
+            cv: Condvar::new(),
+        });
+        // Offer at most one token per sibling, under the central lock
+        // (lock order central→deque, same as push_ready).
+        {
+            let mut st = inner.state.lock().unwrap();
+            st.metrics.record_subtasks(parts as u64);
+            let tokens = (parts - 1).min(n - 1);
+            for t in 0..tokens {
+                let w = (self.me + 1 + t) % n;
+                let mut q = inner.queues[w].lock().unwrap();
+                q.dq.push_front(WorkItem::Sub(Arc::clone(&sub)));
+            }
+            st.subs += tokens;
+        }
+        inner.cv.notify_all();
+        // The originator never idles: it claims parts alongside helpers.
+        sub.help();
+        // All parts are claimed; wait out the ones helpers still run.
+        let mut d = sub.done.lock().unwrap();
+        while *d < parts {
+            d = sub.cv.wait(d).unwrap();
+        }
+        true
+    }
 }
 
 /// Configuration of a [`LocalExecutor`] beyond the worker count — the
@@ -98,6 +208,10 @@ struct Central {
     graph: Graph,
     /// Ready tasks sitting in deques, not yet claimed by a worker.
     queued: usize,
+    /// Outstanding intra-block helper tokens in deques (wake condition for
+    /// parked workers; tokens don't count as `queued` — their originating
+    /// task is already `running`, which keeps the deadlock guards exact).
+    subs: usize,
     running: usize,
     shutdown: bool,
     /// First task failure; poisons the runtime (fail-fast).
@@ -195,7 +309,7 @@ impl Inner {
     /// wakeup race-free.
     fn push_ready(&self, st: &mut Central, w: usize, tid: TaskId, score: f64) {
         let mut q = self.queues[w].lock().unwrap();
-        q.dq.push_back((tid, score));
+        q.dq.push_back(WorkItem::Task(tid, score));
         q.cost += score;
         st.queued += 1;
     }
@@ -230,6 +344,7 @@ impl LocalExecutor {
             state: Mutex::new(Central {
                 graph: Graph::default(),
                 queued: 0,
+                subs: 0,
                 running: 0,
                 shutdown: false,
                 error: None,
@@ -440,14 +555,23 @@ impl Drop for LocalExecutor {
     }
 }
 
+/// Pop one item off a deque, maintaining the cost aggregate (helper tokens
+/// carry no cost of their own).
+fn take(q: &mut SubQueue, front: bool) -> Option<WorkItem> {
+    let item = if front { q.dq.pop_front() } else { q.dq.pop_back() };
+    if let Some(WorkItem::Task(_, s)) = &item {
+        q.cost -= s;
+    }
+    item
+}
+
 /// Grab work: own deque front first, then steal from the victim with the
 /// largest queued cost (back of its deque), then a full fallback scan.
-fn pop_task(inner: &Inner, me: usize) -> Option<TaskId> {
+fn pop_task(inner: &Inner, me: usize) -> Option<WorkItem> {
     {
         let mut q = inner.queues[me].lock().unwrap();
-        if let Some((tid, s)) = q.dq.pop_front() {
-            q.cost -= s;
-            return Some(tid);
+        if let Some(item) = take(&mut q, true) {
+            return Some(item);
         }
         q.cost = 0.0; // reset float drift whenever provably empty
     }
@@ -466,9 +590,8 @@ fn pop_task(inner: &Inner, me: usize) -> Option<TaskId> {
     }
     if let Some((v, _)) = best {
         let mut q = inner.queues[v].lock().unwrap();
-        if let Some((tid, s)) = q.dq.pop_back() {
-            q.cost -= s;
-            return Some(tid);
+        if let Some(item) = take(&mut q, false) {
+            return Some(item);
         }
     }
     for v in 0..n {
@@ -476,9 +599,8 @@ fn pop_task(inner: &Inner, me: usize) -> Option<TaskId> {
             continue;
         }
         let mut q = inner.queues[v].lock().unwrap();
-        if let Some((tid, s)) = q.dq.pop_back() {
-            q.cost -= s;
-            return Some(tid);
+        if let Some(item) = take(&mut q, false) {
+            return Some(item);
         }
     }
     None
@@ -492,9 +614,16 @@ enum Resolved {
 }
 
 fn worker_loop(inner: Arc<Inner>, me: usize) {
+    // Kernel-layer hook: block tasks running on this thread may split into
+    // sub-ranges that land on sibling deques. Weak: the pool must not keep
+    // the executor alive past its Drop.
+    crate::kernels::install_pool(Some(Arc::new(DequePool {
+        inner: Arc::downgrade(&inner),
+        me,
+    })));
     loop {
         // ---- Acquire a ready task (deque fast path, then park) ----
-        let tid = match pop_task(&inner, me) {
+        let item = match pop_task(&inner, me) {
             Some(t) => t,
             None => {
                 let mut st = inner.state.lock().unwrap();
@@ -502,7 +631,7 @@ fn worker_loop(inner: Arc<Inner>, me: usize) {
                     if st.shutdown {
                         return;
                     }
-                    if st.queued > 0 {
+                    if st.queued > 0 || st.subs > 0 {
                         break; // work appeared somewhere: rescan the deques
                     }
                     // Timeout is a belt-and-braces rescan, not a correctness
@@ -513,6 +642,20 @@ fn worker_loop(inner: Arc<Inner>, me: usize) {
                         .unwrap();
                     st = g;
                 }
+                continue;
+            }
+        };
+        let tid = match item {
+            WorkItem::Task(tid, _) => tid,
+            WorkItem::Sub(sub) => {
+                // Helper token: work through the splitting task's remaining
+                // sub-ranges, then go back to normal scheduling. Tokens
+                // whose split already finished discard instantly.
+                {
+                    let mut st = inner.state.lock().unwrap();
+                    st.subs = st.subs.saturating_sub(1);
+                }
+                sub.help();
                 continue;
             }
         };
@@ -1045,6 +1188,52 @@ mod tests {
         let before = ex.metrics().blocks_faulted;
         assert_eq!(ex.wait(a).unwrap().as_dense().unwrap().get(0, 0), 7.0);
         assert_eq!(ex.metrics().blocks_faulted, before);
+    }
+
+    #[test]
+    fn fat_block_task_splits_across_workers_and_stays_bit_identical() {
+        let _g = crate::kernels::split_guard();
+        let old = crate::kernels::set_split_min(1024); // force splitting
+        let ex = LocalExecutor::new(4);
+        let am = DenseMatrix::from_fn(96, 64, |i, j| ((i * 31 + j * 7) % 13) as f32 - 6.0);
+        let bm = DenseMatrix::from_fn(64, 80, |i, j| ((i * 5 + j * 11) % 9) as f32 * 0.5);
+        // Oracle: the raw whole-block kernel, no splitting involved.
+        let mut expect = DenseMatrix::zeros(96, 80);
+        (crate::kernels::active().gemm_acc)(
+            expect.data_mut(),
+            am.data(),
+            bm.data(),
+            96,
+            64,
+            80,
+        );
+        // One fat gemm task on the executor: its worker splits the block
+        // into row-range sub-tasks over the sibling deques.
+        let ida = ex.put_block(Block::Dense(am.clone()));
+        let idb = ex.put_block(Block::Dense(bm.clone()));
+        let out = ex.submit(
+            "fat_gemm",
+            &[ida, idb],
+            vec![BlockMeta::dense(96, 80)],
+            CostHint::flops(2.0 * 96.0 * 64.0 * 80.0),
+            (am.data().len() + bm.data().len()) as f64 * 4.0,
+            Arc::new(|ins: &[Arc<Block>]| {
+                let mut c = DenseMatrix::zeros(96, 80);
+                c.gemm_acc(ins[0].as_dense()?, ins[1].as_dense()?)?;
+                Ok(vec![Block::Dense(c)])
+            }),
+        );
+        let got = ex.wait(out[0]).unwrap();
+        assert_eq!(
+            got.as_dense().unwrap(),
+            &expect,
+            "split execution must be bit-identical to the whole-block kernel"
+        );
+        assert!(
+            ex.metrics().subtasks_spawned > 0,
+            "a 96x64x80 gemm above a 1024-op threshold must split"
+        );
+        crate::kernels::set_split_min(old);
     }
 
     #[test]

@@ -59,6 +59,13 @@ pub struct Metrics {
     /// Task inputs already resident on the worker the task was placed on —
     /// the locality scheduler's payoff counter.
     pub locality_hits: u64,
+    /// Block-level kernel dispatches that went to a SIMD table (process-
+    /// global, folded into snapshots by `Runtime::metrics`).
+    pub simd_kernel_hits: u64,
+    /// Sub-range work items created by intra-block splitting — fat block
+    /// tasks that fanned out over the per-worker deques instead of
+    /// serializing one worker (counts every part of every engaged split).
+    pub subtasks_spawned: u64,
 }
 
 impl Metrics {
@@ -137,6 +144,12 @@ impl Metrics {
         self.remote_transfers += transfers;
     }
 
+    /// A fat block task split into `parts` sub-range work items on the
+    /// executor's deques.
+    pub fn record_subtasks(&mut self, parts: u64) {
+        self.subtasks_spawned += parts;
+    }
+
     pub fn total_tasks(&self) -> u64 {
         self.tasks_by_op.values().sum()
     }
@@ -184,6 +197,8 @@ impl Metrics {
         out.bytes_on_wire -= earlier.bytes_on_wire;
         out.remote_transfers -= earlier.remote_transfers;
         out.locality_hits -= earlier.locality_hits;
+        out.simd_kernel_hits -= earlier.simd_kernel_hits;
+        out.subtasks_spawned -= earlier.subtasks_spawned;
         out
     }
 }
@@ -262,6 +277,21 @@ mod tests {
         m.record_faulted(100);
         let d = m.since(&snap);
         assert_eq!((d.blocks_spilled, d.blocks_faulted, d.spill_bytes), (1, 1, 100));
+    }
+
+    #[test]
+    fn kernel_and_subtask_counters() {
+        let mut m = Metrics::default();
+        m.record_subtasks(4);
+        m.record_subtasks(8);
+        m.simd_kernel_hits = 3;
+        assert_eq!(m.subtasks_spawned, 12);
+        let snap = m.clone();
+        m.record_subtasks(2);
+        m.simd_kernel_hits = 5;
+        let d = m.since(&snap);
+        assert_eq!(d.subtasks_spawned, 2);
+        assert_eq!(d.simd_kernel_hits, 2);
     }
 
     #[test]

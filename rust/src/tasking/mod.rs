@@ -210,6 +210,10 @@ impl BatchTask {
 #[derive(Clone)]
 pub struct Runtime {
     exec: Arc<dyn Executor>,
+    /// Kernel vtable selected once per process (runtime CPU feature
+    /// detection, overridable with `DSARRAY_NO_SIMD=1`) and stored here so
+    /// hot paths never re-detect per task — see [`crate::kernels`].
+    kernels: &'static crate::kernels::Kernels,
 }
 
 impl Runtime {
@@ -225,6 +229,7 @@ impl Runtime {
     pub fn local(workers: usize) -> Self {
         Self {
             exec: Arc::new(local::LocalExecutor::new(workers.max(1))),
+            kernels: crate::kernels::active(),
         }
     }
 
@@ -257,6 +262,7 @@ impl Runtime {
     pub fn local_with_options(opts: LocalOptions) -> Result<Self> {
         Ok(Self {
             exec: Arc::new(local::LocalExecutor::with_options(opts)?),
+            kernels: crate::kernels::active(),
         })
     }
 
@@ -270,6 +276,7 @@ impl Runtime {
     pub fn cluster(opts: ClusterOptions) -> Result<Self> {
         Ok(Self {
             exec: Arc::new(cluster::ClusterExecutor::new(opts)?),
+            kernels: crate::kernels::active(),
         })
     }
 
@@ -279,12 +286,23 @@ impl Runtime {
     pub fn sim(cfg: SimConfig) -> Self {
         Self {
             exec: Arc::new(sim::SimExecutor::new(cfg)),
+            kernels: crate::kernels::active(),
         }
     }
 
     /// Wrap a custom [`Executor`] backend.
     pub fn from_executor(exec: Arc<dyn Executor>) -> Self {
-        Self { exec }
+        Self {
+            exec,
+            kernels: crate::kernels::active(),
+        }
+    }
+
+    /// The process-wide kernel vtable (scalar or SIMD), selected once at
+    /// first use and cached — tasks capture this reference instead of
+    /// re-running feature detection per block.
+    pub fn kernels(&self) -> &'static crate::kernels::Kernels {
+        self.kernels
     }
 
     pub fn is_sim(&self) -> bool {
@@ -398,9 +416,13 @@ impl Runtime {
         self.exec.run_sim(true)
     }
 
-    /// Task-count, traffic and residency metrics accumulated so far.
+    /// Task-count, traffic and residency metrics accumulated so far. The
+    /// `simd_kernel_hits` counter is process-global (kernel dispatch happens
+    /// below the executor layer) and is folded into the snapshot here.
     pub fn metrics(&self) -> Metrics {
-        self.exec.metrics()
+        let mut m = self.exec.metrics();
+        m.simd_kernel_hits = crate::kernels::simd_kernel_hits();
+        m
     }
 
     /// Add an application handle reference to each future's block.

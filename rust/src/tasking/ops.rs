@@ -118,6 +118,18 @@ pub fn gemm_acc_op() -> TaskFn {
     })
 }
 
+/// Pairwise squared Euclidean distances between the rows of two blocks:
+/// inputs [X (mx×f), Y (my×f)] → mx×my matrix of `‖xᵢ − yⱼ‖²`. Runs the
+/// kernel-layer distance micro-kernel (`DenseMatrix::pairwise_dist2`), the
+/// inner loop of the KNN / K-means estimators.
+pub fn pairwise_dist2_op() -> TaskFn {
+    Arc::new(|ins: &[Arc<Block>]| {
+        let x = ins[0].to_dense()?;
+        let y = ins[1].to_dense()?;
+        Ok(vec![Block::Dense(x.pairwise_dist2(&y)?)])
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +175,28 @@ mod tests {
         let c = dense(2, 2, |_, _| 100.0);
         let out = gemm_acc_op()(&[a, b.clone(), c]).unwrap();
         assert_eq!(out[0].as_dense().unwrap().get(0, 1), 101.0);
+    }
+
+    #[test]
+    fn pairwise_dist2_matches_definition() {
+        let x = dense(3, 4, |i, j| (i * 4 + j) as f32 * 0.5);
+        let y = dense(2, 4, |i, j| 1.0 - (i + j) as f32);
+        let out = pairwise_dist2_op()(&[x.clone(), y.clone()]).unwrap();
+        let d = out[0].as_dense().unwrap();
+        assert_eq!(d.rows(), 3);
+        assert_eq!(d.cols(), 2);
+        let (xm, ym) = (x.as_dense().unwrap(), y.as_dense().unwrap());
+        for i in 0..3 {
+            for j in 0..2 {
+                let want: f32 = (0..4)
+                    .map(|k| {
+                        let dk = xm.get(i, k) - ym.get(j, k);
+                        dk * dk
+                    })
+                    .sum();
+                assert!((d.get(i, j) - want).abs() <= 1e-4 * want.max(1.0));
+            }
+        }
     }
 
     #[test]

@@ -181,6 +181,37 @@ fn fused_chain_and_view_parity_local_vs_cluster() {
     assert!(rt.metrics().bytes_on_wire > 0);
 }
 
+/// Kernel-layer parity: with the intra-block split threshold forced low
+/// enough that the single-block gemm and pairwise-distance tasks split
+/// into sub-range work items on the local backend, the cluster backend
+/// (whose coordinator pool may or may not split) must still produce
+/// bit-identical results — sub-task plans depend only on work size, and
+/// every part keeps the same per-element accumulation order.
+#[test]
+fn kernel_split_parity_local_vs_cluster() {
+    let ma = random_matrix(96, 64, 61);
+    let mb = random_matrix(64, 80, 62);
+    let prev = rustdslib::kernels::set_split_min(1024);
+    let run = |rt: &Runtime| {
+        // Single-block operands: the whole gemm is one fat task.
+        let a = creation::from_matrix(rt, &ma, (96, 64)).unwrap();
+        let b = creation::from_matrix(rt, &mb, (64, 80)).unwrap();
+        let mm = a.matmul(&b).unwrap().collect().unwrap();
+        let pd = a.pairwise_dist2(&a).unwrap().collect().unwrap();
+        (mm, pd, rt.metrics().subtasks_spawned)
+    };
+    let local_rt = Runtime::local(4);
+    let (mm_l, pd_l, subs_l) = run(&local_rt);
+    let workers = Workers::spawn(2, None);
+    let rt = workers.runtime();
+    let (mm_c, pd_c, _) = run(&rt);
+    rustdslib::kernels::set_split_min(prev);
+    assert_eq!(mm_c, mm_l, "split gemm parity local vs cluster");
+    assert_eq!(pd_c, pd_l, "pairwise dist2 parity local vs cluster");
+    assert!(subs_l > 0, "local fat tasks must have split into sub-tasks");
+    assert!(rt.metrics().bytes_on_wire > 0);
+}
+
 /// A worker process dying mid-workload must poison the runtime with the
 /// worker address and the failing task's name — and every subsequent
 /// synchronization must error immediately instead of hanging (mirrors the

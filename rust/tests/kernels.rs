@@ -1,0 +1,200 @@
+//! Property tests for the kernel layer: the detected (possibly SIMD)
+//! vtable must be BIT-identical to the portable scalar table for every op
+//! kind — including non-finite inputs, signed zeros, unaligned lengths
+//! (`len % lanes != 0`) and empty blocks — and intra-block sub-task
+//! splitting must never change results, whatever the worker count.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use rustdslib::dsarray::creation;
+use rustdslib::kernels::{self, BinaryKind, UnaryKind};
+use rustdslib::prop_assert;
+use rustdslib::storage::DenseMatrix;
+use rustdslib::tasking::Runtime;
+use rustdslib::util::prop::{check, Gen};
+
+/// Serializes the tests that mutate the process-global split threshold
+/// (integration tests in one binary run concurrently).
+fn split_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Every unary kind, with generated payloads.
+fn unary_kinds(g: &mut Gen) -> Vec<UnaryKind> {
+    let s = g.f32_in(-3.0, 3.0);
+    vec![
+        UnaryKind::AddScalar(s),
+        UnaryKind::MulScalar(s),
+        UnaryKind::Pow(g.f32_in(-2.0, 2.0)),
+        UnaryKind::Sqrt,
+        UnaryKind::Abs,
+        UnaryKind::Exp,
+        UnaryKind::Neg,
+    ]
+}
+
+const BINARY_KINDS: [BinaryKind; 5] = [
+    BinaryKind::Add,
+    BinaryKind::Sub,
+    BinaryKind::Mul,
+    BinaryKind::Div,
+    BinaryKind::DivOrZero,
+];
+
+/// Random buffer with non-finite values and signed zeros mixed in.
+fn noisy_vec(g: &mut Gen, len: usize) -> Vec<f32> {
+    let mut xs = g.f32_vec(len, 4.0);
+    for x in xs.iter_mut() {
+        match g.usize_in(0, 19) {
+            0 => *x = f32::NAN,
+            1 => *x = f32::INFINITY,
+            2 => *x = f32::NEG_INFINITY,
+            3 => *x = 0.0,
+            4 => *x = -0.0,
+            _ => {}
+        }
+    }
+    xs
+}
+
+#[test]
+fn unary_kinds_bit_identical_scalar_vs_detected() {
+    let (s, d) = (kernels::scalar(), kernels::detected());
+    check("unary-bit-identical", |g| {
+        // Lengths deliberately cross 0 and non-multiples of the lane count.
+        let len = g.usize_in(0, 8 * g.size + 7);
+        let xs = noisy_vec(g, len);
+        for op in unary_kinds(g) {
+            let mut a = xs.clone();
+            let mut b = xs.clone();
+            (s.unary)(op, &mut a);
+            (d.unary)(op, &mut b);
+            for i in 0..len {
+                prop_assert!(
+                    a[i].to_bits() == b[i].to_bits(),
+                    "{op:?} diverged at {i} (len {len}): {} vs {} (x={})",
+                    a[i],
+                    b[i],
+                    xs[i]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn binary_kinds_bit_identical_scalar_vs_detected() {
+    let (s, d) = (kernels::scalar(), kernels::detected());
+    check("binary-bit-identical", |g| {
+        let len = g.usize_in(0, 8 * g.size + 7);
+        let xs = noisy_vec(g, len);
+        let mut ys = noisy_vec(g, len);
+        // Plant exact zero divisors so DivOrZero's guard is exercised on
+        // both sides of the lane boundary.
+        for i in (0..len).step_by(3) {
+            if g.bool() {
+                ys[i] = 0.0;
+            }
+        }
+        for op in BINARY_KINDS {
+            let mut a = xs.clone();
+            let mut b = xs.clone();
+            (s.binary)(op, &mut a, &ys);
+            (d.binary)(op, &mut b, &ys);
+            for i in 0..len {
+                prop_assert!(
+                    a[i].to_bits() == b[i].to_bits(),
+                    "{op:?} diverged at {i} (len {len}): {} vs {} (a={}, b={})",
+                    a[i],
+                    b[i],
+                    xs[i],
+                    ys[i]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gemm_acc_bit_identical_scalar_vs_detected() {
+    let (s, d) = (kernels::scalar(), kernels::detected());
+    check("gemm-bit-identical", |g| {
+        // Sizes include empty dims and column counts straddling the 8-lane
+        // micro-kernel width (n % 8 != 0 exercises the column tail).
+        let m = g.usize_in(0, g.size);
+        let k = g.usize_in(0, 2 * g.size);
+        let n = g.usize_in(0, 20);
+        let a = noisy_vec(g, m * k);
+        let b = noisy_vec(g, k * n);
+        let c0 = g.f32_vec(m * n, 2.0);
+        let mut ca = c0.clone();
+        let mut cb = c0;
+        (s.gemm_acc)(&mut ca, &a, &b, m, k, n);
+        (d.gemm_acc)(&mut cb, &a, &b, m, k, n);
+        for i in 0..m * n {
+            prop_assert!(
+                ca[i].to_bits() == cb[i].to_bits(),
+                "gemm {m}x{k}x{n} diverged at {i}: {} vs {}",
+                ca[i],
+                cb[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dist2_bit_identical_scalar_vs_detected() {
+    let (s, d) = (kernels::scalar(), kernels::detected());
+    check("dist2-bit-identical", |g| {
+        let len = g.usize_in(0, 8 * g.size + 7);
+        let a = noisy_vec(g, len);
+        let b = noisy_vec(g, len);
+        let x = (s.dist2)(&a, &b);
+        let y = (d.dist2)(&a, &b);
+        prop_assert!(
+            x.to_bits() == y.to_bits(),
+            "dist2 diverged (len {len}): {x} vs {y}"
+        );
+        Ok(())
+    });
+}
+
+/// Sub-task split plans depend only on work size and threshold — never on
+/// worker count — so a forced-split run on 4 workers must be bit-identical
+/// to a 1-worker run of the same pipeline, and the fat tasks must actually
+/// have split (subtasks_spawned > 0 with multiple workers).
+#[test]
+fn split_runs_bit_identical_across_worker_counts() {
+    let _guard = split_lock();
+    let prev = kernels::set_split_min(1024);
+    let m = DenseMatrix::from_fn(96, 64, |i, j| ((i * 64 + j) % 13) as f32 * 0.37 - 2.0);
+    let w = DenseMatrix::from_fn(64, 80, |i, j| ((i + 3 * j) % 11) as f32 * 0.21 - 1.0);
+    let run = |workers: usize| {
+        let rt = Runtime::local(workers);
+        let a = creation::from_matrix(&rt, &m, (96, 64)).unwrap();
+        let b = creation::from_matrix(&rt, &w, (64, 80)).unwrap();
+        let mm = a.matmul(&b).unwrap().collect().unwrap();
+        let ew = a
+            .add_scalar(1.0)
+            .unwrap()
+            .mul_scalar(0.5)
+            .unwrap()
+            .collect()
+            .unwrap();
+        let pd = a.pairwise_dist2(&a).unwrap().collect().unwrap();
+        (mm, ew, pd, rt.metrics().subtasks_spawned)
+    };
+    let (mm1, ew1, pd1, _) = run(1);
+    let (mm4, ew4, pd4, subs4) = run(4);
+    kernels::set_split_min(prev);
+    assert_eq!(mm1, mm4, "gemm split changed results");
+    assert_eq!(ew1, ew4, "fused elementwise split changed results");
+    assert_eq!(pd1, pd4, "pairwise distance split changed results");
+    assert!(subs4 > 0, "fat tasks never split (subtasks_spawned = 0)");
+}

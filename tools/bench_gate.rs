@@ -4,18 +4,21 @@
 //! `cargo bench --bench hotpath -- --json …`) against the committed
 //! baseline at the repository root and **fails (exit 1) when the median
 //! regression of any watched row group exceeds the threshold** (default
-//! 25%, groups `matmul`, `fused`, `load` — the rows the perf PRs optimize).
+//! 25%, groups `matmul`, `fused`, `load`, `kernel`, `split` — the rows the
+//! perf PRs optimize; `kernel` tracks the scalar-vs-SIMD micro-kernel rows
+//! and `split` the whole-block-vs-sub-task rows).
 //!
 //! Median-per-group, not worst-row, so one noisy timing on a shared CI
 //! runner cannot fail the gate by itself; the threshold absorbs the rest of
 //! the runner-to-runner variance. Rows present on only one side are
 //! reported but never gate (new benchmarks must not fail their own PR).
-//! An empty baseline (the committed seed, or a bench format change) passes
-//! vacuously — the push-to-main refresh step repopulates it.
+//! A baseline with no timed rows (the committed seed, or a bench format
+//! change) cannot gate anything: the run SKIPS with a loud warning instead
+//! of silently "passing" — the push-to-main refresh step repopulates it.
 //!
 //! Usage:
 //!   bench_gate --baseline ../BENCH_hotpath.json --current BENCH_hotpath.json \
-//!              [--max-regress 0.25] [--groups matmul,fused,load]
+//!              [--max-regress 0.25] [--groups matmul,fused,load,kernel,split]
 
 use std::collections::BTreeMap;
 
@@ -44,7 +47,7 @@ fn run() -> Result<bool> {
         .ok_or_else(|| anyhow!("--current <path> is required"))?;
     let max_regress = args.get_f64("max-regress", 0.25);
     let groups: Vec<String> = args
-        .get_str("groups", "matmul,fused,load")
+        .get_str("groups", "matmul,fused,load,kernel,split")
         .split(',')
         .map(|g| g.trim().to_string())
         .filter(|g| !g.is_empty())
@@ -55,8 +58,9 @@ fn run() -> Result<bool> {
 
     if baseline.is_empty() {
         println!(
-            "bench_gate: baseline {baseline_path} has no timed rows — vacuous pass \
-             (the next push to main commits a real baseline)"
+            "bench_gate: WARNING: baseline {baseline_path} has no baseline rows — gate skipped. \
+             Nothing was compared; this run verifies only that the current artifact parses. \
+             The next push to main commits a real baseline and re-arms the gate."
         );
         return Ok(true);
     }
