@@ -492,6 +492,46 @@ fn main() -> Result<()> {
         ),
     ));
 
+    // ---- Recovery: the same gemm with one worker crashed mid-run ----
+    // Wall time covers detection (a failed socket), the lineage walk, root
+    // re-loads from the coordinator journal, and replaying the lost
+    // sub-graph on the survivor. Gated as the `recovery` row group.
+    let crash_worker = |addr: &str| {
+        use rustdslib::tasking::wire::{self, Request};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        wire::write_request(&mut s, &Request::Crash).unwrap();
+        let _ = wire::read_response(&mut s);
+    };
+    let (mut rec_replays, mut rec_ms) = (0u64, 0u64);
+    let t_mm_recover = time(reps, || {
+        let w0 = spawn_worker();
+        let w1 = spawn_worker();
+        let rt2 = Runtime::cluster(
+            rustdslib::tasking::ClusterOptions::connect(vec![w0.clone(), w1])
+                .with_threads(workers),
+        )?;
+        let a = creation::from_matrix(&rt2, &mm, (64, 64))?;
+        let b = creation::from_matrix(&rt2, &mm, (64, 64))?;
+        rt2.barrier()?;
+        let c = a.matmul(&b)?;
+        // Half of every operand dies with this worker while gemm tasks are
+        // in flight; the barrier returns only after full re-materialization.
+        crash_worker(&w0);
+        c.runtime().barrier()?;
+        let met = rt2.metrics();
+        rec_replays = met.tasks_replayed;
+        rec_ms = met.recovery_ms;
+        Ok(())
+    })?;
+    rows.push((
+        "recovery kill-mid-gemm 256³ (2 workers)".into(),
+        t_mm_recover,
+        format!(
+            "{rec_replays} replays, {rec_ms} ms recorded, {:.2}x fault-free cluster",
+            t_mm_recover / t_mm_cluster.max(1e-12)
+        ),
+    ));
+
     // ---- Task-runtime overhead: empty tasks, one submit per task ----
     let t_serial = time(reps, || {
         let rt2 = Runtime::local(workers);

@@ -113,8 +113,9 @@ impl Series {
 /// (`tasks_fused`, `inplace_hits`, `bytes_allocated`), the out-of-core
 /// counters (`blocks_spilled`, `blocks_faulted`, `spill_bytes`), the
 /// cluster-backend counters (`bytes_on_wire`, `remote_transfers`,
-/// `locality_hits`), and the kernel-layer counters (`simd_kernel_hits`,
-/// `subtasks_spawned`).
+/// `locality_hits`), the kernel-layer counters (`simd_kernel_hits`,
+/// `subtasks_spawned`), and the fault-recovery counters (`workers_lost`,
+/// `blocks_recovered`, `tasks_replayed`, `recovery_ms`).
 pub fn metrics_json(m: &Metrics) -> String {
     let mut out = String::from("{");
     let _ = write!(out, "\"total_tasks\":{}", m.total_tasks());
@@ -136,6 +137,10 @@ pub fn metrics_json(m: &Metrics) -> String {
     let _ = write!(out, ",\"locality_hits\":{}", m.locality_hits);
     let _ = write!(out, ",\"simd_kernel_hits\":{}", m.simd_kernel_hits);
     let _ = write!(out, ",\"subtasks_spawned\":{}", m.subtasks_spawned);
+    let _ = write!(out, ",\"workers_lost\":{}", m.workers_lost);
+    let _ = write!(out, ",\"blocks_recovered\":{}", m.blocks_recovered);
+    let _ = write!(out, ",\"tasks_replayed\":{}", m.tasks_replayed);
+    let _ = write!(out, ",\"recovery_ms\":{}", m.recovery_ms);
     out.push_str(",\"tasks_by_op\":{");
     for (i, (k, v)) in m.tasks_by_op.iter().enumerate() {
         if i > 0 {
@@ -287,6 +292,7 @@ mod tests {
         m.record_locality(5, 2);
         m.simd_kernel_hits = 7;
         m.record_subtasks(4);
+        m.record_recovery(5, 3, 2);
         let s = metrics_json(&m);
         let v = crate::util::json::parse(&s).unwrap();
         assert_eq!(v.get("total_tasks").unwrap().as_usize(), Some(1));
@@ -304,6 +310,10 @@ mod tests {
         assert_eq!(v.get("locality_hits").unwrap().as_usize(), Some(5));
         assert_eq!(v.get("simd_kernel_hits").unwrap().as_usize(), Some(7));
         assert_eq!(v.get("subtasks_spawned").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("workers_lost").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("blocks_recovered").unwrap().as_usize(), Some(5));
+        assert_eq!(v.get("tasks_replayed").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("recovery_ms").unwrap().as_usize(), Some(2));
         assert_eq!(
             v.get("tasks_by_op").unwrap().get("op.a").unwrap().as_usize(),
             Some(1)

@@ -49,6 +49,12 @@ pub struct Config {
     /// Addresses of already-running `dsarray worker` processes
     /// (`--cluster-addr host:port,host:port`); empty means spawn.
     pub cluster_addrs: Vec<String>,
+    /// Lineage-based recovery of dead cluster workers (on by default;
+    /// `--no-recovery` restores the poison-on-death contract).
+    pub recovery: bool,
+    /// Copies of each block kept on distinct workers
+    /// (`--replicate-blocks k`, default 1 = no replication).
+    pub replicate_blocks: usize,
     /// Out-of-core resident-set budget for local execution; `None` keeps
     /// every block in memory (see `Runtime::local_with_budget`).
     pub memory_budget_bytes: Option<u64>,
@@ -75,6 +81,8 @@ impl Default for Config {
                 .unwrap_or(1),
             cluster_workers: 2,
             cluster_addrs: Vec::new(),
+            recovery: true,
+            replicate_blocks: 1,
             memory_budget_bytes: None,
             spill_dir: None,
             sim_cores: vec![48, 96, 192, 384, 768],
@@ -104,6 +112,12 @@ impl Config {
         }
         if let Some(v) = map.get("cluster_addr").and_then(|v| v.as_str()) {
             cfg.cluster_addrs = split_addrs(v);
+        }
+        if let Some(v) = map.get("recovery").and_then(|v| v.as_bool()) {
+            cfg.recovery = v;
+        }
+        if let Some(v) = map.get("replicate_blocks").and_then(|v| v.as_i64()) {
+            cfg.replicate_blocks = (v.max(1)) as usize;
         }
         if let Some(v) = map.get("seed").and_then(|v| v.as_i64()) {
             cfg.seed = v as u64;
@@ -163,6 +177,14 @@ impl Config {
         if let Some(v) = args.get("cluster-addr") {
             self.cluster_addrs = split_addrs(v);
         }
+        if args.flag("no-recovery") {
+            self.recovery = false;
+        }
+        if let Some(v) = args.get("replicate-blocks") {
+            if let Ok(k) = v.parse::<usize>() {
+                self.replicate_blocks = k.max(1);
+            }
+        }
         if let Some(v) = args.get("seed") {
             if let Ok(n) = v.parse() {
                 self.seed = n;
@@ -218,7 +240,10 @@ impl Config {
                 } else {
                     ClusterOptions::connect(self.cluster_addrs.clone())
                 };
-                opts = opts.with_threads(self.local_workers);
+                opts = opts
+                    .with_threads(self.local_workers)
+                    .with_recovery(self.recovery)
+                    .with_replication(self.replicate_blocks);
                 if let Some(b) = self.memory_budget_bytes {
                     // On the cluster backend the budget is per worker: each
                     // spawned worker spills to its own BlockStore past it.
@@ -338,6 +363,19 @@ mod tests {
             c.cluster_addrs,
             vec!["127.0.0.1:7401".to_string(), "127.0.0.1:7402".to_string()]
         );
+
+        // Recovery defaults on; --no-recovery and --replicate-blocks flow
+        // through to the cluster options.
+        assert!(c.recovery);
+        assert_eq!(c.replicate_blocks, 1);
+        let args = Args::parse(
+            ["--no-recovery", "--replicate-blocks", "3"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert!(!c.recovery);
+        assert_eq!(c.replicate_blocks, 3);
 
         let bad = Args::parse(["--backend", "mpi"].iter().map(|s| s.to_string()));
         assert!(Config::default().apply_args(&bad).is_err());

@@ -27,6 +27,17 @@
 //! most input bytes, and missing blocks move worker-to-worker. The
 //! [`cluster_guide`] module embeds `docs/CLUSTER.md`.
 //!
+//! Worker death is absorbed by **lineage-based fault recovery**: the
+//! single-assignment task graph doubles as a lineage log, so the
+//! coordinator replays a dead worker's lost sub-graph on survivors (roots
+//! re-load from an on-disk journal) and results stay bit-identical to a
+//! fault-free run; opt-in k-way replication
+//! ([`tasking::cluster::ClusterOptions::with_replication`]) trades put
+//! traffic for near-zero recovery time, and a deterministic seeded
+//! fault-injection harness ([`tasking::FaultPlan`]) makes every chaos
+//! scenario reproducible. The [`fault_tolerance_guide`] module embeds
+//! `docs/FAULT_TOLERANCE.md`.
+//!
 //! Per-block compute goes through the **kernel layer** ([`kernels`]):
 //! packed SIMD micro-kernels behind a vtable selected once per process by
 //! runtime CPU feature detection (portable scalar fallback, bit-identical
@@ -72,6 +83,14 @@ pub mod io_guide {}
 /// examples run under `cargo test --doc`).
 #[doc = include_str!("../../docs/CLUSTER.md")]
 pub mod cluster_guide {}
+
+/// Guide: lineage-based fault recovery in the cluster backend — the
+/// recovery walk, the root journal, k-way replication, what is and isn't
+/// survivable, and the deterministic fault-injection harness
+/// (`docs/FAULT_TOLERANCE.md`, embedded so its worker-killing example
+/// runs under `cargo test --doc`).
+#[doc = include_str!("../../docs/FAULT_TOLERANCE.md")]
+pub mod fault_tolerance_guide {}
 
 /// Guide: the SIMD kernel layer and intra-block parallelism — vtable
 /// dispatch, bit-identicality contract, sub-task splitting

@@ -10,7 +10,9 @@
 //!
 //! Global flags: --config <toml>, --cores a,b,c, --seed, --workers,
 //! --backend local|sim|cluster, --cluster-workers N,
-//! --cluster-addr host:port,…, and the sim.* overrides (see config.rs).
+//! --cluster-addr host:port,…, --no-recovery, --replicate-blocks k,
+//! and the sim.* overrides (see config.rs). The worker subcommand also
+//! takes --fault-plan <spec> (deterministic chaos, e.g. `die@7`).
 
 use anyhow::Result;
 
@@ -76,6 +78,12 @@ fn worker(args: &Args) -> Result<()> {
         listener,
         WorkerOptions {
             memory_budget_bytes: budget,
+            // Deterministic fault schedule from the chaos harness
+            // (`die@N` / `drop@N`, comma-separated).
+            fault_spec: args.get("fault-plan").map(|s| s.to_string()),
+            // Real worker daemons die for real: injected crashes exit the
+            // process, SIGKILL-style.
+            crash_exits: true,
         },
     )
 }

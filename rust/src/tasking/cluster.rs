@@ -31,32 +31,53 @@
 //! the placement worker), `remote_transfers` (inputs that crossed workers)
 //! and `bytes_on_wire` (every payload byte moved).
 //!
-//! ## Reclamation and failure
+//! ## Reclamation and fault recovery
 //!
 //! Refcount reclamation extends across the wire: when the graph proves a
 //! block dead it queues the id (the same `dead_files` channel the
 //! out-of-core store uses) and the coordinator sends `Free` to every worker
-//! holding a copy. A worker process dying mid-task surfaces as a poisoned
-//! task naming the worker address and the task name ("task \`x\` failed on
-//! cluster backend: worker 127.0.0.1:…") — never a hang: `wait` and
-//! `barrier` observe the poison exactly like a local task failure.
+//! holding a copy.
+//!
+//! A worker whose TCP conversation breaks is presumed **dead** and, by
+//! default, *recovered from* rather than fatal: the single-assignment task
+//! graph doubles as a lineage log, so the coordinator marks the dead
+//! worker's resident blocks lost, walks producers transitively until every
+//! replay input is held by a survivor or re-loadable from the coordinator's
+//! root journal, flips that sub-graph back to runnable, and re-queues the
+//! in-flight task — results stay bit-identical because the replayed
+//! closures are deterministic over bit-identical inputs. `wait` fetches
+//! retry against recovered locations instead of poisoning, and the replay's
+//! `pending_reads` re-increments defer refcount frees for blocks a replay
+//! may still need. Opt-in k-way replication
+//! ([`ClusterOptions::with_replication`]) turns recovery of replicated
+//! blocks into a location-table lookup. With recovery disabled
+//! ([`ClusterOptions::with_recovery`]`(false)` / `--no-recovery`), a death
+//! poisons the runtime with the worker address and the task name ("task
+//! \`x\` failed on cluster backend: worker 127.0.0.1:…") — never a hang —
+//! which is also the fate of genuinely unrecoverable losses (every worker
+//! dead). An application-level worker *error* (a live worker answering
+//! `Err`) is never treated as a death and always poisons.
 //!
 //! See `docs/CLUSTER.md` (rustdoc: `crate::cluster_guide`) for the frame
-//! format, placement policy, and runnable launch examples.
+//! format and placement policy, and `docs/FAULT_TOLERANCE.md` (rustdoc:
+//! `crate::fault_tolerance_guide`) for the failure model, the lineage walk
+//! and the deterministic fault-injection harness behind its tests.
 
-use std::collections::{HashMap, HashSet, VecDeque};
-use std::io::BufReader;
+use std::collections::{BTreeSet, HashMap, HashSet, VecDeque};
+use std::io::{BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::storage::{Block, BlockStore};
 
+use super::faults::{FaultKind, FaultState};
 use super::graph::{Graph, TaskState};
 use super::metrics::Metrics;
 use super::task::{DataId, TaskBody, TaskId, TaskInput, TaskSubmit};
@@ -94,6 +115,14 @@ pub struct ClusterOptions {
     /// Memory budget handed to each *spawned* worker
     /// (`--memory-budget-bytes`); over it, workers spill to disk.
     pub worker_budget_bytes: Option<u64>,
+    /// Survive worker death by lineage replay (the default). When `false`
+    /// (`--no-recovery`), a broken worker conversation poisons the runtime
+    /// with the worker address and task name, the pre-recovery contract.
+    pub recovery: bool,
+    /// Workers holding a copy of each block (`--replicate-blocks k`);
+    /// clamped to the live worker count. At `k >= 2` a single death usually
+    /// costs a location-table lookup instead of a replay. Default 1.
+    pub replicate: usize,
 }
 
 impl ClusterOptions {
@@ -106,6 +135,8 @@ impl ClusterOptions {
             threads: 2,
             transfer: TransferMode::Pull,
             worker_budget_bytes: None,
+            recovery: true,
+            replicate: 1,
         }
     }
 
@@ -119,6 +150,8 @@ impl ClusterOptions {
             threads: 2,
             transfer: TransferMode::Pull,
             worker_budget_bytes: None,
+            recovery: true,
+            replicate: 1,
         }
     }
 
@@ -139,6 +172,20 @@ impl ClusterOptions {
 
     pub fn with_program(mut self, p: PathBuf) -> Self {
         self.program = Some(p);
+        self
+    }
+
+    /// Enable/disable lineage-replay recovery of dead workers (on by
+    /// default; `false` restores the poison-on-death contract).
+    pub fn with_recovery(mut self, on: bool) -> Self {
+        self.recovery = on;
+        self
+    }
+
+    /// Store each block on `k` distinct workers so losing one is a
+    /// location-table lookup, not a replay. Clamped to the worker count.
+    pub fn with_replication(mut self, k: usize) -> Self {
+        self.replicate = k.max(1);
         self
     }
 }
@@ -182,6 +229,30 @@ struct ClState {
     pulling: HashSet<(DataId, usize)>,
     /// Round-robin pointer for blocks and tasks with no located inputs.
     rr: usize,
+    /// Bit `w` set while worker `w` is reachable. Cleared (forever) on the
+    /// first transport failure talking to it; placement, pulls, frees and
+    /// shutdown all skip dead workers.
+    alive: u64,
+}
+
+/// Why one worker interaction failed — the classification recovery hinges
+/// on. A broken TCP conversation means the *worker* is gone (its blocks
+/// died with it, lineage replay applies); an application-level error from a
+/// live worker is a real failure and must poison.
+enum ClusterFailure {
+    /// The transport to worker `w` broke (or a peer reported it
+    /// unreachable): presume the worker dead.
+    WorkerDown { w: usize, msg: String },
+    /// A live worker answered with an error, or the task itself failed.
+    Protocol { msg: String },
+}
+
+impl ClusterFailure {
+    fn msg(&self) -> &str {
+        match self {
+            ClusterFailure::WorkerDown { msg, .. } | ClusterFailure::Protocol { msg } => msg,
+        }
+    }
 }
 
 struct ClusterInner {
@@ -189,19 +260,37 @@ struct ClusterInner {
     cv: Condvar,
     conns: Vec<WorkerConn>,
     transfer: TransferMode,
+    /// Lineage-replay recovery on worker death (vs poison).
+    recovery: bool,
+    /// Distinct workers holding each block (>= 1).
+    replicate: usize,
+    /// Journal of root blocks (`put_block`, no producing task) kept on the
+    /// coordinator's own disk so a root whose every worker replica died can
+    /// be re-loaded — the "re-loadable from the store tier" leaf of the
+    /// lineage walk. `Some` iff recovery is enabled. Files are kept until
+    /// teardown even if the block's refcount dies: a later replay of a
+    /// completed consumer may still need them.
+    root_store: Option<BlockStore>,
 }
 
 impl ClusterInner {
-    /// Fetch one block's payload from worker `w`.
-    fn fetch_block(&self, w: usize, id: DataId) -> Result<(Block, u64)> {
-        let (resp, bytes) = self.conns[w].call(&Request::Get { id })?;
-        match resp {
-            Response::Block(b) => Ok((b, bytes)),
-            Response::Err(m) => bail!("worker {}: {m}", self.conns[w].addr),
-            other => bail!(
-                "worker {}: unexpected response {other:?} to Get",
-                self.conns[w].addr
-            ),
+    /// Fetch one block's payload from worker `w`, classifying the failure.
+    fn fetch_block(&self, w: usize, id: DataId) -> Result<(Block, u64), ClusterFailure> {
+        match self.conns[w].call(&Request::Get { id }) {
+            Ok((Response::Block(b), bytes)) => Ok((b, bytes)),
+            Ok((Response::Err(m), _)) => Err(ClusterFailure::Protocol {
+                msg: format!("worker {}: {m}", self.conns[w].addr),
+            }),
+            Ok((other, _)) => Err(ClusterFailure::Protocol {
+                msg: format!(
+                    "worker {}: unexpected response {other:?} to Get",
+                    self.conns[w].addr
+                ),
+            }),
+            Err(e) => Err(ClusterFailure::WorkerDown {
+                w,
+                msg: format!("worker {}: {e:#}", self.conns[w].addr),
+            }),
         }
     }
 
@@ -221,18 +310,38 @@ fn ensure_copies(copies: &mut Vec<u64>, id: DataId) {
     }
 }
 
-fn next_rr(st: &mut ClState, n: usize) -> usize {
-    let w = st.rr % n;
-    st.rr = st.rr.wrapping_add(1);
-    w
+/// All-workers-alive bitmask for an `n`-worker cluster (`n <= 64`).
+fn full_mask(n: usize) -> u64 {
+    if n >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
 }
 
-/// The placement policy, kept pure for unit testing: the worker holding the
-/// most input bytes wins (ties break toward the lowest index); `None` when
-/// no input is located anywhere (the caller round-robins).
-fn choose_placement(inputs: &[(u64, usize)], n_workers: usize) -> Option<usize> {
+/// Next *live* worker in round-robin order. The all-dead case poisons
+/// before any caller gets here, so at least one alive bit is set.
+fn next_rr(st: &mut ClState, n: usize) -> usize {
+    for _ in 0..n {
+        let w = st.rr % n;
+        st.rr = st.rr.wrapping_add(1);
+        if st.alive & (1u64 << w) != 0 {
+            return w;
+        }
+    }
+    st.rr % n
+}
+
+/// The placement policy, kept pure for unit testing: the *live* worker
+/// holding the most input bytes wins (ties break toward the lowest index);
+/// `None` when no input is located on any live worker (the caller
+/// round-robins over survivors).
+fn choose_placement(inputs: &[(u64, usize)], n_workers: usize, alive: u64) -> Option<usize> {
     let mut best: Option<(usize, usize)> = None;
     for w in 0..n_workers {
+        if alive & (1u64 << w) == 0 {
+            continue;
+        }
         let held: usize = inputs
             .iter()
             .filter(|(mask, _)| mask & (1u64 << w) != 0)
@@ -243,6 +352,141 @@ fn choose_placement(inputs: &[(u64, usize)], n_workers: usize) -> Option<usize> 
         }
     }
     best.map(|(w, _)| w)
+}
+
+/// Absorb a transport-level failure talking to worker `w` — the heart of
+/// lineage recovery, run under the central lock.
+///
+/// Marks the worker dead, drops it from the location table, and for every
+/// block that just lost its last replica walks the lineage: a `Done`
+/// producer is re-armed for replay (its unavailable inputs recursively
+/// likewise), a still-pending/running producer will re-produce the block on
+/// its own, and a producer-less root is covered by the coordinator's root
+/// journal. Re-armed tasks flow through the ordinary ready queue /
+/// `complete()` path; their `pending_reads` re-increments keep replay
+/// inputs from being refcount-freed mid-recovery.
+///
+/// Returns `Ok` when the death was absorbed (idempotently `Ok` for a
+/// worker already marked dead); `Err` when the runtime must poison —
+/// recovery disabled, no survivors, or an unrecoverable root.
+fn handle_worker_death(st: &mut ClState, w: usize, inner: &ClusterInner) -> Result<()> {
+    let bit = 1u64 << w;
+    if st.alive & bit == 0 {
+        return Ok(()); // already absorbed via another connection's failure
+    }
+    if !inner.recovery {
+        bail!(
+            "worker {} died and recovery is disabled",
+            inner.conns[w].addr
+        );
+    }
+    let t0 = Instant::now();
+    st.alive &= !bit;
+    if st.alive == 0 {
+        // Nothing to replay onto. Count the loss, then poison.
+        st.metrics.record_recovery(0, 0, 1);
+        bail!(
+            "worker {} died and no workers survive",
+            inner.conns[w].addr
+        );
+    }
+    // Drop the dead worker from the location table; blocks whose only
+    // replica it held are lost (a replicated block shrugs the death off —
+    // survivors still serve it).
+    let mut lost: Vec<DataId> = Vec::new();
+    for (id, mask) in st.copies.iter_mut().enumerate() {
+        if *mask & bit != 0 {
+            *mask &= !bit;
+            if *mask == 0 {
+                lost.push(id as DataId);
+            }
+        }
+    }
+    // Migrations onto the dead worker will never commit; clear the markers
+    // so survivors re-pull instead of deferring to a doomed transfer.
+    st.pulling.retain(|&(_, dest)| dest != w);
+
+    // Lineage walk: find the completed producers to replay, transitively,
+    // until every replay input is held by a survivor, resident on the
+    // coordinator, or journaled in the root store.
+    let live_lost: Vec<DataId> = lost
+        .iter()
+        .copied()
+        .filter(|&id| !st.graph.data[id as usize].evicted)
+        .collect();
+    let mut queue: Vec<DataId> = live_lost.clone();
+    let mut visited: HashSet<DataId> = queue.iter().copied().collect();
+    // BTreeSet: ascending TaskId is topological order (tasks only read
+    // earlier ids), which the re-arm pass below depends on.
+    let mut replay: BTreeSet<TaskId> = BTreeSet::new();
+    while let Some(id) = queue.pop() {
+        let d = &st.graph.data[id as usize];
+        if d.value.is_some() || st.copies.get(id as usize).copied().unwrap_or(0) != 0 {
+            continue; // still available somewhere
+        }
+        match d.producer {
+            None => {
+                if inner.root_store.is_none() {
+                    bail!(
+                        "block {id} lost with worker {} has no producing task to replay",
+                        inner.conns[w].addr
+                    );
+                }
+                // Root: re-loadable from the coordinator's journal.
+            }
+            Some(p) => {
+                if st.graph.tasks[p as usize].state == TaskState::Done && replay.insert(p) {
+                    let reads: Vec<DataId> =
+                        st.graph.tasks[p as usize].spec.reads.to_vec();
+                    for r in reads {
+                        if visited.insert(r) {
+                            queue.push(r);
+                        }
+                    }
+                }
+                // A producer that is still pending/running/ready will
+                // (re-)produce this block through the normal path.
+            }
+        }
+    }
+
+    // Re-arm the replay sub-graph in topological order: recompute each
+    // task's readiness against the post-death world and re-register the
+    // dependency edges `complete()` will re-consume. The `pending_reads`
+    // increments are the deferred frees — replay inputs stay alive until
+    // the replayed task completes again.
+    for &tid in &replay {
+        let reads: Vec<DataId> = st.graph.tasks[tid as usize].spec.reads.to_vec();
+        let mut deps = 0u32;
+        for &r in &reads {
+            st.graph.data[r as usize].pending_reads += 1;
+            let d = &st.graph.data[r as usize];
+            let available = d.value.is_some()
+                || st.copies.get(r as usize).copied().unwrap_or(0) != 0
+                || (d.producer.is_none() && inner.root_store.is_some());
+            if available {
+                continue;
+            }
+            if let Some(p) = d.producer {
+                if st.graph.tasks[p as usize].state != TaskState::Done {
+                    deps += 1;
+                    st.graph.tasks[p as usize].dependents.push(tid);
+                }
+            }
+        }
+        let node = &mut st.graph.tasks[tid as usize];
+        node.deps_remaining = deps;
+        if deps == 0 {
+            node.state = TaskState::Ready;
+            st.ready.push_back(tid);
+        } else {
+            node.state = TaskState::Pending;
+        }
+    }
+    let ms = ((t0.elapsed().as_micros() as u64) + 999) / 1000;
+    st.metrics
+        .record_recovery(live_lost.len() as u64, replay.len() as u64, ms.max(1));
+    Ok(())
 }
 
 /// Collect remote frees for every block the graph just declared dead,
@@ -274,6 +518,9 @@ fn drain_frees(st: &mut ClState, n_workers: usize) -> Vec<(usize, Vec<u32>)> {
 enum Source {
     /// Rare: a value still resident in the coordinator table.
     Local(Arc<Block>),
+    /// Re-load a root block from the coordinator's journal (its every
+    /// worker replica died).
+    Root,
     /// Fetch from worker `serve`; `pull_from` first migrates the block
     /// worker-to-worker from that peer onto `serve`.
     Remote { serve: usize, pull_from: Option<usize> },
@@ -292,18 +539,24 @@ struct ExecPlan {
     reads: Vec<DataId>,
     out_ids: Vec<DataId>,
     placement: usize,
+    /// Further live workers mirroring the outputs (k-way replication).
+    replicas: Vec<usize>,
     fetches: Vec<FetchPlan>,
 }
 
 /// Claim-time planning under the central lock: verify every input is
-/// locatable, choose the placement worker, count locality hits/misses, and
-/// register in-flight pulls.
+/// resolvable, choose the placement worker among survivors, count locality
+/// hits/misses, and register in-flight pulls. Returns `Ok(None)` when the
+/// task must *park* — an input's every replica died and its producer is
+/// mid-replay, so the task re-pends on that producer and re-readies
+/// through the ordinary dependency path when the replay completes.
 fn build_plan(
     st: &mut ClState,
     tid: TaskId,
     transfer: TransferMode,
-    n_workers: usize,
-) -> Result<ExecPlan> {
+    inner: &ClusterInner,
+) -> Result<Option<ExecPlan>> {
+    let n_workers = inner.conns.len();
     let spec = &st.graph.tasks[tid as usize].spec;
     let name = spec.name;
     let body = spec.body.clone();
@@ -319,87 +572,179 @@ fn build_plan(
             uniq.push(r);
         }
     }
-    // (location mask, payload bytes, coordinator-resident value) per input.
-    // Readiness guarantees every input is materialized somewhere; a hole is
-    // a real error and must poison the runtime, not run with empty inputs.
-    let mut infos: Vec<(u64, usize, Option<Arc<Block>>)> = Vec::with_capacity(uniq.len());
+    // Resolution per input. Readiness guarantees every input was
+    // materialized *at some point*; a hole that neither a survivor, the
+    // root journal, nor an in-flight replay covers is a real error and
+    // must poison the runtime, not run with empty inputs.
+    enum Resolve {
+        Local(Arc<Block>),
+        Root,
+        Located { mask: u64, bytes: usize },
+        Park,
+    }
+    let mut infos: Vec<Resolve> = Vec::with_capacity(uniq.len());
+    let mut parked: Vec<TaskId> = Vec::new();
     for &r in &uniq {
         let d = &st.graph.data[r as usize];
-        let local = d.value.as_ref().map(Arc::clone);
-        let mask = st.copies.get(r as usize).copied().unwrap_or(0);
-        if local.is_none() && (!d.spilled || mask == 0) {
-            bail!("input {r} unresolved for ready task (no worker holds it)");
+        if let Some(v) = &d.value {
+            infos.push(Resolve::Local(Arc::clone(v)));
+            continue;
         }
-        infos.push((mask, d.meta.bytes(), local));
+        let mask = st.copies.get(r as usize).copied().unwrap_or(0);
+        if mask != 0 {
+            infos.push(Resolve::Located {
+                mask,
+                bytes: d.meta.bytes(),
+            });
+            continue;
+        }
+        // No replica anywhere: recoverable only via replay or the journal.
+        match d.producer {
+            Some(p)
+                if inner.recovery
+                    && st.graph.tasks[p as usize].state != TaskState::Done =>
+            {
+                parked.push(p);
+                infos.push(Resolve::Park);
+            }
+            None if inner.recovery && inner.root_store.is_some() => {
+                infos.push(Resolve::Root);
+            }
+            _ => bail!("input {r} unresolved for ready task (no worker holds it)"),
+        }
     }
+    if !parked.is_empty() {
+        // Park: one dependency edge per lost input occurrence; each is
+        // balanced by the producer's next `complete()`.
+        let deps = parked.len() as u32;
+        for p in parked {
+            st.graph.tasks[p as usize].dependents.push(tid);
+        }
+        let node = &mut st.graph.tasks[tid as usize];
+        node.deps_remaining = deps;
+        node.state = TaskState::Pending;
+        return Ok(None);
+    }
+
     let weighted: Vec<(u64, usize)> = infos
         .iter()
-        .filter(|(mask, _, local)| local.is_none() && *mask != 0)
-        .map(|(mask, bytes, _)| (*mask, *bytes))
+        .filter_map(|r| match r {
+            Resolve::Located { mask, bytes } => Some((*mask, *bytes)),
+            _ => None,
+        })
         .collect();
-    let placement = match choose_placement(&weighted, n_workers) {
+    let placement = match choose_placement(&weighted, n_workers, st.alive) {
         Some(w) => w,
         None => next_rr(st, n_workers),
     };
     let bit = 1u64 << placement;
+    // k-way replication: the lowest-indexed other live workers mirror the
+    // outputs (deterministic given the same survivor set).
+    let k = inner.replicate.min(st.alive.count_ones() as usize).max(1);
+    let mut replicas: Vec<usize> = Vec::new();
+    for w in 0..n_workers {
+        if replicas.len() + 1 >= k {
+            break;
+        }
+        if w != placement && st.alive & (1u64 << w) != 0 {
+            replicas.push(w);
+        }
+    }
 
     let mut hits = 0u64;
     let mut transfers = 0u64;
     let mut fetches = Vec::with_capacity(uniq.len());
-    for (&id, (mask, _, local)) in uniq.iter().zip(&infos) {
-        let source = if let Some(v) = local {
-            hits += 1;
-            Source::Local(Arc::clone(v))
-        } else if mask & bit != 0 {
-            hits += 1;
-            Source::Remote {
-                serve: placement,
-                pull_from: None,
+    for (&id, info) in uniq.iter().zip(&infos) {
+        let source = match info {
+            Resolve::Local(v) => {
+                hits += 1;
+                Source::Local(Arc::clone(v))
             }
-        } else {
-            transfers += 1;
-            let src = mask.trailing_zeros() as usize;
-            if transfer == TransferMode::Pull && !st.pulling.contains(&(id, placement)) {
-                st.pulling.insert((id, placement));
-                Source::Remote {
-                    serve: placement,
-                    pull_from: Some(src),
-                }
-            } else {
-                // Relay mode, or the same migration is already in flight:
-                // read from a stable holder.
-                Source::Remote {
-                    serve: src,
-                    pull_from: None,
+            // A journal reload costs disk I/O, not wire traffic.
+            Resolve::Root => {
+                hits += 1;
+                Source::Root
+            }
+            Resolve::Park => unreachable!("parked plans returned above"),
+            Resolve::Located { mask, .. } => {
+                if mask & bit != 0 {
+                    hits += 1;
+                    Source::Remote {
+                        serve: placement,
+                        pull_from: None,
+                    }
+                } else {
+                    transfers += 1;
+                    let src = mask.trailing_zeros() as usize;
+                    if transfer == TransferMode::Pull
+                        && !st.pulling.contains(&(id, placement))
+                    {
+                        st.pulling.insert((id, placement));
+                        Source::Remote {
+                            serve: placement,
+                            pull_from: Some(src),
+                        }
+                    } else {
+                        // Relay mode, or the same migration is already in
+                        // flight: read from a stable holder.
+                        Source::Remote {
+                            serve: src,
+                            pull_from: None,
+                        }
+                    }
                 }
             }
         };
         fetches.push(FetchPlan { id, source });
     }
     st.metrics.record_locality(hits, transfers);
-    Ok(ExecPlan {
+    Ok(Some(ExecPlan {
         tid,
         name,
         body,
         reads,
         out_ids,
         placement,
+        replicas,
         fetches,
-    })
+    }))
 }
 
 /// Run one planned task off-lock: transfers, closure, output push, publish.
+/// Transport failures classify as [`ClusterFailure::WorkerDown`] and route
+/// through [`handle_worker_death`] + requeue instead of poisoning.
 fn execute_plan(inner: &Arc<ClusterInner>, plan: ExecPlan) {
     let mut wire_bytes = 0u64;
     let mut pulled: Vec<(DataId, usize)> = Vec::new();
     let mut cache: HashMap<DataId, Arc<Block>> = HashMap::new();
-    let mut failure: Option<String> = None;
+    let mut failure: Option<ClusterFailure> = None;
 
     // ---- Input transfers ----
     for f in &plan.fetches {
         match &f.source {
             Source::Local(b) => {
                 cache.insert(f.id, Arc::clone(b));
+            }
+            Source::Root => {
+                // Every worker replica of this root died; re-load it from
+                // the coordinator's journal (disk, not wire).
+                let store = inner
+                    .root_store
+                    .as_ref()
+                    .expect("Source::Root is only planned with a root store");
+                match store.fault(f.id) {
+                    Ok(b) => {
+                        cache.insert(f.id, Arc::new(b));
+                    }
+                    Err(e) => {
+                        failure = Some(ClusterFailure::Protocol {
+                            msg: format!("root journal reload of block {}: {e:#}", f.id),
+                        });
+                    }
+                }
+                if failure.is_some() {
+                    break;
+                }
             }
             Source::Remote { serve, pull_from } => {
                 if let Some(src) = pull_from {
@@ -412,21 +757,41 @@ fn execute_plan(inner: &Arc<ClusterInner>, plan: ExecPlan) {
                             wire_bytes += io + bytes;
                             pulled.push((f.id, *serve));
                         }
+                        // The *peer* being pulled from is unreachable: the
+                        // responding worker is healthy, its source is dead.
+                        Ok((Response::PullPeerDown(m), io)) => {
+                            wire_bytes += io;
+                            failure = Some(ClusterFailure::WorkerDown {
+                                w: *src,
+                                msg: format!(
+                                    "pull peer {}: {m}",
+                                    inner.conns[*src].addr
+                                ),
+                            });
+                        }
                         Ok((Response::Err(m), io)) => {
                             wire_bytes += io;
-                            failure =
-                                Some(format!("worker {}: {m}", inner.conns[*serve].addr));
+                            failure = Some(ClusterFailure::Protocol {
+                                msg: format!("worker {}: {m}", inner.conns[*serve].addr),
+                            });
                         }
                         Ok((other, io)) => {
                             wire_bytes += io;
-                            failure = Some(format!(
-                                "worker {}: unexpected response {other:?} to Pull",
-                                inner.conns[*serve].addr
-                            ));
+                            failure = Some(ClusterFailure::Protocol {
+                                msg: format!(
+                                    "worker {}: unexpected response {other:?} to Pull",
+                                    inner.conns[*serve].addr
+                                ),
+                            });
                         }
                         Err(e) => {
-                            failure =
-                                Some(format!("worker {}: {e:#}", inner.conns[*serve].addr))
+                            failure = Some(ClusterFailure::WorkerDown {
+                                w: *serve,
+                                msg: format!(
+                                    "worker {}: {e:#}",
+                                    inner.conns[*serve].addr
+                                ),
+                            });
                         }
                     }
                     if failure.is_some() {
@@ -438,7 +803,7 @@ fn execute_plan(inner: &Arc<ClusterInner>, plan: ExecPlan) {
                         wire_bytes += io;
                         cache.insert(f.id, Arc::new(b));
                     }
-                    Err(e) => failure = Some(format!("{e:#}")),
+                    Err(e) => failure = Some(e),
                 }
                 if failure.is_some() {
                     break;
@@ -447,50 +812,57 @@ fn execute_plan(inner: &Arc<ClusterInner>, plan: ExecPlan) {
         }
     }
 
-    // ---- Run the closure ----
-    let result: Result<Vec<Block>> = match failure {
-        Some(msg) => Err(anyhow!(msg)),
-        None => match &plan.body {
-            TaskBody::Shared(func) => {
-                let ins: Vec<Arc<Block>> = plan
-                    .reads
-                    .iter()
-                    .map(|r| Arc::clone(cache.get(r).expect("every read was fetched")))
-                    .collect();
-                func(&ins)
-            }
-            // No exclusive grants on the cluster backend: the fetched copy
-            // is already private to this task, and the authoritative value
-            // lives on a worker.
-            TaskBody::Owned(func) => {
-                let ins: Vec<TaskInput> = plan
-                    .reads
-                    .iter()
-                    .map(|r| {
-                        TaskInput::Shared(Arc::clone(
-                            cache.get(r).expect("every read was fetched"),
-                        ))
-                    })
-                    .collect();
-                func(ins)
-            }
-        },
+    // ---- Run the closure, then push outputs to placement + replicas ----
+    let outcome: Result<(), ClusterFailure> = match failure {
+        Some(f) => Err(f),
+        None => {
+            let result: Result<Vec<Block>> = match &plan.body {
+                TaskBody::Shared(func) => {
+                    let ins: Vec<Arc<Block>> = plan
+                        .reads
+                        .iter()
+                        .map(|r| Arc::clone(cache.get(r).expect("every read was fetched")))
+                        .collect();
+                    func(&ins)
+                }
+                // No exclusive grants on the cluster backend: the fetched
+                // copy is already private to this task, and the
+                // authoritative value lives on a worker.
+                TaskBody::Owned(func) => {
+                    let ins: Vec<TaskInput> = plan
+                        .reads
+                        .iter()
+                        .map(|r| {
+                            TaskInput::Shared(Arc::clone(
+                                cache.get(r).expect("every read was fetched"),
+                            ))
+                        })
+                        .collect();
+                    func(ins)
+                }
+            };
+            drop(cache);
+            let mut targets = Vec::with_capacity(1 + plan.replicas.len());
+            targets.push(plan.placement);
+            targets.extend_from_slice(&plan.replicas);
+            push_outputs(inner, &targets, &plan.out_ids, result, &mut wire_bytes)
+        }
     };
-    drop(cache);
-
-    // ---- Push outputs to the placement worker ----
-    let outcome = push_outputs(inner, plan.placement, &plan.out_ids, result, &mut wire_bytes);
 
     // ---- Publish under the central lock ----
     let frees = {
         let mut guard = inner.state.lock().unwrap();
         let st = &mut *guard;
         st.running -= 1;
-        // Commit completed migrations to the location table and clear every
-        // in-flight marker this plan registered (performed or not).
+        // Commit completed migrations to the location table (only onto
+        // workers still alive — a concurrent death marking must not be
+        // resurrected by a stale success) and clear every in-flight marker
+        // this plan registered (performed or not).
         for &(id, w) in &pulled {
-            ensure_copies(&mut st.copies, id);
-            st.copies[id as usize] |= 1u64 << w;
+            if st.alive & (1u64 << w) != 0 {
+                ensure_copies(&mut st.copies, id);
+                st.copies[id as usize] |= 1u64 << w;
+            }
         }
         for f in &plan.fetches {
             if let Source::Remote {
@@ -503,14 +875,26 @@ fn execute_plan(inner: &Arc<ClusterInner>, plan: ExecPlan) {
         }
         st.metrics.record_wire(wire_bytes);
         match outcome {
+            // The placement worker died between our pushes and this
+            // publish: the outputs went down with it, so requeue instead
+            // of completing with phantom locations.
+            Ok(()) if st.alive & (1u64 << plan.placement) == 0 => {
+                st.graph.tasks[plan.tid as usize].state = TaskState::Ready;
+                st.ready.push_back(plan.tid);
+            }
             Ok(()) => {
-                let bit = 1u64 << plan.placement;
+                let mut bits = 1u64 << plan.placement;
+                for &r in &plan.replicas {
+                    if st.alive & (1u64 << r) != 0 {
+                        bits |= 1u64 << r;
+                    }
+                }
                 for &o in &plan.out_ids {
                     let d = &mut st.graph.data[o as usize];
                     d.spilled = true;
                     d.on_disk = true;
                     ensure_copies(&mut st.copies, o);
-                    st.copies[o as usize] = bit;
+                    st.copies[o as usize] = bits;
                     st.graph.touch(o);
                 }
                 let done = st.graph.complete(plan.tid, None);
@@ -528,7 +912,25 @@ fn execute_plan(inner: &Arc<ClusterInner>, plan: ExecPlan) {
                     st.ready.push_back(dep);
                 }
             }
-            Err(msg) => {
+            Err(ClusterFailure::WorkerDown { w, msg }) => {
+                match handle_worker_death(st, w, inner) {
+                    // Recovery absorbed the death: the lost sub-graph is
+                    // re-armed, so requeue this task — its inputs resolve
+                    // against survivors (or park on the replay) next plan.
+                    Ok(()) => {
+                        st.graph.tasks[plan.tid as usize].state = TaskState::Ready;
+                        st.ready.push_back(plan.tid);
+                    }
+                    Err(e) => {
+                        st.graph.tasks[plan.tid as usize].state = TaskState::Failed;
+                        st.error.get_or_insert(format!(
+                            "task `{}` failed on cluster backend: {msg} ({e:#})",
+                            plan.name
+                        ));
+                    }
+                }
+            }
+            Err(ClusterFailure::Protocol { msg }) => {
                 st.graph.tasks[plan.tid as usize].state = TaskState::Failed;
                 st.error.get_or_insert(format!(
                     "task `{}` failed on cluster backend: {msg}",
@@ -542,43 +944,65 @@ fn execute_plan(inner: &Arc<ClusterInner>, plan: ExecPlan) {
     inner.cv.notify_all();
 }
 
-/// Validate a task's result and `Put` each output on the placement worker.
-/// Errors carry the worker address (the poison message the kill-a-worker
-/// contract requires).
+/// Validate a task's result and `Put` each output on every target worker
+/// (placement first, then replicas). Protocol errors carry the worker
+/// address (the poison message the kill-a-worker contract requires);
+/// transport errors classify the target as down so the caller can recover
+/// and requeue.
 fn push_outputs(
     inner: &ClusterInner,
-    placement: usize,
+    targets: &[usize],
     out_ids: &[DataId],
     result: Result<Vec<Block>>,
     wire_bytes: &mut u64,
-) -> Result<(), String> {
+) -> Result<(), ClusterFailure> {
     let outs = match result {
         Ok(o) => o,
-        Err(e) => return Err(format!("{e:#}")),
+        Err(e) => {
+            return Err(ClusterFailure::Protocol {
+                msg: format!("{e:#}"),
+            })
+        }
     };
     if outs.len() != out_ids.len() {
-        return Err(format!(
-            "returned {} outputs, declared {}",
-            outs.len(),
-            out_ids.len()
-        ));
+        return Err(ClusterFailure::Protocol {
+            msg: format!("returned {} outputs, declared {}", outs.len(), out_ids.len()),
+        });
     }
-    let conn = &inner.conns[placement];
     for (&id, block) in out_ids.iter().zip(outs) {
-        match conn.call(&Request::Put { id, block }) {
-            Ok((Response::Ok, io)) => *wire_bytes += io,
-            Ok((Response::Err(m), io)) => {
-                *wire_bytes += io;
-                return Err(format!("worker {}: {m}", conn.addr));
+        let mut block = Some(block);
+        for (i, &t) in targets.iter().enumerate() {
+            let conn = &inner.conns[t];
+            // The last target consumes the block; earlier ones get clones.
+            let payload = if i + 1 == targets.len() {
+                block.take().expect("one consume per output")
+            } else {
+                block.as_ref().expect("clone precedes consume").clone()
+            };
+            match conn.call(&Request::Put { id, block: payload }) {
+                Ok((Response::Ok, io)) => *wire_bytes += io,
+                Ok((Response::Err(m), io)) => {
+                    *wire_bytes += io;
+                    return Err(ClusterFailure::Protocol {
+                        msg: format!("worker {}: {m}", conn.addr),
+                    });
+                }
+                Ok((other, io)) => {
+                    *wire_bytes += io;
+                    return Err(ClusterFailure::Protocol {
+                        msg: format!(
+                            "worker {}: unexpected response {other:?} to Put",
+                            conn.addr
+                        ),
+                    });
+                }
+                Err(e) => {
+                    return Err(ClusterFailure::WorkerDown {
+                        w: t,
+                        msg: format!("worker {}: {e:#}", conn.addr),
+                    })
+                }
             }
-            Ok((other, io)) => {
-                *wire_bytes += io;
-                return Err(format!(
-                    "worker {}: unexpected response {other:?} to Put",
-                    conn.addr
-                ));
-            }
-            Err(e) => return Err(format!("worker {}: {e:#}", conn.addr)),
         }
     }
     Ok(())
@@ -607,8 +1031,14 @@ fn cluster_exec_loop(inner: Arc<ClusterInner>) {
             let st = &mut *guard;
             st.graph.tasks[tid as usize].state = TaskState::Running;
             st.running += 1;
-            match build_plan(st, tid, inner.transfer, inner.conns.len()) {
-                Ok(p) => Ok(p),
+            match build_plan(st, tid, inner.transfer, &inner) {
+                Ok(Some(p)) => Ok(Some(p)),
+                // Parked: the task re-pended on a replaying producer and
+                // will re-ready through the dependency path.
+                Ok(None) => {
+                    st.running -= 1;
+                    Ok(None)
+                }
                 Err(e) => {
                     let name = st.graph.tasks[tid as usize].spec.name;
                     st.graph.tasks[tid as usize].state = TaskState::Failed;
@@ -620,8 +1050,8 @@ fn cluster_exec_loop(inner: Arc<ClusterInner>) {
             }
         };
         match plan {
-            Ok(p) => execute_plan(&inner, p),
-            Err(()) => inner.cv.notify_all(),
+            Ok(Some(p)) => execute_plan(&inner, p),
+            Ok(None) | Err(()) => inner.cv.notify_all(),
         }
     }
 }
@@ -641,6 +1071,13 @@ pub struct ClusterExecutor {
 impl ClusterExecutor {
     pub fn new(opts: ClusterOptions) -> Result<Self> {
         let owned_from = opts.addrs.len();
+        // Created before any worker spawns so a journal failure can't leak
+        // child processes.
+        let root_store = if opts.recovery {
+            Some(BlockStore::in_temp().context("creating root-block journal")?)
+        } else {
+            None
+        };
         let mut children = Vec::new();
         let conns = match Self::boot(&opts, &mut children) {
             Ok(c) => c,
@@ -654,6 +1091,7 @@ impl ClusterExecutor {
             }
         };
 
+        let alive = full_mask(conns.len());
         let inner = Arc::new(ClusterInner {
             state: Mutex::new(ClState {
                 graph: Graph::default(),
@@ -665,10 +1103,14 @@ impl ClusterExecutor {
                 copies: Vec::new(),
                 pulling: HashSet::new(),
                 rr: 0,
+                alive,
             }),
             cv: Condvar::new(),
             conns,
             transfer: opts.transfer,
+            recovery: opts.recovery,
+            replicate: opts.replicate.max(1),
+            root_store,
         });
         let threads = (0..opts.threads.max(1))
             .map(|_| {
@@ -741,43 +1183,99 @@ impl Executor for ClusterExecutor {
 
     fn put_block(&self, block: Block) -> DataId {
         let meta = block.meta();
-        let (id, w) = {
+        let (id, targets) = {
             let mut guard = self.inner.state.lock().unwrap();
             let st = &mut *guard;
             let id = st.graph.put_block(meta, None);
             ensure_copies(&mut st.copies, id);
-            let w = next_rr(st, self.inner.conns.len());
-            (id, w)
+            // k distinct live targets, round-robin so roots stay spread.
+            let k = self
+                .inner
+                .replicate
+                .min(st.alive.count_ones() as usize)
+                .max(1);
+            let mut targets: Vec<usize> = Vec::with_capacity(k);
+            while targets.len() < k {
+                let w = next_rr(st, self.inner.conns.len());
+                if !targets.contains(&w) {
+                    targets.push(w);
+                }
+            }
+            (id, targets)
         };
-        // The id is not visible to any submitter until we return, so the
-        // push can run outside the lock without racing a reader.
-        match self.inner.conns[w].call(&Request::Put { id, block }) {
-            Ok((Response::Ok, bytes)) => {
+        // Roots have no producing task to replay, so journal them to the
+        // coordinator's local store first — recovery's last line when every
+        // worker replica dies. Journal files persist until teardown: a root
+        // evicted from workers before a death may still anchor a later
+        // replay.
+        if let Some(store) = &self.inner.root_store {
+            if let Err(e) = store.spill(id, &block) {
                 let mut st = self.inner.state.lock().unwrap();
-                let d = &mut st.graph.data[id as usize];
+                st.error
+                    .get_or_insert(format!("put_block({id}) root journal: {e:#}"));
+                return id;
+            }
+        }
+        // The id is not visible to any submitter until we return, so the
+        // pushes can run outside the lock without racing a reader.
+        let mut block = Some(block);
+        let mut placed = 0u64;
+        let mut wire = 0u64;
+        for (i, &w) in targets.iter().enumerate() {
+            let payload = if i + 1 == targets.len() {
+                block.take().expect("one consume per put")
+            } else {
+                block.as_ref().expect("clone precedes consume").clone()
+            };
+            match self.inner.conns[w].call(&Request::Put { id, block: payload }) {
+                Ok((Response::Ok, bytes)) => {
+                    wire += bytes;
+                    placed |= 1u64 << w;
+                }
+                Ok((other, _)) => {
+                    let msg = match other {
+                        Response::Err(m) => m,
+                        o => format!("unexpected response {o:?} to Put"),
+                    };
+                    let mut st = self.inner.state.lock().unwrap();
+                    st.error.get_or_insert(format!(
+                        "put_block({id}) on worker {}: {msg}",
+                        self.inner.conns[w].addr
+                    ));
+                    return id;
+                }
+                Err(e) => {
+                    // Transport failure: the target died. With recovery the
+                    // journal already covers this root, so absorb the death
+                    // and move on; without it, poison with the old message.
+                    let mut st = self.inner.state.lock().unwrap();
+                    match handle_worker_death(&mut st, w, &self.inner) {
+                        Ok(()) => continue,
+                        Err(death) => {
+                            st.error.get_or_insert(format!(
+                                "put_block({id}) on worker {}: {e:#} ({death:#})",
+                                self.inner.conns[w].addr
+                            ));
+                            return id;
+                        }
+                    }
+                }
+            }
+        }
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            placed &= st.alive;
+            let d = &mut st.graph.data[id as usize];
+            if placed != 0 {
                 d.spilled = true;
                 d.on_disk = true;
-                st.copies[id as usize] = 1u64 << w;
-                st.metrics.record_wire(bytes);
+            } else if self.inner.root_store.is_some() {
+                // Every target died mid-put; the journal alone holds it.
+                d.spilled = true;
+                d.on_disk = true;
             }
-            Ok((other, _)) => {
-                let msg = match other {
-                    Response::Err(m) => m,
-                    o => format!("unexpected response {o:?} to Put"),
-                };
-                let mut st = self.inner.state.lock().unwrap();
-                st.error.get_or_insert(format!(
-                    "put_block({id}) on worker {}: {msg}",
-                    self.inner.conns[w].addr
-                ));
-            }
-            Err(e) => {
-                let mut st = self.inner.state.lock().unwrap();
-                st.error.get_or_insert(format!(
-                    "put_block({id}) on worker {}: {e:#}",
-                    self.inner.conns[w].addr
-                ));
-            }
+            st.copies[id as usize] = placed;
+            st.metrics.record_wire(wire);
         }
         id
     }
@@ -819,55 +1317,129 @@ impl Executor for ClusterExecutor {
     }
 
     fn wait(&self, id: DataId) -> Result<Arc<Block>> {
+        // What the off-lock half of each retry round does.
+        enum Plan {
+            Fetch(usize),
+            Root,
+        }
         // Find a holder under the lock; fetch outside it (fetch-on-demand:
         // the value is returned to the caller, never re-installed in the
         // coordinator table — collect() streams through bounded memory).
-        let serve = {
-            let mut st = self.inner.state.lock().unwrap();
-            loop {
-                if let Some(err) = &st.error {
-                    bail!("runtime poisoned by task failure: {err}");
-                }
-                let d = &st.graph.data[id as usize];
-                if let Some(v) = &d.value {
-                    let v = Arc::clone(v);
-                    st.graph.touch(id);
-                    return Ok(v);
-                }
-                if d.spilled {
-                    let mask = st.copies.get(id as usize).copied().unwrap_or(0);
-                    if mask == 0 {
+        // A fetch that hits a dying worker routes through recovery and
+        // retries against the replayed locations instead of poisoning.
+        loop {
+            let plan = {
+                let mut st = self.inner.state.lock().unwrap();
+                loop {
+                    if let Some(err) = &st.error {
+                        bail!("runtime poisoned by task failure: {err}");
+                    }
+                    let d = &st.graph.data[id as usize];
+                    if let Some(v) = &d.value {
+                        let v = Arc::clone(v);
+                        st.graph.touch(id);
+                        return Ok(v);
+                    }
+                    if d.spilled {
+                        let mask = st.copies.get(id as usize).copied().unwrap_or(0);
+                        if mask != 0 {
+                            break Plan::Fetch(mask.trailing_zeros() as usize);
+                        }
+                        // Every replica died. Roots reload from the
+                        // journal; produced blocks wait for their replay
+                        // (re-armed by the death handler) to land.
+                        if self.inner.recovery {
+                            match d.producer {
+                                None if self.inner.root_store.is_some() => {
+                                    break Plan::Root;
+                                }
+                                Some(p)
+                                    if st.graph.tasks[p as usize].state
+                                        != TaskState::Done =>
+                                {
+                                    if st.running == 0 && st.ready.is_empty() {
+                                        bail!(
+                                            "wait({id}) would deadlock: \
+                                             replay producer stuck"
+                                        );
+                                    }
+                                    st = self.inner.cv.wait(st).unwrap();
+                                    continue;
+                                }
+                                _ => {}
+                            }
+                        }
                         bail!("wait({id}): no worker holds this block");
                     }
-                    break mask.trailing_zeros() as usize;
+                    if d.evicted {
+                        bail!(
+                            "wait({id}): block was reclaimed (all handles released); \
+                             pin it to keep it resident"
+                        );
+                    }
+                    if st.running == 0 && st.ready.is_empty() {
+                        bail!("wait({id}) would deadlock: no runnable producer");
+                    }
+                    st = self.inner.cv.wait(st).unwrap();
                 }
-                if d.evicted {
-                    bail!(
-                        "wait({id}): block was reclaimed (all handles released); \
-                         pin it to keep it resident"
-                    );
+            };
+            match plan {
+                Plan::Root => {
+                    let store = self
+                        .inner
+                        .root_store
+                        .as_ref()
+                        .expect("Plan::Root only with a root store");
+                    match store.fault(id) {
+                        Ok(block) => return Ok(Arc::new(block)),
+                        Err(e) => {
+                            let mut st = self.inner.state.lock().unwrap();
+                            st.error.get_or_insert(format!(
+                                "wait({id}) root journal reload failed: {e:#}"
+                            ));
+                            drop(st);
+                            self.inner.cv.notify_all();
+                            bail!("wait({id}): root journal reload failed: {e:#}");
+                        }
+                    }
                 }
-                if st.running == 0 && st.ready.is_empty() {
-                    bail!("wait({id}) would deadlock: no runnable producer");
-                }
-                st = self.inner.cv.wait(st).unwrap();
-            }
-        };
-        match self.inner.fetch_block(serve, id) {
-            Ok((block, bytes)) => {
-                self.inner.state.lock().unwrap().metrics.record_wire(bytes);
-                Ok(Arc::new(block))
-            }
-            Err(e) => {
-                // A failed synchronization fetch is an infrastructure
-                // failure (worker death), not an application error: poison
-                // so barriers and later waits surface it too.
-                {
-                    let mut st = self.inner.state.lock().unwrap();
-                    st.error.get_or_insert(format!("wait({id}) fetch failed: {e:#}"));
-                }
-                self.inner.cv.notify_all();
-                Err(e.context(format!("wait({id})")))
+                Plan::Fetch(serve) => match self.inner.fetch_block(serve, id) {
+                    Ok((block, bytes)) => {
+                        self.inner.state.lock().unwrap().metrics.record_wire(bytes);
+                        return Ok(Arc::new(block));
+                    }
+                    Err(ClusterFailure::WorkerDown { w, msg }) => {
+                        let recovered = {
+                            let mut st = self.inner.state.lock().unwrap();
+                            match handle_worker_death(&mut st, w, &self.inner) {
+                                Ok(()) => true,
+                                Err(e) => {
+                                    st.error.get_or_insert(format!(
+                                        "wait({id}) fetch failed: {msg} ({e:#})"
+                                    ));
+                                    false
+                                }
+                            }
+                        };
+                        self.inner.cv.notify_all();
+                        if recovered {
+                            continue; // retry against the recovered locations
+                        }
+                        bail!("wait({id}) fetch failed: {msg}");
+                    }
+                    Err(ClusterFailure::Protocol { msg }) => {
+                        // An application-level failure from a live worker
+                        // is real: poison so barriers and later waits
+                        // surface it too.
+                        {
+                            let mut st = self.inner.state.lock().unwrap();
+                            st.error
+                                .get_or_insert(format!("wait({id}) fetch failed: {msg}"));
+                        }
+                        self.inner.cv.notify_all();
+                        bail!("wait({id}) fetch failed: {msg}");
+                    }
+                },
             }
         }
     }
@@ -927,36 +1499,44 @@ impl Executor for ClusterExecutor {
 
 impl Drop for ClusterExecutor {
     fn drop(&mut self) {
-        {
+        let alive = {
             let mut st = self.inner.state.lock().unwrap();
             st.shutdown = true;
-        }
+            st.alive
+        };
         self.inner.cv.notify_all();
         for h in self.threads.lock().unwrap().drain(..) {
             let _ = h.join();
         }
         // Gracefully stop the workers we spawned; externally-managed ones
-        // (connected by address) stay up.
+        // (connected by address) stay up. Workers already marked dead get
+        // no shutdown message — writing to a broken pipe is pointless and
+        // their children are reaped below without the graceful wait.
         let mut children = self.children.lock().unwrap();
         if !children.is_empty() {
-            for conn in self.inner.conns.iter().skip(self.owned_from) {
-                let _ = conn.call(&Request::Shutdown);
+            for (i, conn) in self.inner.conns.iter().enumerate().skip(self.owned_from) {
+                if alive & (1u64 << i) != 0 {
+                    let _ = conn.call(&Request::Shutdown);
+                }
             }
         }
-        for child in children.iter_mut() {
+        for (ci, child) in children.iter_mut().enumerate() {
+            let w = self.owned_from + ci;
             let mut reaped = false;
-            for _ in 0..50 {
-                match child.try_wait() {
-                    Ok(Some(_)) => {
-                        reaped = true;
-                        break;
+            if alive & (1u64 << w) != 0 {
+                for _ in 0..50 {
+                    match child.try_wait() {
+                        Ok(Some(_)) => {
+                            reaped = true;
+                            break;
+                        }
+                        Ok(None) => std::thread::sleep(Duration::from_millis(20)),
+                        Err(_) => break,
                     }
-                    Ok(None) => std::thread::sleep(Duration::from_millis(20)),
-                    Err(_) => break,
                 }
             }
             if !reaped {
-                // Teardown must never hang on a wedged worker.
+                // Dead or wedged workers: teardown must never hang.
                 child.kill().ok();
                 child.wait().ok();
             }
@@ -970,6 +1550,17 @@ pub fn spawn_worker_process(
     program: &Path,
     memory_budget_bytes: Option<u64>,
 ) -> Result<(Child, String)> {
+    spawn_worker_process_with(program, memory_budget_bytes, None)
+}
+
+/// [`spawn_worker_process`] with a deterministic fault schedule
+/// (`--fault-plan`, see [`FaultPlan::spec_for`](super::faults::FaultPlan::spec_for))
+/// — the chaos-test entry point.
+pub fn spawn_worker_process_with(
+    program: &Path,
+    memory_budget_bytes: Option<u64>,
+    fault_spec: Option<&str>,
+) -> Result<(Child, String)> {
     let mut cmd = Command::new(program);
     cmd.arg("worker")
         .arg("--listen")
@@ -977,6 +1568,9 @@ pub fn spawn_worker_process(
         .stdout(Stdio::piped());
     if let Some(b) = memory_budget_bytes {
         cmd.arg("--memory-budget-bytes").arg(b.to_string());
+    }
+    if let Some(spec) = fault_spec.filter(|s| !s.is_empty()) {
+        cmd.arg("--fault-plan").arg(spec);
     }
     let mut child = cmd
         .spawn()
@@ -1012,6 +1606,27 @@ pub struct WorkerOptions {
     /// to this worker's own [`BlockStore`] directory and fault back on
     /// `Get` — per-worker out-of-core, no coordinator involvement.
     pub memory_budget_bytes: Option<u64>,
+    /// Deterministic fault schedule for this worker (`--fault-plan`), in
+    /// [`FaultPlan::parse_spec`](super::faults::FaultPlan::parse_spec)
+    /// syntax, e.g. `die@7` or `drop@3,die@9`. `None`/empty = fault-free.
+    pub fault_spec: Option<String>,
+    /// Whether a crash ([`Request::Crash`] or an injected
+    /// [`FaultKind::Die`]) exits the whole process (real worker daemons) or
+    /// only silences this worker forever (in-process test workers, which
+    /// share the test binary's process).
+    pub crash_exits: bool,
+}
+
+/// State shared by every connection thread of one worker: the block table,
+/// the fault schedule, and the dead flag an in-process crash raises.
+struct WorkerShared {
+    blocks: Mutex<WorkerBlocks>,
+    faults: Option<FaultState>,
+    /// Set on crash when `crash_exits` is false: every connection goes
+    /// silent and new requests are dropped, indistinguishable on the wire
+    /// from a killed process.
+    dead: AtomicBool,
+    crash_exits: bool,
 }
 
 enum WorkerEntry {
@@ -1162,44 +1777,95 @@ impl WorkerBlocks {
     }
 }
 
+/// How a peer pull failed: the peer being unreachable is a different fact
+/// (that worker is dead) than the peer answering with an error (this
+/// conversation is broken).
+enum PullError {
+    PeerDown(String),
+    Failed(String),
+}
+
 /// Fetch one block from a peer worker (the `Pull` data path).
-fn pull_from_peer(addr: &str, id: u32) -> Result<(Block, u64)> {
-    let mut s = TcpStream::connect(addr).with_context(|| format!("connecting to peer {addr}"))?;
+fn pull_from_peer(addr: &str, id: u32) -> Result<(Block, u64), PullError> {
+    let mut s = TcpStream::connect(addr)
+        .map_err(|e| PullError::PeerDown(format!("connecting to peer {addr}: {e}")))?;
     s.set_nodelay(true).ok();
-    wire::write_request(&mut s, &Request::Get { id })?;
-    let (resp, bytes) = wire::read_response(&mut s)?;
+    wire::write_request(&mut s, &Request::Get { id })
+        .map_err(|e| PullError::PeerDown(format!("peer {addr}: {e:#}")))?;
+    let (resp, bytes) = wire::read_response(&mut s)
+        .map_err(|e| PullError::PeerDown(format!("peer {addr}: {e:#}")))?;
     match resp {
         Response::Block(b) => Ok((b, bytes)),
-        Response::Err(m) => bail!("peer {addr}: {m}"),
-        other => bail!("peer {addr}: unexpected response {other:?} to Get"),
+        Response::Err(m) => Err(PullError::Failed(format!("peer {addr}: {m}"))),
+        other => Err(PullError::Failed(format!(
+            "peer {addr}: unexpected response {other:?} to Get"
+        ))),
     }
 }
 
-fn worker_conn_loop(state: Arc<Mutex<WorkerBlocks>>, mut stream: TcpStream) {
+/// Crash this worker: the injected-`Die` / [`Request::Crash`] path. Real
+/// daemons exit the process SIGKILL-style (no response goes out, the spill
+/// directory is dropped first since `process::exit` skips destructors);
+/// in-process workers raise the shared dead flag and clear their blocks,
+/// which silences every connection equivalently.
+fn crash_worker(shared: &WorkerShared) {
+    if shared.crash_exits {
+        shared.blocks.lock().unwrap().store.take();
+        std::process::exit(137);
+    }
+    shared.dead.store(true, Ordering::SeqCst);
+    let mut blocks = shared.blocks.lock().unwrap();
+    blocks.entries.clear();
+    blocks.resident = 0;
+    blocks.store.take();
+}
+
+fn worker_conn_loop(shared: Arc<WorkerShared>, mut stream: TcpStream) {
     loop {
         let req = match wire::read_request(&mut stream) {
             Ok(r) => r,
             Err(_) => return, // connection closed
         };
+        // A crashed in-process worker answers nothing, ever.
+        if shared.dead.load(Ordering::SeqCst) {
+            return;
+        }
+        // The single fault-injection point: after decode, before handling,
+        // so the served-request counter is exact for every request kind.
+        match shared.faults.as_ref().and_then(|f| f.on_request()) {
+            Some(FaultKind::Die) => {
+                crash_worker(&shared);
+                return;
+            }
+            Some(FaultKind::DropConn) => {
+                // Cut the conversation mid-frame: a length header with no
+                // payload, then close. The worker stays alive.
+                let _ = stream.write_all(&1024u32.to_le_bytes());
+                return;
+            }
+            None => {}
+        }
         let mut exit = false;
         let resp = match req {
             Request::Ping => Response::Ok,
-            Request::Put { id, block } => match state.lock().unwrap().insert(id, block) {
-                Ok(()) => Response::Ok,
-                Err(e) => Response::Err(format!("storing block {id}: {e:#}")),
-            },
+            Request::Put { id, block } => {
+                match shared.blocks.lock().unwrap().insert(id, block) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => Response::Err(format!("storing block {id}: {e:#}")),
+                }
+            }
             Request::Get { id } => {
                 // Bind first so the state lock drops before the payload
                 // clone — copying a multi-MB block must not stall every
                 // other connection thread.
-                let got = state.lock().unwrap().get(id);
+                let got = shared.blocks.lock().unwrap().get(id);
                 match got {
                     Ok(b) => Response::Block((*b).clone()),
                     Err(e) => Response::Err(format!("{e:#}")),
                 }
             }
             Request::Free { ids } => {
-                let mut st = state.lock().unwrap();
+                let mut st = shared.blocks.lock().unwrap();
                 for id in ids {
                     st.remove(id);
                 }
@@ -1207,19 +1873,30 @@ fn worker_conn_loop(state: Arc<Mutex<WorkerBlocks>>, mut stream: TcpStream) {
             }
             Request::Pull { id, from } => match pull_from_peer(&from, id) {
                 Ok((block, bytes)) => {
-                    let mut st = state.lock().unwrap();
+                    let mut st = shared.blocks.lock().unwrap();
                     st.pulled_bytes += bytes;
                     match st.insert(id, block) {
                         Ok(()) => Response::Pulled { bytes },
                         Err(e) => Response::Err(format!("storing pulled block {id}: {e:#}")),
                     }
                 }
-                Err(e) => Response::Err(format!("pull of block {id} from {from} failed: {e:#}")),
+                // The peer is gone, *we* are fine: tell the coordinator
+                // which of us to bury.
+                Err(PullError::PeerDown(m)) => {
+                    Response::PullPeerDown(format!("pull of block {id} failed: {m}"))
+                }
+                Err(PullError::Failed(m)) => {
+                    Response::Err(format!("pull of block {id} from {from} failed: {m}"))
+                }
             },
-            Request::Stat => Response::Stat(state.lock().unwrap().stat()),
+            Request::Stat => Response::Stat(shared.blocks.lock().unwrap().stat()),
             Request::Shutdown => {
                 exit = true;
                 Response::Ok
+            }
+            Request::Crash => {
+                crash_worker(&shared);
+                return;
             }
         };
         if wire::write_response(&mut stream, &resp).is_err() {
@@ -1228,7 +1905,7 @@ fn worker_conn_loop(state: Arc<Mutex<WorkerBlocks>>, mut stream: TcpStream) {
         if exit {
             // Drop the spill store (removing its directory) explicitly:
             // `process::exit` skips destructors.
-            state.lock().unwrap().store.take();
+            shared.blocks.lock().unwrap().store.take();
             std::process::exit(0);
         }
     }
@@ -1238,26 +1915,44 @@ fn worker_conn_loop(state: Arc<Mutex<WorkerBlocks>>, mut stream: TcpStream) {
 /// coordinator and peer connections forever, one thread per connection.
 /// A `Shutdown` request cleans up the spill directory and exits the
 /// process, so call this only from a dedicated worker process (or from an
-/// in-process test thread that never sends `Shutdown`).
+/// in-process test thread that never sends `Shutdown`). In-process workers
+/// keep `crash_exits` false so [`Request::Crash`] and injected faults
+/// silence the worker without taking the host process down.
 pub fn serve_worker(listener: TcpListener, opts: WorkerOptions) -> Result<()> {
     let store = match opts.memory_budget_bytes {
         Some(_) => Some(BlockStore::in_temp()?),
         None => None,
     };
-    let state = Arc::new(Mutex::new(WorkerBlocks {
-        entries: HashMap::new(),
-        resident: 0,
-        clock: 0,
-        budget: opts.memory_budget_bytes,
-        store,
-        spilled: 0,
-        pulled_bytes: 0,
-    }));
+    let faults = match opts.fault_spec.as_deref() {
+        Some(spec) if !spec.is_empty() => {
+            Some(FaultState::from_spec(spec).context("parsing --fault-plan")?)
+        }
+        _ => None,
+    };
+    let shared = Arc::new(WorkerShared {
+        blocks: Mutex::new(WorkerBlocks {
+            entries: HashMap::new(),
+            resident: 0,
+            clock: 0,
+            budget: opts.memory_budget_bytes,
+            store,
+            spilled: 0,
+            pulled_bytes: 0,
+        }),
+        faults,
+        dead: AtomicBool::new(false),
+        crash_exits: opts.crash_exits,
+    });
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
+        if shared.dead.load(Ordering::SeqCst) {
+            // Crashed in-process worker: refuse everything, like a closed
+            // port. Dropping the stream resets the coordinator's connect.
+            continue;
+        }
         stream.set_nodelay(true).ok();
-        let state = Arc::clone(&state);
-        std::thread::spawn(move || worker_conn_loop(state, stream));
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || worker_conn_loop(shared, stream));
     }
     Ok(())
 }
@@ -1272,17 +1967,27 @@ mod tests {
     /// Start an in-process worker (same wire protocol, same daemon loop,
     /// just not a separate OS process) and return its address.
     fn inproc_worker(budget: Option<u64>) -> String {
+        inproc_worker_with(WorkerOptions {
+            memory_budget_bytes: budget,
+            ..Default::default()
+        })
+    }
+
+    fn inproc_worker_with(opts: WorkerOptions) -> String {
         let l = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = l.local_addr().unwrap().to_string();
         std::thread::spawn(move || {
-            let _ = serve_worker(
-                l,
-                WorkerOptions {
-                    memory_budget_bytes: budget,
-                },
-            );
+            let _ = serve_worker(l, opts);
         });
         addr
+    }
+
+    /// Crash an in-process worker over the wire; the EOF on the (absent)
+    /// response confirms the dead flag is up before we return.
+    fn crash_worker_at(addr: &str) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        wire::write_request(&mut s, &Request::Crash).unwrap();
+        let _ = wire::read_response(&mut s);
     }
 
     fn cluster_rt(addrs: Vec<String>) -> Runtime {
@@ -1304,19 +2009,33 @@ mod tests {
 
     #[test]
     fn placement_prefers_most_input_bytes() {
+        let all2 = full_mask(2);
         // Worker 1 holds 3x the bytes: it wins.
-        assert_eq!(choose_placement(&[(0b01, 100), (0b10, 300)], 2), Some(1));
+        assert_eq!(
+            choose_placement(&[(0b01, 100), (0b10, 300)], 2, all2),
+            Some(1)
+        );
         // Ties break toward the lowest index.
-        assert_eq!(choose_placement(&[(0b01, 100), (0b10, 100)], 2), Some(0));
+        assert_eq!(
+            choose_placement(&[(0b01, 100), (0b10, 100)], 2, all2),
+            Some(0)
+        );
         // A replicated block counts for every holder.
         assert_eq!(
-            choose_placement(&[(0b11, 100), (0b10, 1)], 2),
+            choose_placement(&[(0b11, 100), (0b10, 1)], 2, all2),
             Some(1),
             "worker 1 holds 101 bytes vs worker 0's 100"
         );
         // No located inputs: the caller round-robins.
-        assert_eq!(choose_placement(&[], 4), None);
-        assert_eq!(choose_placement(&[(0, 100)], 4), None);
+        assert_eq!(choose_placement(&[], 4, full_mask(4)), None);
+        assert_eq!(choose_placement(&[(0, 100)], 4, full_mask(4)), None);
+        // A dead worker never wins, no matter how much it used to hold.
+        assert_eq!(
+            choose_placement(&[(0b01, 100), (0b10, 300)], 2, 0b01),
+            Some(0)
+        );
+        // All holders dead: fall back to round-robin over survivors.
+        assert_eq!(choose_placement(&[(0b10, 300)], 2, 0b01), None);
     }
 
     #[test]
@@ -1480,5 +2199,137 @@ mod tests {
         let err = rt.wait(out[0]).unwrap_err().to_string();
         assert!(err.contains("task `read_gone`"), "err: {err}");
         assert!(err.contains(&addr), "err should name worker {addr}: {err}");
+    }
+
+    fn inc_body() -> Arc<dyn Fn(&[Arc<Block>]) -> Result<Vec<Block>> + Send + Sync> {
+        Arc::new(|ins: &[Arc<Block>]| {
+            let m = ins[0].as_dense()?;
+            Ok(vec![Block::Dense(m.map(|x| x + 1.0))])
+        })
+    }
+
+    #[test]
+    fn worker_death_replays_lineage_bit_identically() {
+        let addrs = vec![inproc_worker(None), inproc_worker(None)];
+        let rt = cluster_rt(addrs.clone());
+        // Root on worker 0 (round-robin), chain placed there by locality.
+        let a = rt.put_block(dense(1.0));
+        let mut cur = a;
+        for _ in 0..3 {
+            cur = rt.submit(
+                "inc",
+                &[cur],
+                vec![BlockMeta::dense(2, 2)],
+                CostHint::default(),
+                inc_body(),
+            )[0];
+        }
+        rt.barrier().unwrap();
+        // Kill the worker holding the whole chain, then synchronize: the
+        // wait must route through recovery and return the exact value.
+        crash_worker_at(&addrs[0]);
+        let v = rt.wait(cur).unwrap();
+        assert_eq!(v.as_dense().unwrap().get(0, 0), 4.0);
+        let m = rt.metrics();
+        assert_eq!(m.workers_lost, 1);
+        assert!(m.tasks_replayed >= 3, "replayed {}", m.tasks_replayed);
+        assert!(m.blocks_recovered >= 1, "recovered {}", m.blocks_recovered);
+        assert!(m.recovery_ms >= 1);
+        // The runtime is NOT poisoned: new work still runs on survivors.
+        let more = rt.submit(
+            "inc",
+            &[cur],
+            vec![BlockMeta::dense(2, 2)],
+            CostHint::default(),
+            inc_body(),
+        );
+        assert_eq!(rt.wait(more[0]).unwrap().as_dense().unwrap().get(0, 0), 5.0);
+    }
+
+    #[test]
+    fn replicated_blocks_survive_death_without_replay() {
+        let addrs = vec![inproc_worker(None), inproc_worker(None)];
+        let rt = Runtime::cluster(
+            ClusterOptions::connect(addrs.clone())
+                .with_threads(2)
+                .with_replication(2),
+        )
+        .unwrap();
+        let a = rt.put_block(dense(7.0));
+        let out = rt.submit(
+            "inc",
+            &[a],
+            vec![BlockMeta::dense(2, 2)],
+            CostHint::default(),
+            inc_body(),
+        )[0];
+        rt.barrier().unwrap();
+        crash_worker_at(&addrs[0]);
+        // Every block has a copy on the survivor: recovery is a location
+        // table fixup, no task re-runs.
+        assert_eq!(rt.wait(out).unwrap().as_dense().unwrap().get(0, 0), 8.0);
+        let m = rt.metrics();
+        assert_eq!(m.workers_lost, 1);
+        assert_eq!(m.tasks_replayed, 0);
+        assert_eq!(m.blocks_recovered, 0);
+    }
+
+    #[test]
+    fn disabled_recovery_poisons_with_worker_address() {
+        let addrs = vec![inproc_worker(None), inproc_worker(None)];
+        let rt = Runtime::cluster(
+            ClusterOptions::connect(addrs.clone())
+                .with_threads(2)
+                .with_recovery(false),
+        )
+        .unwrap();
+        let a = rt.put_block(dense(3.0));
+        rt.barrier().unwrap();
+        crash_worker_at(&addrs[0]);
+        let err = rt.wait(a).unwrap_err().to_string();
+        assert!(err.contains(&addrs[0]), "err should name {}: {err}", addrs[0]);
+        assert!(err.contains("recovery is disabled"), "err: {err}");
+        assert!(rt.barrier().is_err(), "runtime must be poisoned");
+    }
+
+    #[test]
+    fn injected_die_fault_silences_worker_at_scheduled_request() {
+        let addr = inproc_worker_with(WorkerOptions {
+            fault_spec: Some("die@2".into()),
+            ..Default::default()
+        });
+        let mut s = TcpStream::connect(&addr).unwrap();
+        wire::write_request(&mut s, &Request::Ping).unwrap();
+        assert!(matches!(wire::read_response(&mut s).unwrap().0, Response::Ok));
+        wire::write_request(&mut s, &Request::Ping).unwrap();
+        assert!(
+            wire::read_response(&mut s).is_err(),
+            "request 2 must hit die@2 and get silence"
+        );
+        // The worker stays dead for later conversations too.
+        let mut s2 = TcpStream::connect(&addr).unwrap();
+        let _ = wire::write_request(&mut s2, &Request::Ping);
+        assert!(wire::read_response(&mut s2).is_err());
+    }
+
+    #[test]
+    fn injected_conn_drop_cuts_one_conversation_but_worker_survives() {
+        let addr = inproc_worker_with(WorkerOptions {
+            fault_spec: Some("drop@1".into()),
+            ..Default::default()
+        });
+        let mut s = TcpStream::connect(&addr).unwrap();
+        wire::write_request(&mut s, &Request::Ping).unwrap();
+        assert!(
+            wire::read_response(&mut s).is_err(),
+            "request 1 must get a truncated frame"
+        );
+        // A fresh conversation with the same worker succeeds.
+        let mut s2 = TcpStream::connect(&addr).unwrap();
+        wire::write_request(&mut s2, &Request::Ping).unwrap();
+        assert!(matches!(
+            wire::read_response(&mut s2).unwrap().0,
+            Response::Ok
+        ));
     }
 }

@@ -1,0 +1,257 @@
+//! Deterministic fault injection for the cluster runtime.
+//!
+//! Recovery code is only as trustworthy as the ways we can kill it, so
+//! chaos here is **never** random at run time: a [`FaultPlan`] fixes, per
+//! worker, exactly which fault fires after exactly how many served
+//! requests, and the whole plan derives from one seed. Re-running with the
+//! same seed reproduces the same kill points, so every failing chaos
+//! scenario replays.
+//!
+//! The plan travels to real worker processes as a compact spec string
+//! (`dsarray worker --fault-plan die@7`); in-process test workers consume
+//! it directly via the `fault_spec` field of
+//! [`WorkerOptions`](super::cluster::WorkerOptions). Workers consult their
+//! [`FaultState`] once per served request at a single defined point (after
+//! the request is decoded, before it is handled), so the trigger counter is
+//! exact regardless of connection interleaving.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Xoshiro256;
+
+/// What a triggered fault does to the worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The worker dies abruptly — no response, no spill-store cleanup, as
+    /// close to SIGKILL as the process can self-inflict. In-process test
+    /// workers instead go permanently silent (every connection drops, new
+    /// ones are refused), which the coordinator cannot distinguish from a
+    /// real death.
+    Die,
+    /// The connection serving the triggering request is cut mid-frame: a
+    /// partial response header is written, then the stream closes. The
+    /// worker itself stays alive — this is the "dropped connection
+    /// mid-block-transfer" scenario, and the coordinator must treat the
+    /// broken conversation as a worker loss.
+    DropConn,
+}
+
+/// One scheduled fault: fire `kind` while serving this worker's
+/// `after`-th request (1-based, counted across all connections).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultRule {
+    pub after: u64,
+    pub kind: FaultKind,
+}
+
+/// A whole cluster's fault schedule: one rule list per worker, derived
+/// deterministically from a seed. An empty rule list means the worker runs
+/// fault-free.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub workers: Vec<Vec<FaultRule>>,
+}
+
+impl FaultPlan {
+    /// A plan with no faults for `n_workers` workers.
+    pub fn none(n_workers: usize) -> Self {
+        Self {
+            workers: vec![Vec::new(); n_workers],
+        }
+    }
+
+    /// Derive a kill schedule from `seed`: between 1 and `n_workers - 1`
+    /// workers get exactly one fault each (at least one worker always
+    /// survives, or recovery would be impossible), triggered between the
+    /// 3rd and 20th served request — late enough that boot pings and the
+    /// first data distribution usually land, early enough to strike
+    /// mid-workload. Mostly [`FaultKind::Die`], with the occasional
+    /// mid-transfer connection drop.
+    pub fn random(seed: u64, n_workers: usize) -> Self {
+        let mut plan = Self::none(n_workers);
+        if n_workers < 2 {
+            return plan; // a sole worker must survive
+        }
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let n_faults = 1 + rng.next_below(n_workers as u64 - 1) as usize;
+        let victims = rng.permutation(n_workers);
+        for &w in victims.iter().take(n_faults) {
+            let after = 3 + rng.next_below(18);
+            let kind = if rng.next_below(4) == 0 {
+                FaultKind::DropConn
+            } else {
+                FaultKind::Die
+            };
+            plan.workers[w].push(FaultRule { after, kind });
+        }
+        plan
+    }
+
+    /// The spec string for worker `w` (what `--fault-plan` accepts):
+    /// comma-separated `die@N` / `drop@N` rules, empty when fault-free.
+    pub fn spec_for(&self, w: usize) -> String {
+        self.workers
+            .get(w)
+            .map(|rules| {
+                rules
+                    .iter()
+                    .map(|r| {
+                        let k = match r.kind {
+                            FaultKind::Die => "die",
+                            FaultKind::DropConn => "drop",
+                        };
+                        format!("{k}@{}", r.after)
+                    })
+                    .collect::<Vec<_>>()
+                    .join(",")
+            })
+            .unwrap_or_default()
+    }
+
+    /// Parse one worker's spec string back into rules (inverse of
+    /// [`FaultPlan::spec_for`]). Empty input parses to no rules.
+    pub fn parse_spec(spec: &str) -> Result<Vec<FaultRule>> {
+        let mut rules = Vec::new();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (kind, after) = part
+                .trim()
+                .split_once('@')
+                .with_context(|| format!("fault rule `{part}` is not <kind>@<count>"))?;
+            let kind = match kind {
+                "die" => FaultKind::Die,
+                "drop" => FaultKind::DropConn,
+                other => bail!("unknown fault kind `{other}` (want die or drop)"),
+            };
+            let after: u64 = after
+                .parse()
+                .with_context(|| format!("fault trigger count `{after}` is not a number"))?;
+            if after == 0 {
+                bail!("fault trigger count must be >= 1 (requests are 1-based)");
+            }
+            rules.push(FaultRule { after, kind });
+        }
+        Ok(rules)
+    }
+}
+
+/// One worker's live fault state: the parsed rules plus the served-request
+/// counter. Shared across connection threads, so the counter is atomic and
+/// [`FaultState::on_request`] needs no lock.
+#[derive(Debug, Default)]
+pub struct FaultState {
+    rules: Vec<FaultRule>,
+    served: AtomicU64,
+}
+
+impl FaultState {
+    pub fn new(rules: Vec<FaultRule>) -> Self {
+        Self {
+            rules,
+            served: AtomicU64::new(0),
+        }
+    }
+
+    /// Parse a `--fault-plan` spec string.
+    pub fn from_spec(spec: &str) -> Result<Self> {
+        Ok(Self::new(FaultPlan::parse_spec(spec)?))
+    }
+
+    /// Count one served request and return the fault scheduled for exactly
+    /// this request number, if any. Called once per request at the worker's
+    /// single injection point.
+    pub fn on_request(&self) -> Option<FaultKind> {
+        let n = self.served.fetch_add(1, Ordering::SeqCst) + 1;
+        self.rules.iter().find(|r| r.after == n).map(|r| r.kind)
+    }
+
+    /// Requests served so far (test introspection).
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_plans_are_seed_deterministic() {
+        let a = FaultPlan::random(42, 4);
+        let b = FaultPlan::random(42, 4);
+        assert_eq!(a, b, "same seed must derive the same plan");
+        // Different seeds eventually differ (checked over a small range so
+        // the test stays meaningful without being flaky about one seed).
+        assert!(
+            (0..16).any(|s| FaultPlan::random(s, 4) != a),
+            "plans must actually depend on the seed"
+        );
+    }
+
+    #[test]
+    fn random_plans_always_leave_a_survivor() {
+        for seed in 0..64 {
+            for n in 1..=5 {
+                let plan = FaultPlan::random(seed, n);
+                assert_eq!(plan.workers.len(), n);
+                let faulted = plan.workers.iter().filter(|r| !r.is_empty()).count();
+                assert!(
+                    faulted < n.max(1),
+                    "seed {seed}, n {n}: every worker got a fault"
+                );
+                for rules in &plan.workers {
+                    for r in rules {
+                        assert!((3..=20).contains(&r.after));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        for seed in 0..32 {
+            let plan = FaultPlan::random(seed, 3);
+            for w in 0..3 {
+                let spec = plan.spec_for(w);
+                let back = FaultPlan::parse_spec(&spec).unwrap();
+                assert_eq!(back, plan.workers[w], "seed {seed} worker {w}: `{spec}`");
+            }
+        }
+        let rules = FaultPlan::parse_spec("drop@3,die@9").unwrap();
+        assert_eq!(
+            rules,
+            vec![
+                FaultRule {
+                    after: 3,
+                    kind: FaultKind::DropConn
+                },
+                FaultRule {
+                    after: 9,
+                    kind: FaultKind::Die
+                },
+            ]
+        );
+        assert!(FaultPlan::parse_spec("").unwrap().is_empty());
+        assert!(FaultPlan::parse_spec("die").is_err());
+        assert!(FaultPlan::parse_spec("melt@3").is_err());
+        assert!(FaultPlan::parse_spec("die@zero").is_err());
+        assert!(FaultPlan::parse_spec("die@0").is_err());
+    }
+
+    #[test]
+    fn fault_state_triggers_exactly_once_at_the_scheduled_request() {
+        let st = FaultState::from_spec("die@3").unwrap();
+        assert_eq!(st.on_request(), None); // request 1
+        assert_eq!(st.on_request(), None); // request 2
+        assert_eq!(st.on_request(), Some(FaultKind::Die)); // request 3
+        assert_eq!(st.on_request(), None); // request 4
+        assert_eq!(st.served(), 4);
+        // Fault-free state never triggers.
+        let quiet = FaultState::from_spec("").unwrap();
+        for _ in 0..10 {
+            assert_eq!(quiet.on_request(), None);
+        }
+    }
+}

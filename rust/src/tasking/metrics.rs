@@ -66,6 +66,19 @@ pub struct Metrics {
     /// tasks that fanned out over the per-worker deques instead of
     /// serializing one worker (counts every part of every engaged split).
     pub subtasks_spawned: u64,
+    /// Worker processes whose TCP conversation broke mid-run (each counted
+    /// once; the coordinator never talks to a lost worker again).
+    pub workers_lost: u64,
+    /// Blocks whose every replica died with lost workers and were made
+    /// re-derivable again (by lineage replay or a root-store reload).
+    pub blocks_recovered: u64,
+    /// Completed tasks re-queued by lineage recovery to re-derive lost
+    /// blocks on the surviving workers.
+    pub tasks_replayed: u64,
+    /// Total time spent in recovery handling (marking the loss, walking the
+    /// lineage, re-arming the replay sub-graph), in milliseconds rounded up
+    /// — each recovery event contributes at least 1.
+    pub recovery_ms: u64,
 }
 
 impl Metrics {
@@ -150,6 +163,17 @@ impl Metrics {
         self.subtasks_spawned += parts;
     }
 
+    /// One worker's death was absorbed by lineage recovery: `blocks` lost
+    /// their last replica and became re-derivable again, `tasks` completed
+    /// tasks were re-queued for replay, and the handling took `ms`
+    /// milliseconds (pre-rounded up to at least 1 by the caller).
+    pub fn record_recovery(&mut self, blocks: u64, tasks: u64, ms: u64) {
+        self.workers_lost += 1;
+        self.blocks_recovered += blocks;
+        self.tasks_replayed += tasks;
+        self.recovery_ms += ms;
+    }
+
     pub fn total_tasks(&self) -> u64 {
         self.tasks_by_op.values().sum()
     }
@@ -199,6 +223,10 @@ impl Metrics {
         out.locality_hits -= earlier.locality_hits;
         out.simd_kernel_hits -= earlier.simd_kernel_hits;
         out.subtasks_spawned -= earlier.subtasks_spawned;
+        out.workers_lost -= earlier.workers_lost;
+        out.blocks_recovered -= earlier.blocks_recovered;
+        out.tasks_replayed -= earlier.tasks_replayed;
+        out.recovery_ms -= earlier.recovery_ms;
         out
     }
 }
@@ -310,6 +338,24 @@ mod tests {
         assert_eq!(d.bytes_on_wire, 6);
         assert_eq!(d.locality_hits, 0);
         assert_eq!(d.remote_transfers, 2);
+    }
+
+    #[test]
+    fn recovery_counters() {
+        let mut m = Metrics::default();
+        m.record_recovery(5, 3, 2);
+        m.record_recovery(0, 0, 1); // a death that lost no live blocks
+        assert_eq!(m.workers_lost, 2);
+        assert_eq!(m.blocks_recovered, 5);
+        assert_eq!(m.tasks_replayed, 3);
+        assert_eq!(m.recovery_ms, 3);
+        let snap = m.clone();
+        m.record_recovery(2, 2, 1);
+        let d = m.since(&snap);
+        assert_eq!(
+            (d.workers_lost, d.blocks_recovered, d.tasks_replayed, d.recovery_ms),
+            (1, 2, 2, 1)
+        );
     }
 
     #[test]

@@ -52,6 +52,7 @@
 //! (DESIGN.md §2). [`Runtime::from_executor`] accepts any custom backend.
 
 pub mod cluster;
+pub mod faults;
 pub mod graph;
 pub mod local;
 pub mod metrics;
@@ -66,6 +67,7 @@ use anyhow::{bail, Result};
 
 use crate::storage::{Block, BlockMeta};
 pub use cluster::{ClusterOptions, TransferMode, WorkerOptions};
+pub use faults::{FaultKind, FaultPlan, FaultRule, FaultState};
 pub use local::LocalOptions;
 pub use metrics::Metrics;
 pub use sim::{SimConfig, SimReport};

@@ -25,16 +25,25 @@
 //! | 0x05 | Pull     | `id u32` + `alen u16` + peer address (UTF-8)     |
 //! | 0x06 | Stat     | —                                                |
 //! | 0x07 | Shutdown | —                                                |
+//! | 0x08 | Crash    | —                                                |
 //!
 //! Response opcodes (worker → requester):
 //!
-//! | op   | name   | body                                               |
-//! |------|--------|----------------------------------------------------|
-//! | 0x81 | Ok     | —                                                  |
-//! | 0x82 | Block  | block record                                       |
-//! | 0x83 | Pulled | `bytes u64` (wire bytes moved worker-to-worker)    |
-//! | 0x84 | Stat   | `blocks u64, resident u64, spilled u64, pulled u64`|
-//! | 0x85 | Err    | UTF-8 message                                      |
+//! | op   | name         | body                                               |
+//! |------|--------------|----------------------------------------------------|
+//! | 0x81 | Ok           | —                                                  |
+//! | 0x82 | Block        | block record                                       |
+//! | 0x83 | Pulled       | `bytes u64` (wire bytes moved worker-to-worker)    |
+//! | 0x84 | Stat         | `blocks u64, resident u64, spilled u64, pulled u64`|
+//! | 0x85 | Err          | UTF-8 message                                      |
+//! | 0x86 | PullPeerDown | UTF-8 message                                      |
+//!
+//! `Crash` kills the worker abruptly (fault-injection testing: no response,
+//! no cleanup — the nearest thing to SIGKILL that works for the in-process
+//! workers tests use). `PullPeerDown` distinguishes "the peer I was told to
+//! pull from is unreachable" (a transport failure of the *peer*, which the
+//! coordinator must treat as that worker's death) from `Err` (the serving
+//! worker is alive and answered; the request itself failed).
 //!
 //! Exactly one response answers each request, in order, per connection. The
 //! codec is transport-agnostic (`Read`/`Write`), so the same functions serve
@@ -58,11 +67,13 @@ const OP_FREE: u8 = 0x04;
 const OP_PULL: u8 = 0x05;
 const OP_STAT: u8 = 0x06;
 const OP_SHUTDOWN: u8 = 0x07;
+const OP_CRASH: u8 = 0x08;
 const OP_OK: u8 = 0x81;
 const OP_BLOCK: u8 = 0x82;
 const OP_PULLED: u8 = 0x83;
 const OP_STAT_R: u8 = 0x84;
 const OP_ERR: u8 = 0x85;
+const OP_PULL_PEER_DOWN: u8 = 0x86;
 
 /// One coordinator/peer request to a worker.
 #[derive(Debug)]
@@ -83,6 +94,10 @@ pub enum Request {
     Stat,
     /// Clean up (remove the spill directory) and exit the worker process.
     Shutdown,
+    /// Die abruptly, SIGKILL-style: no response, no cleanup. Fault-injection
+    /// testing only — this is how tests kill an in-process worker that
+    /// shares the test's OS process.
+    Crash,
 }
 
 /// Worker-side counters returned by [`Request::Stat`].
@@ -106,6 +121,9 @@ pub enum Response {
     Pulled { bytes: u64 },
     Stat(WorkerStat),
     Err(String),
+    /// A `Pull`'s *peer* was unreachable (connect/transport failure). The
+    /// responding worker is healthy; the peer must be presumed dead.
+    PullPeerDown(String),
 }
 
 fn push_u16(buf: &mut Vec<u8>, v: u16) {
@@ -224,6 +242,7 @@ pub fn write_request(w: &mut impl Write, req: &Request) -> Result<u64> {
         }
         Request::Stat => buf.push(OP_STAT),
         Request::Shutdown => buf.push(OP_SHUTDOWN),
+        Request::Crash => buf.push(OP_CRASH),
     }
     write_frame(w, &buf)
 }
@@ -259,6 +278,7 @@ pub fn read_request(r: &mut impl Read) -> Result<Request> {
         }
         OP_STAT => Request::Stat,
         OP_SHUTDOWN => Request::Shutdown,
+        OP_CRASH => Request::Crash,
         other => bail!("unknown request opcode 0x{other:02x}"),
     })
 }
@@ -287,6 +307,10 @@ pub fn write_response(w: &mut impl Write, resp: &Response) -> Result<u64> {
             buf.push(OP_ERR);
             buf.extend_from_slice(msg.as_bytes());
         }
+        Response::PullPeerDown(msg) => {
+            buf.push(OP_PULL_PEER_DOWN);
+            buf.extend_from_slice(msg.as_bytes());
+        }
     }
     write_frame(w, &buf)
 }
@@ -311,6 +335,9 @@ pub fn read_response(r: &mut impl Read) -> Result<(Response, u64)> {
             pulled_bytes: c.u64()?,
         }),
         OP_ERR => Response::Err(String::from_utf8_lossy(c.rest()).into_owned()),
+        OP_PULL_PEER_DOWN => {
+            Response::PullPeerDown(String::from_utf8_lossy(c.rest()).into_owned())
+        }
         other => bail!("unknown response opcode 0x{other:02x}"),
     };
     Ok((resp, n))
@@ -412,6 +439,14 @@ mod tests {
             other => panic!("decoded {other:?}"),
         }
         assert!(matches!(round_trip_response(&Response::Ok), Response::Ok));
+        assert!(matches!(
+            round_trip_request(&Request::Crash),
+            Request::Crash
+        ));
+        match round_trip_response(&Response::PullPeerDown("peer 127.0.0.1:2 gone".into())) {
+            Response::PullPeerDown(m) => assert_eq!(m, "peer 127.0.0.1:2 gone"),
+            other => panic!("decoded {other:?}"),
+        }
     }
 
     #[test]

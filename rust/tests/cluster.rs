@@ -6,19 +6,22 @@
 //! which a block actually crosses a process boundary.
 //!
 //! Also covers the failure contract: a worker process killed mid-workload
-//! must surface as a poisoned task naming the worker address and task —
-//! never a hang.
+//! is **recovered from** — the lineage walk replays the lost sub-graph on
+//! survivors and results stay bit-identical — while `--no-recovery`
+//! restores the old poison-with-address-and-task contract. A seeded chaos
+//! suite drives both through deterministic `FaultPlan`s.
 
 use std::path::Path;
 use std::process::Child;
 
+use rustdslib::bench::report;
 use rustdslib::dsarray::creation;
 use rustdslib::estimators::kmeans::{KMeans, KMeansConfig};
 use rustdslib::estimators::{Estimator, LinearRegression, Pca};
 use rustdslib::storage::DenseMatrix;
-use rustdslib::tasking::cluster::spawn_worker_process;
+use rustdslib::tasking::cluster::spawn_worker_process_with;
 use rustdslib::tasking::wire::{self, Request, Response, WorkerStat};
-use rustdslib::tasking::{ClusterOptions, Runtime};
+use rustdslib::tasking::{ClusterOptions, FaultPlan, Runtime};
 use rustdslib::util::rng::Xoshiro256;
 
 /// A fleet of real worker processes; killed (and reaped) on drop.
@@ -29,14 +32,22 @@ struct Workers {
 
 impl Workers {
     fn spawn(n: usize, budget_bytes: Option<u64>) -> Self {
+        Self::spawn_with_faults(n, budget_bytes, &FaultPlan::none(n))
+    }
+
+    /// Spawn `n` workers, each carrying its slice of a deterministic fault
+    /// plan (`--fault-plan die@7` etc.); an empty slice runs fault-free.
+    fn spawn_with_faults(n: usize, budget_bytes: Option<u64>, plan: &FaultPlan) -> Self {
         // The library's spawn helper, pointed at the real CLI binary (a
         // test harness's current_exe is the test binary, not `dsarray`).
         let program = Path::new(env!("CARGO_BIN_EXE_dsarray"));
         let mut children = Vec::new();
         let mut addrs = Vec::new();
-        for _ in 0..n {
+        for w in 0..n {
+            let spec = plan.spec_for(w);
             let (child, addr) =
-                spawn_worker_process(program, budget_bytes).expect("spawn dsarray worker");
+                spawn_worker_process_with(program, budget_bytes, Some(spec.as_str()))
+                    .expect("spawn dsarray worker");
             children.push(child);
             addrs.push(addr);
         }
@@ -60,8 +71,17 @@ impl Workers {
 impl Drop for Workers {
     fn drop(&mut self) {
         for c in &mut self.children {
-            c.kill().ok();
-            c.wait().ok();
+            // Children killed mid-test (SIGKILL scenarios, injected `die`
+            // faults) are already dead: just reap them. Only still-running
+            // children need the kill; `.ok()`s keep a worker corpse from
+            // masking the panic that actually failed the test.
+            match c.try_wait() {
+                Ok(Some(_)) => {}
+                _ => {
+                    c.kill().ok();
+                    c.wait().ok();
+                }
+            }
         }
     }
 }
@@ -212,14 +232,69 @@ fn kernel_split_parity_local_vs_cluster() {
     assert!(rt.metrics().bytes_on_wire > 0);
 }
 
-/// A worker process dying mid-workload must poison the runtime with the
-/// worker address and the failing task's name — and every subsequent
-/// synchronization must error immediately instead of hanging (mirrors the
-/// PR-1 fix that removed the silent input-resolution swallow).
+/// The acceptance scenario for lineage recovery: SIGKILL one of two worker
+/// processes mid-KMeans and the fit still completes **bit-identically** to
+/// the local run — the coordinator replays the dead worker's lost
+/// sub-graph on the survivor and re-loads roots from its journal. The
+/// shifted input (`add_scalar` before the kill) guarantees produced — not
+/// just root — blocks are lost, so `tasks_replayed` must be non-zero.
 #[test]
-fn killed_worker_poisons_with_address_and_task_name() {
+fn killed_worker_recovers_bit_identically_mid_kmeans() {
+    let m = random_matrix(32, 32, 7);
+    let fit = |rt: &Runtime, kill: &mut dyn FnMut()| {
+        let x = creation::from_matrix(rt, &m, (8, 8)).unwrap();
+        let y = x.add_scalar(1.0).unwrap();
+        rt.barrier().unwrap(); // all 16 shift tasks Done, outputs resident
+        kill();
+        let mut km = KMeans::new(KMeansConfig {
+            k: 4,
+            max_iter: 8,
+            tol: 1e-9,
+            seed: 5,
+        });
+        km.fit(&y, None).unwrap();
+        (km.centers.unwrap(), km.inertia)
+    };
+    let (centers_local, inertia_local) = fit(&Runtime::local(2), &mut || {});
+
     let mut workers = Workers::spawn(2, None);
     let rt = workers.runtime();
+    let (centers_cluster, inertia_cluster) = fit(&rt, &mut || {
+        // Half the shifted blocks live here; mid-fit SIGKILL.
+        workers.children[0].kill().unwrap();
+        workers.children[0].wait().unwrap();
+    });
+
+    assert_eq!(centers_cluster, centers_local, "recovered fit must be bit-identical");
+    assert_eq!(inertia_cluster, inertia_local);
+    let met = rt.metrics();
+    assert_eq!(met.workers_lost, 1, "exactly one worker death observed");
+    assert!(met.tasks_replayed > 0, "lost shift tasks must be replayed, got 0");
+    assert!(met.blocks_recovered > 0, "lost blocks must be re-materialized");
+    // The counters flow through the emitted metrics line verbatim.
+    let json = report::metrics_json(&met);
+    assert!(json.contains("\"workers_lost\":1"), "{json}");
+    assert!(json.contains("\"tasks_replayed\":"), "{json}");
+    assert!(json.contains("\"blocks_recovered\":"), "{json}");
+    assert!(json.contains("\"recovery_ms\":"), "{json}");
+    // The survivor now holds everything the fit needed.
+    assert!(workers.stat(1).blocks > 0);
+}
+
+/// With `--no-recovery` the old failure contract still holds: a worker
+/// process dying mid-workload poisons the runtime with the worker address
+/// and the failing task's name — and every subsequent synchronization
+/// errors immediately instead of hanging (mirrors the PR-1 fix that
+/// removed the silent input-resolution swallow).
+#[test]
+fn killed_worker_poisons_without_recovery() {
+    let mut workers = Workers::spawn(2, None);
+    let rt = Runtime::cluster(
+        ClusterOptions::connect(workers.addrs.clone())
+            .with_threads(2)
+            .with_recovery(false),
+    )
+    .unwrap();
     let m = random_matrix(32, 32, 7);
     let a = creation::from_matrix(&rt, &m, (8, 8)).unwrap();
     rt.barrier().unwrap();
@@ -242,7 +317,67 @@ fn killed_worker_poisons_with_address_and_task_name() {
         "error should name the dead worker {}: {err}",
         workers.addrs[0]
     );
+    assert!(err.contains("recovery is disabled"), "{err}");
     // Poisoned, not hung: barriers and fresh waits fail fast.
     let b_err = rt.barrier().expect_err("barrier must observe the poison");
     assert!(b_err.to_string().contains("poisoned"), "{b_err}");
+}
+
+/// Seeded chaos property test: for each seed, derive a deterministic
+/// `FaultPlan` (which workers die or drop connections, and at which served
+/// request), run a seed-selected workload on a 3-worker fleet under that
+/// plan, and require the result to be bit-identical to the fault-free
+/// local run. Failing seeds are reproducible: the panic names the exact
+/// `DSARRAY_CHAOS_SEEDS=<seed>` rerun, and that env var (comma-separated)
+/// also overrides the default seed set.
+#[test]
+fn chaos_seeded_fault_plans_stay_bit_identical() {
+    let seeds: Vec<u64> = match std::env::var("DSARRAY_CHAOS_SEEDS") {
+        Ok(s) => s
+            .split(',')
+            .map(|t| t.trim().parse().expect("bad DSARRAY_CHAOS_SEEDS entry"))
+            .collect(),
+        Err(_) => vec![101, 202, 303, 404, 505],
+    };
+    for seed in seeds {
+        let round = std::panic::catch_unwind(|| chaos_round(seed));
+        if round.is_err() {
+            panic!("chaos seed {seed} diverged; rerun with DSARRAY_CHAOS_SEEDS={seed}");
+        }
+    }
+}
+
+fn chaos_round(seed: u64) {
+    let plan = FaultPlan::random(seed, 3);
+    let ma = random_matrix(64, 64, seed ^ 0x9e37);
+    let mb = random_matrix(64, 64, seed ^ 0x79b9);
+    // Workload families rotate with the seed: lazy views, fused chains,
+    // spill-backed matmul (2 KiB budgets), pairwise distances.
+    let workload = (seed % 4) as usize;
+    let run = |rt: &Runtime| -> DenseMatrix {
+        let a = creation::from_matrix(rt, &ma, (16, 16)).unwrap();
+        match workload {
+            0 => a.slice(3, 61, 5, 50).unwrap().force().unwrap().collect().unwrap(),
+            1 => a
+                .add_scalar(1.0)
+                .unwrap()
+                .mul_scalar(0.5)
+                .unwrap()
+                .add_scalar(-3.0)
+                .unwrap()
+                .collect()
+                .unwrap(),
+            2 => {
+                let b = creation::from_matrix(rt, &mb, (16, 16)).unwrap();
+                a.matmul(&b).unwrap().collect().unwrap()
+            }
+            _ => a.pairwise_dist2(&a).unwrap().collect().unwrap(),
+        }
+    };
+    let expect = run(&Runtime::local(2));
+    let budget = if workload == 2 { Some(2048) } else { None };
+    let workers = Workers::spawn_with_faults(3, budget, &plan);
+    let rt = workers.runtime();
+    let got = run(&rt);
+    assert_eq!(got, expect, "chaos plan {plan:?} diverged from the fault-free local run");
 }
