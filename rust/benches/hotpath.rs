@@ -7,8 +7,9 @@
 //! product+axpy pattern, the kernel layer (scalar vs detected SIMD tables:
 //! gemm, elementwise chain, pairwise distances) and intra-block splitting
 //! (whole fat-block task vs sub-range work items), raw PJRT artifact
-//! dispatch, native block math, and runtime overheads (submit, graph,
-//! channels).
+//! dispatch, native block math, runtime overheads (submit, graph,
+//! channels), and the elasticity paths (drain-time block migration,
+//! straggler speculation on a stalling worker).
 //!
 //! Usage: cargo bench --bench hotpath [-- --reps 5 --json BENCH_hotpath.json]
 
@@ -529,6 +530,90 @@ fn main() -> Result<()> {
         format!(
             "{rec_replays} replays, {rec_ms} ms recorded, {:.2}x fault-free cluster",
             t_mm_recover / t_mm_cluster.max(1e-12)
+        ),
+    ));
+
+    // ---- Elasticity rows (gated as the `elastic` group) ----
+    // Drain-migration: decommission one of two workers holding half of a
+    // 16-block array; wall time covers the sole-copy Pull migration plus a
+    // full collect served entirely by the survivor, with zero replays.
+    // Every run needs a fresh fleet — a drained member stays drained.
+    let (mut drain_mib, mut drain_replays) = (0.0f64, 0u64);
+    let t_drain = time(reps, || {
+        let rt2 = Runtime::cluster(
+            rustdslib::tasking::ClusterOptions::connect(vec![spawn_worker(), spawn_worker()])
+                .with_threads(workers),
+        )?;
+        let a = creation::from_matrix(&rt2, &mm, (64, 64))?;
+        rt2.barrier()?;
+        let before = rt2.metrics();
+        rt2.cluster_drain(0)?;
+        drain_mib = rt2.metrics().since(&before).bytes_on_wire as f64 / (1024.0 * 1024.0);
+        let v = a.collect()?;
+        std::hint::black_box(v.get(0, 0));
+        drain_replays = rt2.metrics().tasks_replayed;
+        Ok(())
+    })?;
+    rows.push((
+        "elastic drain-migrate 256² (2 workers)".into(),
+        t_drain,
+        format!("{drain_mib:.1} MiB migrated, {drain_replays} replays"),
+    ));
+
+    // Straggler speculation: the same small gemm with one worker that
+    // stalls 800 ms per request from its 8th request on. The baseline
+    // serializes those stalls; with speculation the monitor re-arms the
+    // stuck tasks on the healthy worker and first-completion wins. Fresh
+    // workers per run: the deterministic fault schedule is consumed.
+    let spawn_slow_worker = || {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        let opts = rustdslib::tasking::WorkerOptions {
+            fault_spec: Some("slow@8".to_string()),
+            ..Default::default()
+        };
+        std::thread::spawn(move || {
+            let _ = rustdslib::tasking::cluster::serve_worker(l, opts);
+        });
+        addr
+    };
+    let sm = DenseMatrix::from_fn(128, 128, |_, _| rng.next_normal());
+    let sm_gflops = 2.0 * 128f64.powi(3) / 1e9;
+    let reps_e = reps.clamp(1, 2); // the stall-bound baseline is slow by design
+    let straggler_gemm = |factor: f64| -> Result<(f64, u64)> {
+        let mut speculated = 0u64;
+        let t = time(reps_e, || {
+            let rt2 = Runtime::cluster(
+                rustdslib::tasking::ClusterOptions::connect(vec![
+                    spawn_worker(),
+                    spawn_slow_worker(),
+                ])
+                .with_threads(workers)
+                .with_straggler_factor(factor),
+            )?;
+            let a = creation::from_matrix(&rt2, &sm, (64, 64))?;
+            let b = creation::from_matrix(&rt2, &sm, (64, 64))?;
+            let c = a.matmul(&b)?;
+            c.runtime().barrier()?;
+            speculated = rt2.metrics().tasks_speculated;
+            Ok(())
+        })?;
+        Ok((t, speculated))
+    };
+    let (t_stall, _) = straggler_gemm(0.0)?;
+    rows.push((
+        "elastic straggler gemm 128³ no-speculation".into(),
+        t_stall,
+        format!("{:.2} GFLOP/s", sm_gflops / t_stall),
+    ));
+    let (t_spec, n_spec) = straggler_gemm(2.5)?;
+    rows.push((
+        "elastic straggler gemm 128³ speculation".into(),
+        t_spec,
+        format!(
+            "{:.2} GFLOP/s ({:.2}x vs stalled, {n_spec} speculated/run)",
+            sm_gflops / t_spec,
+            t_stall / t_spec.max(1e-12)
         ),
     ));
 

@@ -114,8 +114,10 @@ impl Series {
 /// counters (`blocks_spilled`, `blocks_faulted`, `spill_bytes`), the
 /// cluster-backend counters (`bytes_on_wire`, `remote_transfers`,
 /// `locality_hits`), the kernel-layer counters (`simd_kernel_hits`,
-/// `subtasks_spawned`), and the fault-recovery counters (`workers_lost`,
-/// `blocks_recovered`, `tasks_replayed`, `recovery_ms`).
+/// `subtasks_spawned`), the fault-recovery counters (`workers_lost`,
+/// `blocks_recovered`, `tasks_replayed`, `recovery_ms`), and the
+/// elasticity counters (`workers_joined`, `workers_drained`,
+/// `tasks_speculated`, plus the per-slot `tasks_by_worker` array).
 pub fn metrics_json(m: &Metrics) -> String {
     let mut out = String::from("{");
     let _ = write!(out, "\"total_tasks\":{}", m.total_tasks());
@@ -141,6 +143,17 @@ pub fn metrics_json(m: &Metrics) -> String {
     let _ = write!(out, ",\"blocks_recovered\":{}", m.blocks_recovered);
     let _ = write!(out, ",\"tasks_replayed\":{}", m.tasks_replayed);
     let _ = write!(out, ",\"recovery_ms\":{}", m.recovery_ms);
+    let _ = write!(out, ",\"workers_joined\":{}", m.workers_joined);
+    let _ = write!(out, ",\"workers_drained\":{}", m.workers_drained);
+    let _ = write!(out, ",\"tasks_speculated\":{}", m.tasks_speculated);
+    out.push_str(",\"tasks_by_worker\":[");
+    for (i, v) in m.tasks_by_worker.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{v}");
+    }
+    out.push(']');
     out.push_str(",\"tasks_by_op\":{");
     for (i, (k, v)) in m.tasks_by_op.iter().enumerate() {
         if i > 0 {
@@ -293,6 +306,12 @@ mod tests {
         m.simd_kernel_hits = 7;
         m.record_subtasks(4);
         m.record_recovery(5, 3, 2);
+        m.record_join();
+        m.record_drain();
+        m.record_speculated();
+        m.record_task_on_worker(0);
+        m.record_task_on_worker(1);
+        m.record_task_on_worker(1);
         let s = metrics_json(&m);
         let v = crate::util::json::parse(&s).unwrap();
         assert_eq!(v.get("total_tasks").unwrap().as_usize(), Some(1));
@@ -314,6 +333,13 @@ mod tests {
         assert_eq!(v.get("blocks_recovered").unwrap().as_usize(), Some(5));
         assert_eq!(v.get("tasks_replayed").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("recovery_ms").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("workers_joined").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("workers_drained").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("tasks_speculated").unwrap().as_usize(), Some(1));
+        let by_worker = v.get("tasks_by_worker").unwrap().as_arr().unwrap();
+        assert_eq!(by_worker.len(), 2);
+        assert_eq!(by_worker[0].as_usize(), Some(1));
+        assert_eq!(by_worker[1].as_usize(), Some(2));
         assert_eq!(
             v.get("tasks_by_op").unwrap().get("op.a").unwrap().as_usize(),
             Some(1)

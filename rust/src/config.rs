@@ -55,6 +55,15 @@ pub struct Config {
     /// Copies of each block kept on distinct workers
     /// (`--replicate-blocks k`, default 1 = no replication).
     pub replicate_blocks: usize,
+    /// Heartbeat interval for proactive cluster liveness probes, in
+    /// milliseconds (`--heartbeat-ms`, default 0 = reactive detection
+    /// only). A worker missing three consecutive beats is declared dead.
+    pub heartbeat_ms: u64,
+    /// Straggler speculation threshold: a task running longer than this
+    /// factor times its task name's running-time estimate is re-executed
+    /// speculatively on another worker (`--straggler-factor`, default
+    /// 0 = off; 3 is a reasonable starting point).
+    pub straggler_factor: f64,
     /// Out-of-core resident-set budget for local execution; `None` keeps
     /// every block in memory (see `Runtime::local_with_budget`).
     pub memory_budget_bytes: Option<u64>,
@@ -83,6 +92,8 @@ impl Default for Config {
             cluster_addrs: Vec::new(),
             recovery: true,
             replicate_blocks: 1,
+            heartbeat_ms: 0,
+            straggler_factor: 0.0,
             memory_budget_bytes: None,
             spill_dir: None,
             sim_cores: vec![48, 96, 192, 384, 768],
@@ -118,6 +129,12 @@ impl Config {
         }
         if let Some(v) = map.get("replicate_blocks").and_then(|v| v.as_i64()) {
             cfg.replicate_blocks = (v.max(1)) as usize;
+        }
+        if let Some(v) = map.get("heartbeat_ms").and_then(|v| v.as_i64()) {
+            cfg.heartbeat_ms = v.max(0) as u64;
+        }
+        if let Some(v) = map.get("straggler_factor").and_then(|v| v.as_f64()) {
+            cfg.straggler_factor = v.max(0.0);
         }
         if let Some(v) = map.get("seed").and_then(|v| v.as_i64()) {
             cfg.seed = v as u64;
@@ -185,6 +202,16 @@ impl Config {
                 self.replicate_blocks = k.max(1);
             }
         }
+        if let Some(v) = args.get("heartbeat-ms") {
+            if let Ok(ms) = v.parse::<u64>() {
+                self.heartbeat_ms = ms;
+            }
+        }
+        if let Some(v) = args.get("straggler-factor") {
+            if let Ok(f) = v.parse::<f64>() {
+                self.straggler_factor = f.max(0.0);
+            }
+        }
         if let Some(v) = args.get("seed") {
             if let Ok(n) = v.parse() {
                 self.seed = n;
@@ -243,7 +270,9 @@ impl Config {
                 opts = opts
                     .with_threads(self.local_workers)
                     .with_recovery(self.recovery)
-                    .with_replication(self.replicate_blocks);
+                    .with_replication(self.replicate_blocks)
+                    .with_heartbeat_ms(self.heartbeat_ms)
+                    .with_straggler_factor(self.straggler_factor);
                 if let Some(b) = self.memory_budget_bytes {
                     // On the cluster backend the budget is per worker: each
                     // spawned worker spills to its own BlockStore past it.
@@ -368,14 +397,31 @@ mod tests {
         // through to the cluster options.
         assert!(c.recovery);
         assert_eq!(c.replicate_blocks, 1);
+        // Elasticity knobs default off (reactive detection, no speculation).
+        assert_eq!(c.heartbeat_ms, 0);
+        assert_eq!(c.straggler_factor, 0.0);
         let args = Args::parse(
-            ["--no-recovery", "--replicate-blocks", "3"]
-                .iter()
-                .map(|s| s.to_string()),
+            [
+                "--no-recovery",
+                "--replicate-blocks",
+                "3",
+                "--heartbeat-ms",
+                "250",
+                "--straggler-factor",
+                "3.5",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
         );
         c.apply_args(&args).unwrap();
         assert!(!c.recovery);
         assert_eq!(c.replicate_blocks, 3);
+        assert_eq!(c.heartbeat_ms, 250);
+        assert_eq!(c.straggler_factor, 3.5);
+        // A negative factor clamps to off instead of erroring.
+        let args = Args::parse(["--straggler-factor", "-1"].iter().map(|s| s.to_string()));
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.straggler_factor, 0.0);
 
         let bad = Args::parse(["--backend", "mpi"].iter().map(|s| s.to_string()));
         assert!(Config::default().apply_args(&bad).is_err());

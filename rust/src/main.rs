@@ -11,8 +11,12 @@
 //! Global flags: --config <toml>, --cores a,b,c, --seed, --workers,
 //! --backend local|sim|cluster, --cluster-workers N,
 //! --cluster-addr host:port,…, --no-recovery, --replicate-blocks k,
-//! and the sim.* overrides (see config.rs). The worker subcommand also
-//! takes --fault-plan <spec> (deterministic chaos, e.g. `die@7`).
+//! --heartbeat-ms N, --straggler-factor F, and the sim.* overrides (see
+//! config.rs). The worker subcommand also takes --fault-plan <spec>
+//! (deterministic chaos, e.g. `die@7`, `slow@3`) and --join
+//! <coordinator-addr> to enroll into a running fleet; `worker --drain
+//! <worker-addr> --join <coordinator-addr>` sends a one-shot graceful
+//! decommission request instead of starting a daemon.
 
 use anyhow::Result;
 
@@ -43,6 +47,8 @@ fn main() -> Result<()> {
             eprintln!("  dsarray bench --fig 6 --cores 48,96,192");
             eprintln!("  dsarray ablation --which collections");
             eprintln!("  dsarray worker --listen 127.0.0.1:7401");
+            eprintln!("  dsarray worker --join <coordinator-addr>        (enroll into a running fleet)");
+            eprintln!("  dsarray worker --drain 127.0.0.1:7401 --join <coordinator-addr>");
             eprintln!("  dsarray demo --backend cluster --cluster-addr 127.0.0.1:7401,127.0.0.1:7402");
             std::process::exit(2);
         }
@@ -52,8 +58,20 @@ fn main() -> Result<()> {
 
 /// Cluster worker daemon: bind, announce `LISTENING <addr>` on stdout (the
 /// coordinator and CI parse it — port 0 picks a free port), then serve
-/// blocks until a Shutdown frame or SIGKILL.
+/// blocks until a Shutdown frame or SIGKILL. With `--join
+/// <coordinator-addr>` the worker also enrolls itself into the running
+/// fleet; with `--drain <worker-addr>` no daemon starts at all — the
+/// process just asks the coordinator to decommission that member and
+/// exits.
 fn worker(args: &Args) -> Result<()> {
+    if let Some(target) = args.get("drain") {
+        let coordinator = args.get("join").ok_or_else(|| {
+            anyhow::anyhow!("--drain needs --join <coordinator-addr> to send the request to")
+        })?;
+        rustdslib::tasking::cluster::request_drain(coordinator, target)?;
+        println!("DRAINED {target}");
+        return Ok(());
+    }
     let listen = args.get_str("listen", "127.0.0.1:0");
     // A malformed budget must be a startup error, not a silently unbounded
     // worker that OOMs mid-run far from the configuration mistake.
@@ -74,6 +92,27 @@ fn worker(args: &Args) -> Result<()> {
     println!("LISTENING {}", listener.local_addr()?);
     use std::io::Write as _;
     std::io::stdout().flush()?;
+    if let Some(coordinator) = args.get("join") {
+        // The coordinator's enroll path connects back and pings this
+        // worker before acknowledging, so the join request must go out
+        // while the daemon below is already accepting — hence the thread.
+        // A refused join kills the process: an unenrolled daemon nobody
+        // knows about is an orphan, not a worker.
+        let coordinator = coordinator.to_string();
+        let me = listener.local_addr()?.to_string();
+        std::thread::spawn(move || {
+            match rustdslib::tasking::cluster::request_join(&coordinator, &me) {
+                Ok(()) => {
+                    println!("JOINED {coordinator}");
+                    let _ = std::io::stdout().flush();
+                }
+                Err(e) => {
+                    eprintln!("join via {coordinator} failed: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        });
+    }
     rustdslib::tasking::cluster::serve_worker(
         listener,
         WorkerOptions {
@@ -201,6 +240,11 @@ fn demo(args: &Args) -> Result<()> {
     if rt.is_sim() {
         println!("demo needs a value-producing backend; use --backend local|cluster");
         return Ok(());
+    }
+    if let Some(control) = rt.cluster_control_addr() {
+        // Printed so operators can grow the fleet mid-run:
+        // `dsarray worker --join <this address>`.
+        println!("control: {control}");
     }
     let a = creation::random(&rt, (256, 128), (64, 64), cfg.seed)?;
     let expr = a.transpose()?.norm_axis(1)?.pow(2.0)?.sqrt()?;

@@ -58,6 +58,31 @@
 //! dead). An application-level worker *error* (a live worker answering
 //! `Err`) is never treated as a death and always poisons.
 //!
+//! ## Elasticity
+//!
+//! The fleet is not frozen at startup. The coordinator binds a **control
+//! listener** ([`ClusterExecutor::coordinator_addr`]) accepting
+//! `Join`/`Drain` frames from workers: `dsarray worker --join <addr>`
+//! enrolls a fresh worker mid-run (it starts receiving tasks immediately —
+//! an empty worker has zero outstanding-bytes load, so the load-aware
+//! placement below naturally rebalances onto it), and
+//! [`ClusterExecutor::drain`] decommissions one gracefully — mark it
+//! read-only, migrate its sole-copy blocks to survivors over the existing
+//! Pull path, then drop it from the fleet with **zero tasks replayed**.
+//! An optional **heartbeat** thread ([`ClusterOptions::with_heartbeat_ms`])
+//! pings every worker on a dedicated connection so dead *and* stalled
+//! workers are detected proactively instead of when an in-flight call
+//! finally errors; a worker missing [`HEARTBEAT_MISS_THRESHOLD`]
+//! consecutive beats (reconnect attempts back off exponentially in between)
+//! is declared dead, its blocked calls are severed, and lineage recovery
+//! absorbs it. An optional **straggler monitor**
+//! ([`ClusterOptions::with_straggler_factor`]) tracks per-task-name running
+//! -time EWMAs and speculatively re-arms any task exceeding
+//! `straggler_factor ×` its estimate on another worker;
+//! first-completion-wins under the central lock, the loser's outputs are
+//! freed, and single-assignment over deterministic closures keeps results
+//! bit-identical no matter which copy wins.
+//!
 //! See `docs/CLUSTER.md` (rustdoc: `crate::cluster_guide`) for the frame
 //! format and placement policy, and `docs/FAULT_TOLERANCE.md` (rustdoc:
 //! `crate::fault_tolerance_guide`) for the failure model, the lineage walk
@@ -69,7 +94,7 @@ use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -123,6 +148,21 @@ pub struct ClusterOptions {
     /// clamped to the live worker count. At `k >= 2` a single death usually
     /// costs a location-table lookup instead of a replay. Default 1.
     pub replicate: usize,
+    /// Heartbeat interval in milliseconds (`--heartbeat-ms`); 0 (the
+    /// default) disables proactive liveness checks and worker loss is only
+    /// noticed when an in-flight call errors. When on, each worker is
+    /// pinged on a dedicated connection every interval; after
+    /// [`HEARTBEAT_MISS_THRESHOLD`] consecutive misses (with exponential
+    /// backoff between reconnect attempts) the worker is declared dead and
+    /// lineage recovery absorbs it.
+    pub heartbeat_ms: u64,
+    /// Straggler speculation threshold (`--straggler-factor`); 0.0 (the
+    /// default) disables speculation. When positive, a running task whose
+    /// elapsed time exceeds `straggler_factor ×` the EWMA of its task
+    /// name's past running times is speculatively re-armed on another
+    /// worker; the first completed copy wins under the central lock and the
+    /// loser's outputs are freed.
+    pub straggler_factor: f64,
 }
 
 impl ClusterOptions {
@@ -137,6 +177,8 @@ impl ClusterOptions {
             worker_budget_bytes: None,
             recovery: true,
             replicate: 1,
+            heartbeat_ms: 0,
+            straggler_factor: 0.0,
         }
     }
 
@@ -152,6 +194,8 @@ impl ClusterOptions {
             worker_budget_bytes: None,
             recovery: true,
             replicate: 1,
+            heartbeat_ms: 0,
+            straggler_factor: 0.0,
         }
     }
 
@@ -188,7 +232,26 @@ impl ClusterOptions {
         self.replicate = k.max(1);
         self
     }
+
+    /// Ping each worker every `ms` milliseconds on a dedicated connection
+    /// and declare it dead after [`HEARTBEAT_MISS_THRESHOLD`] consecutive
+    /// misses. 0 disables the heartbeat (the default).
+    pub fn with_heartbeat_ms(mut self, ms: u64) -> Self {
+        self.heartbeat_ms = ms;
+        self
+    }
+
+    /// Speculatively re-execute a task elsewhere once it runs longer than
+    /// `factor ×` the EWMA estimate for its task name. 0.0 disables
+    /// speculation (the default); useful values start around 2–4.
+    pub fn with_straggler_factor(mut self, factor: f64) -> Self {
+        self.straggler_factor = if factor > 0.0 { factor } else { 0.0 };
+        self
+    }
 }
+
+/// Consecutive missed heartbeats after which a worker is declared dead.
+pub const HEARTBEAT_MISS_THRESHOLD: u32 = 3;
 
 /// One coordinator→worker connection; the stream mutex keeps each
 /// request/response pair atomic, so concurrent executor threads never
@@ -196,9 +259,26 @@ impl ClusterOptions {
 struct WorkerConn {
     addr: String,
     stream: Mutex<TcpStream>,
+    /// Unsynchronized clone of the same socket so liveness code can sever
+    /// the connection while a call is blocked inside the stream mutex —
+    /// the blocked call then errors promptly instead of hanging on a
+    /// stalled worker.
+    raw: Option<TcpStream>,
 }
 
 impl WorkerConn {
+    fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to worker {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let raw = stream.try_clone().ok();
+        Ok(Self {
+            addr: addr.to_string(),
+            stream: Mutex::new(stream),
+            raw,
+        })
+    }
+
     /// One request/response round trip; returns the response and the total
     /// wire bytes (both directions, frame headers included).
     fn call(&self, req: &Request) -> Result<(Response, u64)> {
@@ -209,6 +289,23 @@ impl WorkerConn {
             .with_context(|| format!("reading from worker {}", self.addr))?;
         Ok((resp, sent + recvd))
     }
+
+    /// Shut the socket down in both directions; any call blocked on it
+    /// errors out. Used when the heartbeat declares the worker dead.
+    fn sever(&self) {
+        if let Some(raw) = &self.raw {
+            let _ = raw.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+/// One running task copy the straggler monitor watches.
+struct Inflight {
+    name: &'static str,
+    placement: usize,
+    started: Instant,
+    /// A speculative twin has already been armed; never arm a second.
+    speculated: bool,
 }
 
 /// Central coordinator state (graph + scheduler), guarded by one mutex.
@@ -230,9 +327,49 @@ struct ClState {
     /// Round-robin pointer for blocks and tasks with no located inputs.
     rr: usize,
     /// Bit `w` set while worker `w` is reachable. Cleared (forever) on the
-    /// first transport failure talking to it; placement, pulls, frees and
-    /// shutdown all skip dead workers.
+    /// first transport failure talking to it — or on a graceful drain;
+    /// placement, pulls, frees and shutdown all skip dead workers.
     alive: u64,
+    /// Bit `w` set while worker `w` is draining: still alive and readable,
+    /// but read-only — no new placements, replicas or puts land on it.
+    draining: u64,
+    /// Outstanding scheduled bytes per worker (declared output bytes plus
+    /// inputs being pulled toward it); the load signal placement and
+    /// replica spreading use. Grows when workers join.
+    load: Vec<u64>,
+    /// Per-task-name EWMA of running time in seconds — the straggler
+    /// monitor's estimate of "how long should this take".
+    ewma: HashMap<&'static str, f64>,
+    /// Running task copies, keyed by task id (the original copy; a
+    /// speculative twin reuses the entry's `speculated` flag).
+    inflight: HashMap<TaskId, Inflight>,
+    /// Workers a speculative re-arm must avoid (the straggler's slot),
+    /// consumed by the next claim of that task id.
+    speculate_avoid: HashMap<TaskId, u64>,
+}
+
+impl ClState {
+    /// Workers eligible for new writes: alive and not draining.
+    fn eligible(&self) -> u64 {
+        self.alive & !self.draining
+    }
+
+    fn load_of(&self, w: usize) -> u64 {
+        self.load.get(w).copied().unwrap_or(0)
+    }
+
+    fn add_load(&mut self, w: usize, bytes: u64) {
+        if self.load.len() <= w {
+            self.load.resize(w + 1, 0);
+        }
+        self.load[w] += bytes;
+    }
+
+    fn sub_load(&mut self, w: usize, bytes: u64) {
+        if let Some(l) = self.load.get_mut(w) {
+            *l = l.saturating_sub(bytes);
+        }
+    }
 }
 
 /// Why one worker interaction failed — the classification recovery hinges
@@ -258,8 +395,17 @@ impl ClusterFailure {
 struct ClusterInner {
     state: Mutex<ClState>,
     cv: Condvar,
-    conns: Vec<WorkerConn>,
+    /// The membership table: one connection per enrolled worker, append-only
+    /// so bit positions in `copies`/`alive` stay stable for the lifetime of
+    /// the cluster (drained and dead workers keep their slot, masked out of
+    /// `alive`). Guarded by its own lock so workers can join mid-run; never
+    /// acquire `state` while holding this lock — membership writers take
+    /// them strictly in the order conns-then-release-then-state.
+    conns: RwLock<Vec<Arc<WorkerConn>>>,
     transfer: TransferMode,
+    /// Heartbeat interval (0 = off) and straggler threshold (0.0 = off).
+    heartbeat_ms: u64,
+    straggler_factor: f64,
     /// Lineage-replay recovery on worker death (vs poison).
     recovery: bool,
     /// Distinct workers holding each block (>= 1).
@@ -274,22 +420,34 @@ struct ClusterInner {
 }
 
 impl ClusterInner {
+    /// Workers ever enrolled (live, draining, drained and dead alike).
+    fn n_workers(&self) -> usize {
+        self.conns.read().unwrap().len()
+    }
+
+    /// Clone worker `w`'s connection handle out of the membership table.
+    fn conn(&self, w: usize) -> Arc<WorkerConn> {
+        Arc::clone(&self.conns.read().unwrap()[w])
+    }
+
+    fn addr_of(&self, w: usize) -> String {
+        self.conns.read().unwrap()[w].addr.clone()
+    }
+
     /// Fetch one block's payload from worker `w`, classifying the failure.
     fn fetch_block(&self, w: usize, id: DataId) -> Result<(Block, u64), ClusterFailure> {
-        match self.conns[w].call(&Request::Get { id }) {
+        let conn = self.conn(w);
+        match conn.call(&Request::Get { id }) {
             Ok((Response::Block(b), bytes)) => Ok((b, bytes)),
             Ok((Response::Err(m), _)) => Err(ClusterFailure::Protocol {
-                msg: format!("worker {}: {m}", self.conns[w].addr),
+                msg: format!("worker {}: {m}", conn.addr),
             }),
             Ok((other, _)) => Err(ClusterFailure::Protocol {
-                msg: format!(
-                    "worker {}: unexpected response {other:?} to Get",
-                    self.conns[w].addr
-                ),
+                msg: format!("worker {}: unexpected response {other:?} to Get", conn.addr),
             }),
             Err(e) => Err(ClusterFailure::WorkerDown {
                 w,
-                msg: format!("worker {}: {e:#}", self.conns[w].addr),
+                msg: format!("worker {}: {e:#}", conn.addr),
             }),
         }
     }
@@ -298,8 +456,215 @@ impl ClusterInner {
     /// process, and worker death already surfaces through the task path.
     fn send_frees(&self, frees: Vec<(usize, Vec<u32>)>) {
         for (w, ids) in frees {
-            let _ = self.conns[w].call(&Request::Free { ids });
+            let _ = self.conn(w).call(&Request::Free { ids });
         }
+    }
+
+    /// Enroll the worker at `addr` into the running fleet: connect, ping,
+    /// append to the membership table (slots are append-only so existing
+    /// location bits stay valid) and mark it alive. Lock order matters —
+    /// the membership write lock is released before the state lock is
+    /// taken, because hot paths read membership while holding state.
+    fn enroll(&self, addr: &str) -> Result<usize> {
+        let already_alive = {
+            let st = self.state.lock().unwrap();
+            st.alive
+        };
+        {
+            let conns = self.conns.read().unwrap();
+            if let Some(w) = conns.iter().position(|c| c.addr == addr) {
+                if already_alive & (1u64 << w) != 0 {
+                    bail!("worker {addr} is already a live member (slot {w})");
+                }
+                // A drained/dead slot's address can never be re-armed in
+                // place (its copies bits are gone); the worker must come
+                // back on a fresh address.
+                bail!("worker {addr} previously left the fleet; rejoin on a new address");
+            }
+        }
+        let conn = WorkerConn::connect(addr)?;
+        match conn.call(&Request::Ping)? {
+            (Response::Ok, _) => {}
+            (other, _) => bail!("worker {addr} answered ping with {other:?}"),
+        }
+        let w = {
+            let mut conns = self.conns.write().unwrap();
+            if conns.len() >= 64 {
+                bail!("cluster is at the 64-worker location-table limit");
+            }
+            conns.push(Arc::new(conn));
+            conns.len() - 1
+        };
+        {
+            let mut st = self.state.lock().unwrap();
+            st.alive |= 1u64 << w;
+            if st.load.len() <= w {
+                st.load.resize(w + 1, 0);
+            }
+            st.metrics.record_join();
+        }
+        self.cv.notify_all();
+        Ok(w)
+    }
+
+    /// Decommission worker `w` gracefully, with **zero tasks replayed**:
+    ///
+    /// 1. mark it draining (read-only): no new placements, replicas or
+    ///    puts land on it, but its blocks stay readable;
+    /// 2. wait for in-flight work already placed on it to publish;
+    /// 3. migrate every block whose *only* copy it holds to the
+    ///    least-loaded eligible survivor over the existing Pull path;
+    /// 4. drop it from the fleet (clear its location bits and alive bit)
+    ///    and count `workers_drained`.
+    ///
+    /// The worker process is left running; it simply stops being a member.
+    fn drain_worker(&self, w: usize) -> Result<()> {
+        if w >= self.n_workers() {
+            bail!("drain: no worker slot {w}");
+        }
+        let addr = self.addr_of(w);
+        let bit = 1u64 << w;
+        // Phase 1: read-only.
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.alive & bit == 0 {
+                bail!("worker {addr} is not alive (already drained or dead)");
+            }
+            if st.draining & bit != 0 {
+                bail!("worker {addr} is already draining");
+            }
+            if st.eligible() & !bit == 0 {
+                bail!("cannot drain {addr}: it is the last eligible worker");
+            }
+            st.draining |= bit;
+        }
+        self.cv.notify_all();
+
+        // Phase 2: wait out work already placed on it. New claims can no
+        // longer choose it, so this drains monotonically.
+        {
+            let mut st = self.state.lock().unwrap();
+            loop {
+                if st.alive & bit == 0 {
+                    st.draining &= !bit;
+                    bail!("worker {addr} died mid-drain");
+                }
+                if let Some(e) = &st.error {
+                    let e = e.clone();
+                    st.draining &= !bit;
+                    bail!("drain of {addr} aborted, runtime poisoned: {e}");
+                }
+                let busy = st.inflight.values().any(|i| i.placement == w)
+                    || st.pulling.iter().any(|&(_, dest)| dest == w);
+                if !busy {
+                    break;
+                }
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+
+        // Phase 3: migrate sole-copy blocks. Placement excludes the
+        // draining worker, so no *new* sole copies can appear behind this
+        // enumeration; concurrent refcount frees can only shrink it.
+        let sole: Vec<DataId> = {
+            let st = self.state.lock().unwrap();
+            st.copies
+                .iter()
+                .enumerate()
+                .filter(|&(id, &mask)| {
+                    mask == bit
+                        && !st.graph.data[id].evicted
+                        && st.graph.data[id].value.is_none()
+                })
+                .map(|(id, _)| id as DataId)
+                .collect()
+        };
+        for id in sole {
+            loop {
+                // Re-check each round: the block may have been freed, and
+                // the survivor set may have changed.
+                let target = {
+                    let st = self.state.lock().unwrap();
+                    if st.copies.get(id as usize).copied().unwrap_or(0) != bit {
+                        break; // freed (or already migrated) meanwhile
+                    }
+                    let mut best: Option<(u64, usize)> = None;
+                    for t in 0..self.n_workers() {
+                        if t == w || st.eligible() & (1u64 << t) == 0 {
+                            continue;
+                        }
+                        let l = st.load_of(t);
+                        if best.map_or(true, |(bl, _)| l < bl) {
+                            best = Some((l, t));
+                        }
+                    }
+                    match best {
+                        Some((_, t)) => t,
+                        None => {
+                            drop(st);
+                            let mut st = self.state.lock().unwrap();
+                            st.draining &= !bit;
+                            bail!("drain of {addr}: no eligible survivor for block {id}");
+                        }
+                    }
+                };
+                match self.conn(target).call(&Request::Pull {
+                    id,
+                    from: addr.clone(),
+                }) {
+                    Ok((Response::Pulled { bytes }, io)) => {
+                        let mut st = self.state.lock().unwrap();
+                        ensure_copies(&mut st.copies, id);
+                        st.copies[id as usize] |= 1u64 << target;
+                        st.metrics.record_wire(io + bytes);
+                        st.metrics.record_locality(0, 1);
+                        break;
+                    }
+                    Ok((Response::PullPeerDown(m), _)) => {
+                        // The draining worker itself is unreachable: the
+                        // drain becomes a death, lineage recovery applies.
+                        let mut st = self.state.lock().unwrap();
+                        st.draining &= !bit;
+                        handle_worker_death(&mut st, w, self)?;
+                        drop(st);
+                        self.cv.notify_all();
+                        bail!("worker {addr} died mid-drain: {m}");
+                    }
+                    Ok((other, _)) => {
+                        let mut st = self.state.lock().unwrap();
+                        st.draining &= !bit;
+                        let m = match other {
+                            Response::Err(m) => m,
+                            o => format!("unexpected response {o:?} to Pull"),
+                        };
+                        bail!("drain of {addr}: migrating block {id}: {m}");
+                    }
+                    Err(_) => {
+                        // The *target* died; absorb and retry elsewhere.
+                        let mut st = self.state.lock().unwrap();
+                        handle_worker_death(&mut st, target, self)?;
+                        drop(st);
+                        self.cv.notify_all();
+                    }
+                }
+            }
+        }
+
+        // Phase 4: decommission. Every sole copy now has a survivor
+        // replica, so clearing the drained worker's bits never zeroes a
+        // live block's mask.
+        {
+            let mut st = self.state.lock().unwrap();
+            for mask in st.copies.iter_mut() {
+                *mask &= !bit;
+            }
+            st.pulling.retain(|&(_, dest)| dest != w);
+            st.alive &= !bit;
+            st.draining &= !bit;
+            st.metrics.record_drain();
+        }
+        self.cv.notify_all();
+        Ok(())
     }
 }
 
@@ -319,27 +684,34 @@ fn full_mask(n: usize) -> u64 {
     }
 }
 
-/// Next *live* worker in round-robin order. The all-dead case poisons
-/// before any caller gets here, so at least one alive bit is set.
-fn next_rr(st: &mut ClState, n: usize) -> usize {
+/// Next *eligible* worker in round-robin order (eligible = alive and not
+/// draining; callers may further restrict the mask). The all-dead case
+/// poisons before any caller gets here, so at least one bit is set.
+fn next_rr(st: &mut ClState, n: usize, eligible: u64) -> usize {
     for _ in 0..n {
         let w = st.rr % n;
         st.rr = st.rr.wrapping_add(1);
-        if st.alive & (1u64 << w) != 0 {
+        if eligible & (1u64 << w) != 0 {
             return w;
         }
     }
     st.rr % n
 }
 
-/// The placement policy, kept pure for unit testing: the *live* worker
-/// holding the most input bytes wins (ties break toward the lowest index);
-/// `None` when no input is located on any live worker (the caller
-/// round-robins over survivors).
-fn choose_placement(inputs: &[(u64, usize)], n_workers: usize, alive: u64) -> Option<usize> {
-    let mut best: Option<(usize, usize)> = None;
+/// The placement policy, kept pure for unit testing: the *eligible* worker
+/// holding the most input bytes wins; ties break toward the least
+/// outstanding-bytes `load` (so a freshly joined, empty worker picks up
+/// replicated work immediately), then toward the lowest index. `None` when
+/// no input is located on any eligible worker (the caller round-robins).
+fn choose_placement(
+    inputs: &[(u64, usize)],
+    n_workers: usize,
+    eligible: u64,
+    load: &[u64],
+) -> Option<usize> {
+    let mut best: Option<(usize, usize, u64)> = None;
     for w in 0..n_workers {
-        if alive & (1u64 << w) == 0 {
+        if eligible & (1u64 << w) == 0 {
             continue;
         }
         let held: usize = inputs
@@ -347,11 +719,27 @@ fn choose_placement(inputs: &[(u64, usize)], n_workers: usize, alive: u64) -> Op
             .filter(|(mask, _)| mask & (1u64 << w) != 0)
             .map(|(_, bytes)| *bytes)
             .sum();
-        if held > 0 && best.map_or(true, |(_, b)| held > b) {
-            best = Some((w, held));
+        let l = load.get(w).copied().unwrap_or(0);
+        if held > 0 && best.map_or(true, |(_, b, bl)| held > b || (held == b && l < bl)) {
+            best = Some((w, held, l));
         }
     }
-    best.map(|(w, _)| w)
+    best.map(|(w, _, _)| w)
+}
+
+/// Replica targets for a block placed on `placement`: up to `k - 1` other
+/// eligible workers, least-loaded first (lowest index on ties) — load-aware
+/// spreading instead of the old lowest-index rule.
+fn choose_replicas(placement: usize, k: usize, n_workers: usize, eligible: u64, load: &[u64]) -> Vec<usize> {
+    if k <= 1 {
+        return Vec::new();
+    }
+    let mut others: Vec<usize> = (0..n_workers)
+        .filter(|&w| w != placement && eligible & (1u64 << w) != 0)
+        .collect();
+    others.sort_by_key(|&w| (load.get(w).copied().unwrap_or(0), w));
+    others.truncate(k - 1);
+    others
 }
 
 /// Absorb a transport-level failure talking to worker `w` — the heart of
@@ -377,17 +765,18 @@ fn handle_worker_death(st: &mut ClState, w: usize, inner: &ClusterInner) -> Resu
     if !inner.recovery {
         bail!(
             "worker {} died and recovery is disabled",
-            inner.conns[w].addr
+            inner.addr_of(w)
         );
     }
     let t0 = Instant::now();
     st.alive &= !bit;
+    st.draining &= !bit; // a death trumps any drain in progress
     if st.alive == 0 {
         // Nothing to replay onto. Count the loss, then poison.
         st.metrics.record_recovery(0, 0, 1);
         bail!(
             "worker {} died and no workers survive",
-            inner.conns[w].addr
+            inner.addr_of(w)
         );
     }
     // Drop the dead worker from the location table; blocks whose only
@@ -429,7 +818,7 @@ fn handle_worker_death(st: &mut ClState, w: usize, inner: &ClusterInner) -> Resu
                 if inner.root_store.is_none() {
                     bail!(
                         "block {id} lost with worker {} has no producing task to replay",
-                        inner.conns[w].addr
+                        inner.addr_of(w)
                     );
                 }
                 // Root: re-loadable from the coordinator's journal.
@@ -542,6 +931,11 @@ struct ExecPlan {
     /// Further live workers mirroring the outputs (k-way replication).
     replicas: Vec<usize>,
     fetches: Vec<FetchPlan>,
+    /// Claim time, for the per-task-name running-time EWMA.
+    started: Instant,
+    /// Outstanding bytes charged to `placement` at claim; released when
+    /// this copy publishes.
+    load_bytes: u64,
 }
 
 /// Claim-time planning under the central lock: verify every input is
@@ -556,7 +950,7 @@ fn build_plan(
     transfer: TransferMode,
     inner: &ClusterInner,
 ) -> Result<Option<ExecPlan>> {
-    let n_workers = inner.conns.len();
+    let n_workers = inner.n_workers();
     let spec = &st.graph.tasks[tid as usize].spec;
     let name = spec.name;
     let body = spec.body.clone();
@@ -633,23 +1027,26 @@ fn build_plan(
             _ => None,
         })
         .collect();
-    let placement = match choose_placement(&weighted, n_workers, st.alive) {
+    // A speculative re-arm must land away from the straggler it doubles;
+    // degrade gracefully when no other worker is eligible.
+    let avoid = st.speculate_avoid.remove(&tid).unwrap_or(0);
+    let mut eligible = st.eligible() & !avoid;
+    if eligible == 0 {
+        eligible = st.eligible();
+    }
+    if eligible == 0 {
+        eligible = st.alive;
+    }
+    let placement = match choose_placement(&weighted, n_workers, eligible, &st.load) {
         Some(w) => w,
-        None => next_rr(st, n_workers),
+        None => next_rr(st, n_workers, eligible),
     };
     let bit = 1u64 << placement;
-    // k-way replication: the lowest-indexed other live workers mirror the
-    // outputs (deterministic given the same survivor set).
-    let k = inner.replicate.min(st.alive.count_ones() as usize).max(1);
-    let mut replicas: Vec<usize> = Vec::new();
-    for w in 0..n_workers {
-        if replicas.len() + 1 >= k {
-            break;
-        }
-        if w != placement && st.alive & (1u64 << w) != 0 {
-            replicas.push(w);
-        }
-    }
+    // k-way replication: spread mirrors across the least-loaded other
+    // eligible workers (load-aware, so a freshly joined worker absorbs
+    // replicas first).
+    let k = inner.replicate.min(eligible.count_ones() as usize).max(1);
+    let replicas = choose_replicas(placement, k, n_workers, eligible, &st.load);
 
     let mut hits = 0u64;
     let mut transfers = 0u64;
@@ -698,6 +1095,24 @@ fn build_plan(
         fetches.push(FetchPlan { id, source });
     }
     st.metrics.record_locality(hits, transfers);
+    st.metrics.record_task_on_worker(placement);
+    // Charge the placement worker for this task's declared output bytes —
+    // the outstanding-bytes signal load-aware placement reads. Released at
+    // publish.
+    let load_bytes: u64 = out_ids
+        .iter()
+        .map(|&o| st.graph.data[o as usize].meta.bytes() as u64)
+        .sum();
+    st.add_load(placement, load_bytes);
+    // Register the copy for the straggler monitor. A speculative twin
+    // reuses the original's entry (`or_insert` keeps the first claim), so
+    // each task is speculated at most once.
+    st.inflight.entry(tid).or_insert(Inflight {
+        name,
+        placement,
+        started: Instant::now(),
+        speculated: false,
+    });
     Ok(Some(ExecPlan {
         tid,
         name,
@@ -707,6 +1122,8 @@ fn build_plan(
         placement,
         replicas,
         fetches,
+        started: Instant::now(),
+        load_bytes,
     }))
 }
 
@@ -748,11 +1165,13 @@ fn execute_plan(inner: &Arc<ClusterInner>, plan: ExecPlan) {
             }
             Source::Remote { serve, pull_from } => {
                 if let Some(src) = pull_from {
+                    let src_addr = inner.addr_of(*src);
+                    let serve_conn = inner.conn(*serve);
                     let req = Request::Pull {
                         id: f.id,
-                        from: inner.conns[*src].addr.clone(),
+                        from: src_addr.clone(),
                     };
-                    match inner.conns[*serve].call(&req) {
+                    match serve_conn.call(&req) {
                         Ok((Response::Pulled { bytes }, io)) => {
                             wire_bytes += io + bytes;
                             pulled.push((f.id, *serve));
@@ -763,16 +1182,13 @@ fn execute_plan(inner: &Arc<ClusterInner>, plan: ExecPlan) {
                             wire_bytes += io;
                             failure = Some(ClusterFailure::WorkerDown {
                                 w: *src,
-                                msg: format!(
-                                    "pull peer {}: {m}",
-                                    inner.conns[*src].addr
-                                ),
+                                msg: format!("pull peer {src_addr}: {m}"),
                             });
                         }
                         Ok((Response::Err(m), io)) => {
                             wire_bytes += io;
                             failure = Some(ClusterFailure::Protocol {
-                                msg: format!("worker {}: {m}", inner.conns[*serve].addr),
+                                msg: format!("worker {}: {m}", serve_conn.addr),
                             });
                         }
                         Ok((other, io)) => {
@@ -780,17 +1196,14 @@ fn execute_plan(inner: &Arc<ClusterInner>, plan: ExecPlan) {
                             failure = Some(ClusterFailure::Protocol {
                                 msg: format!(
                                     "worker {}: unexpected response {other:?} to Pull",
-                                    inner.conns[*serve].addr
+                                    serve_conn.addr
                                 ),
                             });
                         }
                         Err(e) => {
                             failure = Some(ClusterFailure::WorkerDown {
                                 w: *serve,
-                                msg: format!(
-                                    "worker {}: {e:#}",
-                                    inner.conns[*serve].addr
-                                ),
+                                msg: format!("worker {}: {e:#}", serve_conn.addr),
                             });
                         }
                     }
@@ -874,13 +1287,45 @@ fn execute_plan(inner: &Arc<ClusterInner>, plan: ExecPlan) {
             }
         }
         st.metrics.record_wire(wire_bytes);
+        st.sub_load(plan.placement, plan.load_bytes);
+        // First-completion-wins: if this task is no longer `Running`, a
+        // speculative twin already published (or a recovery path requeued
+        // it). Deterministic closures over single-assignment inputs make
+        // both copies bit-identical, so the loser is simply discarded —
+        // its outputs freed wherever they landed outside the winner's
+        // committed location set.
+        let task_state = st.graph.tasks[plan.tid as usize].state;
+        let mut loser_frees: Vec<(usize, Vec<u32>)> = Vec::new();
         match outcome {
+            Ok(()) if task_state != TaskState::Running => {
+                let mut targets = Vec::with_capacity(1 + plan.replicas.len());
+                targets.push(plan.placement);
+                targets.extend_from_slice(&plan.replicas);
+                for &t in &targets {
+                    if st.alive & (1u64 << t) == 0 {
+                        continue;
+                    }
+                    let ids: Vec<u32> = plan
+                        .out_ids
+                        .iter()
+                        .copied()
+                        .filter(|&o| {
+                            st.copies.get(o as usize).copied().unwrap_or(0) & (1u64 << t)
+                                == 0
+                        })
+                        .collect();
+                    if !ids.is_empty() {
+                        loser_frees.push((t, ids));
+                    }
+                }
+            }
             // The placement worker died between our pushes and this
             // publish: the outputs went down with it, so requeue instead
             // of completing with phantom locations.
             Ok(()) if st.alive & (1u64 << plan.placement) == 0 => {
                 st.graph.tasks[plan.tid as usize].state = TaskState::Ready;
                 st.ready.push_back(plan.tid);
+                st.inflight.remove(&plan.tid);
             }
             Ok(()) => {
                 let mut bits = 1u64 << plan.placement;
@@ -911,15 +1356,31 @@ fn execute_plan(inner: &Arc<ClusterInner>, plan: ExecPlan) {
                 for dep in done.now_ready {
                     st.ready.push_back(dep);
                 }
+                // Feed the winner's running time into the straggler
+                // estimate and retire the inflight entry.
+                let sample = plan.started.elapsed().as_secs_f64();
+                let est = match st.ewma.get(plan.name) {
+                    Some(&prev) => 0.7 * prev + 0.3 * sample,
+                    None => sample,
+                };
+                st.ewma.insert(plan.name, est);
+                st.inflight.remove(&plan.tid);
             }
             Err(ClusterFailure::WorkerDown { w, msg }) => {
                 match handle_worker_death(st, w, inner) {
                     // Recovery absorbed the death: the lost sub-graph is
                     // re-armed, so requeue this task — its inputs resolve
-                    // against survivors (or park on the replay) next plan.
+                    // against survivors (or park on the replay) next plan —
+                    // unless a speculative twin already completed it.
                     Ok(()) => {
-                        st.graph.tasks[plan.tid as usize].state = TaskState::Ready;
-                        st.ready.push_back(plan.tid);
+                        if task_state == TaskState::Running
+                            && st.graph.tasks[plan.tid as usize].state
+                                == TaskState::Running
+                        {
+                            st.graph.tasks[plan.tid as usize].state = TaskState::Ready;
+                            st.ready.push_back(plan.tid);
+                        }
+                        st.inflight.remove(&plan.tid);
                     }
                     Err(e) => {
                         st.graph.tasks[plan.tid as usize].state = TaskState::Failed;
@@ -930,6 +1391,10 @@ fn execute_plan(inner: &Arc<ClusterInner>, plan: ExecPlan) {
                     }
                 }
             }
+            // A loser's protocol error is masked: determinism means the
+            // winning copy saw the same closure result, and it already
+            // published the authoritative outcome.
+            Err(ClusterFailure::Protocol { .. }) if task_state != TaskState::Running => {}
             Err(ClusterFailure::Protocol { msg }) => {
                 st.graph.tasks[plan.tid as usize].state = TaskState::Failed;
                 st.error.get_or_insert(format!(
@@ -938,7 +1403,9 @@ fn execute_plan(inner: &Arc<ClusterInner>, plan: ExecPlan) {
                 ));
             }
         }
-        drain_frees(st, inner.conns.len())
+        let mut frees = drain_frees(st, inner.n_workers());
+        frees.extend(loser_frees);
+        frees
     };
     inner.send_frees(frees);
     inner.cv.notify_all();
@@ -972,7 +1439,7 @@ fn push_outputs(
     for (&id, block) in out_ids.iter().zip(outs) {
         let mut block = Some(block);
         for (i, &t) in targets.iter().enumerate() {
-            let conn = &inner.conns[t];
+            let conn = inner.conn(t);
             // The last target consumes the block; earlier ones get clones.
             let payload = if i + 1 == targets.len() {
                 block.take().expect("one consume per output")
@@ -1009,6 +1476,13 @@ fn push_outputs(
 }
 
 fn cluster_exec_loop(inner: Arc<ClusterInner>) {
+    // Idle waits are condvar-signaled: block arrival, worker death, replay
+    // re-arms, submissions, joins and shutdown all notify under the same
+    // mutex. The timed wake is belt-and-braces only, so it backs off
+    // exponentially to a cap instead of burning a rescan every 10ms.
+    const IDLE_MIN: Duration = Duration::from_millis(10);
+    const IDLE_MAX: Duration = Duration::from_millis(500);
+    let mut idle = IDLE_MIN;
     loop {
         // ---- Acquire + claim + plan under one lock acquisition ----
         let plan = {
@@ -1018,16 +1492,24 @@ fn cluster_exec_loop(inner: Arc<ClusterInner>) {
                     return;
                 }
                 if let Some(t) = guard.ready.pop_front() {
+                    // Drop stale entries: a speculative re-arm whose twin
+                    // already finished leaves a Done task in the queue.
+                    let s = guard.graph.tasks[t as usize].state;
+                    if s == TaskState::Done || s == TaskState::Failed {
+                        guard.speculate_avoid.remove(&t);
+                        continue;
+                    }
                     break t;
                 }
-                // Timeout is a belt-and-braces rescan (pushes notify under
-                // the same mutex), mirroring the local executor.
-                let (g, _) = inner
-                    .cv
-                    .wait_timeout(guard, Duration::from_millis(10))
-                    .unwrap();
+                let (g, timeout) = inner.cv.wait_timeout(guard, idle).unwrap();
                 guard = g;
+                idle = if timeout.timed_out() {
+                    (idle * 2).min(IDLE_MAX)
+                } else {
+                    IDLE_MIN
+                };
             };
+            idle = IDLE_MIN;
             let st = &mut *guard;
             st.graph.tasks[tid as usize].state = TaskState::Running;
             st.running += 1;
@@ -1064,8 +1546,17 @@ pub struct ClusterExecutor {
     threads: Mutex<Vec<JoinHandle<()>>>,
     children: Mutex<Vec<Child>>,
     /// Connection indices `>= owned_from` belong to workers we spawned (and
-    /// shut down on drop); earlier ones are externally managed.
+    /// shut down on drop); earlier ones are externally managed. Workers
+    /// joining mid-run land past the spawned range and are never owned.
     owned_from: usize,
+    /// How many workers were enrolled at boot; `owned_from..owned_children`
+    /// spans exactly the spawned children.
+    owned_children: usize,
+    /// The control listener's address (`Join`/`Drain` frames).
+    control_addr: String,
+    /// Heartbeat / straggler-monitor and control-listener threads, joined
+    /// at drop alongside the executor pool.
+    aux_threads: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl ClusterExecutor {
@@ -1091,7 +1582,8 @@ impl ClusterExecutor {
             }
         };
 
-        let alive = full_mask(conns.len());
+        let n_boot = conns.len();
+        let alive = full_mask(n_boot);
         let inner = Arc::new(ClusterInner {
             state: Mutex::new(ClState {
                 graph: Graph::default(),
@@ -1104,10 +1596,17 @@ impl ClusterExecutor {
                 pulling: HashSet::new(),
                 rr: 0,
                 alive,
+                draining: 0,
+                load: vec![0; n_boot],
+                ewma: HashMap::new(),
+                inflight: HashMap::new(),
+                speculate_avoid: HashMap::new(),
             }),
             cv: Condvar::new(),
-            conns,
+            conns: RwLock::new(conns.into_iter().map(Arc::new).collect()),
             transfer: opts.transfer,
+            heartbeat_ms: opts.heartbeat_ms,
+            straggler_factor: opts.straggler_factor,
             recovery: opts.recovery,
             replicate: opts.replicate.max(1),
             root_store,
@@ -1118,11 +1617,30 @@ impl ClusterExecutor {
                 std::thread::spawn(move || cluster_exec_loop(inner))
             })
             .collect();
+        let mut aux_threads = Vec::new();
+        // Control listener: workers join (and request drains) mid-run here.
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding control listener")?;
+        let control_addr = listener
+            .local_addr()
+            .context("control listener address")?
+            .to_string();
+        {
+            let inner = Arc::clone(&inner);
+            aux_threads.push(std::thread::spawn(move || control_loop(inner, listener)));
+        }
+        // Liveness + straggler monitor, only when either knob is on.
+        if opts.heartbeat_ms > 0 || opts.straggler_factor > 0.0 {
+            let inner = Arc::clone(&inner);
+            aux_threads.push(std::thread::spawn(move || monitor_loop(inner)));
+        }
         Ok(Self {
             inner,
             threads: Mutex::new(threads),
             children: Mutex::new(children),
             owned_from,
+            owned_children: n_boot,
+            control_addr,
+            aux_threads: Mutex::new(aux_threads),
         })
     }
 
@@ -1153,13 +1671,7 @@ impl ClusterExecutor {
         }
         let mut conns = Vec::with_capacity(addrs.len());
         for a in &addrs {
-            let stream =
-                TcpStream::connect(a).with_context(|| format!("connecting to worker {a}"))?;
-            stream.set_nodelay(true).ok();
-            conns.push(WorkerConn {
-                addr: a.clone(),
-                stream: Mutex::new(stream),
-            });
+            conns.push(WorkerConn::connect(a)?);
         }
         for c in &conns {
             match c.call(&Request::Ping)? {
@@ -1170,15 +1682,245 @@ impl ClusterExecutor {
         Ok(conns)
     }
 
-    /// Addresses of the connected workers, in location-table bit order.
+    /// Addresses of the enrolled workers, in location-table bit order
+    /// (drained and dead workers keep their slot).
     pub fn worker_addrs(&self) -> Vec<String> {
-        self.inner.conns.iter().map(|c| c.addr.clone()).collect()
+        self.inner
+            .conns
+            .read()
+            .unwrap()
+            .iter()
+            .map(|c| c.addr.clone())
+            .collect()
+    }
+
+    /// Address of the coordinator's control listener. A worker started with
+    /// `dsarray worker --join <this-addr>` enrolls itself here mid-run;
+    /// `Drain` frames arrive here too.
+    pub fn coordinator_addr(&self) -> String {
+        self.control_addr.clone()
+    }
+
+    /// Enroll the worker listening at `addr` into the running fleet and
+    /// return its location-table slot. It starts receiving tasks on the
+    /// next scheduling decision (an empty worker has zero outstanding-bytes
+    /// load, so load-aware placement rebalances onto it naturally).
+    pub fn join_worker(&self, addr: &str) -> Result<usize> {
+        self.inner.enroll(addr)
+    }
+
+    /// Gracefully decommission worker `w`: mark it read-only, migrate its
+    /// sole-copy blocks to survivors over the Pull path, then drop it from
+    /// the fleet — zero tasks replayed. The worker process itself is left
+    /// running (it merely stops being a member).
+    pub fn drain(&self, w: usize) -> Result<()> {
+        self.inner.drain_worker(w)
+    }
+}
+
+/// Accept loop for the coordinator's control listener: each connection may
+/// carry any number of `Join`/`Drain` (and `Ping`) frames. Connections are
+/// handled on their own threads so a long drain never blocks a join.
+fn control_loop(inner: Arc<ClusterInner>, listener: TcpListener) {
+    for stream in listener.incoming() {
+        if inner.state.lock().unwrap().shutdown {
+            return;
+        }
+        let Ok(stream) = stream else { continue };
+        stream.set_nodelay(true).ok();
+        let inner = Arc::clone(&inner);
+        std::thread::spawn(move || control_conn_loop(&inner, stream));
+    }
+}
+
+fn control_conn_loop(inner: &ClusterInner, mut stream: TcpStream) {
+    loop {
+        let req = match wire::read_request(&mut stream) {
+            Ok(r) => r,
+            Err(_) => return, // peer closed (or broke) the control stream
+        };
+        let resp = match req {
+            Request::Ping => Response::Ok,
+            Request::Join { addr } => match inner.enroll(&addr) {
+                Ok(_) => Response::Ok,
+                Err(e) => Response::Err(format!("join {addr}: {e:#}")),
+            },
+            Request::Drain { addr } => {
+                let w = inner
+                    .conns
+                    .read()
+                    .unwrap()
+                    .iter()
+                    .position(|c| c.addr == addr);
+                match w {
+                    None => Response::Err(format!("drain {addr}: no such worker")),
+                    Some(w) => match inner.drain_worker(w) {
+                        Ok(()) => Response::Ok,
+                        Err(e) => Response::Err(format!("drain {addr}: {e:#}")),
+                    },
+                }
+            }
+            other => Response::Err(format!(
+                "{other:?} is not a control request (want Join/Drain/Ping)"
+            )),
+        };
+        if wire::write_response(&mut stream, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+/// One heartbeat probe on a dedicated, timeout-bounded connection. The
+/// shared [`WorkerConn`] stream is useless for liveness — a probe there
+/// would queue behind whatever stalled call currently holds its mutex.
+fn heartbeat_probe(addr: &str, timeout: Duration) -> bool {
+    use std::net::ToSocketAddrs;
+    let Ok(mut resolved) = addr.to_socket_addrs() else {
+        return false;
+    };
+    let Some(sock) = resolved.next() else {
+        return false;
+    };
+    let Ok(mut s) = TcpStream::connect_timeout(&sock, timeout) else {
+        return false;
+    };
+    s.set_read_timeout(Some(timeout)).ok();
+    s.set_write_timeout(Some(timeout)).ok();
+    if wire::write_request(&mut s, &Request::Ping).is_err() {
+        return false;
+    }
+    matches!(wire::read_response(&mut s), Ok((Response::Ok, _)))
+}
+
+/// Liveness + straggler monitor. Each tick (the heartbeat interval, or
+/// 50ms when only speculation is on) it:
+///
+/// * pings every live worker on a dedicated connection; a worker missing
+///   [`HEARTBEAT_MISS_THRESHOLD`] consecutive beats — reconnect attempts
+///   back off exponentially in between — is declared dead: lineage
+///   recovery absorbs it under the central lock and its main connection is
+///   severed so calls blocked on a stalled worker error promptly;
+/// * scans in-flight tasks and speculatively re-arms any copy running
+///   longer than `straggler_factor ×` its task name's EWMA estimate on
+///   another worker (at most one twin per task, first completion wins).
+fn monitor_loop(inner: Arc<ClusterInner>) {
+    let tick = Duration::from_millis(if inner.heartbeat_ms > 0 {
+        inner.heartbeat_ms
+    } else {
+        50
+    });
+    let probe_timeout = tick.max(Duration::from_millis(50));
+    // Per-slot consecutive-miss counts and backoff skip budgets.
+    let mut misses: Vec<u32> = Vec::new();
+    let mut skip: Vec<u32> = Vec::new();
+    let mut last_beat = Instant::now().checked_sub(tick).unwrap_or_else(Instant::now);
+    loop {
+        // Tick = condvar wait with timeout, so shutdown wakes us promptly.
+        {
+            let guard = inner.state.lock().unwrap();
+            if guard.shutdown {
+                return;
+            }
+            let (guard, _) = inner.cv.wait_timeout(guard, tick).unwrap();
+            if guard.shutdown {
+                return;
+            }
+        }
+
+        // ---- Straggler speculation ----
+        if inner.straggler_factor > 0.0 {
+            let mut notify = false;
+            {
+                let mut st = inner.state.lock().unwrap();
+                let now = Instant::now();
+                let mut arm: Vec<(TaskId, usize)> = Vec::new();
+                for (&tid, inf) in st.inflight.iter() {
+                    if inf.speculated {
+                        continue;
+                    }
+                    let Some(&est) = st.ewma.get(inf.name) else {
+                        continue; // no estimate yet for this task name
+                    };
+                    let est = est.max(0.010); // 10ms floor against noise
+                    let elapsed = now.duration_since(inf.started).as_secs_f64();
+                    if elapsed <= inner.straggler_factor * est {
+                        continue;
+                    }
+                    // Only worth doubling when another worker is eligible.
+                    if st.eligible() & !(1u64 << inf.placement) != 0 {
+                        arm.push((tid, inf.placement));
+                    }
+                }
+                for (tid, placement) in arm {
+                    if let Some(inf) = st.inflight.get_mut(&tid) {
+                        inf.speculated = true;
+                    }
+                    st.speculate_avoid.insert(tid, 1u64 << placement);
+                    st.ready.push_back(tid);
+                    st.metrics.record_speculated();
+                    notify = true;
+                }
+            }
+            if notify {
+                inner.cv.notify_all();
+            }
+        }
+
+        // ---- Heartbeat liveness ----
+        if inner.heartbeat_ms == 0 {
+            continue;
+        }
+        // The condvar wakes early on every notify; probes pace themselves
+        // on a real deadline so busy runtimes don't ping at notify rate.
+        if last_beat.elapsed() < tick {
+            continue;
+        }
+        last_beat = Instant::now();
+        let (alive, n) = {
+            let st = inner.state.lock().unwrap();
+            (st.alive, inner.n_workers())
+        };
+        misses.resize(n.max(misses.len()), 0);
+        skip.resize(n.max(skip.len()), 0);
+        for w in 0..n {
+            if alive & (1u64 << w) == 0 {
+                continue;
+            }
+            if skip[w] > 0 {
+                skip[w] -= 1; // exponential backoff between reconnects
+                continue;
+            }
+            let addr = inner.addr_of(w);
+            if heartbeat_probe(&addr, probe_timeout) {
+                misses[w] = 0;
+                continue;
+            }
+            misses[w] += 1;
+            if misses[w] < HEARTBEAT_MISS_THRESHOLD {
+                // Back off 2^misses - 1 ticks before the next attempt.
+                skip[w] = (1u32 << misses[w].min(4)) - 1;
+                continue;
+            }
+            misses[w] = 0;
+            // Declared dead: absorb through lineage recovery, then sever
+            // the main connection so blocked in-flight calls error instead
+            // of hanging on a stalled worker.
+            {
+                let mut st = inner.state.lock().unwrap();
+                if let Err(e) = handle_worker_death(&mut st, w, &inner) {
+                    st.error
+                        .get_or_insert(format!("heartbeat lost worker {addr}: {e:#}"));
+                }
+            }
+            inner.conn(w).sever();
+            inner.cv.notify_all();
+        }
     }
 }
 
 impl Executor for ClusterExecutor {
     fn workers(&self) -> usize {
-        self.inner.conns.len()
+        self.inner.n_workers()
     }
 
     fn put_block(&self, block: Block) -> DataId {
@@ -1188,15 +1930,18 @@ impl Executor for ClusterExecutor {
             let st = &mut *guard;
             let id = st.graph.put_block(meta, None);
             ensure_copies(&mut st.copies, id);
-            // k distinct live targets, round-robin so roots stay spread.
+            // k distinct eligible targets, round-robin so roots stay
+            // spread; draining workers are read-only and never targeted.
             let k = self
                 .inner
                 .replicate
-                .min(st.alive.count_ones() as usize)
+                .min(st.eligible().count_ones() as usize)
                 .max(1);
+            let n = self.inner.n_workers();
+            let eligible = if st.eligible() != 0 { st.eligible() } else { st.alive };
             let mut targets: Vec<usize> = Vec::with_capacity(k);
             while targets.len() < k {
-                let w = next_rr(st, self.inner.conns.len());
+                let w = next_rr(st, n, eligible);
                 if !targets.contains(&w) {
                     targets.push(w);
                 }
@@ -1227,7 +1972,7 @@ impl Executor for ClusterExecutor {
             } else {
                 block.as_ref().expect("clone precedes consume").clone()
             };
-            match self.inner.conns[w].call(&Request::Put { id, block: payload }) {
+            match self.inner.conn(w).call(&Request::Put { id, block: payload }) {
                 Ok((Response::Ok, bytes)) => {
                     wire += bytes;
                     placed |= 1u64 << w;
@@ -1240,7 +1985,7 @@ impl Executor for ClusterExecutor {
                     let mut st = self.inner.state.lock().unwrap();
                     st.error.get_or_insert(format!(
                         "put_block({id}) on worker {}: {msg}",
-                        self.inner.conns[w].addr
+                        self.inner.addr_of(w)
                     ));
                     return id;
                 }
@@ -1250,11 +1995,15 @@ impl Executor for ClusterExecutor {
                     // and move on; without it, poison with the old message.
                     let mut st = self.inner.state.lock().unwrap();
                     match handle_worker_death(&mut st, w, &self.inner) {
-                        Ok(()) => continue,
+                        Ok(()) => {
+                            drop(st);
+                            self.inner.cv.notify_all();
+                            continue;
+                        }
                         Err(death) => {
                             st.error.get_or_insert(format!(
                                 "put_block({id}) on worker {}: {e:#} ({death:#})",
-                                self.inner.conns[w].addr
+                                self.inner.addr_of(w)
                             ));
                             return id;
                         }
@@ -1307,7 +2056,7 @@ impl Executor for ClusterExecutor {
                     st.metrics.record_evicted(bytes);
                 }
             }
-            drain_frees(st, self.inner.conns.len())
+            drain_frees(st, self.inner.n_workers())
         };
         self.inner.send_frees(frees);
         if any_ready {
@@ -1486,7 +2235,7 @@ impl Executor for ClusterExecutor {
                     st.metrics.record_evicted(bytes);
                 }
             }
-            drain_frees(st, self.inner.conns.len())
+            drain_frees(st, self.inner.n_workers())
         };
         self.inner.send_frees(frees);
     }
@@ -1494,6 +2243,18 @@ impl Executor for ClusterExecutor {
     fn pin(&self, id: DataId) {
         let mut st = self.inner.state.lock().unwrap();
         st.graph.data[id as usize].pinned = true;
+    }
+
+    fn join_worker(&self, addr: &str) -> Result<usize> {
+        ClusterExecutor::join_worker(self, addr)
+    }
+
+    fn drain_worker(&self, w: usize) -> Result<()> {
+        self.drain(w)
+    }
+
+    fn control_addr(&self) -> Option<String> {
+        Some(self.coordinator_addr())
     }
 }
 
@@ -1508,16 +2269,43 @@ impl Drop for ClusterExecutor {
         for h in self.threads.lock().unwrap().drain(..) {
             let _ = h.join();
         }
+        // The control accept loop blocks in `accept`; a dummy connection
+        // wakes it so it observes the shutdown flag and exits.
+        let _ = TcpStream::connect(&self.control_addr);
+        for h in self.aux_threads.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
         // Gracefully stop the workers we spawned; externally-managed ones
-        // (connected by address) stay up. Workers already marked dead get
-        // no shutdown message — writing to a broken pipe is pointless and
-        // their children are reaped below without the graceful wait.
+        // (connected by address or joined mid-run) stay up. Workers already
+        // marked dead get no shutdown message — writing to a broken pipe is
+        // pointless and their children are reaped below without the
+        // graceful wait. Shutdowns go out **concurrently**, each bounded by
+        // a socket timeout, so one hung worker cannot stall the teardown of
+        // the rest.
         let mut children = self.children.lock().unwrap();
         if !children.is_empty() {
-            for (i, conn) in self.inner.conns.iter().enumerate().skip(self.owned_from) {
+            let conns: Vec<Arc<WorkerConn>> = self.inner.conns.read().unwrap().clone();
+            let mut goodbyes = Vec::new();
+            for (i, conn) in conns
+                .iter()
+                .enumerate()
+                .take(self.owned_children)
+                .skip(self.owned_from)
+            {
                 if alive & (1u64 << i) != 0 {
-                    let _ = conn.call(&Request::Shutdown);
+                    let conn = Arc::clone(conn);
+                    goodbyes.push(std::thread::spawn(move || {
+                        {
+                            let s = conn.stream.lock().unwrap();
+                            s.set_read_timeout(Some(Duration::from_secs(2))).ok();
+                            s.set_write_timeout(Some(Duration::from_secs(2))).ok();
+                        }
+                        let _ = conn.call(&Request::Shutdown);
+                    }));
                 }
+            }
+            for h in goodbyes {
+                let _ = h.join();
             }
         }
         for (ci, child) in children.iter_mut().enumerate() {
@@ -1843,6 +2631,12 @@ fn worker_conn_loop(shared: Arc<WorkerShared>, mut stream: TcpStream) {
                 let _ = stream.write_all(&1024u32.to_le_bytes());
                 return;
             }
+            Some(FaultKind::Slow) => {
+                // Straggle: stall, then answer correctly. Nothing errors —
+                // only a heartbeat probe (which also stalls here and times
+                // out) or the straggler monitor can tell.
+                std::thread::sleep(Duration::from_millis(super::faults::SLOW_STALL_MS));
+            }
             None => {}
         }
         let mut exit = false;
@@ -1898,6 +2692,11 @@ fn worker_conn_loop(shared: Arc<WorkerShared>, mut stream: TcpStream) {
                 crash_worker(&shared);
                 return;
             }
+            // Membership frames flow worker → coordinator (its control
+            // listener), never to a block daemon.
+            req @ (Request::Join { .. } | Request::Drain { .. }) => Response::Err(format!(
+                "{req:?} is a coordinator control request, not a worker request"
+            )),
         };
         if wire::write_response(&mut stream, &resp).is_err() {
             return;
@@ -1908,6 +2707,42 @@ fn worker_conn_loop(shared: Arc<WorkerShared>, mut stream: TcpStream) {
             shared.blocks.lock().unwrap().store.take();
             std::process::exit(0);
         }
+    }
+}
+
+/// Ask the coordinator whose control listener is at `coordinator` to enroll
+/// the worker listening at `worker_addr` — what `dsarray worker --join`
+/// calls right after binding. The coordinator connects back and pings the
+/// worker before answering, so the worker must already be accepting.
+pub fn request_join(coordinator: &str, worker_addr: &str) -> Result<()> {
+    control_request(
+        coordinator,
+        &Request::Join {
+            addr: worker_addr.to_string(),
+        },
+    )
+}
+
+/// Ask the coordinator at `coordinator` to gracefully drain the member
+/// worker at `worker_addr` (migrate its sole copies, then decommission it).
+pub fn request_drain(coordinator: &str, worker_addr: &str) -> Result<()> {
+    control_request(
+        coordinator,
+        &Request::Drain {
+            addr: worker_addr.to_string(),
+        },
+    )
+}
+
+fn control_request(coordinator: &str, req: &Request) -> Result<()> {
+    let mut s = TcpStream::connect(coordinator)
+        .with_context(|| format!("connecting to coordinator {coordinator}"))?;
+    s.set_nodelay(true).ok();
+    wire::write_request(&mut s, req)?;
+    match wire::read_response(&mut s)?.0 {
+        Response::Ok => Ok(()),
+        Response::Err(m) => bail!("coordinator {coordinator}: {m}"),
+        other => bail!("coordinator {coordinator}: unexpected response {other:?}"),
     }
 }
 
@@ -2010,32 +2845,74 @@ mod tests {
     #[test]
     fn placement_prefers_most_input_bytes() {
         let all2 = full_mask(2);
+        let idle = vec![0u64; 4];
         // Worker 1 holds 3x the bytes: it wins.
         assert_eq!(
-            choose_placement(&[(0b01, 100), (0b10, 300)], 2, all2),
+            choose_placement(&[(0b01, 100), (0b10, 300)], 2, all2, &idle),
             Some(1)
         );
         // Ties break toward the lowest index.
         assert_eq!(
-            choose_placement(&[(0b01, 100), (0b10, 100)], 2, all2),
+            choose_placement(&[(0b01, 100), (0b10, 100)], 2, all2, &idle),
             Some(0)
         );
         // A replicated block counts for every holder.
         assert_eq!(
-            choose_placement(&[(0b11, 100), (0b10, 1)], 2, all2),
+            choose_placement(&[(0b11, 100), (0b10, 1)], 2, all2, &idle),
             Some(1),
             "worker 1 holds 101 bytes vs worker 0's 100"
         );
         // No located inputs: the caller round-robins.
-        assert_eq!(choose_placement(&[], 4, full_mask(4)), None);
-        assert_eq!(choose_placement(&[(0, 100)], 4, full_mask(4)), None);
+        assert_eq!(choose_placement(&[], 4, full_mask(4), &idle), None);
+        assert_eq!(choose_placement(&[(0, 100)], 4, full_mask(4), &idle), None);
         // A dead worker never wins, no matter how much it used to hold.
         assert_eq!(
-            choose_placement(&[(0b01, 100), (0b10, 300)], 2, 0b01),
+            choose_placement(&[(0b01, 100), (0b10, 300)], 2, 0b01, &idle),
             Some(0)
         );
         // All holders dead: fall back to round-robin over survivors.
-        assert_eq!(choose_placement(&[(0b10, 300)], 2, 0b01), None);
+        assert_eq!(choose_placement(&[(0b10, 300)], 2, 0b01, &idle), None);
+    }
+
+    #[test]
+    fn placement_breaks_byte_ties_toward_the_least_loaded_worker() {
+        let all2 = full_mask(2);
+        // Equal input bytes, but worker 0 has a queue of outstanding work:
+        // the tie now goes to idle worker 1 instead of the lowest index.
+        assert_eq!(
+            choose_placement(&[(0b01, 100), (0b10, 100)], 2, all2, &[5000, 0]),
+            Some(1)
+        );
+        // Locality still dominates load: a worker holding more input bytes
+        // wins even when it is busier.
+        assert_eq!(
+            choose_placement(&[(0b01, 100), (0b10, 300)], 2, all2, &[0, 9000]),
+            Some(1)
+        );
+        // A load vector shorter than the fleet reads as zero load.
+        assert_eq!(
+            choose_placement(&[(0b01, 100), (0b10, 100)], 2, all2, &[7]),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn replicas_spread_to_least_loaded_eligible_workers() {
+        // Placement 0, want 3 copies out of 4 workers: the two least-loaded
+        // *other* workers are picked (worker 2 then worker 3, not busy 1).
+        assert_eq!(
+            choose_replicas(0, 3, 4, full_mask(4), &[0, 900, 10, 20]),
+            vec![2, 3]
+        );
+        // Ineligible (draining/dead) workers never receive replicas.
+        assert_eq!(
+            choose_replicas(0, 3, 4, 0b1011, &[0, 900, 10, 20]),
+            vec![3, 1]
+        );
+        // k = 1 means no extra copies.
+        assert!(choose_replicas(0, 1, 4, full_mask(4), &[0; 4]).is_empty());
+        // Not enough eligible peers: return as many as exist.
+        assert_eq!(choose_replicas(0, 3, 2, 0b11, &[0, 0]), vec![1]);
     }
 
     #[test]
@@ -2330,6 +3207,209 @@ mod tests {
         assert!(matches!(
             wire::read_response(&mut s2).unwrap().0,
             Response::Ok
+        ));
+    }
+
+    #[test]
+    fn joined_worker_receives_tasks_and_rebalances_new_work() {
+        let rt = cluster_rt(vec![inproc_worker(None)]);
+        let joined = inproc_worker(None);
+        assert_eq!(rt.cluster_join(&joined).unwrap(), 1);
+        // New puts round-robin across both members, and tasks over blocks
+        // that landed on the joined worker place there by locality.
+        let blocks: Vec<_> = (0..4).map(|i| rt.put_block(dense(i as f32))).collect();
+        let outs: Vec<_> = blocks
+            .iter()
+            .map(|&b| {
+                rt.submit(
+                    "inc",
+                    &[b],
+                    vec![BlockMeta::dense(2, 2)],
+                    CostHint::default(),
+                    inc_body(),
+                )[0]
+            })
+            .collect();
+        for (i, &o) in outs.iter().enumerate() {
+            assert_eq!(
+                rt.wait(o).unwrap().as_dense().unwrap().get(0, 0),
+                i as f32 + 1.0
+            );
+        }
+        let m = rt.metrics();
+        assert_eq!(m.workers_joined, 1);
+        assert!(
+            m.tasks_by_worker.get(1).copied().unwrap_or(0) > 0,
+            "joined worker ran no tasks: {:?}",
+            m.tasks_by_worker
+        );
+        assert!(stat_of(&joined).blocks > 0, "joined worker holds no blocks");
+        // The same address cannot enroll twice.
+        assert!(rt.cluster_join(&joined).is_err());
+    }
+
+    #[test]
+    fn drain_migrates_sole_copies_with_zero_replay() {
+        let addrs = vec![inproc_worker(None), inproc_worker(None)];
+        let rt = cluster_rt(addrs.clone());
+        let blocks: Vec<_> = (0..4).map(|i| rt.put_block(dense(i as f32))).collect();
+        rt.barrier().unwrap();
+        rt.cluster_drain(0).unwrap();
+        // Every value survives, served by the survivor, with no replay.
+        for (i, &b) in blocks.iter().enumerate() {
+            assert_eq!(rt.wait(b).unwrap().as_dense().unwrap().get(0, 0), i as f32);
+        }
+        let m = rt.metrics();
+        assert_eq!(m.workers_drained, 1);
+        assert_eq!(m.tasks_replayed, 0, "a drain must not replay lineage");
+        assert_eq!(m.workers_lost, 0, "a drain is not a death");
+        // Worker 0's two sole copies were pulled over: the survivor now
+        // holds all four blocks.
+        assert_eq!(stat_of(&addrs[1]).blocks, 4);
+        // New work runs on the survivor alone.
+        let out = rt.submit(
+            "inc",
+            &[blocks[0]],
+            vec![BlockMeta::dense(2, 2)],
+            CostHint::default(),
+            inc_body(),
+        )[0];
+        assert_eq!(rt.wait(out).unwrap().as_dense().unwrap().get(0, 0), 1.0);
+        assert_eq!(
+            rt.metrics().tasks_by_worker.first().copied().unwrap_or(0),
+            0,
+            "drained worker must never be scheduled again"
+        );
+        // The last eligible member cannot be drained.
+        assert!(rt.cluster_drain(1).is_err());
+        // And a departed slot cannot be drained twice.
+        assert!(rt.cluster_drain(0).is_err());
+    }
+
+    #[test]
+    fn heartbeat_declares_a_silent_worker_dead() {
+        let addrs = vec![inproc_worker(None), inproc_worker(None)];
+        let rt = Runtime::cluster(
+            ClusterOptions::connect(addrs.clone())
+                .with_threads(2)
+                .with_heartbeat_ms(20),
+        )
+        .unwrap();
+        let a = rt.put_block(dense(5.0)); // round-robin: lands on worker 0
+        rt.barrier().unwrap();
+        // Crash worker 1 without telling anyone. No request will ever
+        // touch it again, so only the heartbeat can notice.
+        crash_worker_at(&addrs[1]);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while rt.metrics().workers_lost == 0 {
+            assert!(
+                Instant::now() < deadline,
+                "heartbeat never declared the silent worker dead"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // The fleet keeps working on the survivor.
+        assert_eq!(rt.wait(a).unwrap().as_dense().unwrap().get(0, 0), 5.0);
+    }
+
+    #[test]
+    fn straggler_speculation_keeps_results_bit_identical() {
+        let fast = inproc_worker(None);
+        let slow = inproc_worker_with(WorkerOptions {
+            fault_spec: Some("slow@3".into()),
+            ..Default::default()
+        });
+        let rt = Runtime::cluster(
+            ClusterOptions::connect(vec![fast, slow])
+                .with_threads(2)
+                .with_straggler_factor(3.0),
+        )
+        .unwrap();
+        // Establish a fast EWMA for `inc` on the healthy worker.
+        let a = rt.put_block(dense(0.0)); // -> worker 0
+        let mut cur = a;
+        for _ in 0..3 {
+            cur = rt.submit(
+                "inc",
+                &[cur],
+                vec![BlockMeta::dense(2, 2)],
+                CostHint::default(),
+                inc_body(),
+            )[0];
+        }
+        rt.barrier().unwrap();
+        // `b` lands on the straggler (round-robin), whose served-request
+        // counter then sits at 2 (boot ping + put): the very next fetch
+        // stalls for `SLOW_STALL_MS`, far past 3x the EWMA estimate.
+        let b = rt.put_block(dense(10.0)); // -> worker 1
+        let out = rt.submit(
+            "inc",
+            &[b],
+            vec![BlockMeta::dense(2, 2)],
+            CostHint::default(),
+            inc_body(),
+        )[0];
+        // The monitor re-arms the task away from the straggler; whichever
+        // copy publishes first, single-assignment keeps the value exact.
+        assert_eq!(rt.wait(out).unwrap().as_dense().unwrap().get(0, 0), 11.0);
+        let m = rt.metrics();
+        assert!(m.tasks_speculated >= 1, "no task was speculated");
+        assert!(
+            rt.barrier().is_ok(),
+            "a losing twin must never poison the runtime"
+        );
+    }
+
+    #[test]
+    fn control_listener_serves_join_and_drain_frames() {
+        let rt = cluster_rt(vec![inproc_worker(None), inproc_worker(None)]);
+        let control = rt
+            .cluster_control_addr()
+            .expect("cluster runtimes expose a control listener");
+        let mut s = TcpStream::connect(&control).unwrap();
+        wire::write_request(&mut s, &Request::Ping).unwrap();
+        assert!(matches!(wire::read_response(&mut s).unwrap().0, Response::Ok));
+        // A fresh worker joins over the wire, exactly like
+        // `dsarray worker --join` does.
+        let joined = inproc_worker(None);
+        wire::write_request(
+            &mut s,
+            &Request::Join {
+                addr: joined.clone(),
+            },
+        )
+        .unwrap();
+        assert!(matches!(wire::read_response(&mut s).unwrap().0, Response::Ok));
+        assert_eq!(rt.metrics().workers_joined, 1);
+        // And a drain frame decommissions it again, with zero replay.
+        wire::write_request(
+            &mut s,
+            &Request::Drain {
+                addr: joined.clone(),
+            },
+        )
+        .unwrap();
+        assert!(matches!(wire::read_response(&mut s).unwrap().0, Response::Ok));
+        let m = rt.metrics();
+        assert_eq!(m.workers_drained, 1);
+        assert_eq!(m.tasks_replayed, 0);
+        // Unknown addresses are refused, not fatal.
+        wire::write_request(
+            &mut s,
+            &Request::Drain {
+                addr: "127.0.0.1:1".into(),
+            },
+        )
+        .unwrap();
+        match wire::read_response(&mut s).unwrap().0 {
+            Response::Err(m) => assert!(m.contains("no such worker"), "{m}"),
+            other => panic!("got {other:?}"),
+        }
+        // Data frames on the control socket are rejected cleanly.
+        wire::write_request(&mut s, &Request::Stat).unwrap();
+        assert!(matches!(
+            wire::read_response(&mut s).unwrap().0,
+            Response::Err(_)
         ));
     }
 }

@@ -36,7 +36,20 @@ pub enum FaultKind {
     /// mid-block-transfer" scenario, and the coordinator must treat the
     /// broken conversation as a worker loss.
     DropConn,
+    /// The worker turns into a straggler: from the triggering request on,
+    /// every served request stalls for [`SLOW_STALL_MS`] before being
+    /// handled. The TCP connection stays open and the (late) response is
+    /// still correct, so nothing *errors* — only proactive liveness checks
+    /// and straggler speculation can notice. This is the deterministic
+    /// stand-in for an overloaded or swapping node.
+    Slow,
 }
+
+/// How long a [`FaultKind::Slow`] worker stalls each request, in
+/// milliseconds. Long enough that a straggler monitor with a sub-second
+/// check interval reliably fires first, short enough that tests that let
+/// the stalled call finish (first-completion-wins races) stay fast.
+pub const SLOW_STALL_MS: u64 = 800;
 
 /// One scheduled fault: fire `kind` while serving this worker's
 /// `after`-th request (1-based, counted across all connections).
@@ -101,6 +114,7 @@ impl FaultPlan {
                         let k = match r.kind {
                             FaultKind::Die => "die",
                             FaultKind::DropConn => "drop",
+                            FaultKind::Slow => "slow",
                         };
                         format!("{k}@{}", r.after)
                     })
@@ -122,7 +136,8 @@ impl FaultPlan {
             let kind = match kind {
                 "die" => FaultKind::Die,
                 "drop" => FaultKind::DropConn,
-                other => bail!("unknown fault kind `{other}` (want die or drop)"),
+                "slow" => FaultKind::Slow,
+                other => bail!("unknown fault kind `{other}` (want die, drop or slow)"),
             };
             let after: u64 = after
                 .parse()
@@ -158,12 +173,20 @@ impl FaultState {
         Ok(Self::new(FaultPlan::parse_spec(spec)?))
     }
 
-    /// Count one served request and return the fault scheduled for exactly
-    /// this request number, if any. Called once per request at the worker's
-    /// single injection point.
+    /// Count one served request and return the fault scheduled for this
+    /// request number, if any. Called once per request at the worker's
+    /// single injection point. `die`/`drop` rules fire at exactly their
+    /// request number; a `slow` rule is a *state*, not an event — once its
+    /// request number is reached, every later request stalls too.
     pub fn on_request(&self) -> Option<FaultKind> {
         let n = self.served.fetch_add(1, Ordering::SeqCst) + 1;
-        self.rules.iter().find(|r| r.after == n).map(|r| r.kind)
+        if let Some(r) = self.rules.iter().find(|r| r.after == n) {
+            return Some(r.kind);
+        }
+        self.rules
+            .iter()
+            .find(|r| r.kind == FaultKind::Slow && n >= r.after)
+            .map(|r| r.kind)
     }
 
     /// Requests served so far (test introspection).
@@ -219,7 +242,7 @@ mod tests {
                 assert_eq!(back, plan.workers[w], "seed {seed} worker {w}: `{spec}`");
             }
         }
-        let rules = FaultPlan::parse_spec("drop@3,die@9").unwrap();
+        let rules = FaultPlan::parse_spec("drop@3,die@9,slow@5").unwrap();
         assert_eq!(
             rules,
             vec![
@@ -231,7 +254,22 @@ mod tests {
                     after: 9,
                     kind: FaultKind::Die
                 },
+                FaultRule {
+                    after: 5,
+                    kind: FaultKind::Slow
+                },
             ]
+        );
+        let plan = FaultPlan {
+            workers: vec![vec![FaultRule {
+                after: 4,
+                kind: FaultKind::Slow,
+            }]],
+        };
+        assert_eq!(plan.spec_for(0), "slow@4");
+        assert_eq!(
+            FaultPlan::parse_spec(&plan.spec_for(0)).unwrap(),
+            plan.workers[0]
         );
         assert!(FaultPlan::parse_spec("").unwrap().is_empty());
         assert!(FaultPlan::parse_spec("die").is_err());
@@ -252,6 +290,17 @@ mod tests {
         let quiet = FaultState::from_spec("").unwrap();
         for _ in 0..10 {
             assert_eq!(quiet.on_request(), None);
+        }
+    }
+
+    #[test]
+    fn slow_is_a_state_not_an_event() {
+        let st = FaultState::from_spec("slow@3").unwrap();
+        assert_eq!(st.on_request(), None); // request 1
+        assert_eq!(st.on_request(), None); // request 2
+        for _ in 0..5 {
+            // From the trigger on, every request stalls.
+            assert_eq!(st.on_request(), Some(FaultKind::Slow));
         }
     }
 }

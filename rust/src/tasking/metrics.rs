@@ -79,6 +79,19 @@ pub struct Metrics {
     /// lineage, re-arming the replay sub-graph), in milliseconds rounded up
     /// — each recovery event contributes at least 1.
     pub recovery_ms: u64,
+    /// Workers enrolled into a running cluster after boot (via
+    /// `Request::Join` on the coordinator's control listener).
+    pub workers_joined: u64,
+    /// Workers decommissioned gracefully: scheduling stopped, sole-copy
+    /// blocks migrated to survivors, zero tasks replayed.
+    pub workers_drained: u64,
+    /// Straggler tasks speculatively re-armed on another worker (the
+    /// re-arms, not the completions; first completion wins either way).
+    pub tasks_speculated: u64,
+    /// Tasks executed per cluster worker slot (indexed by worker bit
+    /// position; grows when workers join). Local/sim backends leave this
+    /// empty.
+    pub tasks_by_worker: Vec<u64>,
 }
 
 impl Metrics {
@@ -174,6 +187,30 @@ impl Metrics {
         self.recovery_ms += ms;
     }
 
+    /// A worker was enrolled into the running fleet.
+    pub fn record_join(&mut self) {
+        self.workers_joined += 1;
+    }
+
+    /// A worker was decommissioned gracefully (drain, not death).
+    pub fn record_drain(&mut self) {
+        self.workers_drained += 1;
+    }
+
+    /// A running task was speculatively re-armed on another worker.
+    pub fn record_speculated(&mut self) {
+        self.tasks_speculated += 1;
+    }
+
+    /// A task ran with worker slot `w` as its placement (the slot vector
+    /// grows on demand as workers join).
+    pub fn record_task_on_worker(&mut self, w: usize) {
+        if self.tasks_by_worker.len() <= w {
+            self.tasks_by_worker.resize(w + 1, 0);
+        }
+        self.tasks_by_worker[w] += 1;
+    }
+
     pub fn total_tasks(&self) -> u64 {
         self.tasks_by_op.values().sum()
     }
@@ -227,6 +264,14 @@ impl Metrics {
         out.blocks_recovered -= earlier.blocks_recovered;
         out.tasks_replayed -= earlier.tasks_replayed;
         out.recovery_ms -= earlier.recovery_ms;
+        out.workers_joined -= earlier.workers_joined;
+        out.workers_drained -= earlier.workers_drained;
+        out.tasks_speculated -= earlier.tasks_speculated;
+        for (i, v) in earlier.tasks_by_worker.iter().enumerate() {
+            if let Some(x) = out.tasks_by_worker.get_mut(i) {
+                *x = x.saturating_sub(*v);
+            }
+        }
         out
     }
 }
@@ -356,6 +401,31 @@ mod tests {
             (d.workers_lost, d.blocks_recovered, d.tasks_replayed, d.recovery_ms),
             (1, 2, 2, 1)
         );
+    }
+
+    #[test]
+    fn elasticity_counters() {
+        let mut m = Metrics::default();
+        m.record_join();
+        m.record_drain();
+        m.record_speculated();
+        m.record_speculated();
+        m.record_task_on_worker(0);
+        m.record_task_on_worker(2); // slot vector grows on demand
+        m.record_task_on_worker(2);
+        assert_eq!(m.workers_joined, 1);
+        assert_eq!(m.workers_drained, 1);
+        assert_eq!(m.tasks_speculated, 2);
+        assert_eq!(m.tasks_by_worker, vec![1, 0, 2]);
+        let snap = m.clone();
+        m.record_join();
+        m.record_task_on_worker(1);
+        m.record_task_on_worker(2);
+        let d = m.since(&snap);
+        assert_eq!(d.workers_joined, 1);
+        assert_eq!(d.workers_drained, 0);
+        assert_eq!(d.tasks_speculated, 0);
+        assert_eq!(d.tasks_by_worker, vec![0, 1, 1]);
     }
 
     #[test]

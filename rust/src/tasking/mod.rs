@@ -66,7 +66,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::storage::{Block, BlockMeta};
-pub use cluster::{ClusterOptions, TransferMode, WorkerOptions};
+pub use cluster::{ClusterOptions, TransferMode, WorkerOptions, HEARTBEAT_MISS_THRESHOLD};
 pub use faults::{FaultKind, FaultPlan, FaultRule, FaultState};
 pub use local::LocalOptions;
 pub use metrics::Metrics;
@@ -146,6 +146,24 @@ pub trait Executor: Send + Sync {
     /// Replay the recorded graph through the cluster model (sim backends).
     fn run_sim(&self, _traced: bool) -> Result<SimReport> {
         bail!("run_sim on a non-simulated runtime")
+    }
+
+    /// Enroll a new worker into a running fleet (cluster backend only);
+    /// returns the worker's location-table slot.
+    fn join_worker(&self, _addr: &str) -> Result<usize> {
+        bail!("join_worker on a non-cluster runtime")
+    }
+
+    /// Gracefully decommission worker `w` — migrate its sole-copy blocks
+    /// to survivors, then drop it from the fleet (cluster backend only).
+    fn drain_worker(&self, _w: usize) -> Result<()> {
+        bail!("drain_worker on a non-cluster runtime")
+    }
+
+    /// Address of the coordinator's control listener, where `Join`/`Drain`
+    /// frames arrive (`None` on non-cluster backends).
+    fn control_addr(&self) -> Option<String> {
+        None
     }
 }
 
@@ -446,6 +464,27 @@ impl Runtime {
     /// be re-read by ad-hoc futures outside any container).
     pub fn pin(&self, fut: Future) {
         self.exec.pin(fut.id);
+    }
+
+    /// Enroll the worker listening at `addr` into a running cluster fleet
+    /// and return its slot; it starts receiving tasks on the next
+    /// scheduling decision. Errors on non-cluster backends.
+    pub fn cluster_join(&self, addr: &str) -> Result<usize> {
+        self.exec.join_worker(addr)
+    }
+
+    /// Gracefully decommission cluster worker `w`: mark it read-only,
+    /// migrate its sole-copy blocks to survivors, then drop it from the
+    /// fleet with zero tasks replayed. Errors on non-cluster backends.
+    pub fn cluster_drain(&self, w: usize) -> Result<()> {
+        self.exec.drain_worker(w)
+    }
+
+    /// The cluster coordinator's control-listener address (what
+    /// `dsarray worker --join <addr>` connects to); `None` on non-cluster
+    /// backends.
+    pub fn cluster_control_addr(&self) -> Option<String> {
+        self.exec.control_addr()
     }
 }
 

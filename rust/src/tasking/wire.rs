@@ -26,6 +26,8 @@
 //! | 0x06 | Stat     | —                                                |
 //! | 0x07 | Shutdown | —                                                |
 //! | 0x08 | Crash    | —                                                |
+//! | 0x09 | Join     | `alen u16` + worker listen address (UTF-8)       |
+//! | 0x0a | Drain    | `alen u16` + worker listen address (UTF-8)       |
 //!
 //! Response opcodes (worker → requester):
 //!
@@ -44,6 +46,12 @@
 //! pull from is unreachable" (a transport failure of the *peer*, which the
 //! coordinator must treat as that worker's death) from `Err` (the serving
 //! worker is alive and answered; the request itself failed).
+//!
+//! `Join` and `Drain` flow the *other* way — worker → coordinator, on the
+//! coordinator's control listener: `Join` announces a fresh worker's listen
+//! address so it can be enrolled in a running fleet, `Drain` asks for a
+//! graceful decommission (the coordinator migrates the worker's sole-copy
+//! blocks to survivors and then stops scheduling on it).
 //!
 //! Exactly one response answers each request, in order, per connection. The
 //! codec is transport-agnostic (`Read`/`Write`), so the same functions serve
@@ -68,6 +76,8 @@ const OP_PULL: u8 = 0x05;
 const OP_STAT: u8 = 0x06;
 const OP_SHUTDOWN: u8 = 0x07;
 const OP_CRASH: u8 = 0x08;
+const OP_JOIN: u8 = 0x09;
+const OP_DRAIN: u8 = 0x0a;
 const OP_OK: u8 = 0x81;
 const OP_BLOCK: u8 = 0x82;
 const OP_PULLED: u8 = 0x83;
@@ -98,6 +108,14 @@ pub enum Request {
     /// testing only — this is how tests kill an in-process worker that
     /// shares the test's OS process.
     Crash,
+    /// Worker → coordinator (control listener): enroll the worker listening
+    /// at `addr` into the running fleet. Answered `Ok` once enrolled.
+    Join { addr: String },
+    /// Worker → coordinator (control listener): decommission the worker
+    /// listening at `addr` gracefully — stop scheduling on it, migrate its
+    /// sole-copy blocks to survivors, then drop it from the fleet. Answered
+    /// `Ok` once the drain completes (the worker may then exit).
+    Drain { addr: String },
 }
 
 /// Worker-side counters returned by [`Request::Stat`].
@@ -136,6 +154,17 @@ fn push_u32(buf: &mut Vec<u8>, v: u32) {
 
 fn push_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Encode a `alen u16` + UTF-8 address field (Pull/Join/Drain bodies).
+fn push_addr(buf: &mut Vec<u8>, addr: &str) -> Result<()> {
+    let a = addr.as_bytes();
+    if a.len() > u16::MAX as usize {
+        bail!("address of {} bytes is not addressable", a.len());
+    }
+    push_u16(buf, a.len() as u16);
+    buf.extend_from_slice(a);
+    Ok(())
 }
 
 /// Cursor over a received payload; every read is bounds-checked so a
@@ -179,6 +208,12 @@ impl<'a> Cursor<'a> {
         let s = &self.buf[self.pos..];
         self.pos = self.buf.len();
         s
+    }
+
+    /// Decode a `alen u16` + UTF-8 address field (Pull/Join/Drain bodies).
+    fn addr(&mut self) -> Result<String> {
+        let alen = self.u16()? as usize;
+        String::from_utf8(self.take(alen)?.to_vec()).context("address is not UTF-8")
     }
 }
 
@@ -233,16 +268,19 @@ pub fn write_request(w: &mut impl Write, req: &Request) -> Result<u64> {
         Request::Pull { id, from } => {
             buf.push(OP_PULL);
             push_u32(&mut buf, *id);
-            let a = from.as_bytes();
-            if a.len() > u16::MAX as usize {
-                bail!("peer address of {} bytes is not addressable", a.len());
-            }
-            push_u16(&mut buf, a.len() as u16);
-            buf.extend_from_slice(a);
+            push_addr(&mut buf, from)?;
         }
         Request::Stat => buf.push(OP_STAT),
         Request::Shutdown => buf.push(OP_SHUTDOWN),
         Request::Crash => buf.push(OP_CRASH),
+        Request::Join { addr } => {
+            buf.push(OP_JOIN);
+            push_addr(&mut buf, addr)?;
+        }
+        Request::Drain { addr } => {
+            buf.push(OP_DRAIN);
+            push_addr(&mut buf, addr)?;
+        }
     }
     write_frame(w, &buf)
 }
@@ -271,14 +309,14 @@ pub fn read_request(r: &mut impl Read) -> Result<Request> {
         }
         OP_PULL => {
             let id = c.u32()?;
-            let alen = c.u16()? as usize;
-            let from = String::from_utf8(c.take(alen)?.to_vec())
-                .context("peer address is not UTF-8")?;
+            let from = c.addr()?;
             Request::Pull { id, from }
         }
         OP_STAT => Request::Stat,
         OP_SHUTDOWN => Request::Shutdown,
         OP_CRASH => Request::Crash,
+        OP_JOIN => Request::Join { addr: c.addr()? },
+        OP_DRAIN => Request::Drain { addr: c.addr()? },
         other => bail!("unknown request opcode 0x{other:02x}"),
     })
 }
@@ -445,6 +483,18 @@ mod tests {
         ));
         match round_trip_response(&Response::PullPeerDown("peer 127.0.0.1:2 gone".into())) {
             Response::PullPeerDown(m) => assert_eq!(m, "peer 127.0.0.1:2 gone"),
+            other => panic!("decoded {other:?}"),
+        }
+        match round_trip_request(&Request::Join {
+            addr: "127.0.0.1:7403".into(),
+        }) {
+            Request::Join { addr } => assert_eq!(addr, "127.0.0.1:7403"),
+            other => panic!("decoded {other:?}"),
+        }
+        match round_trip_request(&Request::Drain {
+            addr: "127.0.0.1:7401".into(),
+        }) {
+            Request::Drain { addr } => assert_eq!(addr, "127.0.0.1:7401"),
             other => panic!("decoded {other:?}"),
         }
     }

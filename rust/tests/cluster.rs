@@ -9,7 +9,9 @@
 //! is **recovered from** — the lineage walk replays the lost sub-graph on
 //! survivors and results stay bit-identical — while `--no-recovery`
 //! restores the old poison-with-address-and-task contract. A seeded chaos
-//! suite drives both through deterministic `FaultPlan`s.
+//! suite drives both through deterministic `FaultPlan`s, and the elastic
+//! membership path is exercised end-to-end by a real `dsarray worker
+//! --join` process enrolling into a running fleet.
 
 use std::path::Path;
 use std::process::Child;
@@ -337,7 +339,7 @@ fn chaos_seeded_fault_plans_stay_bit_identical() {
             .split(',')
             .map(|t| t.trim().parse().expect("bad DSARRAY_CHAOS_SEEDS entry"))
             .collect(),
-        Err(_) => vec![101, 202, 303, 404, 505],
+        Err(_) => vec![101, 202, 303, 404, 505, 606, 707, 808],
     };
     for seed in seeds {
         let round = std::panic::catch_unwind(|| chaos_round(seed));
@@ -380,4 +382,56 @@ fn chaos_round(seed: u64) {
     let rt = workers.runtime();
     let got = run(&rt);
     assert_eq!(got, expect, "chaos plan {plan:?} diverged from the fault-free local run");
+}
+
+/// The elasticity acceptance scenario with real OS processes: a second
+/// `dsarray worker` started with `--join <control-addr>` enrolls itself
+/// into a running single-worker fleet, and new work visibly spreads onto
+/// it — non-zero per-worker task count in the metrics line, blocks held in
+/// the joined process.
+#[test]
+fn joined_worker_process_receives_tasks() {
+    use std::io::BufRead;
+
+    let mut workers = Workers::spawn(1, None);
+    let rt = workers.runtime();
+    let control = rt.cluster_control_addr().expect("cluster runtimes expose a control address");
+
+    let program = Path::new(env!("CARGO_BIN_EXE_dsarray"));
+    let mut child = std::process::Command::new(program)
+        .args(["worker", "--listen", "127.0.0.1:0", "--join", &control])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn joining dsarray worker");
+    let mut lines = std::io::BufReader::new(child.stdout.take().unwrap()).lines();
+    let listening = lines.next().expect("LISTENING line").unwrap();
+    let joined_addr =
+        listening.strip_prefix("LISTENING ").expect("LISTENING prefix").to_string();
+    // Hand the child to the fleet's drop guard before any assert can panic.
+    workers.children.push(child);
+    workers.addrs.push(joined_addr);
+    // `JOINED` is printed only after the coordinator acknowledged the
+    // enroll, so once it appears the membership table already has slot 1.
+    let joined = lines.next().expect("JOINED line").unwrap();
+    assert_eq!(joined, format!("JOINED {control}"));
+    assert_eq!(rt.metrics().workers_joined, 1);
+
+    // New work spreads across both processes and stays correct.
+    let m = random_matrix(64, 8, 77);
+    let x = creation::from_matrix(&rt, &m, (8, 8)).unwrap();
+    let got = x.add_scalar(1.0).unwrap().collect().unwrap();
+    for i in [0usize, 31, 63] {
+        assert_eq!(got.get(i, 3), m.get(i, 3) + 1.0);
+    }
+    let met = rt.metrics();
+    assert_eq!(met.tasks_by_worker.len(), 2, "{:?}", met.tasks_by_worker);
+    assert!(
+        met.tasks_by_worker[1] > 0,
+        "joined worker ran no tasks: {:?}",
+        met.tasks_by_worker
+    );
+    assert!(workers.stat(1).blocks > 0, "joined worker holds no blocks");
+    let json = report::metrics_json(&met);
+    assert!(json.contains("\"workers_joined\":1"), "{json}");
+    assert!(json.contains("\"tasks_by_worker\":["), "{json}");
 }

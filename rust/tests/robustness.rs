@@ -7,11 +7,14 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use rustdslib::bench::report;
 use rustdslib::dsarray::creation;
+use rustdslib::estimators::kmeans::{KMeans, KMeansConfig};
 use rustdslib::storage::{Block, BlockMeta, DenseMatrix};
 use rustdslib::tasking::cluster::serve_worker;
 use rustdslib::tasking::wire::{self, Request};
 use rustdslib::tasking::{ClusterOptions, CostHint, Runtime, SimConfig, TaskFn, WorkerOptions};
+use rustdslib::util::rng::Xoshiro256;
 
 /// Start an in-process cluster worker (real wire protocol, same daemon
 /// loop as `dsarray worker`, just a thread instead of an OS process) and
@@ -21,6 +24,21 @@ fn inproc_worker() -> String {
     let addr = l.local_addr().unwrap().to_string();
     std::thread::spawn(move || {
         let _ = serve_worker(l, WorkerOptions::default());
+    });
+    addr
+}
+
+/// Like [`inproc_worker`], but carrying a deterministic fault spec
+/// (`die@N` / `drop@N` / `slow@N`).
+fn inproc_worker_with(fault_spec: &str) -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap().to_string();
+    let opts = WorkerOptions {
+        fault_spec: Some(fault_spec.to_string()),
+        ..Default::default()
+    };
+    std::thread::spawn(move || {
+        let _ = serve_worker(l, opts);
     });
     addr
 }
@@ -301,6 +319,107 @@ fn two_level_lineage_walk_replays_chain() {
     assert_eq!(met.workers_lost, 1);
     assert!(met.tasks_replayed >= 2, "both chain levels must replay, got {}", met.tasks_replayed);
     assert!(met.blocks_recovered >= 3, "root + both intermediates were lost");
+}
+
+/// Elasticity churn chaos: mid-KMeans, the fleet loses a worker to a
+/// SIGKILL-style crash, gains a freshly joined one, gracefully drains a
+/// survivor, and has a fourth member turn into a straggler that only the
+/// heartbeat can notice — and the fit stays **bit-identical** to the
+/// fault-free local run for every pinned seed. Failing seeds reproduce
+/// with `DSARRAY_CHAOS_SEEDS=<seed>` (the same env var the process-level
+/// chaos suite pins in CI).
+#[test]
+fn membership_churn_mid_kmeans_stays_bit_identical() {
+    let seeds: Vec<u64> = match std::env::var("DSARRAY_CHAOS_SEEDS") {
+        Ok(s) => s
+            .split(',')
+            .map(|t| t.trim().parse().expect("bad DSARRAY_CHAOS_SEEDS entry"))
+            .collect(),
+        Err(_) => vec![606, 707, 808],
+    };
+    for seed in seeds {
+        let round = std::panic::catch_unwind(|| churn_round(seed));
+        if round.is_err() {
+            panic!("churn seed {seed} diverged; rerun with DSARRAY_CHAOS_SEEDS={seed}");
+        }
+    }
+}
+
+fn churn_round(seed: u64) {
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xe1a5);
+    let m = DenseMatrix::from_fn(48, 8, |_, _| rng.next_normal());
+    let fit = |rt: &Runtime, churn: &mut dyn FnMut(&Runtime)| {
+        let x = creation::from_matrix(rt, &m, (8, 8)).unwrap();
+        // The shift guarantees produced (not just journal-covered root)
+        // blocks are at stake when members disappear.
+        let y = x.add_scalar(1.0).unwrap();
+        rt.barrier().unwrap();
+        churn(rt);
+        let mut km = KMeans::new(KMeansConfig {
+            k: 3,
+            max_iter: 6,
+            tol: 1e-9,
+            seed,
+        });
+        km.fit_dsarray(&y).unwrap();
+        (km.centers.clone().unwrap(), km.inertia)
+    };
+    let (centers_local, inertia_local) = fit(&Runtime::local(2), &mut |_| {});
+
+    // Three boot members; the third is a scheduled straggler whose stall
+    // state the heartbeat (whose own pings count as served requests) is
+    // guaranteed to both trigger and then detect.
+    let victim = (seed % 2) as usize;
+    let drained = 1 - victim;
+    let addrs = vec![
+        inproc_worker(),
+        inproc_worker(),
+        inproc_worker_with("slow@10"),
+    ];
+    let rt = Runtime::cluster(
+        ClusterOptions::connect(addrs.clone())
+            .with_threads(2)
+            .with_heartbeat_ms(40)
+            .with_straggler_factor(4.0),
+    )
+    .unwrap();
+    let (centers_cluster, inertia_cluster) = fit(&rt, &mut |rt| {
+        // One member dies hard (unobserved until something touches it)...
+        crash_worker_at(&addrs[victim]);
+        // ...a fresh worker enrolls mid-run...
+        let joined = inproc_worker();
+        rt.cluster_join(&joined).unwrap();
+        // ...and a healthy survivor is gracefully decommissioned. Its
+        // sole-copy migration may pick the dead victim as a target first,
+        // exercising the drain's retry-on-target-death path.
+        rt.cluster_drain(drained).unwrap();
+    });
+    assert_eq!(
+        centers_cluster, centers_local,
+        "churn seed {seed}: centroids diverged from the fault-free local run"
+    );
+    assert_eq!(inertia_cluster, inertia_local);
+    // The straggler's heartbeat death may land after the fit completes (its
+    // probes keep advancing the slow worker's request counter until the
+    // stall state trips), so give the monitor a moment to converge on
+    // `workers_lost == 2`: the crash victim plus the stalled member.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while rt.metrics().workers_lost < 2 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let met = rt.metrics();
+    assert_eq!(met.workers_joined, 1);
+    assert_eq!(met.workers_drained, 1);
+    assert_eq!(
+        met.workers_lost, 2,
+        "the crash and the heartbeat-detected straggler must both count"
+    );
+    assert!(met.tasks_by_worker.len() >= 3, "{:?}", met.tasks_by_worker);
+    // The elasticity counters flow through the metrics line verbatim.
+    let json = report::metrics_json(&met);
+    assert!(json.contains("\"workers_joined\":1"), "{json}");
+    assert!(json.contains("\"workers_drained\":1"), "{json}");
+    assert!(json.contains("\"tasks_speculated\":"), "{json}");
 }
 
 #[test]

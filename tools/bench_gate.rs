@@ -4,10 +4,11 @@
 //! `cargo bench --bench hotpath -- --json …`) against the committed
 //! baseline at the repository root and **fails (exit 1) when the median
 //! regression of any watched row group exceeds the threshold** (default
-//! 25%, groups `matmul`, `fused`, `load`, `kernel`, `split`, `recovery` —
-//! the rows the perf PRs optimize; `kernel` tracks the scalar-vs-SIMD
-//! micro-kernel rows, `split` the whole-block-vs-sub-task rows, and
-//! `recovery` the kill-mid-gemm fault-recovery wall time).
+//! 25%, groups `matmul`, `fused`, `load`, `kernel`, `split`, `recovery`,
+//! `elastic` — the rows the perf PRs optimize; `kernel` tracks the
+//! scalar-vs-SIMD micro-kernel rows, `split` the whole-block-vs-sub-task
+//! rows, `recovery` the kill-mid-gemm fault-recovery wall time, and
+//! `elastic` the drain-migration and straggler-speculation wall times).
 //!
 //! Median-per-group, not worst-row, so one noisy timing on a shared CI
 //! runner cannot fail the gate by itself; the threshold absorbs the rest of
@@ -19,7 +20,8 @@
 //!
 //! Usage:
 //!   bench_gate --baseline ../BENCH_hotpath.json --current BENCH_hotpath.json \
-//!              [--max-regress 0.25] [--groups matmul,fused,load,kernel,split,recovery]
+//!              [--max-regress 0.25] \
+//!              [--groups matmul,fused,load,kernel,split,recovery,elastic]
 
 use std::collections::BTreeMap;
 
@@ -48,7 +50,7 @@ fn run() -> Result<bool> {
         .ok_or_else(|| anyhow!("--current <path> is required"))?;
     let max_regress = args.get_f64("max-regress", 0.25);
     let groups: Vec<String> = args
-        .get_str("groups", "matmul,fused,load,kernel,split,recovery")
+        .get_str("groups", "matmul,fused,load,kernel,split,recovery,elastic")
         .split(',')
         .map(|g| g.trim().to_string())
         .filter(|g| !g.is_empty())
