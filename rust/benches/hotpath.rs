@@ -8,8 +8,10 @@
 //! gemm, elementwise chain, pairwise distances) and intra-block splitting
 //! (whole fat-block task vs sub-range work items), raw PJRT artifact
 //! dispatch, native block math, runtime overheads (submit, graph,
-//! channels), and the elasticity paths (drain-time block migration,
-//! straggler speculation on a stalling worker).
+//! channels), the elasticity paths (drain-time block migration, straggler
+//! speculation on a stalling worker), and the serving tier (single-row
+//! predict p50/p99 latency and throughput through the micro-batcher,
+//! coalesced vs uncoalesced).
 //!
 //! Usage: cargo bench --bench hotpath [-- --reps 5 --json BENCH_hotpath.json]
 
@@ -614,6 +616,89 @@ fn main() -> Result<()> {
             "{:.2} GFLOP/s ({:.2}x vs stalled, {n_spec} speculated/run)",
             sm_gflops / t_spec,
             t_stall / t_spec.max(1e-12)
+        ),
+    ));
+
+    // ---- Serving tier (gated as the `serving` group): single-row predict
+    // latency through the micro-batcher over 2 in-process TCP workers. Row
+    // value is the p50 request latency; p99, throughput and coalescing ride
+    // in the note. The uncoalesced baseline (window 0, one sequential
+    // client) isolates what the batch window buys under concurrency.
+    let serve_xm = DenseMatrix::from_fn(256, 8, |i, _| (i % 4) as f32 * 5.0 + rng.next_normal());
+    let serve_rt_fit = Runtime::local(workers);
+    let serve_x = creation::from_matrix(&serve_rt_fit, &serve_xm, (64, 8))?;
+    let mut serve_km = rustdslib::estimators::kmeans::KMeans::new(
+        rustdslib::estimators::kmeans::KMeansConfig {
+            k: 4,
+            max_iter: 8,
+            tol: 1e-9,
+            seed: 7,
+        },
+    );
+    serve_km.fit_dsarray(&serve_x)?;
+    let serve_artifact = rustdslib::serving::ModelArtifact::from_kmeans(&serve_km)?;
+    // Returns (sorted request latencies, coalesced batches, traffic wall).
+    let run_serving = |window_ms: u64, clients: usize, per_client: usize| -> Result<(Vec<f64>, u64, f64)> {
+        let rt2 = Runtime::cluster(
+            rustdslib::tasking::ClusterOptions::connect(vec![spawn_worker(), spawn_worker()])
+                .with_threads(workers),
+        )?;
+        let server = rustdslib::serving::ModelServer::new(
+            rt2,
+            rustdslib::serving::ServeOptions::default().with_batch_window_ms(window_ms),
+        );
+        server.register("km", serve_artifact.clone())?;
+        let handle = server.serve(std::net::TcpListener::bind("127.0.0.1:0")?)?;
+        let addr = handle.addr().to_string();
+        let t0 = Instant::now();
+        let threads: Vec<_> = (0..clients)
+            .map(|t| {
+                let addr = addr.clone();
+                let xm = serve_xm.clone();
+                std::thread::spawn(move || -> Result<Vec<f64>> {
+                    let mut c = rustdslib::serving::ServingClient::connect(&addr)?;
+                    let mut lat = Vec::with_capacity(per_client);
+                    for k in 0..per_client {
+                        let i = (t * per_client + k) % xm.rows();
+                        let row = xm.slice(i, 0, 1, xm.cols())?;
+                        let q0 = Instant::now();
+                        let out = c.predict("km", &row)?;
+                        lat.push(q0.elapsed().as_secs_f64());
+                        std::hint::black_box(&out);
+                    }
+                    Ok(lat)
+                })
+            })
+            .collect();
+        let mut lats = Vec::new();
+        for t in threads {
+            lats.extend(t.join().unwrap()?);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let coalesced = handle.stats().batches_coalesced;
+        handle.shutdown();
+        lats.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        Ok((lats, coalesced, wall))
+    };
+    let pct = |l: &[f64], q: f64| l[((l.len() - 1) as f64 * q) as usize];
+    let (lat_un, _, wall_un) = run_serving(0, 1, 200)?;
+    rows.push((
+        "serving predict 1-row uncoalesced".into(),
+        pct(&lat_un, 0.5),
+        format!(
+            "p99 {:.0} µs, {:.0} pred/s",
+            pct(&lat_un, 0.99) * 1e6,
+            lat_un.len() as f64 / wall_un.max(1e-12)
+        ),
+    ));
+    let (lat_co, n_co, wall_co) = run_serving(2, 8, 100)?;
+    rows.push((
+        "serving predict 1-row coalesced (8 clients)".into(),
+        pct(&lat_co, 0.5),
+        format!(
+            "p99 {:.0} µs, {:.0} pred/s, {n_co} coalesced batches",
+            pct(&lat_co, 0.99) * 1e6,
+            lat_co.len() as f64 / wall_co.max(1e-12)
         ),
     ));
 

@@ -115,9 +115,11 @@ impl Series {
 /// cluster-backend counters (`bytes_on_wire`, `remote_transfers`,
 /// `locality_hits`), the kernel-layer counters (`simd_kernel_hits`,
 /// `subtasks_spawned`), the fault-recovery counters (`workers_lost`,
-/// `blocks_recovered`, `tasks_replayed`, `recovery_ms`), and the
+/// `blocks_recovered`, `tasks_replayed`, `recovery_ms`), the
 /// elasticity counters (`workers_joined`, `workers_drained`,
-/// `tasks_speculated`, plus the per-slot `tasks_by_worker` array).
+/// `tasks_speculated`, plus the per-slot `tasks_by_worker` array), and the
+/// serving counters (`requests_served`, `batches_coalesced`,
+/// `requests_shed`, plus the log₂ `predict_latency_us_hist` array).
 pub fn metrics_json(m: &Metrics) -> String {
     let mut out = String::from("{");
     let _ = write!(out, "\"total_tasks\":{}", m.total_tasks());
@@ -146,8 +148,19 @@ pub fn metrics_json(m: &Metrics) -> String {
     let _ = write!(out, ",\"workers_joined\":{}", m.workers_joined);
     let _ = write!(out, ",\"workers_drained\":{}", m.workers_drained);
     let _ = write!(out, ",\"tasks_speculated\":{}", m.tasks_speculated);
+    let _ = write!(out, ",\"requests_served\":{}", m.requests_served);
+    let _ = write!(out, ",\"batches_coalesced\":{}", m.batches_coalesced);
+    let _ = write!(out, ",\"requests_shed\":{}", m.requests_shed);
     out.push_str(",\"tasks_by_worker\":[");
     for (i, v) in m.tasks_by_worker.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{v}");
+    }
+    out.push(']');
+    out.push_str(",\"predict_latency_us_hist\":[");
+    for (i, v) in m.predict_latency_us_hist.iter().enumerate() {
         if i > 0 {
             out.push(',');
         }
@@ -312,6 +325,10 @@ mod tests {
         m.record_task_on_worker(0);
         m.record_task_on_worker(1);
         m.record_task_on_worker(1);
+        m.requests_served = 9;
+        m.batches_coalesced = 2;
+        m.requests_shed = 1;
+        m.predict_latency_us_hist = vec![0, 3, 6];
         let s = metrics_json(&m);
         let v = crate::util::json::parse(&s).unwrap();
         assert_eq!(v.get("total_tasks").unwrap().as_usize(), Some(1));
@@ -340,6 +357,12 @@ mod tests {
         assert_eq!(by_worker.len(), 2);
         assert_eq!(by_worker[0].as_usize(), Some(1));
         assert_eq!(by_worker[1].as_usize(), Some(2));
+        assert_eq!(v.get("requests_served").unwrap().as_usize(), Some(9));
+        assert_eq!(v.get("batches_coalesced").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("requests_shed").unwrap().as_usize(), Some(1));
+        let hist = v.get("predict_latency_us_hist").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), 3);
+        assert_eq!(hist[2].as_usize(), Some(6));
         assert_eq!(
             v.get("tasks_by_op").unwrap().get("op.a").unwrap().as_usize(),
             Some(1)

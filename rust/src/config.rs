@@ -79,6 +79,14 @@ pub struct Config {
     pub artifacts_dir: String,
     /// RNG seed for workload generation.
     pub seed: u64,
+    /// Serving micro-batch deadline window in milliseconds
+    /// (`--batch-window-ms`, 0 disables coalescing).
+    pub serve_batch_window_ms: u64,
+    /// Serving row cap per coalesced batch (`--max-batch-rows`).
+    pub serve_max_batch_rows: usize,
+    /// Serving admission-control cap on queued rows (`--max-pending-rows`;
+    /// past it requests are shed with an explicit `Overloaded` response).
+    pub serve_max_pending_rows: usize,
 }
 
 impl Default for Config {
@@ -100,6 +108,9 @@ impl Default for Config {
             sim: SimConfig::marenostrum(48),
             artifacts_dir: "artifacts".to_string(),
             seed: 42,
+            serve_batch_window_ms: 2,
+            serve_max_batch_rows: 256,
+            serve_max_pending_rows: 4096,
         }
     }
 }
@@ -147,6 +158,15 @@ impl Config {
         }
         if let Some(v) = map.get("spill_dir").and_then(|v| v.as_str()) {
             cfg.spill_dir = Some(v.to_string());
+        }
+        if let Some(v) = map.get("serve_batch_window_ms").and_then(|v| v.as_i64()) {
+            cfg.serve_batch_window_ms = v.max(0) as u64;
+        }
+        if let Some(v) = map.get("serve_max_batch_rows").and_then(|v| v.as_i64()) {
+            cfg.serve_max_batch_rows = v.max(1) as usize;
+        }
+        if let Some(v) = map.get("serve_max_pending_rows").and_then(|v| v.as_i64()) {
+            cfg.serve_max_pending_rows = v.max(1) as usize;
         }
         if let Some(arr) = map.get("sim_cores").and_then(|v| v.as_array()) {
             cfg.sim_cores = arr
@@ -228,6 +248,21 @@ impl Config {
         if let Some(v) = args.get("spill-dir") {
             self.spill_dir = Some(v.to_string());
         }
+        if let Some(v) = args.get("batch-window-ms") {
+            if let Ok(ms) = v.parse::<u64>() {
+                self.serve_batch_window_ms = ms;
+            }
+        }
+        if let Some(v) = args.get("max-batch-rows") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.serve_max_batch_rows = n.max(1);
+            }
+        }
+        if let Some(v) = args.get("max-pending-rows") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.serve_max_pending_rows = n.max(1);
+            }
+        }
         if args.get("cores").is_some() {
             self.sim_cores = args.get_usize_list("cores", &self.sim_cores);
         }
@@ -281,6 +316,18 @@ impl Config {
                 crate::tasking::Runtime::cluster(opts)
             }
         }
+    }
+
+    /// Serving-tier options from the config: micro-batch window, batch row
+    /// cap, and admission control — with the byte-denominated admission cap
+    /// wired to the memory budget (an eighth of it) so an overloaded server
+    /// sheds instead of queueing toward OOM.
+    pub fn serve_options(&self) -> crate::serving::ServeOptions {
+        crate::serving::ServeOptions::default()
+            .with_batch_window_ms(self.serve_batch_window_ms)
+            .with_max_batch_rows(self.serve_max_batch_rows)
+            .with_max_pending_rows(self.serve_max_pending_rows)
+            .with_max_pending_bytes(self.memory_budget_bytes.map(|b| (b / 8).max(1)))
     }
 
     /// Cost model at a specific simulated core count.
@@ -422,6 +469,35 @@ mod tests {
         let args = Args::parse(["--straggler-factor", "-1"].iter().map(|s| s.to_string()));
         c.apply_args(&args).unwrap();
         assert_eq!(c.straggler_factor, 0.0);
+
+        // Serving knobs default sane and flow through, with the pending-byte
+        // admission cap derived from the memory budget.
+        let c = Config::default();
+        assert_eq!(c.serve_batch_window_ms, 2);
+        assert_eq!(c.serve_max_batch_rows, 256);
+        assert_eq!(c.serve_max_pending_rows, 4096);
+        assert_eq!(c.serve_options().max_pending_bytes, None);
+        let args = Args::parse(
+            [
+                "--batch-window-ms",
+                "5",
+                "--max-batch-rows",
+                "64",
+                "--max-pending-rows",
+                "128",
+                "--memory-budget-mb",
+                "8",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let mut c = Config::default();
+        c.apply_args(&args).unwrap();
+        let so = c.serve_options();
+        assert_eq!(so.batch_window_ms, 5);
+        assert_eq!(so.max_batch_rows, 64);
+        assert_eq!(so.max_pending_rows, 128);
+        assert_eq!(so.max_pending_bytes, Some(1 << 20));
 
         let bad = Args::parse(["--backend", "mpi"].iter().map(|s| s.to_string()));
         assert!(Config::default().apply_args(&bad).is_err());

@@ -45,6 +45,13 @@
 //! block can occupy every worker. The [`kernels_guide`] module embeds
 //! `docs/KERNELS.md`.
 //!
+//! Fitted models answer live traffic through the **serving tier**
+//! ([`serving`], `dsarray serve`): estimators persist as DSBK-format
+//! artifacts, parameters live as pinned replicated runtime blocks, and
+//! concurrent `Predict` requests coalesce through an adaptive
+//! micro-batcher with admission control — answers bit-identical to batch
+//! `predict`. The [`serving_guide`] module embeds `docs/SERVING.md`.
+//!
 //! ```
 //! use rustdslib::{dsarray::creation, tasking::Runtime};
 //!
@@ -68,6 +75,7 @@ pub mod dsarray;
 pub mod estimators;
 pub mod kernels;
 pub mod runtime;
+pub mod serving;
 pub mod storage;
 pub mod tasking;
 pub mod util;
@@ -98,6 +106,13 @@ pub mod fault_tolerance_guide {}
 /// `cargo test --doc`).
 #[doc = include_str!("../../docs/KERNELS.md")]
 pub mod kernels_guide {}
+
+/// Guide: the online serving tier — model artifacts, the micro-batching
+/// window, admission control, fault behavior under replication
+/// (`docs/SERVING.md`, embedded so its end-to-end serve/predict example
+/// runs under `cargo test --doc`).
+#[doc = include_str!("../../docs/SERVING.md")]
+pub mod serving_guide {}
 
 pub use storage::{Block, BlockMeta, CsrMatrix, DenseMatrix};
 pub use tasking::{Future, Runtime, SimConfig, SimReport};

@@ -7,16 +7,22 @@
 //!   calibrate                     local micro-measurements feeding the cost model
 //!   demo                          end-to-end sanity run (expr chain + KMeans fit)
 //!   worker --listen <addr>        cluster worker daemon (block storage over TCP)
+//!   fit --estimator k --out p     fit on synthetic data, save a model artifact
+//!   serve --models name=path,…    host artifacts for online predict traffic
+//!   predict --addr a --model m    score rows against a running server
 //!
 //! Global flags: --config <toml>, --cores a,b,c, --seed, --workers,
 //! --backend local|sim|cluster, --cluster-workers N,
 //! --cluster-addr host:port,…, --no-recovery, --replicate-blocks k,
-//! --heartbeat-ms N, --straggler-factor F, and the sim.* overrides (see
-//! config.rs). The worker subcommand also takes --fault-plan <spec>
-//! (deterministic chaos, e.g. `die@7`, `slow@3`) and --join
-//! <coordinator-addr> to enroll into a running fleet; `worker --drain
-//! <worker-addr> --join <coordinator-addr>` sends a one-shot graceful
-//! decommission request instead of starting a daemon.
+//! --heartbeat-ms N, --straggler-factor F, the serving knobs
+//! --batch-window-ms/--max-batch-rows/--max-pending-rows, and the sim.*
+//! overrides (see config.rs). The worker subcommand also takes
+//! --fault-plan <spec> (deterministic chaos, e.g. `die@7`, `slow@3`) and
+//! --join <coordinator-addr> to enroll into a running fleet; `worker
+//! --drain <worker-addr> --join <coordinator-addr>` sends a one-shot
+//! graceful decommission request instead of starting a daemon. A worker
+//! started with --join also drains *itself* on SIGTERM: it asks the
+//! coordinator to fence and migrate its blocks, then exits cleanly.
 
 use anyhow::Result;
 
@@ -24,8 +30,15 @@ use rustdslib::bench::{experiments, report};
 use rustdslib::config::Config;
 use rustdslib::dsarray::creation;
 use rustdslib::estimators::kmeans::{KMeans, KMeansConfig};
+use rustdslib::estimators::linreg::LinearRegression;
+use rustdslib::estimators::pca::Pca;
+use rustdslib::estimators::scaler::StandardScaler;
+use rustdslib::estimators::Estimator;
+use rustdslib::serving::{ModelArtifact, ModelServer, PredictOutcome, ServingClient};
 use rustdslib::tasking::{Runtime, WorkerOptions};
 use rustdslib::util::cli::Args;
+use rustdslib::util::rng::Xoshiro256;
+use rustdslib::DenseMatrix;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -38,11 +51,16 @@ fn main() -> Result<()> {
         Some("calibrate") => calibrate(&args)?,
         Some("demo") => demo(&args)?,
         Some("worker") => worker(&args)?,
+        Some("fit") => fit(&args)?,
+        Some("serve") => serve(&args)?,
+        Some("predict") => predict(&args)?,
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown subcommand `{cmd}`\n");
             }
-            eprintln!("usage: dsarray <version|bench|ablation|calibrate|demo|worker> [flags]");
+            eprintln!(
+                "usage: dsarray <version|bench|ablation|calibrate|demo|worker|fit|serve|predict> [flags]"
+            );
             eprintln!("  dsarray bench --fig all");
             eprintln!("  dsarray bench --fig 6 --cores 48,96,192");
             eprintln!("  dsarray ablation --which collections");
@@ -50,6 +68,9 @@ fn main() -> Result<()> {
             eprintln!("  dsarray worker --join <coordinator-addr>        (enroll into a running fleet)");
             eprintln!("  dsarray worker --drain 127.0.0.1:7401 --join <coordinator-addr>");
             eprintln!("  dsarray demo --backend cluster --cluster-addr 127.0.0.1:7401,127.0.0.1:7402");
+            eprintln!("  dsarray fit --estimator kmeans --out /tmp/model.dsma");
+            eprintln!("  dsarray serve --models demo=/tmp/model.dsma --listen 127.0.0.1:7510");
+            eprintln!("  dsarray predict --addr 127.0.0.1:7510 --model demo --rows \"0.1,0.2;0.3,0.4\"");
             std::process::exit(2);
         }
     }
@@ -92,6 +113,11 @@ fn worker(args: &Args) -> Result<()> {
     println!("LISTENING {}", listener.local_addr()?);
     use std::io::Write as _;
     std::io::stdout().flush()?;
+    #[cfg(unix)]
+    install_sigterm_drain(
+        args.get("join").map(|s| s.to_string()),
+        listener.local_addr()?.to_string(),
+    );
     if let Some(coordinator) = args.get("join") {
         // The coordinator's enroll path connects back and pings this
         // worker before acknowledging, so the join request must go out
@@ -125,6 +151,50 @@ fn worker(args: &Args) -> Result<()> {
             crash_exits: true,
         },
     )
+}
+
+/// Worker-initiated graceful shutdown. SIGTERM means "leave the fleet
+/// politely": a joined worker asks the coordinator to drain it — fence
+/// placement, migrate its blocks to survivors — and only exits once the
+/// drain is acknowledged, so the departure costs zero lost blocks and zero
+/// recovery work. The signal handler itself only flips an atomic (the only
+/// async-signal-safe thing it may do); a watcher thread notices the flag
+/// and runs the blocking drain conversation while the daemon thread keeps
+/// answering the coordinator's migration pulls. A worker with no
+/// coordinator to talk to (static fleet, no `--join`) just exits cleanly
+/// and lets lineage recovery absorb the loss, same as a crash.
+#[cfg(unix)]
+fn install_sigterm_drain(coordinator: Option<String>, me: String) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static TERM: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        // Raw libc symbol so we need no signal-handling crate; the
+        // sighandler_t return value is pointer-sized and unused.
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_term);
+    }
+    std::thread::spawn(move || {
+        use std::io::Write as _;
+        while !TERM.load(Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+        if let Some(coordinator) = &coordinator {
+            println!("DRAINING {me}");
+            let _ = std::io::stdout().flush();
+            match rustdslib::tasking::cluster::request_drain(coordinator, &me) {
+                Ok(()) => println!("DRAINED {me}"),
+                Err(e) => eprintln!("drain via {coordinator} failed: {e:#}"),
+            }
+        }
+        let _ = std::io::stdout().flush();
+        std::process::exit(0);
+    });
 }
 
 fn bench(args: &Args) -> Result<()> {
@@ -272,4 +342,155 @@ fn demo(args: &Args) -> Result<()> {
         if rustdslib::runtime::global().is_some() { "available" } else { "artifacts not built" }
     );
     Ok(())
+}
+
+/// Fit an estimator on deterministic synthetic data and persist it as a
+/// DSMA artifact — the producer half of the serve/predict pair, and what
+/// the CI serving-smoke lane runs to get a model on disk. Blocks span the
+/// full feature width so that served predictions stay bit-identical to the
+/// batch path (see `docs/SERVING.md`).
+fn fit(args: &Args) -> Result<()> {
+    let cfg = Config::resolve(args)?;
+    let rt = cfg.runtime()?;
+    if rt.is_sim() {
+        anyhow::bail!("fit needs a value-producing backend; use --backend local|cluster");
+    }
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("fit needs --out <path> for the artifact"))?;
+    let n = args.get_usize("rows", 256);
+    let f = args.get_usize("features", 8);
+    let br = args.get_usize("block-rows", 64).min(n.max(1));
+    // Four well-separated blobs: meaningful for kmeans, harmless for the
+    // rest, and fully reproducible from --seed.
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let xm = DenseMatrix::from_fn(n, f, |i, _| (i % 4) as f32 * 5.0 + rng.next_normal());
+    let x = creation::from_matrix(&rt, &xm, (br, f))?;
+    let artifact = match args.get_str("estimator", "kmeans") {
+        "kmeans" => {
+            let mut km = KMeans::new(KMeansConfig {
+                k: args.get_usize("k", 4),
+                max_iter: 10,
+                tol: 1e-6,
+                seed: cfg.seed,
+            });
+            km.fit_dsarray(&x)?;
+            ModelArtifact::from_kmeans(&km)?
+        }
+        "linreg" => {
+            let ym = DenseMatrix::from_fn(n, 1, |i, _| {
+                (0..f).map(|j| xm.get(i, j)).sum::<f32>() * 0.5 + 0.7
+            });
+            let y = creation::from_matrix(&rt, &ym, (br, 1))?;
+            let mut lr = LinearRegression::default();
+            lr.fit(&x, Some(&y))?;
+            ModelArtifact::from_linreg(&lr)?
+        }
+        "scaler" => {
+            let mut sc = StandardScaler::default();
+            sc.fit(&x)?;
+            ModelArtifact::from_scaler(&sc)?
+        }
+        "pca" => {
+            let mut p = Pca::new(args.get_usize("components", 2).min(f));
+            p.fit(&x, None)?;
+            ModelArtifact::from_pca(&p)?
+        }
+        other => anyhow::bail!("unknown --estimator `{other}` (want kmeans|linreg|scaler|pca)"),
+    };
+    let bytes = artifact.save_path(out)?;
+    println!("FITTED {} {n}x{f} -> {out} ({bytes} bytes)", artifact.kind_name());
+    Ok(())
+}
+
+/// Serving coordinator: load DSMA artifacts, pin their parameters as
+/// replicated runtime blocks, and answer `Predict` frames until a client
+/// sends `Shutdown`. Prints `SERVING <addr>` once accepting (CI and tests
+/// parse it — port 0 picks a free port) and a final metrics line on exit.
+fn serve(args: &Args) -> Result<()> {
+    let cfg = Config::resolve(args)?;
+    let rt = cfg.runtime()?;
+    if rt.is_sim() {
+        anyhow::bail!("serve needs a value-producing backend; use --backend local|cluster");
+    }
+    let spec = args
+        .get("models")
+        .ok_or_else(|| anyhow::anyhow!("serve needs --models name=path[,name=path]"))?;
+    let server = ModelServer::new(rt.clone(), cfg.serve_options());
+    for part in spec.split(',') {
+        let (name, path) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad --models entry `{part}` (want name=path)"))?;
+        server.register(name, ModelArtifact::load_path(path)?)?;
+        println!("MODEL {name} <- {path}");
+    }
+    let listener = std::net::TcpListener::bind(args.get_str("listen", "127.0.0.1:0"))?;
+    let handle = server.serve(listener)?;
+    println!("SERVING {}", handle.addr());
+    if let Some(control) = rt.cluster_control_addr() {
+        println!("control: {control}");
+    }
+    use std::io::Write as _;
+    std::io::stdout().flush()?;
+    while !handle.is_shut_down() {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("metrics: {}", report::metrics_json(&handle.metrics()));
+    Ok(())
+}
+
+/// One-shot serving client: score `--rows "v,v;v,v"` against a running
+/// server row by row (each row is one request, so concurrent invocations
+/// exercise the micro-batcher), printing `PREDICTION <vals>` or `SHED
+/// <reason>` per row. `--shutdown` ends the server afterwards — with no
+/// --model it only shuts down.
+fn predict(args: &Args) -> Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("predict needs --addr <host:port>"))?;
+    let mut client = ServingClient::connect(addr)?;
+    if let Some(model) = args.get("model") {
+        let rows = parse_rows(
+            args.get("rows")
+                .ok_or_else(|| anyhow::anyhow!("predict needs --rows \"v,v;v,v\""))?,
+        )?;
+        for i in 0..rows.rows() {
+            let row = rows.slice(i, 0, 1, rows.cols())?;
+            match client.predict(model, &row)? {
+                PredictOutcome::Predicted(out) => {
+                    let vals: Vec<String> =
+                        (0..out.cols()).map(|j| format!("{:.6}", out.get(0, j))).collect();
+                    println!("PREDICTION {}", vals.join(","));
+                }
+                PredictOutcome::Shed(reason) => println!("SHED {reason}"),
+            }
+        }
+    }
+    if args.get("shutdown").is_some() {
+        client.shutdown()?;
+        println!("SHUTDOWN {addr}");
+    }
+    Ok(())
+}
+
+/// Parse a `"1,2;3,4"` rows spec into a dense matrix (rows split on `;`,
+/// values on `,`; all rows must have the same width).
+fn parse_rows(spec: &str) -> Result<DenseMatrix> {
+    let rows: Vec<Vec<f32>> = spec
+        .split(';')
+        .map(|r| {
+            r.split(',')
+                .map(|v| {
+                    v.trim()
+                        .parse::<f32>()
+                        .map_err(|e| anyhow::anyhow!("bad value `{v}` in --rows: {e}"))
+                })
+                .collect::<Result<Vec<f32>>>()
+        })
+        .collect::<Result<Vec<Vec<f32>>>>()?;
+    let width = rows.first().map(|r| r.len()).unwrap_or(0);
+    if width == 0 || rows.iter().any(|r| r.len() != width) {
+        anyhow::bail!("--rows must be non-empty and rectangular, e.g. \"1,2;3,4\"");
+    }
+    Ok(DenseMatrix::from_fn(rows.len(), width, |i, j| rows[i][j]))
 }

@@ -1,0 +1,467 @@
+//! Persistent model artifacts: a fitted estimator's parameters, serialized
+//! in the same self-describing DSBK block-record format the spill store and
+//! the wire protocol already use ([`crate::storage::store::write_block`]).
+//!
+//! An artifact file is:
+//!
+//! ```text
+//! magic    "DSMA" (4 bytes)
+//! version  u16 LE                         (currently 1)
+//! kind     u8                             0=kmeans 1=linreg 2=scaler 3=pca
+//! nscalars u8, then per scalar:           nlen u8 + name UTF-8 + f64 LE
+//! nblocks  u8, then per block:            nlen u8 + name UTF-8 + DSBK record
+//! ```
+//!
+//! Every parameter matrix is one ordinary DSBK record, so the block codec —
+//! bounds-checked, tested once, bit-exact — is reused rather than re-invented,
+//! and a model artifact costs exactly the bytes its parameter blocks occupy
+//! in a spill file, plus a few header bytes.
+//!
+//! [`ModelArtifact::predict_rows`] is the single-process scoring path. It
+//! replicates each estimator's `predict` arithmetic operation-for-operation
+//! (same kernel vtable, same accumulation order), so a prediction computed
+//! from a reloaded artifact is **bit-identical** to the fitted estimator's
+//! batch `predict` — the round-trip property the serving test suite enforces.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::estimators::{KMeans, LinearRegression, Pca, StandardScaler};
+use crate::storage::store::{read_block, write_block};
+use crate::storage::{Block, DenseMatrix};
+
+/// Artifact file magic, sibling to the block store's `DSBK`.
+pub const ARTIFACT_MAGIC: [u8; 4] = *b"DSMA";
+/// Bumped on any layout change; readers reject unknown versions.
+pub const ARTIFACT_VERSION: u16 = 1;
+
+const KIND_KMEANS: u8 = 0;
+const KIND_LINREG: u8 = 1;
+const KIND_SCALER: u8 = 2;
+const KIND_PCA: u8 = 3;
+
+/// The parameters of one fitted estimator, ready to persist or serve.
+///
+/// Only what `predict`/`transform` needs is kept — fit-time configuration
+/// (iteration caps, tolerances, seeds) stays with the training run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelArtifact {
+    /// Cluster centers, `(k, features)`. Prediction is the nearest-center
+    /// label per row.
+    KMeans { centers: DenseMatrix },
+    /// Ridge weights `(features, 1)` plus intercept.
+    LinReg {
+        weights: DenseMatrix,
+        intercept: f32,
+    },
+    /// Column means and inverse standard deviations, each `(1, features)`.
+    /// Prediction is the standardized row: `(x − μ) · σ⁻¹`.
+    Scaler {
+        mean: DenseMatrix,
+        inv_std: DenseMatrix,
+    },
+    /// Column means `(1, features)` and principal components
+    /// `(components, features)`. Prediction is the first-component
+    /// projection per row, matching [`Pca`]'s `predict`.
+    Pca {
+        mean: DenseMatrix,
+        components: DenseMatrix,
+    },
+}
+
+impl ModelArtifact {
+    /// Capture a fitted [`KMeans`]'s parameters. Errors before `fit`.
+    pub fn from_kmeans(m: &KMeans) -> Result<Self> {
+        let centers = m
+            .centers
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("artifact before fit"))?;
+        Ok(Self::KMeans { centers })
+    }
+
+    /// Capture a fitted [`LinearRegression`]'s parameters. Errors before `fit`.
+    pub fn from_linreg(m: &LinearRegression) -> Result<Self> {
+        let weights = m
+            .weights
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("artifact before fit"))?;
+        Ok(Self::LinReg {
+            weights,
+            intercept: m.intercept,
+        })
+    }
+
+    /// Capture a fitted [`StandardScaler`]'s parameters. Errors before `fit`.
+    pub fn from_scaler(m: &StandardScaler) -> Result<Self> {
+        match (&m.mean, &m.inv_std) {
+            (Some(mean), Some(inv_std)) => Ok(Self::Scaler {
+                mean: mean.clone(),
+                inv_std: inv_std.clone(),
+            }),
+            _ => bail!("artifact before fit"),
+        }
+    }
+
+    /// Capture a fitted [`Pca`]'s parameters. Errors before `fit`.
+    pub fn from_pca(m: &Pca) -> Result<Self> {
+        match (&m.mean, &m.components) {
+            (Some(mean), Some(components)) => Ok(Self::Pca {
+                mean: mean.clone(),
+                components: components.clone(),
+            }),
+            _ => bail!("artifact before fit"),
+        }
+    }
+
+    /// Short stable kind tag, also used in CLI output and docs.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Self::KMeans { .. } => "kmeans",
+            Self::LinReg { .. } => "linreg",
+            Self::Scaler { .. } => "scaler",
+            Self::Pca { .. } => "pca",
+        }
+    }
+
+    /// Feature count a request row must match.
+    pub fn n_features(&self) -> usize {
+        match self {
+            Self::KMeans { centers } => centers.cols(),
+            Self::LinReg { weights, .. } => weights.rows(),
+            Self::Scaler { mean, .. } => mean.cols(),
+            Self::Pca { mean, .. } => mean.cols(),
+        }
+    }
+
+    /// Output columns per prediction row.
+    pub fn output_cols(&self) -> usize {
+        match self {
+            Self::KMeans { .. } | Self::LinReg { .. } | Self::Pca { .. } => 1,
+            Self::Scaler { mean, .. } => mean.cols(),
+        }
+    }
+
+    /// The parameter matrices, in a fixed per-kind order. The serving tier
+    /// registers each as one pinned (and, on a replicated cluster, k-way
+    /// replicated) runtime block.
+    pub fn param_blocks(&self) -> Vec<DenseMatrix> {
+        match self {
+            Self::KMeans { centers } => vec![centers.clone()],
+            Self::LinReg { weights, .. } => vec![weights.clone()],
+            Self::Scaler { mean, inv_std } => vec![mean.clone(), inv_std.clone()],
+            Self::Pca { mean, components } => vec![mean.clone(), components.clone()],
+        }
+    }
+
+    /// Rebuild the artifact from parameter blocks in [`Self::param_blocks`]
+    /// order plus this artifact's scalars — the serving task closure's view,
+    /// where parameters arrive as runtime blocks fetched from workers.
+    pub fn with_params(&self, params: &[DenseMatrix]) -> Result<Self> {
+        let want = self.param_blocks().len();
+        if params.len() != want {
+            bail!("expected {want} parameter blocks, got {}", params.len());
+        }
+        Ok(match self {
+            Self::KMeans { .. } => Self::KMeans {
+                centers: params[0].clone(),
+            },
+            Self::LinReg { intercept, .. } => Self::LinReg {
+                weights: params[0].clone(),
+                intercept: *intercept,
+            },
+            Self::Scaler { .. } => Self::Scaler {
+                mean: params[0].clone(),
+                inv_std: params[1].clone(),
+            },
+            Self::Pca { .. } => Self::Pca {
+                mean: params[0].clone(),
+                components: params[1].clone(),
+            },
+        })
+    }
+
+    /// Score `rows` (`(n, features)`): the serving tier's compute kernel and
+    /// the reference path for the bit-identicality contract. Each arm mirrors
+    /// the corresponding estimator's `predict`/`transform` arithmetic exactly
+    /// — same kernel vtable calls, same accumulation order — so the result
+    /// matches the distributed batch path bit for bit.
+    pub fn predict_rows(&self, rows: &DenseMatrix) -> Result<DenseMatrix> {
+        if rows.cols() != self.n_features() {
+            bail!(
+                "{} model fitted on {} features, got {}",
+                self.kind_name(),
+                self.n_features(),
+                rows.cols()
+            );
+        }
+        match self {
+            Self::KMeans { centers } => {
+                // Mirrors kmeans.predict's per-block closure: kernel dist2
+                // argmin per row, first-best wins on ties.
+                let ker = crate::kernels::active();
+                crate::kernels::record_hit(ker);
+                let mut labels = DenseMatrix::zeros(rows.rows(), 1);
+                for r in 0..rows.rows() {
+                    let row = rows.row(r);
+                    let mut best = (f32::INFINITY, 0usize);
+                    for kk in 0..centers.rows() {
+                        let d2 = (ker.dist2)(row, centers.row(kk));
+                        if d2 < best.0 {
+                            best = (d2, kk);
+                        }
+                    }
+                    labels.set(r, 0, best.1 as f32);
+                }
+                Ok(labels)
+            }
+            Self::LinReg { weights, intercept } => {
+                // Mirrors linreg.predict's per-panel closure: one gemm into
+                // a zeroed output, then the intercept added elementwise.
+                let mut pred = rows.matmul(weights)?;
+                let b = *intercept;
+                for v in pred.data_mut() {
+                    *v += b;
+                }
+                Ok(pred)
+            }
+            Self::Scaler { mean, inv_std } => {
+                // Mirrors the scaler's fused `(x − μ) · σ⁻¹` chain per
+                // element (the fused SIMD table is property-tested
+                // bit-identical to this scalar form).
+                Ok(DenseMatrix::from_fn(rows.rows(), rows.cols(), |i, j| {
+                    (rows.get(i, j) - mean.get(0, j)) * inv_std.get(0, j)
+                }))
+            }
+            Self::Pca { mean, components } => {
+                // Mirrors pca.transform: center, project with one gemm per
+                // panel, then keep the first component (pca.predict).
+                let centered = DenseMatrix::from_fn(rows.rows(), rows.cols(), |i, j| {
+                    rows.get(i, j) - mean.get(0, j)
+                });
+                let proj = centered.matmul(&components.transpose())?;
+                proj.slice(0, 0, proj.rows(), 1)
+            }
+        }
+    }
+
+    fn kind_byte(&self) -> u8 {
+        match self {
+            Self::KMeans { .. } => KIND_KMEANS,
+            Self::LinReg { .. } => KIND_LINREG,
+            Self::Scaler { .. } => KIND_SCALER,
+            Self::Pca { .. } => KIND_PCA,
+        }
+    }
+
+    fn scalars(&self) -> Vec<(&'static str, f64)> {
+        match self {
+            Self::LinReg { intercept, .. } => vec![("intercept", *intercept as f64)],
+            _ => Vec::new(),
+        }
+    }
+
+    fn named_blocks(&self) -> Vec<(&'static str, &DenseMatrix)> {
+        match self {
+            Self::KMeans { centers } => vec![("centers", centers)],
+            Self::LinReg { weights, .. } => vec![("weights", weights)],
+            Self::Scaler { mean, inv_std } => vec![("mean", mean), ("inv_std", inv_std)],
+            Self::Pca { mean, components } => vec![("mean", mean), ("components", components)],
+        }
+    }
+
+    /// Serialize to any writer. Returns the bytes written.
+    pub fn save(&self, w: &mut impl Write) -> Result<u64> {
+        let mut n = 0u64;
+        w.write_all(&ARTIFACT_MAGIC)?;
+        w.write_all(&ARTIFACT_VERSION.to_le_bytes())?;
+        w.write_all(&[self.kind_byte()])?;
+        n += 7;
+        let scalars = self.scalars();
+        w.write_all(&[scalars.len() as u8])?;
+        n += 1;
+        for (name, v) in scalars {
+            w.write_all(&[name.len() as u8])?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&v.to_le_bytes())?;
+            n += 1 + name.len() as u64 + 8;
+        }
+        let blocks = self.named_blocks();
+        w.write_all(&[blocks.len() as u8])?;
+        n += 1;
+        for (name, m) in blocks {
+            w.write_all(&[name.len() as u8])?;
+            w.write_all(name.as_bytes())?;
+            n += 1 + name.len() as u64;
+            n += write_block(w, &Block::Dense(m.clone()))
+                .with_context(|| format!("writing model block `{name}`"))?;
+        }
+        w.flush()?;
+        Ok(n)
+    }
+
+    /// Deserialize from any reader; rejects bad magic, unknown versions,
+    /// unknown kinds, and missing parameters.
+    pub fn load(r: &mut impl Read) -> Result<Self> {
+        let mut hdr = [0u8; 7];
+        r.read_exact(&mut hdr).context("reading artifact header")?;
+        if hdr[..4] != ARTIFACT_MAGIC {
+            bail!("not a model artifact (bad magic)");
+        }
+        let version = u16::from_le_bytes([hdr[4], hdr[5]]);
+        if version != ARTIFACT_VERSION {
+            bail!("unsupported artifact version {version}");
+        }
+        let kind = hdr[6];
+        let mut scalars = std::collections::BTreeMap::new();
+        let mut count = [0u8; 1];
+        r.read_exact(&mut count)?;
+        for _ in 0..count[0] {
+            let name = read_name(r)?;
+            let mut v = [0u8; 8];
+            r.read_exact(&mut v)?;
+            scalars.insert(name, f64::from_le_bytes(v));
+        }
+        let mut blocks = std::collections::BTreeMap::new();
+        r.read_exact(&mut count)?;
+        for _ in 0..count[0] {
+            let name = read_name(r)?;
+            let block = read_block(r).with_context(|| format!("reading model block `{name}`"))?;
+            let dense = block.to_dense()?;
+            blocks.insert(name, dense);
+        }
+        let take = |name: &str, blocks: &mut std::collections::BTreeMap<String, DenseMatrix>| {
+            blocks
+                .remove(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact missing `{name}` block"))
+        };
+        Ok(match kind {
+            KIND_KMEANS => Self::KMeans {
+                centers: take("centers", &mut blocks)?,
+            },
+            KIND_LINREG => Self::LinReg {
+                weights: take("weights", &mut blocks)?,
+                intercept: *scalars
+                    .get("intercept")
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing `intercept` scalar"))?
+                    as f32,
+            },
+            KIND_SCALER => Self::Scaler {
+                mean: take("mean", &mut blocks)?,
+                inv_std: take("inv_std", &mut blocks)?,
+            },
+            KIND_PCA => Self::Pca {
+                mean: take("mean", &mut blocks)?,
+                components: take("components", &mut blocks)?,
+            },
+            other => bail!("unknown artifact kind {other}"),
+        })
+    }
+
+    /// Save to a file path (buffered).
+    pub fn save_path(&self, path: impl AsRef<Path>) -> Result<u64> {
+        let path = path.as_ref();
+        let mut w = BufWriter::new(
+            File::create(path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        self.save(&mut w)
+    }
+
+    /// Load from a file path (buffered).
+    pub fn load_path(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut r = BufReader::new(
+            File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        Self::load(&mut r)
+    }
+}
+
+fn read_name(r: &mut impl Read) -> Result<String> {
+    let mut nlen = [0u8; 1];
+    r.read_exact(&mut nlen)?;
+    let mut name = vec![0u8; nlen[0] as usize];
+    r.read_exact(&mut name)?;
+    String::from_utf8(name).context("artifact field name is not UTF-8")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(a: &ModelArtifact) -> ModelArtifact {
+        let mut buf = Vec::new();
+        let written = a.save(&mut buf).unwrap();
+        assert_eq!(written as usize, buf.len());
+        ModelArtifact::load(&mut buf.as_slice()).unwrap()
+    }
+
+    #[test]
+    fn every_kind_round_trips_bit_for_bit() {
+        let m = |r, c, s: f32| DenseMatrix::from_fn(r, c, |i, j| (i * c + j) as f32 * s - 1.0);
+        let arts = [
+            ModelArtifact::KMeans {
+                centers: m(4, 6, 0.25),
+            },
+            ModelArtifact::LinReg {
+                weights: m(6, 1, 0.5),
+                intercept: -2.75,
+            },
+            ModelArtifact::Scaler {
+                mean: m(1, 6, 0.125),
+                inv_std: m(1, 6, 0.0625),
+            },
+            ModelArtifact::Pca {
+                mean: m(1, 6, 0.2),
+                components: m(2, 6, 0.3),
+            },
+        ];
+        for a in &arts {
+            assert_eq!(&round_trip(a), a);
+        }
+    }
+
+    #[test]
+    fn corrupt_artifacts_error_cleanly() {
+        assert!(ModelArtifact::load(&mut &b"NOPE"[..]).is_err());
+        let a = ModelArtifact::KMeans {
+            centers: DenseMatrix::zeros(2, 3),
+        };
+        let mut buf = Vec::new();
+        a.save(&mut buf).unwrap();
+        // Truncation errors, never panics.
+        assert!(ModelArtifact::load(&mut &buf[..buf.len() - 5]).is_err());
+        // Version bump is rejected.
+        let mut bumped = buf.clone();
+        bumped[4] = 0x7f;
+        assert!(ModelArtifact::load(&mut bumped.as_slice()).is_err());
+        // Unknown kind is rejected.
+        let mut bad_kind = buf;
+        bad_kind[6] = 0x7f;
+        assert!(ModelArtifact::load(&mut bad_kind.as_slice()).is_err());
+    }
+
+    #[test]
+    fn predict_rows_validates_feature_count() {
+        let a = ModelArtifact::KMeans {
+            centers: DenseMatrix::zeros(2, 3),
+        };
+        assert!(a.predict_rows(&DenseMatrix::zeros(1, 4)).is_err());
+        assert_eq!(a.n_features(), 3);
+        assert_eq!(a.output_cols(), 1);
+        let s = ModelArtifact::Scaler {
+            mean: DenseMatrix::zeros(1, 5),
+            inv_std: DenseMatrix::full(1, 5, 1.0),
+        };
+        assert_eq!(s.output_cols(), 5);
+    }
+
+    #[test]
+    fn unfitted_estimators_refuse_to_export() {
+        assert!(ModelArtifact::from_linreg(&LinearRegression::new(0.0, true)).is_err());
+        assert!(ModelArtifact::from_scaler(&StandardScaler::default()).is_err());
+        assert!(ModelArtifact::from_pca(&Pca::new(1)).is_err());
+    }
+}

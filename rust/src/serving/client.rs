@@ -1,0 +1,76 @@
+//! Minimal blocking client for the serving tier: one TCP connection, one
+//! in-flight request at a time, speaking the same length-prefixed wire
+//! protocol as the cluster ([`crate::tasking::wire`]). Concurrency comes
+//! from many clients (threads/processes), which is exactly what the
+//! micro-batcher coalesces.
+
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use crate::storage::{Block, DenseMatrix};
+use crate::tasking::wire::{self, Request, Response};
+
+/// What a predict request came back as. Transport and protocol failures are
+/// `Err` on the call itself; these are the server's explicit answers.
+#[derive(Debug)]
+pub enum PredictOutcome {
+    /// Scored rows, aligned with the request rows.
+    Predicted(DenseMatrix),
+    /// Shed by admission control — back off and retry.
+    Shed(String),
+}
+
+/// One serving connection. Reusable across requests; cheap to open per
+/// client thread.
+pub struct ServingClient {
+    stream: TcpStream,
+}
+
+impl ServingClient {
+    /// Connect to a serving coordinator at `host:port`.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to server {addr}"))?;
+        Ok(Self { stream })
+    }
+
+    /// Score `rows` with the model registered under `model`. Returns the
+    /// server's explicit outcome; `Err` means transport failure or a
+    /// request the server rejected outright (unknown model, feature
+    /// mismatch, failed predict task).
+    pub fn predict(&mut self, model: &str, rows: &DenseMatrix) -> Result<PredictOutcome> {
+        wire::write_request(
+            &mut self.stream,
+            &Request::Predict {
+                model: model.to_string(),
+                block: Block::Dense(rows.clone()),
+            },
+        )?;
+        match wire::read_response(&mut self.stream)?.0 {
+            Response::PredictResult(block) => Ok(PredictOutcome::Predicted(block.to_dense()?)),
+            Response::Overloaded(reason) => Ok(PredictOutcome::Shed(reason)),
+            Response::Err(msg) => bail!("predict failed: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        wire::write_request(&mut self.stream, &Request::Ping)?;
+        match wire::read_response(&mut self.stream)?.0 {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Ask the server to stop (acknowledged, then the server drains and
+    /// exits its serve loop) — how the CLI smoke lane ends a run.
+    pub fn shutdown(&mut self) -> Result<()> {
+        wire::write_request(&mut self.stream, &Request::Shutdown)?;
+        match wire::read_response(&mut self.stream)?.0 {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+}

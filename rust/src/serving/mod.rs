@@ -1,0 +1,30 @@
+//! Online model serving on top of the distributed runtime — ROADMAP item 3.
+//!
+//! Batch fit produces a [`ModelArtifact`] (KMeans, linear regression,
+//! standard scaler, PCA) persisted in the same DSBK block-record format the
+//! spill store and wire protocol use. `dsarray serve` hosts artifacts
+//! behind a [`ModelServer`]: parameters become pinned, replicated runtime
+//! blocks; concurrent `Predict` requests coalesce through an adaptive
+//! micro-batcher into block-sized tasks; admission control sheds overload
+//! with explicit `Overloaded` frames instead of queueing toward OOM.
+//!
+//! The serving contract, enforced by `tests/serving.rs`:
+//!
+//! - **Bit-identical**: a served prediction equals the fitted estimator's
+//!   local batch `predict` bit for bit, coalesced or not, before and after
+//!   an artifact round-trip through disk.
+//! - **Every request is answered**: a `PredictResult`, an explicit
+//!   `Overloaded` shed, or an explicit `Err` — never a hang.
+//! - **Worker death is absorbed**: with `with_replication(k)` the loss of a
+//!   worker mid-traffic costs zero failed requests.
+//!
+//! See `docs/SERVING.md` (rendered as [`crate::serving_guide`]) for the
+//! artifact format and an end-to-end example.
+
+pub mod artifact;
+pub mod client;
+pub mod server;
+
+pub use artifact::ModelArtifact;
+pub use client::{PredictOutcome, ServingClient};
+pub use server::{ModelServer, ServeOptions, ServerHandle, ServingStats};

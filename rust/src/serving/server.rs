@@ -1,0 +1,696 @@
+//! The serving coordinator: pinned model parameters, an adaptive
+//! micro-batcher, admission control, and a TCP loop speaking the cluster
+//! wire protocol's `Predict`/`PredictResult`/`Overloaded` frames.
+//!
+//! ## Request path
+//!
+//! Each client connection gets a thread that reads `Predict` frames,
+//! validates them against the registered model (name, feature count), and
+//! enqueues the rows with a reply channel. A single batcher thread owns the
+//! queue: when a request arrives it opens a small deadline window
+//! ([`ServeOptions::batch_window_ms`]) during which further concurrent
+//! requests coalesce into the same batch, up to
+//! [`ServeOptions::max_batch_rows`] rows. The batch executes as **one**
+//! runtime task (`serve.predict`) reading the request block plus the model's
+//! pinned parameter blocks, and the output rows are sliced back to the
+//! waiting connections. Every predict path is row-independent with
+//! deterministic kernels, so a coalesced answer is bit-identical to the
+//! answer each request would have gotten alone — batching changes latency,
+//! never values.
+//!
+//! ## Admission control
+//!
+//! The queue refuses rows past [`ServeOptions::max_pending_rows`] (and past
+//! [`ServeOptions::max_pending_bytes`] when the serving tier is wired to a
+//! memory budget — the CLI derives this cap from `--memory-budget-bytes`).
+//! A refused request is answered with an explicit `Overloaded` frame
+//! immediately: the server sheds load at the door instead of queueing
+//! toward OOM, and the client knows to back off.
+//!
+//! ## Fault tolerance
+//!
+//! Model parameters live in ordinary runtime blocks: pinned against
+//! eviction, placed on cluster workers, and — when the runtime was built
+//! `with_replication(k)` — k-way replicated. A SIGKILLed worker therefore
+//! costs nothing: the predict task reads a surviving replica (or lineage
+//! recovery replays the root from the coordinator journal) and traffic
+//! continues with zero failed requests, which `tests/serving.rs` enforces
+//! under the chaos harness.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::ModelArtifact;
+use crate::storage::{Block, BlockMeta, DenseMatrix};
+use crate::tasking::metrics::{latency_bucket, Metrics, LATENCY_BUCKETS};
+use crate::tasking::wire::{self, Request, Response};
+use crate::tasking::{CostHint, Future, Runtime};
+
+/// Serving-tier knobs. All have conservative defaults; the CLI and
+/// [`crate::config::Config`] expose each one.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Deadline window (milliseconds) a batch stays open after its first
+    /// request, letting concurrent requests coalesce. `0` disables
+    /// micro-batching: every request runs alone (the uncoalesced baseline
+    /// the bench suite compares against).
+    pub batch_window_ms: u64,
+    /// Row cap per coalesced batch — one block-sized task.
+    pub max_batch_rows: usize,
+    /// Admission control: total queued rows past this are shed with an
+    /// explicit `Overloaded` response.
+    pub max_pending_rows: usize,
+    /// Optional byte-denominated admission cap, wired from the runtime's
+    /// memory budget (the CLI sets `budget / 8`): queued request payload
+    /// past this is shed rather than queued toward OOM.
+    pub max_pending_bytes: Option<u64>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            batch_window_ms: 2,
+            max_batch_rows: 256,
+            max_pending_rows: 4096,
+            max_pending_bytes: None,
+        }
+    }
+}
+
+impl ServeOptions {
+    pub fn with_batch_window_ms(mut self, ms: u64) -> Self {
+        self.batch_window_ms = ms;
+        self
+    }
+
+    pub fn with_max_batch_rows(mut self, rows: usize) -> Self {
+        self.max_batch_rows = rows.max(1);
+        self
+    }
+
+    pub fn with_max_pending_rows(mut self, rows: usize) -> Self {
+        self.max_pending_rows = rows.max(1);
+        self
+    }
+
+    pub fn with_max_pending_bytes(mut self, bytes: Option<u64>) -> Self {
+        self.max_pending_bytes = bytes;
+        self
+    }
+}
+
+/// Serving counters, also overlaid onto [`Metrics`] by
+/// [`ServerHandle::metrics`] so `metrics_json` carries them.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServingStats {
+    /// Predict requests answered with a `PredictResult`.
+    pub requests_served: u64,
+    /// Batches that coalesced more than one request into one task.
+    pub batches_coalesced: u64,
+    /// Requests shed by admission control with an `Overloaded` response.
+    pub requests_shed: u64,
+    /// Log₂ request-latency histogram: bucket `b` counts requests answered
+    /// in `[2^b, 2^(b+1))` microseconds (enqueue to reply).
+    pub latency_us_hist: Vec<u64>,
+}
+
+enum Reply {
+    Answer(DenseMatrix),
+    Failed(String),
+}
+
+struct Pending {
+    model: String,
+    rows: DenseMatrix,
+    enqueued: Instant,
+    reply: mpsc::Sender<Reply>,
+}
+
+#[derive(Default)]
+struct Queue {
+    pending: VecDeque<Pending>,
+    pending_rows: usize,
+    pending_bytes: u64,
+}
+
+struct HostedModel {
+    /// Template carrying the kind and scalar parameters; matrices are
+    /// re-read from the runtime blocks at task time.
+    template: ModelArtifact,
+    /// Pinned parameter block futures, [`ModelArtifact::param_blocks`] order.
+    params: Vec<Future>,
+}
+
+struct Shared {
+    rt: Runtime,
+    opts: ServeOptions,
+    models: RwLock<BTreeMap<String, HostedModel>>,
+    queue: Mutex<Queue>,
+    arrived: Condvar,
+    shutdown: AtomicBool,
+    requests_served: AtomicU64,
+    batches_coalesced: AtomicU64,
+    requests_shed: AtomicU64,
+    latency_us_hist: Mutex<Vec<u64>>,
+}
+
+impl Shared {
+    fn begin_shutdown(&self, addr: &str) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Wake the batcher (under the queue lock so the wake can't race a
+        // wait re-entry)…
+        let guard = self.queue.lock().unwrap();
+        self.arrived.notify_all();
+        drop(guard);
+        // …and unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(addr);
+    }
+
+    /// Admission-controlled enqueue; `Err(reason)` means shed.
+    fn enqueue(&self, p: Pending) -> std::result::Result<(), String> {
+        let rows = p.rows.rows();
+        let bytes = (4 * rows * p.rows.cols()) as u64;
+        let mut q = self.queue.lock().unwrap();
+        if q.pending_rows + rows > self.opts.max_pending_rows {
+            return Err(format!(
+                "pending rows at budget ({} queued, cap {})",
+                q.pending_rows, self.opts.max_pending_rows
+            ));
+        }
+        if let Some(cap) = self.opts.max_pending_bytes {
+            if q.pending_bytes + bytes > cap {
+                return Err(format!(
+                    "pending bytes at memory budget ({} queued, cap {cap})",
+                    q.pending_bytes
+                ));
+            }
+        }
+        q.pending_rows += rows;
+        q.pending_bytes += bytes;
+        q.pending.push_back(p);
+        self.arrived.notify_all();
+        Ok(())
+    }
+
+    fn record_latency(&self, elapsed: Duration) {
+        let us = elapsed.as_micros() as u64;
+        self.latency_us_hist.lock().unwrap()[latency_bucket(us)] += 1;
+    }
+
+    fn stats(&self) -> ServingStats {
+        ServingStats {
+            requests_served: self.requests_served.load(Ordering::SeqCst),
+            batches_coalesced: self.batches_coalesced.load(Ordering::SeqCst),
+            requests_shed: self.requests_shed.load(Ordering::SeqCst),
+            latency_us_hist: self.latency_us_hist.lock().unwrap().clone(),
+        }
+    }
+}
+
+/// A model server bound to one runtime. Register artifacts, then
+/// [`ModelServer::serve`] a listener; the returned [`ServerHandle`] owns the
+/// background threads.
+pub struct ModelServer {
+    shared: Arc<Shared>,
+}
+
+impl ModelServer {
+    pub fn new(rt: Runtime, opts: ServeOptions) -> Self {
+        Self {
+            shared: Arc::new(Shared {
+                rt,
+                opts,
+                models: RwLock::new(BTreeMap::new()),
+                queue: Mutex::new(Queue::default()),
+                arrived: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+                requests_served: AtomicU64::new(0),
+                batches_coalesced: AtomicU64::new(0),
+                requests_shed: AtomicU64::new(0),
+                latency_us_hist: Mutex::new(vec![0; LATENCY_BUCKETS]),
+            }),
+        }
+    }
+
+    /// The runtime predictions execute on.
+    pub fn runtime(&self) -> &Runtime {
+        &self.shared.rt
+    }
+
+    /// Host `artifact` under `name`: its parameter matrices become pinned
+    /// runtime blocks (replicated across workers when the runtime was built
+    /// `with_replication(k)`), and `Predict { model: name, .. }` requests
+    /// are answered from them. Re-registering a name replaces the model for
+    /// subsequent batches.
+    pub fn register(&self, name: &str, artifact: ModelArtifact) -> Result<()> {
+        if name.is_empty() {
+            bail!("model name must be non-empty");
+        }
+        let params: Vec<Future> = artifact
+            .param_blocks()
+            .into_iter()
+            .map(|m| {
+                let fut = self.shared.rt.put_block(Block::Dense(m));
+                // Pinned: never spilled or evicted out from under traffic.
+                self.shared.rt.pin(fut);
+                fut
+            })
+            .collect();
+        // Surface placement errors now, not on the first request.
+        self.shared.rt.barrier()?;
+        self.shared.models.write().unwrap().insert(
+            name.to_string(),
+            HostedModel {
+                template: artifact,
+                params,
+            },
+        );
+        Ok(())
+    }
+
+    /// Start serving on `listener`: spawns the batcher and the accept loop,
+    /// returns a handle with the bound address and the live counters.
+    pub fn serve(&self, listener: TcpListener) -> Result<ServerHandle> {
+        let addr = listener
+            .local_addr()
+            .context("serving listener has no local address")?
+            .to_string();
+        let batcher = {
+            let shared = self.shared.clone();
+            std::thread::spawn(move || batcher_loop(&shared))
+        };
+        let accept = {
+            let shared = self.shared.clone();
+            std::thread::spawn(move || accept_loop(&shared, listener))
+        };
+        Ok(ServerHandle {
+            shared: self.shared.clone(),
+            addr,
+            batcher: Some(batcher),
+            accept: Some(accept),
+        })
+    }
+}
+
+/// Handle to a running server: address, live counters, orderly shutdown.
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+    addr: String,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound `host:port` clients connect to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Live serving counters.
+    pub fn stats(&self) -> ServingStats {
+        self.shared.stats()
+    }
+
+    /// Runtime metrics with the serving counters overlaid — the snapshot
+    /// [`crate::bench::report::metrics_json`] serializes.
+    pub fn metrics(&self) -> Metrics {
+        let mut m = self.shared.rt.metrics();
+        let s = self.shared.stats();
+        m.requests_served = s.requests_served;
+        m.batches_coalesced = s.batches_coalesced;
+        m.requests_shed = s.requests_shed;
+        m.predict_latency_us_hist = s.latency_us_hist;
+        m
+    }
+
+    /// Stop accepting, drain the queue (queued requests are still
+    /// answered), and join the background threads.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    /// True once a client's `Shutdown` frame (or [`Self::shutdown`]) has
+    /// stopped the server — lets a CLI host park until told to exit.
+    pub fn is_shut_down(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.begin_shutdown(&self.addr);
+        if let Some(t) = self.batcher.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(shared: &Arc<Shared>, listener: TcpListener) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = stream else { continue };
+        let shared = shared.clone();
+        let addr = listener.local_addr().map(|a| a.to_string());
+        std::thread::spawn(move || {
+            conn_loop(&shared, stream, addr.as_deref().unwrap_or(""));
+        });
+    }
+}
+
+fn conn_loop(shared: &Arc<Shared>, mut stream: TcpStream, addr: &str) {
+    loop {
+        let req = match wire::read_request(&mut stream) {
+            Ok(r) => r,
+            Err(_) => return, // client hung up
+        };
+        let resp = match req {
+            Request::Ping => Response::Ok,
+            Request::Shutdown => {
+                let _ = wire::write_response(&mut stream, &Response::Ok);
+                shared.begin_shutdown(addr);
+                return;
+            }
+            Request::Predict { model, block } => answer_predict(shared, &model, &block),
+            _ => Response::Err("unsupported request on serving socket".into()),
+        };
+        if wire::write_response(&mut stream, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+/// Validate, enqueue, and wait for the batcher's reply — the whole
+/// per-request path other than the shared batch task.
+fn answer_predict(shared: &Arc<Shared>, model: &str, block: &Block) -> Response {
+    let rows = match block.to_dense() {
+        Ok(r) => r,
+        Err(e) => return Response::Err(format!("bad request block: {e}")),
+    };
+    if rows.rows() == 0 {
+        return Response::Err("empty request block".into());
+    }
+    {
+        let models = shared.models.read().unwrap();
+        let Some(hosted) = models.get(model) else {
+            return Response::Err(format!("unknown model `{model}`"));
+        };
+        let want = hosted.template.n_features();
+        if rows.cols() != want {
+            return Response::Err(format!(
+                "model `{model}` expects {want} features, request has {}",
+                rows.cols()
+            ));
+        }
+    }
+    let (tx, rx) = mpsc::channel();
+    let pending = Pending {
+        model: model.to_string(),
+        rows,
+        enqueued: Instant::now(),
+        reply: tx,
+    };
+    if let Err(reason) = shared.enqueue(pending) {
+        shared.requests_shed.fetch_add(1, Ordering::SeqCst);
+        return Response::Overloaded(reason);
+    }
+    // Generous backstop so a wedged runtime yields an error, never a hang.
+    match rx.recv_timeout(Duration::from_secs(60)) {
+        Ok(Reply::Answer(m)) => Response::PredictResult(Block::Dense(m)),
+        Ok(Reply::Failed(msg)) => Response::Err(msg),
+        Err(_) => Response::Err("predict timed out".into()),
+    }
+}
+
+/// The single batch-forming loop: wait for a first request, hold the
+/// deadline window open for concurrent arrivals, drain up to a block's
+/// worth of rows, execute one task per model, reply per request.
+fn batcher_loop(shared: &Arc<Shared>) {
+    loop {
+        let mut q = shared.queue.lock().unwrap();
+        while q.pending.is_empty() {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let (guard, _) = shared
+                .arrived
+                .wait_timeout(q, Duration::from_millis(100))
+                .unwrap();
+            q = guard;
+        }
+        // Adaptive window: the batch stays open until the deadline or the
+        // row cap, coalescing whatever concurrency the moment offers.
+        let window = Duration::from_millis(shared.opts.batch_window_ms);
+        let deadline = Instant::now() + window;
+        while q.pending_rows < shared.opts.max_batch_rows
+            && !shared.shutdown.load(Ordering::SeqCst)
+        {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = shared.arrived.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+        let mut batch = Vec::new();
+        let mut took_rows = 0usize;
+        while let Some(front) = q.pending.front() {
+            let n = front.rows.rows();
+            if !batch.is_empty() && took_rows + n > shared.opts.max_batch_rows {
+                break;
+            }
+            took_rows += n;
+            let p = q.pending.pop_front().unwrap();
+            q.pending_rows -= p.rows.rows();
+            q.pending_bytes -= (4 * p.rows.rows() * p.rows.cols()) as u64;
+            batch.push(p);
+        }
+        drop(q);
+        if batch.is_empty() {
+            continue;
+        }
+        // Contiguous arrival order per model is preserved: requests for the
+        // same model score as one task, slices map back by offset.
+        let mut by_model: BTreeMap<String, Vec<Pending>> = BTreeMap::new();
+        for p in batch {
+            by_model.entry(p.model.clone()).or_default().push(p);
+        }
+        for (model, group) in by_model {
+            execute_batch(shared, &model, group);
+        }
+    }
+}
+
+fn execute_batch(shared: &Arc<Shared>, model: &str, group: Vec<Pending>) {
+    let (template, params) = {
+        let models = shared.models.read().unwrap();
+        match models.get(model) {
+            Some(h) => (h.template.clone(), h.params.clone()),
+            None => {
+                for p in group {
+                    let _ = p.reply.send(Reply::Failed(format!("unknown model `{model}`")));
+                }
+                return;
+            }
+        }
+    };
+    let coalesced = group.len() > 1;
+    let total_rows: usize = group.iter().map(|p| p.rows.rows()).sum();
+    let out_cols = template.output_cols();
+    let stacked = if group.len() == 1 {
+        Ok(group[0].rows.clone())
+    } else {
+        let refs: Vec<&DenseMatrix> = group.iter().map(|p| &p.rows).collect();
+        DenseMatrix::vstack(&refs)
+    };
+    let stacked = match stacked {
+        Ok(m) => m,
+        Err(e) => {
+            for p in group {
+                let _ = p.reply.send(Reply::Failed(format!("batch assembly failed: {e}")));
+            }
+            return;
+        }
+    };
+    let rows_fut = shared.rt.put_block(Block::Dense(stacked));
+    let mut reads = vec![rows_fut];
+    reads.extend_from_slice(&params);
+    let nparams = params.len();
+    let closure_template = template.clone();
+    let futs = shared.rt.submit(
+        "serve.predict",
+        &reads,
+        vec![BlockMeta::dense(total_rows, out_cols)],
+        CostHint::flops(
+            2.0 * total_rows as f64 * template.n_features() as f64 * out_cols.max(2) as f64,
+        ),
+        std::sync::Arc::new(move |ins: &[std::sync::Arc<Block>]| {
+            let rows = ins[0].to_dense()?;
+            let mats: Vec<DenseMatrix> = ins[1..1 + nparams]
+                .iter()
+                .map(|b| b.to_dense())
+                .collect::<Result<_>>()?;
+            let live = closure_template.with_params(&mats)?;
+            Ok(vec![Block::Dense(live.predict_rows(&rows)?)])
+        }),
+    );
+    let result = shared.rt.wait(futs[0]);
+    match result {
+        Ok(out_block) => {
+            let out = match out_block.as_dense() {
+                Ok(d) => d.clone(),
+                Err(e) => {
+                    let msg = format!("predict produced a non-dense block: {e}");
+                    for p in group {
+                        let _ = p.reply.send(Reply::Failed(msg.clone()));
+                    }
+                    shared.rt.release(&[rows_fut, futs[0]]);
+                    return;
+                }
+            };
+            let mut off = 0usize;
+            for p in &group {
+                let n = p.rows.rows();
+                match out.slice(off, 0, n, out_cols) {
+                    Ok(slice) => {
+                        shared.record_latency(p.enqueued.elapsed());
+                        shared.requests_served.fetch_add(1, Ordering::SeqCst);
+                        let _ = p.reply.send(Reply::Answer(slice));
+                    }
+                    Err(e) => {
+                        let _ = p.reply.send(Reply::Failed(format!("result slicing failed: {e}")));
+                    }
+                }
+                off += n;
+            }
+            if coalesced {
+                shared.batches_coalesced.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        Err(e) => {
+            let msg = format!("predict task failed: {e}");
+            for p in &group {
+                let _ = p.reply.send(Reply::Failed(msg.clone()));
+            }
+        }
+    }
+    // Mirror DsArray's lifecycle: the batch input and output blocks are
+    // one-shot — release them so refcount reclamation bounds server memory
+    // by the in-flight frontier, not the request history.
+    shared.rt.release(&[rows_fut, futs[0]]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::client::{PredictOutcome, ServingClient};
+
+    fn kmeans_artifact() -> ModelArtifact {
+        ModelArtifact::KMeans {
+            centers: DenseMatrix::from_fn(3, 4, |i, j| (i * 4 + j) as f32 * 0.5 - 2.0),
+        }
+    }
+
+    fn serve_local(opts: ServeOptions) -> (ModelServer, ServerHandle) {
+        let server = ModelServer::new(Runtime::local(2), opts);
+        server.register("m", kmeans_artifact()).unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let handle = server.serve(listener).unwrap();
+        (server, handle)
+    }
+
+    #[test]
+    fn single_request_round_trips_and_counts() {
+        let (_server, handle) = serve_local(ServeOptions::default());
+        let mut c = ServingClient::connect(handle.addr()).unwrap();
+        let rows = DenseMatrix::from_fn(2, 4, |i, j| (i + j) as f32);
+        let want = kmeans_artifact().predict_rows(&rows).unwrap();
+        match c.predict("m", &rows).unwrap() {
+            PredictOutcome::Predicted(got) => assert_eq!(got, want),
+            other => panic!("got {other:?}"),
+        }
+        let s = handle.stats();
+        assert_eq!(s.requests_served, 1);
+        assert_eq!(s.requests_shed, 0);
+        assert_eq!(s.latency_us_hist.iter().sum::<u64>(), 1);
+        let m = handle.metrics();
+        assert_eq!(m.requests_served, 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_get_explicit_errors() {
+        let (_server, handle) = serve_local(ServeOptions::default());
+        let mut c = ServingClient::connect(handle.addr()).unwrap();
+        let rows = DenseMatrix::zeros(1, 4);
+        // Unknown model.
+        assert!(c.predict("ghost", &rows).is_err());
+        // Feature mismatch (model has 4 features).
+        assert!(c.predict("m", &DenseMatrix::zeros(1, 3)).is_err());
+        // The connection survives errors: a good request still works.
+        assert!(matches!(
+            c.predict("m", &rows).unwrap(),
+            PredictOutcome::Predicted(_)
+        ));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn shutdown_frame_stops_the_server() {
+        let (_server, handle) = serve_local(ServeOptions::default());
+        let mut c = ServingClient::connect(handle.addr()).unwrap();
+        c.shutdown().unwrap();
+        for _ in 0..100 {
+            if handle.is_shut_down() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(handle.is_shut_down());
+        handle.shutdown();
+    }
+
+    #[test]
+    fn admission_control_sheds_past_the_row_cap() {
+        // Cap of 1 pending row + a long window: the first request parks in
+        // the open batch window, the second is shed at the door.
+        let (_server, handle) = serve_local(
+            ServeOptions::default()
+                .with_batch_window_ms(200)
+                .with_max_pending_rows(1),
+        );
+        let addr = handle.addr().to_string();
+        let first = std::thread::spawn({
+            let addr = addr.clone();
+            move || {
+                let mut c = ServingClient::connect(&addr).unwrap();
+                c.predict("m", &DenseMatrix::zeros(1, 4)).unwrap()
+            }
+        });
+        // Give the first request time to enqueue and open the window.
+        std::thread::sleep(Duration::from_millis(50));
+        let mut c = ServingClient::connect(&addr).unwrap();
+        match c.predict("m", &DenseMatrix::zeros(1, 4)).unwrap() {
+            PredictOutcome::Shed(reason) => assert!(reason.contains("budget")),
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert!(matches!(first.join().unwrap(), PredictOutcome::Predicted(_)));
+        let s = handle.stats();
+        assert_eq!(s.requests_shed, 1);
+        assert_eq!(s.requests_served, 1);
+        handle.shutdown();
+    }
+}

@@ -92,6 +92,29 @@ pub struct Metrics {
     /// position; grows when workers join). Local/sim backends leave this
     /// empty.
     pub tasks_by_worker: Vec<u64>,
+    /// Predict requests the serving tier answered with a result
+    /// (overlaid onto snapshots by `ServerHandle::metrics`).
+    pub requests_served: u64,
+    /// Serving batches that coalesced more than one concurrent request
+    /// into a single block-sized task.
+    pub batches_coalesced: u64,
+    /// Predict requests shed by serving admission control with an explicit
+    /// `Overloaded` response.
+    pub requests_shed: u64,
+    /// Log₂ serving-latency histogram: bucket `b` counts requests answered
+    /// in `[2^b, 2^(b+1))` microseconds, enqueue to reply (see
+    /// [`latency_bucket`]). Empty outside serving.
+    pub predict_latency_us_hist: Vec<u64>,
+}
+
+/// Buckets in [`Metrics::predict_latency_us_hist`]: the last bucket absorbs
+/// everything from `2^23` µs (~8.4 s) up.
+pub const LATENCY_BUCKETS: usize = 24;
+
+/// Histogram bucket for a request latency of `us` microseconds:
+/// `floor(log2(us))`, clamped into `0..LATENCY_BUCKETS`.
+pub fn latency_bucket(us: u64) -> usize {
+    (63 - us.max(1).leading_zeros() as usize).min(LATENCY_BUCKETS - 1)
 }
 
 impl Metrics {
@@ -267,8 +290,16 @@ impl Metrics {
         out.workers_joined -= earlier.workers_joined;
         out.workers_drained -= earlier.workers_drained;
         out.tasks_speculated -= earlier.tasks_speculated;
+        out.requests_served -= earlier.requests_served;
+        out.batches_coalesced -= earlier.batches_coalesced;
+        out.requests_shed -= earlier.requests_shed;
         for (i, v) in earlier.tasks_by_worker.iter().enumerate() {
             if let Some(x) = out.tasks_by_worker.get_mut(i) {
+                *x = x.saturating_sub(*v);
+            }
+        }
+        for (i, v) in earlier.predict_latency_us_hist.iter().enumerate() {
+            if let Some(x) = out.predict_latency_us_hist.get_mut(i) {
                 *x = x.saturating_sub(*v);
             }
         }
@@ -426,6 +457,34 @@ mod tests {
         assert_eq!(d.workers_drained, 0);
         assert_eq!(d.tasks_speculated, 0);
         assert_eq!(d.tasks_by_worker, vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn serving_counters_and_latency_buckets() {
+        // Bucket b covers [2^b, 2^(b+1)) µs; extremes clamp into range.
+        assert_eq!(latency_bucket(0), 0);
+        assert_eq!(latency_bucket(1), 0);
+        assert_eq!(latency_bucket(2), 1);
+        assert_eq!(latency_bucket(3), 1);
+        assert_eq!(latency_bucket(1024), 10);
+        assert_eq!(latency_bucket(u64::MAX), LATENCY_BUCKETS - 1);
+        let mut m = Metrics {
+            requests_served: 10,
+            batches_coalesced: 2,
+            requests_shed: 1,
+            predict_latency_us_hist: vec![0; LATENCY_BUCKETS],
+            ..Default::default()
+        };
+        m.predict_latency_us_hist[latency_bucket(700)] = 10;
+        let snap = m.clone();
+        m.requests_served += 5;
+        m.batches_coalesced += 1;
+        m.predict_latency_us_hist[latency_bucket(700)] += 5;
+        let d = m.since(&snap);
+        assert_eq!(d.requests_served, 5);
+        assert_eq!(d.batches_coalesced, 1);
+        assert_eq!(d.requests_shed, 0);
+        assert_eq!(d.predict_latency_us_hist[9], 5);
     }
 
     #[test]

@@ -28,17 +28,20 @@
 //! | 0x08 | Crash    | —                                                |
 //! | 0x09 | Join     | `alen u16` + worker listen address (UTF-8)       |
 //! | 0x0a | Drain    | `alen u16` + worker listen address (UTF-8)       |
+//! | 0x0b | Predict  | `mlen u16` + model name (UTF-8) + block record   |
 //!
 //! Response opcodes (worker → requester):
 //!
-//! | op   | name         | body                                               |
-//! |------|--------------|----------------------------------------------------|
-//! | 0x81 | Ok           | —                                                  |
-//! | 0x82 | Block        | block record                                       |
-//! | 0x83 | Pulled       | `bytes u64` (wire bytes moved worker-to-worker)    |
-//! | 0x84 | Stat         | `blocks u64, resident u64, spilled u64, pulled u64`|
-//! | 0x85 | Err          | UTF-8 message                                      |
-//! | 0x86 | PullPeerDown | UTF-8 message                                      |
+//! | op   | name          | body                                               |
+//! |------|---------------|----------------------------------------------------|
+//! | 0x81 | Ok            | —                                                  |
+//! | 0x82 | Block         | block record                                       |
+//! | 0x83 | Pulled        | `bytes u64` (wire bytes moved worker-to-worker)    |
+//! | 0x84 | Stat          | `blocks u64, resident u64, spilled u64, pulled u64`|
+//! | 0x85 | Err           | UTF-8 message                                      |
+//! | 0x86 | PullPeerDown  | UTF-8 message                                      |
+//! | 0x87 | PredictResult | block record                                       |
+//! | 0x88 | Overloaded    | UTF-8 message                                      |
 //!
 //! `Crash` kills the worker abruptly (fault-injection testing: no response,
 //! no cleanup — the nearest thing to SIGKILL that works for the in-process
@@ -52,6 +55,13 @@
 //! address so it can be enrolled in a running fleet, `Drain` asks for a
 //! graceful decommission (the coordinator migrates the worker's sole-copy
 //! blocks to survivors and then stops scheduling on it).
+//!
+//! `Predict` is a client → serving-coordinator request ([`crate::serving`]):
+//! the named model scores the rows of the request block. The server answers
+//! `PredictResult` with one output block (rows aligned to the request rows),
+//! `Overloaded` when admission control sheds the request (explicit backpressure
+//! rather than OOM — the client may retry later), or `Err` for a bad request
+//! (unknown model, feature-count mismatch).
 //!
 //! Exactly one response answers each request, in order, per connection. The
 //! codec is transport-agnostic (`Read`/`Write`), so the same functions serve
@@ -78,12 +88,15 @@ const OP_SHUTDOWN: u8 = 0x07;
 const OP_CRASH: u8 = 0x08;
 const OP_JOIN: u8 = 0x09;
 const OP_DRAIN: u8 = 0x0a;
+const OP_PREDICT: u8 = 0x0b;
 const OP_OK: u8 = 0x81;
 const OP_BLOCK: u8 = 0x82;
 const OP_PULLED: u8 = 0x83;
 const OP_STAT_R: u8 = 0x84;
 const OP_ERR: u8 = 0x85;
 const OP_PULL_PEER_DOWN: u8 = 0x86;
+const OP_PREDICT_R: u8 = 0x87;
+const OP_OVERLOADED: u8 = 0x88;
 
 /// One coordinator/peer request to a worker.
 #[derive(Debug)]
@@ -116,6 +129,11 @@ pub enum Request {
     /// sole-copy blocks to survivors, then drop it from the fleet. Answered
     /// `Ok` once the drain completes (the worker may then exit).
     Drain { addr: String },
+    /// Client → serving coordinator ([`crate::serving`]): score the rows of
+    /// `block` with the model registered under `model`. Answered
+    /// [`Response::PredictResult`], [`Response::Overloaded`] (shed by
+    /// admission control), or [`Response::Err`].
+    Predict { model: String, block: Block },
 }
 
 /// Worker-side counters returned by [`Request::Stat`].
@@ -142,6 +160,11 @@ pub enum Response {
     /// A `Pull`'s *peer* was unreachable (connect/transport failure). The
     /// responding worker is healthy; the peer must be presumed dead.
     PullPeerDown(String),
+    /// A `Predict`'s answer: one block whose rows align with the request's.
+    PredictResult(Block),
+    /// A `Predict` shed by admission control — the serving tier is at its
+    /// configured pending-row budget. Explicit backpressure: retry later.
+    Overloaded(String),
 }
 
 fn push_u16(buf: &mut Vec<u8>, v: u16) {
@@ -281,6 +304,11 @@ pub fn write_request(w: &mut impl Write, req: &Request) -> Result<u64> {
             buf.push(OP_DRAIN);
             push_addr(&mut buf, addr)?;
         }
+        Request::Predict { model, block } => {
+            buf.push(OP_PREDICT);
+            push_addr(&mut buf, model)?;
+            write_block(&mut buf, block).context("encoding Predict block record")?;
+        }
     }
     write_frame(w, &buf)
 }
@@ -317,6 +345,12 @@ pub fn read_request(r: &mut impl Read) -> Result<Request> {
         OP_CRASH => Request::Crash,
         OP_JOIN => Request::Join { addr: c.addr()? },
         OP_DRAIN => Request::Drain { addr: c.addr()? },
+        OP_PREDICT => {
+            let model = c.addr()?;
+            let mut rest = c.rest();
+            let block = read_block(&mut rest).context("decoding Predict block record")?;
+            Request::Predict { model, block }
+        }
         other => bail!("unknown request opcode 0x{other:02x}"),
     })
 }
@@ -349,6 +383,14 @@ pub fn write_response(w: &mut impl Write, resp: &Response) -> Result<u64> {
             buf.push(OP_PULL_PEER_DOWN);
             buf.extend_from_slice(msg.as_bytes());
         }
+        Response::PredictResult(block) => {
+            buf.push(OP_PREDICT_R);
+            write_block(&mut buf, block).context("encoding PredictResult block record")?;
+        }
+        Response::Overloaded(msg) => {
+            buf.push(OP_OVERLOADED);
+            buf.extend_from_slice(msg.as_bytes());
+        }
     }
     write_frame(w, &buf)
 }
@@ -376,6 +418,13 @@ pub fn read_response(r: &mut impl Read) -> Result<(Response, u64)> {
         OP_PULL_PEER_DOWN => {
             Response::PullPeerDown(String::from_utf8_lossy(c.rest()).into_owned())
         }
+        OP_PREDICT_R => {
+            let mut rest = c.rest();
+            Response::PredictResult(
+                read_block(&mut rest).context("decoding PredictResult block record")?,
+            )
+        }
+        OP_OVERLOADED => Response::Overloaded(String::from_utf8_lossy(c.rest()).into_owned()),
         other => bail!("unknown response opcode 0x{other:02x}"),
     };
     Ok((resp, n))
@@ -497,6 +546,41 @@ mod tests {
             Request::Drain { addr } => assert_eq!(addr, "127.0.0.1:7401"),
             other => panic!("decoded {other:?}"),
         }
+        match round_trip_response(&Response::Overloaded("pending rows at budget".into())) {
+            Response::Overloaded(m) => assert_eq!(m, "pending rows at budget"),
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn predict_frames_round_trip_bit_for_bit() {
+        let rows = DenseMatrix::from_fn(3, 4, |i, j| (i * 4 + j) as f32 * 0.5 - 1.0);
+        match round_trip_request(&Request::Predict {
+            model: "kmeans-prod".into(),
+            block: Block::Dense(rows.clone()),
+        }) {
+            Request::Predict { model, block } => {
+                assert_eq!(model, "kmeans-prod");
+                assert_eq!(block.as_dense().unwrap(), &rows);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        let out = DenseMatrix::from_fn(3, 1, |i, _| i as f32);
+        match round_trip_response(&Response::PredictResult(Block::Dense(out.clone()))) {
+            Response::PredictResult(b) => assert_eq!(b.as_dense().unwrap(), &out),
+            other => panic!("decoded {other:?}"),
+        }
+        // Truncated Predict body: decode errors, never panics.
+        let mut buf = Vec::new();
+        write_request(
+            &mut buf,
+            &Request::Predict {
+                model: "m".into(),
+                block: Block::Dense(rows),
+            },
+        )
+        .unwrap();
+        assert!(read_request(&mut &buf[..buf.len() - 3]).is_err());
     }
 
     #[test]

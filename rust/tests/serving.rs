@@ -1,0 +1,542 @@
+//! Serving-tier acceptance suite: a fitted model hosted by `ModelServer`
+//! over **real worker processes** must answer thousands of concurrent
+//! single-row predict requests bit-identically to the local batch
+//! `predict`, with the micro-batcher visibly coalescing, admission control
+//! shedding explicitly (never hanging, never OOMing), and — with k-way
+//! replication — a SIGKILLed worker costing **zero** failed requests.
+//!
+//! Also covers the model-artifact round trip (every estimator, including a
+//! fit over a spill-budget runtime) and worker-initiated graceful
+//! shutdown: a real `dsarray worker --join` process receiving SIGTERM asks
+//! the coordinator to drain it and exits cleanly mid-traffic.
+
+use std::path::Path;
+use std::process::Child;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use rustdslib::dsarray::creation;
+use rustdslib::estimators::kmeans::{KMeans, KMeansConfig};
+use rustdslib::estimators::{Estimator, LinearRegression, Pca, StandardScaler};
+use rustdslib::serving::{ModelArtifact, ModelServer, PredictOutcome, ServeOptions, ServingClient};
+use rustdslib::storage::DenseMatrix;
+use rustdslib::tasking::cluster::spawn_worker_process_with;
+use rustdslib::tasking::{ClusterOptions, Runtime};
+use rustdslib::util::rng::Xoshiro256;
+
+/// A fleet of real worker processes; killed (and reaped) on drop. Same
+/// harness as `tests/cluster.rs`.
+struct Workers {
+    children: Vec<Child>,
+    addrs: Vec<String>,
+}
+
+impl Workers {
+    fn spawn(n: usize) -> Self {
+        let program = Path::new(env!("CARGO_BIN_EXE_dsarray"));
+        let mut children = Vec::new();
+        let mut addrs = Vec::new();
+        for _ in 0..n {
+            let (child, addr) =
+                spawn_worker_process_with(program, None, None).expect("spawn dsarray worker");
+            children.push(child);
+            addrs.push(addr);
+        }
+        Self { children, addrs }
+    }
+
+    fn runtime(&self) -> Runtime {
+        Runtime::cluster(ClusterOptions::connect(self.addrs.clone()).with_threads(2)).unwrap()
+    }
+
+    fn runtime_with(&self, opts: ClusterOptions) -> Runtime {
+        Runtime::cluster(opts).unwrap()
+    }
+}
+
+impl Drop for Workers {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            match c.try_wait() {
+                Ok(Some(_)) => {}
+                _ => {
+                    c.kill().ok();
+                    c.wait().ok();
+                }
+            }
+        }
+    }
+}
+
+fn random_matrix(rows: usize, cols: usize, seed: u64) -> DenseMatrix {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    DenseMatrix::from_fn(rows, cols, |_, _| rng.next_normal())
+}
+
+/// Fit a KMeans on `xm` locally and return (artifact, per-row reference
+/// labels from the **batch** `predict` path). Blocks span the full feature
+/// width — the layout under which the serving task is bit-identical to the
+/// batch closure (see `docs/SERVING.md`).
+fn fitted_kmeans_reference(xm: &DenseMatrix) -> (ModelArtifact, DenseMatrix) {
+    let rt = Runtime::local(2);
+    let x = creation::from_matrix(&rt, xm, (64.min(xm.rows()), xm.cols())).unwrap();
+    let mut km = KMeans::new(KMeansConfig {
+        k: 4,
+        max_iter: 10,
+        tol: 1e-9,
+        seed: 9,
+    });
+    km.fit(&x, None).unwrap();
+    let reference = km.predict(&x).unwrap().collect().unwrap();
+    let artifact = ModelArtifact::from_kmeans(&km).unwrap();
+    // The serving predict path must agree with the batch path up front —
+    // any divergence here would invalidate the whole saturation assert.
+    assert_eq!(artifact.predict_rows(xm).unwrap(), reference);
+    (artifact, reference)
+}
+
+/// The tentpole acceptance scenario: ≥1000 concurrent single-row requests
+/// from many client threads against a server backed by two real worker
+/// processes. Every request is answered, every answer is bit-identical to
+/// the local batch `predict`, and the micro-batcher demonstrably coalesced
+/// (`batches_coalesced > 0`) — batching changes latency, never values.
+#[test]
+fn saturation_thousands_of_requests_stay_bit_identical() {
+    const THREADS: usize = 16;
+    const PER_THREAD: usize = 80; // 1280 requests total
+
+    let xm = random_matrix(256, 8, 31);
+    let (artifact, reference) = fitted_kmeans_reference(&xm);
+
+    let workers = Workers::spawn(2);
+    let server = ModelServer::new(
+        workers.runtime(),
+        ServeOptions::default().with_batch_window_ms(5).with_max_batch_rows(256),
+    );
+    server.register("km", artifact).unwrap();
+    let handle = server.serve(std::net::TcpListener::bind("127.0.0.1:0").unwrap()).unwrap();
+    let addr = handle.addr().to_string();
+
+    let answered = Arc::new(AtomicU64::new(0));
+    let threads: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let addr = addr.clone();
+            let xm = xm.clone();
+            let reference = reference.clone();
+            let answered = answered.clone();
+            std::thread::spawn(move || {
+                let mut c = ServingClient::connect(&addr).unwrap();
+                for k in 0..PER_THREAD {
+                    let i = (t * PER_THREAD + k) % xm.rows();
+                    let row = xm.slice(i, 0, 1, xm.cols()).unwrap();
+                    match c.predict("km", &row).unwrap() {
+                        PredictOutcome::Predicted(got) => {
+                            assert_eq!(
+                                got,
+                                reference.slice(i, 0, 1, 1).unwrap(),
+                                "served row {i} diverged from the batch predict"
+                            );
+                            answered.fetch_add(1, Ordering::SeqCst);
+                        }
+                        PredictOutcome::Shed(reason) => {
+                            panic!("no request should shed at these caps: {reason}")
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    let total = (THREADS * PER_THREAD) as u64;
+    assert_eq!(answered.load(Ordering::SeqCst), total);
+    let s = handle.stats();
+    assert_eq!(s.requests_served, total, "every request must be served");
+    assert_eq!(s.requests_shed, 0);
+    assert!(
+        s.batches_coalesced > 0,
+        "concurrent traffic must coalesce, got {} batches",
+        s.batches_coalesced
+    );
+    assert_eq!(
+        s.latency_us_hist.iter().sum::<u64>(),
+        total,
+        "every served request must land in a latency bucket"
+    );
+    // The serving counters flow through the metrics line verbatim.
+    let json = rustdslib::bench::report::metrics_json(&handle.metrics());
+    assert!(json.contains(&format!("\"requests_served\":{total}")), "{json}");
+    assert!(json.contains("\"batches_coalesced\":"), "{json}");
+    assert!(json.contains("\"predict_latency_us_hist\":["), "{json}");
+    handle.shutdown();
+}
+
+/// Overload is shed at the door with an explicit `Overloaded` frame — and
+/// the server recovers: once the burst drains, fresh requests are served
+/// again. Every request gets exactly one explicit outcome; none hang.
+#[test]
+fn admission_control_sheds_explicitly_and_recovers() {
+    let xm = random_matrix(64, 8, 37);
+    let (artifact, reference) = fitted_kmeans_reference(&xm);
+
+    // Local backend: this test is about the queue, not the wire to workers.
+    let server = ModelServer::new(
+        Runtime::local(2),
+        ServeOptions::default()
+            .with_batch_window_ms(40)
+            .with_max_batch_rows(4)
+            .with_max_pending_rows(4),
+    );
+    server.register("km", artifact).unwrap();
+    let handle = server.serve(std::net::TcpListener::bind("127.0.0.1:0").unwrap()).unwrap();
+    let addr = handle.addr().to_string();
+
+    let served = Arc::new(AtomicU64::new(0));
+    let shed = Arc::new(AtomicU64::new(0));
+    let threads: Vec<_> = (0..24)
+        .map(|t| {
+            let addr = addr.clone();
+            let xm = xm.clone();
+            let reference = reference.clone();
+            let (served, shed) = (served.clone(), shed.clone());
+            std::thread::spawn(move || {
+                let mut c = ServingClient::connect(&addr).unwrap();
+                let i = t % xm.rows();
+                let row = xm.slice(i, 0, 1, xm.cols()).unwrap();
+                match c.predict("km", &row).unwrap() {
+                    PredictOutcome::Predicted(got) => {
+                        assert_eq!(got, reference.slice(i, 0, 1, 1).unwrap());
+                        served.fetch_add(1, Ordering::SeqCst);
+                    }
+                    PredictOutcome::Shed(reason) => {
+                        assert!(reason.contains("budget"), "shed reason: {reason}");
+                        shed.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let (n_served, n_shed) = (served.load(Ordering::SeqCst), shed.load(Ordering::SeqCst));
+    assert_eq!(n_served + n_shed, 24, "every request answered exactly once");
+    assert!(n_shed > 0, "24 bursty requests over a 4-row cap must shed some");
+    assert!(n_served > 0, "admission control must not shed everything");
+    let s = handle.stats();
+    assert_eq!(s.requests_served, n_served);
+    assert_eq!(s.requests_shed, n_shed);
+
+    // Recovery: the burst is gone, a fresh request sails through.
+    let mut c = ServingClient::connect(&addr).unwrap();
+    let row = xm.slice(0, 0, 1, xm.cols()).unwrap();
+    assert!(matches!(c.predict("km", &row).unwrap(), PredictOutcome::Predicted(_)));
+    handle.shutdown();
+}
+
+/// Serving under churn, pinned by the chaos-seed convention
+/// (`DSARRAY_CHAOS_SEEDS=<seed>` reruns a failing round): with 2-way
+/// replication, SIGKILLing one of two workers mid-traffic costs **zero**
+/// failed requests — every answer still bit-identical. The seed varies the
+/// traffic shape and kill timing.
+#[test]
+fn worker_sigkill_with_replication_costs_zero_failed_requests() {
+    let seeds: Vec<u64> = match std::env::var("DSARRAY_CHAOS_SEEDS") {
+        Ok(s) => s
+            .split(',')
+            .map(|t| t.trim().parse().expect("bad DSARRAY_CHAOS_SEEDS entry"))
+            .take(2)
+            .collect(),
+        Err(_) => vec![101, 202],
+    };
+    for seed in seeds {
+        let round = std::panic::catch_unwind(|| churn_round(seed));
+        if round.is_err() {
+            panic!("serving churn seed {seed} failed; rerun with DSARRAY_CHAOS_SEEDS={seed}");
+        }
+    }
+}
+
+fn churn_round(seed: u64) {
+    let n_threads = 6 + (seed % 4) as usize;
+    let per_thread = 40;
+    let kill_after_ms = 20 + (seed % 7) * 10;
+
+    let xm = random_matrix(128, 8, seed ^ 0x5bd1);
+    let (artifact, reference) = fitted_kmeans_reference(&xm);
+
+    let mut workers = Workers::spawn(2);
+    let rt = workers.runtime_with(
+        ClusterOptions::connect(workers.addrs.clone())
+            .with_threads(2)
+            .with_replication(2),
+    );
+    let server = ModelServer::new(rt.clone(), ServeOptions::default().with_batch_window_ms(3));
+    server.register("km", artifact).unwrap();
+    let handle = server.serve(std::net::TcpListener::bind("127.0.0.1:0").unwrap()).unwrap();
+    let addr = handle.addr().to_string();
+
+    let threads: Vec<_> = (0..n_threads)
+        .map(|t| {
+            let addr = addr.clone();
+            let xm = xm.clone();
+            let reference = reference.clone();
+            std::thread::spawn(move || {
+                let mut c = ServingClient::connect(&addr).unwrap();
+                for k in 0..per_thread {
+                    let i = (t * per_thread + k) % xm.rows();
+                    let row = xm.slice(i, 0, 1, xm.cols()).unwrap();
+                    // Zero failed requests: `.unwrap()` on the call (no
+                    // transport/task error) and no shed at these caps.
+                    match c.predict("km", &row).unwrap() {
+                        PredictOutcome::Predicted(got) => {
+                            assert_eq!(got, reference.slice(i, 0, 1, 1).unwrap())
+                        }
+                        PredictOutcome::Shed(reason) => panic!("unexpected shed: {reason}"),
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // Mid-traffic SIGKILL: half the replicas die. Replication (plus the
+    // lineage walk for anything in flight) absorbs it.
+    std::thread::sleep(Duration::from_millis(kill_after_ms));
+    workers.children[0].kill().unwrap();
+    workers.children[0].wait().unwrap();
+
+    for t in threads {
+        t.join().unwrap();
+    }
+    let s = handle.stats();
+    assert_eq!(s.requests_served, (n_threads * per_thread) as u64);
+    assert_eq!(s.requests_shed, 0);
+    let met = handle.metrics();
+    assert!(met.workers_lost >= 1, "the kill must be observed, got {}", met.workers_lost);
+    handle.shutdown();
+}
+
+/// Companion contract without the safety net: replication off **and**
+/// recovery off, worker SIGKILLed mid-traffic. Requests may fail — but
+/// each gets an explicit error (`Err` on the call, or a served answer that
+/// is still bit-identical); nothing hangs and the server stays up.
+#[test]
+fn worker_sigkill_without_replication_degrades_cleanly() {
+    let xm = random_matrix(128, 8, 53);
+    let (artifact, reference) = fitted_kmeans_reference(&xm);
+
+    let mut workers = Workers::spawn(2);
+    let rt = workers.runtime_with(
+        ClusterOptions::connect(workers.addrs.clone())
+            .with_threads(2)
+            .with_recovery(false),
+    );
+    let server = ModelServer::new(rt, ServeOptions::default().with_batch_window_ms(3));
+    server.register("km", artifact).unwrap();
+    let handle = server.serve(std::net::TcpListener::bind("127.0.0.1:0").unwrap()).unwrap();
+    let addr = handle.addr().to_string();
+
+    let ok = Arc::new(AtomicU64::new(0));
+    let explicit_err = Arc::new(AtomicU64::new(0));
+    let threads: Vec<_> = (0..6)
+        .map(|t| {
+            let addr = addr.clone();
+            let xm = xm.clone();
+            let reference = reference.clone();
+            let (ok, explicit_err) = (ok.clone(), explicit_err.clone());
+            std::thread::spawn(move || {
+                let mut c = ServingClient::connect(&addr).unwrap();
+                for k in 0..40 {
+                    let i = (t * 40 + k) % xm.rows();
+                    let row = xm.slice(i, 0, 1, xm.cols()).unwrap();
+                    match c.predict("km", &row) {
+                        Ok(PredictOutcome::Predicted(got)) => {
+                            assert_eq!(got, reference.slice(i, 0, 1, 1).unwrap());
+                            ok.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Ok(PredictOutcome::Shed(_)) | Err(_) => {
+                            // Explicit degradation — the contract here.
+                            explicit_err.fetch_add(1, Ordering::SeqCst);
+                            // The transport may be gone; reconnect and go on.
+                            if let Ok(fresh) = ServingClient::connect(&addr) {
+                                c = fresh;
+                            }
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+
+    std::thread::sleep(Duration::from_millis(30));
+    workers.children[0].kill().unwrap();
+    workers.children[0].wait().unwrap();
+
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(
+        ok.load(Ordering::SeqCst) + explicit_err.load(Ordering::SeqCst),
+        6 * 40,
+        "every request must resolve explicitly — no hangs"
+    );
+    assert!(ok.load(Ordering::SeqCst) > 0, "requests before the kill must have succeeded");
+    handle.shutdown();
+}
+
+fn temp_artifact(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("dsarray-serving-{}-{tag}.dsma", std::process::id()))
+}
+
+/// Round-trip property for every estimator kind: save → load reproduces
+/// the artifact exactly (`PartialEq`) and the reloaded `predict_rows` is
+/// bit-identical to the fitted estimator's distributed batch `predict`.
+#[test]
+fn artifact_round_trip_bit_identical_for_every_estimator() {
+    let rt = Runtime::local(2);
+    let xm = random_matrix(64, 6, 71);
+    let x = creation::from_matrix(&rt, &xm, (16, 6)).unwrap();
+
+    let mut km = KMeans::new(KMeansConfig { k: 3, max_iter: 8, tol: 1e-9, seed: 4 });
+    km.fit(&x, None).unwrap();
+    let mut lr = LinearRegression::default();
+    let ym = DenseMatrix::from_fn(64, 1, |i, _| xm.get(i, 0) * 2.0 - xm.get(i, 3) + 0.25);
+    let y = creation::from_matrix(&rt, &ym, (16, 1)).unwrap();
+    lr.fit(&x, Some(&y)).unwrap();
+    let mut sc = StandardScaler::default();
+    sc.fit(&x).unwrap();
+    let mut pca = Pca::new(2);
+    pca.fit(&x, None).unwrap();
+
+    let cases: Vec<(&str, ModelArtifact, DenseMatrix)> = vec![
+        ("kmeans", ModelArtifact::from_kmeans(&km).unwrap(), km.predict(&x).unwrap().collect().unwrap()),
+        ("linreg", ModelArtifact::from_linreg(&lr).unwrap(), lr.predict(&x).unwrap().collect().unwrap()),
+        ("scaler", ModelArtifact::from_scaler(&sc).unwrap(), sc.transform(&x).unwrap().collect().unwrap()),
+        ("pca", ModelArtifact::from_pca(&pca).unwrap(), pca.predict(&x).unwrap().collect().unwrap()),
+    ];
+    for (tag, artifact, batch_reference) in cases {
+        let path = temp_artifact(tag);
+        let bytes = artifact.save_path(&path).unwrap();
+        assert!(bytes > 0);
+        let loaded = ModelArtifact::load_path(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded, artifact, "{tag}: decode(encode(a)) != a");
+        assert_eq!(
+            loaded.predict_rows(&xm).unwrap(),
+            batch_reference,
+            "{tag}: reloaded predict diverged from the batch predict"
+        );
+    }
+}
+
+/// The round trip holds when the fit ran over a spill-budget runtime:
+/// spilling through the block store must not perturb the fitted parameters
+/// or the reloaded predictions by a single bit.
+#[test]
+fn artifact_round_trip_survives_spill_budget_fit() {
+    let xm = random_matrix(64, 6, 83);
+    let fit = |rt: &Runtime| {
+        let x = creation::from_matrix(rt, &xm, (16, 6)).unwrap();
+        let mut km = KMeans::new(KMeansConfig { k: 3, max_iter: 8, tol: 1e-9, seed: 4 });
+        km.fit(&x, None).unwrap();
+        (ModelArtifact::from_kmeans(&km).unwrap(), km.predict(&x).unwrap().collect().unwrap())
+    };
+    let (plain, reference) = fit(&Runtime::local(2));
+    // Each 16x6 f32 block is 384 B; a 1 KiB budget forces spills mid-fit.
+    let budget_rt = Runtime::local_with_budget(2, 1024).unwrap();
+    let (budgeted, budget_reference) = fit(&budget_rt);
+    assert_eq!(budgeted, plain, "spilling must not change fitted parameters");
+    assert_eq!(budget_reference, reference);
+
+    let path = temp_artifact("spill");
+    budgeted.save_path(&path).unwrap();
+    let loaded = ModelArtifact::load_path(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, budgeted);
+    assert_eq!(loaded.predict_rows(&xm).unwrap(), reference);
+}
+
+/// Worker-initiated graceful shutdown (ROADMAP item 1 remainder): a real
+/// `dsarray worker --join` process receives SIGTERM mid-traffic, asks the
+/// coordinator to drain it (DRAINING/DRAINED on stdout), exits **zero**,
+/// and the in-flight fit completes bit-identically on the survivor.
+#[test]
+#[cfg(unix)]
+fn sigterm_drains_joined_worker_mid_fit() {
+    use std::io::BufRead;
+
+    let m = random_matrix(64, 8, 91);
+    let fit = |rt: &Runtime| {
+        let x = creation::from_matrix(rt, &m, (8, 8)).unwrap();
+        let mut km = KMeans::new(KMeansConfig { k: 4, max_iter: 12, tol: 1e-9, seed: 6 });
+        km.fit(&x, None).unwrap();
+        (km.centers.unwrap(), km.inertia)
+    };
+    let (centers_local, inertia_local) = fit(&Runtime::local(2));
+
+    let mut workers = Workers::spawn(1);
+    let rt = workers.runtime();
+    let control = rt.cluster_control_addr().expect("cluster runtimes expose a control address");
+
+    let program = Path::new(env!("CARGO_BIN_EXE_dsarray"));
+    let mut child = std::process::Command::new(program)
+        .args(["worker", "--listen", "127.0.0.1:0", "--join", &control])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn joining dsarray worker");
+    let mut lines = std::io::BufReader::new(child.stdout.take().unwrap()).lines();
+    let listening = lines.next().expect("LISTENING line").unwrap();
+    assert!(listening.starts_with("LISTENING "), "{listening}");
+    let joined = lines.next().expect("JOINED line").unwrap();
+    assert_eq!(joined, format!("JOINED {control}"));
+
+    // Put real blocks on both members so the drain has bytes to migrate.
+    let x = creation::from_matrix(&rt, &m, (8, 8)).unwrap();
+    rt.barrier().unwrap();
+    drop(x);
+
+    // Fit in the background while the joined worker is told to leave.
+    let fit_thread = {
+        let rt = rt.clone();
+        std::thread::spawn(move || fit(&rt))
+    };
+    std::thread::sleep(Duration::from_millis(20));
+    let status = std::process::Command::new("kill")
+        .args(["-TERM", &child.id().to_string()])
+        .status()
+        .expect("send SIGTERM");
+    assert!(status.success());
+
+    // The worker must drain and exit cleanly (code 0, not the signal).
+    let mut exit = None;
+    for _ in 0..300 {
+        if let Some(st) = child.try_wait().unwrap() {
+            exit = Some(st);
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let (centers_cluster, inertia_cluster) = fit_thread.join().unwrap();
+    let exit = match exit {
+        Some(st) => st,
+        None => {
+            child.kill().ok();
+            child.wait().ok();
+            panic!("SIGTERMed worker did not exit within 30s");
+        }
+    };
+    assert!(exit.success(), "drained worker must exit 0, got {exit:?}");
+    let out: Vec<String> = lines.map(|l| l.unwrap()).collect();
+    assert!(out.iter().any(|l| l.starts_with("DRAINING ")), "stdout: {out:?}");
+    assert!(out.iter().any(|l| l.starts_with("DRAINED ")), "stdout: {out:?}");
+
+    assert_eq!(centers_cluster, centers_local, "fit across the drain must be bit-identical");
+    assert_eq!(inertia_cluster, inertia_local);
+    let met = rt.metrics();
+    assert!(met.workers_drained >= 1, "drain must be counted, got {}", met.workers_drained);
+    // Keep the static worker alive until here; Drop reaps it.
+    drop(workers);
+}

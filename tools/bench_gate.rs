@@ -5,10 +5,12 @@
 //! baseline at the repository root and **fails (exit 1) when the median
 //! regression of any watched row group exceeds the threshold** (default
 //! 25%, groups `matmul`, `fused`, `load`, `kernel`, `split`, `recovery`,
-//! `elastic` — the rows the perf PRs optimize; `kernel` tracks the
-//! scalar-vs-SIMD micro-kernel rows, `split` the whole-block-vs-sub-task
-//! rows, `recovery` the kill-mid-gemm fault-recovery wall time, and
-//! `elastic` the drain-migration and straggler-speculation wall times).
+//! `elastic`, `serving` — the rows the perf PRs optimize; `kernel` tracks
+//! the scalar-vs-SIMD micro-kernel rows, `split` the
+//! whole-block-vs-sub-task rows, `recovery` the kill-mid-gemm
+//! fault-recovery wall time, `elastic` the drain-migration and
+//! straggler-speculation wall times, and `serving` the p50 single-row
+//! predict latency through the micro-batcher).
 //!
 //! Median-per-group, not worst-row, so one noisy timing on a shared CI
 //! runner cannot fail the gate by itself; the threshold absorbs the rest of
@@ -21,7 +23,7 @@
 //! Usage:
 //!   bench_gate --baseline ../BENCH_hotpath.json --current BENCH_hotpath.json \
 //!              [--max-regress 0.25] \
-//!              [--groups matmul,fused,load,kernel,split,recovery,elastic]
+//!              [--groups matmul,fused,load,kernel,split,recovery,elastic,serving]
 
 use std::collections::BTreeMap;
 
@@ -50,7 +52,7 @@ fn run() -> Result<bool> {
         .ok_or_else(|| anyhow!("--current <path> is required"))?;
     let max_regress = args.get_f64("max-regress", 0.25);
     let groups: Vec<String> = args
-        .get_str("groups", "matmul,fused,load,kernel,split,recovery,elastic")
+        .get_str("groups", "matmul,fused,load,kernel,split,recovery,elastic,serving")
         .split(',')
         .map(|g| g.trim().to_string())
         .filter(|g| !g.is_empty())
