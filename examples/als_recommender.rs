@@ -15,7 +15,7 @@ use rustdslib::estimators::als::{Als, AlsConfig};
 use rustdslib::tasking::Runtime;
 
 fn main() -> Result<()> {
-    let rt = Runtime::local(2);
+    let rt = Runtime::builder().workers(2).build()?;
     // Netflix shape / 100: same density profile (power-law users).
     let (rows, cols, nnz) = (512, 4096, 25_000);
     let ratings = netflix_like_csr(rows, cols, nnz, 9)?;

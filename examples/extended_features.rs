@@ -13,7 +13,7 @@ use rustdslib::tasking::Runtime;
 use rustdslib::util::rng::Xoshiro256;
 
 fn main() -> Result<()> {
-    let rt = Runtime::local(2);
+    let rt = Runtime::builder().workers(2).build()?;
 
     // ---- TSQR: distributed thin QR of a tall-skinny ds-array ----
     let mut rng = Xoshiro256::seed_from_u64(1);

@@ -11,7 +11,7 @@ use rustdslib::estimators::Estimator;
 use rustdslib::tasking::Runtime;
 
 fn main() -> Result<()> {
-    let rt = Runtime::local(2);
+    let rt = Runtime::builder().workers(2).build()?;
     let (n, f, k) = (4096, 64, 6);
     let (data, truth) = blobs(n, f, k, 0.8, 3);
     let x = creation::from_matrix(&rt, &data, (64, 64))?;
@@ -51,11 +51,11 @@ fn main() -> Result<()> {
 
     let m = rt.metrics();
     println!(
-        "tasks: {} total — {} kmeans.partial, {} kmeans.reduce, {} kmeans.update",
+        "tasks: {} total — {} kmeans.partial, {} kmeans.reduce, {} kmeans.reduce_update (plan-composed)",
         m.total_tasks(),
         m.tasks_for("kmeans.partial"),
         m.tasks_for("kmeans.reduce"),
-        m.tasks_for("kmeans.update"),
+        m.tasks_for("kmeans.reduce_update"),
     );
     Ok(())
 }

@@ -40,7 +40,7 @@ fn main() -> Result<()> {
     };
 
     // Unconstrained baseline.
-    let rt_mem = Runtime::local(workers);
+    let rt_mem = Runtime::builder().workers(workers).build()?;
     let x_mem = dsio::load_csv(&rt_mem, &path, block_shape, ',')?;
     let footprint = (x_mem.rows() * x_mem.cols() * 4) as u64;
     let mut km_mem = KMeans::new(KMeansConfig::default());
@@ -50,7 +50,10 @@ fn main() -> Result<()> {
     // back in as the fit touches them.
     let budget = args.get_u64("budget-kb", 0) * 1024;
     let budget = if budget > 0 { budget } else { (footprint / 2).max(1) };
-    let rt = Runtime::local_with_budget(workers, budget)?;
+    let rt = Runtime::builder()
+        .workers(workers)
+        .memory_budget_bytes(budget)
+        .build()?;
     let x = dsio::load_csv(&rt, &path, block_shape, ',')?;
     println!(
         "loaded {}x{} ({} blocks) from {} — footprint {} B, budget {} B",

@@ -25,7 +25,7 @@ use rustdslib::tasking::Runtime;
 
 fn main() -> Result<()> {
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
-    let rt = Runtime::local(workers);
+    let rt = Runtime::builder().workers(workers).build()?;
     println!("=== pipeline_e2e: full-stack driver ({workers} workers) ===");
     let pjrt = rustdslib::runtime::global().is_some();
     println!(

@@ -13,7 +13,7 @@ use rustdslib::tasking::Runtime;
 fn main() -> Result<()> {
     // A local runtime with one worker thread per core.
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
-    let rt = Runtime::local(workers);
+    let rt = Runtime::builder().workers(workers).build()?;
     println!("runtime: {workers} worker threads\n");
 
     // -- Creation: one task per block, data born distributed ------------

@@ -9,9 +9,11 @@
 //! (whole fat-block task vs sub-range work items), raw PJRT artifact
 //! dispatch, native block math, runtime overheads (submit, graph,
 //! channels), the elasticity paths (drain-time block migration, straggler
-//! speculation on a stalling worker), and the serving tier (single-row
+//! speculation on a stalling worker), the serving tier (single-row
 //! predict p50/p99 latency and throughput through the micro-batcher,
-//! coalesced vs uncoalesced).
+//! coalesced vs uncoalesced), and the plan layer (gemm + elementwise
+//! epilogue and the KMeans/ALS fits at optimizer off vs full — grafted
+//! epilogues and composed reduce tails, task counts in the notes).
 //!
 //! Usage: cargo bench --bench hotpath [-- --reps 5 --json BENCH_hotpath.json]
 
@@ -471,10 +473,11 @@ fn main() -> Result<()> {
     };
     let (mut wire_mib, mut loc_hits, mut loc_misses) = (0.0f64, 0u64, 0u64);
     let t_mm_cluster = time(reps, || {
-        let rt2 = Runtime::cluster(
-            rustdslib::tasking::ClusterOptions::connect(vec![spawn_worker(), spawn_worker()])
-                .with_threads(workers),
-        )?;
+        let rt2 = Runtime::cluster(rustdslib::tasking::ClusterOptions {
+            addrs: vec![spawn_worker(), spawn_worker()],
+            threads: workers.max(1),
+            ..Default::default()
+        })?;
         let a = creation::from_matrix(&rt2, &mm, (64, 64))?;
         let b = creation::from_matrix(&rt2, &mm, (64, 64))?;
         let c = a.matmul(&b)?;
@@ -509,10 +512,11 @@ fn main() -> Result<()> {
     let t_mm_recover = time(reps, || {
         let w0 = spawn_worker();
         let w1 = spawn_worker();
-        let rt2 = Runtime::cluster(
-            rustdslib::tasking::ClusterOptions::connect(vec![w0.clone(), w1])
-                .with_threads(workers),
-        )?;
+        let rt2 = Runtime::cluster(rustdslib::tasking::ClusterOptions {
+            addrs: vec![w0.clone(), w1],
+            threads: workers.max(1),
+            ..Default::default()
+        })?;
         let a = creation::from_matrix(&rt2, &mm, (64, 64))?;
         let b = creation::from_matrix(&rt2, &mm, (64, 64))?;
         rt2.barrier()?;
@@ -542,10 +546,11 @@ fn main() -> Result<()> {
     // Every run needs a fresh fleet — a drained member stays drained.
     let (mut drain_mib, mut drain_replays) = (0.0f64, 0u64);
     let t_drain = time(reps, || {
-        let rt2 = Runtime::cluster(
-            rustdslib::tasking::ClusterOptions::connect(vec![spawn_worker(), spawn_worker()])
-                .with_threads(workers),
-        )?;
+        let rt2 = Runtime::cluster(rustdslib::tasking::ClusterOptions {
+            addrs: vec![spawn_worker(), spawn_worker()],
+            threads: workers.max(1),
+            ..Default::default()
+        })?;
         let a = creation::from_matrix(&rt2, &mm, (64, 64))?;
         rt2.barrier()?;
         let before = rt2.metrics();
@@ -585,14 +590,12 @@ fn main() -> Result<()> {
     let straggler_gemm = |factor: f64| -> Result<(f64, u64)> {
         let mut speculated = 0u64;
         let t = time(reps_e, || {
-            let rt2 = Runtime::cluster(
-                rustdslib::tasking::ClusterOptions::connect(vec![
-                    spawn_worker(),
-                    spawn_slow_worker(),
-                ])
-                .with_threads(workers)
-                .with_straggler_factor(factor),
-            )?;
+            let rt2 = Runtime::cluster(rustdslib::tasking::ClusterOptions {
+                addrs: vec![spawn_worker(), spawn_slow_worker()],
+                threads: workers.max(1),
+                straggler_factor: factor.max(0.0),
+                ..Default::default()
+            })?;
             let a = creation::from_matrix(&rt2, &sm, (64, 64))?;
             let b = creation::from_matrix(&rt2, &sm, (64, 64))?;
             let c = a.matmul(&b)?;
@@ -639,10 +642,11 @@ fn main() -> Result<()> {
     let serve_artifact = rustdslib::serving::ModelArtifact::from_kmeans(&serve_km)?;
     // Returns (sorted request latencies, coalesced batches, traffic wall).
     let run_serving = |window_ms: u64, clients: usize, per_client: usize| -> Result<(Vec<f64>, u64, f64)> {
-        let rt2 = Runtime::cluster(
-            rustdslib::tasking::ClusterOptions::connect(vec![spawn_worker(), spawn_worker()])
-                .with_threads(workers),
-        )?;
+        let rt2 = Runtime::cluster(rustdslib::tasking::ClusterOptions {
+            addrs: vec![spawn_worker(), spawn_worker()],
+            threads: workers.max(1),
+            ..Default::default()
+        })?;
         let server = rustdslib::serving::ModelServer::new(
             rt2,
             rustdslib::serving::ServeOptions::default().with_batch_window_ms(window_ms),
@@ -701,6 +705,121 @@ fn main() -> Result<()> {
             lat_co.len() as f64 / wall_co.max(1e-12)
         ),
     ));
+
+    // ---- Plan layer (gated as the `planner` group): the same programs at
+    // optimizer off vs full. Results are bit-identical by contract; the
+    // interesting deltas are the task counts in the notes — the grafted
+    // epilogue removes the separate elementwise pass, and the composed
+    // estimator reduce tails remove one task per reduce.
+    {
+        use rustdslib::estimators::als::{Als, AlsConfig};
+        use rustdslib::estimators::kmeans::{KMeans, KMeansConfig};
+        use rustdslib::plan::Level;
+
+        let pm = DenseMatrix::from_fn(512, 512, |_, _| rng.next_normal());
+        let plan_gflops = 2.0 * 512f64.powi(3) / 1e9;
+        let plan_gemm = |level: Level| -> Result<(f64, u64, u64)> {
+            let (mut tasks, mut fused) = (0u64, 0u64);
+            let t = time(reps, || {
+                let rt2 = Runtime::builder().workers(workers).optimizer(level).build()?;
+                let a = creation::from_matrix(&rt2, &pm, (128, 128))?;
+                let b = creation::from_matrix(&rt2, &pm, (128, 128))?;
+                let c = a.matmul(&b)?.mul_scalar(0.5)?.add_scalar(1.0)?.force()?;
+                c.runtime().barrier()?;
+                let met = rt2.metrics();
+                tasks = met.total_tasks();
+                fused = met.tasks_for("dsarray.matmul.fused");
+                Ok(())
+            })?;
+            Ok((t, tasks, fused))
+        };
+        let (t_po, tasks_po, _) = plan_gemm(Level::Off)?;
+        rows.push((
+            "planner gemm+epilogue 512³ off (ew pass)".into(),
+            t_po,
+            format!("{:.2} GFLOP/s, {tasks_po} tasks/run", plan_gflops / t_po),
+        ));
+        let (t_pf, tasks_pf, fused_pf) = plan_gemm(Level::Full)?;
+        rows.push((
+            "planner gemm+epilogue 512³ full (grafted)".into(),
+            t_pf,
+            format!(
+                "{:.2} GFLOP/s ({:.2}x vs off), {tasks_pf} tasks/run, {fused_pf} grafted",
+                plan_gflops / t_pf,
+                t_po / t_pf.max(1e-12)
+            ),
+        ));
+
+        let km_m = DenseMatrix::from_fn(512, 16, |i, _| (i % 4) as f32 * 4.0 + rng.next_normal());
+        let plan_kmeans = |level: Level| -> Result<(f64, u64)> {
+            let mut tasks = 0u64;
+            let t = time(reps, || {
+                let rt2 = Runtime::builder().workers(workers).optimizer(level).build()?;
+                let x = creation::from_matrix(&rt2, &km_m, (64, 16))?;
+                let mut km = KMeans::new(KMeansConfig {
+                    k: 4,
+                    max_iter: 8,
+                    tol: 1e-9,
+                    seed: 7,
+                });
+                km.fit_dsarray(&x)?;
+                tasks = rt2.metrics().total_tasks();
+                Ok(())
+            })?;
+            Ok((t, tasks))
+        };
+        let (t_ko, tasks_ko) = plan_kmeans(Level::Off)?;
+        rows.push((
+            "planner kmeans fit 512x16 off".into(),
+            t_ko,
+            format!("{tasks_ko} tasks/run"),
+        ));
+        let (t_kf, tasks_kf) = plan_kmeans(Level::Full)?;
+        rows.push((
+            "planner kmeans fit 512x16 full (composed)".into(),
+            t_kf,
+            format!(
+                "{tasks_kf} tasks/run ({} fewer, {:.2}x vs off)",
+                tasks_ko.saturating_sub(tasks_kf),
+                t_ko / t_kf.max(1e-12)
+            ),
+        ));
+
+        let als_m = DenseMatrix::from_fn(96, 64, |_, _| rng.next_normal());
+        let plan_als = |level: Level| -> Result<(f64, u64)> {
+            let mut tasks = 0u64;
+            let t = time(reps, || {
+                let rt2 = Runtime::builder().workers(workers).optimizer(level).build()?;
+                let r = creation::from_matrix(&rt2, &als_m, (24, 16))?;
+                let mut als = Als::new(AlsConfig {
+                    d: 8,
+                    lambda: 0.1,
+                    max_iter: 3,
+                    seed: 9,
+                });
+                als.fit_dsarray(&r)?;
+                tasks = rt2.metrics().total_tasks();
+                Ok(())
+            })?;
+            Ok((t, tasks))
+        };
+        let (t_ao, tasks_ao) = plan_als(Level::Off)?;
+        rows.push((
+            "planner als fit 96x64 off".into(),
+            t_ao,
+            format!("{tasks_ao} tasks/run"),
+        ));
+        let (t_af, tasks_af) = plan_als(Level::Full)?;
+        rows.push((
+            "planner als fit 96x64 full (composed)".into(),
+            t_af,
+            format!(
+                "{tasks_af} tasks/run ({} fewer, {:.2}x vs off)",
+                tasks_ao.saturating_sub(tasks_af),
+                t_ao / t_af.max(1e-12)
+            ),
+        ));
+    }
 
     // ---- Task-runtime overhead: empty tasks, one submit per task ----
     let t_serial = time(reps, || {

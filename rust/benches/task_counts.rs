@@ -3,11 +3,22 @@
 //!
 //!   transpose:  Dataset N²+N      vs ds-array N
 //!   shuffle:    Dataset N·min(N,S)+N  vs ds-array 2N  (N²+N w/o collections)
+//!
+//! Plus the plan-layer rows: the same KMeans/ALS fits at optimizer `off`
+//! vs `full` must produce bit-identical models from strictly fewer
+//! submitted tasks (composed reduce tails).
 
 use anyhow::Result;
 use rustdslib::bench::experiments;
 use rustdslib::config::Config;
+use rustdslib::dsarray::creation;
+use rustdslib::estimators::als::{Als, AlsConfig};
+use rustdslib::estimators::kmeans::{KMeans, KMeansConfig};
+use rustdslib::plan::Level;
+use rustdslib::storage::DenseMatrix;
+use rustdslib::tasking::Runtime;
 use rustdslib::util::cli::Args;
+use rustdslib::util::rng::Xoshiro256;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -31,5 +42,45 @@ fn main() -> Result<()> {
         assert_eq!(a_shn, (n * n + n) as u64);
     }
     println!("\nall counts match the paper's formulas (N²+N vs N; N·min(N,S)+N vs 2N)");
+
+    // ---- Plan-layer task counts: optimizer off vs full ----
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let km_m = DenseMatrix::from_fn(96, 8, |_, _| rng.next_normal());
+    let als_m = DenseMatrix::from_fn(48, 32, |_, _| rng.next_normal());
+    let fit = |level: Level| -> Result<(DenseMatrix, DenseMatrix, u64)> {
+        let rt = Runtime::builder().workers(2).optimizer(level).build()?;
+        let x = creation::from_matrix(&rt, &km_m, (16, 8))?;
+        let mut km = KMeans::new(KMeansConfig {
+            k: 3,
+            max_iter: 6,
+            tol: 1e-9,
+            seed: 5,
+        });
+        km.fit_dsarray(&x)?;
+        let r = creation::from_matrix(&rt, &als_m, (12, 8))?;
+        let mut als = Als::new(AlsConfig {
+            d: 4,
+            lambda: 0.1,
+            max_iter: 3,
+            seed: 9,
+        });
+        als.fit_dsarray(&r)?;
+        Ok((km.centers.unwrap(), als.u.unwrap(), rt.metrics().total_tasks()))
+    };
+    let (c_off, u_off, t_off) = fit(Level::Off)?;
+    let (c_full, u_full, t_full) = fit(Level::Full)?;
+    println!("\n{:>24} | {:>9} {:>9} {:>7}", "optimizer tasks", "off", "full", "saved");
+    println!(
+        "{:>24} | {t_off:>9} {t_full:>9} {:>7}",
+        "kmeans+als fits",
+        t_off.saturating_sub(t_full)
+    );
+    assert_eq!(c_full, c_off, "KMeans centroids must be bit-identical across levels");
+    assert_eq!(u_full, u_off, "ALS factors must be bit-identical across levels");
+    assert!(
+        t_full < t_off,
+        "optimizer full must submit strictly fewer tasks ({t_full} vs {t_off})"
+    );
+    println!("optimizer full is bit-identical with {} fewer tasks", t_off - t_full);
     Ok(())
 }

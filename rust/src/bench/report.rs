@@ -114,7 +114,10 @@ impl Series {
 /// counters (`blocks_spilled`, `blocks_faulted`, `spill_bytes`), the
 /// cluster-backend counters (`bytes_on_wire`, `remote_transfers`,
 /// `locality_hits`), the kernel-layer counters (`simd_kernel_hits`,
-/// `subtasks_spawned`), the fault-recovery counters (`workers_lost`,
+/// `subtasks_spawned`), the plan-layer counters (`tasks_submitted` — an
+/// alias of `total_tasks` the parity tests compare across optimizer
+/// levels — plus `tasks_deduped` and `blocks_prereleased`), the
+/// fault-recovery counters (`workers_lost`,
 /// `blocks_recovered`, `tasks_replayed`, `recovery_ms`), the
 /// elasticity counters (`workers_joined`, `workers_drained`,
 /// `tasks_speculated`, plus the per-slot `tasks_by_worker` array), and the
@@ -140,6 +143,9 @@ pub fn metrics_json(m: &Metrics) -> String {
     let _ = write!(out, ",\"remote_transfers\":{}", m.remote_transfers);
     let _ = write!(out, ",\"locality_hits\":{}", m.locality_hits);
     let _ = write!(out, ",\"simd_kernel_hits\":{}", m.simd_kernel_hits);
+    let _ = write!(out, ",\"tasks_submitted\":{}", m.total_tasks());
+    let _ = write!(out, ",\"tasks_deduped\":{}", m.tasks_deduped);
+    let _ = write!(out, ",\"blocks_prereleased\":{}", m.blocks_prereleased);
     let _ = write!(out, ",\"subtasks_spawned\":{}", m.subtasks_spawned);
     let _ = write!(out, ",\"workers_lost\":{}", m.workers_lost);
     let _ = write!(out, ",\"blocks_recovered\":{}", m.blocks_recovered);

@@ -8,7 +8,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::tasking::{ClusterOptions, SimConfig};
+use crate::tasking::SimConfig;
 use crate::util::cli::Args;
 use crate::util::toml;
 
@@ -87,6 +87,11 @@ pub struct Config {
     /// Serving admission-control cap on queued rows (`--max-pending-rows`;
     /// past it requests are shed with an explicit `Overloaded` response).
     pub serve_max_pending_rows: usize,
+    /// Plan-layer optimization level (`--optimizer off|cse|full`). Defaults
+    /// to [`crate::plan::Level::Off`] so config-driven runs reproduce the
+    /// pre-planner task streams unless opted in; the fluent
+    /// [`crate::tasking::Runtime::builder`] defaults to `Full`.
+    pub optimizer: crate::plan::Level,
 }
 
 impl Default for Config {
@@ -111,6 +116,7 @@ impl Default for Config {
             serve_batch_window_ms: 2,
             serve_max_batch_rows: 256,
             serve_max_pending_rows: 4096,
+            optimizer: crate::plan::Level::Off,
         }
     }
 }
@@ -167,6 +173,9 @@ impl Config {
         }
         if let Some(v) = map.get("serve_max_pending_rows").and_then(|v| v.as_i64()) {
             cfg.serve_max_pending_rows = v.max(1) as usize;
+        }
+        if let Some(v) = map.get("optimizer").and_then(|v| v.as_str()) {
+            cfg.optimizer = crate::plan::Level::parse(v)?;
         }
         if let Some(arr) = map.get("sim_cores").and_then(|v| v.as_array()) {
             cfg.sim_cores = arr
@@ -263,6 +272,9 @@ impl Config {
                 self.serve_max_pending_rows = n.max(1);
             }
         }
+        if let Some(v) = args.get("optimizer") {
+            self.optimizer = crate::plan::Level::parse(v)?;
+        }
         if args.get("cores").is_some() {
             self.sim_cores = args.get_usize_list("cores", &self.sim_cores);
         }
@@ -273,49 +285,25 @@ impl Config {
     }
 
     /// Build the configured local runtime: worker count plus the
-    /// out-of-core budget / spill directory when set. The store's spill
-    /// directory lives for the runtime's lifetime and is removed at
-    /// teardown.
+    /// out-of-core budget / spill directory when set.
+    #[deprecated(
+        since = "0.11.0",
+        note = "use `Runtime::builder().from_config(&cfg).backend(Backend::Local).build()`"
+    )]
     pub fn local_runtime(&self) -> Result<crate::tasking::Runtime> {
-        let mut opts = crate::tasking::LocalOptions::new(self.local_workers);
-        if let Some(b) = self.memory_budget_bytes {
-            opts = opts.with_memory_budget(b);
-            if let Some(dir) = &self.spill_dir {
-                opts = opts.with_spill_dir(std::path::PathBuf::from(dir));
-            }
-        }
-        crate::tasking::Runtime::local_with_options(opts)
+        crate::tasking::Runtime::builder()
+            .from_config(self)
+            .backend(Backend::Local)
+            .build()
     }
 
-    /// Build the configured runtime for the selected [`Backend`]: local
-    /// thread pool, discrete-event simulator, or the multi-process cluster
-    /// coordinator (connecting to `cluster_addrs` when given, otherwise
-    /// spawning `cluster_workers` loopback worker processes that are shut
-    /// down at runtime teardown).
+    /// Build the configured runtime for the selected [`Backend`].
+    #[deprecated(
+        since = "0.11.0",
+        note = "use `Runtime::builder().from_config(&cfg).build()`"
+    )]
     pub fn runtime(&self) -> Result<crate::tasking::Runtime> {
-        match self.backend {
-            Backend::Local => self.local_runtime(),
-            Backend::Sim => Ok(crate::tasking::Runtime::sim(self.sim.clone())),
-            Backend::Cluster => {
-                let mut opts = if self.cluster_addrs.is_empty() {
-                    ClusterOptions::spawn(self.cluster_workers)
-                } else {
-                    ClusterOptions::connect(self.cluster_addrs.clone())
-                };
-                opts = opts
-                    .with_threads(self.local_workers)
-                    .with_recovery(self.recovery)
-                    .with_replication(self.replicate_blocks)
-                    .with_heartbeat_ms(self.heartbeat_ms)
-                    .with_straggler_factor(self.straggler_factor);
-                if let Some(b) = self.memory_budget_bytes {
-                    // On the cluster backend the budget is per worker: each
-                    // spawned worker spills to its own BlockStore past it.
-                    opts = opts.with_worker_budget(b);
-                }
-                crate::tasking::Runtime::cluster(opts)
-            }
-        }
+        crate::tasking::Runtime::builder().from_config(self).build()
     }
 
     /// Serving-tier options from the config: micro-batch window, batch row
@@ -404,7 +392,11 @@ mod tests {
         assert_eq!(cfg2.sim_cores, vec![4]);
         assert_eq!(cfg2.sim.sched_task_s, 0.002);
         assert_eq!(cfg2.memory_budget_bytes, Some(2 << 20));
-        let rt = cfg2.local_runtime().unwrap();
+        let rt = crate::tasking::Runtime::builder()
+            .from_config(&cfg2)
+            .backend(Backend::Local)
+            .build()
+            .unwrap();
         assert!(!rt.is_sim());
 
         let sim16 = cfg2.sim_at(16);
@@ -506,6 +498,30 @@ mod tests {
         // The sim backend builds a record-only runtime.
         let mut c = Config::default();
         c.backend = Backend::Sim;
-        assert!(c.runtime().unwrap().is_sim());
+        let rt = crate::tasking::Runtime::builder().from_config(&c).build().unwrap();
+        assert!(rt.is_sim());
+    }
+
+    #[test]
+    fn optimizer_level_parses_from_file_and_cli() {
+        // Config-driven runs default to Off (pre-planner task streams).
+        let c = Config::default();
+        assert_eq!(c.optimizer, crate::plan::Level::Off);
+
+        let mut p = std::env::temp_dir();
+        p.push(format!("rustdslib_opt_{}.toml", std::process::id()));
+        std::fs::write(&p, "optimizer = \"cse\"\n").unwrap();
+        let mut cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.optimizer, crate::plan::Level::Cse);
+        std::fs::remove_file(&p).ok();
+
+        let args = Args::parse(["--optimizer", "full"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.optimizer, crate::plan::Level::Full);
+        let rt = crate::tasking::Runtime::builder().from_config(&cfg).build().unwrap();
+        assert_eq!(rt.planner().level(), crate::plan::Level::Full);
+
+        let bad = Args::parse(["--optimizer", "mega"].iter().map(|s| s.to_string()));
+        assert!(Config::default().apply_args(&bad).is_err());
     }
 }

@@ -257,9 +257,10 @@ impl DsArray {
     }
 
     /// Whether consuming this array requires materialization first — a
-    /// lazy view or a deferred elementwise expression.
+    /// lazy view, a deferred elementwise expression, or a deferred gemm
+    /// plan (`crate::plan`, optimizer `Level::Full`).
     pub fn is_lazy(&self) -> bool {
-        self.view.is_some() || self.expr.is_some()
+        self.view.is_some() || self.expr.is_some() || self.gemm.is_some()
     }
 
     /// Snapshot this array as expression operands rooted at slot `slot0`,
@@ -270,6 +271,9 @@ impl DsArray {
     /// retains run under the expression's state lock, serializing against a
     /// concurrent `force`'s early release.
     fn expr_parts(&self, slot0: usize, kind: OperandKind) -> (Vec<Operand>, Arc<ExprNode>, usize) {
+        // Deferred gemm arrays have no block grid to snapshot; every lazy
+        // entry point forces (or grafts) them before reaching here.
+        debug_assert!(self.gemm.is_none(), "expr_parts on a deferred gemm array");
         if let Some(expr) = &self.expr {
             let st = expr.state.lock().unwrap();
             if let Some(f) = &st.forced {
@@ -330,6 +334,7 @@ impl DsArray {
                 n_ops,
                 state: Arc::default(),
             }),
+            gemm: None,
         }
     }
 
@@ -344,6 +349,29 @@ impl DsArray {
         if self.view.is_some() {
             return self.force()?.map_lazy(name, op);
         }
+        if let Some(g) = &self.gemm {
+            // Epilogue grafting (the plan layer): fold the elementwise op
+            // into the pending gemm's output tiles while they are cache-hot
+            // instead of spawning a separate pass. The check and the operand
+            // retains run under the spec's state lock, serializing against a
+            // concurrent force's early release (mirrors `expr_parts`).
+            let st = g.state.lock().unwrap();
+            if st.forced.is_none() && self.rt.planner().fuse_enabled() {
+                let mut spec = g.clone();
+                spec.epilogue.push(op);
+                spec.state = Arc::default();
+                self.rt.retain(&spec.a);
+                self.rt.retain(&spec.b);
+                drop(st);
+                return Ok(DsArray::from_gemm(self.rt.clone(), spec));
+            }
+            let forced = st.forced.clone();
+            drop(st);
+            return match forced {
+                Some(f) => f.map_lazy(name, op),
+                None => self.force()?.map_lazy(name, op),
+            };
+        }
         let (ops, root, n) = self.expr_parts(0, OperandKind::Full);
         let root = Arc::new(ExprNode::Map { op, child: root });
         Ok(self.from_lazy(ops, root, n + 1))
@@ -352,6 +380,14 @@ impl DsArray {
     /// Defer a binary elementwise op over two same-geometry dense arrays;
     /// both sides' pending expressions fold into one DAG.
     pub(crate) fn zip_lazy(&self, other: &DsArray, op: BinaryKind) -> Result<DsArray> {
+        // Deferred gemm operands materialize first: a binary op cannot be
+        // grafted as a gemm epilogue (it would read a second grid mid-tile).
+        if self.gemm.is_some() {
+            return self.force()?.zip_lazy(other, op);
+        }
+        if other.gemm.is_some() {
+            return self.zip_lazy(&other.force()?, op);
+        }
         let (mut ops, lroot, ln) = self.expr_parts(0, OperandKind::Full);
         let (rops, rroot, rn) = other.expr_parts(ops.len(), OperandKind::Full);
         ops.extend(rops);
@@ -366,6 +402,12 @@ impl DsArray {
     /// Defer a row-broadcast op (`self ∘ row` per column); the row array's
     /// own pending expression folds in too.
     pub(crate) fn bcast_lazy(&self, row: &DsArray, op: BinaryKind) -> Result<DsArray> {
+        if self.gemm.is_some() {
+            return self.force()?.bcast_lazy(row, op);
+        }
+        if row.gemm.is_some() {
+            return self.bcast_lazy(&row.force()?, op);
+        }
         let (mut ops, lroot, ln) = self.expr_parts(0, OperandKind::Full);
         let (rops, rroot, rn) = row.expr_parts(ops.len(), OperandKind::Row);
         ops.extend(rops);

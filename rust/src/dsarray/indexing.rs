@@ -65,10 +65,11 @@ impl DsArray {
                 self.shape
             );
         }
-        // Deferred elementwise expressions materialize before slicing (the
-        // backing blocks hold un-evaluated inputs); memoized, so slicing a
-        // chain several ways executes it once.
-        if self.expr.is_some() {
+        // Deferred elementwise expressions and planned gemms materialize
+        // before slicing (the backing blocks hold un-evaluated inputs, or
+        // don't exist yet); memoized, so slicing a chain several ways
+        // executes it once.
+        if self.expr.is_some() || self.gemm.is_some() {
             return self.force()?.slice(r0, r1, c0, c1);
         }
         let (nr, nc) = (r1 - r0, c1 - c0);
@@ -95,7 +96,7 @@ impl DsArray {
         if i >= self.shape.0 || j >= self.shape.1 {
             bail!("index ({i},{j}) out of bounds for shape {:?}", self.shape);
         }
-        if self.expr.is_some() {
+        if self.expr.is_some() || self.gemm.is_some() {
             return self.force()?.get(i, j);
         }
         let (sr, sc) = match &self.view {
@@ -136,7 +137,7 @@ impl DsArray {
                 bail!("row index {i} out of bounds for {} rows", self.shape.0);
             }
         }
-        if self.expr.is_some() {
+        if self.expr.is_some() || self.gemm.is_some() {
             return self.force()?.take_rows(idx);
         }
         let base = self.view.clone().unwrap_or_default();
@@ -156,7 +157,7 @@ impl DsArray {
                 bail!("column index {j} out of bounds for {} columns", self.shape.1);
             }
         }
-        if self.expr.is_some() {
+        if self.expr.is_some() || self.gemm.is_some() {
             return self.force()?.take_cols(idx);
         }
         let base = self.view.clone().unwrap_or_default();

@@ -1,13 +1,23 @@
 //! Linear algebra: transpose (paper §5.2 — N tasks, one per row of blocks),
 //! blocked matmul, and the Gram matrix `AᵀA` (computed without an explicit
 //! transposed copy — the ALS enabler, §5.3).
+//!
+//! Both multiply flavors route through the plan layer ([`crate::plan`]):
+//! the operand grids are captured as a [`GemmSpec`], which at optimizer
+//! `Level::Full` stays *deferred* on the result array — later elementwise
+//! maps graft into the gemm tiles as an epilogue, structurally identical
+//! plans dedupe through the CSE memo, and the operands pre-release inside
+//! the submission critical section. At `Level::Off` the spec lowers
+//! immediately into the exact historical eager task stream.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::kernels::UnaryKind;
+use crate::plan::{GemmKind, GemmSpec};
 use crate::storage::{Block, BlockMeta, DenseMatrix};
-use crate::tasking::{ops, BatchTask, CostHint, Future};
+use crate::tasking::{ops, BatchTask, CostHint, Future, Runtime};
 
 use super::DsArray;
 
@@ -85,54 +95,109 @@ impl DsArray {
         if self.is_lazy() || other.is_lazy() {
             return self.force()?.matmul(&other.force()?);
         }
-        let (gr, _) = self.grid;
-        let gc = other.grid.1;
-        let kb = self.grid.1;
-        // One task per output block, submitted as a single batch.
-        let mut batch = Vec::with_capacity(gr * gc);
-        for i in 0..gr {
-            let m = self.block_rows_at(i);
-            let a_row = self.block_row(i);
-            for j in 0..gc {
-                let n = other.block_cols_at(j);
-                let b_col = other.block_col(j);
-                let mut futs = a_row.clone();
-                futs.extend_from_slice(&b_col);
-                let meta = BlockMeta::dense(m, n);
-                let flops = 2.0 * m as f64 * self.shape.1 as f64 * n as f64;
-                let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
-                batch.push(BatchTask::new(
-                    "dsarray.matmul.block",
-                    futs,
-                    vec![meta],
-                    CostHint::flops(flops).with_bytes(bytes),
-                    Arc::new(move |ins: &[Arc<Block>]| {
-                        // Accumulate every k-step straight into the output
-                        // block (tiled gemm_acc / SpMM-acc kernels) — the
-                        // old path allocated a product per step and axpy'd.
-                        let (a_blocks, b_blocks) = ins.split_at(kb);
-                        let mut acc = DenseMatrix::zeros(m, n);
-                        for (a, b) in a_blocks.iter().zip(b_blocks) {
-                            match (&**a, &**b) {
-                                (Block::Csr(s), Block::Dense(d)) => {
-                                    s.matmul_dense_acc(d, &mut acc)?
-                                }
-                                (x, y) => acc.gemm_acc(&x.to_dense()?, &y.to_dense()?)?,
-                            }
-                        }
-                        Ok(vec![Block::Dense(acc)])
-                    }),
-                ));
-            }
+        self.plan_gemm(GemmSpec {
+            kind: GemmKind::Nn,
+            a: self.blocks.clone(),
+            a_grid: self.grid,
+            b: other.blocks.clone(),
+            b_grid: other.grid,
+            k_total: self.shape.1,
+            out_shape: (self.shape.0, other.shape.1),
+            out_block_shape: (self.block_shape.0, other.block_shape.1),
+            epilogue: Vec::new(),
+            state: Arc::default(),
+        })
+    }
+
+    /// Route a blocked multiply through the plan layer: at optimizer
+    /// `Level::Full` the gemm stays *deferred* (the spec rides on the
+    /// result array, operand references retained) so later elementwise ops
+    /// graft into its tiles and structurally identical plans dedupe;
+    /// otherwise it lowers immediately — with CSE at `Level::Cse`, and as
+    /// the exact historical eager task stream at `Level::Off`.
+    fn plan_gemm(&self, spec: GemmSpec) -> Result<DsArray> {
+        if self.rt.planner().fuse_enabled() {
+            self.rt.retain(&spec.a);
+            self.rt.retain(&spec.b);
+            return Ok(DsArray::from_gemm(self.rt.clone(), spec));
         }
-        let blocks: Vec<Future> = self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
-        DsArray::from_parts(
+        lower_gemm(&self.rt, &spec)
+    }
+
+    /// Wrap a pending gemm plan as a deferred array. The caller has already
+    /// retained the spec's operand references; `blocks` stays empty until
+    /// [`DsArray::force`] lowers the plan.
+    pub(crate) fn from_gemm(rt: Runtime, spec: GemmSpec) -> DsArray {
+        let grid = spec.out_grid();
+        DsArray {
+            rt,
+            shape: spec.out_shape,
+            block_shape: spec.out_block_shape,
+            grid,
+            blocks: Vec::new(),
+            sparse: false,
+            view: None,
+            expr: None,
+            gemm: Some(spec),
+        }
+    }
+
+    /// Lower a deferred gemm plan. A structurally identical plan forced in
+    /// a recent epoch returns its memoized blocks with **zero tasks** (CSE);
+    /// otherwise one task per output tile runs the accumulate loop plus any
+    /// grafted elementwise epilogue while the tile is cache-hot. Either way
+    /// the spec's operand references are released as soon as the tasks'
+    /// reads are registered (dead-block pre-release, atomic with the
+    /// submission) and the result is memoized in the spec's shared state —
+    /// repeated consumers of one plan lower it once.
+    pub(crate) fn force_gemm(&self) -> Result<DsArray> {
+        let spec = self.gemm.as_ref().expect("force_gemm on deferred gemm arrays only");
+        // Hold the state lock across the whole lowering (mirrors
+        // `force_expr`): concurrent forces serialize, and grafting/cloning
+        // observe either "pending with live operand refs" or "forced".
+        let mut st = spec.state.lock().unwrap();
+        if let Some(f) = &st.forced {
+            return Ok(f.clone());
+        }
+        if let Some(blocks) = self.rt.cse_lookup(spec.key(), spec.n_tasks() as u64) {
+            let out = DsArray::from_parts(
+                self.rt.clone(),
+                spec.out_shape,
+                spec.out_block_shape,
+                blocks,
+                false,
+            )?;
+            // The plan never runs: drop its operand references now and arm
+            // the credit so exactly one future Drop skips its release.
+            self.rt.release(&spec.a);
+            self.rt.release(&spec.b);
+            st.release_credit = true;
+            st.forced = Some(out.clone());
+            return Ok(out);
+        }
+        let batch = build_gemm_batch(&self.rt, spec);
+        let mut release = spec.a.clone();
+        release.extend_from_slice(&spec.b);
+        let blocks: Vec<Future> = self
+            .rt
+            .submit_batch_releasing(batch, &release)
+            .into_iter()
+            .map(|v| v[0])
+            .collect();
+        self.rt.planner().note_prereleased(release.len() as u64);
+        // Credit is armed as soon as the handles are gone, so a failure
+        // below can never lead Drop to double-release.
+        st.release_credit = true;
+        let out = DsArray::from_parts(
             self.rt.clone(),
-            (self.shape.0, other.shape.1),
-            (self.block_shape.0, other.block_shape.1),
+            spec.out_shape,
+            spec.out_block_shape,
             blocks,
             false,
-        )
+        )?;
+        self.rt.cse_record(spec.key(), &out.blocks);
+        st.forced = Some(out.clone());
+        Ok(out)
     }
 
     /// Kronecker product `self ⊗ other` (part of dislib's ds-array API):
@@ -288,50 +353,150 @@ impl DsArray {
         if self.is_lazy() || other.is_lazy() {
             return self.force()?.tn_matmul(&other.force()?);
         }
-        let gc = self.grid.1;
-        let ogc = other.grid.1;
-        let mut batch = Vec::with_capacity(gc * ogc);
-        for i in 0..gc {
-            let ci = self.block_cols_at(i);
-            let col_i = self.block_col(i);
-            for j in 0..ogc {
-                let cj = other.block_cols_at(j);
-                let col_j = other.block_col(j);
-                let mut futs = col_i.clone();
-                futs.extend_from_slice(&col_j);
-                let meta = BlockMeta::dense(ci, cj);
-                let flops = 2.0 * ci as f64 * self.shape.0 as f64 * cj as f64;
-                let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
-                let kb = self.grid.0;
-                batch.push(BatchTask::new(
-                    "dsarray.tn_matmul.block",
-                    futs,
-                    vec![meta],
-                    CostHint::flops(flops).with_bytes(bytes),
-                    Arc::new(move |ins: &[Arc<Block>]| {
-                        let (a_blocks, b_blocks) = ins.split_at(kb);
-                        let mut acc = DenseMatrix::zeros(ci, cj);
-                        for (a, b) in a_blocks.iter().zip(b_blocks) {
-                            let at = a.to_dense()?.transpose();
-                            match &**b {
-                                Block::Csr(s) => acc.gemm_acc(&at, &s.to_dense())?,
-                                y => acc.gemm_acc(&at, &y.to_dense()?)?,
-                            }
-                        }
-                        Ok(vec![Block::Dense(acc)])
-                    }),
-                ));
-            }
-        }
-        let blocks: Vec<Future> = self.rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
-        DsArray::from_parts(
-            self.rt.clone(),
-            (self.shape.1, other.shape.1),
-            (self.block_shape.1, other.block_shape.1),
+        self.plan_gemm(GemmSpec {
+            kind: GemmKind::Tn,
+            a: self.blocks.clone(),
+            a_grid: self.grid,
+            b: other.blocks.clone(),
+            b_grid: other.grid,
+            k_total: self.shape.0,
+            out_shape: (self.shape.1, other.shape.1),
+            out_block_shape: (self.block_shape.1, other.block_shape.1),
+            epilogue: Vec::new(),
+            state: Arc::default(),
+        })
+    }
+}
+
+/// Lower a gemm plan eagerly (optimizer `Off`/`Cse`): exactly the
+/// historical eager matmul/tn_matmul task stream. At `Level::Cse` a
+/// memoized structurally identical plan short-circuits to zero tasks.
+fn lower_gemm(rt: &Runtime, spec: &GemmSpec) -> Result<DsArray> {
+    if let Some(blocks) = rt.cse_lookup(spec.key(), spec.n_tasks() as u64) {
+        return DsArray::from_parts(
+            rt.clone(),
+            spec.out_shape,
+            spec.out_block_shape,
             blocks,
             false,
-        )
+        );
     }
+    let batch = build_gemm_batch(rt, spec);
+    let blocks: Vec<Future> = rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
+    let out = DsArray::from_parts(
+        rt.clone(),
+        spec.out_shape,
+        spec.out_block_shape,
+        blocks,
+        false,
+    )?;
+    rt.cse_record(spec.key(), &out.blocks);
+    Ok(out)
+}
+
+/// Materialize the task batch of one gemm plan: one task per output tile,
+/// reading a row (Nn) or column (Tn) of blocks per operand, accumulating
+/// every k-step straight into the output block (tiled gemm_acc / SpMM-acc
+/// kernels), then running any grafted elementwise epilogue over the hot
+/// tile through the runtime's SIMD vtable. With an empty epilogue the tasks
+/// are bit- and metric-identical to the historical eager stream (same
+/// names, cost hints, and bodies).
+fn build_gemm_batch(rt: &Runtime, spec: &GemmSpec) -> Vec<BatchTask> {
+    let ker = rt.kernels();
+    let name = spec.task_name();
+    let eps: Arc<[UnaryKind]> = spec.epilogue.clone().into();
+    let n_ops = 1 + spec.epilogue.len() as u32;
+    let (gr, gc) = spec.out_grid();
+    let k_total = spec.k_total;
+    let ep_flops = spec.epilogue.len() as f64;
+    let mut batch = Vec::with_capacity(gr * gc);
+    match spec.kind {
+        GemmKind::Nn => {
+            let kb = spec.a_grid.1;
+            for i in 0..gr {
+                let m = spec.a[i * kb].meta.rows;
+                let a_row: Vec<Future> = (0..kb).map(|k| spec.a[i * kb + k]).collect();
+                for j in 0..gc {
+                    let n = spec.b[j].meta.cols;
+                    let mut futs = a_row.clone();
+                    futs.extend((0..kb).map(|k| spec.b[k * gc + j]));
+                    let meta = BlockMeta::dense(m, n);
+                    let flops =
+                        2.0 * m as f64 * k_total as f64 * n as f64 + ep_flops * (m * n) as f64;
+                    let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
+                    let eps = Arc::clone(&eps);
+                    batch.push(
+                        BatchTask::new(
+                            name,
+                            futs,
+                            vec![meta],
+                            CostHint::flops(flops).with_bytes(bytes),
+                            Arc::new(move |ins: &[Arc<Block>]| {
+                                let (a_blocks, b_blocks) = ins.split_at(kb);
+                                let mut acc = DenseMatrix::zeros(m, n);
+                                for (a, b) in a_blocks.iter().zip(b_blocks) {
+                                    match (&**a, &**b) {
+                                        (Block::Csr(s), Block::Dense(d)) => {
+                                            s.matmul_dense_acc(d, &mut acc)?
+                                        }
+                                        (x, y) => acc.gemm_acc(&x.to_dense()?, &y.to_dense()?)?,
+                                    }
+                                }
+                                if !eps.is_empty() {
+                                    (ker.epilogue)(acc.data_mut(), &eps);
+                                }
+                                Ok(vec![Block::Dense(acc)])
+                            }),
+                        )
+                        .with_fused_ops(n_ops),
+                    );
+                }
+            }
+        }
+        GemmKind::Tn => {
+            let kb = spec.a_grid.0;
+            for i in 0..gr {
+                let ci = spec.a[i].meta.cols;
+                let col_i: Vec<Future> =
+                    (0..kb).map(|r| spec.a[r * spec.a_grid.1 + i]).collect();
+                for j in 0..gc {
+                    let cj = spec.b[j].meta.cols;
+                    let mut futs = col_i.clone();
+                    futs.extend((0..kb).map(|r| spec.b[r * spec.b_grid.1 + j]));
+                    let meta = BlockMeta::dense(ci, cj);
+                    let flops =
+                        2.0 * ci as f64 * k_total as f64 * cj as f64 + ep_flops * (ci * cj) as f64;
+                    let bytes: f64 = futs.iter().map(|f| f.meta.bytes() as f64).sum();
+                    let eps = Arc::clone(&eps);
+                    batch.push(
+                        BatchTask::new(
+                            name,
+                            futs,
+                            vec![meta],
+                            CostHint::flops(flops).with_bytes(bytes),
+                            Arc::new(move |ins: &[Arc<Block>]| {
+                                let (a_blocks, b_blocks) = ins.split_at(kb);
+                                let mut acc = DenseMatrix::zeros(ci, cj);
+                                for (a, b) in a_blocks.iter().zip(b_blocks) {
+                                    let at = a.to_dense()?.transpose();
+                                    match &**b {
+                                        Block::Csr(s) => acc.gemm_acc(&at, &s.to_dense())?,
+                                        y => acc.gemm_acc(&at, &y.to_dense()?)?,
+                                    }
+                                }
+                                if !eps.is_empty() {
+                                    (ker.epilogue)(acc.data_mut(), &eps);
+                                }
+                                Ok(vec![Block::Dense(acc)])
+                            }),
+                        )
+                        .with_fused_ops(n_ops),
+                    );
+                }
+            }
+        }
+    }
+    batch
 }
 
 #[cfg(test)]
@@ -491,6 +656,77 @@ mod tests {
         // Feature-dimension mismatch rejected.
         let bad = creation::zeros(&rt, (3, 4), (2, 2)).unwrap();
         assert!(dx.pairwise_dist2(&bad).is_err());
+    }
+
+    #[test]
+    fn full_level_grafts_epilogue_bit_identical_with_fewer_tasks() {
+        let m_a = DenseMatrix::from_fn(8, 6, |i, j| ((i * 6 + j) % 7) as f32 - 3.0);
+        let m_b = DenseMatrix::from_fn(6, 4, |i, j| ((i * 4 + j) % 5) as f32 * 0.5);
+
+        let off = Runtime::local(2);
+        let a = creation::from_matrix(&off, &m_a, (4, 3)).unwrap();
+        let b = creation::from_matrix(&off, &m_b, (3, 2)).unwrap();
+        let want = a
+            .matmul(&b)
+            .unwrap()
+            .mul_scalar(0.5)
+            .unwrap()
+            .abs()
+            .unwrap()
+            .collect()
+            .unwrap();
+
+        let full = Runtime::local(2).with_optimizer(crate::plan::Level::Full);
+        let a = creation::from_matrix(&full, &m_a, (4, 3)).unwrap();
+        let b = creation::from_matrix(&full, &m_b, (3, 2)).unwrap();
+        let before = full.metrics();
+        let c = a.matmul(&b).unwrap().mul_scalar(0.5).unwrap().abs().unwrap();
+        assert_eq!(
+            full.metrics().total_tasks(),
+            before.total_tasks(),
+            "gemm + epilogue stays pending until force"
+        );
+        let plan = c.explain();
+        assert!(plan.contains("optimizer: full"), "{plan}");
+        assert!(plan.contains("epilogue"), "{plan}");
+        let got = c.collect().unwrap();
+        assert_eq!(got.max_abs_diff(&want), 0.0, "bit-identical across levels");
+
+        let d = full.metrics().since(&before);
+        // 2x2 output tiles, gemm + both unary ops in one task each.
+        assert_eq!(d.tasks_for("dsarray.matmul.fused"), 4);
+        assert_eq!(d.tasks_for("dsarray.matmul.block"), 0);
+        assert_eq!(d.tasks_for("dsarray.ew.fused"), 0);
+        assert!(
+            full.metrics().total_tasks() < off.metrics().total_tasks(),
+            "optimizer must strictly shrink the task stream"
+        );
+        assert!(full.metrics().blocks_prereleased > 0, "operands pre-released");
+        // Forcing again reuses the memoized gemm result.
+        assert!(c.explain().contains("already forced"));
+    }
+
+    #[test]
+    fn cse_dedupes_repeated_gram_across_collect_epochs() {
+        let rt = Runtime::local(2).with_optimizer(crate::plan::Level::Cse);
+        let m = DenseMatrix::from_fn(7, 5, |i, j| ((i * 5 + j) % 4) as f32 - 1.5);
+        let x = creation::from_matrix(&rt, &m, (3, 2)).unwrap();
+
+        let g1 = x.gram().unwrap();
+        let first = rt.metrics().tasks_for("dsarray.tn_matmul.block");
+        assert_eq!(first, 9);
+        let r1 = g1.collect().unwrap(); // bumps the collect epoch
+
+        // Structurally identical subgraph: memo hit, zero new gemm tasks.
+        let g2 = x.gram().unwrap();
+        assert_eq!(rt.metrics().tasks_for("dsarray.tn_matmul.block"), first);
+        assert!(rt.metrics().tasks_deduped >= 9);
+        assert_eq!(g2.collect().unwrap(), r1);
+
+        // A different subgraph (other operand ids) still lowers fresh.
+        let y = creation::from_matrix(&rt, &m, (3, 2)).unwrap();
+        let _ = y.gram().unwrap();
+        assert_eq!(rt.metrics().tasks_for("dsarray.tn_matmul.block"), first + 9);
     }
 
     #[test]

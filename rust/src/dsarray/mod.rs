@@ -27,6 +27,7 @@ mod expr;
 pub mod indexing;
 pub mod io;
 pub mod linalg;
+pub mod operators;
 pub mod rechunk;
 pub mod reductions;
 pub mod shuffle;
@@ -71,6 +72,12 @@ pub struct DsArray {
     /// `blocks` is the base operand's grid; further operands live in the
     /// spec. `view` and `expr` are never both set.
     pub(crate) expr: Option<ExprSpec>,
+    /// Pending deferred gemm with grafted epilogue (the plan layer,
+    /// [`crate::plan::GemmSpec`] — only set at `Level::Full`). For deferred
+    /// gemm arrays `blocks` is empty (the operand grids live in the spec)
+    /// until [`DsArray::force`] lowers the plan. Mutually exclusive with
+    /// `view` and `expr`.
+    pub(crate) gemm: Option<crate::plan::GemmSpec>,
 }
 
 impl Clone for DsArray {
@@ -81,6 +88,10 @@ impl Clone for DsArray {
                 self.rt.retain(&op.blocks);
             }
         }
+        if let Some(g) = &self.gemm {
+            self.rt.retain(&g.a);
+            self.rt.retain(&g.b);
+        }
         Self {
             rt: self.rt.clone(),
             shape: self.shape,
@@ -90,6 +101,7 @@ impl Clone for DsArray {
             sparse: self.sparse,
             view: self.view.clone(),
             expr: self.expr.clone(),
+            gemm: self.gemm.clone(),
         }
     }
 }
@@ -109,6 +121,21 @@ impl Drop for DsArray {
             for op in &expr.extra {
                 self.rt.release(&op.blocks);
             }
+        }
+        if let Some(g) = &self.gemm {
+            {
+                let mut st = g.state.lock().unwrap();
+                if st.release_credit {
+                    // force() pre-released one owner's operand references
+                    // inside the submission critical section; this drop
+                    // consumes the credit (`blocks` is empty for deferred
+                    // gemm arrays, so returning skips nothing else).
+                    st.release_credit = false;
+                    return;
+                }
+            }
+            self.rt.release(&g.a);
+            self.rt.release(&g.b);
         }
         self.rt.release(&self.blocks);
     }
@@ -205,6 +232,70 @@ impl DsArray {
         (0..self.grid.0).map(|i| self.block(i, j)).collect()
     }
 
+    /// Render the plan that forcing/collecting this array would execute,
+    /// as seen by the query optimizer — the `EXPLAIN` of the plan layer.
+    ///
+    /// One line of array geometry, the active optimizer [`crate::plan::Level`],
+    /// then the pending work: a deferred gemm (with any grafted elementwise
+    /// epilogue), a deferred elementwise chain, a lazy view gather, or
+    /// "materialized" when no tasks are pending. Purely diagnostic: calling
+    /// it never submits tasks or changes the plan.
+    pub fn explain(&self) -> String {
+        let mut s = format!(
+            "DsArray {}x{} · blocks {}x{} · grid {}x{}{}\n",
+            self.shape.0,
+            self.shape.1,
+            self.block_shape.0,
+            self.block_shape.1,
+            self.grid.0,
+            self.grid.1,
+            if self.sparse { " · sparse" } else { "" },
+        );
+        s.push_str(&format!(
+            "optimizer: {}\n",
+            self.rt.planner().level().as_str()
+        ));
+        if let Some(g) = &self.gemm {
+            let forced = g
+                .state
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .forced
+                .is_some();
+            s.push_str(&format!("plan: {}\n", g.describe()));
+            if forced {
+                s.push_str("  already forced — memoized result is reused\n");
+            } else {
+                s.push_str(&format!(
+                    "  lowers to {} `{}` task(s); operand blocks pre-release at force\n",
+                    g.n_tasks(),
+                    g.task_name(),
+                ));
+            }
+        } else if let Some(expr) = &self.expr {
+            s.push_str(&format!(
+                "plan: deferred elementwise chain, {} op(s) over {} operand grid(s)\n",
+                expr.n_ops,
+                1 + expr.extra.len(),
+            ));
+            s.push_str(&format!(
+                "  lowers to {} fused `dsarray.ew.fused` task(s) (one per block)\n",
+                self.grid.0 * self.grid.1,
+            ));
+        } else if self.view.is_some() {
+            // A view's `grid` is the shared backing sub-grid; force()
+            // gathers into the logical output grid.
+            let out_grid = Self::grid_dim(self.shape.0, self.block_shape.0)
+                * Self::grid_dim(self.shape.1, self.block_shape.1);
+            s.push_str(&format!(
+                "plan: lazy view over shared backing blocks\n  lowers to {out_grid} gather task(s) if forced; collect() copies master-side with zero tasks\n",
+            ));
+        } else {
+            s.push_str("plan: materialized — no pending tasks\n");
+        }
+        s
+    }
+
     /// Assemble a ds-array from an explicit grid of futures. Validates that
     /// every block's metadata matches its grid slot.
     pub(crate) fn from_parts(
@@ -238,6 +329,7 @@ impl DsArray {
             sparse,
             view: None,
             expr: None,
+            gemm: None,
         };
         for i in 0..grid.0 {
             for j in 0..grid.1 {
@@ -264,7 +356,10 @@ impl DsArray {
     /// materialize first (one fused task per block, memoized — see
     /// [`DsArray::force`]).
     pub fn collect(&self) -> Result<DenseMatrix> {
-        if self.expr.is_some() {
+        // A collect delimits an optimizer epoch: stale CSE memo entries
+        // from distant epochs are swept (no-op at `Level::Off`).
+        self.rt.plan_epoch_tick();
+        if self.expr.is_some() || self.gemm.is_some() {
             return self.force()?.collect();
         }
         let Some(view) = &self.view else {

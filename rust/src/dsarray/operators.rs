@@ -1,0 +1,187 @@
+//! `std::ops` operator overloads for dense ds-arrays — `&a + &b`,
+//! `&a - &b`, `&a * &b` (elementwise), and the scalar forms `&a + 2.0`,
+//! `&a * 2.0`, `2.0 * &a`, plus unary `-&a`.
+//!
+//! Every operator delegates to the deferred elementwise engine
+//! ([`DsArray::add`], [`DsArray::mul_scalar`], …), so chained operator
+//! expressions build one pending expression and fuse to a single task per
+//! block at [`DsArray::force`] / [`DsArray::collect`] — and, at
+//! [`crate::plan::Level::Full`], a unary epilogue on a pending matmul
+//! grafts into the gemm tiles instead of spawning its own pass.
+//!
+//! Following the standard library's convention for infallible operator
+//! syntax over fallible methods (`Index` panics on out-of-bounds), these
+//! impls **panic** on shape mismatch or sparse inputs; use the named
+//! methods when you need a `Result`.
+//!
+//! Operands are borrowed (`&a + &b`), never consumed: a ds-array is a
+//! handle to distributed blocks, and the expression engine retains the
+//! operand grids it closes over.
+//!
+//! ```
+//! use rustdslib::{dsarray::creation, tasking::Runtime};
+//! let rt = Runtime::local(2);
+//! let a = creation::random(&rt, (8, 8), (4, 4), 1).unwrap();
+//! let b = creation::random(&rt, (8, 8), (4, 4), 2).unwrap();
+//! let c = &(&a + &b) * 0.5 + 1.0; // deferred: zero tasks so far
+//! let got = c.collect().unwrap();
+//! let want = a
+//!     .add(&b)
+//!     .unwrap()
+//!     .mul_scalar(0.5)
+//!     .unwrap()
+//!     .add_scalar(1.0)
+//!     .unwrap()
+//!     .collect()
+//!     .unwrap();
+//! assert_eq!(got, want);
+//! ```
+
+use std::ops::{Add, Mul, Neg, Sub};
+
+use super::DsArray;
+
+impl Add<&DsArray> for &DsArray {
+    type Output = DsArray;
+    fn add(self, rhs: &DsArray) -> DsArray {
+        DsArray::add(self, rhs).expect("`a + b` on mismatched or sparse ds-arrays")
+    }
+}
+
+impl Sub<&DsArray> for &DsArray {
+    type Output = DsArray;
+    fn sub(self, rhs: &DsArray) -> DsArray {
+        DsArray::sub(self, rhs).expect("`a - b` on mismatched or sparse ds-arrays")
+    }
+}
+
+/// Elementwise (Hadamard) product — matrix multiplication stays the
+/// explicit [`DsArray::matmul`], as in NumPy (`*` vs `@`).
+impl Mul<&DsArray> for &DsArray {
+    type Output = DsArray;
+    fn mul(self, rhs: &DsArray) -> DsArray {
+        DsArray::mul(self, rhs).expect("`a * b` on mismatched or sparse ds-arrays")
+    }
+}
+
+impl Add<f32> for &DsArray {
+    type Output = DsArray;
+    fn add(self, s: f32) -> DsArray {
+        self.add_scalar(s).expect("`a + s` on a sparse ds-array")
+    }
+}
+
+impl Sub<f32> for &DsArray {
+    type Output = DsArray;
+    fn sub(self, s: f32) -> DsArray {
+        self.add_scalar(-s).expect("`a - s` on a sparse ds-array")
+    }
+}
+
+impl Mul<f32> for &DsArray {
+    type Output = DsArray;
+    fn mul(self, s: f32) -> DsArray {
+        self.mul_scalar(s).expect("`a * s` on a sparse ds-array")
+    }
+}
+
+impl Add<&DsArray> for f32 {
+    type Output = DsArray;
+    fn add(self, a: &DsArray) -> DsArray {
+        a.add_scalar(self).expect("`s + a` on a sparse ds-array")
+    }
+}
+
+impl Mul<&DsArray> for f32 {
+    type Output = DsArray;
+    fn mul(self, a: &DsArray) -> DsArray {
+        a.mul_scalar(self).expect("`s * a` on a sparse ds-array")
+    }
+}
+
+impl Neg for &DsArray {
+    type Output = DsArray;
+    fn neg(self) -> DsArray {
+        DsArray::neg(self).expect("`-a` on a sparse ds-array")
+    }
+}
+
+// Owned-value forms so chained expressions (`&a + &b` yields an owned
+// DsArray) keep composing without intermediate bindings.
+impl Add<f32> for DsArray {
+    type Output = DsArray;
+    fn add(self, s: f32) -> DsArray {
+        &self + s
+    }
+}
+
+impl Sub<f32> for DsArray {
+    type Output = DsArray;
+    fn sub(self, s: f32) -> DsArray {
+        &self - s
+    }
+}
+
+impl Mul<f32> for DsArray {
+    type Output = DsArray;
+    fn mul(self, s: f32) -> DsArray {
+        &self * s
+    }
+}
+
+impl Neg for DsArray {
+    type Output = DsArray;
+    fn neg(self) -> DsArray {
+        -&self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::dsarray::creation;
+    use crate::tasking::Runtime;
+
+    #[test]
+    fn operators_defer_and_match_named_methods() {
+        let rt = Runtime::local(2);
+        let a = creation::random(&rt, (6, 6), (3, 3), 7).unwrap();
+        let b = creation::random(&rt, (6, 6), (3, 3), 8).unwrap();
+        let before = rt.metrics().total_tasks();
+        let c = &(&a - &b) * 2.0 + 1.0;
+        assert_eq!(
+            rt.metrics().total_tasks(),
+            before,
+            "operator chain must stay deferred"
+        );
+        let got = c.collect().unwrap();
+        let want = a
+            .sub(&b)
+            .unwrap()
+            .mul_scalar(2.0)
+            .unwrap()
+            .add_scalar(1.0)
+            .unwrap()
+            .collect()
+            .unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn scalar_left_forms_and_neg() {
+        let rt = Runtime::local(1);
+        let a = creation::identity(&rt, 4, (2, 2)).unwrap();
+        assert_eq!((2.0 * &a).collect().unwrap().get(0, 0), 2.0);
+        assert_eq!((1.0 + &a).collect().unwrap().get(0, 1), 1.0);
+        assert_eq!((-&a).collect().unwrap().get(2, 2), -1.0);
+        assert_eq!((&a * &a).collect().unwrap().get(3, 3), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched")]
+    fn shape_mismatch_panics() {
+        let rt = Runtime::local(1);
+        let a = creation::zeros(&rt, (4, 4), (2, 2)).unwrap();
+        let b = creation::zeros(&rt, (4, 2), (2, 2)).unwrap();
+        let _ = &a + &b;
+    }
+}

@@ -262,6 +262,7 @@ impl DsArray {
             sparse,
             view: Some(view),
             expr: None,
+            gemm: None,
         };
         // Non-terminal stored lines must be full blocks: the view's
         // `coordinate / block_size` arithmetic depends on it. Sub-grids of a
@@ -344,6 +345,9 @@ impl DsArray {
     /// assert_eq!(owned.collect().unwrap(), lazy.collect().unwrap());
     /// ```
     pub fn force(&self) -> Result<DsArray> {
+        if self.gemm.is_some() {
+            return self.force_gemm();
+        }
         if self.expr.is_some() {
             return self.force_expr();
         }

@@ -115,37 +115,38 @@ impl Als {
             .collect();
         let mut partials: Vec<Future> =
             rt.submit_batch(batch).into_iter().map(|v| v[0]).collect();
+        if rt.planner().fuse_enabled() {
+            // Plan layer on: the last reduce level and the λI ridge run as
+            // one composed `als.gram_reduce_ridge` task. The axpy fold and
+            // the diagonal add are the same operations the eager pair
+            // performs, in the same order, so grams stay bit-identical.
+            while partials.len() > 8 {
+                partials = gram_reduce_level(rt, partials, d);
+            }
+            let n = partials.len();
+            let task = BatchTask::new(
+                "als.gram_reduce_ridge",
+                partials,
+                vec![BlockMeta::dense(d, d)],
+                CostHint::flops((n * d * d + d) as f64),
+                Arc::new(move |ins: &[Arc<Block>]| {
+                    let mut g = ins[0].to_dense()?;
+                    for b in &ins[1..] {
+                        g.axpy(1.0, &b.to_dense()?)?;
+                    }
+                    for i in 0..g.rows() {
+                        let v = g.get(i, i) + lambda;
+                        g.set(i, i, v);
+                    }
+                    Ok(vec![Block::Dense(g)])
+                }),
+            )
+            .with_fused_ops(2);
+            return rt.submit_batch(vec![task]).remove(0)[0];
+        }
         // Tree-reduce, then add λI in the final task.
         while partials.len() > 1 {
-            let mut next: Vec<Option<Future>> = Vec::with_capacity(partials.len().div_ceil(8));
-            let mut batch = Vec::new();
-            for chunk in partials.chunks(8) {
-                if chunk.len() == 1 {
-                    next.push(Some(chunk[0]));
-                    continue;
-                }
-                next.push(None);
-                batch.push(BatchTask::new(
-                    "als.gram_reduce",
-                    chunk.to_vec(),
-                    vec![BlockMeta::dense(d, d)],
-                    CostHint::flops((chunk.len() * d * d) as f64),
-                    Arc::new(|ins: &[Arc<Block>]| {
-                        let mut acc = ins[0].to_dense()?;
-                        for b in &ins[1..] {
-                            acc.axpy(1.0, &b.to_dense()?)?;
-                        }
-                        Ok(vec![Block::Dense(acc)])
-                    }),
-                ));
-            }
-            let mut outs = rt.submit_batch(batch).into_iter();
-            partials = next
-                .into_iter()
-                .map(|slot| {
-                    slot.unwrap_or_else(|| outs.next().expect("batch output per chunk")[0])
-                })
-                .collect();
+            partials = gram_reduce_level(rt, partials, d);
         }
         rt.submit(
             "als.gram_ridge",
@@ -378,6 +379,37 @@ impl Als {
     }
 }
 
+/// One tree level of the gram reduction: merge 8-wide chunks with
+/// `als.gram_reduce` tasks, pass lone stragglers through.
+fn gram_reduce_level(rt: &Runtime, partials: Vec<Future>, d: usize) -> Vec<Future> {
+    let mut next: Vec<Option<Future>> = Vec::with_capacity(partials.len().div_ceil(8));
+    let mut batch = Vec::new();
+    for chunk in partials.chunks(8) {
+        if chunk.len() == 1 {
+            next.push(Some(chunk[0]));
+            continue;
+        }
+        next.push(None);
+        batch.push(BatchTask::new(
+            "als.gram_reduce",
+            chunk.to_vec(),
+            vec![BlockMeta::dense(d, d)],
+            CostHint::flops((chunk.len() * d * d) as f64),
+            Arc::new(|ins: &[Arc<Block>]| {
+                let mut acc = ins[0].to_dense()?;
+                for b in &ins[1..] {
+                    acc.axpy(1.0, &b.to_dense()?)?;
+                }
+                Ok(vec![Block::Dense(acc)])
+            }),
+        ));
+    }
+    let mut outs = rt.submit_batch(batch).into_iter();
+    next.into_iter()
+        .map(|slot| slot.unwrap_or_else(|| outs.next().expect("batch output per chunk")[0]))
+        .collect()
+}
+
 /// FᵀF through the PJRT gemm_tn artifact when it fits, tiled over row
 /// chunks; native otherwise.
 fn gram_accelerated(f: &DenseMatrix) -> Result<DenseMatrix> {
@@ -477,6 +509,47 @@ mod tests {
         assert_eq!(m.tasks_with_prefix("dataset.transpose"), 0);
         assert_eq!(m.tasks_for("als.update_u"), 8); // 4 block rows × 2 iters
         assert_eq!(m.tasks_for("als.update_v"), 6); // 3 block cols × 2 iters
+    }
+
+    #[test]
+    fn full_optimizer_composes_gram_ridge_and_matches_off_exactly() {
+        // Level::Full composes the final gram-reduce level with the λI
+        // ridge: two fewer tasks per iteration (one per gram), factors
+        // bit-identical to the eager stream.
+        let cfg = AlsConfig {
+            d: 3,
+            lambda: 0.02,
+            max_iter: 4,
+            seed: 9,
+        };
+        let r = low_rank(20, 16, 2, 5);
+
+        let rt_off = Runtime::local(2);
+        let x_off = creation::from_matrix(&rt_off, &r, (5, 4)).unwrap();
+        let mut a = Als::new(cfg.clone());
+        a.fit_dsarray(&x_off).unwrap();
+
+        let rt_full = Runtime::local(2).with_optimizer(crate::plan::Level::Full);
+        let x_full = creation::from_matrix(&rt_full, &r, (5, 4)).unwrap();
+        let mut b = Als::new(cfg);
+        b.fit_dsarray(&x_full).unwrap();
+
+        let (ua, va) = (a.u.unwrap(), a.v.unwrap());
+        let (ub, vb) = (b.u.unwrap(), b.v.unwrap());
+        assert_eq!(ua.max_abs_diff(&ub), 0.0, "U diverged");
+        assert_eq!(va.max_abs_diff(&vb), 0.0, "V diverged");
+
+        let m_off = rt_off.metrics();
+        let m_full = rt_full.metrics();
+        // One composed task per gram, two grams (gv, gu) per iteration.
+        assert_eq!(m_full.tasks_for("als.gram_reduce_ridge"), 8);
+        assert_eq!(m_full.tasks_for("als.gram_ridge"), 0);
+        assert!(
+            m_full.total_tasks() < m_off.total_tasks(),
+            "full {} !< off {}",
+            m_full.total_tasks(),
+            m_off.total_tasks()
+        );
     }
 
     #[test]

@@ -73,6 +73,19 @@ impl KMeans {
         centers_fut: Future,
         k: usize,
     ) -> (Future, Future, Future) {
+        let partials = Self::assignment_partials(rt, x, centers_fut, k);
+        reduce_triples(rt, partials, k, x.cols())
+    }
+
+    /// The per-block-row partial batch alone (no reduction): one
+    /// `kmeans.partial` task per block-row, each emitting a
+    /// (psum, pcount, pssd) triple.
+    fn assignment_partials(
+        rt: &Runtime,
+        x: &DsArray,
+        centers_fut: Future,
+        k: usize,
+    ) -> Vec<(Future, Future, Future)> {
         let f = x.cols();
         // One partial task per block-row, submitted as one batch.
         let mut batch = Vec::with_capacity(x.grid().0);
@@ -112,12 +125,10 @@ impl KMeans {
                 }),
             ));
         }
-        let partials: Vec<(Future, Future, Future)> = rt
-            .submit_batch(batch)
+        rt.submit_batch(batch)
             .into_iter()
             .map(|out| (out[0], out[1], out[2]))
-            .collect();
-        reduce_triples(rt, partials, k, f)
+            .collect()
     }
 
     /// Submit the center-update task: new centers from reduced partials
@@ -154,6 +165,67 @@ impl KMeans {
         out[0]
     }
 
+    /// Plan-layer composed iteration tail (`Level::Full` only): the last
+    /// reduction level and the center update run as **one**
+    /// `kmeans.reduce_update` task instead of a `kmeans.reduce` +
+    /// `kmeans.update` pair — the reduced psum/pcount are consumed while
+    /// still cache-hot, and one scheduler round-trip per iteration
+    /// disappears. Arithmetic is identical to the eager pair (same axpy
+    /// fold, then the same per-cluster division), so trajectories stay
+    /// bit-identical. Returns (new centers (k,f), pssd (1,1)).
+    fn reduce_update_round(
+        rt: &Runtime,
+        mut level: Vec<(Future, Future, Future)>,
+        centers_fut: Future,
+        k: usize,
+        f: usize,
+    ) -> (Future, Future) {
+        // Tree-reduce until one fan-in's worth of triples remains, with the
+        // exact eager topology, then fuse the final level into the update.
+        while level.len() > REDUCE_ARITY {
+            level = reduce_one_level(rt, level, k, f);
+        }
+        let n = level.len();
+        let mut reads = Vec::with_capacity(n * 3 + 1);
+        for &(s, c, d) in &level {
+            reads.push(s);
+            reads.push(c);
+            reads.push(d);
+        }
+        reads.push(centers_fut);
+        let metas = vec![BlockMeta::dense(k, f), BlockMeta::dense(1, 1)];
+        let task = BatchTask::new(
+            "kmeans.reduce_update",
+            reads,
+            metas,
+            CostHint::flops((n * k * (f + 1) + k * f) as f64),
+            Arc::new(move |ins: &[Arc<Block>]| {
+                let mut psum = ins[0].to_dense()?;
+                let mut pcount = ins[1].to_dense()?;
+                let mut pssd = ins[2].to_dense()?;
+                for triple in ins[3..3 * n].chunks(3) {
+                    psum.axpy(1.0, &triple[0].to_dense()?)?;
+                    pcount.axpy(1.0, &triple[1].to_dense()?)?;
+                    pssd.axpy(1.0, &triple[2].to_dense()?)?;
+                }
+                let old = ins[3 * n].to_dense()?;
+                let mut new = old.clone();
+                for kk in 0..psum.rows() {
+                    let cnt = pcount.get(0, kk);
+                    if cnt > 0.0 {
+                        for j in 0..psum.cols() {
+                            new.set(kk, j, psum.get(kk, j) / cnt);
+                        }
+                    }
+                }
+                Ok(vec![Block::Dense(new), Block::Dense(pssd)])
+            }),
+        )
+        .with_fused_ops(2);
+        let out = rt.submit_batch(vec![task]).remove(0);
+        (out[0], out[1])
+    }
+
     /// Build the full iteration graph. In local mode, synchronizes per
     /// iteration for the tolerance check; in sim mode runs `max_iter`
     /// fully asynchronous rounds.
@@ -176,11 +248,22 @@ impl KMeans {
         let mut last = f64::INFINITY;
         self.n_iter = 0;
         for _ in 0..self.cfg.max_iter {
-            let reduced = Self::assignment_round(&rt, x, centers_fut, k);
-            centers_fut = Self::update_round(&rt, reduced, centers_fut, k, f);
+            let ssd_fut = if rt.planner().fuse_enabled() {
+                // Plan layer on: the final reduce level and the center
+                // update run as one composed task per iteration.
+                let partials = Self::assignment_partials(&rt, x, centers_fut, k);
+                let (new_centers, ssd) =
+                    Self::reduce_update_round(&rt, partials, centers_fut, k, f);
+                centers_fut = new_centers;
+                ssd
+            } else {
+                let reduced = Self::assignment_round(&rt, x, centers_fut, k);
+                centers_fut = Self::update_round(&rt, reduced, centers_fut, k, f);
+                reduced.2
+            };
             self.n_iter += 1;
             if !rt.is_sim() {
-                let ssd = rt.wait(reduced.2)?.to_dense()?.get(0, 0) as f64;
+                let ssd = rt.wait(ssd_fut)?.to_dense()?.get(0, 0) as f64;
                 self.inertia = ssd;
                 if last.is_finite() && (last - ssd).abs() <= self.cfg.tol * last.max(1e-12) {
                     break;
@@ -270,59 +353,69 @@ fn reduce_triples(
     f: usize,
 ) -> (Future, Future, Future) {
     while level.len() > 1 {
-        let mut next = Vec::with_capacity(level.len().div_ceil(REDUCE_ARITY));
-        let mut batch = Vec::new();
-        for chunk in level.chunks(REDUCE_ARITY) {
-            if chunk.len() == 1 {
-                next.push(Some(chunk[0]));
-                continue;
-            }
-            next.push(None); // filled from the batch below, in order
-            let mut reads = Vec::with_capacity(chunk.len() * 3);
-            for &(s, c, d) in chunk {
-                reads.push(s);
-                reads.push(c);
-                reads.push(d);
-            }
-            let metas = vec![
-                BlockMeta::dense(k, f),
-                BlockMeta::dense(1, k),
-                BlockMeta::dense(1, 1),
-            ];
-            batch.push(BatchTask::new(
-                "kmeans.reduce",
-                reads,
-                metas,
-                CostHint::flops((chunk.len() * k * (f + 1)) as f64),
-                Arc::new(move |ins: &[Arc<Block>]| {
-                    let mut psum = ins[0].to_dense()?;
-                    let mut pcount = ins[1].to_dense()?;
-                    let mut pssd = ins[2].to_dense()?;
-                    for triple in ins[3..].chunks(3) {
-                        psum.axpy(1.0, &triple[0].to_dense()?)?;
-                        pcount.axpy(1.0, &triple[1].to_dense()?)?;
-                        pssd.axpy(1.0, &triple[2].to_dense()?)?;
-                    }
-                    Ok(vec![
-                        Block::Dense(psum),
-                        Block::Dense(pcount),
-                        Block::Dense(pssd),
-                    ])
-                }),
-            ));
-        }
-        let mut outs = rt.submit_batch(batch).into_iter();
-        level = next
-            .into_iter()
-            .map(|slot| {
-                slot.unwrap_or_else(|| {
-                    let out = outs.next().expect("one batch output per merged chunk");
-                    (out[0], out[1], out[2])
-                })
-            })
-            .collect();
+        level = reduce_one_level(rt, level, k, f);
     }
     level[0]
+}
+
+/// One tree level of the triple reduction: merge `REDUCE_ARITY`-sized
+/// chunks with `kmeans.reduce` tasks, pass lone stragglers through.
+fn reduce_one_level(
+    rt: &Runtime,
+    level: Vec<(Future, Future, Future)>,
+    k: usize,
+    f: usize,
+) -> Vec<(Future, Future, Future)> {
+    let mut next = Vec::with_capacity(level.len().div_ceil(REDUCE_ARITY));
+    let mut batch = Vec::new();
+    for chunk in level.chunks(REDUCE_ARITY) {
+        if chunk.len() == 1 {
+            next.push(Some(chunk[0]));
+            continue;
+        }
+        next.push(None); // filled from the batch below, in order
+        let mut reads = Vec::with_capacity(chunk.len() * 3);
+        for &(s, c, d) in chunk {
+            reads.push(s);
+            reads.push(c);
+            reads.push(d);
+        }
+        let metas = vec![
+            BlockMeta::dense(k, f),
+            BlockMeta::dense(1, k),
+            BlockMeta::dense(1, 1),
+        ];
+        batch.push(BatchTask::new(
+            "kmeans.reduce",
+            reads,
+            metas,
+            CostHint::flops((chunk.len() * k * (f + 1)) as f64),
+            Arc::new(move |ins: &[Arc<Block>]| {
+                let mut psum = ins[0].to_dense()?;
+                let mut pcount = ins[1].to_dense()?;
+                let mut pssd = ins[2].to_dense()?;
+                for triple in ins[3..].chunks(3) {
+                    psum.axpy(1.0, &triple[0].to_dense()?)?;
+                    pcount.axpy(1.0, &triple[1].to_dense()?)?;
+                    pssd.axpy(1.0, &triple[2].to_dense()?)?;
+                }
+                Ok(vec![
+                    Block::Dense(psum),
+                    Block::Dense(pcount),
+                    Block::Dense(pssd),
+                ])
+            }),
+        ));
+    }
+    let mut outs = rt.submit_batch(batch).into_iter();
+    next.into_iter()
+        .map(|slot| {
+            slot.unwrap_or_else(|| {
+                let out = outs.next().expect("one batch output per merged chunk");
+                (out[0], out[1], out[2])
+            })
+        })
+        .collect()
 }
 
 /// Per-block assignment: PJRT fused kernel when shapes fit (tiled over
@@ -521,6 +614,47 @@ mod tests {
         assert_eq!(
             rt.metrics().tasks_for("dsarray.ew.fused"),
             x.n_blocks() as u64
+        );
+    }
+
+    #[test]
+    fn full_optimizer_fuses_update_and_matches_off_exactly() {
+        // Level::Full composes the reduce tail and the center update into
+        // one task per iteration; centers and inertia must stay
+        // bit-identical to the eager (Level::Off) stream, with strictly
+        // fewer tasks submitted.
+        let cfg = KMeansConfig {
+            k: 2,
+            max_iter: 12,
+            tol: 1e-7,
+            seed: 3,
+        };
+        let rt_off = Runtime::local(2);
+        let x_off = blobs(&rt_off, 60, 6, (16, 6));
+        let mut km_off = KMeans::new(cfg.clone());
+        km_off.fit_dsarray(&x_off).unwrap();
+
+        let rt_full = Runtime::local(2).with_optimizer(crate::plan::Level::Full);
+        let x_full = blobs(&rt_full, 60, 6, (16, 6));
+        let mut km_full = KMeans::new(cfg);
+        km_full.fit_dsarray(&x_full).unwrap();
+
+        assert_eq!(km_off.n_iter, km_full.n_iter);
+        assert_eq!(km_off.inertia, km_full.inertia);
+        let ca = km_off.centers.unwrap();
+        let cb = km_full.centers.unwrap();
+        assert_eq!(ca.max_abs_diff(&cb), 0.0, "centers diverged");
+
+        let m_off = rt_off.metrics();
+        let m_full = rt_full.metrics();
+        let iters = km_full.n_iter as u64;
+        assert_eq!(m_full.tasks_for("kmeans.reduce_update"), iters);
+        assert_eq!(m_full.tasks_for("kmeans.update"), 0);
+        assert!(
+            m_full.total_tasks() < m_off.total_tasks(),
+            "full {} !< off {}",
+            m_full.total_tasks(),
+            m_off.total_tasks()
         );
     }
 

@@ -241,6 +241,46 @@ mod tests {
     }
 
     #[test]
+    fn fit_then_score_reuses_gram_via_cse_and_matches_off() {
+        let off = Runtime::local(2);
+        let (x_off, data) = stretched(&off, 64);
+        let mut p_off = Pca::new(2);
+        p_off.fit(&x_off, None).unwrap();
+        let y_off = creation::zeros(&off, (64, 1), (16, 1)).unwrap();
+        let s_off = p_off.score(&x_off, &y_off).unwrap();
+
+        let full = Runtime::local(2).with_optimizer(crate::plan::Level::Full);
+        let x = creation::from_matrix(&full, &data, (16, 3)).unwrap();
+        let mut p = Pca::new(2);
+        p.fit(&x, None).unwrap();
+        assert_eq!(
+            p.components
+                .as_ref()
+                .unwrap()
+                .max_abs_diff(p_off.components.as_ref().unwrap()),
+            0.0,
+            "components bit-identical across optimizer levels"
+        );
+        assert_eq!(
+            p.mean.as_ref().unwrap().max_abs_diff(p_off.mean.as_ref().unwrap()),
+            0.0
+        );
+
+        // score() recomputes X'X on the same single-assignment block ids:
+        // the memo entry from fit survives the intervening collect epochs
+        // (CSE_MAX_AGE) and short-circuits the gram to zero tasks.
+        let deduped_after_fit = full.metrics().tasks_deduped;
+        let y = creation::zeros(&full, (64, 1), (16, 1)).unwrap();
+        let s = p.score(&x, &y).unwrap();
+        assert_eq!(s, s_off, "score bit-identical across optimizer levels");
+        assert!(
+            full.metrics().tasks_deduped > deduped_after_fit,
+            "score's gram must hit fit's memo entry"
+        );
+        assert!(full.metrics().total_tasks() < off.metrics().total_tasks());
+    }
+
+    #[test]
     fn rejects_bad_component_count() {
         let rt = Runtime::local(1);
         let x = creation::zeros(&rt, (8, 2), (4, 2)).unwrap();

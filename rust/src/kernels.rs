@@ -65,6 +65,10 @@ pub enum UnaryKind {
     /// `x.exp()` — transcendental, runs scalar under both tables.
     Exp,
     Neg,
+    /// `max(x, 0)` as `if x > 0 { x } else { 0 }` — NaN and `-0.0` both map
+    /// to `+0.0`, which is exactly what the lane op (`and(x, x > 0)`)
+    /// produces, so the two tables agree bitwise.
+    Relu,
 }
 
 impl UnaryKind {
@@ -80,6 +84,13 @@ impl UnaryKind {
             UnaryKind::Abs => x.abs(),
             UnaryKind::Exp => x.exp(),
             UnaryKind::Neg => -x,
+            UnaryKind::Relu => {
+                if x > 0.0 {
+                    x
+                } else {
+                    0.0
+                }
+            }
         }
     }
 }
@@ -133,6 +144,14 @@ pub struct Kernels {
     /// Squared Euclidean distance between two equal-length vectors,
     /// 8-bin striped accumulation + fixed reduction tree.
     pub dist2: fn(&[f32], &[f32]) -> f32,
+    /// Fused elementwise epilogue: apply the whole `ops` chain to every
+    /// element in one traversal (the planner grafts scale/bias/ReLU chains
+    /// onto gemm outputs while the tile is still cache-hot). Elementwise
+    /// unary ops commute with traversal order, so a per-element fold is
+    /// bit-identical to applying the chain as sequential full passes — the
+    /// contract the property test pins. Chains containing a transcendental
+    /// (`Pow`/`Exp`) run the scalar fold under both tables.
+    pub epilogue: fn(&mut [f32], &[UnaryKind]),
 }
 
 // ---------------------------------------------------------------------------
@@ -188,6 +207,18 @@ fn reduce8(b: &[f32; 8]) -> f32 {
     (s0 + s2) + (s1 + s3)
 }
 
+/// Per-element fold of a whole unary chain — one traversal, chain applied
+/// in order to each element. The oracle for the vectorized epilogue.
+fn epilogue_scalar(xs: &mut [f32], ops: &[UnaryKind]) {
+    for x in xs {
+        let mut v = *x;
+        for op in ops {
+            v = op.apply(v);
+        }
+        *x = v;
+    }
+}
+
 /// Scalar dist2 with the same striped accumulation the 8-lane kernel uses:
 /// element `i` lands in bin `i % 8`, bins combine through [`reduce8`].
 fn dist2_scalar(x: &[f32], y: &[f32]) -> f32 {
@@ -207,6 +238,7 @@ static SCALAR: Kernels = Kernels {
     binary: binary_scalar,
     gemm_acc: gemm_acc_scalar,
     dist2: dist2_scalar,
+    epilogue: epilogue_scalar,
 };
 
 // ---------------------------------------------------------------------------
@@ -225,6 +257,7 @@ mod avx2 {
         binary: binary,
         gemm_acc: gemm_acc,
         dist2: dist2,
+        epilogue: epilogue,
     };
 
     fn unary(op: UnaryKind, xs: &mut [f32]) {
@@ -246,6 +279,11 @@ mod avx2 {
     fn dist2(x: &[f32], y: &[f32]) -> f32 {
         // SAFETY: as above — avx2 verified before table selection.
         unsafe { dist2_impl(x, y) }
+    }
+
+    fn epilogue(xs: &mut [f32], ops: &[UnaryKind]) {
+        // SAFETY: as above — avx2 verified before table selection.
+        unsafe { epilogue_impl(xs, ops) }
     }
 
     #[target_feature(enable = "avx2")]
@@ -292,6 +330,18 @@ mod avx2 {
                 while i + 8 <= n {
                     let v = _mm256_loadu_ps(p.add(i));
                     _mm256_storeu_ps(p.add(i), _mm256_xor_ps(v, mask));
+                    i += 8;
+                }
+            }
+            UnaryKind::Relu => {
+                // `and(x, x > 0)`: lanes where x > 0 keep their bits, all
+                // others (including NaN and -0.0) become +0.0 — exactly the
+                // scalar branch's result.
+                let zero = _mm256_setzero_ps();
+                while i + 8 <= n {
+                    let v = _mm256_loadu_ps(p.add(i));
+                    let keep = _mm256_cmp_ps::<_CMP_GT_OQ>(v, zero);
+                    _mm256_storeu_ps(p.add(i), _mm256_and_ps(v, keep));
                     i += 8;
                 }
             }
@@ -436,6 +486,58 @@ mod avx2 {
                 }
             }
             kb = kend;
+        }
+    }
+
+    /// Vectorized epilogue: the whole unary chain stays in one register per
+    /// 8-lane strip, applied op by op (the same order the scalar fold
+    /// uses). Chains containing a transcendental fall back to the scalar
+    /// fold wholesale — mixing lane ops with scalar `powf`/`exp` per strip
+    /// would still be bit-identical, but delegating keeps one oracle.
+    #[target_feature(enable = "avx2")]
+    unsafe fn epilogue_impl(xs: &mut [f32], ops: &[UnaryKind]) {
+        if ops
+            .iter()
+            .any(|op| matches!(op, UnaryKind::Pow(_) | UnaryKind::Exp))
+        {
+            for x in xs {
+                let mut v = *x;
+                for op in ops {
+                    v = op.apply(v);
+                }
+                *x = v;
+            }
+            return;
+        }
+        let n = xs.len();
+        let p = xs.as_mut_ptr();
+        let sign = _mm256_set1_ps(-0.0);
+        let zero = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let mut v = _mm256_loadu_ps(p.add(i));
+            for &op in ops {
+                v = match op {
+                    UnaryKind::AddScalar(s) => _mm256_add_ps(v, _mm256_set1_ps(s)),
+                    UnaryKind::MulScalar(s) => _mm256_mul_ps(v, _mm256_set1_ps(s)),
+                    UnaryKind::Sqrt => _mm256_sqrt_ps(v),
+                    UnaryKind::Abs => _mm256_andnot_ps(sign, v),
+                    UnaryKind::Neg => _mm256_xor_ps(v, sign),
+                    UnaryKind::Relu => _mm256_and_ps(v, _mm256_cmp_ps::<_CMP_GT_OQ>(v, zero)),
+                    // Excluded above.
+                    UnaryKind::Pow(_) | UnaryKind::Exp => unreachable!(),
+                };
+            }
+            _mm256_storeu_ps(p.add(i), v);
+            i += 8;
+        }
+        while i < n {
+            let mut v = *p.add(i);
+            for op in ops {
+                v = op.apply(v);
+            }
+            *p.add(i) = v;
+            i += 1;
         }
     }
 
@@ -738,6 +840,7 @@ mod tests {
             UnaryKind::Abs,
             UnaryKind::Exp,
             UnaryKind::Neg,
+            UnaryKind::Relu,
         ] {
             for n in [0usize, 1, 7, 8, 9, 64, 133] {
                 let (base, _) = vecs(n);
@@ -791,6 +894,59 @@ mod tests {
             let ds = (scalar().dist2)(&x, &y);
             let dv = (detected().dist2)(&x, &y);
             assert_eq!(ds.to_bits(), dv.to_bits(), "dist2 len {n}");
+        }
+    }
+
+    #[test]
+    fn relu_edge_cases_match_scalar_branch() {
+        let xs = [f32::NAN, -0.0, 0.0, -3.5, 2.25, f32::INFINITY, f32::NEG_INFINITY, 1e-38];
+        let mut s = xs;
+        let mut v = xs;
+        (scalar().unary)(UnaryKind::Relu, &mut s);
+        (detected().unary)(UnaryKind::Relu, &mut v);
+        let sb: Vec<u32> = s.iter().map(|x| x.to_bits()).collect();
+        let vb: Vec<u32> = v.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(sb, vb);
+        // NaN and -0.0 both land on +0.0 exactly.
+        assert_eq!(s[0].to_bits(), 0.0f32.to_bits());
+        assert_eq!(s[1].to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn epilogue_bit_identical_to_sequential_unary_passes() {
+        let chains: &[&[UnaryKind]] = &[
+            &[],
+            &[UnaryKind::Relu],
+            &[UnaryKind::MulScalar(0.5), UnaryKind::AddScalar(-1.25)],
+            &[
+                UnaryKind::MulScalar(-2.0),
+                UnaryKind::AddScalar(3.0),
+                UnaryKind::Relu,
+            ],
+            &[UnaryKind::Abs, UnaryKind::Sqrt, UnaryKind::Neg],
+            // Transcendental in the chain: both tables run the scalar fold.
+            &[UnaryKind::MulScalar(0.1), UnaryKind::Exp, UnaryKind::Relu],
+            &[UnaryKind::Abs, UnaryKind::Pow(1.5)],
+        ];
+        for ops in chains {
+            for n in [0usize, 1, 7, 8, 9, 64, 133] {
+                let (base, _) = vecs(n);
+                // Oracle: the chain as sequential full passes of the scalar
+                // unary kernel — what the unfused task stream computes.
+                let mut seq = base.clone();
+                for &op in *ops {
+                    (scalar().unary)(op, &mut seq);
+                }
+                let mut s = base.clone();
+                (scalar().epilogue)(&mut s, ops);
+                let mut v = base.clone();
+                (detected().epilogue)(&mut v, ops);
+                let qb: Vec<u32> = seq.iter().map(|x| x.to_bits()).collect();
+                let sb: Vec<u32> = s.iter().map(|x| x.to_bits()).collect();
+                let vb: Vec<u32> = v.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(qb, sb, "{ops:?} len {n} (scalar fold vs passes)");
+                assert_eq!(sb, vb, "{ops:?} len {n} (simd vs scalar)");
+            }
         }
     }
 

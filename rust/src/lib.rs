@@ -52,6 +52,13 @@
 //! micro-batcher with admission control — answers bit-identical to batch
 //! `predict`. The [`serving_guide`] module embeds `docs/SERVING.md`.
 //!
+//! Whole-plan optimization goes through the **plan layer** ([`plan`]):
+//! common-subexpression elimination over pending subgraphs, elementwise
+//! epilogues grafted into gemm tiles while they are cache-hot, and
+//! dead-block pre-release — behind the one fluent construction front door,
+//! [`tasking::Runtime::builder`], which carries the optimizer
+//! [`plan::Level`]. The [`planner_guide`] module embeds `docs/PLANNER.md`.
+//!
 //! ```
 //! use rustdslib::{dsarray::creation, tasking::Runtime};
 //!
@@ -74,6 +81,7 @@ pub mod dataset;
 pub mod dsarray;
 pub mod estimators;
 pub mod kernels;
+pub mod plan;
 pub mod runtime;
 pub mod serving;
 pub mod storage;
@@ -113,6 +121,13 @@ pub mod kernels_guide {}
 /// runs under `cargo test --doc`).
 #[doc = include_str!("../../docs/SERVING.md")]
 pub mod serving_guide {}
+
+/// Guide: the plan layer — CSE epoch semantics, gemm epilogue grafting,
+/// dead-block pre-release, `RuntimeBuilder`, and the `explain()` output
+/// format (`docs/PLANNER.md`, embedded so its examples run under
+/// `cargo test --doc`).
+#[doc = include_str!("../../docs/PLANNER.md")]
+pub mod planner_guide {}
 
 pub use storage::{Block, BlockMeta, CsrMatrix, DenseMatrix};
 pub use tasking::{Future, Runtime, SimConfig, SimReport};

@@ -273,7 +273,10 @@ fn ablation(args: &Args) -> Result<()> {
 /// cost model's worker-side constants are sanity-checked against.
 fn calibrate(args: &Args) -> Result<()> {
     let cfg = Config::resolve(args)?;
-    let rt = Runtime::local(cfg.local_workers);
+    let rt = Runtime::builder()
+        .workers(cfg.local_workers)
+        .optimizer(cfg.optimizer)
+        .build()?;
     let t0 = std::time::Instant::now();
     let a = creation::random(&rt, (2048, 512), (128, 128), cfg.seed)?;
     rt.barrier()?;
@@ -306,7 +309,7 @@ fn calibrate(args: &Args) -> Result<()> {
 
 fn demo(args: &Args) -> Result<()> {
     let cfg = Config::resolve(args)?;
-    let rt = cfg.runtime()?;
+    let rt = Runtime::builder().from_config(&cfg).build()?;
     if rt.is_sim() {
         println!("demo needs a value-producing backend; use --backend local|cluster");
         return Ok(());
@@ -351,7 +354,7 @@ fn demo(args: &Args) -> Result<()> {
 /// batch path (see `docs/SERVING.md`).
 fn fit(args: &Args) -> Result<()> {
     let cfg = Config::resolve(args)?;
-    let rt = cfg.runtime()?;
+    let rt = Runtime::builder().from_config(&cfg).build()?;
     if rt.is_sim() {
         anyhow::bail!("fit needs a value-producing backend; use --backend local|cluster");
     }
@@ -409,7 +412,7 @@ fn fit(args: &Args) -> Result<()> {
 /// parse it — port 0 picks a free port) and a final metrics line on exit.
 fn serve(args: &Args) -> Result<()> {
     let cfg = Config::resolve(args)?;
-    let rt = cfg.runtime()?;
+    let rt = Runtime::builder().from_config(&cfg).build()?;
     if rt.is_sim() {
         anyhow::bail!("serve needs a value-producing backend; use --backend local|cluster");
     }

@@ -1,0 +1,306 @@
+//! [`RuntimeBuilder`] — the single public construction path for runtimes.
+//!
+//! Nine PRs of features left runtime construction sprawled across
+//! `LocalOptions`, `ClusterOptions`, and `Config::runtime()`; the builder
+//! replaces all of them with one fluent front door that also carries the
+//! plan-layer [`Level`] knob:
+//!
+//! ```
+//! use rustdslib::config::Backend;
+//! use rustdslib::plan::Level;
+//! use rustdslib::tasking::Runtime;
+//!
+//! let rt = Runtime::builder()
+//!     .backend(Backend::Local)
+//!     .workers(2)
+//!     .memory_budget_mb(512)
+//!     .optimizer(Level::Full)
+//!     .build()
+//!     .unwrap();
+//! assert_eq!(rt.planner().level(), Level::Full);
+//! ```
+//!
+//! The legacy constructors (`Runtime::local` and friends, the deprecated
+//! `LocalOptions::new` / `ClusterOptions::spawn` / `Config::runtime`
+//! shims) stay compilable and default to [`Level::Off`] — exactly the
+//! pre-planner task streams. The builder defaults to [`Level::Full`].
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::{Backend, Config};
+use crate::tasking::{ClusterOptions, LocalOptions, Runtime, SimConfig, TransferMode};
+
+use super::Level;
+
+/// Fluent builder for every [`Runtime`] backend — see the module docs.
+/// Obtain one via [`Runtime::builder`].
+#[derive(Clone, Debug)]
+pub struct RuntimeBuilder {
+    backend: Backend,
+    /// Executor threads: local worker threads, or the cluster
+    /// coordinator's thread count. `None` picks the backend default.
+    workers: Option<usize>,
+    cluster_workers: usize,
+    cluster_addrs: Vec<String>,
+    memory_budget_bytes: Option<u64>,
+    spill_dir: Option<PathBuf>,
+    recovery: bool,
+    replication: usize,
+    heartbeat_ms: u64,
+    straggler_factor: f64,
+    transfer: Option<TransferMode>,
+    program: Option<PathBuf>,
+    sim: Option<SimConfig>,
+    optimizer: Level,
+}
+
+impl Default for RuntimeBuilder {
+    fn default() -> Self {
+        Self {
+            backend: Backend::Local,
+            workers: None,
+            cluster_workers: 2,
+            cluster_addrs: Vec::new(),
+            memory_budget_bytes: None,
+            spill_dir: None,
+            recovery: true,
+            replication: 1,
+            heartbeat_ms: 0,
+            straggler_factor: 0.0,
+            transfer: None,
+            program: None,
+            sim: None,
+            optimizer: Level::Full,
+        }
+    }
+}
+
+impl RuntimeBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Execution backend (default [`Backend::Local`]).
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    /// Executor threads: local worker threads, or the cluster
+    /// coordinator's executor-thread count.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = Some(n);
+        self
+    }
+
+    /// Worker processes the cluster backend spawns on loopback when no
+    /// explicit addresses are given (default 2).
+    pub fn cluster_workers(mut self, n: usize) -> Self {
+        self.cluster_workers = n;
+        self
+    }
+
+    /// Connect to already-running `dsarray worker` processes instead of
+    /// spawning (cluster backend).
+    pub fn cluster_addrs(mut self, addrs: Vec<String>) -> Self {
+        self.cluster_addrs = addrs;
+        self
+    }
+
+    /// Out-of-core resident-set budget in bytes (local: the spill store's
+    /// budget; cluster: per-worker budget).
+    pub fn memory_budget_bytes(mut self, bytes: u64) -> Self {
+        self.memory_budget_bytes = (bytes > 0).then_some(bytes);
+        self
+    }
+
+    /// Out-of-core resident-set budget in MiB — the common spelling.
+    pub fn memory_budget_mb(self, mb: u64) -> Self {
+        self.memory_budget_bytes(mb * 1024 * 1024)
+    }
+
+    /// Parent directory for spill files (only used with a budget; the
+    /// runtime creates and removes its own subdirectory under it).
+    pub fn spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.spill_dir = Some(dir.into());
+        self
+    }
+
+    /// Lineage-based recovery of dead cluster workers (default on).
+    pub fn recovery(mut self, on: bool) -> Self {
+        self.recovery = on;
+        self
+    }
+
+    /// Copies of each block kept on distinct cluster workers (default 1 =
+    /// no replication).
+    pub fn replication(mut self, k: usize) -> Self {
+        self.replication = k.max(1);
+        self
+    }
+
+    /// Heartbeat interval for proactive cluster liveness probes in
+    /// milliseconds (default 0 = reactive detection only).
+    pub fn heartbeat_ms(mut self, ms: u64) -> Self {
+        self.heartbeat_ms = ms;
+        self
+    }
+
+    /// Straggler speculation threshold (default 0 = off; see
+    /// `ClusterOptions::with_straggler_factor`).
+    pub fn straggler_factor(mut self, f: f64) -> Self {
+        self.straggler_factor = f.max(0.0);
+        self
+    }
+
+    /// Cluster block-transfer mode (default [`TransferMode::Pull`]).
+    pub fn transfer(mut self, t: TransferMode) -> Self {
+        self.transfer = Some(t);
+        self
+    }
+
+    /// Worker binary to spawn for loopback cluster workers (default: the
+    /// current executable).
+    pub fn program(mut self, p: impl Into<PathBuf>) -> Self {
+        self.program = Some(p.into());
+        self
+    }
+
+    /// Cost model for the simulator backend (default: MareNostrum
+    /// calibration at the configured worker count).
+    pub fn sim_config(mut self, s: SimConfig) -> Self {
+        self.sim = Some(s);
+        self
+    }
+
+    /// Plan-layer optimization level (default [`Level::Full`]; the legacy
+    /// constructors default to [`Level::Off`]).
+    pub fn optimizer(mut self, level: Level) -> Self {
+        self.optimizer = level;
+        self
+    }
+
+    /// Absorb a resolved [`Config`] (TOML file + CLI flags) into the
+    /// builder; later fluent calls still override individual knobs.
+    pub fn from_config(mut self, cfg: &Config) -> Self {
+        self.backend = cfg.backend;
+        self.workers = Some(cfg.local_workers);
+        self.cluster_workers = cfg.cluster_workers;
+        self.cluster_addrs = cfg.cluster_addrs.clone();
+        self.memory_budget_bytes = cfg.memory_budget_bytes;
+        self.spill_dir = cfg.spill_dir.as_ref().map(PathBuf::from);
+        self.recovery = cfg.recovery;
+        self.replication = cfg.replicate_blocks.max(1);
+        self.heartbeat_ms = cfg.heartbeat_ms;
+        self.straggler_factor = cfg.straggler_factor;
+        self.sim = Some(cfg.sim.clone());
+        self.optimizer = cfg.optimizer;
+        self
+    }
+
+    /// Construct the runtime. Local and cluster construction can fail
+    /// (spill-store setup, worker spawn/connect); the simulator cannot.
+    pub fn build(self) -> Result<Runtime> {
+        let rt = match self.backend {
+            Backend::Local => {
+                let workers = self.workers.unwrap_or_else(|| {
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+                });
+                Runtime::local_with_options(LocalOptions {
+                    workers,
+                    memory_budget_bytes: self.memory_budget_bytes,
+                    // The spill directory only matters under a budget —
+                    // mirroring the old Config::local_runtime contract.
+                    spill_dir: self.memory_budget_bytes.and(self.spill_dir),
+                })?
+            }
+            Backend::Sim => {
+                let sim = self
+                    .sim
+                    .unwrap_or_else(|| SimConfig::with_workers(self.workers.unwrap_or(48)));
+                Runtime::sim(sim)
+            }
+            Backend::Cluster => {
+                let (addrs, spawn) = if self.cluster_addrs.is_empty() {
+                    (Vec::new(), self.cluster_workers)
+                } else {
+                    (self.cluster_addrs, 0)
+                };
+                Runtime::cluster(ClusterOptions {
+                    addrs,
+                    spawn,
+                    program: self.program,
+                    threads: self.workers.unwrap_or(2).max(1),
+                    transfer: self.transfer.unwrap_or_default(),
+                    worker_budget_bytes: self.memory_budget_bytes,
+                    recovery: self.recovery,
+                    replicate: self.replication,
+                    heartbeat_ms: self.heartbeat_ms,
+                    straggler_factor: self.straggler_factor,
+                })?
+            }
+        };
+        Ok(rt.with_optimizer(self.optimizer))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_local_full() {
+        let rt = Runtime::builder().workers(2).build().unwrap();
+        assert!(!rt.is_sim());
+        assert_eq!(rt.planner().level(), Level::Full);
+    }
+
+    #[test]
+    fn builder_optimizer_and_backend_knobs() {
+        let rt = Runtime::builder()
+            .workers(1)
+            .optimizer(Level::Off)
+            .build()
+            .unwrap();
+        assert_eq!(rt.planner().level(), Level::Off);
+
+        let rt = Runtime::builder()
+            .backend(Backend::Sim)
+            .workers(16)
+            .optimizer(Level::Cse)
+            .build()
+            .unwrap();
+        assert!(rt.is_sim());
+        assert_eq!(rt.planner().level(), Level::Cse);
+    }
+
+    #[test]
+    fn builder_absorbs_config_and_budget() {
+        let mut cfg = Config::default();
+        cfg.local_workers = 2;
+        cfg.memory_budget_bytes = Some(4 << 20);
+        cfg.optimizer = Level::Cse;
+        let rt = Runtime::builder().from_config(&cfg).build().unwrap();
+        assert_eq!(rt.planner().level(), Level::Cse);
+        // Fluent override after from_config still wins.
+        let rt = Runtime::builder()
+            .from_config(&cfg)
+            .optimizer(Level::Off)
+            .build()
+            .unwrap();
+        assert_eq!(rt.planner().level(), Level::Off);
+    }
+
+    #[test]
+    fn budget_helpers_convert_and_clamp() {
+        let b = RuntimeBuilder::new().memory_budget_mb(2);
+        assert_eq!(b.memory_budget_bytes, Some(2 << 20));
+        let b = RuntimeBuilder::new().memory_budget_bytes(0);
+        assert_eq!(b.memory_budget_bytes, None);
+        let b = RuntimeBuilder::new().replication(0).straggler_factor(-2.0);
+        assert_eq!(b.replication, 1);
+        assert_eq!(b.straggler_factor, 0.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! Deferred blocked gemm with graftable elementwise epilogues.
+//!
+//! At [`Level::Full`], `matmul`/`tn_matmul` do not submit tasks: they
+//! return a ds-array carrying a [`GemmSpec`] — the pending multiply's
+//! operand grids plus an (initially empty) epilogue chain. Unary
+//! elementwise ops applied to that pending result extend the chain instead
+//! of going through the expression engine, so when the gemm is forced each
+//! output tile runs gemm-accumulate and then the whole epilogue through the
+//! kernel vtable's `epilogue` entry while the tile is still cache-hot — one
+//! task where the eager path paid one gemm task plus one fused-elementwise
+//! task per block (plus a full extra traversal of the output).
+//!
+//! The spec doubles as the CSE identity for the multiply: [`GemmSpec::key`]
+//! hashes kind, operand grids, input [`DataId`]s, and the epilogue chain,
+//! so a repeated Gram matrix or `XᵀY` inside an estimator iteration — same
+//! single-assignment inputs, same epilogue — collapses to a memo hit.
+//!
+//! Force-time semantics (memoization, early operand release, the credit a
+//! later `Drop` consumes) mirror `dsarray/expr.rs`'s [`ExprState`] exactly;
+//! see `DsArray::force_gemm` in `dsarray/linalg.rs` for the lowering.
+//!
+//! [`Level::Full`]: super::Level
+//! [`ExprState`]: crate::dsarray::DsArray
+//! [`DataId`]: crate::tasking::DataId
+
+use std::sync::{Arc, Mutex};
+
+use crate::kernels::UnaryKind;
+use crate::tasking::Future;
+
+use super::PlanKey;
+use crate::dsarray::DsArray;
+
+/// Which blocked multiply a [`GemmSpec`] lowers to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKind {
+    /// `A @ B` — `dsarray.matmul.block` shapes: output block (i, j) reads
+    /// block-row i of A and block-col j of B.
+    Nn,
+    /// `Aᵀ @ B` without materializing the transpose —
+    /// `dsarray.tn_matmul.block` shapes: output block (i, j) reads
+    /// block-col i of A and block-col j of B.
+    Tn,
+}
+
+/// Mutable shared state of one pending gemm (shared by clones of the
+/// deferred array) — the deferred-gemm twin of `ExprState`.
+#[derive(Default)]
+pub struct GemmState {
+    /// Memoized materialization: filled by the first force, reused by later
+    /// consumers so the multiply executes once.
+    pub forced: Option<DsArray>,
+    /// Set when force released this spec's operand handle references early
+    /// (dead-block pre-release); exactly one subsequent `Drop` consumes the
+    /// credit instead of releasing again.
+    pub release_credit: bool,
+}
+
+/// A pending blocked multiply plus its grafted elementwise epilogue,
+/// carried by a deferred [`DsArray`].
+#[derive(Clone)]
+pub struct GemmSpec {
+    pub kind: GemmKind,
+    /// Row-major grid of the left operand's block futures.
+    pub a: Vec<Future>,
+    pub a_grid: (usize, usize),
+    /// Row-major grid of the right operand's block futures.
+    pub b: Vec<Future>,
+    pub b_grid: (usize, usize),
+    /// Logical contraction length (for cost hints — `A.cols` for Nn,
+    /// `A.rows` for Tn).
+    pub k_total: usize,
+    /// Logical shape of the result.
+    pub out_shape: (usize, usize),
+    /// Regular block shape of the result.
+    pub out_block_shape: (usize, usize),
+    /// Unary elementwise ops grafted onto every output tile, applied in
+    /// order while the tile is cache-hot.
+    pub epilogue: Vec<UnaryKind>,
+    pub state: Arc<Mutex<GemmState>>,
+}
+
+impl GemmSpec {
+    /// Output grid dimensions (block rows, block cols).
+    pub fn out_grid(&self) -> (usize, usize) {
+        match self.kind {
+            GemmKind::Nn => (self.a_grid.0, self.b_grid.1),
+            GemmKind::Tn => (self.a_grid.1, self.b_grid.1),
+        }
+    }
+
+    /// Tasks this plan submits when forced — one per output block (the same
+    /// count the eager path paid for the multiply alone).
+    pub fn n_tasks(&self) -> usize {
+        let (gr, gc) = self.out_grid();
+        gr * gc
+    }
+
+    /// Every operand future, A grid then B grid — the references this spec
+    /// owns (retained at construction, released early at force or by the
+    /// owning array's `Drop`). A Gram matrix lists its single operand
+    /// twice; the double retain/release is balanced.
+    pub fn operands(&self) -> Vec<Future> {
+        let mut v = Vec::with_capacity(self.a.len() + self.b.len());
+        v.extend_from_slice(&self.a);
+        v.extend_from_slice(&self.b);
+        v
+    }
+
+    /// Canonical CSE key: kind, operand grids + ids, epilogue chain. Input
+    /// ids are single-assignment, so equal keys mean the forced plans would
+    /// compute identical values.
+    pub fn key(&self) -> u128 {
+        let name = match self.kind {
+            GemmKind::Nn => "plan.gemm.nn",
+            GemmKind::Tn => "plan.gemm.tn",
+        };
+        let mut k = PlanKey::op(name)
+            .u64(self.a_grid.0 as u64)
+            .u64(self.a_grid.1 as u64)
+            .ids(&self.a)
+            .u64(self.b_grid.0 as u64)
+            .u64(self.b_grid.1 as u64)
+            .ids(&self.b);
+        for &op in &self.epilogue {
+            k = k.unary(op);
+        }
+        k.finish()
+    }
+
+    /// Task name the lowering uses: the legacy block-gemm names when no
+    /// epilogue is grafted (so `Level::Cse` and memo-miss `Full` runs keep
+    /// the pre-planner task streams observable), `.fused` variants once an
+    /// epilogue rides along.
+    pub fn task_name(&self) -> &'static str {
+        match (self.kind, self.epilogue.is_empty()) {
+            (GemmKind::Nn, true) => "dsarray.matmul.block",
+            (GemmKind::Nn, false) => "dsarray.matmul.fused",
+            (GemmKind::Tn, true) => "dsarray.tn_matmul.block",
+            (GemmKind::Tn, false) => "dsarray.tn_matmul.fused",
+        }
+    }
+
+    /// One-line human rendering for [`DsArray::explain`].
+    pub fn describe(&self) -> String {
+        let (gr, gc) = self.out_grid();
+        let op = match self.kind {
+            GemmKind::Nn => "A@B",
+            GemmKind::Tn => "Aᵀ@B",
+        };
+        let mut s = format!(
+            "gemm {op}: {}x{} · {}x{} grids → {gr}x{gc} ({} tasks, k={})",
+            self.a_grid.0,
+            self.a_grid.1,
+            self.b_grid.0,
+            self.b_grid.1,
+            self.n_tasks(),
+            self.k_total,
+        );
+        if !self.epilogue.is_empty() {
+            s.push_str(" epilogue:");
+            for op in &self.epilogue {
+                s.push_str(&format!(" {op:?}"));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::BlockMeta;
+
+    fn fut(id: u32) -> Future {
+        Future {
+            id,
+            meta: BlockMeta::dense(2, 2),
+        }
+    }
+
+    fn spec(kind: GemmKind, a_ids: &[u32], b_ids: &[u32], epilogue: Vec<UnaryKind>) -> GemmSpec {
+        GemmSpec {
+            kind,
+            a: a_ids.iter().map(|&i| fut(i)).collect(),
+            a_grid: (2, 2),
+            b: b_ids.iter().map(|&i| fut(i)).collect(),
+            b_grid: (2, 2),
+            k_total: 4,
+            out_shape: (4, 4),
+            out_block_shape: (2, 2),
+            epilogue,
+            state: Arc::default(),
+        }
+    }
+
+    #[test]
+    fn geometry_and_task_names() {
+        let nn = spec(GemmKind::Nn, &[1, 2, 3, 4], &[5, 6, 7, 8], vec![]);
+        assert_eq!(nn.out_grid(), (2, 2));
+        assert_eq!(nn.n_tasks(), 4);
+        assert_eq!(nn.task_name(), "dsarray.matmul.block");
+        assert_eq!(nn.operands().len(), 8);
+
+        let tn = spec(
+            GemmKind::Tn,
+            &[1, 2, 3, 4],
+            &[5, 6, 7, 8],
+            vec![UnaryKind::Relu],
+        );
+        assert_eq!(tn.task_name(), "dsarray.tn_matmul.fused");
+        assert!(tn.describe().contains("Relu"));
+        assert!(nn.describe().contains("4 tasks"));
+    }
+
+    #[test]
+    fn keys_separate_kind_ids_and_epilogue() {
+        let base = spec(GemmKind::Nn, &[1, 2, 3, 4], &[5, 6, 7, 8], vec![]);
+        let same = spec(GemmKind::Nn, &[1, 2, 3, 4], &[5, 6, 7, 8], vec![]);
+        assert_eq!(base.key(), same.key(), "structurally identical plans alias");
+
+        let tn = spec(GemmKind::Tn, &[1, 2, 3, 4], &[5, 6, 7, 8], vec![]);
+        assert_ne!(base.key(), tn.key());
+
+        let other_ids = spec(GemmKind::Nn, &[1, 2, 3, 9], &[5, 6, 7, 8], vec![]);
+        assert_ne!(base.key(), other_ids.key());
+
+        let scaled = spec(
+            GemmKind::Nn,
+            &[1, 2, 3, 4],
+            &[5, 6, 7, 8],
+            vec![UnaryKind::MulScalar(0.5)],
+        );
+        assert_ne!(base.key(), scaled.key());
+        let scaled2 = spec(
+            GemmKind::Nn,
+            &[1, 2, 3, 4],
+            &[5, 6, 7, 8],
+            vec![UnaryKind::MulScalar(0.25)],
+        );
+        assert_ne!(scaled.key(), scaled2.key(), "epilogue params key distinctly");
+
+        // A swapped grid split over the same flat id list keys distinctly.
+        let mut tall = spec(GemmKind::Nn, &[1, 2, 3, 4], &[5, 6, 7, 8], vec![]);
+        tall.a_grid = (4, 1);
+        assert_ne!(base.key(), tall.key());
+    }
+}

@@ -1,0 +1,457 @@
+//! Plan layer: the graph-level query optimizer between the dsarray op
+//! layer and task submission (ROADMAP item 5).
+//!
+//! PR 3's fused elementwise engine optimizes per-block chains; this module
+//! optimizes across whole pending subgraphs, in three moves:
+//!
+//! * **Common-subexpression elimination.** Structurally identical pending
+//!   subgraphs — same op, same input [`DataId`]s, same parameters — within
+//!   a `force()`/`collect` epoch collapse to one task set. Data ids are
+//!   single-assignment (PyCOMPSs renaming made explicit), so "same ids"
+//!   means *the same values, forever*: a memo hit can never observe a
+//!   mutated input, and memo entries never go stale. Epochs are therefore a
+//!   garbage-collection generation, not a correctness boundary: every
+//!   `collect`/`barrier` bumps the epoch, and entries untouched for
+//!   [`CSE_MAX_AGE`] generations (or past the [`CSE_CAPACITY`] FIFO) are
+//!   evicted and their memo references released. The memo holds one
+//!   application handle reference per memoized block, which also keeps the
+//!   in-place execution engine from ever mutating a memoized output (an
+//!   extra handle ref forbids exclusive grants).
+//!
+//! * **Epilogue grafting.** At [`Level::Full`], `matmul`/`tn_matmul` return
+//!   a *pending* gemm ([`GemmSpec`]) instead of submitting tasks; unary
+//!   elementwise ops applied to the pending result extend its epilogue
+//!   chain. At force time each output tile runs gemm-accumulate and then
+//!   the whole chain through the `epilogue` kernel-vtable entry — while the
+//!   tile is cache-hot — in one task. Bit-identicality is preserved because
+//!   elementwise unary ops commute with traversal order (a per-element fold
+//!   equals sequential full passes) and the vectorized epilogue is
+//!   property-tested against the scalar fold.
+//!
+//! * **Dead-block pre-release.** A deferred gemm retains its operand blocks
+//!   like any container; at force time it hands them to
+//!   `submit_batch_releasing`, dropping its references in the same
+//!   scheduler critical section that registers the reads. Operands whose
+//!   last consumer is the plan itself are reclaimed as soon as the gemm
+//!   tasks finish — the spill tier sees pressure later.
+//!
+//! The [`RuntimeBuilder`] (`Runtime::builder()`) is the single public
+//! construction path that carries the optimizer knob; legacy constructors
+//! default to [`Level::Off`], which preserves the pre-planner task streams
+//! exactly.
+//!
+//! [`DataId`]: crate::tasking::DataId
+
+pub mod builder;
+pub mod gemm;
+
+pub use builder::RuntimeBuilder;
+pub use gemm::{GemmKind, GemmSpec, GemmState};
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::kernels::UnaryKind;
+use crate::tasking::{DataId, Future};
+
+/// Optimization level of the plan layer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Level {
+    /// No planning: every op submits the exact task stream it submitted
+    /// before the plan layer existed. The default for the legacy
+    /// constructors (`Runtime::local` and friends), so exact-task-count
+    /// tests and recorded baselines stay valid.
+    #[default]
+    Off,
+    /// Common-subexpression elimination only — repeated subgraphs dedupe,
+    /// but every op still lowers to the legacy task shapes.
+    Cse,
+    /// CSE + gemm deferral with epilogue grafting + reduce-tail composition
+    /// in the estimator loops + dead-block pre-release. The default for
+    /// [`RuntimeBuilder`].
+    Full,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(Level::Off),
+            "cse" => Ok(Level::Cse),
+            "full" => Ok(Level::Full),
+            other => bail!("unknown optimizer level `{other}` (expected off|cse|full)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Cse => "cse",
+            Level::Full => "full",
+        }
+    }
+}
+
+/// Memoized subgraphs the CSE table holds before FIFO eviction kicks in.
+pub const CSE_CAPACITY: usize = 256;
+
+/// Epoch generations an entry survives untouched before the lazy sweep
+/// releases it (a PCA `fit` followed by `score` spans two collect epochs;
+/// eight gives cross-call reuse plenty of slack without pinning working
+/// sets forever).
+pub const CSE_MAX_AGE: u64 = 8;
+
+struct MemoEntry {
+    outputs: Vec<Future>,
+    /// Epoch of last insert or hit — the GC generation stamp.
+    epoch: u64,
+}
+
+#[derive(Default)]
+struct CseMemo {
+    entries: HashMap<u128, MemoEntry>,
+    /// Insertion-order FIFO for capacity eviction.
+    order: VecDeque<u128>,
+}
+
+/// Per-runtime planner: optimization level, the CSE memo table, and the
+/// plan-layer counters folded into [`crate::tasking::Metrics`] snapshots.
+/// Shared by `Runtime` clones behind an `Arc`.
+pub struct Planner {
+    level: Level,
+    epoch: AtomicU64,
+    memo: Mutex<CseMemo>,
+    tasks_deduped: AtomicU64,
+    blocks_prereleased: AtomicU64,
+}
+
+impl Planner {
+    pub fn new(level: Level) -> Self {
+        Self {
+            level,
+            epoch: AtomicU64::new(0),
+            memo: Mutex::new(CseMemo::default()),
+            tasks_deduped: AtomicU64::new(0),
+            blocks_prereleased: AtomicU64::new(0),
+        }
+    }
+
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    /// Whether subgraph memoization is on (`Cse` and `Full`).
+    pub fn cse_enabled(&self) -> bool {
+        self.level != Level::Off
+    }
+
+    /// Whether structural rewrites are on (gemm deferral, epilogue
+    /// grafting, reduce-tail composition) — `Full` only.
+    pub fn fuse_enabled(&self) -> bool {
+        self.level == Level::Full
+    }
+
+    /// Current collect/barrier epoch (the memo's GC generation).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Memoized outputs for `key`, if present. A hit refreshes the entry's
+    /// generation stamp and credits `tasks_avoided` to the dedup counter.
+    /// Always `None` at [`Level::Off`].
+    pub fn lookup(&self, key: u128, tasks_avoided: u64) -> Option<Vec<Future>> {
+        if !self.cse_enabled() {
+            return None;
+        }
+        let now = self.epoch();
+        let mut memo = self.memo.lock().unwrap_or_else(|e| e.into_inner());
+        let entry = memo.entries.get_mut(&key)?;
+        entry.epoch = now;
+        let outs = entry.outputs.clone();
+        drop(memo);
+        self.tasks_deduped.fetch_add(tasks_avoided, Ordering::Relaxed);
+        Some(outs)
+    }
+
+    /// Insert `outputs` under `key`. The caller must already hold one
+    /// application handle reference per output *for the memo* (retained
+    /// before calling); the returned futures are entries this insert
+    /// displaced — capacity FIFO or age sweep — whose memo references the
+    /// caller must release. No-op (returning `outputs` back for release)
+    /// at [`Level::Off`].
+    #[must_use = "displaced memo entries carry handle references that must be released"]
+    pub fn record(&self, key: u128, outputs: Vec<Future>) -> Vec<Future> {
+        if !self.cse_enabled() {
+            return outputs;
+        }
+        let now = self.epoch();
+        let mut memo = self.memo.lock().unwrap_or_else(|e| e.into_inner());
+        let mut displaced = Vec::new();
+        if let Some(old) = memo.entries.insert(
+            key,
+            MemoEntry {
+                outputs,
+                epoch: now,
+            },
+        ) {
+            // Two threads raced on the same subgraph: keep the newer tasks,
+            // hand the older entry's references back for release.
+            displaced.extend(old.outputs);
+        } else {
+            memo.order.push_back(key);
+        }
+        while memo.entries.len() > CSE_CAPACITY {
+            let Some(oldest) = memo.order.pop_front() else {
+                break;
+            };
+            if let Some(e) = memo.entries.remove(&oldest) {
+                displaced.extend(e.outputs);
+            }
+        }
+        displaced
+    }
+
+    /// Advance the collect/barrier epoch and sweep entries untouched for
+    /// [`CSE_MAX_AGE`] generations. Returns the swept entries' futures so
+    /// the caller can release the memo's handle references.
+    #[must_use = "swept memo entries carry handle references that must be released"]
+    pub fn bump_epoch(&self) -> Vec<Future> {
+        let now = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
+        if !self.cse_enabled() {
+            return Vec::new();
+        }
+        let mut memo = self.memo.lock().unwrap_or_else(|e| e.into_inner());
+        let mut swept = Vec::new();
+        memo.entries.retain(|_, e| {
+            if e.epoch + CSE_MAX_AGE < now {
+                swept.append(&mut e.outputs);
+                false
+            } else {
+                true
+            }
+        });
+        if !swept.is_empty() {
+            let entries = &memo.entries;
+            memo.order.retain(|k| entries.contains_key(k));
+        }
+        swept
+    }
+
+    /// Credit `n` operand blocks released inside a plan's own scheduler
+    /// critical section (dead-block pre-release).
+    pub fn note_prereleased(&self, n: u64) {
+        self.blocks_prereleased.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Tasks avoided by CSE memo hits so far.
+    pub fn tasks_deduped(&self) -> u64 {
+        self.tasks_deduped.load(Ordering::Relaxed)
+    }
+
+    /// Blocks pre-released by plan-layer early handle drops so far.
+    pub fn blocks_prereleased(&self) -> u64 {
+        self.blocks_prereleased.load(Ordering::Relaxed)
+    }
+
+    /// Live memoized subgraphs (test/debug visibility).
+    pub fn memo_len(&self) -> usize {
+        self.memo.lock().unwrap_or_else(|e| e.into_inner()).entries.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Canonical subgraph keys.
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+/// Second-lane seed so the two halves of the 128-bit key diverge — a
+/// collision must defeat both lanes at once.
+const LANE2_SEED: u64 = 0x9e3779b97f4a7c15;
+
+/// Canonical hash of a pending subgraph: op name, input [`DataId`]s, and
+/// every parameter that shapes the result. Two independent FNV-1a lanes
+/// form a 128-bit key, so the memo never has to compare full key material.
+/// Ids are single-assignment, which is what makes `op + ids + params` a
+/// sound identity for the *values* a subgraph would compute.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanKey {
+    h1: u64,
+    h2: u64,
+}
+
+impl PlanKey {
+    /// Start a key for the named op.
+    pub fn op(name: &str) -> Self {
+        Self {
+            h1: FNV_OFFSET,
+            h2: FNV_OFFSET ^ LANE2_SEED,
+        }
+        .bytes(name.as_bytes())
+    }
+
+    pub fn bytes(mut self, bs: &[u8]) -> Self {
+        for &b in bs {
+            self.h1 = (self.h1 ^ b as u64).wrapping_mul(FNV_PRIME);
+            self.h2 = (self.h2 ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    pub fn u64(self, v: u64) -> Self {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    pub fn f32(self, v: f32) -> Self {
+        // Bit pattern, not value: -0.0 and NaN payloads key distinctly,
+        // matching the bit-identical output contract.
+        self.bytes(&v.to_bits().to_le_bytes())
+    }
+
+    pub fn id(self, id: DataId) -> Self {
+        self.u64(id as u64)
+    }
+
+    /// Hash an input operand list — length first, so differently-split
+    /// concatenations can never alias.
+    pub fn ids(mut self, futs: &[Future]) -> Self {
+        self = self.u64(futs.len() as u64);
+        for f in futs {
+            self = self.id(f.id);
+        }
+        self
+    }
+
+    /// Hash one epilogue op (discriminant + parameter bits).
+    pub fn unary(self, op: UnaryKind) -> Self {
+        let (tag, param) = match op {
+            UnaryKind::AddScalar(s) => (0u64, s),
+            UnaryKind::MulScalar(s) => (1, s),
+            UnaryKind::Pow(e) => (2, e),
+            UnaryKind::Sqrt => (3, 0.0),
+            UnaryKind::Abs => (4, 0.0),
+            UnaryKind::Exp => (5, 0.0),
+            UnaryKind::Neg => (6, 0.0),
+            UnaryKind::Relu => (7, 0.0),
+        };
+        self.u64(tag).f32(param)
+    }
+
+    pub fn finish(self) -> u128 {
+        ((self.h1 as u128) << 64) | self.h2 as u128
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::BlockMeta;
+
+    fn fut(id: DataId) -> Future {
+        Future {
+            id,
+            meta: BlockMeta::dense(2, 2),
+        }
+    }
+
+    #[test]
+    fn level_parse_round_trips() {
+        for l in [Level::Off, Level::Cse, Level::Full] {
+            assert_eq!(Level::parse(l.as_str()).unwrap(), l);
+        }
+        assert!(Level::parse("max").is_err());
+        assert_eq!(Level::default(), Level::Off);
+    }
+
+    #[test]
+    fn plan_keys_separate_ops_ids_params_and_splits() {
+        let base = PlanKey::op("gram").ids(&[fut(1), fut(2)]).finish();
+        assert_eq!(
+            base,
+            PlanKey::op("gram").ids(&[fut(1), fut(2)]).finish(),
+            "deterministic"
+        );
+        assert_ne!(base, PlanKey::op("matmul").ids(&[fut(1), fut(2)]).finish());
+        assert_ne!(base, PlanKey::op("gram").ids(&[fut(1), fut(3)]).finish());
+        assert_ne!(base, PlanKey::op("gram").ids(&[fut(2), fut(1)]).finish());
+        // Length prefixes: [1,2]+[3] never aliases [1]+[2,3].
+        let a = PlanKey::op("x").ids(&[fut(1), fut(2)]).ids(&[fut(3)]).finish();
+        let b = PlanKey::op("x").ids(&[fut(1)]).ids(&[fut(2), fut(3)]).finish();
+        assert_ne!(a, b);
+        // Parameters and epilogue ops key distinctly.
+        assert_ne!(
+            PlanKey::op("e").unary(UnaryKind::AddScalar(1.0)).finish(),
+            PlanKey::op("e").unary(UnaryKind::AddScalar(2.0)).finish()
+        );
+        assert_ne!(
+            PlanKey::op("e").unary(UnaryKind::Sqrt).finish(),
+            PlanKey::op("e").unary(UnaryKind::Abs).finish()
+        );
+    }
+
+    #[test]
+    fn memo_hits_dedupe_and_misses_after_eviction() {
+        let p = Planner::new(Level::Cse);
+        let key = PlanKey::op("gram").ids(&[fut(7)]).finish();
+        assert!(p.lookup(key, 9).is_none());
+        assert_eq!(p.tasks_deduped(), 0);
+        let displaced = p.record(key, vec![fut(100)]);
+        assert!(displaced.is_empty());
+        let hit = p.lookup(key, 9).expect("memoized");
+        assert_eq!(hit[0].id, 100);
+        assert_eq!(p.tasks_deduped(), 9);
+        assert_eq!(p.memo_len(), 1);
+
+        // Capacity FIFO: over-filling displaces the oldest entries.
+        for i in 0..(CSE_CAPACITY as u32 + 10) {
+            let k = PlanKey::op("fill").u64(i as u64).finish();
+            let _ = p.record(k, vec![fut(1000 + i)]);
+        }
+        assert_eq!(p.memo_len(), CSE_CAPACITY);
+        assert!(p.lookup(key, 9).is_none(), "original entry displaced");
+    }
+
+    #[test]
+    fn epoch_sweep_releases_stale_entries_but_keeps_recent_hits() {
+        let p = Planner::new(Level::Full);
+        let stale = PlanKey::op("stale").finish();
+        let fresh = PlanKey::op("fresh").finish();
+        let _ = p.record(stale, vec![fut(1)]);
+        let _ = p.record(fresh, vec![fut(2)]);
+        // Age both entries right up to the horizon, refreshing only `fresh`.
+        for _ in 0..CSE_MAX_AGE {
+            let swept = p.bump_epoch();
+            assert!(swept.is_empty());
+            assert!(p.lookup(fresh, 1).is_some());
+        }
+        let swept = p.bump_epoch();
+        assert_eq!(swept.len(), 1, "stale entry swept");
+        assert_eq!(swept[0].id, 1);
+        assert!(p.lookup(stale, 1).is_none());
+        assert!(p.lookup(fresh, 1).is_some(), "refreshed entry survives");
+    }
+
+    #[test]
+    fn off_level_never_memoizes() {
+        let p = Planner::new(Level::Off);
+        assert!(!p.cse_enabled());
+        assert!(!p.fuse_enabled());
+        let key = PlanKey::op("gram").finish();
+        let returned = p.record(key, vec![fut(5)]);
+        assert_eq!(returned.len(), 1, "refs handed straight back");
+        assert!(p.lookup(key, 3).is_none());
+        assert_eq!(p.tasks_deduped(), 0);
+        assert_eq!(p.memo_len(), 0);
+    }
+
+    #[test]
+    fn fuse_enabled_only_at_full() {
+        assert!(!Planner::new(Level::Off).fuse_enabled());
+        assert!(!Planner::new(Level::Cse).fuse_enabled());
+        assert!(Planner::new(Level::Cse).cse_enabled());
+        assert!(Planner::new(Level::Full).fuse_enabled());
+        assert!(Planner::new(Level::Full).cse_enabled());
+    }
+}

@@ -165,11 +165,14 @@ pub struct ClusterOptions {
     pub straggler_factor: f64,
 }
 
-impl ClusterOptions {
-    /// Connect to existing workers at `addrs`.
-    pub fn connect(addrs: Vec<String>) -> Self {
+impl Default for ClusterOptions {
+    /// Connect-to-nothing baseline: no addresses, no spawns, two executor
+    /// threads, pull transfers, recovery on, no replication. Fill in
+    /// `addrs` or `spawn` with a struct literal, or go through
+    /// [`crate::tasking::Runtime::builder`].
+    fn default() -> Self {
         Self {
-            addrs,
+            addrs: Vec::new(),
             spawn: 0,
             program: None,
             threads: 2,
@@ -181,21 +184,33 @@ impl ClusterOptions {
             straggler_factor: 0.0,
         }
     }
+}
+
+impl ClusterOptions {
+    /// Connect to existing workers at `addrs`.
+    #[deprecated(
+        since = "0.11.0",
+        note = "use `Runtime::builder().backend(Backend::Cluster).cluster_addrs(addrs)` \
+                or a struct literal with `..Default::default()`"
+    )]
+    pub fn connect(addrs: Vec<String>) -> Self {
+        Self {
+            addrs,
+            ..Self::default()
+        }
+    }
 
     /// Spawn `n` worker processes on loopback and connect to them; they are
     /// shut down when the executor drops.
+    #[deprecated(
+        since = "0.11.0",
+        note = "use `Runtime::builder().backend(Backend::Cluster).cluster_workers(n)` \
+                or a struct literal with `..Default::default()`"
+    )]
     pub fn spawn(n: usize) -> Self {
         Self {
-            addrs: Vec::new(),
             spawn: n,
-            program: None,
-            threads: 2,
-            transfer: TransferMode::Pull,
-            worker_budget_bytes: None,
-            recovery: true,
-            replicate: 1,
-            heartbeat_ms: 0,
-            straggler_factor: 0.0,
+            ..Self::default()
         }
     }
 
@@ -2826,7 +2841,11 @@ mod tests {
     }
 
     fn cluster_rt(addrs: Vec<String>) -> Runtime {
-        Runtime::cluster(ClusterOptions::connect(addrs).with_threads(2)).unwrap()
+        Runtime::cluster(ClusterOptions {
+            addrs,
+            ..Default::default()
+        })
+        .unwrap()
     }
 
     fn stat_of(addr: &str) -> WorkerStat {
@@ -2997,9 +3016,12 @@ mod tests {
     fn relay_mode_moves_bytes_without_replication() {
         let addrs = vec![inproc_worker(None), inproc_worker(None)];
         let rt = Runtime::cluster(
-            ClusterOptions::connect(addrs.clone())
-                .with_threads(1)
-                .with_transfer(TransferMode::Relay),
+            ClusterOptions {
+                addrs: addrs.clone(),
+                threads: 1,
+                transfer: TransferMode::Relay,
+                ..Default::default()
+            },
         )
         .unwrap();
         let a = rt.put_block(dense(2.0));
@@ -3127,9 +3149,11 @@ mod tests {
     fn replicated_blocks_survive_death_without_replay() {
         let addrs = vec![inproc_worker(None), inproc_worker(None)];
         let rt = Runtime::cluster(
-            ClusterOptions::connect(addrs.clone())
-                .with_threads(2)
-                .with_replication(2),
+            ClusterOptions {
+                addrs: addrs.clone(),
+                replicate: 2,
+                ..Default::default()
+            },
         )
         .unwrap();
         let a = rt.put_block(dense(7.0));
@@ -3155,9 +3179,11 @@ mod tests {
     fn disabled_recovery_poisons_with_worker_address() {
         let addrs = vec![inproc_worker(None), inproc_worker(None)];
         let rt = Runtime::cluster(
-            ClusterOptions::connect(addrs.clone())
-                .with_threads(2)
-                .with_recovery(false),
+            ClusterOptions {
+                addrs: addrs.clone(),
+                recovery: false,
+                ..Default::default()
+            },
         )
         .unwrap();
         let a = rt.put_block(dense(3.0));
@@ -3290,9 +3316,11 @@ mod tests {
     fn heartbeat_declares_a_silent_worker_dead() {
         let addrs = vec![inproc_worker(None), inproc_worker(None)];
         let rt = Runtime::cluster(
-            ClusterOptions::connect(addrs.clone())
-                .with_threads(2)
-                .with_heartbeat_ms(20),
+            ClusterOptions {
+                addrs: addrs.clone(),
+                heartbeat_ms: 20,
+                ..Default::default()
+            },
         )
         .unwrap();
         let a = rt.put_block(dense(5.0)); // round-robin: lands on worker 0
@@ -3320,9 +3348,11 @@ mod tests {
             ..Default::default()
         });
         let rt = Runtime::cluster(
-            ClusterOptions::connect(vec![fast, slow])
-                .with_threads(2)
-                .with_straggler_factor(3.0),
+            ClusterOptions {
+                addrs: vec![fast, slow],
+                straggler_factor: 3.0,
+                ..Default::default()
+            },
         )
         .unwrap();
         // Establish a fast EWMA for `inc` on the healthy worker.

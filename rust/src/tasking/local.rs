@@ -186,6 +186,10 @@ pub struct LocalOptions {
 }
 
 impl LocalOptions {
+    #[deprecated(
+        since = "0.11.0",
+        note = "use `Runtime::builder().workers(n)` or a struct literal with `..Default::default()`"
+    )]
     pub fn new(workers: usize) -> Self {
         Self {
             workers,
@@ -328,7 +332,11 @@ pub struct LocalExecutor {
 impl LocalExecutor {
     pub fn new(workers: usize) -> Self {
         // Infallible: without a budget no spill directory is created.
-        Self::with_options(LocalOptions::new(workers)).expect("budget-less executor needs no I/O")
+        Self::with_options(LocalOptions {
+            workers,
+            ..Default::default()
+        })
+        .expect("budget-less executor needs no I/O")
     }
 
     /// Executor with an out-of-core memory budget (see [`LocalOptions`]).
@@ -1095,7 +1103,12 @@ mod tests {
     #[test]
     fn budget_spills_lru_and_wait_faults_back() {
         // 2x2 f32 blocks are 16 B; budget of 3 blocks, 6 registered.
-        let ex = LocalExecutor::with_options(LocalOptions::new(2).with_memory_budget(48)).unwrap();
+        let ex = LocalExecutor::with_options(LocalOptions {
+            workers: 2,
+            memory_budget_bytes: Some(48),
+            ..Default::default()
+        })
+        .unwrap();
         let ids: Vec<DataId> = (0..6)
             .map(|i| ex.put_block(Block::Dense(DenseMatrix::full(2, 2, i as f32))))
             .collect();
@@ -1122,7 +1135,12 @@ mod tests {
     #[test]
     fn tasks_fault_spilled_inputs_transparently() {
         // Budget of ONE block: a 2-input task must fault both its inputs.
-        let ex = LocalExecutor::with_options(LocalOptions::new(2).with_memory_budget(16)).unwrap();
+        let ex = LocalExecutor::with_options(LocalOptions {
+            workers: 2,
+            memory_budget_bytes: Some(16),
+            ..Default::default()
+        })
+        .unwrap();
         let a = ex.put_block(Block::Dense(DenseMatrix::full(2, 2, 1.0)));
         let b = ex.put_block(Block::Dense(DenseMatrix::full(2, 2, 10.0)));
         let out = ex.submit(
@@ -1149,11 +1167,11 @@ mod tests {
             std::process::id()
         ));
         std::fs::remove_dir_all(&dir).ok(); // leftovers from aborted runs
-        let ex = LocalExecutor::with_options(
-            LocalOptions::new(1)
-                .with_memory_budget(16)
-                .with_spill_dir(dir.clone()),
-        )
+        let ex = LocalExecutor::with_options(LocalOptions {
+            workers: 1,
+            memory_budget_bytes: Some(16),
+            spill_dir: Some(dir.clone()),
+        })
         .unwrap();
         let a = ex.put_block(Block::Dense(DenseMatrix::full(2, 2, 1.0)));
         let b = ex.put_block(Block::Dense(DenseMatrix::full(2, 2, 2.0))); // spills `a`
@@ -1177,7 +1195,12 @@ mod tests {
 
     #[test]
     fn pinned_blocks_are_never_spilled() {
-        let ex = LocalExecutor::with_options(LocalOptions::new(1).with_memory_budget(16)).unwrap();
+        let ex = LocalExecutor::with_options(LocalOptions {
+            workers: 1,
+            memory_budget_bytes: Some(16),
+            ..Default::default()
+        })
+        .unwrap();
         let a = ex.put_block(Block::Dense(DenseMatrix::full(2, 2, 7.0)));
         ex.pin(a);
         for i in 0..4 {

@@ -62,6 +62,15 @@ pub struct Metrics {
     /// Block-level kernel dispatches that went to a SIMD table (process-
     /// global, folded into snapshots by `Runtime::metrics`).
     pub simd_kernel_hits: u64,
+    /// Tasks avoided by the plan layer's common-subexpression elimination —
+    /// memo hits return the memoized task set instead of resubmitting it
+    /// (folded into snapshots by `Runtime::metrics`, like
+    /// `simd_kernel_hits`).
+    pub tasks_deduped: u64,
+    /// Operand blocks released inside a plan's own scheduler critical
+    /// section (dead-block pre-release at gemm force time), so the spill
+    /// tier sees memory pressure later.
+    pub blocks_prereleased: u64,
     /// Sub-range work items created by intra-block splitting — fat block
     /// tasks that fanned out over the per-worker deques instead of
     /// serializing one worker (counts every part of every engaged split).
@@ -282,6 +291,8 @@ impl Metrics {
         out.remote_transfers -= earlier.remote_transfers;
         out.locality_hits -= earlier.locality_hits;
         out.simd_kernel_hits -= earlier.simd_kernel_hits;
+        out.tasks_deduped -= earlier.tasks_deduped;
+        out.blocks_prereleased -= earlier.blocks_prereleased;
         out.subtasks_spawned -= earlier.subtasks_spawned;
         out.workers_lost -= earlier.workers_lost;
         out.blocks_recovered -= earlier.blocks_recovered;

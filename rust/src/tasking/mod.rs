@@ -234,6 +234,17 @@ pub struct Runtime {
     /// detection, overridable with `DSARRAY_NO_SIMD=1`) and stored here so
     /// hot paths never re-detect per task — see [`crate::kernels`].
     kernels: &'static crate::kernels::Kernels,
+    /// Plan layer (CSE memo, optimization level, planner counters) shared
+    /// by all clones of this runtime — see [`crate::plan`]. Legacy
+    /// constructors run it at [`crate::plan::Level::Off`]; the
+    /// [`Runtime::builder`] front door defaults to `Level::Full`.
+    planner: Arc<crate::plan::Planner>,
+}
+
+/// A fresh planner at the legacy-default level (used by all direct
+/// constructors so pre-planner task streams stay exact).
+fn planner_off() -> Arc<crate::plan::Planner> {
+    Arc::new(crate::plan::Planner::new(crate::plan::Level::Off))
 }
 
 impl Runtime {
@@ -250,7 +261,22 @@ impl Runtime {
         Self {
             exec: Arc::new(local::LocalExecutor::new(workers.max(1))),
             kernels: crate::kernels::active(),
+            planner: planner_off(),
         }
+    }
+
+    /// The single fluent front door over every backend and knob — local,
+    /// sim, or cluster, with budgets, replication, and the plan-layer
+    /// optimizer level. See [`crate::plan::RuntimeBuilder`].
+    ///
+    /// ```
+    /// use rustdslib::plan::Level;
+    /// use rustdslib::tasking::Runtime;
+    /// let rt = Runtime::builder().workers(2).optimizer(Level::Cse).build().unwrap();
+    /// assert_eq!(rt.planner().level(), Level::Cse);
+    /// ```
+    pub fn builder() -> crate::plan::RuntimeBuilder {
+        crate::plan::RuntimeBuilder::new()
     }
 
     /// Local executor with an out-of-core **memory budget**: when the
@@ -272,9 +298,11 @@ impl Runtime {
     /// assert!(rt.metrics().blocks_spilled > 0);
     /// ```
     pub fn local_with_budget(workers: usize, memory_budget_bytes: u64) -> Result<Self> {
-        Self::local_with_options(
-            LocalOptions::new(workers).with_memory_budget(memory_budget_bytes),
-        )
+        Self::local_with_options(LocalOptions {
+            workers,
+            memory_budget_bytes: Some(memory_budget_bytes),
+            spill_dir: None,
+        })
     }
 
     /// Local executor from full [`LocalOptions`] (budget + spill dir).
@@ -283,6 +311,7 @@ impl Runtime {
         Ok(Self {
             exec: Arc::new(local::LocalExecutor::with_options(opts)?),
             kernels: crate::kernels::active(),
+            planner: planner_off(),
         })
     }
 
@@ -297,6 +326,7 @@ impl Runtime {
         Ok(Self {
             exec: Arc::new(cluster::ClusterExecutor::new(opts)?),
             kernels: crate::kernels::active(),
+            planner: planner_off(),
         })
     }
 
@@ -307,6 +337,7 @@ impl Runtime {
         Self {
             exec: Arc::new(sim::SimExecutor::new(cfg)),
             kernels: crate::kernels::active(),
+            planner: planner_off(),
         }
     }
 
@@ -315,6 +346,52 @@ impl Runtime {
         Self {
             exec,
             kernels: crate::kernels::active(),
+            planner: planner_off(),
+        }
+    }
+
+    /// Replace this handle's planner with a fresh one at `level` (fresh
+    /// memo, fresh counters). Construction-time only — clones taken
+    /// *before* this call keep the old planner.
+    pub fn with_optimizer(mut self, level: crate::plan::Level) -> Self {
+        self.planner = Arc::new(crate::plan::Planner::new(level));
+        self
+    }
+
+    /// The plan layer shared by clones of this runtime: optimization
+    /// level, CSE memo, and the planner counters `metrics` folds in.
+    pub fn planner(&self) -> &crate::plan::Planner {
+        &self.planner
+    }
+
+    /// CSE memo lookup (see [`crate::plan::Planner::lookup`]). The memoized
+    /// futures come back *without* an extra handle reference — callers wrap
+    /// them in a container (`DsArray::from_parts` retains) exactly as they
+    /// would wrap fresh task outputs.
+    pub(crate) fn cse_lookup(&self, key: u128, tasks_avoided: u64) -> Option<Vec<Future>> {
+        self.planner.lookup(key, tasks_avoided)
+    }
+
+    /// Memoize `outputs` under `key`, retaining one handle reference per
+    /// block on the memo's behalf and releasing whatever entries the insert
+    /// displaced. No-op at `Level::Off`.
+    pub(crate) fn cse_record(&self, key: u128, outputs: &[Future]) {
+        if !self.planner.cse_enabled() {
+            return;
+        }
+        self.retain(outputs);
+        let displaced = self.planner.record(key, outputs.to_vec());
+        if !displaced.is_empty() {
+            self.release(&displaced);
+        }
+    }
+
+    /// Advance the planner's collect/barrier epoch (the CSE memo's GC
+    /// generation), releasing the memo references of swept entries.
+    pub(crate) fn plan_epoch_tick(&self) {
+        let swept = self.planner.bump_epoch();
+        if !swept.is_empty() {
+            self.release(&swept);
         }
     }
 
@@ -419,8 +496,10 @@ impl Runtime {
     }
 
     /// Wait until every submitted task has finished (local mode) — the
-    /// explicit synchronization point of the programming model.
+    /// explicit synchronization point of the programming model. Also
+    /// advances the plan layer's CSE epoch (memo GC generation).
     pub fn barrier(&self) -> Result<()> {
+        self.plan_epoch_tick();
         self.exec.barrier()
     }
 
@@ -442,6 +521,10 @@ impl Runtime {
     pub fn metrics(&self) -> Metrics {
         let mut m = self.exec.metrics();
         m.simd_kernel_hits = crate::kernels::simd_kernel_hits();
+        // Plan-layer counters live on the planner (above the executor) and
+        // are folded into the snapshot the same way.
+        m.tasks_deduped = self.planner.tasks_deduped();
+        m.blocks_prereleased = self.planner.blocks_prereleased();
         m
     }
 

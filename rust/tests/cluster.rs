@@ -57,7 +57,11 @@ impl Workers {
     }
 
     fn runtime(&self) -> Runtime {
-        Runtime::cluster(ClusterOptions::connect(self.addrs.clone()).with_threads(2)).unwrap()
+        Runtime::cluster(ClusterOptions {
+            addrs: self.addrs.clone(),
+            ..Default::default()
+        })
+        .unwrap()
     }
 
     fn stat(&self, i: usize) -> WorkerStat {
@@ -292,9 +296,11 @@ fn killed_worker_recovers_bit_identically_mid_kmeans() {
 fn killed_worker_poisons_without_recovery() {
     let mut workers = Workers::spawn(2, None);
     let rt = Runtime::cluster(
-        ClusterOptions::connect(workers.addrs.clone())
-            .with_threads(2)
-            .with_recovery(false),
+        ClusterOptions {
+            addrs: workers.addrs.clone(),
+            recovery: false,
+            ..Default::default()
+        },
     )
     .unwrap();
     let m = random_matrix(32, 32, 7);
@@ -382,6 +388,80 @@ fn chaos_round(seed: u64) {
     let rt = workers.runtime();
     let got = run(&rt);
     assert_eq!(got, expect, "chaos plan {plan:?} diverged from the fault-free local run");
+}
+
+/// Plan-layer parity on the cluster backend: KMeans, ALS, and PCA fits at
+/// `Level::Off` and `Level::Full` (via the `Runtime::builder()` front
+/// door) produce bit-identical models, while the optimizer strictly
+/// shrinks `tasks_submitted` in the emitted metrics line — the composed
+/// `kmeans.reduce_update` / `als.gram_reduce_ridge` tails and the CSE'd
+/// PCA gram replace their eager task streams, never their bits.
+#[test]
+fn optimizer_parity_kmeans_als_pca_off_vs_full_on_cluster() {
+    use rustdslib::estimators::als::AlsConfig;
+    use rustdslib::estimators::Als;
+    use rustdslib::plan::Level;
+
+    let xm = random_matrix(64, 6, 91);
+    let rm = random_matrix(24, 16, 92);
+    let run = |level: Level| {
+        let workers = Workers::spawn(2, None);
+        let rt = Runtime::builder()
+            .backend(rustdslib::config::Backend::Cluster)
+            .cluster_addrs(workers.addrs.clone())
+            .optimizer(level)
+            .build()
+            .unwrap();
+        let x = creation::from_matrix(&rt, &xm, (16, 6)).unwrap();
+        let mut km = KMeans::new(KMeansConfig {
+            k: 3,
+            max_iter: 6,
+            tol: 1e-9,
+            seed: 5,
+        });
+        km.fit(&x, None).unwrap();
+        let mut pca = Pca::new(2);
+        pca.fit(&x, None).unwrap();
+        let r = creation::from_matrix(&rt, &rm, (6, 4)).unwrap();
+        let mut als = Als::new(AlsConfig {
+            d: 3,
+            lambda: 0.05,
+            max_iter: 3,
+            seed: 9,
+        });
+        als.fit_dsarray(&r).unwrap();
+        let json = report::metrics_json(&rt.metrics());
+        (
+            km.centers.unwrap(),
+            km.inertia,
+            pca.components.unwrap(),
+            als.u.unwrap(),
+            als.v.unwrap(),
+            json,
+        )
+    };
+    let (c_off, i_off, p_off, u_off, v_off, j_off) = run(Level::Off);
+    let (c_full, i_full, p_full, u_full, v_full, j_full) = run(Level::Full);
+    assert_eq!(c_full, c_off, "KMeans centroid parity across optimizer levels");
+    assert_eq!(i_full, i_off, "KMeans inertia parity");
+    assert_eq!(p_full, p_off, "PCA component parity");
+    assert_eq!(u_full, u_off, "ALS U parity");
+    assert_eq!(v_full, v_off, "ALS V parity");
+
+    let submitted = |j: &str| {
+        rustdslib::util::json::parse(j)
+            .expect("metrics line parses")
+            .get("tasks_submitted")
+            .and_then(|v| v.as_f64())
+            .expect("tasks_submitted present") as u64
+    };
+    let (s_off, s_full) = (submitted(&j_off), submitted(&j_full));
+    assert!(
+        s_full < s_off,
+        "optimizer must strictly shrink tasks_submitted: {s_full} vs {s_off}"
+    );
+    assert!(j_full.contains("\"tasks_deduped\":"), "{j_full}");
+    assert!(j_full.contains("\"blocks_prereleased\":"), "{j_full}");
 }
 
 /// The elasticity acceptance scenario with real OS processes: a second

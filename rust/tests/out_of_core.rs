@@ -163,6 +163,81 @@ fn pca_on_spill_backed_array_matches_in_memory() {
     assert!(rt.metrics().blocks_spilled > 0);
 }
 
+/// Plan-layer parity under a spill budget: KMeans, ALS, and PCA fits at
+/// `Level::Off` and `Level::Full` — both runtimes built through the
+/// `Runtime::builder()` front door with the same memory budget — produce
+/// bit-identical models, the optimizer strictly shrinks `tasks_submitted`
+/// in the metrics line, and the budget still actually spills (the
+/// composed reduce tails and pre-released gemm operands change *when*
+/// blocks die, never what the spill tier reads back).
+#[test]
+fn optimizer_parity_kmeans_als_pca_off_vs_full_under_budget() {
+    use rustdslib::bench::report;
+    use rustdslib::estimators::als::AlsConfig;
+    use rustdslib::estimators::Als;
+    use rustdslib::plan::Level;
+
+    let xm = random_matrix(64, 8, 71);
+    let rm = random_matrix(24, 16, 72);
+    let budget = (64 * 8 * 4) / 2; // half the KMeans footprint
+    let run = |level: Level| {
+        let rt = Runtime::builder()
+            .workers(2)
+            .memory_budget_bytes(budget as u64)
+            .optimizer(level)
+            .build()
+            .unwrap();
+        let x = creation::from_matrix(&rt, &xm, (8, 8)).unwrap();
+        let mut km = KMeans::new(KMeansConfig {
+            k: 3,
+            max_iter: 6,
+            tol: 1e-9,
+            seed: 5,
+        });
+        km.fit(&x, None).unwrap();
+        let mut pca = Pca::new(2);
+        pca.fit(&x, None).unwrap();
+        let r = creation::from_matrix(&rt, &rm, (6, 4)).unwrap();
+        let mut als = Als::new(AlsConfig {
+            d: 3,
+            lambda: 0.05,
+            max_iter: 3,
+            seed: 9,
+        });
+        als.fit_dsarray(&r).unwrap();
+        let met = rt.metrics();
+        assert!(met.blocks_spilled > 0, "budget must spill at level {level:?}");
+        (
+            km.centers.unwrap(),
+            km.inertia,
+            pca.components.unwrap(),
+            als.u.unwrap(),
+            als.v.unwrap(),
+            report::metrics_json(&met),
+        )
+    };
+    let (c_off, i_off, p_off, u_off, v_off, j_off) = run(Level::Off);
+    let (c_full, i_full, p_full, u_full, v_full, j_full) = run(Level::Full);
+    assert_eq!(c_full, c_off, "KMeans centroid parity across optimizer levels");
+    assert_eq!(i_full, i_off, "KMeans inertia parity");
+    assert_eq!(p_full, p_off, "PCA component parity");
+    assert_eq!(u_full, u_off, "ALS U parity");
+    assert_eq!(v_full, v_off, "ALS V parity");
+
+    let submitted = |j: &str| {
+        rustdslib::util::json::parse(j)
+            .expect("metrics line parses")
+            .get("tasks_submitted")
+            .and_then(|v| v.as_f64())
+            .expect("tasks_submitted present") as u64
+    };
+    let (s_off, s_full) = (submitted(&j_off), submitted(&j_full));
+    assert!(
+        s_full < s_off,
+        "optimizer must strictly shrink tasks_submitted: {s_full} vs {s_off}"
+    );
+}
+
 /// Parallel partitioned save/load under budget: write-back never needs the
 /// master to hold the array, and the round trip is exact.
 #[test]

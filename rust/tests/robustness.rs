@@ -230,8 +230,11 @@ fn deep_dependency_chain_under_contention() {
 fn pull_peer_death_recovers_via_root_journal() {
     let w0 = inproc_worker();
     let w1 = inproc_worker();
-    let rt = Runtime::cluster(ClusterOptions::connect(vec![w0, w1.clone()]).with_threads(2))
-        .unwrap();
+    let rt = Runtime::cluster(ClusterOptions {
+        addrs: vec![w0, w1.clone()],
+        ..Default::default()
+    })
+    .unwrap();
     // Round-robin placement: the fat block lands on worker 0, the small
     // one on worker 1 — so the task runs on 0 (most input bytes) and must
     // pull across to reach the small block.
@@ -265,8 +268,11 @@ fn pull_peer_death_recovers_via_root_journal() {
 fn only_holder_death_during_collect_fetch_replays_producer() {
     let w0 = inproc_worker();
     let w1 = inproc_worker();
-    let rt = Runtime::cluster(ClusterOptions::connect(vec![w0.clone(), w1]).with_threads(2))
-        .unwrap();
+    let rt = Runtime::cluster(ClusterOptions {
+        addrs: vec![w0.clone(), w1],
+        ..Default::default()
+    })
+    .unwrap();
     let src = rt.put_block(Block::Dense(DenseMatrix::full(2, 2, 20.0)));
     let inc = rt.submit(
         "inc",
@@ -298,8 +304,11 @@ fn only_holder_death_during_collect_fetch_replays_producer() {
 fn two_level_lineage_walk_replays_chain() {
     let w0 = inproc_worker();
     let w1 = inproc_worker();
-    let rt = Runtime::cluster(ClusterOptions::connect(vec![w0.clone(), w1]).with_threads(2))
-        .unwrap();
+    let rt = Runtime::cluster(ClusterOptions {
+        addrs: vec![w0.clone(), w1],
+        ..Default::default()
+    })
+    .unwrap();
     let plus_one = || -> TaskFn {
         Arc::new(|ins: &[Arc<Block>]| {
             let m = dense_val(&ins[0]);
@@ -377,10 +386,12 @@ fn churn_round(seed: u64) {
         inproc_worker_with("slow@10"),
     ];
     let rt = Runtime::cluster(
-        ClusterOptions::connect(addrs.clone())
-            .with_threads(2)
-            .with_heartbeat_ms(40)
-            .with_straggler_factor(4.0),
+        ClusterOptions {
+            addrs: addrs.clone(),
+            heartbeat_ms: 40,
+            straggler_factor: 4.0,
+            ..Default::default()
+        },
     )
     .unwrap();
     let (centers_cluster, inertia_cluster) = fit(&rt, &mut |rt| {

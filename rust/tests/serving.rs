@@ -47,7 +47,11 @@ impl Workers {
     }
 
     fn runtime(&self) -> Runtime {
-        Runtime::cluster(ClusterOptions::connect(self.addrs.clone()).with_threads(2)).unwrap()
+        Runtime::cluster(ClusterOptions {
+            addrs: self.addrs.clone(),
+            ..Default::default()
+        })
+        .unwrap()
     }
 
     fn runtime_with(&self, opts: ClusterOptions) -> Runtime {
@@ -270,9 +274,11 @@ fn churn_round(seed: u64) {
 
     let mut workers = Workers::spawn(2);
     let rt = workers.runtime_with(
-        ClusterOptions::connect(workers.addrs.clone())
-            .with_threads(2)
-            .with_replication(2),
+        ClusterOptions {
+            addrs: workers.addrs.clone(),
+            replicate: 2,
+            ..Default::default()
+        },
     );
     let server = ModelServer::new(rt.clone(), ServeOptions::default().with_batch_window_ms(3));
     server.register("km", artifact).unwrap();
@@ -330,9 +336,11 @@ fn worker_sigkill_without_replication_degrades_cleanly() {
 
     let mut workers = Workers::spawn(2);
     let rt = workers.runtime_with(
-        ClusterOptions::connect(workers.addrs.clone())
-            .with_threads(2)
-            .with_recovery(false),
+        ClusterOptions {
+            addrs: workers.addrs.clone(),
+            recovery: false,
+            ..Default::default()
+        },
     );
     let server = ModelServer::new(rt, ServeOptions::default().with_batch_window_ms(3));
     server.register("km", artifact).unwrap();

@@ -5,25 +5,30 @@
 //! baseline at the repository root and **fails (exit 1) when the median
 //! regression of any watched row group exceeds the threshold** (default
 //! 25%, groups `matmul`, `fused`, `load`, `kernel`, `split`, `recovery`,
-//! `elastic`, `serving` — the rows the perf PRs optimize; `kernel` tracks
-//! the scalar-vs-SIMD micro-kernel rows, `split` the
+//! `elastic`, `serving`, `planner` — the rows the perf PRs optimize;
+//! `kernel` tracks the scalar-vs-SIMD micro-kernel rows, `split` the
 //! whole-block-vs-sub-task rows, `recovery` the kill-mid-gemm
 //! fault-recovery wall time, `elastic` the drain-migration and
-//! straggler-speculation wall times, and `serving` the p50 single-row
-//! predict latency through the micro-batcher).
+//! straggler-speculation wall times, `serving` the p50 single-row
+//! predict latency through the micro-batcher, and `planner` the
+//! optimizer-on vs optimizer-off task-stream timings).
 //!
 //! Median-per-group, not worst-row, so one noisy timing on a shared CI
 //! runner cannot fail the gate by itself; the threshold absorbs the rest of
-//! the runner-to-runner variance. Rows present on only one side are
-//! reported but never gate (new benchmarks must not fail their own PR).
-//! A baseline with no timed rows (the committed seed, or a bench format
-//! change) cannot gate anything: the run SKIPS with a loud warning instead
-//! of silently "passing" — the push-to-main refresh step repopulates it.
+//! the runner-to-runner variance. Individual rows present on only one side
+//! are reported but never gate (new benchmarks must not fail their own PR)
+//! — **except** when a watched group has baseline rows and the current run
+//! produced *none of them*: a whole group silently disappearing means the
+//! benchmark was dropped or renamed, and the gate FAILS rather than letting
+//! the coverage evaporate. A baseline with no timed rows at all (the
+//! committed seed, or a bench format change) cannot gate anything: the run
+//! SKIPS with a loud warning instead of silently "passing" — the
+//! push-to-main refresh step repopulates it.
 //!
 //! Usage:
 //!   bench_gate --baseline ../BENCH_hotpath.json --current BENCH_hotpath.json \
 //!              [--max-regress 0.25] \
-//!              [--groups matmul,fused,load,kernel,split,recovery,elastic,serving]
+//!              [--groups matmul,fused,load,kernel,split,recovery,elastic,serving,planner]
 
 use std::collections::BTreeMap;
 
@@ -52,7 +57,10 @@ fn run() -> Result<bool> {
         .ok_or_else(|| anyhow!("--current <path> is required"))?;
     let max_regress = args.get_f64("max-regress", 0.25);
     let groups: Vec<String> = args
-        .get_str("groups", "matmul,fused,load,kernel,split,recovery,elastic,serving")
+        .get_str(
+            "groups",
+            "matmul,fused,load,kernel,split,recovery,elastic,serving,planner",
+        )
         .split(',')
         .map(|g| g.trim().to_string())
         .filter(|g| !g.is_empty())
@@ -81,11 +89,14 @@ fn run() -> Result<bool> {
     let mut ok = true;
     for group in &groups {
         let mut regressions: Vec<f64> = Vec::new();
+        let mut current_in_group = 0usize;
+        let mut baseline_in_group = 0usize;
         println!("-- group `{group}`");
         for (name, cur) in &current {
             if !name.contains(group.as_str()) {
                 continue;
             }
+            current_in_group += 1;
             match baseline.get(name) {
                 Some(base) => {
                     let reg = (cur - base) / base;
@@ -98,13 +109,25 @@ fn run() -> Result<bool> {
                 None => println!("   {name}: {cur:.6}s (new row, not gated)"),
             }
         }
-        // Baseline rows that vanished from the current run: visible in the
-        // log (a renamed or dropped benchmark should not pass unnoticed),
-        // but they carry no timing to gate on.
+        // Baseline rows that vanished from the current run: an individual
+        // renamed row only warns (its siblings still gate the group), but a
+        // group whose every baseline row is missing FAILS below — a dropped
+        // benchmark must not silently retire its own coverage.
         for (name, base) in &baseline {
-            if name.contains(group.as_str()) && !current.contains_key(name) {
-                println!("   {name}: {base:.6}s -> MISSING from current run (not gated)");
+            if name.contains(group.as_str()) {
+                baseline_in_group += 1;
+                if !current.contains_key(name) {
+                    println!("   {name}: {base:.6}s -> MISSING from current run");
+                }
             }
+        }
+        if baseline_in_group > 0 && current_in_group == 0 {
+            ok = false;
+            println!(
+                "   FAIL: baseline has {baseline_in_group} `{group}` row(s) but the \
+                 current run produced none — benchmark dropped or renamed"
+            );
+            continue;
         }
         match median(&mut regressions) {
             None => println!("   no comparable rows — group passes vacuously"),
